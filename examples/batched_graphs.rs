@@ -1,0 +1,124 @@
+//! Batched solves — both flavors of paper §3.1:
+//!
+//! * shared pattern (`SparseTensor` with a batch of value planes /
+//!   multi-RHS): one symbolic factorization serves the whole batch;
+//! * distinct patterns (`SparseTensorList`, the GNN-minibatch case):
+//!   per-element dispatch with isolated autograd graphs;
+//!
+//! plus the coordinator's windowed batcher serving a mixed request
+//! stream (the "training step with one sparse system per sample").
+//!
+//! Run: cargo run --release --example batched_graphs
+
+use std::sync::Arc;
+
+use rsla::autograd::Tape;
+use rsla::backend::{Dispatcher, SolveOpts};
+use rsla::coordinator::{ServiceConfig, SolveService};
+use rsla::sparse::graphs::random_graph_laplacian;
+use rsla::sparse::poisson::poisson2d;
+use rsla::sparse::Pattern;
+use rsla::tensor::{SparseTensor, SparseTensorList};
+use rsla::util::{self, Prng};
+
+fn main() {
+    let mut rng = Prng::new(42);
+
+    // --- shared-pattern batch: 8 scaled Poisson operators ---
+    let sys = poisson2d(24, None);
+    let pattern = Pattern::of(&sys.matrix);
+    let scales: Vec<f64> = (0..8).map(|i| 0.5 + 0.25 * i as f64).collect();
+    let vals: Vec<Vec<f64>> = scales
+        .iter()
+        .map(|s| sys.matrix.vals.iter().map(|v| v * s).collect())
+        .collect();
+    let batch = SparseTensor::batched(pattern, vals).unwrap();
+    let bs: Vec<Vec<f64>> = (0..8).map(|_| rng.normal_vec(576)).collect();
+    let t0 = std::time::Instant::now();
+    let xs = batch.solve_batch(&bs, &SolveOpts::default()).unwrap();
+    println!(
+        "shared-pattern batch: 8 solves (n=576) in {:.1} ms",
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    for ((x, b), s) in xs.iter().zip(&bs).zip(&scales) {
+        let mut ax = sys.matrix.matvec(x);
+        for v in ax.iter_mut() {
+            *v *= s;
+        }
+        assert!(util::rel_l2(&ax, b) < 1e-8);
+    }
+
+    // --- distinct patterns: GNN-style minibatch of graph Laplacians ---
+    let mats: Vec<_> = (0..6)
+        .map(|i| random_graph_laplacian(&mut rng, 80 + 40 * i, 4, 0.3))
+        .collect();
+    let list = SparseTensorList::from_csrs(mats.clone());
+    let bs: Vec<Vec<f64>> = mats.iter().map(|m| rng.normal_vec(m.nrows)).collect();
+    let t1 = std::time::Instant::now();
+    let outs = list.solve_full(&bs, &SolveOpts::default()).unwrap();
+    println!(
+        "\ndistinct-pattern list: {} graphs (n=80..280) in {:.1} ms",
+        list.len(),
+        t1.elapsed().as_secs_f64() * 1e3
+    );
+    for (out, (m, b)) in outs.iter().zip(mats.iter().zip(&bs)) {
+        println!(
+            "  n={:<4} backend={} method={} residual={:.1e}",
+            m.nrows, out.backend, out.method, out.residual
+        );
+        assert!(util::rel_l2(&m.matvec(&out.x), b) < 1e-7);
+    }
+
+    // --- differentiable batch: gradient through every element ---
+    let tape = Tape::new();
+    let vals_vars: Vec<_> = mats.iter().map(|m| tape.leaf_vec(m.vals.clone())).collect();
+    let b_vars: Vec<_> = bs.iter().map(|b| tape.leaf_vec(b.clone())).collect();
+    let xs = list
+        .solve_ad(&tape, &vals_vars, &b_vars, &SolveOpts::default())
+        .unwrap();
+    // joint loss = sum of per-graph energies
+    let mut loss = tape.dot(xs[0], xs[0]);
+    for x in &xs[1..] {
+        let li = tape.dot(*x, *x);
+        loss = tape.add_ss(loss, li);
+    }
+    let grads = tape.backward(loss);
+    println!(
+        "\nautograd through the batch: {} nodes for {} solves (O(1) each)",
+        tape.node_count() - 2 * mats.len(), // minus the leaves
+        mats.len()
+    );
+    for v in &vals_vars {
+        assert!(grads.vec(*v).iter().any(|x| *x != 0.0));
+    }
+
+    // --- coordinator service on a bursty mixed stream ---
+    let svc = SolveService::start(Arc::new(Dispatcher::new(None)), ServiceConfig::default());
+    let shared = poisson2d(20, None).matrix;
+    let t2 = std::time::Instant::now();
+    let mut rxs = Vec::new();
+    for i in 0..48 {
+        let (a, b) = if i % 3 != 0 {
+            (shared.clone(), rng.normal_vec(shared.nrows))
+        } else {
+            let a = random_graph_laplacian(&mut rng, 120, 4, 0.3);
+            let b = rng.normal_vec(120);
+            (a, b)
+        };
+        rxs.push(svc.submit(a, b, SolveOpts::default()));
+    }
+    let mut batched = 0;
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        resp.outcome.unwrap();
+        if resp.batch_size > 1 {
+            batched += 1;
+        }
+    }
+    println!(
+        "\nservice: 48 requests in {:.1} ms, {batched} rode shared-pattern batches",
+        t2.elapsed().as_secs_f64() * 1e3
+    );
+    svc.shutdown();
+    println!("\nbatched_graphs OK");
+}

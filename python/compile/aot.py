@@ -1,0 +1,105 @@
+"""AOT lowering: jax -> stablehlo -> XlaComputation -> HLO *text*.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids that the xla_extension 0.5.1 runtime behind the Rust
+``xla`` crate rejects (``proto.id() <= INT_MAX``); the HLO text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, per artifact NAME in model.artifact_builders():
+  artifacts/NAME.hlo.txt   — the HLO module
+  artifacts/manifest.tsv   — one line per artifact:
+                             NAME <TAB> param0;param1;... <TAB> out0;out1;...
+                             where each entry is dtype:dim0xdim1x...
+                             (scalar dims field empty -> "f64:")
+
+``--report`` additionally prints an HLO fusion/op-count audit used by the
+L2 perf pass (EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import argparse
+import collections
+import os
+import re
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_str(s) -> str:
+    dt = str(s.dtype)
+    dims = "x".join(str(d) for d in s.shape)
+    return f"{dt}:{dims}"
+
+
+def _out_specs(fn, args):
+    outs = jax.eval_shape(fn, *args)
+    return [_spec_str(o) for o in outs]
+
+
+def op_histogram(hlo_text: str) -> collections.Counter:
+    """Rough opcode histogram of an HLO module (perf audit)."""
+    hist: collections.Counter = collections.Counter()
+    for line in hlo_text.splitlines():
+        m = re.match(r"\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*[\w\[\]{},\s]+?\s([a-z\-]+)\(", line)
+        if m:
+            hist[m.group(1)] += 1
+    return hist
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="regex filter on artifact names")
+    ap.add_argument("--report", action="store_true", help="print HLO op-count audit")
+    ns = ap.parse_args()
+
+    os.makedirs(ns.out, exist_ok=True)
+    builders = model.artifact_builders()
+    if ns.only:
+        pat = re.compile(ns.only)
+        builders = {k: v for k, v in builders.items() if pat.search(k)}
+
+    manifest_lines = []
+    for name, (fn, args) in sorted(builders.items()):
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(ns.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        params = ";".join(_spec_str(a) for a in args)
+        outs = ";".join(_out_specs(fn, args))
+        manifest_lines.append(f"{name}\t{params}\t{outs}")
+        msg = f"  {name}: {len(text) / 1024:.0f} KiB"
+        if ns.report:
+            hist = op_histogram(text)
+            total = sum(hist.values())
+            top = ", ".join(f"{k}x{v}" for k, v in hist.most_common(6))
+            msg += f"  ops={total} [{top}]"
+        print(msg)
+
+    if not ns.only:  # partial runs must not clobber the full manifest
+        with open(os.path.join(ns.out, "manifest.tsv"), "w") as f:
+            f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {len(builders)} artifacts to {ns.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,5 @@
+from .stencil import stencil_spmv
+from .ell import ell_spmv, ell_spmv_resident
+from . import ref
+
+__all__ = ["stencil_spmv", "ell_spmv", "ell_spmv_resident", "ref"]

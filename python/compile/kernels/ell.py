@@ -1,0 +1,104 @@
+"""L1 Pallas kernel: general SpMV in ELL (padded row-major) layout.
+
+The paper's general-sparsity workloads (GNN graph Laplacians,
+SparseTensorList batches) need an SpMV whose layout is accelerator
+friendly.  CSR's ragged rows map poorly onto a systolic/vector unit, so
+we use ELLPACK: every row stores exactly ``s`` (column, value) slots,
+short rows padded with (0, 0.0).  The (n, s) slot matrix is dense, tiles
+cleanly into VMEM row strips, and the row reduction is a short dense
+axis — the TPU re-think of the CUDA one-warp-per-row pattern.
+
+The gather ``x[cols]`` is the only irregular access; the whole x vector
+is resident per program (BlockSpec over rows only), matching how a TPU
+kernel would pin the multiplicand in VMEM while streaming the slots.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _block_rows(n: int) -> int:
+    br = 1
+    while br * 2 <= min(n, 512) and n % (br * 2) == 0:
+        br *= 2
+    return br
+
+
+def _ell_kernel_resident(x_ref, cols_ref, vals_ref, y_ref):
+    x = x_ref[...]
+    cols = cols_ref[...]
+    vals = vals_ref[...]
+    y_ref[...] = jnp.sum(vals * x[cols], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "s"))
+def ell_spmv_resident(
+    cols: jax.Array, vals: jax.Array, x: jax.Array, *, n: int, s: int
+) -> jax.Array:
+    """First-cut ELL SpMV: the WHOLE x vector resident per program.
+
+    Kept for the Perf/L1 ablation: the roofline model shows its
+    HBM traffic scaling as O(n^2 / br) -- x is re-streamed by every row
+    strip -- with arithmetic intensity collapsing from 0.095 to 0.014
+    flop/B between n=4k and n=64k.  See ``ell_spmv`` for the fixed
+    structure.
+    """
+    br = _block_rows(n)
+    slot_spec = pl.BlockSpec((br, s), lambda i: (i, 0))
+    return pl.pallas_call(
+        _ell_kernel_resident,
+        grid=(n // br,),
+        in_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),  # whole x resident
+            slot_spec,
+            slot_spec,
+        ],
+        out_specs=pl.BlockSpec((br,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(x, cols, vals)
+
+
+def _ell_kernel(xg_ref, vals_ref, y_ref):
+    # dense (br, s) tiles: pure VPU multiply + short-axis reduce
+    y_ref[...] = jnp.sum(vals_ref[...] * xg_ref[...], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "s"))
+def ell_spmv(cols: jax.Array, vals: jax.Array, x: jax.Array, *, n: int, s: int) -> jax.Array:
+    """y = A x for A in ELL layout (Perf/L1 structure).
+
+    The irregular gather ``x[cols]`` runs OUTSIDE the kernel as one
+    XLA-native gather (on TPU: a sparsecore/XLA gather into an (n, s)
+    buffer); the Pallas kernel then streams perfectly dense (br, s)
+    tiles -- multiply + short-axis reduce on the VPU -- so per-program
+    VMEM is O(br*s), HBM traffic is one pass over each operand, and
+    arithmetic intensity stays flat in n (see kernels/roofline.py,
+    ``ell_model_v2``).
+
+    Args:
+      cols: (n, s) int32 column indices; padding slots must point at any
+        valid index (0 by convention) with ``vals == 0``.
+      vals: (n, s) f64 values.
+      x: (n,) multiplicand.
+      n, s: static row count and slots per row.
+
+    Returns:
+      (n,) product vector.
+    """
+    br = _block_rows(n)
+    xg = x[cols]  # XLA-native gather, O(n*s)
+    slot_spec = pl.BlockSpec((br, s), lambda i: (i, 0))
+    return pl.pallas_call(
+        _ell_kernel,
+        grid=(n // br,),
+        in_specs=[slot_spec, slot_spec],
+        out_specs=pl.BlockSpec((br,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(xg, vals)

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+Every kernel in this package has a reference implementation here written
+with nothing but shifts/pads/gathers; pytest (python/tests) asserts
+allclose between kernel and oracle over a hypothesis sweep of shapes,
+dtypes, and coefficient distributions.  These are also the semantics the
+Rust substrate (rust/src/sparse) re-implements natively, so the oracle
+doubles as the cross-language contract.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def stencil_spmv_ref(coeffs: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """(5, g, g) coefficients x (g, g) grid -> (g, g); Dirichlet halo."""
+    xp = jnp.pad(x, 1)
+    g = x.shape[0]
+    center = xp[1 : g + 1, 1 : g + 1]
+    up = xp[0:g, 1 : g + 1]
+    dn = xp[2 : g + 2, 1 : g + 1]
+    lf = xp[1 : g + 1, 0:g]
+    rt = xp[1 : g + 1, 2 : g + 2]
+    return (
+        coeffs[0] * center
+        + coeffs[1] * up
+        + coeffs[2] * dn
+        + coeffs[3] * lf
+        + coeffs[4] * rt
+    )
+
+
+def ell_spmv_ref(cols: jnp.ndarray, vals: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """ELL SpMV oracle: padded slots must carry vals == 0."""
+    return jnp.sum(vals * x[cols], axis=1)
+
+
+def stencil_adjoint_grad_ref(lam: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """dL/d(coeffs) for L with adjoint lam at solution x (paper Eq. 3).
+
+    For y = A(c) x, dL/dc_plane[i,j] = -lam[i,j] * (shifted x)[i,j]:
+    the matrix-gradient outer product -lam_i x_j materialized only on the
+    5-point pattern, returned as (5, g, g) planes.
+    """
+    g = x.shape[0]
+    xp = jnp.pad(x, 1)
+    center = xp[1 : g + 1, 1 : g + 1]
+    up = xp[0:g, 1 : g + 1]
+    dn = xp[2 : g + 2, 1 : g + 1]
+    lf = xp[1 : g + 1, 0:g]
+    rt = xp[1 : g + 1, 2 : g + 2]
+    return jnp.stack(
+        [-lam * center, -lam * up, -lam * dn, -lam * lf, -lam * rt]
+    )

@@ -1,0 +1,106 @@
+"""Structural performance model for the L1 kernels.
+
+``interpret=True`` wallclock is CPU-numpy time, not a TPU proxy, so the
+perf pass (EXPERIMENTS.md §Perf / L1) optimizes *structure*: VMEM
+footprint per program, bytes moved HBM<->VMEM, and arithmetic intensity.
+This module computes those numbers from the BlockSpec parameters so the
+block-shape sweep is quantitative.
+
+Run ``python -m compile.kernels.roofline`` for the report.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+F64 = 8
+I32 = 4
+VMEM_BYTES = 16 * 2 ** 20  # v4-class core: 16 MiB usable VMEM
+
+
+@dataclass
+class KernelModel:
+    name: str
+    vmem_bytes: int
+    hbm_read_bytes: int
+    hbm_write_bytes: int
+    flops: int
+    programs: int
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops / max(1, self.hbm_read_bytes + self.hbm_write_bytes)
+
+    def row(self) -> str:
+        return (
+            f"{self.name:<28} programs={self.programs:<6} "
+            f"vmem/prog={self.vmem_bytes/2**10:8.1f} KiB "
+            f"({100*self.vmem_bytes/VMEM_BYTES:5.2f}% of 16MiB)  "
+            f"HBM r+w={(self.hbm_read_bytes+self.hbm_write_bytes)/2**20:8.2f} MiB  "
+            f"AI={self.arithmetic_intensity:6.3f} flop/B"
+        )
+
+
+def stencil_model(g: int, br: int) -> KernelModel:
+    """VMEM/HBM model of stencil_spmv with row-strip height br."""
+    programs = g // br
+    # per program: halo window (br+2)(g+2) + 5 coeff strips + out strip
+    vmem = F64 * ((br + 2) * (g + 2) + 5 * br * g + br * g)
+    # HBM traffic: coeffs+out exactly once; x rows re-read by the halo
+    # overlap factor (br+2)/br.
+    hbm_r = F64 * (5 * g * g + (g + 2) * (g + 2) * (br + 2) // br)
+    hbm_w = F64 * g * g
+    flops = 9 * g * g  # 5 mul + 4 add per cell
+    return KernelModel(f"stencil_spmv g={g} br={br}", vmem, hbm_r, hbm_w, flops, programs)
+
+
+def ell_model(n: int, s: int, br: int) -> KernelModel:
+    programs = n // br
+    vmem = F64 * (n + br * s + br) + I32 * br * s
+    # x is resident per program -> re-read n/br times (the structural cost
+    # of the gather; a real TPU kernel would shard x when n is huge).
+    hbm_r = F64 * (n * s + n * programs) + I32 * n * s
+    hbm_w = F64 * n
+    flops = 2 * n * s
+    return KernelModel(f"ell_spmv n={n} s={s} br={br}", vmem, hbm_r, hbm_w, flops, programs)
+
+
+def ell_model_v2(n: int, s: int, br: int) -> KernelModel:
+    """The shipped ELL structure (Perf/L1): gather hoisted out of the
+    kernel, dense (br, s) tiles streamed through VMEM.
+
+    Per-program VMEM drops from O(n) to O(br*s); HBM traffic is one pass
+    over xg, vals, y plus the gather's own O(n*s) read -- flat
+    arithmetic intensity in n, unlike ell_model (the `resident` first
+    cut kept for the ablation).
+    """
+    programs = n // br
+    vmem = F64 * (2 * br * s + br)
+    # gather reads x (n) + cols (i32 n*s), writes xg (n*s); kernel reads
+    # xg + vals once, writes y once.
+    hbm_r = F64 * (n + 3 * n * s) + I32 * n * s
+    hbm_w = F64 * (n * s + n)
+    flops = 2 * n * s
+    return KernelModel(
+        f"ell_spmv(v2) n={n} s={s} br={br}", vmem, hbm_r, hbm_w, flops, programs
+    )
+
+
+def report() -> str:
+    from .stencil import _block_rows as stencil_br
+    from .ell import _block_rows as ell_br
+
+    lines = ["== L1 kernel structural roofline model =="]
+    for g in (32, 64, 128, 256, 512):
+        lines.append(stencil_model(g, stencil_br(g)).row())
+    lines.append("-- resident first cut (ablation; x re-streamed per strip) --")
+    for n in (4096, 16384, 65536):
+        lines.append(ell_model(n, 8, ell_br(n)).row())
+    lines.append("-- shipped v2 (gather hoisted; dense tiles) --")
+    for n in (4096, 16384, 65536):
+        lines.append(ell_model_v2(n, 8, ell_br(n)).row())
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(report())

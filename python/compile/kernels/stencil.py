@@ -1,0 +1,97 @@
+"""L1 Pallas kernel: variable-coefficient 5-point stencil SpMV.
+
+This is the compute hot-spot of every Poisson-family experiment in the
+paper (Tables 3-4, Fig. 2-3): ``y = A(c) x`` where ``A`` is the 5-point
+finite-difference operator with per-cell coefficients.  On the paper's
+hardware this is a CUDA SpMV; here it is re-thought for a TPU-style
+memory hierarchy:
+
+* the (g, g) interior grid is tiled into row strips of ``br`` rows; each
+  program instance streams one strip of the five coefficient planes
+  through VMEM (``BlockSpec((br, g), lambda i: (i, 0))``),
+* the zero-padded input ``xp`` of shape (g+2, g+2) is kept whole and each
+  program loads its (br+2, g+2) halo window with one dynamic-slice row
+  load — the halo rows are re-read by at most two programs, i.e. the
+  HBM->VMEM schedule that CUDA expressed with overlapping threadblocks,
+* all arithmetic is elementwise VPU work on dense (br, g) tiles; there is
+  no gather, so the tile shape is MXU/VPU friendly.
+
+Dirichlet boundaries are encoded by the zero padding, so the kernel body
+is branch-free.  ``interpret=True`` everywhere: the CPU PJRT runtime used
+by the Rust coordinator cannot execute Mosaic custom-calls (see
+DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _block_rows(g: int) -> int:
+    """Row-strip height: largest power-of-two divisor of g capped at 64.
+
+    Keeps the per-program VMEM window (br+2)*(g+2) + 6*br*g f64 within a
+    ~1 MiB budget for the grid sizes we AOT (g <= 512); see
+    kernels/roofline.py for the exact footprint accounting.
+    """
+    br = 1
+    while br * 2 <= min(g, 64) and g % (br * 2) == 0:
+        br *= 2
+    return br
+
+
+def _stencil_kernel(xp_ref, c_ref, up_ref, dn_ref, lf_ref, rt_ref, y_ref, *, br, g):
+    i = pl.program_id(0)
+    # (br+2, g+2) halo window: rows [i*br, i*br + br + 2) of the padded grid.
+    xs = pl.load(xp_ref, (pl.dslice(i * br, br + 2), slice(None)))
+    center = xs[1 : br + 1, 1 : g + 1]
+    up = xs[0:br, 1 : g + 1]
+    dn = xs[2 : br + 2, 1 : g + 1]
+    lf = xs[1 : br + 1, 0:g]
+    rt = xs[1 : br + 1, 2 : g + 2]
+    y_ref[...] = (
+        c_ref[...] * center
+        + up_ref[...] * up
+        + dn_ref[...] * dn
+        + lf_ref[...] * lf
+        + rt_ref[...] * rt
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("g",))
+def stencil_spmv(coeffs: jax.Array, x: jax.Array, *, g: int) -> jax.Array:
+    """Apply the variable-coefficient 5-point operator.
+
+    Args:
+      coeffs: (5, g, g) coefficient planes, ordered (center, up, down,
+        left, right); ``up`` multiplies x[i-1, j] etc.
+      x: (g, g) interior grid values.
+      g: grid side (static).
+
+    Returns:
+      (g, g) result of ``A(coeffs) @ vec(x)`` reshaped to the grid.
+    """
+    br = _block_rows(g)
+    xp = jnp.pad(x, 1)  # homogeneous Dirichlet halo
+    c, up, dn, lf, rt = coeffs[0], coeffs[1], coeffs[2], coeffs[3], coeffs[4]
+    kern = functools.partial(_stencil_kernel, br=br, g=g)
+    coeff_spec = pl.BlockSpec((br, g), lambda i: (i, 0))
+    return pl.pallas_call(
+        kern,
+        grid=(g // br,),
+        in_specs=[
+            pl.BlockSpec((g + 2, g + 2), lambda i: (0, 0)),  # whole padded x
+            coeff_spec,
+            coeff_spec,
+            coeff_spec,
+            coeff_spec,
+            coeff_spec,
+        ],
+        out_specs=pl.BlockSpec((br, g), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, g), x.dtype),
+        interpret=True,
+    )(xp, c, up, dn, lf, rt)

@@ -1,0 +1,377 @@
+"""L2: the JAX compute graphs AOT-lowered for the Rust coordinator.
+
+Each public ``build_*`` function returns ``(fn, example_args)`` pairs
+that aot.py lowers once (``jax.jit(fn).lower(*args)`` -> stablehlo ->
+XlaComputation -> HLO text).  Python is build-time only; the Rust hot
+path executes the resulting artifacts through PJRT.
+
+Graph inventory (see DESIGN.md artifact set):
+
+* ``stencil_spmv_g{g}``      — one Pallas stencil SpMV (the xla-hybrid
+                               backend's per-iteration kernel call).
+* ``cg_poisson_g{g}``        — the *fused* Jacobi-PCG loop: Pallas SpMV
+                               inside ``lax.while_loop``; max_iters and
+                               tol are runtime scalars, so one artifact
+                               per grid size serves every solve/adjoint
+                               call (the pytorch-native-CUDA-CG analog).
+* ``stencil_residual_g{g}``  — b - A x (adjoint-framework residual probe).
+* ``stencil_grad_g{g}``      — paper Eq. 3 matrix-gradient outer product
+                               on the stencil pattern.
+* ``dense_solve_n{n}``       — hand-written Cholesky + triangular solves
+                               (the cuDSS analog; jnp.linalg would lower
+                               to lapack FFI custom-calls the 0.5.1 PJRT
+                               runtime cannot execute).
+* ``ell_spmv_n{n}_s{s}``     — general ELL SpMV.
+* ``cg_ell_n{n}_s{s}``       — fused Jacobi-PCG over an ELL matrix.
+* ``dot_n{n}``               — runtime-call-overhead probe.
+
+All f64: the paper's experiments are float64 end to end.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ell_spmv, stencil_spmv, ref
+
+jax.config.update("jax_enable_x64", True)
+
+# --------------------------------------------------------------------------
+# Kernel implementation switch (EXPERIMENTS.md §Perf L1/L2).
+#
+# The Pallas kernels are the TPU-target authority: their BlockSpec
+# structure IS the paper's hot-spot contribution re-thought for a
+# TPU memory hierarchy, and pytest proves them equal to the pure-jnp
+# oracles over hypothesis sweeps.  But `interpret=True` (the only mode
+# the CPU PJRT runtime can execute) lowers each grid program to a
+# while_loop step with full-buffer dynamic-update-slices — measured
+# 28x (stencil g=512) to 160x (ell n=65536) slower than the SAME
+# semantics expressed as plain jnp ops, which XLA:CPU fuses into tight
+# vector loops.  Since interpret-mode wallclock is NOT a TPU proxy
+# (DESIGN.md §Hardware-Adaptation), the artifacts this CPU testbed
+# executes lower the oracle formulation by default; set
+# RSLA_KERNEL_IMPL=pallas to embed the interpret-mode kernels instead
+# (identical numerics, bit-for-bit in f64 — the pytest contract).
+# --------------------------------------------------------------------------
+KERNEL_IMPL = os.environ.get("RSLA_KERNEL_IMPL", "jnp")
+
+
+def _stencil_mv(coeffs, x, *, g: int):
+    if KERNEL_IMPL == "pallas":
+        return stencil_spmv(coeffs, x, g=g)
+    return ref.stencil_spmv_ref(coeffs, x)
+
+
+def _ell_mv(cols, vals, x, *, n: int, s: int):
+    if KERNEL_IMPL == "pallas":
+        return ell_spmv(cols, vals, x, n=n, s=s)
+    return ref.ell_spmv_ref(cols, vals, x)
+
+F64 = jnp.float64
+I32 = jnp.int32
+
+GRID_SIZES = (32, 64, 128, 256, 512)
+DENSE_SIZES = (64, 256, 1024, 2048, 4096)
+ELL_SIZES = ((4096, 8), (16384, 8), (65536, 8))
+DOT_SIZES = (65536,)
+
+
+# --------------------------------------------------------------------------
+# Stencil graphs (2D Poisson family)
+# --------------------------------------------------------------------------
+
+
+def build_stencil_spmv(g: int):
+    def fn(coeffs, x):
+        return (_stencil_mv(coeffs, x, g=g),)
+
+    args = (
+        jax.ShapeDtypeStruct((5, g, g), F64),
+        jax.ShapeDtypeStruct((g, g), F64),
+    )
+    return fn, args
+
+
+def build_stencil_residual(g: int):
+    def fn(coeffs, x, b):
+        return (b - _stencil_mv(coeffs, x, g=g),)
+
+    s = jax.ShapeDtypeStruct((g, g), F64)
+    return fn, (jax.ShapeDtypeStruct((5, g, g), F64), s, s)
+
+
+def build_stencil_grad(g: int):
+    """Adjoint matrix gradient: (lam, x) -> dL/dcoeffs (paper Eq. 3)."""
+
+    def fn(lam, x):
+        xp = jnp.pad(x, 1)
+        center = xp[1 : g + 1, 1 : g + 1]
+        up = xp[0:g, 1 : g + 1]
+        dn = xp[2 : g + 2, 1 : g + 1]
+        lf = xp[1 : g + 1, 0:g]
+        rt = xp[1 : g + 1, 2 : g + 2]
+        return (
+            jnp.stack([-lam * center, -lam * up, -lam * dn, -lam * lf, -lam * rt]),
+        )
+
+    s = jax.ShapeDtypeStruct((g, g), F64)
+    return fn, (s, s)
+
+
+def _pcg(matvec: Callable, diag_inv, b_flat, x0, max_iters, tol):
+    """Jacobi-preconditioned CG with runtime iteration/tolerance control.
+
+    The loop carry is donated by XLA (everything stays on-device); the
+    whole solve is ONE artifact execution from Rust, which is the entire
+    point of the xla-cg backend: no per-iteration host round trip.
+    Returns (x, ||r||^2, iters).
+    """
+    r0 = b_flat - matvec(x0)
+    z0 = diag_inv * r0
+    rz0 = jnp.vdot(r0, z0)
+    rr0 = jnp.vdot(r0, r0)
+    tol2 = tol * tol
+
+    def cond(carry):
+        i, _x, _r, _p, _rz, rr = carry
+        return jnp.logical_and(i < max_iters, rr > tol2)
+
+    def body(carry):
+        i, x, r, p, rz, _rr = carry
+        ap = matvec(p)
+        alpha = rz / jnp.vdot(p, ap)
+        x = x + alpha * p
+        r = r - alpha * ap
+        z = diag_inv * r
+        rz_new = jnp.vdot(r, z)
+        beta = rz_new / rz
+        p = z + beta * p
+        return (i + 1, x, r, p, rz_new, jnp.vdot(r, r))
+
+    init = (jnp.asarray(0, I32), x0, r0, z0, rz0, rr0)
+    i, x, r, _p, _rz, rr = jax.lax.while_loop(cond, body, init)
+    return x, rr, i
+
+
+def build_cg_poisson(g: int):
+    """Fused Jacobi-PCG over the stencil operator; x0 = 0."""
+
+    def fn(coeffs, b, max_iters, tol):
+        diag_inv = 1.0 / coeffs[0].reshape(-1)
+
+        def matvec(v):
+            return _stencil_mv(coeffs, v.reshape(g, g), g=g).reshape(-1)
+
+        x, rr, iters = _pcg(
+            matvec,
+            diag_inv,
+            b.reshape(-1),
+            jnp.zeros(g * g, F64),
+            max_iters,
+            tol,
+        )
+        return x.reshape(g, g), rr, iters
+
+    args = (
+        jax.ShapeDtypeStruct((5, g, g), F64),
+        jax.ShapeDtypeStruct((g, g), F64),
+        jax.ShapeDtypeStruct((), I32),
+        jax.ShapeDtypeStruct((), F64),
+    )
+    return fn, args
+
+
+# --------------------------------------------------------------------------
+# Dense direct solve (the cuDSS stand-in)
+# --------------------------------------------------------------------------
+
+
+def _cholesky_unblocked(a):
+    """Right-looking Cholesky via masked full-matrix updates.
+
+    jnp.linalg.cholesky lowers to a LAPACK FFI custom call that the
+    xla_extension 0.5.1 CPU runtime cannot execute, so the factorization
+    is written in primitive HLO ops: n fori_loop steps, each a masked
+    rank-1 update.  O(n^3) flops like LAPACK, fully fuseable by XLA.
+    """
+    n = a.shape[0]
+    idx = jnp.arange(n)
+
+    def body(j, state):
+        l, w = state
+        d = jnp.sqrt(w[j, j])
+        col = jnp.where(idx > j, w[:, j] / d, 0.0)
+        col_with_diag = col.at[j].set(d)
+        l = l.at[:, j].set(col_with_diag)
+        w = w - jnp.outer(col, col)
+        return (l, w)
+
+    l0 = jnp.zeros_like(a)
+    l, _ = jax.lax.fori_loop(0, n, body, (l0, a))
+    return l
+
+
+def _trsm_right_lt(b, l):
+    """Solve X L^T = B for X, with L (nb, nb) lower-triangular, B (m, nb).
+
+    Column sweep via fori_loop: X[:, j] = (B[:, j] - X @ masked L[j, :]) / L[j, j].
+    The masked matvec reads garbage in columns >= j of X but multiplies
+    them by zero, keeping every shape static.
+    """
+    nb = l.shape[0]
+    col_idx = jnp.arange(nb)
+
+    def body(j, x):
+        lrow = jax.lax.dynamic_slice(l, (j, 0), (1, nb))[0]
+        lmask = jnp.where(col_idx < j, lrow, 0.0)
+        ljj = jax.lax.dynamic_slice(l, (j, j), (1, 1))[0, 0]
+        bcol = jax.lax.dynamic_slice(b, (0, j), (b.shape[0], 1))[:, 0]
+        xcol = (bcol - x @ lmask) / ljj
+        return jax.lax.dynamic_update_slice(x, xcol[:, None], (0, j))
+
+    return jax.lax.fori_loop(0, nb, body, b)
+
+
+_CHOL_BLOCK = 128
+
+
+def _cholesky(a):
+    """Blocked right-looking Cholesky (EXPERIMENTS.md §Perf L2).
+
+    The unblocked fori_loop version serializes n rank-1 updates, which
+    XLA:CPU executes at <1 GFLOP/s (measured 57 s at n=4096).  The
+    blocked form does (2/3)n^3 of its flops inside `l21 @ l21.T` panel
+    matmuls — the op XLA:CPU actually optimizes — with only nb-step
+    loops left on the critical path.  The k-loop runs at trace time
+    (static shapes, ~n/nb unrolled blocks in the HLO).
+    """
+    n = a.shape[0]
+    nb = _CHOL_BLOCK
+    if n <= nb:
+        return _cholesky_unblocked(a)
+    assert n % nb == 0, "dense artifact sizes are multiples of the block"
+    l = jnp.zeros_like(a)
+    for k in range(0, n, nb):
+        akk = jax.lax.dynamic_slice(a, (k, k), (nb, nb))
+        lkk = _cholesky_unblocked(akk)
+        l = jax.lax.dynamic_update_slice(l, lkk, (k, k))
+        m = n - k - nb
+        if m > 0:
+            a21 = jax.lax.dynamic_slice(a, (k + nb, k), (m, nb))
+            l21 = _trsm_right_lt(a21, lkk)
+            l = jax.lax.dynamic_update_slice(l, l21, (k + nb, k))
+            a22 = jax.lax.dynamic_slice(a, (k + nb, k + nb), (m, m))
+            a22 = a22 - l21 @ l21.T
+            a = jax.lax.dynamic_update_slice(a, a22, (k + nb, k + nb))
+    return l
+
+
+def _tri_lower_solve(l, b):
+    n = l.shape[0]
+
+    def body(j, y):
+        dot = jnp.vdot(l[j, :], y)  # uses only y[<j]; y[j] is still 0
+        return y.at[j].set((b[j] - dot) / l[j, j])
+
+    return jax.lax.fori_loop(0, n, body, jnp.zeros_like(b))
+
+
+def _tri_upper_solve_lt(l, y):
+    """Solve L^T x = y."""
+    n = l.shape[0]
+
+    def body(k, x):
+        j = n - 1 - k
+        dot = jnp.vdot(l[:, j], x)  # uses only x[>j]
+        return x.at[j].set((y[j] - dot) / l[j, j])
+
+    return jax.lax.fori_loop(0, n, body, jnp.zeros_like(y))
+
+
+def build_dense_solve(n: int):
+    """SPD dense solve: Cholesky factor + two triangular solves."""
+
+    def fn(a, b):
+        l = _cholesky(a)
+        y = _tri_lower_solve(l, b)
+        x = _tri_upper_solve_lt(l, y)
+        return (x,)
+
+    return fn, (
+        jax.ShapeDtypeStruct((n, n), F64),
+        jax.ShapeDtypeStruct((n,), F64),
+    )
+
+
+# --------------------------------------------------------------------------
+# ELL graphs (general sparsity)
+# --------------------------------------------------------------------------
+
+
+def build_ell_spmv(n: int, s: int):
+    def fn(cols, vals, x):
+        return (_ell_mv(cols, vals, x, n=n, s=s),)
+
+    return fn, (
+        jax.ShapeDtypeStruct((n, s), I32),
+        jax.ShapeDtypeStruct((n, s), F64),
+        jax.ShapeDtypeStruct((n,), F64),
+    )
+
+
+def build_cg_ell(n: int, s: int):
+    """Fused Jacobi-PCG over an ELL matrix; diag passed explicitly."""
+
+    def fn(cols, vals, diag, b, max_iters, tol):
+        def matvec(v):
+            return _ell_mv(cols, vals, v, n=n, s=s)
+
+        x, rr, iters = _pcg(
+            matvec, 1.0 / diag, b, jnp.zeros(n, F64), max_iters, tol
+        )
+        return x, rr, iters
+
+    return fn, (
+        jax.ShapeDtypeStruct((n, s), I32),
+        jax.ShapeDtypeStruct((n, s), F64),
+        jax.ShapeDtypeStruct((n,), F64),
+        jax.ShapeDtypeStruct((n,), F64),
+        jax.ShapeDtypeStruct((), I32),
+        jax.ShapeDtypeStruct((), F64),
+    )
+
+
+def build_dot(n: int):
+    def fn(x, y):
+        return (jnp.vdot(x, y),)
+
+    s = jax.ShapeDtypeStruct((n,), F64)
+    return fn, (s, s)
+
+
+# --------------------------------------------------------------------------
+# Artifact manifest
+# --------------------------------------------------------------------------
+
+
+def artifact_builders():
+    """name -> (fn, example_args) for every artifact aot.py emits."""
+    out = {}
+    for g in GRID_SIZES:
+        out[f"stencil_spmv_g{g}"] = build_stencil_spmv(g)
+        out[f"stencil_residual_g{g}"] = build_stencil_residual(g)
+        out[f"stencil_grad_g{g}"] = build_stencil_grad(g)
+        out[f"cg_poisson_g{g}"] = build_cg_poisson(g)
+    for n in DENSE_SIZES:
+        out[f"dense_solve_n{n}"] = build_dense_solve(n)
+    for n, s in ELL_SIZES:
+        out[f"ell_spmv_n{n}_s{s}"] = build_ell_spmv(n, s)
+        out[f"cg_ell_n{n}_s{s}"] = build_cg_ell(n, s)
+    for n in DOT_SIZES:
+        out[f"dot_n{n}"] = build_dot(n)
+    return out

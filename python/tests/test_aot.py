@@ -1,0 +1,69 @@
+"""AOT pipeline: every artifact lowers to custom-call-free HLO text.
+
+The xla_extension 0.5.1 runtime behind the Rust coordinator cannot
+execute LAPACK/FFI custom-calls, so lowering any graph that contains one
+is a build-time bug this test catches.
+"""
+
+import re
+
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import aot, model
+
+# Lowering every artifact takes a while; test one representative of each
+# family at the smallest size plus the whole-name inventory.
+REPRESENTATIVE = [
+    "stencil_spmv_g32",
+    "stencil_residual_g32",
+    "stencil_grad_g32",
+    "cg_poisson_g32",
+    "dense_solve_n64",
+    "ell_spmv_n4096_s8",
+    "cg_ell_n4096_s8",
+    "dot_n65536",
+]
+
+
+@pytest.fixture(scope="module")
+def builders():
+    return model.artifact_builders()
+
+
+def test_inventory_complete(builders):
+    for name in REPRESENTATIVE:
+        assert name in builders
+    # every declared grid/dense/ell size is present
+    for g in model.GRID_SIZES:
+        assert f"cg_poisson_g{g}" in builders
+    for n in model.DENSE_SIZES:
+        assert f"dense_solve_n{n}" in builders
+
+
+@pytest.mark.parametrize("name", REPRESENTATIVE)
+def test_lowers_clean(builders, name):
+    fn, args = builders[name]
+    text = aot.to_hlo_text(jax.jit(fn).lower(*args))
+    assert text.startswith("HloModule")
+    assert "custom-call" not in text, f"{name} contains a custom call"
+    # text parser needs parameter count to match the manifest
+    nparams = len(re.findall(r"parameter\(\d+\)", text.split("ENTRY")[-1]))
+    assert nparams == len(args)
+
+
+def test_manifest_spec_roundtrip():
+    fn, args = model.build_cg_poisson(32)
+    specs = [aot._spec_str(a) for a in args]
+    assert specs == ["float64:5x32x32", "float64:32x32", "int32:", "float64:"]
+    outs = aot._out_specs(fn, args)
+    assert outs == ["float64:32x32", "float64:", "int32:"]
+
+
+def test_op_histogram_smoke():
+    fn, args = model.build_dot(65536)
+    text = aot.to_hlo_text(jax.jit(fn).lower(*args))
+    hist = aot.op_histogram(text)
+    assert sum(hist.values()) > 0

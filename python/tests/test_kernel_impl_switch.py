@@ -1,0 +1,109 @@
+"""The kernel-impl switch contract (EXPERIMENTS.md §Perf L1/L2).
+
+The AOT artifacts lower either the Pallas kernels (interpret mode; the
+TPU-target authority) or the pure-jnp oracle formulation (what the CPU
+testbed executes).  These tests pin the contract that makes the switch
+sound: BOTH implementations produce identical f64 numerics on the same
+inputs, for every artifact family that dispatches through the switch.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ell_spmv, stencil_spmv, ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    g=st.sampled_from([4, 8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_stencil_pallas_equals_jnp_oracle(g, seed):
+    rng = np.random.default_rng(seed)
+    coeffs = jnp.asarray(rng.normal(size=(5, g, g)))
+    x = jnp.asarray(rng.normal(size=(g, g)))
+    out_pallas = stencil_spmv(coeffs, x, g=g)
+    out_jnp = ref.stencil_spmv_ref(coeffs, x)
+    np.testing.assert_allclose(out_pallas, out_jnp, rtol=0, atol=1e-13)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([8, 32, 128, 512]),
+    s=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ell_pallas_equals_jnp_oracle(n, s, seed):
+    rng = np.random.default_rng(seed)
+    cols = jnp.asarray(rng.integers(0, n, size=(n, s)), dtype=jnp.int32)
+    vals = jnp.asarray(rng.normal(size=(n, s)))
+    # zero out some slots like real padding
+    mask = rng.random(size=(n, s)) < 0.3
+    vals = jnp.where(jnp.asarray(mask), 0.0, vals)
+    x = jnp.asarray(rng.normal(size=(n,)))
+    out_pallas = ell_spmv(cols, vals, x, n=n, s=s)
+    out_jnp = ref.ell_spmv_ref(cols, vals, x)
+    np.testing.assert_allclose(out_pallas, out_jnp, rtol=0, atol=1e-12)
+
+
+def _mv_with_impl(impl, monkeypatch, fn):
+    monkeypatch.setattr(model, "KERNEL_IMPL", impl)
+    return fn()
+
+
+@pytest.mark.parametrize("g", [8, 16])
+def test_cg_poisson_graph_identical_under_both_impls(monkeypatch, g):
+    """The fused CG artifact semantics do not depend on the kernel impl."""
+    rng = np.random.default_rng(0)
+    kappa = 1.0 + 0.5 * rng.random(size=g * g)
+    # assemble 5-point coefficients the same way the rust side does:
+    # use random SPD-ish planes via the ref pattern of poisson -- here we
+    # only need SOME well-conditioned stencil, so use the standard one.
+    c = np.zeros((5, g, g))
+    c[0] = 4.0 * kappa.reshape(g, g)
+    c[1:] = -1.0
+    coeffs = jnp.asarray(c)
+    b = jnp.asarray(rng.normal(size=(g, g)))
+
+    fn, _ = model.build_cg_poisson(g)
+    outs = {}
+    for impl in ("pallas", "jnp"):
+        monkeypatch.setattr(model, "KERNEL_IMPL", impl)
+        x, rr, iters = jax.jit(fn)(coeffs, b, jnp.int32(500), jnp.float64(1e-10))
+        outs[impl] = (np.asarray(x), float(rr), int(iters))
+    np.testing.assert_allclose(outs["pallas"][0], outs["jnp"][0], rtol=0, atol=1e-9)
+    assert outs["pallas"][2] == outs["jnp"][2], "iteration counts must agree"
+
+
+def test_blocked_cholesky_matches_unblocked():
+    rng = np.random.default_rng(3)
+    n = 256  # > _CHOL_BLOCK so the blocked path runs
+    m = rng.normal(size=(n, n))
+    a = jnp.asarray(m @ m.T + n * np.eye(n))
+    l_blocked = jax.jit(model._cholesky)(a)
+    l_unblocked = jax.jit(model._cholesky_unblocked)(a)
+    np.testing.assert_allclose(
+        np.tril(l_blocked), np.tril(l_unblocked), rtol=0, atol=1e-8
+    )
+    # and it actually factors A
+    lb = np.tril(np.asarray(l_blocked))
+    np.testing.assert_allclose(lb @ lb.T, np.asarray(a), rtol=1e-12, atol=1e-8 * n)
+
+
+def test_dense_solve_artifact_solves_spd_system():
+    n = 256
+    rng = np.random.default_rng(4)
+    m = rng.normal(size=(n, n))
+    a = jnp.asarray(m @ m.T + n * np.eye(n))
+    b = jnp.asarray(rng.normal(size=n))
+    fn, _ = model.build_dense_solve(n)
+    (x,) = jax.jit(fn)(a, b)
+    np.testing.assert_allclose(np.asarray(a) @ np.asarray(x), np.asarray(b), atol=1e-8)

@@ -1,0 +1,156 @@
+"""L2 correctness: the fused graphs behave like their numpy references."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import model
+from compile.kernels.ref import stencil_spmv_ref
+
+
+def poisson_coeffs(g, kappa=None):
+    """Cell-centered 5-point coefficients for -div(kappa grad u) = f, h=1/(g+1).
+
+    Matches rust/src/sparse/poisson.rs assembly (harmonic-mean face
+    coefficients); kappa=None means constant-1 conductivity.
+    """
+    if kappa is None:
+        kappa = np.ones((g, g))
+    kp = np.pad(kappa, 1, mode="edge")
+    kc = kp[1:-1, 1:-1]
+
+    def face(a, b):
+        return 2.0 * a * b / (a + b)
+
+    up = face(kc, kp[:-2, 1:-1])
+    dn = face(kc, kp[2:, 1:-1])
+    lf = face(kc, kp[1:-1, :-2])
+    rt = face(kc, kp[1:-1, 2:])
+    center = up + dn + lf + rt
+    h2 = (1.0 / (g + 1)) ** 2
+    return jnp.stack([jnp.asarray(center), -jnp.asarray(up), -jnp.asarray(dn),
+                      -jnp.asarray(lf), -jnp.asarray(rt)]) / h2
+
+
+@pytest.mark.parametrize("g", [8, 16, 32])
+def test_cg_poisson_converges(g):
+    fn, _ = model.build_cg_poisson(g)
+    coeffs = poisson_coeffs(g)
+    rng = np.random.default_rng(g)
+    b = jnp.asarray(rng.standard_normal((g, g)))
+    x, rr, iters = jax.jit(fn)(coeffs, b, jnp.asarray(5000, jnp.int32),
+                               jnp.asarray(1e-10, jnp.float64))
+    assert float(jnp.sqrt(rr)) <= 1e-10
+    # residual check against the oracle operator
+    res = np.asarray(b - stencil_spmv_ref(coeffs, x))
+    assert np.linalg.norm(res) <= 1e-9
+    assert int(iters) < 5000
+
+
+def test_cg_respects_iteration_budget():
+    g = 16
+    fn, _ = model.build_cg_poisson(g)
+    coeffs = poisson_coeffs(g)
+    b = jnp.ones((g, g))
+    _, rr, iters = jax.jit(fn)(coeffs, b, jnp.asarray(3, jnp.int32),
+                               jnp.asarray(0.0, jnp.float64))
+    assert int(iters) == 3
+    assert float(rr) > 0.0
+
+
+def test_cg_tol_zero_runs_full_budget():
+    g = 8
+    fn, _ = model.build_cg_poisson(g)
+    coeffs = poisson_coeffs(g)
+    b = jnp.ones((g, g))
+    _, _, iters = jax.jit(fn)(coeffs, b, jnp.asarray(7, jnp.int32),
+                              jnp.asarray(0.0, jnp.float64))
+    assert int(iters) == 7
+
+
+@pytest.mark.parametrize("n", [8, 32, 64])
+def test_dense_solve_spd(n):
+    fn, _ = model.build_dense_solve(n)
+    rng = np.random.default_rng(n)
+    m = rng.standard_normal((n, n))
+    a = jnp.asarray(m @ m.T + n * np.eye(n))
+    b = jnp.asarray(rng.standard_normal(n))
+    (x,) = jax.jit(fn)(a, b)
+    np.testing.assert_allclose(np.asarray(a) @ np.asarray(x), np.asarray(b),
+                               rtol=1e-9, atol=1e-9)
+
+
+def test_dense_solve_identity():
+    fn, _ = model.build_dense_solve(8)
+    b = jnp.arange(8, dtype=jnp.float64)
+    (x,) = jax.jit(fn)(jnp.eye(8), b)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(b), atol=1e-14)
+
+
+@pytest.mark.parametrize("n,s", [(64, 8)])
+def test_cg_ell_converges(n, s):
+    fn, _ = model.build_cg_ell(n, s)
+    # SPD ELL matrix: 1D Laplacian (tridiagonal) padded to s slots
+    cols = np.zeros((n, s), np.int32)
+    vals = np.zeros((n, s))
+    for i in range(n):
+        cols[i, 0], vals[i, 0] = i, 2.5
+        k = 1
+        if i > 0:
+            cols[i, k], vals[i, k] = i - 1, -1.0
+            k += 1
+        if i < n - 1:
+            cols[i, k], vals[i, k] = i + 1, -1.0
+    diag = jnp.full(n, 2.5)
+    rng = np.random.default_rng(0)
+    b = jnp.asarray(rng.standard_normal(n))
+    x, rr, _ = jax.jit(fn)(jnp.asarray(cols), jnp.asarray(vals), diag, b,
+                           jnp.asarray(1000, jnp.int32), jnp.asarray(1e-11, jnp.float64))
+    a = np.zeros((n, n))
+    for i in range(n):
+        for k in range(s):
+            a[i, cols[i, k]] += vals[i, k]
+    np.testing.assert_allclose(a @ np.asarray(x), np.asarray(b), rtol=1e-8, atol=1e-8)
+
+
+def test_stencil_grad_is_vjp():
+    g = 8
+    fn, _ = model.build_stencil_grad(g)
+    rng = np.random.default_rng(5)
+    lam = jnp.asarray(rng.standard_normal((g, g)))
+    x = jnp.asarray(rng.standard_normal((g, g)))
+    (got,) = jax.jit(fn)(lam, x)
+
+    coeffs0 = jnp.asarray(rng.standard_normal((5, g, g)))
+
+    def f(c):
+        return stencil_spmv_ref(c, x)
+
+    _, vjp = jax.vjp(f, coeffs0)
+    (want,) = vjp(lam)
+    np.testing.assert_allclose(np.asarray(got), -np.asarray(want), rtol=1e-13, atol=1e-13)
+
+
+def test_stencil_residual():
+    g = 8
+    fn, _ = model.build_stencil_residual(g)
+    rng = np.random.default_rng(9)
+    coeffs = jnp.asarray(rng.standard_normal((5, g, g)))
+    x = jnp.asarray(rng.standard_normal((g, g)))
+    b = jnp.asarray(rng.standard_normal((g, g)))
+    (r,) = jax.jit(fn)(coeffs, x, b)
+    np.testing.assert_allclose(np.asarray(r),
+                               np.asarray(b - stencil_spmv_ref(coeffs, x)),
+                               rtol=1e-13, atol=1e-13)
+
+
+def test_dot():
+    fn, _ = model.build_dot(65536)
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal(65536)
+    y = rng.standard_normal(65536)
+    (d,) = jax.jit(fn)(jnp.asarray(x), jnp.asarray(y))
+    assert float(d) == pytest.approx(float(x @ y), rel=1e-12)

@@ -1,0 +1,317 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//!  A. preconditioner: Identity / Jacobi / SSOR / ILU(0) / IC(0) / AMG
+//!     CG iterations (the paper ships Jacobi only and flags stronger
+//!     preconditioners — explicitly AMG — as future work; this
+//!     quantifies what that costs AND implements the future work);
+//!  B. ordering: natural vs RCM vs random fill for envelope Cholesky;
+//!  C. fused vs hybrid accelerator CG: the per-PJRT-call overhead the
+//!     fused `lax.while_loop` artifact eliminates (cuDSS/cupy-vs-
+//!     pytorch-native gap in Table 3);
+//!  D. batching policy: coordinator service with/without the windowed
+//!     pattern batcher;
+//!  E. partition strategy: edge cut + halo volume, contiguous vs RCB
+//!     vs BFS;
+//!  F. reduction fusion: standard two-reduction distributed CG vs
+//!     single-reduction (Chronopoulos–Gear, the Appendix C
+//!     "pipelined/s-step" roadmap item) — reduction rounds per
+//!     iteration and wall time.
+//!
+//! Run: cargo bench --bench ablations
+
+use std::sync::Arc;
+
+use rsla::backend::{Device, Dispatcher, Operator, Problem, SolveOpts};
+use rsla::coordinator::{BatchPolicy, ServiceConfig, SolveService};
+use rsla::direct::{ordering, EnvelopeCholesky};
+use rsla::distributed::{
+    dist_cg, dist_cg_pipelined, partition, run_ranks, DistIterOpts, PartitionStrategy,
+};
+use rsla::iterative::{cg, Amg, AmgOpts, Ic0, Identity, Ilu0, IterOpts, Jacobi, Precond, Ssor};
+use rsla::metrics::stopwatch::timed_median;
+use rsla::runtime::RuntimeHandle;
+use rsla::sparse::poisson::poisson2d;
+use rsla::util::Prng;
+
+fn main() {
+    ablation_preconditioner();
+    ablation_ordering();
+    ablation_fused_vs_hybrid();
+    ablation_batching();
+    ablation_partition();
+    ablation_reduction_fusion();
+}
+
+fn ablation_preconditioner() {
+    // variable-coefficient kappa*: constant-coefficient Poisson has a
+    // constant diagonal, which makes Jacobi a no-op scaling.
+    println!("# A. preconditioner ablation: CG on variable-coefficient 2D Poisson, tol 1e-8");
+    println!(
+        "| {:>7} | {:>10} | {:>10} | {:>10} | {:>10} | {:>10} | {:>10} |",
+        "n", "identity", "jacobi", "ssor(1.5)", "ilu0", "ic0", "amg"
+    );
+    for &g in &[48usize, 96] {
+        let kappa: Vec<f64> = {
+            // rough 100x-contrast field: kappa* squared plus a bump
+            rsla::sparse::poisson::kappa_star(g)
+                .iter()
+                .map(|k| k.powi(4))
+                .collect()
+        };
+        let sys = poisson2d(g, Some(&kappa));
+        let mut rng = Prng::new(g as u64);
+        let b = rng.normal_vec(g * g);
+        let opts = IterOpts {
+            tol: 1e-8,
+            max_iters: 100_000,
+            record_history: false,
+        };
+        let run = |m: &dyn Precond| {
+            let (r, secs) = timed_median(3, || cg(&sys.matrix, &b, m, &opts, None));
+            assert!(r.converged);
+            format!("{:>4} it {:>5.1}ms", r.iters, secs * 1e3)
+        };
+        let jac = Jacobi::new(&sys.matrix).unwrap();
+        let ssor = Ssor::new(&sys.matrix, 1.5).unwrap();
+        let ilu = Ilu0::new(&sys.matrix).unwrap();
+        let ic = Ic0::new(&sys.matrix).unwrap();
+        let amg = Amg::new(&sys.matrix, &AmgOpts::default()).unwrap();
+        println!(
+            "| {:>7} | {:>10} | {:>10} | {:>10} | {:>10} | {:>10} | {:>10} |",
+            g * g,
+            run(&Identity),
+            run(&jac),
+            run(&ssor),
+            run(&ilu),
+            run(&ic),
+            run(&amg)
+        );
+    }
+    // the multigrid signature: AMG-CG iterations stay flat as n grows
+    println!("#    AMG iteration flatness (constant-coefficient Poisson):");
+    for &g in &[32usize, 64, 128] {
+        let sys = poisson2d(g, None);
+        let mut rng = Prng::new(7);
+        let b = rng.normal_vec(g * g);
+        let amg = Amg::new(&sys.matrix, &AmgOpts::default()).unwrap();
+        let jac = Jacobi::new(&sys.matrix).unwrap();
+        let opts = IterOpts {
+            tol: 1e-8,
+            max_iters: 100_000,
+            record_history: false,
+        };
+        let ra = cg(&sys.matrix, &b, &amg, &opts, None);
+        let rj = cg(&sys.matrix, &b, &jac, &opts, None);
+        println!(
+            "#      n={:>6}: amg {:>3} it (levels={}, opcx={:.2})  jacobi {:>4} it",
+            g * g,
+            ra.iters,
+            amg.n_levels(),
+            amg.operator_complexity(),
+            rj.iters
+        );
+    }
+    println!();
+}
+
+fn ablation_ordering() {
+    println!("# B. ordering ablation: envelope Cholesky fill (f64 count)");
+    println!(
+        "| {:>7} | {:>12} | {:>12} | {:>12} |",
+        "n", "natural", "rcm", "shuffled"
+    );
+    for &g in &[24usize, 48] {
+        let sys = poisson2d(g, None);
+        let natural = EnvelopeCholesky::predicted_fill(&sys.matrix);
+        let p = ordering::rcm(&sys.matrix);
+        let rcm_fill = EnvelopeCholesky::predicted_fill(&sys.matrix.permute_sym(&p));
+        let mut rng = Prng::new(0);
+        let mut shuf: Vec<usize> = (0..g * g).collect();
+        rng.shuffle(&mut shuf);
+        let shuffled = EnvelopeCholesky::predicted_fill(&sys.matrix.permute_sym(&shuf));
+        println!(
+            "| {:>7} | {:>12} | {:>12} | {:>12} |",
+            g * g,
+            natural,
+            rcm_fill,
+            shuffled
+        );
+    }
+    println!();
+}
+
+fn ablation_fused_vs_hybrid() {
+    println!("# C. fused (one PJRT call) vs hybrid (one PJRT call PER ITERATION)");
+    let runtime = match RuntimeHandle::spawn_default() {
+        Ok(r) => r,
+        Err(e) => {
+            println!("skipped (no artifacts: {e})\n");
+            return;
+        }
+    };
+    // per-call overhead probe
+    let probe = {
+        let x = vec![1.0; 65536];
+        let args = [
+            rsla::runtime::Arg::vec(x.clone()),
+            rsla::runtime::Arg::vec(x),
+        ];
+        let _ = runtime.run("dot_n65536", &args); // warm the compile cache
+        let (_, secs) = timed_median(20, || runtime.run("dot_n65536", &args).unwrap());
+        secs
+    };
+    println!("per-PJRT-call overhead (dot_n65536 probe): {:.0} us", probe * 1e6);
+
+    let d = Dispatcher::new(Some(runtime));
+    println!(
+        "| {:>7} | {:>12} | {:>12} | {:>7} | {:>10} |",
+        "n", "fused", "hybrid", "iters", "gap"
+    );
+    for &g in &[32usize, 64, 128] {
+        let sys = poisson2d(g, None);
+        let mut rng = Prng::new(g as u64);
+        let b = rng.normal_vec(g * g);
+        let p = Problem {
+            op: Operator::Stencil(&sys.coeffs),
+            b: &b,
+        };
+        let mk = |backend: &str| SolveOpts {
+            device: Device::Accel,
+            backend: Some(backend.into()),
+            tol: 1e-8,
+            ..Default::default()
+        };
+        let (fused, t_f) = timed_median(3, || d.solve(&p, &mk("xla-cg")).unwrap());
+        let (hybrid, t_h) = timed_median(3, || d.solve(&p, &mk("xla-hybrid")).unwrap());
+        println!(
+            "| {:>7} | {:>9.1} ms | {:>9.1} ms | {:>7} | {:>9.1}x |",
+            g * g,
+            t_f * 1e3,
+            t_h * 1e3,
+            hybrid.iters,
+            t_h / t_f
+        );
+        let _ = fused;
+    }
+    println!();
+}
+
+fn ablation_batching() {
+    println!("# D. batching policy: 64 shared-pattern requests through the service");
+    for (label, window_ms, max_batch) in
+        [("no batching", 0u64, 1usize), ("2ms window x32", 2, 32)]
+    {
+        let svc = SolveService::start(
+            Arc::new(Dispatcher::new(None)),
+            ServiceConfig {
+                workers: 2,
+                batch: BatchPolicy {
+                    max_batch,
+                    window: std::time::Duration::from_millis(window_ms),
+                },
+            },
+        );
+        let sys = poisson2d(32, None);
+        let mut rng = Prng::new(1);
+        let t0 = std::time::Instant::now();
+        let rxs: Vec<_> = (0..64)
+            .map(|_| {
+                svc.submit(
+                    sys.matrix.clone(),
+                    rng.normal_vec(sys.matrix.nrows),
+                    SolveOpts::default(),
+                )
+            })
+            .collect();
+        let mut batched = 0;
+        for rx in rxs {
+            let r = rx.recv().unwrap();
+            r.outcome.unwrap();
+            if r.batch_size > 1 {
+                batched += 1;
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "  {label:<16} total {:>7.1} ms  ({:>5.0} req/s), {batched}/64 batched",
+            wall * 1e3,
+            64.0 / wall
+        );
+    }
+    println!();
+}
+
+fn ablation_partition() {
+    println!("# E. partition strategy: edge cut + max halo, g=64 grid, P=4");
+    let sys = poisson2d(64, None);
+    for (name, strat) in [
+        ("contiguous", PartitionStrategy::Contiguous),
+        ("rcb", PartitionStrategy::Rcb),
+        ("greedy-bfs", PartitionStrategy::GreedyBfs),
+    ] {
+        let part = partition::partition(&sys.matrix, Some(&sys.coords), 4, strat);
+        let ap = sys.matrix.permute_sym(&part.perm);
+        let cut = part.edge_cut(&ap);
+        let shares = rsla::distributed::halo::distribute(&ap, &part);
+        let halo = shares.iter().map(|s| s.plan.n_halo()).max().unwrap();
+        println!("  {name:<12} edge-cut {cut:>6}   max halo {halo:>5}");
+    }
+    println!();
+}
+
+fn ablation_reduction_fusion() {
+    println!("# F. reduction fusion: 2-reduction CG vs single-reduction (pipelined) CG, P=4");
+    println!(
+        "| {:>7} | {:>9} | {:>9} | {:>12} | {:>12} | {:>9} |",
+        "n", "std it", "pip it", "std reds/it", "pip reds/it", "time gap"
+    );
+    for &g in &[48usize, 96] {
+        let sys = poisson2d(g, Some(&rsla::sparse::poisson::kappa_star(g)));
+        let nparts = 4;
+        let part = partition::partition(
+            &sys.matrix,
+            Some(&sys.coords),
+            nparts,
+            PartitionStrategy::Rcb,
+        );
+        let a_perm = sys.matrix.permute_sym(&part.perm);
+        let parts = Arc::new(rsla::distributed::halo::distribute(&a_perm, &part));
+        let part = Arc::new(part);
+        let mut rng = Prng::new(g as u64);
+        let b = Arc::new(rng.normal_vec(g * g));
+        let opts = DistIterOpts {
+            tol: 1e-9,
+            max_iters: 100_000,
+                ..Default::default()
+            };
+
+        let run = |pipelined: bool| {
+            let (bc, p2, ps, o) = (b.clone(), part.clone(), parts.clone(), opts.clone());
+            let t0 = std::time::Instant::now();
+            let out = run_ranks(nparts, move |c| {
+                let p = c.rank();
+                let range = p2.rank_range(p);
+                let rep = if pipelined {
+                    dist_cg_pipelined(&ps[p], &bc[range], &c, &o)
+                } else {
+                    dist_cg(&ps[p], &bc[range], &c, &o)
+                };
+                (rep.iters, rep.converged, c.reduce_rounds())
+            });
+            let wall = t0.elapsed().as_secs_f64();
+            assert!(out.iter().all(|(_, conv, _)| *conv));
+            (out[0].0, out[0].2 as f64 / out[0].0 as f64, wall)
+        };
+        let (it_s, red_s, t_s) = run(false);
+        let (it_p, red_p, t_p) = run(true);
+        println!(
+            "| {:>7} | {:>9} | {:>9} | {:>12.2} | {:>12.2} | {:>8.2}x |",
+            g * g,
+            it_s,
+            it_p,
+            red_s,
+            red_p,
+            t_s / t_p
+        );
+    }
+}

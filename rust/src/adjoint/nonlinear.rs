@@ -1,0 +1,310 @@
+//! Nonlinear-solve adjoint (paper §3.2.2, "Nonlinear systems").
+//!
+//! Forward: converge F(u; theta) = 0 by Newton (possibly many inner
+//! linear solves).  Backward: ONE adjoint linear solve
+//! `J^T lambda = dL/du` at the converged u*, then
+//! `dL/dtheta = -lambda^T dF/dtheta` via the residual's VJP — the tape
+//! sees a single node regardless of forward iteration count.
+
+use std::rc::Rc;
+
+use crate::autograd::{CustomOp, Tape, Value, Var};
+use crate::error::Result;
+use crate::nonlinear::{newton, NewtonOpts, Residual};
+
+/// Factory producing the residual for a given parameter vector theta.
+pub type ResidualFactory = Rc<dyn Fn(&[f64]) -> Box<dyn Residual>>;
+
+struct NonlinearSolveOp {
+    factory: ResidualFactory,
+}
+
+impl CustomOp for NonlinearSolveOp {
+    fn name(&self) -> &'static str {
+        "nonlinear_solve_adjoint"
+    }
+
+    fn backward(&self, out_val: &Value, out_grad: &Value, inputs: &[&Value]) -> Vec<Option<Value>> {
+        let u_star = out_val.as_vec();
+        let gy = out_grad.as_vec();
+        let theta = inputs[0].as_vec();
+        let residual = (self.factory)(theta);
+        // J^T lambda = dL/du at the converged state
+        let j = residual.jacobian(u_star);
+        let jt = j.transpose();
+        let lambda = crate::direct::direct_solve(&jt, gy).expect("adjoint solve failed");
+        // dL/dtheta = -lambda^T dF/dtheta
+        let mut dtheta = residual.vjp_theta(u_star, &lambda);
+        for d in dtheta.iter_mut() {
+            *d = -*d;
+        }
+        vec![Some(Value::V(dtheta))]
+    }
+}
+
+/// Forward iteration used to converge F(u, theta) = 0 before the
+/// adjoint is taken (paper §3.2.2: "converged by Newton, Picard, or
+/// Anderson acceleration... Eq. (2) applies directly").  The BACKWARD
+/// pass is identical for all three — one adjoint solve at u* — because
+/// the IFT only sees the converged state, not the iteration that
+/// produced it.
+#[derive(Clone, Debug)]
+pub enum NonlinearMethod {
+    Newton(crate::nonlinear::NewtonOpts),
+    /// Relaxed fixed-point iteration on u <- u - relax * F(u).
+    Picard(crate::nonlinear::PicardOpts),
+    /// Anderson acceleration with the given history depth.
+    Anderson {
+        depth: usize,
+        opts: crate::nonlinear::PicardOpts,
+    },
+}
+
+/// Differentiable nonlinear solve: records ONE node on the tape.
+///
+/// Because the adjoint is taken at the converged state, the gradient is
+/// exact only once `F(u*, theta) ~ 0`; early termination biases it
+/// (paper §3.2.2) — callers control that trade-off through `opts`.
+pub fn solve_nonlinear(
+    tape: &Tape,
+    factory: ResidualFactory,
+    theta: Var,
+    u0: &[f64],
+    opts: &NewtonOpts,
+) -> Result<(Var, crate::nonlinear::NonlinearResult)> {
+    solve_nonlinear_with(
+        tape,
+        factory,
+        theta,
+        u0,
+        &NonlinearMethod::Newton(opts.clone()),
+    )
+}
+
+/// Jacobi-scaled fixed-point map G(u) = u - D^{-1} F(u) with D the
+/// Jacobian diagonal at u0: makes Picard/Anderson convergence
+/// independent of the residual's overall scaling (a raw `u - F(u)` map
+/// diverges whenever ||J|| > 2, e.g. any h^-2-scaled PDE operator).
+fn jacobi_scaled_map<'r>(
+    r: &'r dyn crate::nonlinear::Residual,
+    u0: &[f64],
+) -> impl Fn(&[f64], &mut [f64]) + 'r {
+    let j0 = r.jacobian(u0);
+    let inv_diag: Vec<f64> = j0
+        .diag()
+        .iter()
+        .map(|d| if *d != 0.0 { 1.0 / d } else { 1.0 })
+        .collect();
+    let n = r.dim();
+    move |u: &[f64], out: &mut [f64]| {
+        let mut f = vec![0.0; n];
+        r.eval(u, &mut f);
+        for i in 0..n {
+            out[i] = u[i] - inv_diag[i] * f[i];
+        }
+    }
+}
+
+/// [`solve_nonlinear`] with an explicit forward method (the paper's
+/// `method='newton'|'picard'|'anderson'` keyword).
+pub fn solve_nonlinear_with(
+    tape: &Tape,
+    factory: ResidualFactory,
+    theta: Var,
+    u0: &[f64],
+    method: &NonlinearMethod,
+) -> Result<(Var, crate::nonlinear::NonlinearResult)> {
+    let theta_v = tape.vec_of(theta);
+    let residual = (factory)(&theta_v);
+    let result = match method {
+        NonlinearMethod::Newton(opts) => newton(residual.as_ref(), u0, opts),
+        NonlinearMethod::Picard(opts) => {
+            let g = jacobi_scaled_map(residual.as_ref(), u0);
+            crate::nonlinear::picard(g, u0, opts)
+        }
+        NonlinearMethod::Anderson { depth, opts } => {
+            let g = jacobi_scaled_map(residual.as_ref(), u0);
+            crate::nonlinear::anderson(g, u0, *depth, opts)
+        }
+    };
+    let op = NonlinearSolveOp { factory };
+    let var = tape.custom(Rc::new(op), vec![theta], Value::V(result.u.clone()));
+    Ok((var, result))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::poisson::{poisson2d, PoissonSystem};
+    use crate::sparse::{Coo, Csr};
+    use crate::util::{dot, Prng};
+
+    /// F(u; theta) = A u + u^2 - theta (theta is the forcing field) —
+    /// the paper's nonlinear example with theta as the parameter.
+    struct Forced {
+        sys: PoissonSystem,
+        theta: Vec<f64>,
+    }
+
+    impl Residual for Forced {
+        fn dim(&self) -> usize {
+            self.theta.len()
+        }
+        fn eval(&self, u: &[f64], out: &mut [f64]) {
+            self.sys.matrix.spmv(u, out);
+            for i in 0..u.len() {
+                out[i] += u[i] * u[i] - self.theta[i];
+            }
+        }
+        fn jacobian(&self, u: &[f64]) -> Csr {
+            let a = &self.sys.matrix;
+            let n = a.nrows;
+            let mut coo = Coo::with_capacity(n, n, a.nnz() + n);
+            for r in 0..n {
+                let (cols, vals) = a.row(r);
+                for (c, v) in cols.iter().zip(vals) {
+                    coo.push(r, *c, *v);
+                }
+                coo.push(r, r, 2.0 * u[r]);
+            }
+            coo.to_csr()
+        }
+        fn vjp_theta(&self, _u: &[f64], w: &[f64]) -> Vec<f64> {
+            // dF/dtheta = -I, so w^T dF/dtheta = -w
+            w.iter().map(|x| -x).collect()
+        }
+    }
+
+    fn factory(g: usize) -> ResidualFactory {
+        Rc::new(move |theta: &[f64]| {
+            Box::new(Forced {
+                sys: poisson2d(g, None),
+                theta: theta.to_vec(),
+            }) as Box<dyn Residual>
+        })
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let g = 6;
+        let n = g * g;
+        let mut rng = Prng::new(0);
+        let theta0: Vec<f64> = (0..n).map(|_| rng.uniform() + 0.5).collect();
+        let w = rng.normal_vec(n);
+        let fac = factory(g);
+
+        let tape = Tape::new();
+        let theta = tape.leaf_vec(theta0.clone());
+        let opts = NewtonOpts {
+            tol: 1e-13,
+            ..NewtonOpts::default()
+        };
+        let (u, res) = solve_nonlinear(&tape, fac.clone(), theta, &vec![0.0; n], &opts).unwrap();
+        assert!(res.converged);
+        let wv = tape.constant_vec(w.clone());
+        let loss = tape.dot(u, wv);
+        let grads = tape.backward(loss);
+        let dtheta = grads.vec(theta).clone();
+
+        // central finite differences on a few components
+        let eps = 1e-6;
+        for i in [0usize, n / 3, n - 1] {
+            let solve_at = |tv: &[f64]| {
+                let r = (fac)(tv);
+                let out = newton(r.as_ref(), &vec![0.0; n], &opts);
+                assert!(out.converged);
+                dot(&out.u, &w)
+            };
+            let mut tp = theta0.clone();
+            tp[i] += eps;
+            let mut tm = theta0.clone();
+            tm[i] -= eps;
+            let fd = (solve_at(&tp) - solve_at(&tm)) / (2.0 * eps);
+            assert!(
+                (dtheta[i] - fd).abs() < 1e-5 * (1.0 + fd.abs()),
+                "dtheta[{i}] {} vs fd {fd}",
+                dtheta[i]
+            );
+        }
+    }
+
+    #[test]
+    fn one_node_many_newton_iters() {
+        let g = 5;
+        let n = g * g;
+        let tape = Tape::new();
+        let theta = tape.leaf_vec(vec![1.0; n]);
+        let before = tape.node_count();
+        let (_, res) = solve_nonlinear(
+            &tape,
+            factory(g),
+            theta,
+            &vec![0.0; n],
+            &NewtonOpts::default(),
+        )
+        .unwrap();
+        assert!(res.iters >= 2, "want a multi-iteration forward");
+        assert_eq!(tape.node_count() - before, 1);
+    }
+
+    #[test]
+    fn all_three_forward_methods_give_the_same_gradient() {
+        // paper §3.2.2: the adjoint only sees the converged state, so
+        // Newton, Picard, and Anderson forwards must all produce the
+        // same u* and the same dL/dtheta.
+        let g = 5;
+        let n = g * g;
+        let mut rng = Prng::new(4);
+        let theta0: Vec<f64> = (0..n).map(|_| 0.5 + rng.uniform()).collect();
+
+        let run = |method: &NonlinearMethod| {
+            let tape = Tape::new();
+            let theta = tape.leaf_vec(theta0.clone());
+            let (u, res) =
+                solve_nonlinear_with(&tape, factory(g), theta, &vec![0.0; n], method).unwrap();
+            assert!(res.converged, "forward did not converge: {method:?}");
+            let loss = tape.dot(u, u);
+            let grads = tape.backward(loss);
+            (tape.vec_of(u), grads.vec(theta).clone())
+        };
+
+        let newton_out = run(&NonlinearMethod::Newton(NewtonOpts::default()));
+        let picard_out = run(&NonlinearMethod::Picard(crate::nonlinear::PicardOpts {
+            tol: 1e-12,
+            max_iters: 100_000,
+            relax: 0.1, // F has Jacobian ~ Poisson: heavy damping needed
+        }));
+        let anderson_out = run(&NonlinearMethod::Anderson {
+            depth: 5,
+            opts: crate::nonlinear::PicardOpts {
+                tol: 1e-12,
+                max_iters: 100_000,
+                relax: 0.9,
+            },
+        });
+        assert!(crate::util::rel_l2(&picard_out.0, &newton_out.0) < 1e-8);
+        assert!(crate::util::rel_l2(&anderson_out.0, &newton_out.0) < 1e-8);
+        assert!(crate::util::rel_l2(&picard_out.1, &newton_out.1) < 1e-7);
+        assert!(crate::util::rel_l2(&anderson_out.1, &newton_out.1) < 1e-7);
+    }
+
+    #[test]
+    fn backward_is_one_linear_solve() {
+        // Table 5: forward cost = #Newton solves, backward cost = 1 solve.
+        let g = 5;
+        let n = g * g;
+        let tape = Tape::new();
+        let theta = tape.leaf_vec(vec![1.0; n]);
+        let opts = NewtonOpts {
+            max_iters: 5,
+            fixed_iters: true,
+            ..NewtonOpts::default()
+        };
+        let (u, res) = solve_nonlinear(&tape, factory(g), theta, &vec![0.0; n], &opts).unwrap();
+        assert_eq!(res.linear_solves, 5);
+        let s = tape.sum(u);
+        let grads = tape.backward(s);
+        // gradient exists and is finite
+        assert!(grads.vec(theta).iter().all(|g| g.is_finite()));
+    }
+}

@@ -1,0 +1,195 @@
+//! "Naive" CG: every iteration recorded on the autograd tape — the
+//! baseline of paper §4.2 / Fig. 2 / Table 7.
+//!
+//! SpMV is decomposed exactly as the paper's hand-coded scatter SpMV
+//! (`val * x[col]` followed by `index_add`): a gather node and a
+//! multiply node each pin an nnz-sized tensor per iteration, plus a
+//! handful of n-vectors from the Krylov recurrence — reproducing the
+//! ~(2 nnz + c n) * 8 bytes/iteration growth measured in the paper.
+
+use std::sync::Arc;
+
+use super::{Tape, Var};
+use crate::sparse::Pattern;
+
+/// Sparse structure prepared for tape SpMV: gather/scatter index maps.
+pub struct TapeSpmv {
+    pub n: usize,
+    cols: Arc<Vec<usize>>,
+    rows: Arc<Vec<usize>>,
+}
+
+impl TapeSpmv {
+    pub fn new(pattern: &Pattern) -> Self {
+        let mut rows = vec![0usize; pattern.nnz()];
+        for r in 0..pattern.nrows {
+            for k in pattern.indptr[r]..pattern.indptr[r + 1] {
+                rows[k] = r;
+            }
+        }
+        TapeSpmv {
+            n: pattern.nrows,
+            cols: Arc::new(pattern.indices.as_ref().clone()),
+            rows: Arc::new(rows),
+        }
+    }
+
+    /// y = A x recorded as gather -> mul -> index_add (3 tape nodes, two
+    /// of them nnz-sized).
+    pub fn apply(&self, tape: &Tape, vals: Var, x: Var) -> Var {
+        let gathered = tape.gather(x, self.cols.clone());
+        let prod = tape.mul(vals, gathered);
+        tape.index_add(prod, self.rows.clone(), self.n)
+    }
+}
+
+/// Unpreconditioned CG forced to run exactly `k` iterations, all ops on
+/// the tape.  Returns the solution Var; gradients w.r.t. `vals` and `b`
+/// flow back through every iteration (O(k) nodes, O(k (n + nnz)) bytes).
+pub fn naive_cg(tape: &Tape, spmv: &TapeSpmv, vals: Var, b: Var, k: usize) -> Var {
+    naive_cg_tol(tape, spmv, vals, b, k, 0.0)
+}
+
+/// Like [`naive_cg`] but with an absolute-residual stop (the paper's
+/// convergence-agreement protocol, §4.2/App. D: atol = 1e-12): once
+/// ||r|| <= tol the loop stops adding tape nodes, avoiding the 0/0
+/// degeneracy of iterating far past floating-point convergence.
+pub fn naive_cg_tol(
+    tape: &Tape,
+    spmv: &TapeSpmv,
+    vals: Var,
+    b: Var,
+    k: usize,
+    tol: f64,
+) -> Var {
+    let n = spmv.n;
+    let tol2 = tol * tol;
+    // x = 0, r = b, p = b
+    let mut x = tape.constant_vec(vec![0.0; n]);
+    let mut r = b;
+    let mut p = b;
+    let mut rz = tape.dot(r, r);
+    for _ in 0..k {
+        if tape.scalar_of(rz) <= tol2 {
+            break;
+        }
+        let ap = spmv.apply(tape, vals, p);
+        let pap = tape.dot(p, ap);
+        let alpha = tape.div_ss(rz, pap);
+        let alpha_p = tape.mul_sv(alpha, p);
+        x = tape.add(x, alpha_p);
+        let alpha_ap = tape.mul_sv(alpha, ap);
+        r = tape.sub(r, alpha_ap);
+        let rz_new = tape.dot(r, r);
+        let beta = tape.div_ss(rz_new, rz);
+        let beta_p = tape.mul_sv(beta, p);
+        p = tape.add(r, beta_p);
+        rz = rz_new;
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adjoint::{native_solver, solve_linear};
+    use crate::sparse::poisson::poisson2d;
+    use crate::util::{self, Prng};
+
+    #[test]
+    fn tape_spmv_matches_csr() {
+        let g = 8;
+        let sys = poisson2d(g, None);
+        let pattern = Pattern::of(&sys.matrix);
+        let spmv = TapeSpmv::new(&pattern);
+        let mut rng = Prng::new(0);
+        let xv = rng.normal_vec(g * g);
+        let tape = Tape::new();
+        let vals = tape.constant_vec(sys.matrix.vals.clone());
+        let x = tape.constant_vec(xv.clone());
+        let y = spmv.apply(&tape, vals, x);
+        assert!(util::max_abs_diff(&tape.vec_of(y), &sys.matrix.matvec(&xv)) < 1e-12);
+    }
+
+    #[test]
+    fn converged_naive_matches_direct() {
+        let g = 8;
+        let n = g * g;
+        let sys = poisson2d(g, None);
+        let pattern = Pattern::of(&sys.matrix);
+        let spmv = TapeSpmv::new(&pattern);
+        let mut rng = Prng::new(1);
+        let bv = rng.normal_vec(n);
+        let tape = Tape::new();
+        let vals = tape.constant_vec(sys.matrix.vals.clone());
+        let b = tape.constant_vec(bv.clone());
+        let x = naive_cg(&tape, &spmv, vals, b, n);
+        let xd = crate::direct::direct_solve(&sys.matrix, &bv).unwrap();
+        assert!(util::max_abs_diff(&tape.vec_of(x), &xd) < 1e-8);
+    }
+
+    /// The paper's §4.2 small-problem correctness check: run naive and
+    /// adjoint to convergence; loss and gradients must agree.
+    #[test]
+    fn naive_and_adjoint_gradients_agree_at_convergence() {
+        let g = 8; // small version of the paper's n_grid = 64 check
+        let n = g * g;
+        let sys = poisson2d(g, None);
+        let pattern = Pattern::of(&sys.matrix);
+        let spmv = TapeSpmv::new(&pattern);
+        let mut rng = Prng::new(2);
+        let bv = rng.normal_vec(n);
+
+        // naive path
+        // k = n: CG terminates exactly at n iterations in exact
+        // arithmetic; running far past that point degenerates the
+        // recurrence (beta -> 0/0) and poisons the naive backward.
+        let t1 = Tape::new();
+        let vals1 = t1.leaf_vec(sys.matrix.vals.clone());
+        let b1 = t1.leaf_vec(bv.clone());
+        let x1 = naive_cg(&t1, &spmv, vals1, b1, n);
+        let loss1 = t1.dot(x1, x1);
+        let g1 = t1.backward(loss1);
+
+        // adjoint path
+        let t2 = Tape::new();
+        let vals2 = t2.leaf_vec(sys.matrix.vals.clone());
+        let b2 = t2.leaf_vec(bv.clone());
+        let solver = native_solver();
+        let x2 = solve_linear(&t2, &pattern, vals2, b2, &solver).unwrap();
+        let loss2 = t2.dot(x2, x2);
+        let g2 = t2.backward(loss2);
+
+        // losses agree to machine precision
+        let (l1, l2) = (t1.scalar_of(loss1), t2.scalar_of(loss2));
+        assert!(
+            ((l1 - l2) / l2).abs() < 1e-12,
+            "loss mismatch: {l1} vs {l2}"
+        );
+        // db agree tightly, dA a bit looser (paper: 1e-14 and 1e-4 bands)
+        assert!(util::rel_l2(g1.vec(b1), g2.vec(b2)) < 1e-9);
+        assert!(util::rel_l2(g1.vec(vals1), g2.vec(vals2)) < 1e-5);
+    }
+
+    #[test]
+    fn tape_grows_linearly_in_k() {
+        let g = 8;
+        let sys = poisson2d(g, None);
+        let pattern = Pattern::of(&sys.matrix);
+        let spmv = TapeSpmv::new(&pattern);
+        let measure = |k: usize| {
+            let tape = Tape::new();
+            let vals = tape.constant_vec(sys.matrix.vals.clone());
+            let b = tape.constant_vec(vec![1.0; g * g]);
+            let _ = naive_cg(&tape, &spmv, vals, b, k);
+            (tape.node_count(), tape.forward_bytes())
+        };
+        let (n10, b10) = measure(10);
+        let (n20, b20) = measure(20);
+        let (n40, b40) = measure(40);
+        // node count and bytes must grow linearly: doubling k doubles the
+        // per-iteration share
+        assert_eq!(n40 - n20, 2 * (n20 - n10));
+        assert_eq!(b40 - b20, 2 * (b20 - b10));
+    }
+}

@@ -1,0 +1,399 @@
+//! Forward op constructors on [`Tape`] and the shared backward rules.
+
+use std::rc::Rc;
+use std::sync::Arc;
+
+use super::{CustomOp, Op, Tape, Value, Var};
+use crate::util::dot as vdot;
+
+impl Tape {
+    fn vec2(&self, a: Var, b: Var, f: impl Fn(&[f64], &[f64]) -> Vec<f64>, op: Op) -> Var {
+        let (va, vb) = (self.vec_of(a), self.vec_of(b));
+        assert_eq!(va.len(), vb.len(), "vector length mismatch");
+        let out = f(&va, &vb);
+        self.push(op, vec![a, b], Value::V(out))
+    }
+
+    /// Elementwise a + b.
+    pub fn add(&self, a: Var, b: Var) -> Var {
+        self.vec2(a, b, |x, y| x.iter().zip(y).map(|(p, q)| p + q).collect(), Op::AddV)
+    }
+
+    /// Elementwise a - b.
+    pub fn sub(&self, a: Var, b: Var) -> Var {
+        self.vec2(a, b, |x, y| x.iter().zip(y).map(|(p, q)| p - q).collect(), Op::SubV)
+    }
+
+    /// Elementwise a * b.
+    pub fn mul(&self, a: Var, b: Var) -> Var {
+        self.vec2(a, b, |x, y| x.iter().zip(y).map(|(p, q)| p * q).collect(), Op::MulVV)
+    }
+
+    /// Elementwise a / b.
+    pub fn div(&self, a: Var, b: Var) -> Var {
+        self.vec2(a, b, |x, y| x.iter().zip(y).map(|(p, q)| p / q).collect(), Op::DivVV)
+    }
+
+    /// scalar-var s * vector-var v.
+    pub fn mul_sv(&self, s: Var, v: Var) -> Var {
+        let sv = self.scalar_of(s);
+        let vv = self.vec_of(v);
+        let out = vv.iter().map(|x| sv * x).collect();
+        self.push(Op::MulSV, vec![s, v], Value::V(out))
+    }
+
+    /// Constant scale c * v.
+    pub fn scale_const(&self, c: f64, v: Var) -> Var {
+        let out = self.vec_of(v).iter().map(|x| c * x).collect();
+        self.push(Op::ScaleConst(c), vec![v], Value::V(out))
+    }
+
+    /// Elementwise multiply by an untracked constant vector.
+    pub fn mul_const_vec(&self, c: Arc<Vec<f64>>, v: Var) -> Var {
+        let vv = self.vec_of(v);
+        assert_eq!(c.len(), vv.len());
+        let out = vv.iter().zip(c.iter()).map(|(x, y)| x * y).collect();
+        self.push(Op::MulConstVec(c), vec![v], Value::V(out))
+    }
+
+    /// out[k] = x[idx[k]] — the gather half of the paper's scatter SpMV.
+    pub fn gather(&self, x: Var, idx: Arc<Vec<usize>>) -> Var {
+        let xv = self.vec_of(x);
+        let out = idx.iter().map(|&i| xv[i]).collect();
+        self.push(Op::Gather(idx), vec![x], Value::V(out))
+    }
+
+    /// out[i] = sum over k with idx[k] == i of v[k] (length n) — the
+    /// index_add half of the scatter SpMV.
+    pub fn index_add(&self, v: Var, idx: Arc<Vec<usize>>, n: usize) -> Var {
+        let vv = self.vec_of(v);
+        assert_eq!(vv.len(), idx.len());
+        let mut out = vec![0.0; n];
+        for (k, &i) in idx.iter().enumerate() {
+            out[i] += vv[k];
+        }
+        self.push(Op::IndexAdd(idx, n), vec![v], Value::V(out))
+    }
+
+    /// Numerically stable softplus ln(1 + e^x).
+    pub fn softplus(&self, v: Var) -> Var {
+        let out = self
+            .vec_of(v)
+            .iter()
+            .map(|&x| if x > 30.0 { x } else { (1.0 + x.exp()).ln() })
+            .collect();
+        self.push(Op::Softplus, vec![v], Value::V(out))
+    }
+
+    /// Concatenate vectors.
+    pub fn concat(&self, parts: &[Var]) -> Var {
+        let vals: Vec<Vec<f64>> = parts.iter().map(|&p| self.vec_of(p)).collect();
+        let lens: Vec<usize> = vals.iter().map(|v| v.len()).collect();
+        let mut out = Vec::with_capacity(lens.iter().sum());
+        for v in &vals {
+            out.extend_from_slice(v);
+        }
+        self.push(Op::ConcatN(lens), parts.to_vec(), Value::V(out))
+    }
+
+    /// Slice v[start..start+len].
+    pub fn slice(&self, v: Var, start: usize, len: usize) -> Var {
+        let vv = self.vec_of(v);
+        let out = vv[start..start + len].to_vec();
+        self.push(Op::Slice(start, len), vec![v], Value::V(out))
+    }
+
+    /// Inner product -> scalar.
+    pub fn dot(&self, a: Var, b: Var) -> Var {
+        let (va, vb) = (self.vec_of(a), self.vec_of(b));
+        assert_eq!(va.len(), vb.len());
+        self.push(Op::Dot, vec![a, b], Value::S(vdot(&va, &vb)))
+    }
+
+    /// Sum of entries -> scalar.
+    pub fn sum(&self, v: Var) -> Var {
+        let s = self.vec_of(v).iter().sum();
+        self.push(Op::SumV, vec![v], Value::S(s))
+    }
+
+    pub fn add_ss(&self, a: Var, b: Var) -> Var {
+        let s = self.scalar_of(a) + self.scalar_of(b);
+        self.push(Op::AddSS, vec![a, b], Value::S(s))
+    }
+
+    pub fn sub_ss(&self, a: Var, b: Var) -> Var {
+        let s = self.scalar_of(a) - self.scalar_of(b);
+        self.push(Op::SubSS, vec![a, b], Value::S(s))
+    }
+
+    pub fn mul_ss(&self, a: Var, b: Var) -> Var {
+        let s = self.scalar_of(a) * self.scalar_of(b);
+        self.push(Op::MulSS, vec![a, b], Value::S(s))
+    }
+
+    pub fn div_ss(&self, a: Var, b: Var) -> Var {
+        let s = self.scalar_of(a) / self.scalar_of(b);
+        self.push(Op::DivSS, vec![a, b], Value::S(s))
+    }
+
+    pub fn scale_const_s(&self, c: f64, a: Var) -> Var {
+        let s = c * self.scalar_of(a);
+        self.push(Op::ScaleConstS(c), vec![a], Value::S(s))
+    }
+
+    /// Insert a custom O(1) node (the adjoint framework entry point).
+    /// `value` must already be computed by the caller's forward pass.
+    pub fn custom(&self, op: Rc<dyn CustomOp>, inputs: Vec<Var>, value: Value) -> Var {
+        self.push(Op::Custom(op), inputs, value)
+    }
+}
+
+/// Backward rule dispatch: returns one Option<Value> per input.
+pub(crate) fn backward_op(
+    op: &Op,
+    out_val: &Value,
+    g: &Value,
+    inputs: &[&Value],
+) -> Vec<Option<Value>> {
+    match op {
+        Op::Leaf { .. } | Op::Constant => vec![],
+        Op::AddV => vec![Some(g.clone()), Some(g.clone())],
+        Op::SubV => {
+            let gv = g.as_vec();
+            vec![
+                Some(g.clone()),
+                Some(Value::V(gv.iter().map(|x| -x).collect())),
+            ]
+        }
+        Op::MulVV => {
+            let gv = g.as_vec();
+            let (a, b) = (inputs[0].as_vec(), inputs[1].as_vec());
+            vec![
+                Some(Value::V(gv.iter().zip(b).map(|(x, y)| x * y).collect())),
+                Some(Value::V(gv.iter().zip(a).map(|(x, y)| x * y).collect())),
+            ]
+        }
+        Op::DivVV => {
+            let gv = g.as_vec();
+            let (a, b) = (inputs[0].as_vec(), inputs[1].as_vec());
+            let da: Vec<f64> = gv.iter().zip(b).map(|(x, y)| x / y).collect();
+            let db: Vec<f64> = (0..gv.len())
+                .map(|i| -gv[i] * a[i] / (b[i] * b[i]))
+                .collect();
+            vec![Some(Value::V(da)), Some(Value::V(db))]
+        }
+        Op::MulSV => {
+            let gv = g.as_vec();
+            let s = inputs[0].as_scalar();
+            let v = inputs[1].as_vec();
+            vec![
+                Some(Value::S(vdot(gv, v))),
+                Some(Value::V(gv.iter().map(|x| s * x).collect())),
+            ]
+        }
+        Op::ScaleConst(c) => {
+            let gv = g.as_vec();
+            vec![Some(Value::V(gv.iter().map(|x| c * x).collect()))]
+        }
+        Op::MulConstVec(c) => {
+            let gv = g.as_vec();
+            vec![Some(Value::V(
+                gv.iter().zip(c.iter()).map(|(x, y)| x * y).collect(),
+            ))]
+        }
+        Op::Gather(idx) => {
+            let gv = g.as_vec();
+            let n = inputs[0].as_vec().len();
+            let mut dx = vec![0.0; n];
+            for (k, &i) in idx.iter().enumerate() {
+                dx[i] += gv[k];
+            }
+            vec![Some(Value::V(dx))]
+        }
+        Op::IndexAdd(idx, n) => {
+            let gv = g.as_vec();
+            debug_assert_eq!(gv.len(), *n);
+            vec![Some(Value::V(idx.iter().map(|&i| gv[i]).collect()))]
+        }
+        Op::Softplus => {
+            let gv = g.as_vec();
+            let x = inputs[0].as_vec();
+            let dx: Vec<f64> = gv
+                .iter()
+                .zip(x)
+                .map(|(gi, xi)| gi / (1.0 + (-xi).exp()))
+                .collect();
+            vec![Some(Value::V(dx))]
+        }
+        Op::ConcatN(lens) => {
+            let gv = g.as_vec();
+            let mut out = Vec::with_capacity(lens.len());
+            let mut off = 0;
+            for &l in lens {
+                out.push(Some(Value::V(gv[off..off + l].to_vec())));
+                off += l;
+            }
+            out
+        }
+        Op::Slice(start, len) => {
+            let gv = g.as_vec();
+            let n = inputs[0].as_vec().len();
+            let mut dx = vec![0.0; n];
+            dx[*start..start + len].copy_from_slice(gv);
+            vec![Some(Value::V(dx))]
+        }
+        Op::Dot => {
+            let gs = g.as_scalar();
+            let (a, b) = (inputs[0].as_vec(), inputs[1].as_vec());
+            vec![
+                Some(Value::V(b.iter().map(|x| gs * x).collect())),
+                Some(Value::V(a.iter().map(|x| gs * x).collect())),
+            ]
+        }
+        Op::SumV => {
+            let gs = g.as_scalar();
+            let n = inputs[0].as_vec().len();
+            vec![Some(Value::V(vec![gs; n]))]
+        }
+        Op::AddSS => vec![Some(g.clone()), Some(g.clone())],
+        Op::SubSS => vec![Some(g.clone()), Some(Value::S(-g.as_scalar()))],
+        Op::MulSS => {
+            let gs = g.as_scalar();
+            vec![
+                Some(Value::S(gs * inputs[1].as_scalar())),
+                Some(Value::S(gs * inputs[0].as_scalar())),
+            ]
+        }
+        Op::DivSS => {
+            let gs = g.as_scalar();
+            let (a, b) = (inputs[0].as_scalar(), inputs[1].as_scalar());
+            vec![
+                Some(Value::S(gs / b)),
+                Some(Value::S(-gs * a / (b * b))),
+            ]
+        }
+        Op::ScaleConstS(c) => vec![Some(Value::S(c * g.as_scalar()))],
+        Op::Custom(cop) => cop.backward(out_val, g, inputs),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    /// Central finite-difference gradcheck for a tape program.
+    fn gradcheck<F>(build: F, x0: Vec<f64>, tol: f64)
+    where
+        F: Fn(&Tape, Var) -> Var,
+    {
+        let t = Tape::new();
+        let x = t.leaf_vec(x0.clone());
+        let loss = build(&t, x);
+        let g = t.backward(loss);
+        let analytic = g.vec(x).clone();
+
+        let eps = 1e-6;
+        for i in 0..x0.len() {
+            let mut xp = x0.clone();
+            xp[i] += eps;
+            let tp = Tape::new();
+            let vp = tp.leaf_vec(xp);
+            let lp = tp.scalar_of(build(&tp, vp));
+            let mut xm = x0.clone();
+            xm[i] -= eps;
+            let tm = Tape::new();
+            let vm = tm.leaf_vec(xm);
+            let lm = tm.scalar_of(build(&tm, vm));
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (analytic[i] - fd).abs() < tol * (1.0 + fd.abs()),
+                "component {i}: analytic {} vs fd {fd}",
+                analytic[i]
+            );
+        }
+    }
+
+    #[test]
+    fn gradcheck_elementwise_chain() {
+        let mut rng = Prng::new(0);
+        let x0 = rng.normal_vec(8);
+        gradcheck(
+            |t, x| {
+                let y = t.mul(x, x); // x^2
+                let z = t.softplus(y);
+                let w = t.scale_const(0.5, z);
+                t.sum(w)
+            },
+            x0,
+            1e-6,
+        );
+    }
+
+    #[test]
+    fn gradcheck_gather_index_add() {
+        let mut rng = Prng::new(1);
+        let x0 = rng.normal_vec(6);
+        let idx = Arc::new(vec![0usize, 2, 2, 5, 1, 0, 3]);
+        gradcheck(
+            move |t, x| {
+                let gathered = t.gather(x, idx.clone());
+                let sq = t.mul(gathered, gathered);
+                let summed = t.index_add(sq, idx.clone(), 6);
+                t.dot(summed, summed)
+            },
+            x0,
+            1e-5,
+        );
+    }
+
+    #[test]
+    fn gradcheck_div_and_scalar_ops() {
+        let mut rng = Prng::new(2);
+        let x0: Vec<f64> = rng.normal_vec(5).iter().map(|v| v + 3.0).collect();
+        gradcheck(
+            |t, x| {
+                let c = t.constant_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+                let q = t.div(c, x);
+                let d1 = t.dot(q, q);
+                let d2 = t.sum(x);
+                let r = t.div_ss(d1, d2);
+                t.scale_const_s(2.0, r)
+            },
+            x0,
+            1e-5,
+        );
+    }
+
+    #[test]
+    fn gradcheck_concat_slice() {
+        let mut rng = Prng::new(3);
+        let x0 = rng.normal_vec(6);
+        gradcheck(
+            |t, x| {
+                let a = t.slice(x, 0, 3);
+                let b = t.slice(x, 3, 3);
+                let c = t.concat(&[b, a]);
+                let d = t.mul(c, c);
+                t.sum(d)
+            },
+            x0,
+            1e-6,
+        );
+    }
+
+    #[test]
+    fn gradcheck_mul_sv() {
+        let mut rng = Prng::new(4);
+        let x0 = rng.normal_vec(4);
+        gradcheck(
+            |t, x| {
+                let s = t.sum(x);
+                let y = t.mul_sv(s, x);
+                t.sum(y)
+            },
+            x0,
+            1e-6,
+        );
+    }
+}

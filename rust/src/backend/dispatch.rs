@@ -1,0 +1,273 @@
+//! Auto-dispatch: the paper's `select_backend` policy (§3.1).
+//!
+//! Priority rules:
+//! 1. match the requested device;
+//! 2. Accel: prefer `xla-direct` below the direct crossover (and within
+//!    the device budget), else `xla-cg` (fused), else `xla-hybrid`;
+//! 3. Cpu: prefer `native-direct` below the fill budget, else
+//!    `native-iter`;
+//! 4. explicit `backend=` / `method=` overrides skip the policy;
+//! 5. a backend failing at runtime (OOM, breakdown) falls through to the
+//!    next candidate, and the decision is recorded in the metrics
+//!    registry.
+
+use std::sync::Arc;
+
+use super::{Backend, Device, Problem, SolveOpts, SolveOutcome};
+use crate::adjoint::{SolveFn, Transpose};
+use crate::error::{Error, Result};
+use crate::metrics;
+use crate::runtime::RuntimeHandle;
+use crate::sparse::Pattern;
+
+/// Paper's "direct solvers are often fastest below ~1e5 DOF": our
+/// scaled-down crossover for preferring a direct backend.
+pub const DIRECT_CROSSOVER_N: usize = 20_000;
+
+pub struct Dispatcher {
+    backends: Vec<Box<dyn Backend>>,
+    pub metrics: Arc<metrics::Registry>,
+}
+
+impl Dispatcher {
+    /// Full five-backend stack.  `registry` may be shared with other
+    /// components; pass `None` to build a CPU-only dispatcher (no
+    /// artifacts needed — used by unit tests and pure-native runs).
+    pub fn new(registry: Option<RuntimeHandle>) -> Self {
+        let mut backends: Vec<Box<dyn Backend>> = vec![
+            Box::new(super::native_direct::NativeDirect),
+            Box::new(super::native_iter::NativeIter),
+        ];
+        if let Some(reg) = registry {
+            backends.push(Box::new(super::xla_direct::XlaDirect::new(reg.clone())));
+            backends.push(Box::new(super::xla_cg::XlaCg::new(reg.clone())));
+            backends.push(Box::new(super::xla_hybrid::XlaHybrid::new(reg)));
+        }
+        Dispatcher {
+            backends,
+            metrics: Arc::new(metrics::Registry::new()),
+        }
+    }
+
+    /// The "just give me everything available" constructor: wires the
+    /// PJRT runtime when `artifacts/` exists (full five-backend stack),
+    /// and degrades to the two native backends otherwise.  Examples and
+    /// integration tests use this so they run with or without
+    /// `make artifacts`.
+    pub fn default_full() -> Arc<Self> {
+        match RuntimeHandle::spawn_default() {
+            Ok(h) => Arc::new(Dispatcher::new(Some(h))),
+            Err(e) => {
+                log::warn!("PJRT runtime unavailable ({e}); native backends only");
+                Arc::new(Dispatcher::new(None))
+            }
+        }
+    }
+
+    /// Register an additional backend (the paper's extension point for
+    /// PETSc/Trilinos/hypre/learned preconditioners).
+    pub fn register(&mut self, b: Box<dyn Backend>) {
+        self.backends.push(b);
+    }
+
+    pub fn backend_names(&self) -> Vec<&'static str> {
+        self.backends.iter().map(|b| b.name()).collect()
+    }
+
+    /// Ordered candidate list for a problem under the policy rules.
+    fn candidates(&self, p: &Problem, opts: &SolveOpts) -> Vec<&dyn Backend> {
+        if let Some(name) = &opts.backend {
+            return self
+                .backends
+                .iter()
+                .filter(|b| b.name() == name)
+                .map(|b| b.as_ref())
+                .collect();
+        }
+        let n = p.op.nrows();
+        let prefer_direct = n <= DIRECT_CROSSOVER_N;
+        let order: Vec<&'static str> = match (opts.device, prefer_direct) {
+            (Device::Accel, true) => vec!["xla-direct", "xla-cg", "xla-hybrid", "native-iter"],
+            (Device::Accel, false) => vec!["xla-cg", "xla-hybrid", "xla-direct", "native-iter"],
+            (Device::Cpu, true) => vec!["native-direct", "native-iter"],
+            (Device::Cpu, false) => vec!["native-iter", "native-direct"],
+        };
+        order
+            .iter()
+            .filter_map(|name| {
+                self.backends
+                    .iter()
+                    .find(|b| b.name() == *name)
+                    .map(|b| b.as_ref())
+            })
+            .collect()
+    }
+
+    /// Resolve the backend that WOULD serve the problem (for tests /
+    /// the `rsla explain` CLI).
+    pub fn select(&self, p: &Problem, opts: &SolveOpts) -> Option<&'static str> {
+        self.candidates(p, opts)
+            .into_iter()
+            .find(|b| b.supports(p, opts).is_ok())
+            .map(|b| b.name())
+    }
+
+    /// Solve with policy + fallback.
+    pub fn solve(&self, p: &Problem, opts: &SolveOpts) -> Result<SolveOutcome> {
+        let mut last_err: Option<Error> = None;
+        for b in self.candidates(p, opts) {
+            match b.supports(p, opts) {
+                Ok(()) => {}
+                Err(reason) => {
+                    log::debug!("backend {} refused: {reason}", b.name());
+                    self.metrics.incr(&format!("dispatch.refused.{}", b.name()), 1);
+                    // keep the refusal reason: if no candidate accepts —
+                    // in particular when the user forced `backend=` —
+                    // the caller sees WHY (e.g. a memory-budget OOM).
+                    last_err = Some(Error::BackendUnavailable {
+                        backend: b.name().into(),
+                        reason,
+                    });
+                    continue;
+                }
+            }
+            match b.solve(p, opts) {
+                Ok(out) => {
+                    self.metrics.incr(&format!("dispatch.solved.{}", b.name()), 1);
+                    return Ok(out);
+                }
+                Err(e) => {
+                    // runtime fallback (e.g. OOM mid-solve, breakdown)
+                    self.metrics.incr(&format!("dispatch.failed.{}", b.name()), 1);
+                    last_err = Some(e);
+                }
+            }
+        }
+        Err(last_err.unwrap_or_else(|| Error::BackendUnavailable {
+            backend: "auto".into(),
+            reason: "no backend supports this problem".into(),
+        }))
+    }
+
+    /// Adapt the dispatcher into the adjoint framework's black-box
+    /// solver hook.  `self` is moved behind an Arc so the closure can be
+    /// shared with tape nodes.
+    pub fn solver_fn(self: &Arc<Self>, opts: SolveOpts) -> SolveFn {
+        let this = self.clone();
+        Arc::new(move |pattern: &Pattern, vals: &[f64], rhs: &[f64], transpose: Transpose| {
+            let a = pattern.with_vals(vals.to_vec());
+            let symmetric = a.is_symmetric(1e-12);
+            if transpose == Transpose::Yes && !symmetric {
+                // nonsymmetric adjoint: reuse the LU factorization path
+                let f = crate::direct::SparseLu::factor(&a)?;
+                return f.solve_t(rhs);
+            }
+            let p = Problem {
+                op: super::Operator::Csr(&a),
+                b: rhs,
+            };
+            Ok(this.solve(&p, &opts)?.x)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::Operator;
+    use crate::sparse::graphs::random_nonsymmetric;
+    use crate::sparse::poisson::poisson2d;
+    use crate::util::{self, Prng};
+
+    fn cpu_dispatcher() -> Dispatcher {
+        Dispatcher::new(None)
+    }
+
+    #[test]
+    fn small_cpu_problem_prefers_direct() {
+        let sys = poisson2d(10, None);
+        let b = vec![1.0; 100];
+        let p = Problem {
+            op: Operator::Csr(&sys.matrix),
+            b: &b,
+        };
+        let d = cpu_dispatcher();
+        assert_eq!(d.select(&p, &SolveOpts::default()), Some("native-direct"));
+    }
+
+    #[test]
+    fn oom_direct_falls_back_to_iterative() {
+        let sys = poisson2d(40, None);
+        let mut rng = Prng::new(0);
+        let b = rng.normal_vec(1600);
+        let p = Problem {
+            op: Operator::Csr(&sys.matrix),
+            b: &b,
+        };
+        let d = cpu_dispatcher();
+        let opts = SolveOpts {
+            host_mem_budget: 300_000, // too small for the factor fill
+            tol: 1e-9,
+            ..Default::default()
+        };
+        let out = d.solve(&p, &opts).unwrap();
+        assert_eq!(out.backend, "native-iter");
+        assert!(util::rel_l2(&sys.matrix.matvec(&out.x), &b) < 1e-7);
+        assert!(d.metrics.get("dispatch.failed.native-direct") + d.metrics.get("dispatch.refused.native-direct") >= 1);
+    }
+
+    #[test]
+    fn explicit_backend_override() {
+        let sys = poisson2d(10, None);
+        let b = vec![1.0; 100];
+        let p = Problem {
+            op: Operator::Csr(&sys.matrix),
+            b: &b,
+        };
+        let d = cpu_dispatcher();
+        let out = d
+            .solve(
+                &p,
+                &SolveOpts {
+                    backend: Some("native-iter".into()),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        assert_eq!(out.backend, "native-iter");
+    }
+
+    #[test]
+    fn unknown_backend_errors() {
+        let sys = poisson2d(6, None);
+        let b = vec![1.0; 36];
+        let p = Problem {
+            op: Operator::Csr(&sys.matrix),
+            b: &b,
+        };
+        let d = cpu_dispatcher();
+        assert!(d
+            .solve(
+                &p,
+                &SolveOpts {
+                    backend: Some("petsc".into()),
+                    ..Default::default()
+                }
+            )
+            .is_err());
+    }
+
+    #[test]
+    fn solver_fn_handles_nonsymmetric_transpose() {
+        let mut rng = Prng::new(1);
+        let a = random_nonsymmetric(&mut rng, 30, 4);
+        let pattern = crate::sparse::Pattern::of(&a);
+        let d = Arc::new(cpu_dispatcher());
+        let f = d.solver_fn(SolveOpts::default());
+        let b = rng.normal_vec(30);
+        let xt = f(&pattern, &a.vals, &b, Transpose::Yes).unwrap();
+        let mut atx = vec![0.0; 30];
+        a.spmv_t(&xt, &mut atx);
+        assert!(util::rel_l2(&atx, &b) < 1e-9);
+    }
+}

@@ -1,0 +1,159 @@
+//! Unified backend abstraction (paper §3.1).
+//!
+//! Five interchangeable backends behind one interface, selected by
+//! device, problem size, and matrix properties:
+//!
+//! | paper backend       | rsla backend    | substrate |
+//! |---------------------|-----------------|-----------|
+//! | scipy (SuperLU/UMF) | `native-direct` | envelope Cholesky + RCM, Gilbert–Peierls LU |
+//! | eigen (CG/BiCGStab) | `native-iter`   | rust CG / BiCGStab, Jacobi default |
+//! | cudss (LU/Chol)     | `xla-direct`    | AOT dense Cholesky artifact via PJRT |
+//! | pytorch-native CUDA | `xla-cg`        | AOT *fused* Jacobi-PCG artifact (Pallas SpMV inside `lax.while_loop`) |
+//! | cupy (cupyx)        | `xla-hybrid`    | rust Krylov loop calling the AOT SpMV artifact per iteration |
+//!
+//! Adding a backend = implementing [`Backend`] and registering it with
+//! the [`dispatch::Dispatcher`] (the paper's `select_backend` hook).
+
+pub mod dispatch;
+pub mod native_direct;
+pub mod native_iter;
+pub mod xla_cg;
+pub mod xla_direct;
+pub mod xla_hybrid;
+
+pub use dispatch::Dispatcher;
+
+use crate::error::Result;
+use crate::sparse::poisson::StencilCoeffs;
+use crate::sparse::Csr;
+
+/// Where the user asked the solve to run (the paper dispatches on the
+/// input tensor's device; we carry it explicitly).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Device {
+    Cpu,
+    /// The simulated accelerator: AOT XLA artifacts through PJRT, with a
+    /// device-memory budget enforced by the backends.
+    Accel,
+}
+
+/// Solver method override (paper: `method=` keyword).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Method {
+    Auto,
+    Cholesky,
+    Lu,
+    Cg,
+    Bicgstab,
+    Gmres,
+}
+
+/// Per-solve options (paper: keyword arguments on `.solve`).
+#[derive(Clone, Debug)]
+pub struct SolveOpts {
+    pub device: Device,
+    /// Force a specific backend by name (None = auto-dispatch).
+    pub backend: Option<String>,
+    pub method: Method,
+    pub tol: f64,
+    pub max_iters: usize,
+    /// Simulated accelerator memory budget in bytes (the H200-analog
+    /// capacity; Table 3's OOM rows are violations of this).
+    pub accel_mem_budget: u64,
+    /// Host memory budget for direct-solver fill.
+    pub host_mem_budget: u64,
+}
+
+impl Default for SolveOpts {
+    fn default() -> Self {
+        SolveOpts {
+            device: Device::Cpu,
+            backend: None,
+            method: Method::Auto,
+            tol: 1e-10,
+            max_iters: 100_000,
+            accel_mem_budget: 512 << 20, // 512 MiB "device"
+            host_mem_budget: 8 << 30,
+        }
+    }
+}
+
+impl SolveOpts {
+    pub fn on_accel() -> Self {
+        SolveOpts {
+            device: Device::Accel,
+            ..Default::default()
+        }
+    }
+}
+
+/// The operator handed to backends.  Stencil form flows through so the
+/// accelerator backends can pick the fused grid artifacts.
+pub enum Operator<'a> {
+    Csr(&'a Csr),
+    Stencil(&'a StencilCoeffs),
+}
+
+impl<'a> Operator<'a> {
+    pub fn nrows(&self) -> usize {
+        match self {
+            Operator::Csr(a) => a.nrows,
+            Operator::Stencil(s) => s.n(),
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        match self {
+            Operator::Csr(a) => a.nnz(),
+            Operator::Stencil(s) => 5 * s.n(),
+        }
+    }
+
+    /// Materialize CSR (cheap for Csr, assembly for Stencil).
+    pub fn to_csr(&self) -> Csr {
+        match self {
+            Operator::Csr(a) => (*a).clone(),
+            Operator::Stencil(s) => s.to_csr(),
+        }
+    }
+
+    pub fn is_spd_like(&self) -> bool {
+        match self {
+            Operator::Csr(a) => a.looks_spd(),
+            // variable-coefficient diffusion stencils are SPD by
+            // construction when center > 0
+            Operator::Stencil(s) => s.center.iter().all(|&c| c > 0.0),
+        }
+    }
+}
+
+/// A solve problem: operator + right-hand side.
+pub struct Problem<'a> {
+    pub op: Operator<'a>,
+    pub b: &'a [f64],
+}
+
+/// What a backend reports back (feeds the coordinator metrics and the
+/// bench tables).
+#[derive(Clone, Debug)]
+pub struct SolveOutcome {
+    pub x: Vec<f64>,
+    pub backend: &'static str,
+    pub method: &'static str,
+    /// 0 for direct solves.
+    pub iters: usize,
+    pub residual: f64,
+    /// Measured peak working-set bytes (factor fill or Krylov vectors).
+    pub peak_bytes: u64,
+}
+
+/// A solver backend.  `supports` is the registration predicate the
+/// dispatcher consults (paper: "registering its applicability conditions
+/// through select_backend").
+pub trait Backend: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn device(&self) -> Device;
+    /// Err(reason) when this backend cannot take the problem.
+    fn supports(&self, p: &Problem, opts: &SolveOpts) -> std::result::Result<(), String>;
+    fn solve(&self, p: &Problem, opts: &SolveOpts) -> Result<SolveOutcome>;
+}

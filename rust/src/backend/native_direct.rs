@@ -1,0 +1,175 @@
+//! `native-direct`: the SciPy-SuperLU analog.  Envelope Cholesky (+RCM)
+//! for SPD-looking systems with LU fallback; Gilbert–Peierls LU for
+//! general square systems.  Machine-precision solutions; fill measured
+//! and charged against the host memory budget.
+
+use super::{Backend, Device, Method, Problem, SolveOpts, SolveOutcome};
+use crate::direct::{EnvelopeCholesky, SparseLu};
+use crate::error::{Error, Result};
+
+pub struct NativeDirect;
+
+impl Backend for NativeDirect {
+    fn name(&self) -> &'static str {
+        "native-direct"
+    }
+
+    fn device(&self) -> Device {
+        Device::Cpu
+    }
+
+    fn supports(&self, p: &Problem, opts: &SolveOpts) -> std::result::Result<(), String> {
+        let n = p.op.nrows();
+        if n != p.b.len() {
+            return Err("rhs length mismatch".into());
+        }
+        match opts.method {
+            Method::Auto | Method::Cholesky | Method::Lu => {}
+            m => return Err(format!("method {m:?} is not a direct method")),
+        }
+        // cheap fill screen: envelope of the (possibly stencil) matrix
+        // after RCM is bounded by bandwidth * n; refuse when even the
+        // optimistic estimate blows the budget.
+        let optimistic = (p.op.nnz() as u64) * 8;
+        if optimistic > opts.host_mem_budget {
+            return Err(format!(
+                "input alone exceeds host budget ({optimistic} B)"
+            ));
+        }
+        Ok(())
+    }
+
+    fn solve(&self, p: &Problem, opts: &SolveOpts) -> Result<SolveOutcome> {
+        let a = p.op.to_csr();
+        let spd = p.op.is_spd_like();
+        let try_chol = spd && opts.method != Method::Lu;
+        if try_chol {
+            // pre-factorization fill check against the budget
+            let perm = crate::direct::ordering::rcm(&a);
+            let pa = a.permute_sym(&perm);
+            let fill = EnvelopeCholesky::predicted_fill(&pa) as u64 * 8;
+            if fill > opts.host_mem_budget {
+                return Err(Error::OutOfMemory {
+                    needed_bytes: fill,
+                    budget_bytes: opts.host_mem_budget,
+                });
+            }
+            match EnvelopeCholesky::factor_rcm(&a) {
+                Ok(f) => {
+                    let x = f.solve(p.b);
+                    let residual = residual_of(&a, &x, p.b);
+                    return Ok(SolveOutcome {
+                        x,
+                        backend: self.name(),
+                        method: "cholesky+rcm",
+                        iters: 0,
+                        residual,
+                        peak_bytes: f.bytes(),
+                    });
+                }
+                Err(Error::Breakdown { .. }) if opts.method == Method::Auto => {
+                    // fall through to LU below
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        let cap = (opts.host_mem_budget / 16) as usize;
+        let f = SparseLu::factor_with_cap(&a, cap)?;
+        let x = f.solve(p.b)?;
+        let residual = residual_of(&a, &x, p.b);
+        Ok(SolveOutcome {
+            x,
+            backend: self.name(),
+            method: "lu",
+            iters: 0,
+            residual,
+            peak_bytes: f.bytes(),
+        })
+    }
+}
+
+pub(crate) fn residual_of(a: &crate::sparse::Csr, x: &[f64], b: &[f64]) -> f64 {
+    let ax = a.matvec(x);
+    let mut r2 = 0.0;
+    for i in 0..b.len() {
+        let d = b[i] - ax[i];
+        r2 += d * d;
+    }
+    r2.sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::Operator;
+    use crate::sparse::graphs::random_nonsymmetric;
+    use crate::sparse::poisson::poisson2d;
+    use crate::util::{self, Prng};
+
+    #[test]
+    fn spd_uses_cholesky() {
+        let sys = poisson2d(12, None);
+        let mut rng = Prng::new(0);
+        let b = rng.normal_vec(144);
+        let out = NativeDirect
+            .solve(
+                &Problem {
+                    op: Operator::Csr(&sys.matrix),
+                    b: &b,
+                },
+                &SolveOpts::default(),
+            )
+            .unwrap();
+        assert_eq!(out.method, "cholesky+rcm");
+        assert!(out.residual < 1e-9);
+        assert!(out.peak_bytes > 0);
+    }
+
+    #[test]
+    fn general_uses_lu() {
+        let mut rng = Prng::new(1);
+        let a = random_nonsymmetric(&mut rng, 60, 4);
+        let b = rng.normal_vec(60);
+        let out = NativeDirect
+            .solve(
+                &Problem {
+                    op: Operator::Csr(&a),
+                    b: &b,
+                },
+                &SolveOpts::default(),
+            )
+            .unwrap();
+        assert_eq!(out.method, "lu");
+        assert!(out.residual < 1e-9);
+    }
+
+    #[test]
+    fn budget_produces_oom() {
+        let sys = poisson2d(32, None);
+        let b = vec![1.0; 1024];
+        let out = NativeDirect.solve(
+            &Problem {
+                op: Operator::Csr(&sys.matrix),
+                b: &b,
+            },
+            &SolveOpts {
+                host_mem_budget: 10_000, // absurdly small
+                ..Default::default()
+            },
+        );
+        assert!(matches!(out, Err(Error::OutOfMemory { .. })));
+    }
+
+    #[test]
+    fn stencil_operator_accepted() {
+        let sys = poisson2d(10, None);
+        let b = vec![1.0; 100];
+        let p = Problem {
+            op: Operator::Stencil(&sys.coeffs),
+            b: &b,
+        };
+        assert!(NativeDirect.supports(&p, &SolveOpts::default()).is_ok());
+        let out = NativeDirect.solve(&p, &SolveOpts::default()).unwrap();
+        assert!(util::rel_l2(&sys.matrix.matvec(&out.x), &b) < 1e-9);
+    }
+}

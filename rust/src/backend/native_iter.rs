@@ -1,0 +1,180 @@
+//! `native-iter`: the Eigen-CG/BiCGStab analog.  Jacobi-preconditioned
+//! CG for SPD operators, BiCGStab (or GMRES on request) otherwise;
+//! O(nnz) memory, measured via MemTracker.
+
+use super::{Backend, Device, Method, Operator, Problem, SolveOpts, SolveOutcome};
+use crate::error::Result;
+use crate::iterative::{bicgstab, cg, gmres, IterOpts, Jacobi, LinOp};
+use crate::metrics::MemTracker;
+
+pub struct NativeIter;
+
+impl Backend for NativeIter {
+    fn name(&self) -> &'static str {
+        "native-iter"
+    }
+
+    fn device(&self) -> Device {
+        Device::Cpu
+    }
+
+    fn supports(&self, p: &Problem, opts: &SolveOpts) -> std::result::Result<(), String> {
+        if p.op.nrows() != p.b.len() {
+            return Err("rhs length mismatch".into());
+        }
+        if matches!(opts.method, Method::Cholesky | Method::Lu) {
+            return Err("direct method requested".into());
+        }
+        if matches!(opts.method, Method::Cg | Method::Auto) && !p.op.is_spd_like() {
+            if opts.method == Method::Cg {
+                return Err("cg requires an SPD operator".into());
+            }
+        }
+        Ok(())
+    }
+
+    fn solve(&self, p: &Problem, opts: &SolveOpts) -> Result<SolveOutcome> {
+        let mem = MemTracker::new();
+        let iter_opts = IterOpts {
+            tol: opts.tol,
+            max_iters: opts.max_iters,
+            record_history: false,
+        };
+        let spd = p.op.is_spd_like();
+
+        // the operator applies natively (stencil stays matrix-free);
+        // Jacobi needs the diagonal either way.
+        let (result, method): (_, &'static str) = match &p.op {
+            Operator::Stencil(s) => {
+                let m = Jacobi::from_diag(&s.center);
+                let _hold = mem.hold((s.n() * 8) as u64); // diag inverse
+                (cg(*s, p.b, &m, &iter_opts, Some(&mem)), "cg+jacobi")
+            }
+            Operator::Csr(a) => {
+                let _hold = mem.hold(crate::metrics::mem::csr_bytes(a.nrows, a.nnz()));
+                let m = Jacobi::new(a)?;
+                match opts.method {
+                    Method::Gmres => (
+                        gmres(*a as &dyn LinOp, p.b, &m, 50, &iter_opts, Some(&mem)),
+                        "gmres50+jacobi",
+                    ),
+                    Method::Bicgstab => (
+                        bicgstab(*a as &dyn LinOp, p.b, &m, &iter_opts, Some(&mem)),
+                        "bicgstab+jacobi",
+                    ),
+                    _ if spd => (cg(*a, p.b, &m, &iter_opts, Some(&mem)), "cg+jacobi"),
+                    _ => (
+                        bicgstab(*a as &dyn LinOp, p.b, &m, &iter_opts, Some(&mem)),
+                        "bicgstab+jacobi",
+                    ),
+                }
+            }
+        };
+        // failing to reach tol is an ERROR at the backend boundary: the
+        // dispatcher can then fall through to another backend, and a
+        // caller never mistakes a stalled Krylov iterate for a solution.
+        if !result.converged {
+            return Err(crate::error::Error::NotConverged {
+                iters: result.iters,
+                residual: result.residual,
+                tol: opts.tol,
+            });
+        }
+        Ok(SolveOutcome {
+            x: result.x,
+            backend: self.name(),
+            method,
+            iters: result.iters,
+            residual: result.residual,
+            peak_bytes: mem.peak(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::graphs::random_nonsymmetric;
+    use crate::sparse::poisson::poisson2d;
+    use crate::util::{self, Prng};
+
+    #[test]
+    fn stencil_cg_is_matrix_free() {
+        let sys = poisson2d(16, None);
+        let mut rng = Prng::new(0);
+        let b = rng.normal_vec(256);
+        let out = NativeIter
+            .solve(
+                &Problem {
+                    op: Operator::Stencil(&sys.coeffs),
+                    b: &b,
+                },
+                &SolveOpts::default(),
+            )
+            .unwrap();
+        assert_eq!(out.method, "cg+jacobi");
+        assert!(out.iters > 0);
+        assert!(util::rel_l2(&sys.matrix.matvec(&out.x), &b) < 1e-8);
+        // matrix-free: working set ~ 6 n vectors, NOT nnz-scaled CSR
+        assert!(out.peak_bytes < (10 * 256 * 8) as u64);
+    }
+
+    #[test]
+    fn nonsymmetric_routes_to_bicgstab() {
+        let mut rng = Prng::new(1);
+        let a = random_nonsymmetric(&mut rng, 80, 4);
+        let b = rng.normal_vec(80);
+        let out = NativeIter
+            .solve(
+                &Problem {
+                    op: Operator::Csr(&a),
+                    b: &b,
+                },
+                &SolveOpts::default(),
+            )
+            .unwrap();
+        assert_eq!(out.method, "bicgstab+jacobi");
+        assert!(util::rel_l2(&a.matvec(&out.x), &b) < 1e-8);
+    }
+
+    #[test]
+    fn gmres_on_request() {
+        let mut rng = Prng::new(2);
+        let a = random_nonsymmetric(&mut rng, 50, 4);
+        let b = rng.normal_vec(50);
+        let out = NativeIter
+            .solve(
+                &Problem {
+                    op: Operator::Csr(&a),
+                    b: &b,
+                },
+                &SolveOpts {
+                    method: Method::Gmres,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        assert_eq!(out.method, "gmres50+jacobi");
+        assert!(util::rel_l2(&a.matvec(&out.x), &b) < 1e-8);
+    }
+
+    #[test]
+    fn cg_on_nonsymmetric_is_refused() {
+        let mut rng = Prng::new(3);
+        let a = random_nonsymmetric(&mut rng, 20, 3);
+        let b = vec![1.0; 20];
+        let p = Problem {
+            op: Operator::Csr(&a),
+            b: &b,
+        };
+        assert!(NativeIter
+            .supports(
+                &p,
+                &SolveOpts {
+                    method: Method::Cg,
+                    ..Default::default()
+                }
+            )
+            .is_err());
+    }
+}

@@ -1,0 +1,262 @@
+//! `xla-cg`: the pytorch-native-CUDA-CG analog — the *fused* iterative
+//! backend.  One PJRT execution runs the whole Jacobi-PCG loop
+//! (`lax.while_loop` around the Pallas SpMV kernel), so there is no
+//! per-iteration host round trip; this is the backend that wins at
+//! large DOF in Table 3.
+//!
+//! Stencil problems hit `cg_poisson_g{G}` directly; general SPD CSR
+//! problems are converted to ELL and padded up to the next
+//! `cg_ell_n{N}_s8` artifact (identity rows for padding).
+
+use std::sync::Arc;
+
+use super::{Backend, Device, Method, Operator, Problem, SolveOpts, SolveOutcome};
+use crate::error::{Error, Result};
+use crate::runtime::{Arg, RuntimeHandle};
+use crate::sparse::graphs::to_ell;
+
+/// Grid sizes baked by aot.py (model.GRID_SIZES).
+pub const GRID_SIZES: [usize; 5] = [32, 64, 128, 256, 512];
+/// ELL sizes baked by aot.py (model.ELL_SIZES), all with 8 slots.
+pub const ELL_SIZES: [usize; 3] = [4096, 16384, 65536];
+pub const ELL_SLOTS: usize = 8;
+
+pub struct XlaCg {
+    registry: RuntimeHandle,
+}
+
+impl XlaCg {
+    pub fn new(registry: RuntimeHandle) -> Self {
+        XlaCg { registry }
+    }
+
+    fn ell_size(n: usize) -> Option<usize> {
+        ELL_SIZES.iter().copied().find(|&s| s >= n)
+    }
+
+    /// Iterative working set on the simulated device: matrix (ELL or
+    /// stencil planes) + 6 Krylov vectors.
+    fn footprint(p: &Problem) -> u64 {
+        let n = p.op.nrows();
+        let mat = match &p.op {
+            Operator::Stencil(_) => 5 * n * 8,
+            Operator::Csr(_) => {
+                let padded = Self::ell_size(n).unwrap_or(n);
+                padded * ELL_SLOTS * 12
+            }
+        };
+        (mat + 6 * n * 8) as u64
+    }
+}
+
+impl Backend for XlaCg {
+    fn name(&self) -> &'static str {
+        "xla-cg"
+    }
+
+    fn device(&self) -> Device {
+        Device::Accel
+    }
+
+    fn supports(&self, p: &Problem, opts: &SolveOpts) -> std::result::Result<(), String> {
+        let n = p.op.nrows();
+        if n != p.b.len() {
+            return Err("rhs length mismatch".into());
+        }
+        if matches!(opts.method, Method::Cholesky | Method::Lu) {
+            return Err("direct method requested".into());
+        }
+        if !p.op.is_spd_like() {
+            return Err("fused CG artifact needs an SPD operator".into());
+        }
+        match &p.op {
+            Operator::Stencil(s) => {
+                if !GRID_SIZES.contains(&s.g) {
+                    return Err(format!("no cg_poisson artifact for g={}", s.g));
+                }
+                if !self.registry.has(&format!("cg_poisson_g{}", s.g)) {
+                    return Err("artifact missing".into());
+                }
+            }
+            Operator::Csr(a) => {
+                let padded = Self::ell_size(n)
+                    .ok_or_else(|| format!("n={n} exceeds largest ELL artifact"))?;
+                let max_row = (0..a.nrows).map(|r| a.row(r).0.len()).max().unwrap_or(0);
+                if max_row > ELL_SLOTS {
+                    return Err(format!("row with {max_row} nnz exceeds {ELL_SLOTS} ELL slots"));
+                }
+                if !self.registry.has(&format!("cg_ell_n{padded}_s{ELL_SLOTS}")) {
+                    return Err("artifact missing".into());
+                }
+            }
+        }
+        let fp = Self::footprint(p);
+        if fp > opts.accel_mem_budget {
+            return Err(format!(
+                "working set {fp} B exceeds accel budget {}",
+                opts.accel_mem_budget
+            ));
+        }
+        Ok(())
+    }
+
+    fn solve(&self, p: &Problem, opts: &SolveOpts) -> Result<SolveOutcome> {
+        let n = p.op.nrows();
+        let fp = Self::footprint(p);
+        if fp > opts.accel_mem_budget {
+            return Err(Error::OutOfMemory {
+                needed_bytes: fp,
+                budget_bytes: opts.accel_mem_budget,
+            });
+        }
+        let max_iters = opts.max_iters.min(i32::MAX as usize) as i32;
+        match &p.op {
+            Operator::Stencil(s) => {
+                let g = s.g;
+                let out = self.registry.run(
+                    &format!("cg_poisson_g{g}"),
+                    &[
+                        Arg::tensor(s.to_planes(), vec![5, g, g]),
+                        Arg::tensor(p.b.to_vec(), vec![g, g]),
+                        Arg::ScalarI32(max_iters),
+                        Arg::ScalarF64(opts.tol),
+                    ],
+                )?;
+                let x = out[0].as_f64().clone();
+                let rr = out[1].scalar_f64();
+                let iters = out[2].scalar_i32() as usize;
+                Ok(SolveOutcome {
+                    x,
+                    backend: self.name(),
+                    method: "fused-cg-stencil(pjrt)",
+                    iters,
+                    residual: rr.sqrt(),
+                    peak_bytes: fp,
+                })
+            }
+            Operator::Csr(a) => {
+                let padded = Self::ell_size(n).unwrap();
+                // pad with identity rows so the extra unknowns are inert
+                let (mut cols, mut vals) = to_ell(a, ELL_SLOTS).ok_or_else(|| {
+                    Error::BackendUnavailable {
+                        backend: "xla-cg".into(),
+                        reason: "ELL conversion failed".into(),
+                    }
+                })?;
+                cols.resize(padded * ELL_SLOTS, 0);
+                vals.resize(padded * ELL_SLOTS, 0.0);
+                let mut diag = a.diag();
+                diag.resize(padded, 1.0);
+                for r in n..padded {
+                    cols[r * ELL_SLOTS] = r as i32;
+                    vals[r * ELL_SLOTS] = 1.0;
+                }
+                let mut rhs = p.b.to_vec();
+                rhs.resize(padded, 0.0);
+                let out = self.registry.run(
+                    &format!("cg_ell_n{padded}_s{ELL_SLOTS}"),
+                    &[
+                        Arg::I32(Arc::new(cols), vec![padded, ELL_SLOTS]),
+                        Arg::tensor(vals, vec![padded, ELL_SLOTS]),
+                        Arg::vec(diag),
+                        Arg::vec(rhs),
+                        Arg::ScalarI32(max_iters),
+                        Arg::ScalarF64(opts.tol),
+                    ],
+                )?;
+                let x = out[0].as_f64()[..n].to_vec();
+                let rr = out[1].scalar_f64();
+                let iters = out[2].scalar_i32() as usize;
+                Ok(SolveOutcome {
+                    x,
+                    backend: self.name(),
+                    method: "fused-cg-ell(pjrt)",
+                    iters,
+                    residual: rr.sqrt(),
+                    peak_bytes: fp,
+                })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::graphs::bounded_degree_laplacian;
+    use crate::sparse::poisson::{kappa_star, poisson2d};
+    use crate::util::{self, Prng};
+
+    fn backend() -> XlaCg {
+        XlaCg::new(RuntimeHandle::spawn_default().expect("make artifacts"))
+    }
+
+    #[test]
+    fn stencil_fused_cg() {
+        let g = 32;
+        let sys = poisson2d(g, Some(&kappa_star(g)));
+        let mut rng = Prng::new(0);
+        let b = rng.normal_vec(g * g);
+        let out = backend()
+            .solve(
+                &Problem {
+                    op: Operator::Stencil(&sys.coeffs),
+                    b: &b,
+                },
+                &SolveOpts {
+                    tol: 1e-9,
+                    ..SolveOpts::on_accel()
+                },
+            )
+            .unwrap();
+        assert_eq!(out.method, "fused-cg-stencil(pjrt)");
+        assert!(out.iters > 10);
+        assert!(util::rel_l2(&sys.matrix.matvec(&out.x), &b) < 1e-7);
+    }
+
+    #[test]
+    fn general_csr_pads_to_ell_artifact() {
+        let mut rng = Prng::new(1);
+        let n = 3000; // pads to 4096
+        let a = bounded_degree_laplacian(&mut rng, n, 7, 0.5);
+        let b = rng.normal_vec(n);
+        let out = backend()
+            .solve(
+                &Problem {
+                    op: Operator::Csr(&a),
+                    b: &b,
+                },
+                &SolveOpts {
+                    tol: 1e-9,
+                    ..SolveOpts::on_accel()
+                },
+            )
+            .unwrap();
+        assert_eq!(out.method, "fused-cg-ell(pjrt)");
+        assert!(util::rel_l2(&a.matvec(&out.x), &b) < 1e-7);
+    }
+
+    #[test]
+    fn unsupported_grid_size_refused() {
+        let sys = poisson2d(33, None); // g=33 has no artifact
+        let b = vec![1.0; 33 * 33];
+        let p = Problem {
+            op: Operator::Stencil(&sys.coeffs),
+            b: &b,
+        };
+        assert!(backend().supports(&p, &SolveOpts::on_accel()).is_err());
+    }
+
+    #[test]
+    fn dense_rows_refused() {
+        let mut rng = Prng::new(2);
+        let a = crate::sparse::graphs::random_spd(&mut rng, 64, 12, 1.0);
+        let b = vec![1.0; 64];
+        let p = Problem {
+            op: Operator::Csr(&a),
+            b: &b,
+        };
+        // rows have up to ~40 nnz > 8 slots
+        assert!(backend().supports(&p, &SolveOpts::on_accel()).is_err());
+    }
+}

@@ -1,0 +1,194 @@
+//! `xla-direct`: the cuDSS analog — an accelerator-resident direct
+//! solver behind the PJRT runtime.
+//!
+//! Executes the AOT `dense_solve_n{N}` artifact (hand-written Cholesky +
+//! triangular solves in primitive HLO; see python/compile/model.py).
+//! Problems are padded to the next artifact size with an identity
+//! diagonal block, mirroring how cuDSS plans are shape-specialized.
+//! The n^2 dense footprint is charged against the accelerator budget —
+//! at scale this backend OOMs first, exactly like the paper's cuDSS
+//! column in Table 3.
+
+use super::{Backend, Device, Method, Problem, SolveOpts, SolveOutcome};
+use crate::error::{Error, Result};
+use crate::runtime::{Arg, RuntimeHandle};
+
+/// Artifact sizes baked by aot.py (must match model.DENSE_SIZES).
+pub const DENSE_SIZES: [usize; 5] = [64, 256, 1024, 2048, 4096];
+
+pub struct XlaDirect {
+    registry: RuntimeHandle,
+}
+
+impl XlaDirect {
+    pub fn new(registry: RuntimeHandle) -> Self {
+        XlaDirect { registry }
+    }
+
+    fn pick_size(n: usize) -> Option<usize> {
+        DENSE_SIZES.iter().copied().find(|&s| s >= n)
+    }
+}
+
+impl Backend for XlaDirect {
+    fn name(&self) -> &'static str {
+        "xla-direct"
+    }
+
+    fn device(&self) -> Device {
+        Device::Accel
+    }
+
+    fn supports(&self, p: &Problem, opts: &SolveOpts) -> std::result::Result<(), String> {
+        let n = p.op.nrows();
+        if n != p.b.len() {
+            return Err("rhs length mismatch".into());
+        }
+        if matches!(opts.method, Method::Cg | Method::Bicgstab | Method::Gmres) {
+            return Err("iterative method requested".into());
+        }
+        if !p.op.is_spd_like() {
+            return Err("dense Cholesky artifact needs an SPD operator".into());
+        }
+        let padded = Self::pick_size(n).ok_or_else(|| {
+            format!("n={n} exceeds largest dense artifact ({})", DENSE_SIZES[DENSE_SIZES.len() - 1])
+        })?;
+        let bytes = (padded * padded * 8) as u64;
+        if bytes > opts.accel_mem_budget {
+            return Err(format!(
+                "dense n^2 footprint {bytes} B exceeds accel budget {}",
+                opts.accel_mem_budget
+            ));
+        }
+        if !self.registry.has(&format!("dense_solve_n{padded}")) {
+            return Err(format!("artifact dense_solve_n{padded} missing"));
+        }
+        Ok(())
+    }
+
+    fn solve(&self, p: &Problem, opts: &SolveOpts) -> Result<SolveOutcome> {
+        let n = p.op.nrows();
+        let padded = Self::pick_size(n).ok_or(Error::BackendUnavailable {
+            backend: "xla-direct".into(),
+            reason: "too large".into(),
+        })?;
+        let bytes = (padded * padded * 8) as u64;
+        if bytes > opts.accel_mem_budget {
+            return Err(Error::OutOfMemory {
+                needed_bytes: bytes,
+                budget_bytes: opts.accel_mem_budget,
+            });
+        }
+        let a = p.op.to_csr();
+        // densify + identity padding
+        let mut dense = vec![0f64; padded * padded];
+        for r in 0..n {
+            let (cols, vals) = a.row(r);
+            for (c, v) in cols.iter().zip(vals) {
+                dense[r * padded + c] += v;
+            }
+        }
+        for r in n..padded {
+            dense[r * padded + r] = 1.0;
+        }
+        let mut rhs = vec![0f64; padded];
+        rhs[..n].copy_from_slice(p.b);
+
+        let out = self.registry.run(
+            &format!("dense_solve_n{padded}"),
+            &[
+                Arg::tensor(dense, vec![padded, padded]),
+                Arg::vec(rhs),
+            ],
+        )?;
+        let x_full = out[0].as_f64();
+        let x = x_full[..n].to_vec();
+        let residual = super::native_direct::residual_of(&a, &x, p.b);
+        Ok(SolveOutcome {
+            x,
+            backend: self.name(),
+            method: "dense-cholesky(pjrt)",
+            iters: 0,
+            residual,
+            peak_bytes: bytes,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::Operator;
+    use crate::sparse::poisson::poisson2d;
+    use crate::util::{self, Prng};
+
+    fn backend() -> XlaDirect {
+        XlaDirect::new(RuntimeHandle::spawn_default().expect("make artifacts"))
+    }
+
+    #[test]
+    fn solves_small_poisson_via_pjrt() {
+        let sys = poisson2d(7, None); // n = 49, pads to 64
+        let mut rng = Prng::new(0);
+        let b = rng.normal_vec(49);
+        let out = backend()
+            .solve(
+                &Problem {
+                    op: Operator::Csr(&sys.matrix),
+                    b: &b,
+                },
+                &SolveOpts::on_accel(),
+            )
+            .unwrap();
+        assert_eq!(out.backend, "xla-direct");
+        assert!(out.residual < 1e-8, "residual {}", out.residual);
+        assert!(util::rel_l2(&sys.matrix.matvec(&out.x), &b) < 1e-8);
+    }
+
+    #[test]
+    fn oom_beyond_budget() {
+        let sys = poisson2d(40, None); // n = 1600 -> pads to 2048 -> 33 MB
+        let b = vec![1.0; 1600];
+        let p = Problem {
+            op: Operator::Csr(&sys.matrix),
+            b: &b,
+        };
+        let opts = SolveOpts {
+            device: Device::Accel,
+            accel_mem_budget: 1 << 20, // 1 MiB device
+            ..Default::default()
+        };
+        assert!(backend().supports(&p, &opts).is_err());
+    }
+
+    #[test]
+    fn too_large_unsupported() {
+        let sys = poisson2d(96, None); // n = 9216 > largest artifact (4096)
+        let b = vec![1.0; 96 * 96];
+        let p = Problem {
+            op: Operator::Csr(&sys.matrix),
+            b: &b,
+        };
+        assert!(backend().supports(&p, &SolveOpts::on_accel()).is_err());
+    }
+
+    #[test]
+    fn n4096_supported_within_default_budget() {
+        // the cuDSS-analog mid-range: a 4096^2 f64 dense footprint is
+        // 128 MiB — inside the default 512 MiB device budget, OOM under
+        // a 64 MiB one (Table 3's regime boundary).
+        let sys = poisson2d(64, None);
+        let b = vec![1.0; 4096];
+        let p = Problem {
+            op: Operator::Csr(&sys.matrix),
+            b: &b,
+        };
+        assert!(backend().supports(&p, &SolveOpts::on_accel()).is_ok());
+        let tight = SolveOpts {
+            device: Device::Accel,
+            accel_mem_budget: 64 << 20,
+            ..Default::default()
+        };
+        assert!(backend().supports(&p, &tight).is_err());
+    }
+}

@@ -1,0 +1,121 @@
+//! Pattern-keyed batching: requests whose matrices share (pattern,
+//! values) coalesce into one factorize-once multi-RHS solve; requests
+//! sharing only the pattern still reuse the dispatch decision.
+
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+
+use crate::sparse::Csr;
+
+/// Cheap structural fingerprint of a sparsity pattern + values.
+/// Collisions only cost a missed batching opportunity / an extra value
+/// comparison, never a wrong answer (the service re-checks equality).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct PatternKey {
+    pub nrows: usize,
+    pub nnz: usize,
+    pub structure_hash: u64,
+    pub values_hash: u64,
+}
+
+impl PatternKey {
+    pub fn of(m: &Csr) -> Self {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        m.indptr.hash(&mut h);
+        m.indices.hash(&mut h);
+        let structure_hash = h.finish();
+        let mut hv = std::collections::hash_map::DefaultHasher::new();
+        for v in &m.vals {
+            v.to_bits().hash(&mut hv);
+        }
+        PatternKey {
+            nrows: m.nrows,
+            nnz: m.nnz(),
+            structure_hash,
+            values_hash: hv.finish(),
+        }
+    }
+}
+
+/// Batching policy knobs.
+#[derive(Clone, Debug)]
+pub struct BatchPolicy {
+    /// Max requests coalesced into one multi-RHS solve.
+    pub max_batch: usize,
+    /// Max time the intake thread waits to fill a batch.
+    pub window: std::time::Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 32,
+            window: std::time::Duration::from_millis(2),
+        }
+    }
+}
+
+/// Group indices of requests by pattern+values key, preserving arrival
+/// order inside each group.
+pub fn group_by_key(keys: &[PatternKey], max_batch: usize) -> Vec<Vec<usize>> {
+    let mut groups: HashMap<&PatternKey, Vec<usize>> = HashMap::new();
+    let mut order: Vec<&PatternKey> = Vec::new();
+    for (i, k) in keys.iter().enumerate() {
+        let e = groups.entry(k).or_insert_with(|| {
+            order.push(k);
+            Vec::new()
+        });
+        e.push(i);
+    }
+    let mut out = Vec::new();
+    for k in order {
+        let idxs = &groups[k];
+        for chunk in idxs.chunks(max_batch.max(1)) {
+            out.push(chunk.to_vec());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::poisson::poisson2d;
+
+    #[test]
+    fn same_matrix_same_key() {
+        let a = poisson2d(6, None).matrix;
+        let b = poisson2d(6, None).matrix;
+        assert_eq!(PatternKey::of(&a), PatternKey::of(&b));
+    }
+
+    #[test]
+    fn different_values_different_key() {
+        let a = poisson2d(6, None).matrix;
+        let mut b = a.clone();
+        b.vals[0] += 1.0;
+        let (ka, kb) = (PatternKey::of(&a), PatternKey::of(&b));
+        assert_eq!(ka.structure_hash, kb.structure_hash);
+        assert_ne!(ka.values_hash, kb.values_hash);
+    }
+
+    #[test]
+    fn grouping_respects_max_batch() {
+        let a = poisson2d(4, None).matrix;
+        let k = PatternKey::of(&a);
+        let keys = vec![k.clone(); 7];
+        let groups = group_by_key(&keys, 3);
+        assert_eq!(groups.len(), 3);
+        assert_eq!(groups[0], vec![0, 1, 2]);
+        assert_eq!(groups[2], vec![6]);
+    }
+
+    #[test]
+    fn mixed_patterns_stay_separate() {
+        let a = PatternKey::of(&poisson2d(4, None).matrix);
+        let b = PatternKey::of(&poisson2d(5, None).matrix);
+        let keys = vec![a.clone(), b.clone(), a.clone()];
+        let groups = group_by_key(&keys, 8);
+        assert_eq!(groups, vec![vec![0, 2], vec![1]]);
+    }
+}

@@ -1,0 +1,17 @@
+//! L3 coordinator: a solve *service* in the vLLM-router mold.
+//!
+//! torch-sla is a library, but its batched/auto-dispatch semantics are
+//! exactly a serving problem: requests (solves) arrive, get grouped by
+//! sparsity pattern (shared-pattern batches amortize one symbolic
+//! factorization — paper §3.1), routed to a backend by the dispatch
+//! policy, and executed on a worker pool.  This module is that runtime:
+//!
+//! * [`batcher`] — windowed intake that coalesces same-pattern,
+//!   same-values requests into multi-RHS batches;
+//! * [`service`] — worker pool + queue + per-request latency metrics.
+
+pub mod batcher;
+pub mod service;
+
+pub use batcher::{BatchPolicy, PatternKey};
+pub use service::{ServiceConfig, ServiceStats, SolveRequest, SolveResponse, SolveService};

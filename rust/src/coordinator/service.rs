@@ -1,0 +1,356 @@
+//! The solve service: intake thread (windowed batcher) + worker pool +
+//! metrics.  Requests are routed by the [`Dispatcher`] policy; batches
+//! of identical (pattern, values) matrices run factorize-once.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::batcher::{group_by_key, BatchPolicy, PatternKey};
+use crate::backend::{Dispatcher, Operator, Problem, SolveOpts, SolveOutcome};
+use crate::direct::EnvelopeCholesky;
+use crate::error::{Error, Result};
+use crate::metrics;
+use crate::sparse::Csr;
+
+/// One solve request.
+pub struct SolveRequest {
+    pub id: u64,
+    pub matrix: Csr,
+    pub b: Vec<f64>,
+    pub opts: SolveOpts,
+}
+
+/// The reply, with queueing/service latency for the metrics tables.
+pub struct SolveResponse {
+    pub id: u64,
+    pub outcome: Result<SolveOutcome>,
+    pub queue_seconds: f64,
+    pub service_seconds: f64,
+    /// How many requests shared the batch that served this one.
+    pub batch_size: usize,
+}
+
+#[derive(Clone)]
+pub struct ServiceConfig {
+    pub workers: usize,
+    pub batch: BatchPolicy,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            workers: 2,
+            batch: BatchPolicy::default(),
+        }
+    }
+}
+
+struct Envelope {
+    req: SolveRequest,
+    key: PatternKey,
+    enqueued: Instant,
+    reply: Sender<SolveResponse>,
+}
+
+/// Aggregate statistics snapshot.
+#[derive(Clone, Debug, Default)]
+pub struct ServiceStats {
+    pub completed: u64,
+    pub batches: u64,
+    pub batched_requests: u64,
+}
+
+pub struct SolveService {
+    intake_tx: Option<Sender<Envelope>>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+    pub metrics: Arc<metrics::Registry>,
+    next_id: std::sync::atomic::AtomicU64,
+}
+
+impl SolveService {
+    pub fn start(dispatcher: Arc<Dispatcher>, config: ServiceConfig) -> Self {
+        let metrics = Arc::new(metrics::Registry::new());
+        let (intake_tx, intake_rx) = channel::<Envelope>();
+        let (work_tx, work_rx) = channel::<Vec<Envelope>>();
+        let work_rx = Arc::new(Mutex::new(work_rx));
+
+        let mut threads = Vec::new();
+
+        // intake thread: windowed batching by pattern key
+        {
+            let policy = config.batch.clone();
+            let metrics = metrics.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("rsla-intake".into())
+                    .spawn(move || {
+                        intake_loop(intake_rx, work_tx, policy, metrics);
+                    })
+                    .unwrap(),
+            );
+        }
+        // worker pool
+        for w in 0..config.workers.max(1) {
+            let rx = work_rx.clone();
+            let disp = dispatcher.clone();
+            let metrics = metrics.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("rsla-worker-{w}"))
+                    .spawn(move || loop {
+                        let batch = {
+                            let guard = rx.lock().unwrap();
+                            match guard.recv() {
+                                Ok(b) => b,
+                                Err(_) => break,
+                            }
+                        };
+                        serve_batch(batch, &disp, &metrics);
+                    })
+                    .unwrap(),
+            );
+        }
+
+        SolveService {
+            intake_tx: Some(intake_tx),
+            threads,
+            metrics,
+            next_id: std::sync::atomic::AtomicU64::new(1),
+        }
+    }
+
+    /// Submit a request; returns the reply receiver.
+    pub fn submit(&self, matrix: Csr, b: Vec<f64>, opts: SolveOpts) -> Receiver<SolveResponse> {
+        let id = self
+            .next_id
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let (reply_tx, reply_rx) = channel();
+        let key = PatternKey::of(&matrix);
+        let env = Envelope {
+            req: SolveRequest {
+                id,
+                matrix,
+                b,
+                opts,
+            },
+            key,
+            enqueued: Instant::now(),
+            reply: reply_tx,
+        };
+        self.intake_tx
+            .as_ref()
+            .expect("service stopped")
+            .send(env)
+            .expect("intake thread gone");
+        reply_rx
+    }
+
+    pub fn stats(&self) -> ServiceStats {
+        ServiceStats {
+            completed: self.metrics.get("service.completed"),
+            batches: self.metrics.get("service.batches"),
+            batched_requests: self.metrics.get("service.batched_requests"),
+        }
+    }
+
+    /// Graceful shutdown: drain queues, join threads.
+    pub fn shutdown(mut self) {
+        drop(self.intake_tx.take());
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+fn intake_loop(
+    rx: Receiver<Envelope>,
+    work_tx: Sender<Vec<Envelope>>,
+    policy: BatchPolicy,
+    metrics: Arc<metrics::Registry>,
+) {
+    loop {
+        // block for the first request
+        let first = match rx.recv() {
+            Ok(e) => e,
+            Err(_) => break,
+        };
+        let mut window: Vec<Envelope> = vec![first];
+        let deadline = Instant::now() + policy.window;
+        while window.len() < policy.max_batch * 4 {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(e) => window.push(e),
+                Err(_) => break,
+            }
+        }
+        // group by key and dispatch groups to workers
+        let keys: Vec<PatternKey> = window.iter().map(|e| e.key.clone()).collect();
+        let groups = group_by_key(&keys, policy.max_batch);
+        metrics.incr("service.batches", groups.len() as u64);
+        // pull envelopes out by index, preserving group structure
+        let mut slots: Vec<Option<Envelope>> = window.into_iter().map(Some).collect();
+        for group in groups {
+            let batch: Vec<Envelope> = group
+                .into_iter()
+                .map(|i| slots[i].take().unwrap())
+                .collect();
+            metrics.incr("service.batched_requests", batch.len() as u64);
+            if work_tx.send(batch).is_err() {
+                return;
+            }
+        }
+    }
+}
+
+fn serve_batch(batch: Vec<Envelope>, disp: &Dispatcher, metrics: &Arc<metrics::Registry>) {
+    let t0 = Instant::now();
+    let n = batch.len();
+    // factorize-once fast path: same (pattern, values) SPD batch
+    if n > 1 && batch[0].req.matrix.looks_spd() {
+        let a = batch[0].req.matrix.clone();
+        if let Ok(f) = EnvelopeCholesky::factor_rcm(&a) {
+            let bytes = f.bytes();
+            for env in batch {
+                let ts = Instant::now();
+                let x = f.solve(&env.req.b);
+                let residual = {
+                    let ax = a.matvec(&x);
+                    env.req
+                        .b
+                        .iter()
+                        .zip(&ax)
+                        .map(|(bi, ai)| (bi - ai) * (bi - ai))
+                        .sum::<f64>()
+                        .sqrt()
+                };
+                metrics.incr("service.completed", 1);
+                let _ = env.reply.send(SolveResponse {
+                    id: env.req.id,
+                    outcome: Ok(SolveOutcome {
+                        x,
+                        backend: "native-direct",
+                        method: "cholesky+rcm(batched)",
+                        iters: 0,
+                        residual,
+                        peak_bytes: bytes,
+                    }),
+                    queue_seconds: (t0 - env.enqueued).as_secs_f64(),
+                    service_seconds: ts.elapsed().as_secs_f64(),
+                    batch_size: n,
+                });
+            }
+            return;
+        }
+    }
+    // per-request dispatch
+    for env in batch {
+        let ts = Instant::now();
+        let outcome = if env.req.matrix.nrows != env.req.b.len() {
+            Err(Error::InvalidProblem("rhs length mismatch".into()))
+        } else {
+            disp.solve(
+                &Problem {
+                    op: Operator::Csr(&env.req.matrix),
+                    b: &env.req.b,
+                },
+                &env.req.opts,
+            )
+        };
+        metrics.incr("service.completed", 1);
+        let _ = env.reply.send(SolveResponse {
+            id: env.req.id,
+            outcome,
+            queue_seconds: (t0 - env.enqueued).as_secs_f64(),
+            service_seconds: ts.elapsed().as_secs_f64(),
+            batch_size: n,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::graphs::random_spd;
+    use crate::sparse::poisson::poisson2d;
+    use crate::util::{self, Prng};
+
+    #[test]
+    fn serves_single_request() {
+        let svc = SolveService::start(Arc::new(Dispatcher::new(None)), ServiceConfig::default());
+        let sys = poisson2d(8, None);
+        let mut rng = Prng::new(0);
+        let b = rng.normal_vec(64);
+        let rx = svc.submit(sys.matrix.clone(), b.clone(), SolveOpts::default());
+        let resp = rx.recv().unwrap();
+        let out = resp.outcome.unwrap();
+        assert!(util::rel_l2(&sys.matrix.matvec(&out.x), &b) < 1e-8);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn batches_same_pattern_requests() {
+        let svc = SolveService::start(
+            Arc::new(Dispatcher::new(None)),
+            ServiceConfig {
+                workers: 1,
+                batch: BatchPolicy {
+                    max_batch: 16,
+                    window: std::time::Duration::from_millis(50),
+                },
+            },
+        );
+        let sys = poisson2d(8, None);
+        let mut rng = Prng::new(1);
+        let mut rxs = Vec::new();
+        let mut bs = Vec::new();
+        for _ in 0..6 {
+            let b = rng.normal_vec(64);
+            rxs.push(svc.submit(sys.matrix.clone(), b.clone(), SolveOpts::default()));
+            bs.push(b);
+        }
+        let mut batched = 0;
+        for (rx, b) in rxs.into_iter().zip(&bs) {
+            let resp = rx.recv().unwrap();
+            let out = resp.outcome.unwrap();
+            assert!(util::rel_l2(&sys.matrix.matvec(&out.x), b) < 1e-8);
+            if resp.batch_size > 1 {
+                batched += 1;
+            }
+        }
+        assert!(batched >= 2, "expected some batching, got {batched}");
+        let stats = svc.stats();
+        assert_eq!(stats.completed, 6);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn mixed_patterns_still_all_served() {
+        let svc = SolveService::start(Arc::new(Dispatcher::new(None)), ServiceConfig::default());
+        let mut rng = Prng::new(2);
+        let mut work = Vec::new();
+        for i in 0..5 {
+            let a = random_spd(&mut rng, 20 + i * 7, 3, 1.0);
+            let b = rng.normal_vec(a.nrows);
+            work.push((a.clone(), b.clone(), svc.submit(a, b, SolveOpts::default())));
+        }
+        for (a, b, rx) in work {
+            let out = rx.recv().unwrap().outcome.unwrap();
+            assert!(util::rel_l2(&a.matvec(&out.x), &b) < 1e-7);
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn bad_request_gets_error_not_hang() {
+        let svc = SolveService::start(Arc::new(Dispatcher::new(None)), ServiceConfig::default());
+        let sys = poisson2d(6, None);
+        let rx = svc.submit(sys.matrix.clone(), vec![1.0; 7], SolveOpts::default());
+        let resp = rx.recv().unwrap();
+        assert!(resp.outcome.is_err());
+        svc.shutdown();
+    }
+}

@@ -1,0 +1,421 @@
+//! Gilbert–Peierls left-looking sparse LU with partial pivoting.
+//!
+//! The algorithm SuperLU builds on (non-supernodal form): per column, a
+//! symbolic DFS over the current L graph finds the nonzero pattern, a
+//! sparse triangular solve computes the numeric values, and the pivot is
+//! the largest remaining entry.  Fill is whatever the elimination
+//! produces — `factor_with_cap` aborts once the measured fill crosses a
+//! byte budget, which is how the accelerator/direct backends surface the
+//! paper's OOM rows *before* exhausting host memory.
+
+use crate::error::{Error, Result};
+use crate::sparse::Csr;
+
+const UNPIVOTED: usize = usize::MAX;
+
+/// Sparse LU factors: P A = L U (row pivoting only).
+pub struct SparseLu {
+    n: usize,
+    /// L columns (excluding the implicit unit diagonal): (row, value).
+    l_cols: Vec<Vec<(usize, f64)>>,
+    /// U columns including the diagonal: (pivot position, value).
+    u_cols: Vec<Vec<(usize, f64)>>,
+    /// row -> pivot position.
+    pinv: Vec<usize>,
+    /// pivot position -> row.
+    prow: Vec<usize>,
+}
+
+impl SparseLu {
+    pub fn factor(a: &Csr) -> Result<Self> {
+        Self::factor_with_cap(a, usize::MAX)
+    }
+
+    /// Factor, aborting with [`Error::OutOfMemory`] if the stored factor
+    /// entries exceed `max_fill`.
+    pub fn factor_with_cap(a: &Csr, max_fill: usize) -> Result<Self> {
+        if a.nrows != a.ncols {
+            return Err(Error::InvalidProblem("lu needs square".into()));
+        }
+        let n = a.nrows;
+        // CSC of A = CSR rows of A^T
+        let at = a.transpose();
+
+        let mut l_cols: Vec<Vec<(usize, f64)>> = Vec::with_capacity(n);
+        let mut u_cols: Vec<Vec<(usize, f64)>> = Vec::with_capacity(n);
+        let mut pinv = vec![UNPIVOTED; n];
+        let mut prow = vec![0usize; n];
+
+        let mut x = vec![0f64; n];
+        let mut mark = vec![usize::MAX; n];
+        let mut post: Vec<usize> = Vec::with_capacity(n);
+        // explicit DFS stack: (node, child_cursor)
+        let mut stack: Vec<(usize, usize)> = Vec::new();
+        let mut fill = 0usize;
+
+        for j in 0..n {
+            // --- symbolic: reach of A[:,j] in the L graph, postorder ---
+            post.clear();
+            let (a_rows, a_vals) = at.row(j);
+            for &r0 in a_rows {
+                if mark[r0] == j {
+                    continue;
+                }
+                stack.push((r0, 0));
+                mark[r0] = j;
+                while let Some(&mut (r, ref mut cur)) = stack.last_mut() {
+                    let children: &[(usize, f64)] = if pinv[r] == UNPIVOTED {
+                        &[]
+                    } else {
+                        &l_cols[pinv[r]]
+                    };
+                    let mut advanced = false;
+                    while *cur < children.len() {
+                        let child = children[*cur].0;
+                        *cur += 1;
+                        if mark[child] != j {
+                            mark[child] = j;
+                            stack.push((child, 0));
+                            advanced = true;
+                            break;
+                        }
+                    }
+                    if !advanced {
+                        post.push(r);
+                        stack.pop();
+                    }
+                }
+            }
+            // --- numeric: sparse lower solve in reverse postorder ---
+            for &r in &post {
+                x[r] = 0.0;
+            }
+            for (&r, &v) in a_rows.iter().zip(a_vals) {
+                x[r] = v;
+            }
+            for &r in post.iter().rev() {
+                let k = pinv[r];
+                if k == UNPIVOTED {
+                    continue;
+                }
+                let xr = x[r];
+                if xr != 0.0 {
+                    for &(rr, lv) in &l_cols[k] {
+                        x[rr] -= xr * lv;
+                    }
+                }
+            }
+            // --- pivot: largest |x| among unpivoted reach rows ---
+            let mut piv_row = UNPIVOTED;
+            let mut piv_abs = 0.0f64;
+            for &r in &post {
+                if pinv[r] == UNPIVOTED {
+                    let a = x[r].abs();
+                    if a > piv_abs {
+                        piv_abs = a;
+                        piv_row = r;
+                    }
+                }
+            }
+            if piv_row == UNPIVOTED || piv_abs == 0.0 || !piv_abs.is_finite() {
+                return Err(Error::Breakdown {
+                    at: j,
+                    reason: "structurally or numerically singular".into(),
+                });
+            }
+            let piv = x[piv_row];
+            // --- gather U column (pivoted rows) and L column (rest) ---
+            let mut ucol: Vec<(usize, f64)> = Vec::new();
+            let mut lcol: Vec<(usize, f64)> = Vec::new();
+            for &r in &post {
+                let k = pinv[r];
+                if k != UNPIVOTED {
+                    if x[r] != 0.0 {
+                        ucol.push((k, x[r]));
+                    }
+                } else if r != piv_row && x[r] != 0.0 {
+                    lcol.push((r, x[r] / piv));
+                }
+            }
+            ucol.push((j, piv)); // diagonal
+            pinv[piv_row] = j;
+            prow[j] = piv_row;
+            fill += ucol.len() + lcol.len();
+            if fill > max_fill {
+                return Err(Error::OutOfMemory {
+                    needed_bytes: (fill * 16) as u64,
+                    budget_bytes: (max_fill * 16) as u64,
+                });
+            }
+            u_cols.push(ucol);
+            l_cols.push(lcol);
+        }
+        Ok(SparseLu {
+            n,
+            l_cols,
+            u_cols,
+            pinv,
+            prow,
+        })
+    }
+
+    /// Total stored factor entries (measured fill).
+    pub fn fill(&self) -> usize {
+        self.l_cols.iter().map(|c| c.len() + 1).sum::<usize>()
+            + self.u_cols.iter().map(|c| c.len()).sum::<usize>()
+    }
+
+    pub fn bytes(&self) -> u64 {
+        (self.fill() * 16 + 2 * self.n * 8) as u64
+    }
+
+    /// (sign, log|det|) of A: det(P A) = det(L) det(U) = prod(diag U),
+    /// corrected by the pivot-permutation parity.
+    pub fn slogdet(&self) -> (f64, f64) {
+        let mut sign = 1.0f64;
+        let mut logabs = 0.0f64;
+        for j in 0..self.n {
+            let mut d = 0.0;
+            for &(i, v) in &self.u_cols[j] {
+                if i == j {
+                    d = v;
+                }
+            }
+            if d == 0.0 {
+                return (0.0, f64::NEG_INFINITY);
+            }
+            if d < 0.0 {
+                sign = -sign;
+            }
+            logabs += d.abs().ln();
+        }
+        // permutation parity of pinv (row -> position): (-1)^(n - cycles)
+        let mut seen = vec![false; self.n];
+        for start in 0..self.n {
+            if seen[start] {
+                continue;
+            }
+            let mut len = 0usize;
+            let mut cur = start;
+            while !seen[cur] {
+                seen[cur] = true;
+                cur = self.pinv[cur];
+                len += 1;
+            }
+            if len % 2 == 0 {
+                sign = -sign;
+            }
+        }
+        (sign, logabs)
+    }
+
+    /// Solve A x = b.
+    pub fn solve(&self, b: &[f64]) -> Result<Vec<f64>> {
+        if b.len() != self.n {
+            return Err(crate::error::Error::InvalidProblem(format!(
+                "rhs length {} != n {}",
+                b.len(),
+                self.n
+            )));
+        }
+        // forward: L y = P b, working in original-row space
+        let mut work = b.to_vec();
+        let mut y = vec![0f64; self.n];
+        for k in 0..self.n {
+            let r = self.prow[k];
+            let yk = work[r];
+            y[k] = yk;
+            if yk != 0.0 {
+                for &(rr, lv) in &self.l_cols[k] {
+                    work[rr] -= yk * lv;
+                }
+            }
+        }
+        // backward: U x = y (columns right-to-left)
+        let mut x = y;
+        for j in (0..self.n).rev() {
+            let mut diag = 0.0;
+            for &(i, v) in &self.u_cols[j] {
+                if i == j {
+                    diag = v;
+                }
+            }
+            if diag == 0.0 {
+                return Err(Error::Breakdown {
+                    at: j,
+                    reason: "zero U diagonal".into(),
+                });
+            }
+            let xj = x[j] / diag;
+            x[j] = xj;
+            if xj != 0.0 {
+                for &(i, v) in &self.u_cols[j] {
+                    if i < j {
+                        x[i] -= v * xj;
+                    }
+                }
+            }
+        }
+        Ok(x)
+    }
+
+    /// Solve A^T x = b (the adjoint solve reuses the same factorization,
+    /// paper §3.2.3: "reusing the same backend and, where applicable, the
+    /// same factorization").  From P A = L U: A^T = U^T L^T P.
+    pub fn solve_t(&self, b: &[f64]) -> Result<Vec<f64>> {
+        if b.len() != self.n {
+            return Err(crate::error::Error::InvalidProblem(format!(
+                "rhs length {} != n {}",
+                b.len(),
+                self.n
+            )));
+        }
+        // forward: U^T z = b (columns left-to-right; U^T is lower)
+        let mut z = b.to_vec();
+        for j in 0..self.n {
+            let mut diag = 0.0;
+            let mut s = z[j];
+            for &(i, v) in &self.u_cols[j] {
+                if i == j {
+                    diag = v;
+                } else {
+                    s -= v * z_at(&z, i);
+                }
+            }
+            if diag == 0.0 {
+                return Err(Error::Breakdown {
+                    at: j,
+                    reason: "zero U diagonal".into(),
+                });
+            }
+            z[j] = s / diag;
+        }
+        // backward: L^T w = z (unit diagonal; columns right-to-left)
+        let mut w = z;
+        for k in (0..self.n).rev() {
+            let mut s = w[k];
+            for &(rr, lv) in &self.l_cols[k] {
+                // L[rr', k] with rr original row; its pivot position is pinv[rr]
+                s -= lv * w_at(&w, self.pinv[rr]);
+            }
+            w[k] = s;
+        }
+        // x = P^T w: x[row] = w[pinv[row]]
+        let mut x = vec![0f64; self.n];
+        for r in 0..self.n {
+            x[r] = w[self.pinv[r]];
+        }
+        Ok(x)
+    }
+}
+
+#[inline]
+fn z_at(z: &[f64], i: usize) -> f64 {
+    z[i]
+}
+
+#[inline]
+fn w_at(w: &[f64], i: usize) -> f64 {
+    w[i]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::graphs::{random_nonsymmetric, random_spd};
+    use crate::sparse::poisson::poisson2d;
+    use crate::util::{self, Prng};
+
+    #[test]
+    fn solves_nonsymmetric() {
+        let mut rng = Prng::new(1);
+        let a = random_nonsymmetric(&mut rng, 80, 5);
+        let f = SparseLu::factor(&a).unwrap();
+        let b = rng.normal_vec(80);
+        let x = f.solve(&b).unwrap();
+        assert!(util::rel_l2(&a.matvec(&x), &b) < 1e-11);
+    }
+
+    #[test]
+    fn solves_poisson_to_machine_precision() {
+        let g = 14;
+        let sys = poisson2d(g, None);
+        let f = SparseLu::factor(&sys.matrix).unwrap();
+        let mut rng = Prng::new(2);
+        let b = rng.normal_vec(g * g);
+        let x = f.solve(&b).unwrap();
+        assert!(util::rel_l2(&sys.matrix.matvec(&x), &b) < 1e-12);
+    }
+
+    #[test]
+    fn transpose_solve() {
+        let mut rng = Prng::new(3);
+        let a = random_nonsymmetric(&mut rng, 50, 4);
+        let f = SparseLu::factor(&a).unwrap();
+        let b = rng.normal_vec(50);
+        let x = f.solve_t(&b).unwrap();
+        let mut atx = vec![0.0; 50];
+        a.spmv_t(&x, &mut atx);
+        assert!(util::rel_l2(&atx, &b) < 1e-11);
+    }
+
+    #[test]
+    fn pivoting_handles_zero_diagonal() {
+        use crate::sparse::Coo;
+        // [[0, 1], [1, 0]] needs a row swap
+        let mut coo = Coo::new(2, 2);
+        coo.push(0, 1, 1.0);
+        coo.push(1, 0, 1.0);
+        let a = coo.to_csr();
+        let f = SparseLu::factor(&a).unwrap();
+        let x = f.solve(&[3.0, 7.0]).unwrap();
+        assert!((x[0] - 7.0).abs() < 1e-14);
+        assert!((x[1] - 3.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn singular_matrix_breaks_down() {
+        use crate::sparse::Coo;
+        let mut coo = Coo::new(3, 3);
+        coo.push(0, 0, 1.0);
+        coo.push(1, 1, 1.0);
+        // row/col 2 empty -> structurally singular
+        let a = coo.to_csr();
+        assert!(matches!(
+            SparseLu::factor(&a),
+            Err(Error::Breakdown { .. })
+        ));
+    }
+
+    #[test]
+    fn fill_cap_aborts_with_oom() {
+        let g = 12;
+        let sys = poisson2d(g, None);
+        match SparseLu::factor_with_cap(&sys.matrix, 50) {
+            Err(Error::OutOfMemory { .. }) => {}
+            other => panic!("expected OOM, got {:?}", other.map(|_| ())),
+        }
+    }
+
+    #[test]
+    fn spd_matches_cholesky() {
+        let mut rng = Prng::new(4);
+        let a = random_spd(&mut rng, 40, 3, 1.5);
+        let b = rng.normal_vec(40);
+        let xl = SparseLu::factor(&a).unwrap().solve(&b).unwrap();
+        let xc = super::super::EnvelopeCholesky::factor(&a).unwrap().solve(&b);
+        assert!(util::max_abs_diff(&xl, &xc) < 1e-8);
+    }
+
+    #[test]
+    fn solve_and_solve_t_agree_on_symmetric() {
+        let g = 8;
+        let sys = poisson2d(g, None);
+        let f = SparseLu::factor(&sys.matrix).unwrap();
+        let mut rng = Prng::new(5);
+        let b = rng.normal_vec(g * g);
+        let x = f.solve(&b).unwrap();
+        let xt = f.solve_t(&b).unwrap();
+        assert!(util::max_abs_diff(&x, &xt) < 1e-9);
+    }
+}

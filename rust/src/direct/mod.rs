@@ -1,0 +1,59 @@
+//! Sparse direct solvers — the SciPy-SuperLU/UMFPACK analog (paper §3.1).
+//!
+//! * [`cholesky::EnvelopeCholesky`] — envelope (profile/skyline) Cholesky
+//!   for SPD systems; with [`ordering::rcm`] reordering the profile of a
+//!   2D 5-point grid is O(n^1.5), the same fill asymptotics the paper
+//!   cites for direct solvers (George 1973), so the direct-solver memory
+//!   wall in Table 3 emerges from *measured* factor size.
+//! * [`lu::SparseLu`] — Gilbert–Peierls left-looking sparse LU with
+//!   partial pivoting (the non-supernodal SuperLU algorithm) for general
+//!   square systems.
+//!
+//! Both factorizations separate symbolic-ish setup from numeric refactor
+//! where possible and report their fill so backends can enforce the
+//! device-memory budget *before* factorizing.
+
+pub mod cholesky;
+pub mod lu;
+pub mod ordering;
+pub mod triangular;
+
+pub use cholesky::EnvelopeCholesky;
+pub use lu::SparseLu;
+
+use crate::error::Result;
+use crate::sparse::Csr;
+
+/// Factorize-and-solve convenience: Cholesky when the matrix looks SPD
+/// (with LU fallback on breakdown), LU otherwise.  RCM is applied for the
+/// Cholesky path.
+pub fn direct_solve(a: &Csr, b: &[f64]) -> Result<Vec<f64>> {
+    if a.looks_spd() {
+        match EnvelopeCholesky::factor_rcm(a) {
+            Ok(f) => return Ok(f.solve(b)),
+            Err(_) => { /* fall through to LU */ }
+        }
+    }
+    let f = SparseLu::factor(a)?;
+    f.solve(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::graphs::{random_nonsymmetric, random_spd};
+    use crate::util::{self, Prng};
+
+    #[test]
+    fn direct_solve_routes_spd_and_general() {
+        let mut rng = Prng::new(11);
+        let spd = random_spd(&mut rng, 40, 3, 1.0);
+        let b = rng.normal_vec(40);
+        let x = direct_solve(&spd, &b).unwrap();
+        assert!(util::rel_l2(&spd.matvec(&x), &b) < 1e-10);
+
+        let gen = random_nonsymmetric(&mut rng, 40, 4);
+        let x = direct_solve(&gen, &b).unwrap();
+        assert!(util::rel_l2(&gen.matvec(&x), &b) < 1e-10);
+    }
+}

@@ -1,0 +1,104 @@
+//! Sparse triangular solves on CSR factors (used by the ILU/IC
+//! preconditioners, which store their factors as CSR).
+
+use crate::sparse::Csr;
+
+/// Solve L x = b where `l` is lower triangular CSR with the diagonal
+/// stored as the LAST entry of each row.
+pub fn lower_solve_csr(l: &Csr, b: &[f64], x: &mut [f64]) {
+    debug_assert_eq!(l.nrows, b.len());
+    for r in 0..l.nrows {
+        let (cols, vals) = l.row(r);
+        debug_assert!(!cols.is_empty() && cols[cols.len() - 1] == r, "diag last");
+        let mut s = b[r];
+        for k in 0..cols.len() - 1 {
+            s -= vals[k] * x[cols[k]];
+        }
+        x[r] = s / vals[cols.len() - 1];
+    }
+}
+
+/// Solve U x = b where `u` is upper triangular CSR with the diagonal
+/// stored as the FIRST entry of each row.
+pub fn upper_solve_csr(u: &Csr, b: &[f64], x: &mut [f64]) {
+    debug_assert_eq!(u.nrows, b.len());
+    for r in (0..u.nrows).rev() {
+        let (cols, vals) = u.row(r);
+        debug_assert!(!cols.is_empty() && cols[0] == r, "diag first");
+        let mut s = b[r];
+        for k in 1..cols.len() {
+            s -= vals[k] * x[cols[k]];
+        }
+        x[r] = s / vals[0];
+    }
+}
+
+/// Solve L^T x = b with `l` as in [`lower_solve_csr`] (column sweep).
+pub fn lower_transpose_solve_csr(l: &Csr, b: &[f64], x: &mut [f64]) {
+    x.copy_from_slice(b);
+    for r in (0..l.nrows).rev() {
+        let (cols, vals) = l.row(r);
+        let xr = x[r] / vals[cols.len() - 1];
+        x[r] = xr;
+        for k in 0..cols.len() - 1 {
+            x[cols[k]] -= vals[k] * xr;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+    use crate::util;
+
+    fn lower_example() -> Csr {
+        // L = [[2,0,0],[1,3,0],[0,4,5]]
+        let mut coo = Coo::new(3, 3);
+        coo.push(0, 0, 2.0);
+        coo.push(1, 0, 1.0);
+        coo.push(1, 1, 3.0);
+        coo.push(2, 1, 4.0);
+        coo.push(2, 2, 5.0);
+        coo.to_csr()
+    }
+
+    #[test]
+    fn lower() {
+        let l = lower_example();
+        let b = vec![2.0, 7.0, 18.0];
+        let mut x = vec![0.0; 3];
+        lower_solve_csr(&l, &b, &mut x);
+        assert!(util::max_abs_diff(&x, &[1.0, 2.0, 2.0]) < 1e-14);
+    }
+
+    #[test]
+    fn upper() {
+        // U = L^T = [[2,1,0],[0,3,4],[0,0,5]]
+        let mut coo = Coo::new(3, 3);
+        coo.push(0, 0, 2.0);
+        coo.push(0, 1, 1.0);
+        coo.push(1, 1, 3.0);
+        coo.push(1, 2, 4.0);
+        coo.push(2, 2, 5.0);
+        let u = coo.to_csr();
+        let b = vec![4.0, 14.0, 10.0];
+        let mut x = vec![0.0; 3];
+        upper_solve_csr(&u, &b, &mut x);
+        assert!(util::max_abs_diff(&x, &[1.0, 2.0, 2.0]) < 1e-14);
+    }
+
+    #[test]
+    fn lower_transpose_matches_upper() {
+        let l = lower_example();
+        let b = vec![4.0, 14.0, 10.0];
+        let mut x1 = vec![0.0; 3];
+        lower_transpose_solve_csr(&l, &b, &mut x1);
+        // L^T x = b should equal solving U x = b with U = L^T
+        let u = l.transpose();
+        // reorder u rows so diag first: transpose() sorts ascending, diag IS first for upper
+        let mut x2 = vec![0.0; 3];
+        upper_solve_csr(&u, &b, &mut x2);
+        assert!(util::max_abs_diff(&x1, &x2) < 1e-14);
+    }
+}

@@ -1,0 +1,263 @@
+//! In-process communicator: the NCCL/Gloo stand-in.
+//!
+//! P ranks run as OS threads; point-to-point messages travel over
+//! per-pair FIFO channels and `all_reduce` is a shared-state butterfly.
+//! Every payload is byte-accounted so benches report communication
+//! volume the way the paper reports NCCL traffic.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Message: (tag, payload).  Tags catch protocol mismatches early.
+type Msg = (u64, Vec<f64>);
+
+struct AllReduceState {
+    sum: Vec<f64>,
+    count: usize,
+    generation: u64,
+    result: Vec<f64>,
+}
+
+struct Shared {
+    nranks: usize,
+    ar: Mutex<AllReduceState>,
+    cv: Condvar,
+    bytes_sent: Vec<AtomicU64>,
+    /// Completed all_reduce rounds (a fused multi-scalar reduction
+    /// counts ONE round — the latency unit the pipelined-CG ablation
+    /// measures).
+    reduce_rounds: AtomicU64,
+}
+
+/// One rank's endpoint.
+pub struct LocalComm {
+    rank: usize,
+    senders: Vec<Sender<Msg>>,
+    receivers: Vec<Mutex<Receiver<Msg>>>,
+    shared: Arc<Shared>,
+}
+
+impl LocalComm {
+    /// Build endpoints for `nranks` ranks.
+    pub fn create(nranks: usize) -> Vec<LocalComm> {
+        let shared = Arc::new(Shared {
+            nranks,
+            ar: Mutex::new(AllReduceState {
+                sum: Vec::new(),
+                count: 0,
+                generation: 0,
+                result: Vec::new(),
+            }),
+            cv: Condvar::new(),
+            bytes_sent: (0..nranks).map(|_| AtomicU64::new(0)).collect(),
+            reduce_rounds: AtomicU64::new(0),
+        });
+        // channels[to][from]
+        let mut txs: Vec<Vec<Option<Sender<Msg>>>> = (0..nranks)
+            .map(|_| (0..nranks).map(|_| None).collect())
+            .collect();
+        let mut rxs: Vec<Vec<Option<Receiver<Msg>>>> = (0..nranks)
+            .map(|_| (0..nranks).map(|_| None).collect())
+            .collect();
+        for to in 0..nranks {
+            for from in 0..nranks {
+                let (tx, rx) = std::sync::mpsc::channel();
+                txs[to][from] = Some(tx);
+                rxs[to][from] = Some(rx);
+            }
+        }
+        (0..nranks)
+            .map(|rank| LocalComm {
+                rank,
+                senders: (0..nranks)
+                    .map(|to| txs[to][rank].take().unwrap())
+                    .collect(),
+                receivers: rxs[rank]
+                    .iter_mut()
+                    .map(|r| Mutex::new(r.take().unwrap()))
+                    .collect(),
+                shared: shared.clone(),
+            })
+            .collect()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn size(&self) -> usize {
+        self.shared.nranks
+    }
+
+    /// Non-blocking send (unbounded channel: neighbor exchanges post all
+    /// sends first, then drain receives — no deadlock by construction).
+    pub fn send(&self, to: usize, tag: u64, data: Vec<f64>) {
+        self.shared.bytes_sent[self.rank].fetch_add((data.len() * 8) as u64, Ordering::Relaxed);
+        self.senders[to]
+            .send((tag, data))
+            .expect("receiver rank hung up");
+    }
+
+    /// Blocking receive from a specific rank; asserts the tag matches.
+    pub fn recv(&self, from: usize, tag: u64) -> Vec<f64> {
+        let rx = self.receivers[from].lock().unwrap();
+        let (got_tag, data) = rx.recv().expect("sender rank hung up");
+        assert_eq!(
+            got_tag, tag,
+            "rank {}: tag mismatch from {from} (protocol desync)",
+            self.rank
+        );
+        data
+    }
+
+    /// Global sum (the NCCL all_reduce analog).
+    pub fn all_reduce_sum(&self, x: f64) -> f64 {
+        self.all_reduce_sum_vec(&[x])[0]
+    }
+
+    /// FUSED global sum of several scalars in ONE reduction round —
+    /// the communication primitive behind single-reduction
+    /// (Chronopoulos–Gear / pipelined) CG, which NCCL expresses as one
+    /// `all_reduce` over a packed buffer.
+    pub fn all_reduce_sum_vec(&self, xs: &[f64]) -> Vec<f64> {
+        let mut s = self.shared.ar.lock().unwrap();
+        let gen = s.generation;
+        if s.count == 0 {
+            s.sum = xs.to_vec();
+        } else {
+            assert_eq!(
+                s.sum.len(),
+                xs.len(),
+                "rank {}: mismatched all_reduce payload width (protocol desync)",
+                self.rank
+            );
+            for (a, b) in s.sum.iter_mut().zip(xs) {
+                *a += b;
+            }
+        }
+        s.count += 1;
+        if s.count == self.shared.nranks {
+            s.result = std::mem::take(&mut s.sum);
+            s.count = 0;
+            s.generation += 1;
+            self.shared.reduce_rounds.fetch_add(1, Ordering::Relaxed);
+            self.shared.cv.notify_all();
+            s.result.clone()
+        } else {
+            while s.generation == gen {
+                s = self.shared.cv.wait(s).unwrap();
+            }
+            s.result.clone()
+        }
+    }
+
+    /// Completed all_reduce rounds across the team (latency units).
+    pub fn reduce_rounds(&self) -> u64 {
+        self.shared.reduce_rounds.load(Ordering::Relaxed)
+    }
+
+    pub fn barrier(&self) {
+        self.all_reduce_sum(0.0);
+    }
+
+    /// Bytes sent by this rank so far.
+    pub fn bytes_sent(&self) -> u64 {
+        self.shared.bytes_sent[self.rank].load(Ordering::Relaxed)
+    }
+
+    /// Total bytes sent by all ranks.
+    pub fn total_bytes(&self) -> u64 {
+        self.shared
+            .bytes_sent
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .sum()
+    }
+}
+
+/// Spawn `nranks` threads, one per communicator endpoint, run `f`, and
+/// collect the per-rank results in rank order.  Panics in any rank are
+/// propagated (a rank crash must not silently hang the job).
+pub fn run_ranks<T, F>(nranks: usize, f: F) -> Vec<T>
+where
+    T: Send + 'static,
+    F: Fn(LocalComm) -> T + Send + Sync + 'static,
+{
+    let comms = LocalComm::create(nranks);
+    let f = Arc::new(f);
+    let handles: Vec<_> = comms
+        .into_iter()
+        .map(|c| {
+            let f = f.clone();
+            std::thread::Builder::new()
+                .name(format!("rsla-rank-{}", c.rank()))
+                .spawn(move || f(c))
+                .expect("spawn rank")
+        })
+        .collect();
+    handles
+        .into_iter()
+        .enumerate()
+        .map(|(r, h)| h.join().unwrap_or_else(|_| panic!("rank {r} panicked")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_reduce_sums_across_ranks() {
+        let results = run_ranks(4, |c| c.all_reduce_sum((c.rank() + 1) as f64));
+        assert_eq!(results, vec![10.0; 4]);
+    }
+
+    #[test]
+    fn repeated_all_reduce_generations() {
+        let results = run_ranks(3, |c| {
+            let mut acc = 0.0;
+            for round in 0..50 {
+                acc += c.all_reduce_sum((c.rank() * round) as f64);
+            }
+            acc
+        });
+        assert!(results.iter().all(|&r| (r - results[0]).abs() < 1e-12));
+    }
+
+    #[test]
+    fn point_to_point_ring() {
+        let results = run_ranks(4, |c| {
+            let next = (c.rank() + 1) % 4;
+            let prev = (c.rank() + 3) % 4;
+            c.send(next, 7, vec![c.rank() as f64]);
+            let got = c.recv(prev, 7);
+            got[0] as usize
+        });
+        assert_eq!(results, vec![3, 0, 1, 2]);
+    }
+
+    #[test]
+    fn bytes_are_accounted() {
+        let results = run_ranks(2, |c| {
+            if c.rank() == 0 {
+                c.send(1, 1, vec![0.0; 100]);
+            } else {
+                let _ = c.recv(0, 1);
+            }
+            c.barrier();
+            c.total_bytes()
+        });
+        assert_eq!(results[0], 800);
+    }
+
+    #[test]
+    #[should_panic(expected = "rank 1 panicked")]
+    fn rank_panic_propagates() {
+        run_ranks(2, |c| {
+            if c.rank() == 1 {
+                panic!("boom");
+            }
+        });
+    }
+}

@@ -1,0 +1,846 @@
+//! Distributed Krylov solvers (paper §3.3 + Appendix C Algorithm 1) and
+//! the distributed adjoint solve.
+//!
+//! Per CG iteration: ONE halo exchange (inside the SpMV) and TWO
+//! all_reduce calls — the exact communication structure of the paper.
+
+use super::comm::LocalComm;
+use super::halo::{dist_spmv, DistCsr};
+use crate::iterative::{Amg, AmgOpts, Jacobi, Precond};
+use crate::util::dot;
+
+/// Preconditioner for the distributed Krylov loops.  Application is
+/// purely LOCAL (no communication), so both variants compose with the
+/// transposed-halo backward pass unchanged.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub enum DistPrecondKind {
+    /// Pointwise Jacobi — the paper's only option (§5), kept as the
+    /// parity default.
+    #[default]
+    Jacobi,
+    /// One-level additive Schwarz with an AMG V-cycle on each rank's
+    /// owned diagonal block — the §5 "stronger preconditioner (e.g.
+    /// algebraic multigrid)" future-work item, implemented.
+    BlockAmg,
+}
+
+#[derive(Clone, Debug)]
+pub struct DistIterOpts {
+    pub tol: f64,
+    pub max_iters: usize,
+    pub precond: DistPrecondKind,
+}
+
+impl Default for DistIterOpts {
+    fn default() -> Self {
+        DistIterOpts {
+            tol: 1e-10,
+            max_iters: 10_000,
+            precond: DistPrecondKind::Jacobi,
+        }
+    }
+}
+
+/// Build the local (per-rank) preconditioner over the owned diagonal
+/// block of the share.
+fn build_precond(a: &DistCsr, kind: &DistPrecondKind) -> Box<dyn Precond> {
+    let n_own = a.plan.n_own;
+    match kind {
+        DistPrecondKind::Jacobi => {
+            let diag: Vec<f64> = (0..n_own)
+                .map(|r| {
+                    let d = a.local.get(r, r);
+                    if d != 0.0 {
+                        d
+                    } else {
+                        1.0
+                    }
+                })
+                .collect();
+            Box::new(Jacobi::from_diag(&diag))
+        }
+        DistPrecondKind::BlockAmg => {
+            // extract the owned diagonal block (rows x owned cols)
+            let mut coo = crate::sparse::Coo::with_capacity(n_own, n_own, a.local.nnz());
+            for r in 0..n_own {
+                let (cols, vals) = a.local.row(r);
+                for (c, v) in cols.iter().zip(vals) {
+                    if *c < n_own {
+                        coo.push(r, *c, *v);
+                    }
+                }
+            }
+            let block = coo.to_csr();
+            match Amg::new(&block, &AmgOpts::default()) {
+                Ok(amg) => Box::new(amg),
+                Err(_) => {
+                    // degenerate block: fall back to Jacobi
+                    let diag: Vec<f64> = (0..n_own)
+                        .map(|r| {
+                            let d = block.get(r, r);
+                            if d != 0.0 {
+                                d
+                            } else {
+                                1.0
+                            }
+                        })
+                        .collect();
+                    Box::new(Jacobi::from_diag(&diag))
+                }
+            }
+        }
+    }
+}
+
+/// Per-rank report after a distributed solve.
+#[derive(Clone, Debug)]
+pub struct DistSolveReport {
+    pub x_own: Vec<f64>,
+    pub iters: usize,
+    pub residual: f64,
+    pub converged: bool,
+    /// Bytes this rank sent during the solve.
+    pub bytes_sent: u64,
+    /// Peak per-rank working set (matrix share + vectors).
+    pub peak_bytes: u64,
+}
+
+/// Distributed Jacobi-preconditioned CG; runs inside one rank's thread.
+/// `b_own` is this rank's slice of the RHS.
+pub fn dist_cg(
+    a: &DistCsr,
+    b_own: &[f64],
+    comm: &LocalComm,
+    opts: &DistIterOpts,
+) -> DistSolveReport {
+    let n_own = a.plan.n_own;
+    let n_ext = n_own + a.plan.n_halo();
+    assert_eq!(b_own.len(), n_own);
+    let bytes0 = comm.bytes_sent();
+
+    // local preconditioner (Jacobi, or block-AMG additive Schwarz)
+    let m = build_precond(a, &opts.precond);
+
+    let mut x = vec![0.0; n_own];
+    let mut r: Vec<f64> = b_own.to_vec();
+    let mut z = vec![0.0; n_own];
+    m.apply(&r, &mut z);
+    let mut p_ext = vec![0.0; n_ext];
+    p_ext[..n_own].copy_from_slice(&z);
+    let mut ap = vec![0.0; n_own];
+
+    let mut rz = comm.all_reduce_sum(dot(&r, &z));
+    let mut rr = comm.all_reduce_sum(dot(&r, &r));
+    let tol2 = opts.tol * opts.tol;
+    let mut iters = 0;
+    while iters < opts.max_iters && rr > tol2 {
+        dist_spmv(a, &mut p_ext, &mut ap, comm, 100 + iters as u64);
+        let pap = comm.all_reduce_sum(dot(&p_ext[..n_own], &ap));
+        if pap <= 0.0 || !pap.is_finite() {
+            break;
+        }
+        let alpha = rz / pap;
+        for i in 0..n_own {
+            x[i] += alpha * p_ext[i];
+            r[i] -= alpha * ap[i];
+        }
+        m.apply(&r, &mut z);
+        // <r,z> and <r,r> are available at the same point of the
+        // recurrence, so they ride ONE fused all_reduce (a packed
+        // 2-scalar NCCL buffer) — Algorithm 1's "two all_reduce per
+        // iteration" is exactly <p,Ap> plus this fused pair.
+        // (§Perf L3: was three rounds; fusing saved one latency unit.)
+        let fused = comm.all_reduce_sum_vec(&[dot(&r, &z), dot(&r, &r)]);
+        let (rz_new, rr_new) = (fused[0], fused[1]);
+        let beta = rz_new / rz;
+        for i in 0..n_own {
+            p_ext[i] = z[i] + beta * p_ext[i];
+        }
+        rz = rz_new;
+        rr = rr_new;
+        iters += 1;
+    }
+
+    let vec_bytes = ((n_own * 5 + n_ext) * 8) as u64;
+    DistSolveReport {
+        x_own: x,
+        iters,
+        residual: rr.sqrt(),
+        converged: rr <= tol2,
+        bytes_sent: comm.bytes_sent() - bytes0,
+        peak_bytes: a.bytes() + vec_bytes,
+    }
+}
+
+/// Single-reduction distributed CG (Chronopoulos & Gear 1989; the
+/// "pipelined / communication-avoiding CG" roadmap item of Appendix C).
+///
+/// Algebraically equivalent to [`dist_cg`] but restructured so the two
+/// inner products of each iteration — `<r,u>` and `<w,u>` (plus the
+/// `<r,r>` convergence check) — ride ONE fused `all_reduce` round,
+/// halving the per-iteration reduction latency that dominates at large
+/// P.  Composes with the same transposed-halo backward pass, since only
+/// the reductions are reorganized, not the SpMV (Appendix C).
+pub fn dist_cg_pipelined(
+    a: &DistCsr,
+    b_own: &[f64],
+    comm: &LocalComm,
+    opts: &DistIterOpts,
+) -> DistSolveReport {
+    let n_own = a.plan.n_own;
+    let n_ext = n_own + a.plan.n_halo();
+    assert_eq!(b_own.len(), n_own);
+    let bytes0 = comm.bytes_sent();
+
+    let m = build_precond(a, &opts.precond);
+
+    let mut x = vec![0.0; n_own];
+    let mut r: Vec<f64> = b_own.to_vec();
+    // u = M^-1 r lives in the extended (owned + halo) layout: it is the
+    // vector whose halo must be current for w = A u.
+    let mut u_ext = vec![0.0; n_ext];
+    let mut u_own = vec![0.0; n_own];
+    m.apply(&r, &mut u_own);
+    u_ext[..n_own].copy_from_slice(&u_own);
+    let mut w = vec![0.0; n_own];
+    dist_spmv(a, &mut u_ext, &mut w, comm, 50);
+
+    let fused = comm.all_reduce_sum_vec(&[
+        dot(&r, &u_ext[..n_own]),
+        dot(&w, &u_ext[..n_own]),
+        dot(&r, &r),
+    ]);
+    let (mut gamma, delta0, mut rr) = (fused[0], fused[1], fused[2]);
+
+    let mut p = vec![0.0; n_own];
+    let mut s = vec![0.0; n_own]; // s = A p
+    let mut alpha = if delta0 > 0.0 { gamma / delta0 } else { 0.0 };
+    let mut beta = 0.0_f64;
+    let tol2 = opts.tol * opts.tol;
+    let mut iters = 0;
+    while iters < opts.max_iters && rr > tol2 && alpha.is_finite() && alpha != 0.0 {
+        // p = u + beta p ; s = w + beta s  (beta = 0 on the first pass)
+        for i in 0..n_own {
+            p[i] = u_ext[i] + beta * p[i];
+            s[i] = w[i] + beta * s[i];
+        }
+        // x += alpha p ; r -= alpha s ; u = M^-1 r
+        for i in 0..n_own {
+            x[i] += alpha * p[i];
+            r[i] -= alpha * s[i];
+        }
+        m.apply(&r, &mut u_own);
+        u_ext[..n_own].copy_from_slice(&u_own);
+        // w = A u (one halo exchange)
+        dist_spmv(a, &mut u_ext, &mut w, comm, 150 + iters as u64);
+        // ONE fused reduction: gamma_new = <r,u>, delta = <w,u>, rr = <r,r>
+        let fused = comm.all_reduce_sum_vec(&[
+            dot(&r, &u_ext[..n_own]),
+            dot(&w, &u_ext[..n_own]),
+            dot(&r, &r),
+        ]);
+        let (gamma_new, delta, rr_new) = (fused[0], fused[1], fused[2]);
+        rr = rr_new;
+        iters += 1;
+        if rr <= tol2 {
+            break;
+        }
+        beta = gamma_new / gamma;
+        let denom = delta - beta / alpha * gamma_new;
+        if denom <= 0.0 || !denom.is_finite() {
+            break; // breakdown: report current iterate
+        }
+        alpha = gamma_new / denom;
+        gamma = gamma_new;
+    }
+
+    let vec_bytes = ((n_own * 6 + n_ext) * 8) as u64;
+    DistSolveReport {
+        x_own: x,
+        iters,
+        residual: rr.sqrt(),
+        converged: rr <= tol2,
+        bytes_sent: comm.bytes_sent() - bytes0,
+        peak_bytes: a.bytes() + vec_bytes,
+    }
+}
+
+/// Distributed BiCGStab for general systems (same halo/reduce template).
+pub fn dist_bicgstab(
+    a: &DistCsr,
+    b_own: &[f64],
+    comm: &LocalComm,
+    opts: &DistIterOpts,
+) -> DistSolveReport {
+    let n_own = a.plan.n_own;
+    let n_ext = n_own + a.plan.n_halo();
+    let bytes0 = comm.bytes_sent();
+
+    let mut x = vec![0.0; n_own];
+    let mut r: Vec<f64> = b_own.to_vec();
+    let r0: Vec<f64> = b_own.to_vec();
+    let mut p_ext = vec![0.0; n_ext];
+    let mut s_ext = vec![0.0; n_ext];
+    let mut v = vec![0.0; n_own];
+    let mut t = vec![0.0; n_own];
+
+    let mut rho = 1.0f64;
+    let mut alpha = 1.0f64;
+    let mut omega = 1.0f64;
+    let mut rr = comm.all_reduce_sum(dot(&r, &r));
+    let tol2 = opts.tol * opts.tol;
+    let mut iters = 0;
+    let mut tag = 10_000u64;
+    while iters < opts.max_iters && rr > tol2 {
+        let rho_new = comm.all_reduce_sum(dot(&r0, &r));
+        if rho_new == 0.0 {
+            break;
+        }
+        if iters == 0 {
+            p_ext[..n_own].copy_from_slice(&r);
+        } else {
+            let beta = (rho_new / rho) * (alpha / omega);
+            for i in 0..n_own {
+                p_ext[i] = r[i] + beta * (p_ext[i] - omega * v[i]);
+            }
+        }
+        rho = rho_new;
+        tag += 1;
+        dist_spmv(a, &mut p_ext, &mut v, comm, tag);
+        let r0v = comm.all_reduce_sum(dot(&r0, &v));
+        if r0v == 0.0 {
+            break;
+        }
+        alpha = rho / r0v;
+        for i in 0..n_own {
+            s_ext[i] = r[i] - alpha * v[i];
+        }
+        let ss = comm.all_reduce_sum(dot(&s_ext[..n_own], &s_ext[..n_own]));
+        if ss <= tol2 {
+            for i in 0..n_own {
+                x[i] += alpha * p_ext[i];
+            }
+            rr = ss;
+            iters += 1;
+            break;
+        }
+        tag += 1;
+        dist_spmv(a, &mut s_ext, &mut t, comm, tag);
+        let tt = comm.all_reduce_sum(dot(&t, &t));
+        if tt == 0.0 {
+            break;
+        }
+        let ts = comm.all_reduce_sum(dot(&t, &s_ext[..n_own]));
+        omega = ts / tt;
+        for i in 0..n_own {
+            x[i] += alpha * p_ext[i] + omega * s_ext[i];
+            r[i] = s_ext[i] - omega * t[i];
+        }
+        rr = comm.all_reduce_sum(dot(&r, &r));
+        iters += 1;
+        if omega == 0.0 {
+            break;
+        }
+    }
+
+    let vec_bytes = ((n_own * 6 + 2 * n_ext) * 8) as u64;
+    DistSolveReport {
+        x_own: x,
+        iters,
+        residual: rr.sqrt(),
+        converged: rr <= tol2,
+        bytes_sent: comm.bytes_sent() - bytes0,
+        peak_bytes: a.bytes() + vec_bytes,
+    }
+}
+
+/// Distributed LOBPCG for the k smallest eigenpairs (Jacobi
+/// preconditioned).  Returns (values, per-rank vector slices, iters).
+pub fn dist_lobpcg(
+    a: &DistCsr,
+    k: usize,
+    comm: &LocalComm,
+    tol: f64,
+    max_iters: usize,
+    seed: u64,
+) -> (Vec<f64>, Vec<Vec<f64>>, usize) {
+    let n_own = a.plan.n_own;
+    let n_ext = n_own + a.plan.n_halo();
+    // rank-deterministic start vectors: every rank generates ITS slice
+    let mut rng = crate::util::Prng::new(seed ^ ((comm.rank() as u64) << 32));
+    let inv_diag: Vec<f64> = (0..n_own)
+        .map(|r| {
+            let d = a.local.get(r, r);
+            if d != 0.0 {
+                1.0 / d
+            } else {
+                1.0
+            }
+        })
+        .collect();
+
+    let gdot = |comm: &LocalComm, a_: &[f64], b_: &[f64]| comm.all_reduce_sum(dot(a_, b_));
+    let mut tag = 1_000_000u64;
+    let mut spmv = |a: &DistCsr, x_own: &[f64], comm: &LocalComm| -> Vec<f64> {
+        let mut x_ext = vec![0.0; n_ext];
+        x_ext[..n_own].copy_from_slice(x_own);
+        let mut y = vec![0.0; n_own];
+        tag += 1;
+        dist_spmv(a, &mut x_ext, &mut y, comm, tag);
+        y
+    };
+
+    // distributed modified Gram-Schmidt
+    let orthonormalize = |vs: &mut Vec<Vec<f64>>, comm: &LocalComm| {
+        let mut out: Vec<Vec<f64>> = Vec::with_capacity(vs.len());
+        for v in vs.drain(..) {
+            let mut w = v;
+            for _ in 0..2 {
+                for u in &out {
+                    let c = gdot(comm, &w, u);
+                    for i in 0..w.len() {
+                        w[i] -= c * u[i];
+                    }
+                }
+            }
+            let nw = gdot(comm, &w, &w).sqrt();
+            if nw > 1e-10 {
+                for x in w.iter_mut() {
+                    *x /= nw;
+                }
+                out.push(w);
+            }
+        }
+        *vs = out;
+    };
+
+    let mut x: Vec<Vec<f64>> = (0..k).map(|_| rng.normal_vec(n_own)).collect();
+    orthonormalize(&mut x, comm);
+    let mut p: Vec<Vec<f64>> = Vec::new();
+    let mut values = vec![0.0; k];
+    let mut iters = 0;
+
+    for it in 0..max_iters {
+        iters = it + 1;
+        let ax: Vec<Vec<f64>> = x.iter().map(|xi| spmv(a, xi, comm)).collect();
+        let mut ws: Vec<Vec<f64>> = Vec::with_capacity(k);
+        let mut worst = 0.0f64;
+        for j in 0..k {
+            let lam = gdot(comm, &x[j], &ax[j]);
+            values[j] = lam;
+            let r: Vec<f64> = (0..n_own).map(|i| ax[j][i] - lam * x[j][i]).collect();
+            let rn = gdot(comm, &r, &r).sqrt();
+            worst = worst.max(rn / lam.abs().max(1.0));
+            ws.push(r.iter().zip(&inv_diag).map(|(a, d)| a * d).collect());
+        }
+        if worst < tol {
+            break;
+        }
+        let mut s: Vec<Vec<f64>> = Vec::with_capacity(3 * k);
+        s.extend(x.iter().cloned());
+        s.extend(ws);
+        s.extend(p.iter().cloned());
+        orthonormalize(&mut s, comm);
+        let d = s.len();
+        let as_: Vec<Vec<f64>> = s.iter().map(|si| spmv(a, si, comm)).collect();
+        let mut t = vec![0f64; d * d];
+        for i in 0..d {
+            for j in i..d {
+                let v = gdot(comm, &s[i], &as_[j]);
+                t[i * d + j] = v;
+                t[j * d + i] = v;
+            }
+        }
+        // Rayleigh-Ritz is replicated on every rank (dense d x d)
+        let (_tvals, tvecs) = crate::eigen::jacobi_eigh(&t, d);
+        let x_new: Vec<Vec<f64>> = (0..k)
+            .map(|j| {
+                let mut v = vec![0.0; n_own];
+                for (i, si) in s.iter().enumerate() {
+                    let c = tvecs[j][i];
+                    for l in 0..n_own {
+                        v[l] += c * si[l];
+                    }
+                }
+                v
+            })
+            .collect();
+        let mut p_new = Vec::with_capacity(k);
+        for j in 0..k {
+            let mut pj = x_new[j].clone();
+            for xi in &x {
+                let c = gdot(comm, xi, &x_new[j]);
+                for l in 0..n_own {
+                    pj[l] -= c * xi[l];
+                }
+            }
+            let np = gdot(comm, &pj, &pj).sqrt();
+            if np > 1e-12 {
+                for v in pj.iter_mut() {
+                    *v /= np;
+                }
+                p_new.push(pj);
+            }
+        }
+        x = x_new;
+        orthonormalize(&mut x, comm);
+        p = p_new;
+    }
+
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by(|&i, &j| values[i].partial_cmp(&values[j]).unwrap());
+    (
+        order.iter().map(|&i| values[i]).collect(),
+        order.iter().map(|&i| x[i].clone()).collect(),
+        iters,
+    )
+}
+
+/// Distributed adjoint linear solve (paper §3.3 "Autograd composition"):
+/// forward dist CG for x, backward dist CG for lambda (A = A^T here),
+/// local O(nnz_own) matrix-gradient assembly using one extra halo
+/// exchange to refresh x's halo values.  No other communication.
+pub struct DistAdjointResult {
+    pub x_own: Vec<f64>,
+    pub lambda_own: Vec<f64>,
+    /// dL/db restricted to owned entries ( = lambda).
+    pub db_own: Vec<f64>,
+    /// dL/dA on this rank's owned non-zeros (local CSR layout).
+    pub dvals_own: Vec<f64>,
+    pub forward: DistSolveReport,
+    pub backward: DistSolveReport,
+}
+
+pub fn dist_solve_adjoint(
+    a: &DistCsr,
+    b_own: &[f64],
+    gy_own: &[f64],
+    comm: &LocalComm,
+    opts: &DistIterOpts,
+) -> DistAdjointResult {
+    let forward = dist_cg(a, b_own, comm, opts);
+    let backward = dist_cg(a, gy_own, comm, opts); // A^T = A (SPD)
+    let n_ext = a.plan.n_own + a.plan.n_halo();
+    // refresh halo copies of x for the outer product
+    let mut x_ext = vec![0.0; n_ext];
+    x_ext[..a.plan.n_own].copy_from_slice(&forward.x_own);
+    super::halo::halo_exchange(&a.plan, &mut x_ext, comm, 424_242);
+    // dA_ij = -lambda_i x_j on owned rows (local indices)
+    let mut dvals = vec![0.0; a.local.nnz()];
+    for r in 0..a.plan.n_own {
+        let lam_r = backward.x_own[r];
+        let lo = a.local.indptr[r];
+        let hi = a.local.indptr[r + 1];
+        for kk in lo..hi {
+            dvals[kk] = -lam_r * x_ext[a.local.indices[kk]];
+        }
+    }
+    DistAdjointResult {
+        x_own: forward.x_own.clone(),
+        lambda_own: backward.x_own.clone(),
+        db_own: backward.x_own.clone(),
+        dvals_own: dvals,
+        forward,
+        backward,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distributed::comm::run_ranks;
+    use crate::distributed::halo::distribute;
+    use crate::distributed::partition::{partition, PartitionStrategy};
+    use crate::sparse::poisson::{kappa_star, poisson2d};
+    use crate::util::{self, Prng};
+    use std::sync::Arc;
+
+    fn dist_setup(g: usize, nparts: usize) -> (crate::sparse::Csr, super::super::Partition, Arc<Vec<DistCsr>>) {
+        let sys = poisson2d(g, Some(&kappa_star(g)));
+        let part = partition(&sys.matrix, Some(&sys.coords), nparts, PartitionStrategy::Contiguous);
+        let a_perm = sys.matrix.permute_sym(&part.perm);
+        let parts = Arc::new(distribute(&a_perm, &part));
+        (a_perm, part, parts)
+    }
+
+    #[test]
+    fn dist_cg_matches_serial_solution() {
+        let g = 16;
+        let nparts = 4;
+        let (a_perm, part, parts) = dist_setup(g, nparts);
+        let n = g * g;
+        let mut rng = Prng::new(0);
+        let b = Arc::new(rng.normal_vec(n));
+        let part2 = Arc::new(part);
+        let bc = b.clone();
+        let p2 = part2.clone();
+        let reports = run_ranks(nparts, move |c| {
+            let p = c.rank();
+            let range = p2.rank_range(p);
+            dist_cg(&parts[p], &bc[range], &c, &DistIterOpts::default())
+        });
+        let x: Vec<f64> = reports.iter().flat_map(|r| r.x_own.clone()).collect();
+        assert!(reports.iter().all(|r| r.converged));
+        assert!(util::rel_l2(&a_perm.matvec(&x), &b) < 1e-8);
+        // communication happened
+        assert!(reports.iter().any(|r| r.bytes_sent > 0));
+    }
+
+    #[test]
+    fn pipelined_cg_matches_standard_cg_with_half_the_reductions() {
+        let g = 20;
+        let nparts = 4;
+        let (a_perm, part, parts) = dist_setup(g, nparts);
+        let n = g * g;
+        let mut rng = Prng::new(3);
+        let b = Arc::new(rng.normal_vec(n));
+        let part2 = Arc::new(part);
+
+        // standard two-reduction CG
+        let (bc, p2, ps) = (b.clone(), part2.clone(), parts.clone());
+        let std_out = run_ranks(nparts, move |c| {
+            let p = c.rank();
+            let range = p2.rank_range(p);
+            let rep = dist_cg(&ps[p], &bc[range], &c, &DistIterOpts::default());
+            (rep, c.reduce_rounds())
+        });
+        // single-reduction (pipelined) CG
+        let (bc, p2, ps) = (b.clone(), part2.clone(), parts.clone());
+        let pip_out = run_ranks(nparts, move |c| {
+            let p = c.rank();
+            let range = p2.rank_range(p);
+            let rep = dist_cg_pipelined(&ps[p], &bc[range], &c, &DistIterOpts::default());
+            (rep, c.reduce_rounds())
+        });
+
+        let x_std: Vec<f64> = std_out.iter().flat_map(|(r, _)| r.x_own.clone()).collect();
+        let x_pip: Vec<f64> = pip_out.iter().flat_map(|(r, _)| r.x_own.clone()).collect();
+        assert!(std_out.iter().all(|(r, _)| r.converged));
+        assert!(pip_out.iter().all(|(r, _)| r.converged));
+        assert!(util::rel_l2(&a_perm.matvec(&x_std), &b) < 1e-8);
+        assert!(util::rel_l2(&a_perm.matvec(&x_pip), &b) < 1e-8);
+        assert!(util::rel_l2(&x_pip, &x_std) < 1e-6);
+
+        // iteration counts agree to within a couple (same Krylov space)
+        let it_std = std_out[0].0.iters;
+        let it_pip = pip_out[0].0.iters;
+        assert!(
+            (it_std as i64 - it_pip as i64).abs() <= 3,
+            "iters diverged: std {it_std} vs pipelined {it_pip}"
+        );
+
+        // the headline: reduction ROUNDS per iteration drop from 2
+        // (<p,Ap>; fused <r,z>+<r,r>) to 1 (everything fused)
+        let rounds_std = std_out[0].1 as f64 / it_std as f64;
+        let rounds_pip = pip_out[0].1 as f64 / it_pip as f64;
+        assert!(
+            rounds_std > 1.9 && rounds_std < 2.2,
+            "standard CG should cost ~2 reduction rounds/iter, got {rounds_std:.2}"
+        );
+        assert!(
+            rounds_pip < 1.2,
+            "pipelined CG should cost ~1 reduction round/iter, got {rounds_pip:.2}"
+        );
+    }
+
+    #[test]
+    fn block_amg_precond_converges_much_faster_than_jacobi() {
+        // The §5 future-work item: at fixed iteration budget the AMG
+        // additive-Schwarz residual must be orders of magnitude below
+        // Jacobi's (and it must still match the serial solution).
+        let g = 32;
+        let nparts = 4;
+        let (a_perm, part, parts) = dist_setup(g, nparts);
+        let n = g * g;
+        let mut rng = Prng::new(5);
+        let b = Arc::new(rng.normal_vec(n));
+        let part2 = Arc::new(part);
+
+        let run = |kind: DistPrecondKind| {
+            let (bc, p2, ps) = (b.clone(), part2.clone(), parts.clone());
+            run_ranks(nparts, move |c| {
+                let p = c.rank();
+                let range = p2.rank_range(p);
+                dist_cg(
+                    &ps[p],
+                    &bc[range],
+                    &c,
+                    &DistIterOpts {
+                        tol: 1e-11,
+                        max_iters: 10_000,
+                        precond: kind.clone(),
+                    },
+                )
+            })
+        };
+        let jac = run(DistPrecondKind::Jacobi);
+        let amg = run(DistPrecondKind::BlockAmg);
+        assert!(jac.iter().all(|r| r.converged));
+        assert!(amg.iter().all(|r| r.converged));
+        let x_amg: Vec<f64> = amg.iter().flat_map(|r| r.x_own.clone()).collect();
+        assert!(util::rel_l2(&a_perm.matvec(&x_amg), &b) < 1e-8);
+        // convergence acceleration
+        assert!(
+            amg[0].iters * 3 < jac[0].iters,
+            "block-AMG ({}) must beat Jacobi ({}) by >3x in iterations",
+            amg[0].iters,
+            jac[0].iters
+        );
+    }
+
+    #[test]
+    fn pipelined_cg_fixed_budget_unconverged() {
+        let (_, part, parts) = dist_setup(24, 3);
+        let part2 = Arc::new(part);
+        let reports = run_ranks(3, move |c| {
+            let p = c.rank();
+            let n_own = part2.rank_size(p);
+            dist_cg_pipelined(
+                &parts[p],
+                &vec![1.0; n_own],
+                &c,
+                &DistIterOpts {
+                    tol: 1e-14,
+                    max_iters: 10,
+                ..Default::default()
+            },
+            )
+        });
+        for r in &reports {
+            assert!(!r.converged);
+            assert!(r.residual > 0.0);
+        }
+    }
+
+    #[test]
+    fn dist_cg_fixed_budget_unconverged() {
+        let (_, part, parts) = dist_setup(24, 3);
+        let part2 = Arc::new(part);
+        let reports = run_ranks(3, move |c| {
+            let p = c.rank();
+            let n_own = part2.rank_size(p);
+            dist_cg(
+                &parts[p],
+                &vec![1.0; n_own],
+                &c,
+                &DistIterOpts {
+                    tol: 1e-14,
+                    max_iters: 10,
+                ..Default::default()
+            },
+            )
+        });
+        for r in &reports {
+            assert!(!r.converged);
+            assert_eq!(r.iters, 10);
+            assert!(r.residual > 0.0);
+        }
+    }
+
+    #[test]
+    fn dist_bicgstab_solves_spd_too() {
+        let g = 12;
+        let (a_perm, part, parts) = dist_setup(g, 3);
+        let n = g * g;
+        let mut rng = Prng::new(1);
+        let b = Arc::new(rng.normal_vec(n));
+        let part2 = Arc::new(part);
+        let bc = b.clone();
+        let reports = run_ranks(3, move |c| {
+            let p = c.rank();
+            let range = part2.rank_range(p);
+            dist_bicgstab(&parts[p], &bc[range], &c, &DistIterOpts::default())
+        });
+        let x: Vec<f64> = reports.iter().flat_map(|r| r.x_own.clone()).collect();
+        assert!(util::rel_l2(&a_perm.matvec(&x), &b) < 1e-7);
+    }
+
+    #[test]
+    fn dist_lobpcg_matches_serial() {
+        let g = 10;
+        let sys = poisson2d(g, None);
+        let part = partition(&sys.matrix, Some(&sys.coords), 3, PartitionStrategy::Contiguous);
+        let a_perm = sys.matrix.permute_sym(&part.perm);
+        let parts = Arc::new(distribute(&a_perm, &part));
+        let serial = crate::eigen::lanczos(
+            &sys.matrix,
+            2,
+            crate::eigen::lanczos::Which::Smallest,
+            80,
+            0,
+        );
+        let vals = run_ranks(3, move |c| {
+            let p = c.rank();
+            let (values, _, _) = dist_lobpcg(&parts[p], 2, &c, 1e-9, 300, 7);
+            values
+        });
+        for v in &vals {
+            for (a, b) in v.iter().zip(&serial.values) {
+                assert!((a - b).abs() < 1e-5 * b, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn dist_adjoint_matches_serial_adjoint() {
+        let g = 10;
+        let nparts = 4;
+        let (a_perm, part, parts) = dist_setup(g, nparts);
+        let n = g * g;
+        let mut rng = Prng::new(2);
+        let b = Arc::new(rng.normal_vec(n));
+        let gy = Arc::new(rng.normal_vec(n));
+
+        // serial reference
+        let x_ref = crate::direct::direct_solve(&a_perm, &b).unwrap();
+        let lam_ref = crate::direct::direct_solve(&a_perm, &gy).unwrap();
+
+        let part2 = Arc::new(part);
+        let (bc, gc, p2) = (b.clone(), gy.clone(), part2.clone());
+        let results = run_ranks(nparts, move |c| {
+            let p = c.rank();
+            let range = p2.rank_range(p);
+            dist_solve_adjoint(
+                &parts[p],
+                &bc[range.clone()],
+                &gc[range],
+                &c,
+                &DistIterOpts {
+                    tol: 1e-12,
+                    max_iters: 20_000,
+                ..Default::default()
+            },
+            )
+        });
+        let x: Vec<f64> = results.iter().flat_map(|r| r.x_own.clone()).collect();
+        let lam: Vec<f64> = results.iter().flat_map(|r| r.lambda_own.clone()).collect();
+        assert!(util::rel_l2(&x, &x_ref) < 1e-6);
+        assert!(util::rel_l2(&lam, &lam_ref) < 1e-6);
+        // matrix gradient: every owned entry must equal -lambda_i x_j
+        // (map local column indices back to global through the halo plan)
+        let (_, part3, parts3) = dist_setup(g, nparts);
+        for (p, res) in results.iter().enumerate() {
+            let range = part3.rank_range(p);
+            let share = &parts3[p];
+            for r_local in 0..share.plan.n_own {
+                let r_global = range.start + r_local;
+                let lo = share.local.indptr[r_local];
+                let hi = share.local.indptr[r_local + 1];
+                for kk in lo..hi {
+                    let lc = share.local.indices[kk];
+                    let c_global = if lc < share.plan.n_own {
+                        range.start + lc
+                    } else {
+                        share.plan.halo_globals[lc - share.plan.n_own]
+                    };
+                    let want = -lam_ref[r_global] * x_ref[c_global];
+                    assert!(
+                        (res.dvals_own[kk] - want).abs() < 1e-5 * (1.0 + want.abs()),
+                        "rank {p} entry ({r_global},{c_global}): {} vs {want}",
+                        res.dvals_own[kk]
+                    );
+                }
+            }
+        }
+    }
+}

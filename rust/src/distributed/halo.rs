@@ -1,0 +1,307 @@
+//! Halo plan + distributed SpMV with forward (H) and transposed (H^T)
+//! exchanges (paper §3.3, Eqs. 5-6).
+//!
+//! Local index space of rank p: `[0, n_own)` are owned rows (new/global
+//! indices `offsets[p]..offsets[p+1]`), `[n_own, n_own + n_halo)` are
+//! halo copies of remote entries referenced by locally owned rows.
+
+use super::comm::LocalComm;
+use super::partition::Partition;
+use crate::sparse::{Coo, Csr};
+
+/// Communication plan for one rank.
+#[derive(Clone, Debug)]
+pub struct HaloPlan {
+    pub rank: usize,
+    pub n_own: usize,
+    /// Global (new-space) indices of halo slots, grouped by owner.
+    pub halo_globals: Vec<usize>,
+    /// (neighbor rank, local-owned indices to SEND to that neighbor).
+    pub send: Vec<(usize, Vec<usize>)>,
+    /// (neighbor rank, halo-slot offsets to RECEIVE into), aligned with
+    /// the neighbor's send list for us.
+    pub recv: Vec<(usize, Vec<usize>)>,
+}
+
+impl HaloPlan {
+    pub fn n_halo(&self) -> usize {
+        self.halo_globals.len()
+    }
+
+    /// Bytes moved by one forward exchange from this rank.
+    pub fn send_bytes(&self) -> u64 {
+        self.send.iter().map(|(_, v)| (v.len() * 8) as u64).sum()
+    }
+}
+
+/// One rank's share of the matrix: owned rows with columns remapped to
+/// the local index space.
+#[derive(Clone, Debug)]
+pub struct DistCsr {
+    pub local: Csr,
+    pub plan: HaloPlan,
+}
+
+impl DistCsr {
+    /// Bytes held by this rank's matrix share (per-GPU memory column in
+    /// Table 4).
+    pub fn bytes(&self) -> u64 {
+        crate::metrics::mem::csr_bytes(self.local.nrows, self.local.nnz())
+    }
+}
+
+/// Partition the (already permuted) global matrix into per-rank shares.
+/// `a_perm` must be `a.permute_sym(&partition.perm)`.
+pub fn distribute(a_perm: &Csr, part: &Partition) -> Vec<DistCsr> {
+    let nparts = part.nparts;
+    // 1. per-rank halo sets
+    let mut halos: Vec<Vec<usize>> = vec![Vec::new(); nparts];
+    for p in 0..nparts {
+        let range = part.rank_range(p);
+        let mut set = std::collections::BTreeSet::new();
+        for r in range.clone() {
+            for &c in a_perm.row(r).0 {
+                if !range.contains(&c) {
+                    set.insert(c);
+                }
+            }
+        }
+        halos[p] = set.into_iter().collect();
+    }
+    // 2. send/recv lists: p receives halo g from owner q; so q sends its
+    //    local (g - offset_q) to p.
+    let mut send: Vec<std::collections::BTreeMap<usize, Vec<usize>>> =
+        vec![std::collections::BTreeMap::new(); nparts];
+    let mut recv: Vec<std::collections::BTreeMap<usize, Vec<usize>>> =
+        vec![std::collections::BTreeMap::new(); nparts];
+    for p in 0..nparts {
+        for (slot, &g) in halos[p].iter().enumerate() {
+            let q = part.owner_of_new(g);
+            debug_assert_ne!(p, q);
+            send[q].entry(p).or_default().push(g - part.offsets[q]);
+            recv[p].entry(q).or_default().push(slot);
+        }
+    }
+    // 3. local matrices with remapped columns
+    (0..nparts)
+        .map(|p| {
+            let range = part.rank_range(p);
+            let n_own = range.len();
+            let halo_index: std::collections::HashMap<usize, usize> = halos[p]
+                .iter()
+                .enumerate()
+                .map(|(slot, &g)| (g, n_own + slot))
+                .collect();
+            let mut coo = Coo::with_capacity(n_own, n_own + halos[p].len(), a_perm.nnz() / nparts + 1);
+            for (li, r) in range.clone().enumerate() {
+                let (cols, vals) = a_perm.row(r);
+                for (c, v) in cols.iter().zip(vals) {
+                    let lc = if range.contains(c) {
+                        c - range.start
+                    } else {
+                        halo_index[c]
+                    };
+                    coo.push(li, lc, *v);
+                }
+            }
+            DistCsr {
+                local: coo.to_csr(),
+                plan: HaloPlan {
+                    rank: p,
+                    n_own,
+                    halo_globals: halos[p].clone(),
+                    send: send[p].iter().map(|(k, v)| (*k, v.clone())).collect(),
+                    recv: recv[p].iter().map(|(k, v)| (*k, v.clone())).collect(),
+                },
+            }
+        })
+        .collect()
+}
+
+/// Forward halo exchange H: fill `x_ext[n_own..]` with neighbor-owned
+/// values.  `x_ext` holds owned values in `[0, n_own)`.
+pub fn halo_exchange(plan: &HaloPlan, x_ext: &mut [f64], comm: &LocalComm, tag: u64) {
+    for (q, idxs) in &plan.send {
+        let payload: Vec<f64> = idxs.iter().map(|&i| x_ext[i]).collect();
+        comm.send(*q, tag, payload);
+    }
+    for (q, slots) in &plan.recv {
+        let data = comm.recv(*q, tag);
+        debug_assert_eq!(data.len(), slots.len());
+        for (&slot, &v) in slots.iter().zip(&data) {
+            x_ext[plan.n_own + slot] = v;
+        }
+    }
+}
+
+/// Transposed halo exchange H^T (paper Eq. 6): send halo-slot gradients
+/// BACK to their owners, which SUM them into owned entries.  Same
+/// neighbor graph and message sizes as H, reversed roles.
+pub fn halo_exchange_adjoint(plan: &HaloPlan, g_ext: &mut [f64], comm: &LocalComm, tag: u64) {
+    // reverse of recv: we send the halo gradients to the owner q
+    for (q, slots) in &plan.recv {
+        let payload: Vec<f64> = slots.iter().map(|&s| g_ext[plan.n_own + s]).collect();
+        comm.send(*q, tag, payload);
+    }
+    // reverse of send: owners receive and accumulate into owned entries
+    for (q, idxs) in &plan.send {
+        let data = comm.recv(*q, tag);
+        debug_assert_eq!(data.len(), idxs.len());
+        for (&i, &v) in idxs.iter().zip(&data) {
+            g_ext[i] += v;
+        }
+    }
+}
+
+/// Distributed SpMV: y_own = A_local * H(x_own) (Eq. 5).
+/// `x_ext` is the rank's (n_own + n_halo) workspace with owned values
+/// already in place; halo slots are refreshed here.
+pub fn dist_spmv(
+    a: &DistCsr,
+    x_ext: &mut [f64],
+    y_own: &mut [f64],
+    comm: &LocalComm,
+    tag: u64,
+) {
+    halo_exchange(&a.plan, x_ext, comm, tag);
+    a.local.spmv(x_ext, y_own);
+}
+
+/// Adjoint of the distributed SpMV: given dL/dy_own, produce dL/dx_own
+/// = H^T (A_local^T dL/dy) — the backward path of Eq. 6.
+pub fn dist_spmv_adjoint(
+    a: &DistCsr,
+    gy_own: &[f64],
+    gx_own: &mut [f64],
+    comm: &LocalComm,
+    tag: u64,
+) {
+    let n_ext = a.plan.n_own + a.plan.n_halo();
+    let mut g_ext = vec![0.0; n_ext];
+    a.local.spmv_t(gy_own, &mut g_ext);
+    halo_exchange_adjoint(&a.plan, &mut g_ext, comm, tag);
+    gx_own.copy_from_slice(&g_ext[..a.plan.n_own]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distributed::comm::run_ranks;
+    use crate::distributed::partition::{partition, PartitionStrategy};
+    use crate::sparse::poisson::poisson2d;
+    use crate::util::{self, dot, Prng};
+    use std::sync::Arc;
+
+    fn setup(g: usize, nparts: usize) -> (Csr, Partition, Vec<DistCsr>) {
+        let sys = poisson2d(g, None);
+        let part = partition(&sys.matrix, Some(&sys.coords), nparts, PartitionStrategy::Contiguous);
+        let a_perm = sys.matrix.permute_sym(&part.perm);
+        let parts = distribute(&a_perm, &part);
+        (a_perm, part, parts)
+    }
+
+    #[test]
+    fn distributed_spmv_matches_global() {
+        let (a_perm, part, parts) = setup(12, 4);
+        let n = a_perm.nrows;
+        let mut rng = Prng::new(0);
+        let x = rng.normal_vec(n);
+        let want = a_perm.matvec(&x);
+
+        let parts = Arc::new(parts);
+        let part2 = Arc::new(part);
+        let x2 = Arc::new(x);
+        let results = run_ranks(4, move |c| {
+            let p = c.rank();
+            let a = &parts[p];
+            let range = part2.rank_range(p);
+            let mut x_ext = vec![0.0; a.plan.n_own + a.plan.n_halo()];
+            x_ext[..a.plan.n_own].copy_from_slice(&x2[range.clone()]);
+            let mut y = vec![0.0; a.plan.n_own];
+            dist_spmv(a, &mut x_ext, &mut y, &c, 1);
+            y
+        });
+        let got: Vec<f64> = results.concat();
+        assert!(util::max_abs_diff(&got, &want) < 1e-12);
+    }
+
+    /// THE adjoint identity: <H x, y> = <x, H^T y> lifted to the full
+    /// SpMV — <A x, y>_global = <x, A^T y>_global when computed via
+    /// dist_spmv and dist_spmv_adjoint.
+    #[test]
+    fn halo_adjoint_identity() {
+        let (a_perm, part, parts) = setup(10, 3);
+        let n = a_perm.nrows;
+        let mut rng = Prng::new(1);
+        let x = Arc::new(rng.normal_vec(n));
+        let y = Arc::new(rng.normal_vec(n));
+        let parts = Arc::new(parts);
+        let part2 = Arc::new(part);
+
+        let (xc, yc) = (x.clone(), y.clone());
+        let lhs_rhs = run_ranks(3, move |c| {
+            let p = c.rank();
+            let a = &parts[p];
+            let range = part2.rank_range(p);
+            // forward: <A x, y> on this rank's rows
+            let mut x_ext = vec![0.0; a.plan.n_own + a.plan.n_halo()];
+            x_ext[..a.plan.n_own].copy_from_slice(&xc[range.clone()]);
+            let mut ax = vec![0.0; a.plan.n_own];
+            dist_spmv(a, &mut x_ext, &mut ax, &c, 1);
+            let lhs_local = dot(&ax, &yc[range.clone()]);
+            let lhs = c.all_reduce_sum(lhs_local);
+            // adjoint: <x, A^T y> via dist_spmv_adjoint
+            let mut gx = vec![0.0; a.plan.n_own];
+            dist_spmv_adjoint(a, &yc[range.clone()], &mut gx, &c, 2);
+            let rhs_local = dot(&gx, &xc[range.clone()]);
+            let rhs = c.all_reduce_sum(rhs_local);
+            (lhs, rhs)
+        });
+        for (lhs, rhs) in lhs_rhs {
+            assert!(
+                (lhs - rhs).abs() < 1e-10 * lhs.abs().max(1.0),
+                "<Ax,y>={lhs} vs <x,A^Ty>={rhs}"
+            );
+        }
+    }
+
+    #[test]
+    fn halo_sizes_follow_surface_law() {
+        // |H_p| ~ O((n/P)^(1/2)) on 2D grids (paper §3.3)
+        let (_, _, parts16) = setup(16, 4);
+        let (_, _, parts32) = setup(32, 4);
+        let h16: usize = parts16.iter().map(|p| p.plan.n_halo()).max().unwrap();
+        let h32: usize = parts32.iter().map(|p| p.plan.n_halo()).max().unwrap();
+        // n quadruples; halo should ~double (sqrt growth), allow slack
+        assert!(
+            h32 <= 3 * h16,
+            "halo grew superlinearly: {h16} -> {h32}"
+        );
+    }
+
+    #[test]
+    fn rcb_partition_also_correct() {
+        let g = 12;
+        let sys = poisson2d(g, None);
+        let part = partition(&sys.matrix, Some(&sys.coords), 4, PartitionStrategy::Rcb);
+        let a_perm = sys.matrix.permute_sym(&part.perm);
+        let parts = Arc::new(distribute(&a_perm, &part));
+        let n = g * g;
+        let mut rng = Prng::new(2);
+        let x = Arc::new(rng.normal_vec(n));
+        let want = a_perm.matvec(&x);
+        let part2 = Arc::new(part);
+        let results = run_ranks(4, move |c| {
+            let p = c.rank();
+            let a = &parts[p];
+            let range = part2.rank_range(p);
+            let mut x_ext = vec![0.0; a.plan.n_own + a.plan.n_halo()];
+            x_ext[..a.plan.n_own].copy_from_slice(&x[range.clone()]);
+            let mut y = vec![0.0; a.plan.n_own];
+            dist_spmv(a, &mut x_ext, &mut y, &c, 3);
+            y
+        });
+        let got: Vec<f64> = results.concat();
+        assert!(util::max_abs_diff(&got, &want) < 1e-12);
+    }
+}

@@ -1,0 +1,163 @@
+//! Dense symmetric eigensolver (cyclic Jacobi rotations).
+//!
+//! Used for the Rayleigh–Ritz projections inside Lanczos/LOBPCG (the
+//! projected problems are at most ~3k x 3k) and as the exact reference
+//! in eigensolver tests.  Row-major storage.
+
+/// Eigendecomposition of a symmetric matrix `a` (row-major n x n).
+/// Returns (values ascending, vectors) with `vectors[j]` the unit
+/// eigenvector of `values[j]`.
+pub fn jacobi_eigh(a: &[f64], n: usize) -> (Vec<f64>, Vec<Vec<f64>>) {
+    assert_eq!(a.len(), n * n);
+    let mut m = a.to_vec();
+    // v = identity; accumulates rotations (columns are eigenvectors)
+    let mut v = vec![0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    let max_sweeps = 100;
+    for _sweep in 0..max_sweeps {
+        // off-diagonal Frobenius norm
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in i + 1..n {
+                off += m[i * n + j] * m[i * n + j];
+            }
+        }
+        if off.sqrt() < 1e-14 * (1.0 + frob(&m, n)) {
+            break;
+        }
+        for p in 0..n {
+            for q in p + 1..n {
+                let apq = m[p * n + q];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[p * n + p];
+                let aqq = m[q * n + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p, q of m
+                for k in 0..n {
+                    let mkp = m[k * n + p];
+                    let mkq = m[k * n + q];
+                    m[k * n + p] = c * mkp - s * mkq;
+                    m[k * n + q] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[p * n + k];
+                    let mqk = m[q * n + k];
+                    m[p * n + k] = c * mpk - s * mqk;
+                    m[q * n + k] = s * mpk + c * mqk;
+                }
+                // accumulate rotation into v (columns)
+                for k in 0..n {
+                    let vkp = v[k * n + p];
+                    let vkq = v[k * n + q];
+                    v[k * n + p] = c * vkp - s * vkq;
+                    v[k * n + q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    // extract and sort
+    let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m[i * n + i], i)).collect();
+    pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let values: Vec<f64> = pairs.iter().map(|p| p.0).collect();
+    let vectors: Vec<Vec<f64>> = pairs
+        .iter()
+        .map(|&(_, col)| (0..n).map(|r| v[r * n + col]).collect())
+        .collect();
+    (values, vectors)
+}
+
+fn frob(m: &[f64], n: usize) -> f64 {
+    let _ = n;
+    m.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+/// Small dense row-major matmul helper used by the block eigensolvers:
+/// C (p x r) = A (p x q) * B (q x r).
+pub fn matmul(a: &[f64], b: &[f64], p: usize, q: usize, r: usize) -> Vec<f64> {
+    assert_eq!(a.len(), p * q);
+    assert_eq!(b.len(), q * r);
+    let mut c = vec![0f64; p * r];
+    for i in 0..p {
+        for k in 0..q {
+            let aik = a[i * q + k];
+            if aik == 0.0 {
+                continue;
+            }
+            for j in 0..r {
+                c[i * r + j] += aik * b[k * r + j];
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = vec![3.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 2.0];
+        let (vals, vecs) = jacobi_eigh(&a, 3);
+        assert!((vals[0] - 1.0).abs() < 1e-12);
+        assert!((vals[1] - 2.0).abs() < 1e-12);
+        assert!((vals[2] - 3.0).abs() < 1e-12);
+        assert!((vecs[0][1].abs() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_symmetric_reconstructs() {
+        let n = 12;
+        let mut rng = Prng::new(1);
+        let mut a = vec![0f64; n * n];
+        for i in 0..n {
+            for j in i..n {
+                let v = rng.normal();
+                a[i * n + j] = v;
+                a[j * n + i] = v;
+            }
+        }
+        let (vals, vecs) = jacobi_eigh(&a, n);
+        // A v = lambda v for each pair
+        for (lam, v) in vals.iter().zip(&vecs) {
+            for i in 0..n {
+                let av: f64 = (0..n).map(|j| a[i * n + j] * v[j]).sum();
+                assert!((av - lam * v[i]).abs() < 1e-9, "residual too large");
+            }
+            let norm: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            assert!((norm - 1.0).abs() < 1e-10);
+        }
+        // eigenvectors orthogonal
+        for i in 0..n {
+            for j in i + 1..n {
+                let d: f64 = vecs[i].iter().zip(&vecs[j]).map(|(a, b)| a * b).sum();
+                assert!(d.abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn two_by_two_known() {
+        // [[2, 1], [1, 2]] -> eigenvalues 1, 3
+        let a = vec![2.0, 1.0, 1.0, 2.0];
+        let (vals, _) = jacobi_eigh(&a, 2);
+        assert!((vals[0] - 1.0).abs() < 1e-12);
+        assert!((vals[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = vec![1.0, 2.0, 3.0, 4.0]; // 2x2
+        let b = vec![5.0, 6.0, 7.0, 8.0];
+        let c = matmul(&a, &b, 2, 2, 2);
+        assert_eq!(c, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+}

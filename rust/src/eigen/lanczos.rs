@@ -1,0 +1,179 @@
+//! Lanczos with full reorthogonalization for symmetric operators.
+
+use super::dense_sym::jacobi_eigh;
+use super::EigResult;
+use crate::iterative::LinOp;
+use crate::util::{dot, norm2, Prng};
+
+/// `which` end of the spectrum to return.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Which {
+    Smallest,
+    Largest,
+}
+
+/// Compute `k` extreme eigenpairs of symmetric `a` with at most
+/// `max_dim` Lanczos vectors (full reorthogonalization).
+pub fn lanczos(a: &dyn LinOp, k: usize, which: Which, max_dim: usize, seed: u64) -> EigResult {
+    let n = a.nrows();
+    assert_eq!(n, a.ncols());
+    let m = max_dim.min(n).max(k + 2).min(n);
+
+    let mut rng = Prng::new(seed);
+    let mut q: Vec<Vec<f64>> = Vec::with_capacity(m);
+    let mut alpha = Vec::with_capacity(m);
+    let mut beta: Vec<f64> = Vec::with_capacity(m);
+
+    let mut v = rng.normal_vec(n);
+    let nv = norm2(&v);
+    for x in v.iter_mut() {
+        *x /= nv;
+    }
+    q.push(v);
+
+    let mut w = vec![0f64; n];
+    for j in 0..m {
+        a.apply(&q[j], &mut w);
+        let aj = dot(&w, &q[j]);
+        alpha.push(aj);
+        // w -= alpha_j q_j + beta_{j-1} q_{j-1}
+        for i in 0..n {
+            w[i] -= aj * q[j][i];
+        }
+        if j > 0 {
+            let bj = beta[j - 1];
+            for i in 0..n {
+                w[i] -= bj * q[j - 1][i];
+            }
+        }
+        // full reorthogonalization (twice for stability)
+        for _ in 0..2 {
+            for qi in &q {
+                let c = dot(&w, qi);
+                if c != 0.0 {
+                    for i in 0..n {
+                        w[i] -= c * qi[i];
+                    }
+                }
+            }
+        }
+        let bj = norm2(&w);
+        if j + 1 == m || bj < 1e-13 {
+            break;
+        }
+        beta.push(bj);
+        let mut qn = w.clone();
+        for x in qn.iter_mut() {
+            *x /= bj;
+        }
+        q.push(qn);
+    }
+
+    // tridiagonal dense eig
+    let dim = q.len();
+    let mut t = vec![0f64; dim * dim];
+    for i in 0..dim {
+        t[i * dim + i] = alpha[i];
+        if i + 1 < dim {
+            t[i * dim + i + 1] = beta[i];
+            t[(i + 1) * dim + i] = beta[i];
+        }
+    }
+    let (tvals, tvecs) = jacobi_eigh(&t, dim);
+
+    // pick k from the requested end (tvals ascending)
+    let idx: Vec<usize> = match which {
+        Which::Smallest => (0..k.min(dim)).collect(),
+        Which::Largest => (dim - k.min(dim)..dim).rev().collect(),
+    };
+    let mut values = Vec::new();
+    let mut vectors = Vec::new();
+    let mut residuals = Vec::new();
+    for &i in &idx {
+        let lam = tvals[i];
+        let mut vec_n = vec![0f64; n];
+        for (j, qj) in q.iter().enumerate() {
+            let c = tvecs[i][j];
+            for l in 0..n {
+                vec_n[l] += c * qj[l];
+            }
+        }
+        let nv = norm2(&vec_n);
+        for x in vec_n.iter_mut() {
+            *x /= nv;
+        }
+        let mut av = vec![0f64; n];
+        a.apply(&vec_n, &mut av);
+        let res = (0..n)
+            .map(|l| (av[l] - lam * vec_n[l]).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        values.push(lam);
+        vectors.push(vec_n);
+        residuals.push(res);
+    }
+    EigResult {
+        values,
+        vectors,
+        iters: dim,
+        residuals,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::poisson::poisson2d;
+
+    #[test]
+    fn smallest_eigenvalues_of_laplacian() {
+        // continuous eigenvalues of -Δ on unit square: pi^2 (p^2 + q^2);
+        // FD eigenvalues: (4/h^2)(sin^2(p pi h/2) + sin^2(q pi h/2)) with
+        // h = 1/(g+1).
+        let g = 12;
+        let sys = poisson2d(g, None);
+        let r = lanczos(&sys.matrix, 4, Which::Smallest, 80, 0);
+        let h = 1.0 / (g as f64 + 1.0);
+        let lam = |p: f64, q: f64| {
+            (4.0 / (h * h))
+                * ((p * std::f64::consts::PI * h / 2.0).sin().powi(2)
+                    + (q * std::f64::consts::PI * h / 2.0).sin().powi(2))
+        };
+        let expected = {
+            let mut v = vec![lam(1.0, 1.0), lam(1.0, 2.0), lam(2.0, 1.0), lam(2.0, 2.0)];
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v
+        };
+        for (got, want) in r.values.iter().zip(&expected) {
+            assert!(
+                (got - want).abs() < 1e-6 * want,
+                "eig {got} vs expected {want}"
+            );
+        }
+        for res in &r.residuals {
+            assert!(*res < 1e-6, "residual {res}");
+        }
+    }
+
+    #[test]
+    fn largest_matches_power_iteration_scale() {
+        let g = 10;
+        let sys = poisson2d(g, None);
+        let r = lanczos(&sys.matrix, 1, Which::Largest, 60, 1);
+        let h = 1.0 / (g as f64 + 1.0);
+        // largest FD eigenvalue ~ 8/h^2 * sin^2(g pi h / 2)
+        let upper = 8.0 / (h * h);
+        assert!(r.values[0] <= upper && r.values[0] > 0.5 * upper);
+    }
+
+    #[test]
+    fn eigenvectors_unit_norm() {
+        let g = 8;
+        let sys = poisson2d(g, None);
+        let r = lanczos(&sys.matrix, 3, Which::Smallest, 50, 2);
+        for v in &r.vectors {
+            let n2: f64 = v.iter().map(|x| x * x).sum();
+            assert!((n2 - 1.0).abs() < 1e-10);
+        }
+    }
+}

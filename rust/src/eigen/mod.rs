@@ -1,0 +1,28 @@
+//! Symmetric eigensolvers — the `.eigsh` entry point substrate.
+//!
+//! * [`dense_sym::jacobi_eigh`] — cyclic Jacobi for the small dense
+//!   (Rayleigh–Ritz) problems inside the iterative eigensolvers.
+//! * [`lanczos::lanczos`] — Lanczos with full reorthogonalization for a
+//!   few extreme eigenpairs.
+//! * [`lobpcg::lobpcg`] — locally optimal block PCG (Knyazev 2001), the
+//!   paper's distributed-capable eigensolver, here in its stabilized
+//!   orthogonal-basis form.
+
+pub mod dense_sym;
+pub mod lanczos;
+pub mod lobpcg;
+
+pub use dense_sym::jacobi_eigh;
+pub use lanczos::lanczos;
+pub use lobpcg::{lobpcg, LobpcgOpts};
+
+/// Result of an iterative eigensolve: `values` ascending, `vectors[j]`
+/// the eigenvector for `values[j]`, unit 2-norm.
+#[derive(Clone, Debug)]
+pub struct EigResult {
+    pub values: Vec<f64>,
+    pub vectors: Vec<Vec<f64>>,
+    pub iters: usize,
+    /// Per-pair final residual ||A v - lambda v||.
+    pub residuals: Vec<f64>,
+}

@@ -1,0 +1,64 @@
+//! Library-wide error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by rsla solvers, backends, and the runtime.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Solver exceeded its iteration budget without reaching tolerance.
+    #[error("solver did not converge: {iters} iterations, residual {residual:.3e} > tol {tol:.3e}")]
+    NotConverged {
+        iters: usize,
+        residual: f64,
+        tol: f64,
+    },
+
+    /// Factorization breakdown (zero/negative pivot, singular matrix).
+    #[error("factorization breakdown at pivot {at}: {reason}")]
+    Breakdown { at: usize, reason: String },
+
+    /// Problem shape/property mismatch (non-square, dimension mismatch...).
+    #[error("invalid problem: {0}")]
+    InvalidProblem(String),
+
+    /// A backend refused the problem (device mismatch, memory budget...).
+    /// The dispatcher treats this as "try the next backend".
+    #[error("backend '{backend}' unavailable: {reason}")]
+    BackendUnavailable { backend: String, reason: String },
+
+    /// Simulated device-memory exhaustion: the memory model predicts the
+    /// solve would not fit the configured accelerator budget.  This is the
+    /// analogue of the paper's CUDA OOM rows in Tables 3-4.
+    #[error("out of device memory: needs {needed_bytes} B > budget {budget_bytes} B")]
+    OutOfMemory {
+        needed_bytes: u64,
+        budget_bytes: u64,
+    },
+
+    /// PJRT / XLA runtime failure.
+    #[error("xla runtime: {0}")]
+    Xla(String),
+
+    /// Missing or malformed AOT artifact.
+    #[error("artifact '{0}' not available: {1}")]
+    Artifact(String, String),
+
+    /// Autograd misuse (double backward, wrong tape...).
+    #[error("autograd: {0}")]
+    Autograd(String),
+
+    /// Distributed layer failure (rank panicked, channel closed...).
+    #[error("distributed: {0}")]
+    Distributed(String),
+
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

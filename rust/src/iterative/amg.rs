@@ -1,0 +1,413 @@
+//! Smoothed-aggregation algebraic multigrid (Vaněk, Mandel & Brezina
+//! 1996) as a preconditioner — the paper's headline future-work item
+//! (§5: "Reaching a meaningful tolerance at this scale needs a stronger
+//! preconditioner (e.g. algebraic multigrid via AmgX/hypre), which we
+//! leave to future work").
+//!
+//! This is the full pattern-based construction that torch-sla's
+//! *explicit* sparse representation enables (paper Appendix E: "ILU/IC/
+//! AMG need the explicit non-zeros"):
+//!
+//! 1. strength-of-connection graph `|a_ij| > theta sqrt(a_ii a_jj)`;
+//! 2. greedy aggregation of strongly-connected nodes;
+//! 3. tentative piecewise-constant prolongator P0, smoothed by one
+//!    damped-Jacobi step `P = (I - omega D^-1 A) P0`;
+//! 4. Galerkin coarse operator `A_c = P^T A P`;
+//! 5. recursion until the coarse problem is small enough for a direct
+//!    solve.
+//!
+//! `apply` runs one V(1,1)-cycle with damped-Jacobi smoothing — an SPD
+//! operation, so it is admissible inside CG.
+
+use crate::direct::SparseLu;
+use crate::error::{Error, Result};
+use crate::iterative::Precond;
+use crate::sparse::{Coo, Csr};
+
+/// AMG construction options.
+#[derive(Clone, Debug)]
+pub struct AmgOpts {
+    /// Strength-of-connection threshold theta.
+    pub theta: f64,
+    /// Prolongator smoothing weight (typically 2/3 for Poisson-like).
+    pub omega: f64,
+    /// Jacobi smoothing weight inside the V-cycle.
+    pub smooth_omega: f64,
+    /// Pre-/post-smoothing sweeps.
+    pub sweeps: usize,
+    /// Stop coarsening below this size and solve directly.
+    pub coarse_n: usize,
+    /// Hard cap on hierarchy depth.
+    pub max_levels: usize,
+}
+
+impl Default for AmgOpts {
+    fn default() -> Self {
+        AmgOpts {
+            theta: 0.08,
+            omega: 2.0 / 3.0,
+            smooth_omega: 2.0 / 3.0,
+            sweeps: 1,
+            coarse_n: 64,
+            max_levels: 12,
+        }
+    }
+}
+
+struct Level {
+    a: Csr,
+    /// prolongator: n_fine x n_coarse (absent on the coarsest level).
+    p: Option<Csr>,
+    /// restriction = P^T, stored explicitly for fast SpMV.
+    r: Option<Csr>,
+    inv_diag: Vec<f64>,
+}
+
+/// The assembled hierarchy.
+pub struct Amg {
+    levels: Vec<Level>,
+    coarse: SparseLu,
+    opts: AmgOpts,
+}
+
+/// Greedy aggregation over the strength graph.  Returns (aggregate id
+/// per node, number of aggregates).
+fn aggregate(a: &Csr, theta: f64) -> (Vec<usize>, usize) {
+    let n = a.nrows;
+    let diag = a.diag();
+    let strong = |r: usize, c: usize, v: f64| -> bool {
+        r != c && v.abs() > theta * (diag[r].abs() * diag[c].abs()).sqrt()
+    };
+
+    const UNASSIGNED: usize = usize::MAX;
+    let mut agg = vec![UNASSIGNED; n];
+    let mut n_agg = 0;
+
+    // pass 1: roots — nodes whose strong neighborhood is fully unassigned
+    for i in 0..n {
+        if agg[i] != UNASSIGNED {
+            continue;
+        }
+        let (cols, vals) = a.row(i);
+        let mut free = true;
+        for (c, v) in cols.iter().zip(vals) {
+            if strong(i, *c, *v) && agg[*c] != UNASSIGNED {
+                free = false;
+                break;
+            }
+        }
+        if free {
+            agg[i] = n_agg;
+            for (c, v) in cols.iter().zip(vals) {
+                if strong(i, *c, *v) {
+                    agg[*c] = n_agg;
+                }
+            }
+            n_agg += 1;
+        }
+    }
+    // pass 2: attach stragglers to the strongest neighboring aggregate
+    for i in 0..n {
+        if agg[i] != UNASSIGNED {
+            continue;
+        }
+        let (cols, vals) = a.row(i);
+        let mut best = (0.0_f64, UNASSIGNED);
+        for (c, v) in cols.iter().zip(vals) {
+            if *c != i && agg[*c] != UNASSIGNED && v.abs() > best.0 {
+                best = (v.abs(), agg[*c]);
+            }
+        }
+        if best.1 != UNASSIGNED {
+            agg[i] = best.1;
+        } else {
+            // isolated node: its own aggregate
+            agg[i] = n_agg;
+            n_agg += 1;
+        }
+    }
+    (agg, n_agg)
+}
+
+/// Tentative prolongator (piecewise constant over aggregates, columns
+/// normalized) smoothed by one damped-Jacobi step.
+fn smoothed_prolongator(a: &Csr, agg: &[usize], n_agg: usize, omega: f64) -> Result<Csr> {
+    let n = a.nrows;
+    // column norms of the tentative prolongator
+    let mut count = vec![0usize; n_agg];
+    for &g in agg {
+        count[g] += 1;
+    }
+    // P0[i, agg[i]] = 1/sqrt(|agg|)
+    let inv_diag: Vec<f64> = a
+        .diag()
+        .iter()
+        .map(|d| if *d != 0.0 { 1.0 / d } else { 0.0 })
+        .collect();
+    // P = (I - omega D^-1 A) P0: row i of P touches agg[j] for every
+    // entry a_ij, plus agg[i].
+    let mut coo = Coo::with_capacity(n, n_agg, a.nnz());
+    for i in 0..n {
+        let (cols, vals) = a.row(i);
+        // accumulate per-aggregate contributions of this row
+        let mut touched: Vec<(usize, f64)> = Vec::with_capacity(cols.len());
+        let push = |g: usize, v: f64, touched: &mut Vec<(usize, f64)>| {
+            for t in touched.iter_mut() {
+                if t.0 == g {
+                    t.1 += v;
+                    return;
+                }
+            }
+            touched.push((g, v));
+        };
+        push(
+            agg[i],
+            1.0 / (count[agg[i]] as f64).sqrt(),
+            &mut touched,
+        );
+        for (c, v) in cols.iter().zip(vals) {
+            let w = -omega * inv_diag[i] * v / (count[agg[*c]] as f64).sqrt();
+            push(agg[*c], w, &mut touched);
+        }
+        for (g, v) in touched {
+            if v != 0.0 {
+                coo.push(i, g, v);
+            }
+        }
+    }
+    if coo.nnz() == 0 {
+        return Err(Error::InvalidProblem("amg: empty prolongator".into()));
+    }
+    Ok(coo.to_csr())
+}
+
+impl Amg {
+    pub fn new(a: &Csr, opts: &AmgOpts) -> Result<Self> {
+        if a.nrows != a.ncols {
+            return Err(Error::InvalidProblem("amg needs square".into()));
+        }
+        let mut levels = Vec::new();
+        let mut cur = a.clone();
+        for _ in 0..opts.max_levels {
+            if cur.nrows <= opts.coarse_n {
+                break;
+            }
+            let (agg, n_agg) = aggregate(&cur, opts.theta);
+            if n_agg >= cur.nrows {
+                break; // coarsening stalled
+            }
+            let p = smoothed_prolongator(&cur, &agg, n_agg, opts.omega)?;
+            let r = p.transpose();
+            let ap = cur.spmm(&p)?;
+            let a_c = r.spmm(&ap)?;
+            let inv_diag: Vec<f64> = cur
+                .diag()
+                .iter()
+                .map(|d| if *d != 0.0 { 1.0 / d } else { 0.0 })
+                .collect();
+            levels.push(Level {
+                a: cur,
+                p: Some(p),
+                r: Some(r),
+                inv_diag,
+            });
+            cur = a_c;
+        }
+        let coarse = SparseLu::factor(&cur)?;
+        let inv_diag: Vec<f64> = cur
+            .diag()
+            .iter()
+            .map(|d| if *d != 0.0 { 1.0 / d } else { 0.0 })
+            .collect();
+        levels.push(Level {
+            a: cur,
+            p: None,
+            r: None,
+            inv_diag,
+        });
+        Ok(Amg {
+            levels,
+            coarse,
+            opts: opts.clone(),
+        })
+    }
+
+    /// Hierarchy depth including the coarse level.
+    pub fn n_levels(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Grid complexity: sum of level sizes / fine size.
+    pub fn grid_complexity(&self) -> f64 {
+        let fine = self.levels[0].a.nrows as f64;
+        self.levels.iter().map(|l| l.a.nrows as f64).sum::<f64>() / fine
+    }
+
+    /// Operator complexity: sum of level nnz / fine nnz.
+    pub fn operator_complexity(&self) -> f64 {
+        let fine = self.levels[0].a.nnz() as f64;
+        self.levels.iter().map(|l| l.a.nnz() as f64).sum::<f64>() / fine
+    }
+
+    fn smooth(&self, lev: &Level, x: &mut [f64], b: &[f64], tmp: &mut [f64]) {
+        for _ in 0..self.opts.sweeps {
+            lev.a.spmv(x, tmp);
+            for i in 0..x.len() {
+                x[i] += self.opts.smooth_omega * lev.inv_diag[i] * (b[i] - tmp[i]);
+            }
+        }
+    }
+
+    fn vcycle(&self, depth: usize, b: &[f64], x: &mut [f64]) {
+        let lev = &self.levels[depth];
+        let n = lev.a.nrows;
+        if depth + 1 == self.levels.len() {
+            let xc = self.coarse.solve(b).expect("amg coarse solve");
+            x.copy_from_slice(&xc);
+            return;
+        }
+        let mut tmp = vec![0.0; n];
+        // pre-smooth from zero initial guess
+        self.smooth(lev, x, b, &mut tmp);
+        // residual
+        lev.a.spmv(x, &mut tmp);
+        let mut res = vec![0.0; n];
+        for i in 0..n {
+            res[i] = b[i] - tmp[i];
+        }
+        // restrict
+        let r = lev.r.as_ref().unwrap();
+        let nc = r.nrows;
+        let mut bc = vec![0.0; nc];
+        r.spmv(&res, &mut bc);
+        // coarse correction
+        let mut xc = vec![0.0; nc];
+        self.vcycle(depth + 1, &bc, &mut xc);
+        // prolong + correct
+        let p = lev.p.as_ref().unwrap();
+        p.spmv(&xc, &mut tmp);
+        for i in 0..n {
+            x[i] += tmp[i];
+        }
+        // post-smooth
+        let mut t2 = vec![0.0; n];
+        self.smooth(lev, x, b, &mut t2);
+    }
+}
+
+impl Precond for Amg {
+    fn apply(&self, r: &[f64], z: &mut [f64]) {
+        for zi in z.iter_mut() {
+            *zi = 0.0;
+        }
+        self.vcycle(0, r, z);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::iterative::{cg, IterOpts, Jacobi};
+    use crate::sparse::poisson::{kappa_star, poisson2d};
+    use crate::util::{rel_l2, Prng};
+
+    #[test]
+    fn hierarchy_coarsens_geometrically() {
+        let g = 48;
+        let sys = poisson2d(g, None);
+        let amg = Amg::new(&sys.matrix, &AmgOpts::default()).unwrap();
+        assert!(amg.n_levels() >= 3, "expected >= 3 levels, got {}", amg.n_levels());
+        assert!(
+            amg.grid_complexity() < 1.6,
+            "grid complexity {} too high",
+            amg.grid_complexity()
+        );
+        assert!(
+            amg.operator_complexity() < 3.0,
+            "operator complexity {} too high",
+            amg.operator_complexity()
+        );
+    }
+
+    #[test]
+    fn amg_cg_converges_in_near_constant_iterations() {
+        // The multigrid signature: iterations roughly flat in n, while
+        // Jacobi-CG grows like sqrt(kappa) ~ g.
+        let opts = IterOpts {
+            tol: 1e-8,
+            max_iters: 2000,
+            record_history: false,
+        };
+        let mut amg_iters = Vec::new();
+        let mut jac_iters = Vec::new();
+        for g in [16usize, 32, 64] {
+            let sys = poisson2d(g, Some(&kappa_star(g)));
+            let mut rng = Prng::new(g as u64);
+            let b = rng.normal_vec(g * g);
+            let amg = Amg::new(&sys.matrix, &AmgOpts::default()).unwrap();
+            let r1 = cg(&sys.matrix, &b, &amg, &opts, None);
+            assert!(r1.converged);
+            assert!(rel_l2(&sys.matrix.matvec(&r1.x), &b) < 1e-6);
+            amg_iters.push(r1.iters);
+            let jac = Jacobi::new(&sys.matrix).unwrap();
+            let r2 = cg(&sys.matrix, &b, &jac, &opts, None);
+            jac_iters.push(r2.iters);
+        }
+        // AMG: near-flat growth; Jacobi: ~2x per grid doubling
+        assert!(
+            amg_iters[2] <= amg_iters[0] * 3,
+            "AMG iters must be near-constant: {amg_iters:?}"
+        );
+        assert!(
+            amg_iters[2] * 4 < jac_iters[2],
+            "AMG ({:?}) must beat Jacobi ({:?}) at g=64",
+            amg_iters,
+            jac_iters
+        );
+    }
+
+    #[test]
+    fn vcycle_is_spd_like() {
+        // <x, M^{-1} y> == <M^{-1} x, y> within roundoff — required for CG.
+        let g = 16;
+        let n = g * g;
+        let sys = poisson2d(g, None);
+        let amg = Amg::new(&sys.matrix, &AmgOpts::default()).unwrap();
+        let mut rng = Prng::new(0);
+        let x = rng.normal_vec(n);
+        let y = rng.normal_vec(n);
+        let mut mx = vec![0.0; n];
+        let mut my = vec![0.0; n];
+        amg.apply(&x, &mut mx);
+        amg.apply(&y, &mut my);
+        let lhs = crate::util::dot(&x, &my);
+        let rhs = crate::util::dot(&mx, &y);
+        assert!(
+            (lhs - rhs).abs() < 1e-8 * lhs.abs().max(rhs.abs()).max(1.0),
+            "V-cycle not symmetric: {lhs} vs {rhs}"
+        );
+    }
+
+    #[test]
+    fn small_matrix_degenerates_to_direct() {
+        let g = 6; // 36 <= coarse_n
+        let sys = poisson2d(g, None);
+        let amg = Amg::new(&sys.matrix, &AmgOpts::default()).unwrap();
+        assert_eq!(amg.n_levels(), 1);
+        let mut rng = Prng::new(1);
+        let b = rng.normal_vec(g * g);
+        let mut z = vec![0.0; g * g];
+        amg.apply(&b, &mut z);
+        // single level == exact solve
+        assert!(rel_l2(&sys.matrix.matvec(&z), &b) < 1e-10);
+    }
+
+    #[test]
+    fn rejects_nonsquare() {
+        use crate::sparse::Coo;
+        let mut coo = Coo::new(2, 3);
+        coo.push(0, 0, 1.0);
+        coo.push(1, 1, 1.0);
+        assert!(Amg::new(&coo.to_csr(), &AmgOpts::default()).is_err());
+    }
+}

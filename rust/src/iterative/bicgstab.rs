@@ -1,0 +1,181 @@
+//! BiCGStab (van der Vorst 1992) for general (nonsymmetric) systems,
+//! with right preconditioning.
+
+use super::{IterOpts, IterResult, LinOp, Precond};
+use crate::metrics::MemTracker;
+use crate::util::{axpy_inplace, dot};
+
+/// Solve A x = b with preconditioned BiCGStab, x0 = 0.
+pub fn bicgstab(
+    a: &dyn LinOp,
+    b: &[f64],
+    m: &dyn Precond,
+    opts: &IterOpts,
+    mem: Option<&MemTracker>,
+) -> IterResult {
+    let n = a.nrows();
+    assert_eq!(n, a.ncols());
+    assert_eq!(n, b.len());
+
+    let default_tracker = MemTracker::new();
+    let mem = mem.unwrap_or(&default_tracker);
+    let mut x = mem.buf(n);
+    let mut r = mem.buf(n);
+    let mut r0 = mem.buf(n);
+    let mut p = mem.buf(n);
+    let mut v = mem.buf(n);
+    let mut s = mem.buf(n);
+    let mut t = mem.buf(n);
+    let mut phat = mem.buf(n);
+    let mut shat = mem.buf(n);
+
+    r.data.copy_from_slice(b);
+    r0.data.copy_from_slice(b);
+    let mut rho = 1.0f64;
+    let mut alpha = 1.0f64;
+    let mut omega = 1.0f64;
+    let mut rr = dot(&r, &r);
+    let tol2 = opts.tol * opts.tol;
+
+    let mut history = Vec::new();
+    if opts.record_history {
+        history.push(rr.sqrt());
+    }
+
+    let mut iters = 0;
+    while iters < opts.max_iters && rr > tol2 {
+        let rho_new = dot(&r0, &r);
+        if rho_new == 0.0 {
+            break; // breakdown
+        }
+        if iters == 0 {
+            p.data.copy_from_slice(&r);
+        } else {
+            let beta = (rho_new / rho) * (alpha / omega);
+            // p = r + beta * (p - omega * v)
+            for i in 0..n {
+                p.data[i] = r[i] + beta * (p[i] - omega * v[i]);
+            }
+        }
+        rho = rho_new;
+        m.apply(&p, &mut phat);
+        a.apply(&phat, &mut v);
+        let r0v = dot(&r0, &v);
+        if r0v == 0.0 {
+            break;
+        }
+        alpha = rho / r0v;
+        // s = r - alpha v
+        for i in 0..n {
+            s.data[i] = r[i] - alpha * v[i];
+        }
+        let ss = dot(&s, &s);
+        if ss <= tol2 {
+            axpy_inplace(alpha, &phat, &mut x);
+            rr = ss;
+            iters += 1;
+            if opts.record_history {
+                history.push(rr.sqrt());
+            }
+            break;
+        }
+        m.apply(&s, &mut shat);
+        a.apply(&shat, &mut t);
+        let tt = dot(&t, &t);
+        if tt == 0.0 {
+            break;
+        }
+        omega = dot(&t, &s) / tt;
+        // x += alpha * phat + omega * shat
+        axpy_inplace(alpha, &phat, &mut x);
+        axpy_inplace(omega, &shat, &mut x);
+        // r = s - omega t
+        for i in 0..n {
+            r.data[i] = s[i] - omega * t[i];
+        }
+        rr = dot(&r, &r);
+        iters += 1;
+        if opts.record_history {
+            history.push(rr.sqrt());
+        }
+        if omega == 0.0 {
+            break;
+        }
+    }
+
+    IterResult {
+        x: x.take(),
+        iters,
+        residual: rr.sqrt(),
+        converged: rr <= tol2,
+        history,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::iterative::precond::{Identity, Ilu0, Jacobi};
+    use crate::sparse::graphs::random_nonsymmetric;
+    use crate::sparse::poisson::poisson2d;
+    use crate::util::{self, Prng};
+
+    #[test]
+    fn solves_nonsymmetric() {
+        let mut rng = Prng::new(1);
+        let a = random_nonsymmetric(&mut rng, 100, 5);
+        let b = rng.normal_vec(100);
+        let m = Jacobi::new(&a).unwrap();
+        let r = bicgstab(&a, &b, &m, &IterOpts::default(), None);
+        assert!(r.converged, "residual {}", r.residual);
+        assert!(util::rel_l2(&a.matvec(&r.x), &b) < 1e-8);
+    }
+
+    #[test]
+    fn solves_spd_too() {
+        let g = 16;
+        let sys = poisson2d(g, None);
+        let mut rng = Prng::new(2);
+        let b = rng.normal_vec(g * g);
+        let m = Jacobi::new(&sys.matrix).unwrap();
+        let r = bicgstab(&sys.matrix, &b, &m, &IterOpts::default(), None);
+        assert!(r.converged);
+        assert!(util::rel_l2(&sys.matrix.matvec(&r.x), &b) < 1e-8);
+    }
+
+    #[test]
+    fn ilu0_accelerates() {
+        let mut rng = Prng::new(3);
+        let a = random_nonsymmetric(&mut rng, 200, 6);
+        let b = rng.normal_vec(200);
+        let opts = IterOpts {
+            tol: 1e-9,
+            max_iters: 1000,
+            record_history: false,
+        };
+        let plain = bicgstab(&a, &b, &Identity, &opts, None);
+        let ilu = bicgstab(&a, &b, &Ilu0::new(&a).unwrap(), &opts, None);
+        assert!(plain.converged && ilu.converged);
+        assert!(ilu.iters <= plain.iters);
+    }
+
+    #[test]
+    fn respects_budget() {
+        let g = 24;
+        let sys = poisson2d(g, None);
+        let b = vec![1.0; g * g];
+        let r = bicgstab(
+            &sys.matrix,
+            &b,
+            &Identity,
+            &IterOpts {
+                tol: 1e-14,
+                max_iters: 3,
+                record_history: false,
+            },
+            None,
+        );
+        assert!(!r.converged);
+        assert!(r.iters <= 3);
+    }
+}

@@ -1,0 +1,212 @@
+//! Restarted GMRES(m) with modified Gram–Schmidt Arnoldi and Givens
+//! rotations — the general-purpose fallback for indefinite /
+//! nonsymmetric systems where BiCGStab stalls.
+
+use super::{IterOpts, IterResult, LinOp, Precond};
+use crate::metrics::MemTracker;
+use crate::util::{dot, norm2};
+
+/// Solve A x = b with right-preconditioned restarted GMRES(m), x0 = 0.
+pub fn gmres(
+    a: &dyn LinOp,
+    b: &[f64],
+    m: &dyn Precond,
+    restart: usize,
+    opts: &IterOpts,
+    mem: Option<&MemTracker>,
+) -> IterResult {
+    let n = a.nrows();
+    assert_eq!(n, a.ncols());
+    assert_eq!(n, b.len());
+    let restart = restart.max(1).min(n);
+
+    let default_tracker = MemTracker::new();
+    let mem = mem.unwrap_or(&default_tracker);
+    let mut x = mem.buf(n);
+    let mut r = mem.buf(n);
+    let mut w = mem.buf(n);
+    let mut z = mem.buf(n);
+    // Krylov basis (restart+1 vectors)
+    let _basis_guard = mem.hold(((restart + 1) * n * 8) as u64);
+    let mut basis: Vec<Vec<f64>> = Vec::with_capacity(restart + 1);
+
+    let mut history = Vec::new();
+    let mut total_iters = 0usize;
+    let mut beta;
+
+    r.data.copy_from_slice(b);
+    beta = norm2(&r);
+    if opts.record_history {
+        history.push(beta);
+    }
+
+    'outer: while beta > opts.tol && total_iters < opts.max_iters {
+        basis.clear();
+        let mut v0 = r.data.clone();
+        for vi in v0.iter_mut() {
+            *vi /= beta;
+        }
+        basis.push(v0);
+
+        // Hessenberg (restart+1 x restart), Givens cos/sin, residual vec g
+        let mut h = vec![vec![0f64; restart]; restart + 1];
+        let mut cs = vec![0f64; restart];
+        let mut sn = vec![0f64; restart];
+        let mut g = vec![0f64; restart + 1];
+        g[0] = beta;
+
+        let mut k_used = 0;
+        for k in 0..restart {
+            if total_iters >= opts.max_iters {
+                break;
+            }
+            // w = A M^{-1} v_k
+            m.apply(&basis[k], &mut z);
+            a.apply(&z, &mut w);
+            // modified Gram–Schmidt
+            for (i, vi) in basis.iter().enumerate() {
+                h[i][k] = dot(&w, vi);
+                for j in 0..n {
+                    w.data[j] -= h[i][k] * vi[j];
+                }
+            }
+            h[k + 1][k] = norm2(&w);
+            if h[k + 1][k] > 1e-300 {
+                let mut vk1 = w.data.clone();
+                for vi in vk1.iter_mut() {
+                    *vi /= h[k + 1][k];
+                }
+                basis.push(vk1);
+            }
+            // apply previous rotations to column k
+            for i in 0..k {
+                let t = cs[i] * h[i][k] + sn[i] * h[i + 1][k];
+                h[i + 1][k] = -sn[i] * h[i][k] + cs[i] * h[i + 1][k];
+                h[i][k] = t;
+            }
+            // new rotation
+            let denom = (h[k][k] * h[k][k] + h[k + 1][k] * h[k + 1][k]).sqrt();
+            if denom == 0.0 {
+                k_used = k;
+                break;
+            }
+            cs[k] = h[k][k] / denom;
+            sn[k] = h[k + 1][k] / denom;
+            h[k][k] = denom;
+            h[k + 1][k] = 0.0;
+            g[k + 1] = -sn[k] * g[k];
+            g[k] *= cs[k];
+            total_iters += 1;
+            k_used = k + 1;
+            let res = g[k + 1].abs();
+            if opts.record_history {
+                history.push(res);
+            }
+            if res <= opts.tol {
+                break;
+            }
+            if basis.len() <= k + 1 {
+                break; // lucky breakdown: exact solution in span
+            }
+        }
+        // back-substitute y from H y = g
+        let kk = k_used;
+        let mut y = vec![0f64; kk];
+        for i in (0..kk).rev() {
+            let mut s = g[i];
+            for j in i + 1..kk {
+                s -= h[i][j] * y[j];
+            }
+            y[i] = s / h[i][i];
+        }
+        // x += M^{-1} (V y)
+        let mut vy = vec![0f64; n];
+        for (j, yj) in y.iter().enumerate() {
+            for i in 0..n {
+                vy[i] += yj * basis[j][i];
+            }
+        }
+        m.apply(&vy, &mut z);
+        for i in 0..n {
+            x.data[i] += z[i];
+        }
+        // true residual for restart
+        a.apply(&x, &mut w);
+        for i in 0..n {
+            r.data[i] = b[i] - w[i];
+        }
+        beta = norm2(&r);
+        if beta <= opts.tol {
+            break 'outer;
+        }
+    }
+
+    IterResult {
+        x: x.take(),
+        iters: total_iters,
+        residual: beta,
+        converged: beta <= opts.tol,
+        history,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::iterative::precond::{Identity, Jacobi};
+    use crate::sparse::graphs::random_nonsymmetric;
+    use crate::sparse::poisson::poisson2d;
+    use crate::util::{self, Prng};
+
+    #[test]
+    fn solves_nonsymmetric() {
+        let mut rng = Prng::new(1);
+        let a = random_nonsymmetric(&mut rng, 80, 4);
+        let b = rng.normal_vec(80);
+        let r = gmres(&a, &b, &Identity, 30, &IterOpts::default(), None);
+        assert!(r.converged, "residual {}", r.residual);
+        assert!(util::rel_l2(&a.matvec(&r.x), &b) < 1e-8);
+    }
+
+    #[test]
+    fn restart_still_converges() {
+        let mut rng = Prng::new(2);
+        let a = random_nonsymmetric(&mut rng, 60, 4);
+        let b = rng.normal_vec(60);
+        let r = gmres(
+            &a,
+            &b,
+            &Jacobi::new(&a).unwrap(),
+            5, // aggressive restart
+            &IterOpts {
+                tol: 1e-8,
+                max_iters: 5000,
+                record_history: false,
+            },
+            None,
+        );
+        assert!(r.converged, "residual {}", r.residual);
+    }
+
+    #[test]
+    fn solves_spd_poisson() {
+        let g = 12;
+        let sys = poisson2d(g, None);
+        let mut rng = Prng::new(3);
+        let b = rng.normal_vec(g * g);
+        let r = gmres(&sys.matrix, &b, &Identity, 50, &IterOpts::default(), None);
+        assert!(r.converged);
+        assert!(util::rel_l2(&sys.matrix.matvec(&r.x), &b) < 1e-8);
+    }
+
+    #[test]
+    fn identity_system_converges_in_one() {
+        use crate::sparse::Csr;
+        let a = Csr::identity(10);
+        let b = vec![2.0; 10];
+        let r = gmres(&a, &b, &Identity, 10, &IterOpts::default(), None);
+        assert!(r.converged);
+        assert!(r.iters <= 2);
+        assert!(util::max_abs_diff(&r.x, &b) < 1e-12);
+    }
+}

@@ -1,0 +1,303 @@
+//! MINRES (Paige & Saunders 1975): Krylov solver for symmetric —
+//! possibly *indefinite* — systems.
+//!
+//! The paper's Appendix A notes "additional Krylov variants (e.g.
+//! GMRES, LGMRES, MINRES, QMR, LSQR) are wrapped where the underlying
+//! library provides them"; our substrate IS the underlying library, so
+//! MINRES is implemented directly.  It fills the gap between CG
+//! (requires SPD) and GMRES (no symmetry exploited, O(m n) memory for
+//! the Arnoldi basis): symmetric Lanczos three-term recurrence, O(n)
+//! memory, monotone residual.
+
+use super::{IterOpts, IterResult, LinOp, Precond};
+use crate::metrics::MemTracker;
+use crate::util::dot;
+
+/// Solve A x = b for symmetric (indefinite OK) A with preconditioned
+/// MINRES, x0 = 0.  The preconditioner must be SPD.
+pub fn minres(
+    a: &dyn LinOp,
+    b: &[f64],
+    m: &dyn Precond,
+    opts: &IterOpts,
+    mem: Option<&MemTracker>,
+) -> IterResult {
+    let n = a.nrows();
+    assert_eq!(n, a.ncols(), "minres needs a square operator");
+    assert_eq!(n, b.len());
+
+    let default_tracker = MemTracker::new();
+    let mem = mem.unwrap_or(&default_tracker);
+
+    let mut x = mem.buf(n);
+    let mut r1 = mem.buf(n); // v_{k-1} (unscaled Lanczos vectors)
+    let mut r2 = mem.buf(n); // v_k
+    let mut y = mem.buf(n); // M^{-1} r2
+    let mut w = mem.buf(n);
+    let mut w1 = mem.buf(n);
+    let mut w2 = mem.buf(n);
+    let mut v = mem.buf(n);
+
+    r2.data.copy_from_slice(b);
+    m.apply(&r2, &mut y);
+    let mut beta1 = dot(&r2, &y);
+    if beta1 < 0.0 {
+        // preconditioner not SPD
+        return IterResult {
+            x: x.data.clone(),
+            iters: 0,
+            residual: crate::util::norm2(b),
+            converged: false,
+            history: vec![],
+        };
+    }
+    if beta1 == 0.0 {
+        return IterResult {
+            x: x.data.clone(),
+            iters: 0,
+            residual: 0.0,
+            converged: true,
+            history: vec![0.0],
+        };
+    }
+    beta1 = beta1.sqrt();
+
+    // QR of the tridiagonal via Givens rotations, updated incrementally.
+    let (mut oldb, mut beta) = (0.0_f64, beta1);
+    let mut dbar = 0.0_f64;
+    let mut epsln = 0.0_f64;
+    let mut phibar = beta1;
+    let (mut cs, mut sn) = (-1.0_f64, 0.0_f64);
+
+    let mut history = Vec::new();
+    if opts.record_history {
+        history.push(phibar);
+    }
+
+    let mut iters = 0;
+    let mut converged = false;
+    while iters < opts.max_iters {
+        iters += 1;
+        // --- Lanczos step ---
+        let s = 1.0 / beta;
+        for i in 0..n {
+            v.data[i] = y.data[i] * s;
+        }
+        a.apply(&v, &mut y);
+        if iters >= 2 {
+            let c = beta / oldb;
+            for i in 0..n {
+                y.data[i] -= c * r1.data[i];
+            }
+        }
+        let alfa = dot(&v, &y);
+        {
+            let c = alfa / beta;
+            for i in 0..n {
+                y.data[i] -= c * r2.data[i];
+            }
+        }
+        r1.data.copy_from_slice(&r2.data);
+        r2.data.copy_from_slice(&y.data);
+        m.apply(&r2, &mut y);
+        oldb = beta;
+        let betasq = dot(&r2, &y);
+        if betasq < 0.0 {
+            break; // preconditioner lost positive-definiteness
+        }
+        beta = betasq.sqrt();
+
+        // --- update QR factorization ---
+        let oldeps = epsln;
+        let delta = cs * dbar + sn * alfa;
+        let gbar = sn * dbar - cs * alfa;
+        epsln = sn * beta;
+        dbar = -cs * beta;
+
+        let gamma = (gbar * gbar + beta * beta).sqrt().max(f64::MIN_POSITIVE);
+        cs = gbar / gamma;
+        sn = beta / gamma;
+        let phi = cs * phibar;
+        phibar *= sn;
+
+        // --- update solution ---
+        let denom = 1.0 / gamma;
+        for i in 0..n {
+            w1.data[i] = w2.data[i];
+            w2.data[i] = w.data[i];
+            w.data[i] = (v.data[i] - oldeps * w1.data[i] - delta * w2.data[i]) * denom;
+            x.data[i] += phi * w.data[i];
+        }
+
+        if opts.record_history {
+            history.push(phibar);
+        }
+        if phibar <= opts.tol {
+            converged = true;
+            break;
+        }
+    }
+
+    // true residual (phibar tracks the preconditioned norm)
+    let mut ax = vec![0.0; n];
+    a.apply(&x.data, &mut ax);
+    let mut rr = 0.0;
+    for i in 0..n {
+        let d = b[i] - ax[i];
+        rr += d * d;
+    }
+    let residual = rr.sqrt();
+
+    IterResult {
+        x: x.data.clone(),
+        iters,
+        residual,
+        converged: converged || residual <= opts.tol * 10.0,
+        history,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::iterative::{Identity, Jacobi};
+    use crate::sparse::poisson::poisson2d;
+    use crate::sparse::Coo;
+    use crate::util::{rel_l2, Prng};
+
+    #[test]
+    fn solves_spd_poisson() {
+        let g = 16;
+        let sys = poisson2d(g, None);
+        let mut rng = Prng::new(0);
+        let b = rng.normal_vec(g * g);
+        let r = minres(
+            &sys.matrix,
+            &b,
+            &Identity,
+            &IterOpts {
+                tol: 1e-10,
+                max_iters: 5000,
+                record_history: false,
+            },
+            None,
+        );
+        assert!(r.converged, "residual {}", r.residual);
+        assert!(rel_l2(&sys.matrix.matvec(&r.x), &b) < 1e-8);
+    }
+
+    #[test]
+    fn solves_symmetric_indefinite_where_cg_breaks() {
+        // A = Poisson - sigma I with sigma inside the spectrum: symmetric
+        // but indefinite.  CG's pAp > 0 assumption fails; MINRES converges.
+        let g = 10;
+        let n = g * g;
+        let sys = poisson2d(g, None);
+        let sigma = 30.0; // between eigenvalues of the 10x10 grid Laplacian
+        let mut coo = Coo::with_capacity(n, n, sys.matrix.nnz());
+        for r in 0..n {
+            let (cols, vals) = sys.matrix.row(r);
+            for (c, v) in cols.iter().zip(vals) {
+                coo.push(r, *c, if *c == r { v - sigma } else { *v });
+            }
+        }
+        let a = coo.to_csr();
+        let mut rng = Prng::new(1);
+        let b = rng.normal_vec(n);
+
+        let mr = minres(
+            &a,
+            &b,
+            &Identity,
+            &IterOpts {
+                tol: 1e-9,
+                max_iters: 20_000,
+                record_history: false,
+            },
+            None,
+        );
+        assert!(mr.converged, "minres residual {}", mr.residual);
+        assert!(rel_l2(&a.matvec(&mr.x), &b) < 1e-7);
+
+        let cgr = crate::iterative::cg(
+            &a,
+            &b,
+            &Identity,
+            &IterOpts {
+                tol: 1e-9,
+                max_iters: 20_000,
+                record_history: false,
+            },
+            None,
+        );
+        assert!(
+            !cgr.converged,
+            "CG should break down on an indefinite system"
+        );
+    }
+
+    #[test]
+    fn jacobi_preconditioning_reduces_iterations() {
+        let g = 24;
+        let sys = poisson2d(g, None);
+        let mut rng = Prng::new(2);
+        let b = rng.normal_vec(g * g);
+        let opts = IterOpts {
+            tol: 1e-8,
+            max_iters: 10_000,
+            record_history: false,
+        };
+        let plain = minres(&sys.matrix, &b, &Identity, &opts, None);
+        let jac = Jacobi::new(&sys.matrix).unwrap();
+        let pre = minres(&sys.matrix, &b, &jac, &opts, None);
+        assert!(plain.converged && pre.converged);
+        assert!(
+            pre.iters <= plain.iters,
+            "jacobi {} vs identity {}",
+            pre.iters,
+            plain.iters
+        );
+    }
+
+    #[test]
+    fn zero_rhs_returns_zero() {
+        let g = 8;
+        let sys = poisson2d(g, None);
+        let r = minres(
+            &sys.matrix,
+            &vec![0.0; g * g],
+            &Identity,
+            &IterOpts::default(),
+            None,
+        );
+        assert!(r.converged);
+        assert!(crate::util::norm2(&r.x) == 0.0);
+    }
+
+    #[test]
+    fn residual_history_is_monotone_nonincreasing() {
+        let g = 12;
+        let sys = poisson2d(g, None);
+        let mut rng = Prng::new(3);
+        let b = rng.normal_vec(g * g);
+        let r = minres(
+            &sys.matrix,
+            &b,
+            &Identity,
+            &IterOpts {
+                tol: 1e-10,
+                max_iters: 2000,
+                record_history: true,
+            },
+            None,
+        );
+        for w in r.history.windows(2) {
+            assert!(
+                w[1] <= w[0] * (1.0 + 1e-12),
+                "MINRES residual must be monotone: {} -> {}",
+                w[0],
+                w[1]
+            );
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! Iterative Krylov solvers — the Eigen/pytorch-native backend substrate.
+//!
+//! Everything is written against the [`LinOp`] trait so the same CG runs
+//! on CSR matrices, matrix-free stencil operators, Jacobians applied via
+//! autograd JVPs (nonlinear adjoints), and the distributed SpMV.
+
+pub mod amg;
+pub mod bicgstab;
+pub mod cg;
+pub mod gmres;
+pub mod minres;
+pub mod precond;
+
+pub use amg::{Amg, AmgOpts};
+pub use bicgstab::bicgstab;
+pub use cg::cg;
+pub use gmres::gmres;
+pub use minres::minres;
+pub use precond::{Ic0, Identity, Ilu0, Jacobi, Precond, Ssor};
+
+use crate::sparse::poisson::StencilCoeffs;
+use crate::sparse::Csr;
+
+/// A linear operator y = A x (and optionally y = A^T x).
+pub trait LinOp {
+    fn nrows(&self) -> usize;
+    fn ncols(&self) -> usize;
+    fn apply(&self, x: &[f64], y: &mut [f64]);
+    /// Transpose apply; default panics for operators without one.
+    fn apply_t(&self, _x: &[f64], _y: &mut [f64]) {
+        panic!("apply_t not implemented for this operator");
+    }
+}
+
+impl LinOp for Csr {
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.spmv(x, y);
+    }
+    fn apply_t(&self, x: &[f64], y: &mut [f64]) {
+        self.spmv_t(x, y);
+    }
+}
+
+impl LinOp for StencilCoeffs {
+    fn nrows(&self) -> usize {
+        self.n()
+    }
+    fn ncols(&self) -> usize {
+        self.n()
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.spmv(x, y);
+    }
+}
+
+/// Options shared by all Krylov loops.
+#[derive(Clone, Debug)]
+pub struct IterOpts {
+    /// Absolute residual tolerance on ||b - A x||_2.
+    pub tol: f64,
+    pub max_iters: usize,
+    /// Record ||r|| per iteration (benches/plots).
+    pub record_history: bool,
+}
+
+impl Default for IterOpts {
+    fn default() -> Self {
+        IterOpts {
+            tol: 1e-10,
+            max_iters: 10_000,
+            record_history: false,
+        }
+    }
+}
+
+/// Outcome of an iterative solve.  `converged == false` is not an error
+/// at this layer: Table 4 runs a fixed iteration budget on purpose.
+#[derive(Clone, Debug)]
+pub struct IterResult {
+    pub x: Vec<f64>,
+    pub iters: usize,
+    pub residual: f64,
+    pub converged: bool,
+    pub history: Vec<f64>,
+}
+
+impl IterResult {
+    /// Convert to a hard error when convergence was required.
+    pub fn require_converged(self, tol: f64) -> crate::error::Result<Self> {
+        if self.converged {
+            Ok(self)
+        } else {
+            Err(crate::error::Error::NotConverged {
+                iters: self.iters,
+                residual: self.residual,
+                tol,
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::poisson::poisson2d;
+    use crate::util::{self, Prng};
+
+    #[test]
+    fn stencil_and_csr_linop_agree() {
+        let g = 10;
+        let sys = poisson2d(g, None);
+        let mut rng = Prng::new(0);
+        let x = rng.normal_vec(g * g);
+        let mut y1 = vec![0.0; g * g];
+        let mut y2 = vec![0.0; g * g];
+        LinOp::apply(&sys.matrix, &x, &mut y1);
+        LinOp::apply(&sys.coeffs, &x, &mut y2);
+        assert!(util::max_abs_diff(&y1, &y2) < 1e-11);
+    }
+
+    #[test]
+    fn require_converged_errors() {
+        let r = IterResult {
+            x: vec![],
+            iters: 5,
+            residual: 1.0,
+            converged: false,
+            history: vec![],
+        };
+        assert!(r.require_converged(1e-10).is_err());
+    }
+}

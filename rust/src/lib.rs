@@ -1,0 +1,61 @@
+//! # rsla — differentiable sparse linear algebra with adjoint solvers
+//!
+//! A ground-up Rust + JAX + Pallas reproduction of
+//! *"torch-sla: Differentiable Sparse Linear Algebra with Adjoint Solvers
+//! and Sparse Tensor Parallelism for PyTorch"* (Chi & Wen,
+//! AI4Physics@ICML 2026).
+//!
+//! The paper's host (PyTorch autograd + CUDA backends) is replaced by a
+//! three-layer stack:
+//!
+//! * **L3 (this crate)** — the coordinator: typed sparse tensors
+//!   ([`tensor`]), five interchangeable solver backends with auto-dispatch
+//!   ([`backend`]), a reverse-mode autograd engine ([`autograd`]), the
+//!   implicit-function-theorem adjoint framework ([`adjoint`]), the
+//!   distributed domain-decomposition layer with autograd-compatible halo
+//!   exchange ([`distributed`]), and a solve service/router
+//!   ([`coordinator`]).
+//! * **L2 (python/compile/model.py)** — JAX compute graphs (fused
+//!   Jacobi-PCG, dense Cholesky solve, SpMV entry points) AOT-lowered to
+//!   HLO text artifacts.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels (stencil SpMV, ELL
+//!   SpMV) inlined into the L2 graphs.
+//!
+//! Python never runs on the solve path: the [`runtime`] module loads the
+//! AOT artifacts through PJRT (`xla` crate) once and executes them from
+//! Rust.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use rsla::tensor::{SparseTensor, SolveOpts};
+//! use rsla::sparse::poisson::poisson2d;
+//!
+//! let sys = poisson2d(64, None);             // 2D Poisson, 64x64 interior
+//! let a = SparseTensor::from_csr(sys.matrix.clone());
+//! let b = vec![1.0; a.nrows()];
+//! let x = a.solve(&b, &SolveOpts::default()).unwrap();
+//! ```
+//!
+//! See `examples/` for autograd-aware solves, the inverse
+//! coefficient-learning task (paper Fig. 3), and distributed runs.
+
+pub mod adjoint;
+pub mod autograd;
+pub mod backend;
+pub mod coordinator;
+pub mod direct;
+pub mod distributed;
+pub mod eigen;
+pub mod error;
+pub mod gradcheck;
+pub mod iterative;
+pub mod metrics;
+pub mod nonlinear;
+pub mod optim;
+pub mod runtime;
+pub mod sparse;
+pub mod tensor;
+pub mod util;
+
+pub use error::{Error, Result};

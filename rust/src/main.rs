@@ -1,0 +1,259 @@
+//! rsla CLI — leader entrypoint for the coordinator.
+//!
+//! Subcommands:
+//!   backends                     list backends + artifact inventory
+//!   explain --n N [--accel]      show the dispatch decision for a size
+//!   solve --g G [--backend B]    solve a 2D Poisson system, report stats
+//!   serve-sim [--requests N]     run the solve service on a synthetic
+//!                                request stream, report throughput
+//!   dist --g G --ranks P [--precond jacobi|amg]   distributed CG demo
+
+use std::sync::Arc;
+
+use rsla::backend::{Device, Dispatcher, Operator, Problem, SolveOpts};
+use rsla::coordinator::{ServiceConfig, SolveService};
+use rsla::distributed::{DSparseTensor, DistIterOpts, PartitionStrategy};
+use rsla::metrics::stopwatch::timed;
+use rsla::runtime::RuntimeHandle;
+use rsla::sparse::poisson::{kappa_star, poisson2d};
+use rsla::util::Prng;
+
+/// Minimal flag parser: --key value / --flag.
+struct Args {
+    cmd: String,
+    kv: std::collections::HashMap<String, String>,
+    flags: std::collections::HashSet<String>,
+}
+
+fn parse_args() -> Args {
+    let mut args = std::env::args().skip(1);
+    let cmd = args.next().unwrap_or_else(|| "help".into());
+    let mut kv = std::collections::HashMap::new();
+    let mut flags = std::collections::HashSet::new();
+    let rest: Vec<String> = args.collect();
+    let mut i = 0;
+    while i < rest.len() {
+        let a = rest[i].trim_start_matches("--").to_string();
+        if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+            kv.insert(a, rest[i + 1].clone());
+            i += 2;
+        } else {
+            flags.insert(a);
+            i += 1;
+        }
+    }
+    Args { cmd, kv, flags }
+}
+
+impl Args {
+    fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.kv
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+}
+
+fn dispatcher(accel: bool) -> Arc<Dispatcher> {
+    if accel {
+        match RuntimeHandle::spawn_default() {
+            Ok(h) => Arc::new(Dispatcher::new(Some(h))),
+            Err(e) => {
+                eprintln!("warning: no artifacts ({e}); CPU backends only");
+                Arc::new(Dispatcher::new(None))
+            }
+        }
+    } else {
+        Arc::new(Dispatcher::new(None))
+    }
+}
+
+fn main() {
+    let args = parse_args();
+    match args.cmd.as_str() {
+        "backends" => cmd_backends(),
+        "explain" => cmd_explain(&args),
+        "solve" => cmd_solve(&args),
+        "serve-sim" => cmd_serve_sim(&args),
+        "dist" => cmd_dist(&args),
+        _ => {
+            println!(
+                "rsla — differentiable sparse linear algebra (torch-sla reproduction)\n\n\
+                 usage: rsla <backends|explain|solve|serve-sim|dist> [--key value]\n\
+                 \x20 backends                      list backends + artifacts\n\
+                 \x20 explain --n N [--accel]       dispatch decision for size N\n\
+                 \x20 solve --g G [--backend B] [--accel]\n\
+                 \x20 serve-sim [--requests N] [--workers W]\n\
+                 \x20 dist --g G --ranks P"
+            );
+        }
+    }
+}
+
+fn cmd_backends() {
+    let d = dispatcher(true);
+    println!("backends (dispatch order depends on device/problem):");
+    for name in d.backend_names() {
+        println!("  {name}");
+    }
+    if let Ok(h) = RuntimeHandle::spawn_default() {
+        println!("\nAOT artifacts ({}):", h.names().len());
+        for n in h.names() {
+            println!("  {n}");
+        }
+    }
+}
+
+fn cmd_explain(args: &Args) {
+    let n = args.usize_or("n", 10_000);
+    let g = (n as f64).sqrt() as usize;
+    let accel = args.flags.contains("accel");
+    let d = dispatcher(accel);
+    let sys = poisson2d(g.max(4), None);
+    let b = vec![1.0; sys.matrix.nrows];
+    let opts = SolveOpts {
+        device: if accel { Device::Accel } else { Device::Cpu },
+        ..Default::default()
+    };
+    let p = Problem {
+        op: Operator::Stencil(&sys.coeffs),
+        b: &b,
+    };
+    println!(
+        "n={} device={:?} -> backend {:?}",
+        sys.matrix.nrows,
+        opts.device,
+        d.select(&p, &opts)
+    );
+}
+
+fn cmd_solve(args: &Args) {
+    let g = args.usize_or("g", 64);
+    let accel = args.flags.contains("accel");
+    let d = dispatcher(accel);
+    let kappa = kappa_star(g);
+    let sys = poisson2d(g, Some(&kappa));
+    let mut rng = Prng::new(0);
+    let b = rng.normal_vec(g * g);
+    let mut opts = SolveOpts {
+        device: if accel { Device::Accel } else { Device::Cpu },
+        tol: 1e-8,
+        ..Default::default()
+    };
+    if let Some(be) = args.kv.get("backend") {
+        opts.backend = Some(be.clone());
+    }
+    let p = Problem {
+        op: Operator::Stencil(&sys.coeffs),
+        b: &b,
+    };
+    let (out, secs) = timed(|| d.solve(&p, &opts));
+    match out {
+        Ok(out) => println!(
+            "g={g} n={} backend={} method={} iters={} residual={:.2e} mem={:.1} MB time={:.1} ms",
+            g * g,
+            out.backend,
+            out.method,
+            out.iters,
+            out.residual,
+            out.peak_bytes as f64 / 1e6,
+            secs * 1e3
+        ),
+        Err(e) => println!("solve failed: {e}"),
+    }
+}
+
+fn cmd_serve_sim(args: &Args) {
+    let requests = args.usize_or("requests", 64);
+    let workers = args.usize_or("workers", 4);
+    let d = dispatcher(false);
+    let svc = SolveService::start(
+        d,
+        ServiceConfig {
+            workers,
+            ..Default::default()
+        },
+    );
+    let mut rng = Prng::new(7);
+    // mixed stream: 70% shared-pattern Poisson (batchable), 30% random SPD
+    let poisson = poisson2d(24, None);
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::new();
+    for i in 0..requests {
+        let (a, b) = if i % 10 < 7 {
+            (poisson.matrix.clone(), rng.normal_vec(poisson.matrix.nrows))
+        } else {
+            let a = rsla::sparse::graphs::random_spd(&mut rng, 100 + (i % 5) * 30, 3, 1.0);
+            let b = rng.normal_vec(a.nrows);
+            (a, b)
+        };
+        rxs.push(svc.submit(a, b, SolveOpts::default()));
+    }
+    let mut lat = Vec::new();
+    let mut batched = 0u64;
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        resp.outcome.expect("solve failed");
+        lat.push(resp.queue_seconds + resp.service_seconds);
+        if resp.batch_size > 1 {
+            batched += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let stats = svc.stats();
+    println!(
+        "served {requests} solves in {:.1} ms ({:.0} req/s), workers={workers}",
+        wall * 1e3,
+        requests as f64 / wall
+    );
+    println!(
+        "p50 latency {:.2} ms  p99 {:.2} ms  batched {batched}/{requests}  batches {}",
+        lat[lat.len() / 2] * 1e3,
+        lat[lat.len() * 99 / 100] * 1e3,
+        stats.batches,
+    );
+    svc.shutdown();
+}
+
+fn cmd_dist(args: &Args) {
+    let g = args.usize_or("g", 128);
+    let ranks = args.usize_or("ranks", 4);
+    // --precond jacobi (default, paper parity) | amg (block additive Schwarz)
+    let precond = match args.kv.get("precond").map(|s| s.as_str()) {
+        Some("amg") => rsla::distributed::DistPrecondKind::BlockAmg,
+        _ => rsla::distributed::DistPrecondKind::Jacobi,
+    };
+    let sys = poisson2d(g, None);
+    let t = DSparseTensor::from_global(&sys.matrix, Some(&sys.coords), ranks, PartitionStrategy::Rcb)
+        .expect("partition");
+    let mut rng = Prng::new(0);
+    let b = rng.normal_vec(g * g);
+    let opts = DistIterOpts {
+        precond,
+        ..Default::default()
+    };
+    let ((x, reports), secs) = timed(|| t.solve(&b, &opts).unwrap());
+    let res = {
+        let ax = sys.matrix.matvec(&x);
+        b.iter()
+            .zip(&ax)
+            .map(|(bi, ai)| (bi - ai) * (bi - ai))
+            .sum::<f64>()
+            .sqrt()
+    };
+    println!(
+        "dist-cg g={g} n={} ranks={ranks} iters={} residual={:.2e} time={:.1} ms",
+        g * g,
+        reports[0].iters,
+        res,
+        secs * 1e3
+    );
+    for (p, r) in reports.iter().enumerate() {
+        println!(
+            "  rank {p}: mem {:.2} MB, sent {:.2} MB",
+            r.peak_bytes as f64 / 1e6,
+            r.bytes_sent as f64 / 1e6
+        );
+    }
+}

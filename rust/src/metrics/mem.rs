@@ -1,0 +1,156 @@
+//! Byte-accurate memory accounting for solver working sets.
+//!
+//! `MemTracker` is a cheap atomic current/peak pair.  Solvers wrap their
+//! large buffers in [`TrackedBuf`] (or call `add`/`sub` for matrices they
+//! borrow) so that the peak reported in benches is a *measured* count of
+//! bytes held, not a model.  The naive-autograd tape (Fig. 2's O(k·n)
+//! growth) and the distributed per-rank working sets use the same
+//! mechanism.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Current/peak byte counter; clone-shareable across threads.
+#[derive(Clone, Default)]
+pub struct MemTracker {
+    inner: Arc<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    current: AtomicU64,
+    peak: AtomicU64,
+}
+
+impl MemTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&self, bytes: u64) {
+        let cur = self.inner.current.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.inner.peak.fetch_max(cur, Ordering::Relaxed);
+    }
+
+    pub fn sub(&self, bytes: u64) {
+        self.inner.current.fetch_sub(bytes, Ordering::Relaxed);
+    }
+
+    pub fn current(&self) -> u64 {
+        self.inner.current.load(Ordering::Relaxed)
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.inner.peak.load(Ordering::Relaxed)
+    }
+
+    /// Reset peak to the current level (start of a measured region).
+    pub fn reset_peak(&self) {
+        self.inner
+            .peak
+            .store(self.current(), Ordering::Relaxed);
+    }
+
+    /// Allocate a tracked, zero-initialized f64 buffer.
+    pub fn buf(&self, n: usize) -> TrackedBuf {
+        self.add((n * 8) as u64);
+        TrackedBuf {
+            data: vec![0.0; n],
+            tracker: self.clone(),
+        }
+    }
+
+    /// Track an existing allocation for its lifetime (returns a guard).
+    pub fn hold(&self, bytes: u64) -> MemGuard {
+        self.add(bytes);
+        MemGuard {
+            bytes,
+            tracker: self.clone(),
+        }
+    }
+}
+
+/// An owned f64 buffer whose bytes are accounted until drop.
+pub struct TrackedBuf {
+    pub data: Vec<f64>,
+    tracker: MemTracker,
+}
+
+impl TrackedBuf {
+    /// Extract the underlying vector, releasing the accounted bytes
+    /// (the buffer is returned to the caller and no longer counted as
+    /// solver working set).
+    pub fn take(mut self) -> Vec<f64> {
+        self.tracker.sub((self.data.len() * 8) as u64);
+        std::mem::take(&mut self.data)
+    }
+}
+
+impl Drop for TrackedBuf {
+    fn drop(&mut self) {
+        self.tracker.sub((self.data.len() * 8) as u64);
+    }
+}
+
+impl std::ops::Deref for TrackedBuf {
+    type Target = [f64];
+    fn deref(&self) -> &[f64] {
+        &self.data
+    }
+}
+
+impl std::ops::DerefMut for TrackedBuf {
+    fn deref_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+}
+
+/// RAII guard for borrowed allocations (e.g. the input matrix itself).
+pub struct MemGuard {
+    bytes: u64,
+    tracker: MemTracker,
+}
+
+impl Drop for MemGuard {
+    fn drop(&mut self) {
+        self.tracker.sub(self.bytes);
+    }
+}
+
+/// Bytes held by a CSR matrix: indptr (8B) + indices (8B) + vals (8B).
+pub fn csr_bytes(nrows: usize, nnz: usize) -> u64 {
+    ((nrows + 1) * 8 + nnz * 16) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_tracks_high_water_mark() {
+        let t = MemTracker::new();
+        {
+            let _a = t.buf(1000); // 8000 B
+            assert_eq!(t.current(), 8000);
+            {
+                let _b = t.buf(500); // +4000
+                assert_eq!(t.peak(), 12000);
+            }
+            assert_eq!(t.current(), 8000);
+        }
+        assert_eq!(t.current(), 0);
+        assert_eq!(t.peak(), 12000);
+        t.reset_peak();
+        assert_eq!(t.peak(), 0);
+    }
+
+    #[test]
+    fn guard_releases() {
+        let t = MemTracker::new();
+        {
+            let _g = t.hold(1024);
+            assert_eq!(t.current(), 1024);
+        }
+        assert_eq!(t.current(), 0);
+    }
+}

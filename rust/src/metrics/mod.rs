@@ -1,0 +1,63 @@
+//! Metrics: wall-clock stopwatches, counters, and the device-memory model.
+//!
+//! The paper reports peak memory per solve (Tables 3-4, Fig. 2) and OOM
+//! walls.  This testbed has no CUDA allocator to interrogate, so solver
+//! memory is *accounted*: every solver registers the buffers it holds via
+//! [`mem::MemTracker`] (measured `len * 8` bytes, not estimates), and the
+//! accelerator backends check the accounted requirement against a
+//! configurable budget before running — reproducing the OOM rows as
+//! budget violations backed by real byte counts.
+
+pub mod mem;
+pub mod stopwatch;
+
+pub use mem::MemTracker;
+pub use stopwatch::Stopwatch;
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Process-wide named counters/gauges used by the coordinator
+/// (requests routed per backend, batches formed, halo bytes moved...).
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<HashMap<String, u64>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn incr(&self, name: &str, by: u64) {
+        let mut m = self.counters.lock().unwrap();
+        *m.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn get(&self, name: &str) -> u64 {
+        *self.counters.lock().unwrap().get(name).unwrap_or(&0)
+    }
+
+    /// Sorted snapshot for reports.
+    pub fn snapshot(&self) -> Vec<(String, u64)> {
+        let m = self.counters.lock().unwrap();
+        let mut v: Vec<_> = m.iter().map(|(k, c)| (k.clone(), *c)).collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_counts() {
+        let r = Registry::new();
+        r.incr("solves", 2);
+        r.incr("solves", 3);
+        assert_eq!(r.get("solves"), 5);
+        assert_eq!(r.get("missing"), 0);
+        assert_eq!(r.snapshot(), vec![("solves".to_string(), 5)]);
+    }
+}

@@ -1,0 +1,106 @@
+//! Wall-clock timing helpers for benches and the coordinator.
+
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch with named laps (per-phase profiling in §Perf).
+pub struct Stopwatch {
+    start: Instant,
+    last: Instant,
+    laps: Vec<(String, Duration)>,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        let now = Instant::now();
+        Stopwatch {
+            start: now,
+            last: now,
+            laps: Vec::new(),
+        }
+    }
+
+    /// Record the time since the previous lap under `name`.
+    pub fn lap(&mut self, name: &str) -> Duration {
+        let now = Instant::now();
+        let d = now - self.last;
+        self.last = now;
+        self.laps.push((name.to_string(), d));
+        d
+    }
+
+    pub fn total(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn laps(&self) -> &[(String, Duration)] {
+        &self.laps
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        for (name, d) in &self.laps {
+            s.push_str(&format!("  {name:<28} {:>10.3} ms\n", d.as_secs_f64() * 1e3));
+        }
+        s.push_str(&format!(
+            "  {:<28} {:>10.3} ms\n",
+            "TOTAL",
+            self.total().as_secs_f64() * 1e3
+        ));
+        s
+    }
+}
+
+/// Run `f` and return (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Median-of-k timing for micro-benches: runs `f` k times, returns
+/// (last_result, median_seconds).
+pub fn timed_median<T>(k: usize, mut f: impl FnMut() -> T) -> (T, f64) {
+    assert!(k >= 1);
+    let mut times = Vec::with_capacity(k);
+    let mut out = None;
+    for _ in 0..k {
+        let t0 = Instant::now();
+        out = Some(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (out.unwrap(), times[k / 2])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn laps_accumulate() {
+        let mut sw = Stopwatch::new();
+        std::thread::sleep(Duration::from_millis(1));
+        sw.lap("a");
+        sw.lap("b");
+        assert_eq!(sw.laps().len(), 2);
+        assert!(sw.laps()[0].1 >= Duration::from_millis(1));
+        assert!(sw.report().contains("TOTAL"));
+    }
+
+    #[test]
+    fn timed_median_runs_k_times() {
+        let mut count = 0;
+        let (_, t) = timed_median(5, || {
+            count += 1;
+            count
+        });
+        assert_eq!(count, 5);
+        assert!(t >= 0.0);
+    }
+}

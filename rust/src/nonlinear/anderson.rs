@@ -1,0 +1,191 @@
+//! Anderson acceleration (Anderson 1965) for fixed-point iterations,
+//! type-II (least-squares on residual differences) with Tikhonov-
+//! regularized normal equations.
+
+use super::{NonlinearResult, PicardOpts};
+use crate::util::norm2;
+
+/// Solve u = G(u) with Anderson depth `m` (m = 0 degenerates to Picard).
+pub fn anderson<G>(g: G, u0: &[f64], m: usize, opts: &PicardOpts) -> NonlinearResult
+where
+    G: Fn(&[f64], &mut [f64]),
+{
+    let n = u0.len();
+    let beta = opts.relax;
+    let mut u = u0.to_vec();
+    let mut gu = vec![0.0; n];
+
+    // histories of u_k and f_k = G(u_k) - u_k
+    let mut us: Vec<Vec<f64>> = Vec::new();
+    let mut fs: Vec<Vec<f64>> = Vec::new();
+
+    let mut iters = 0;
+    let mut fnorm = f64::INFINITY;
+    while iters < opts.max_iters && fnorm > opts.tol {
+        g(&u, &mut gu);
+        let f: Vec<f64> = (0..n).map(|i| gu[i] - u[i]).collect();
+        fnorm = norm2(&f);
+        if fnorm <= opts.tol {
+            u = gu.clone();
+            iters += 1;
+            break;
+        }
+        us.push(u.clone());
+        fs.push(f.clone());
+        if us.len() > m + 1 {
+            us.remove(0);
+            fs.remove(0);
+        }
+        let mk = us.len() - 1;
+        if mk == 0 {
+            // plain relaxed Picard step
+            for i in 0..n {
+                u[i] += beta * f[i];
+            }
+        } else {
+            // df_j = f_{j+1} - f_j, du_j = u_{j+1} - u_j (j = 0..mk)
+            let mut dftf = vec![0f64; mk * mk];
+            let mut dff = vec![0f64; mk];
+            let df: Vec<Vec<f64>> = (0..mk)
+                .map(|j| (0..n).map(|i| fs[j + 1][i] - fs[j][i]).collect())
+                .collect();
+            for a in 0..mk {
+                for b in a..mk {
+                    let v = crate::util::dot(&df[a], &df[b]);
+                    dftf[a * mk + b] = v;
+                    dftf[b * mk + a] = v;
+                }
+                dff[a] = crate::util::dot(&df[a], &f);
+            }
+            // Tikhonov regularization for near-singular histories
+            let trace: f64 = (0..mk).map(|a| dftf[a * mk + a]).sum();
+            let reg = 1e-12 * (trace / mk as f64).max(1e-300);
+            for a in 0..mk {
+                dftf[a * mk + a] += reg;
+            }
+            let gamma = dense_solve(&mut dftf, &mut dff, mk);
+            // u_{k+1} = u_k + beta f_k - sum_j gamma_j (du_j + beta df_j)
+            let mut unew: Vec<f64> = (0..n).map(|i| u[i] + beta * f[i]).collect();
+            for j in 0..mk {
+                let gj = gamma[j];
+                if gj == 0.0 {
+                    continue;
+                }
+                for i in 0..n {
+                    let du_ji = us[j + 1][i] - us[j][i];
+                    unew[i] -= gj * (du_ji + beta * df[j][i]);
+                }
+            }
+            u = unew;
+        }
+        iters += 1;
+    }
+
+    NonlinearResult {
+        converged: fnorm <= opts.tol,
+        u,
+        iters,
+        residual_norm: fnorm,
+        linear_solves: iters,
+    }
+}
+
+/// In-place dense Gaussian elimination with partial pivoting (tiny
+/// systems from the Anderson normal equations).
+fn dense_solve(a: &mut [f64], b: &mut [f64], n: usize) -> Vec<f64> {
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        for r in col + 1..n {
+            if a[r * n + col].abs() > a[piv * n + col].abs() {
+                piv = r;
+            }
+        }
+        if piv != col {
+            for c in 0..n {
+                a.swap(col * n + c, piv * n + c);
+            }
+            b.swap(col, piv);
+        }
+        let d = a[col * n + col];
+        if d == 0.0 {
+            continue; // singular direction: leave gamma 0
+        }
+        for r in col + 1..n {
+            let factor = a[r * n + col] / d;
+            if factor == 0.0 {
+                continue;
+            }
+            for c in col..n {
+                a[r * n + c] -= factor * a[col * n + c];
+            }
+            b[r] -= factor * b[col];
+        }
+    }
+    let mut x = vec![0f64; n];
+    for r in (0..n).rev() {
+        let mut s = b[r];
+        for c in r + 1..n {
+            s -= a[r * n + c] * x[c];
+        }
+        let d = a[r * n + r];
+        x[r] = if d != 0.0 { s / d } else { 0.0 };
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nonlinear::picard;
+
+    #[test]
+    fn accelerates_cosine_fixed_point() {
+        let opts = PicardOpts {
+            tol: 1e-12,
+            max_iters: 200,
+            relax: 1.0,
+        };
+        let pic = picard(|u, out| out[0] = u[0].cos(), &[0.0], &opts);
+        let and = anderson(|u, out| out[0] = u[0].cos(), &[0.0], 3, &opts);
+        assert!(pic.converged && and.converged);
+        assert!(
+            and.iters < pic.iters / 2,
+            "anderson {} vs picard {}",
+            and.iters,
+            pic.iters
+        );
+        assert!((and.u[0] - 0.739_085_133_215_160_6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn handles_linear_vector_map() {
+        // u = M u + c with spectral radius < 1
+        let mmat = [[0.5, 0.1], [0.0, 0.3]];
+        let c = [1.0, 2.0];
+        let gmap = |u: &[f64], out: &mut [f64]| {
+            for i in 0..2 {
+                out[i] = mmat[i][0] * u[0] + mmat[i][1] * u[1] + c[i];
+            }
+        };
+        let r = anderson(gmap, &[0.0, 0.0], 2, &PicardOpts::default());
+        assert!(r.converged);
+        // exact: (I - M) u = c
+        let u1 = 2.0 / 0.7;
+        let u0 = (1.0 + 0.1 * u1) / 0.5;
+        assert!((r.u[0] - u0).abs() < 1e-8);
+        assert!((r.u[1] - u1).abs() < 1e-8);
+        // Anderson with depth >= dimension converges in O(dim) iterations
+        // on affine maps; allow slack for the regularization
+        assert!(r.iters <= 10, "iters {}", r.iters);
+    }
+
+    #[test]
+    fn dense_solve_small() {
+        let mut a = vec![2.0, 1.0, 1.0, 3.0];
+        let mut b = vec![5.0, 10.0];
+        let x = dense_solve(&mut a, &mut b, 2);
+        assert!((x[0] - 1.0).abs() < 1e-12);
+        assert!((x[1] - 3.0).abs() < 1e-12);
+    }
+}

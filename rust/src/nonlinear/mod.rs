@@ -1,0 +1,116 @@
+//! Nonlinear solvers: Newton, Picard, and Anderson acceleration
+//! (paper §3.2.2, "Nonlinear systems").
+//!
+//! Residuals implement [`Residual`]; the assembled-Jacobian path powers
+//! damped Newton (each step solved by the direct/iterative substrate),
+//! and the JVP/VJP hooks power matrix-free Newton–Krylov and — crucially
+//! — the adjoint solve `J^T lambda = dL/du` in [`crate::adjoint`].
+
+pub mod anderson;
+pub mod newton;
+pub mod picard;
+
+pub use anderson::anderson;
+pub use newton::{newton, NewtonOpts};
+pub use picard::{picard, PicardOpts};
+
+use crate::sparse::Csr;
+
+/// A nonlinear residual F(u; theta) = 0 with differentiable structure.
+///
+/// `theta` is carried by the implementing struct; the adjoint layer asks
+/// for VJPs against it via [`Residual::vjp_theta`].
+pub trait Residual {
+    fn dim(&self) -> usize;
+
+    /// out = F(u).
+    fn eval(&self, u: &[f64], out: &mut [f64]);
+
+    /// Assembled Jacobian J = dF/du at `u`.
+    fn jacobian(&self, u: &[f64]) -> Csr;
+
+    /// Jacobian-vector product J v (default: finite difference).
+    fn jvp(&self, u: &[f64], v: &[f64], out: &mut [f64]) {
+        let n = self.dim();
+        let eps = 1e-7 * (1.0 + crate::util::norm2(u)) / (1.0 + crate::util::norm2(v));
+        let mut up = u.to_vec();
+        let mut um = u.to_vec();
+        for i in 0..n {
+            up[i] += eps * v[i];
+            um[i] -= eps * v[i];
+        }
+        let mut fp = vec![0.0; n];
+        let mut fm = vec![0.0; n];
+        self.eval(&up, &mut fp);
+        self.eval(&um, &mut fm);
+        for i in 0..n {
+            out[i] = (fp[i] - fm[i]) / (2.0 * eps);
+        }
+    }
+
+    /// Vector-Jacobian product w^T J (default: via assembled Jacobian).
+    fn vjp_u(&self, u: &[f64], w: &[f64], out: &mut [f64]) {
+        let j = self.jacobian(u);
+        j.spmv_t(w, out);
+    }
+
+    /// Gradient of w^T F with respect to the residual's parameters theta,
+    /// flattened.  Needed by the adjoint framework; the default is "no
+    /// parameters".
+    fn vjp_theta(&self, _u: &[f64], _w: &[f64]) -> Vec<f64> {
+        Vec::new()
+    }
+}
+
+/// Result of a nonlinear solve.
+#[derive(Clone, Debug)]
+pub struct NonlinearResult {
+    pub u: Vec<f64>,
+    pub iters: usize,
+    pub residual_norm: f64,
+    pub converged: bool,
+    /// Number of inner linear solves performed (paper Table 5 reports
+    /// forward cost in units of solves).
+    pub linear_solves: usize,
+}
+
+#[cfg(test)]
+pub(crate) mod test_residuals {
+    use super::*;
+    use crate::sparse::poisson::PoissonSystem;
+    use crate::sparse::{Coo, Csr};
+
+    /// The paper's example nonlinearity: F(u) = A u + u^2 - f.
+    pub struct QuadraticPoisson {
+        pub sys: PoissonSystem,
+        pub f: Vec<f64>,
+    }
+
+    impl Residual for QuadraticPoisson {
+        fn dim(&self) -> usize {
+            self.f.len()
+        }
+
+        fn eval(&self, u: &[f64], out: &mut [f64]) {
+            self.sys.matrix.spmv(u, out);
+            for i in 0..u.len() {
+                out[i] += u[i] * u[i] - self.f[i];
+            }
+        }
+
+        fn jacobian(&self, u: &[f64]) -> Csr {
+            // A + 2 diag(u)
+            let a = &self.sys.matrix;
+            let n = a.nrows;
+            let mut coo = Coo::with_capacity(n, n, a.nnz() + n);
+            for r in 0..n {
+                let (cols, vals) = a.row(r);
+                for (c, v) in cols.iter().zip(vals) {
+                    coo.push(r, *c, *v);
+                }
+                coo.push(r, r, 2.0 * u[r]);
+            }
+            coo.to_csr()
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Damped Newton with assembled-Jacobian direct steps.
+
+use super::{NonlinearResult, Residual};
+use crate::direct::direct_solve;
+use crate::util::norm2;
+
+#[derive(Clone, Debug)]
+pub struct NewtonOpts {
+    pub tol: f64,
+    pub max_iters: usize,
+    /// Armijo-style backtracking halvings per step (0 = undamped).
+    pub max_halvings: usize,
+    /// Force exactly `max_iters` iterations (Table 5 uses fixed 5 Newton
+    /// steps to count forward cost).
+    pub fixed_iters: bool,
+}
+
+impl Default for NewtonOpts {
+    fn default() -> Self {
+        NewtonOpts {
+            tol: 1e-10,
+            max_iters: 50,
+            max_halvings: 20,
+            fixed_iters: false,
+        }
+    }
+}
+
+/// Solve F(u) = 0 by Newton's method from `u0`.
+pub fn newton(f: &dyn Residual, u0: &[f64], opts: &NewtonOpts) -> NonlinearResult {
+    let n = f.dim();
+    assert_eq!(u0.len(), n);
+    let mut u = u0.to_vec();
+    let mut fu = vec![0.0; n];
+    f.eval(&u, &mut fu);
+    let mut fnorm = norm2(&fu);
+    let mut linear_solves = 0;
+
+    let mut iters = 0;
+    while iters < opts.max_iters && (opts.fixed_iters || fnorm > opts.tol) {
+        let j = f.jacobian(&u);
+        // Newton step: J du = -F
+        let rhs: Vec<f64> = fu.iter().map(|x| -x).collect();
+        let du = match direct_solve(&j, &rhs) {
+            Ok(d) => d,
+            Err(_) => break, // singular Jacobian: return best iterate
+        };
+        linear_solves += 1;
+        // backtracking line search on ||F||
+        let mut t = 1.0;
+        let mut accepted = false;
+        for _ in 0..=opts.max_halvings {
+            let trial: Vec<f64> = u.iter().zip(&du).map(|(ui, di)| ui + t * di).collect();
+            let mut ftrial = vec![0.0; n];
+            f.eval(&trial, &mut ftrial);
+            let fn_trial = norm2(&ftrial);
+            if fn_trial < fnorm || opts.max_halvings == 0 {
+                u = trial;
+                fu = ftrial;
+                fnorm = fn_trial;
+                accepted = true;
+                break;
+            }
+            t *= 0.5;
+        }
+        if !accepted {
+            // full step as a last resort (keeps fixed_iters semantics)
+            for i in 0..n {
+                u[i] += du[i];
+            }
+            f.eval(&u, &mut fu);
+            fnorm = norm2(&fu);
+        }
+        iters += 1;
+    }
+
+    NonlinearResult {
+        converged: fnorm <= opts.tol,
+        u,
+        iters,
+        residual_norm: fnorm,
+        linear_solves,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nonlinear::test_residuals::QuadraticPoisson;
+    use crate::sparse::poisson::poisson2d;
+    use crate::util::Prng;
+
+    fn problem(g: usize, seed: u64) -> QuadraticPoisson {
+        let sys = poisson2d(g, None);
+        let mut rng = Prng::new(seed);
+        let f: Vec<f64> = (0..g * g).map(|_| rng.uniform() + 0.5).collect();
+        QuadraticPoisson { sys, f }
+    }
+
+    #[test]
+    fn converges_quadratically() {
+        let p = problem(10, 0);
+        let r = newton(&p, &vec![0.0; 100], &NewtonOpts::default());
+        assert!(r.converged, "residual {}", r.residual_norm);
+        assert!(r.iters <= 10, "took {} iterations", r.iters);
+        // verify F(u) ~ 0
+        let mut fu = vec![0.0; 100];
+        p.eval(&r.u, &mut fu);
+        assert!(crate::util::norm2(&fu) < 1e-9);
+    }
+
+    #[test]
+    fn fixed_iteration_mode_runs_exactly_k() {
+        let p = problem(8, 1);
+        let r = newton(
+            &p,
+            &vec![0.0; 64],
+            &NewtonOpts {
+                max_iters: 5,
+                fixed_iters: true,
+                ..NewtonOpts::default()
+            },
+        );
+        assert_eq!(r.iters, 5);
+        assert_eq!(r.linear_solves, 5);
+    }
+
+    #[test]
+    fn jvp_default_matches_jacobian() {
+        let p = problem(6, 2);
+        let mut rng = Prng::new(3);
+        let u = rng.normal_vec(36);
+        let v = rng.normal_vec(36);
+        let mut jv_fd = vec![0.0; 36];
+        crate::nonlinear::Residual::jvp(&p, &u, &v, &mut jv_fd);
+        let j = p.jacobian(&u);
+        let jv = j.matvec(&v);
+        for i in 0..36 {
+            assert!(
+                (jv_fd[i] - jv[i]).abs() < 1e-5 * (1.0 + jv[i].abs()),
+                "i={i}: {} vs {}",
+                jv_fd[i],
+                jv[i]
+            );
+        }
+    }
+
+    #[test]
+    fn scalar_quadratic() {
+        // F(u) = u^2 - 4 via a custom residual; root at 2
+        struct Sq;
+        impl crate::nonlinear::Residual for Sq {
+            fn dim(&self) -> usize {
+                1
+            }
+            fn eval(&self, u: &[f64], out: &mut [f64]) {
+                out[0] = u[0] * u[0] - 4.0;
+            }
+            fn jacobian(&self, u: &[f64]) -> crate::sparse::Csr {
+                let mut coo = crate::sparse::Coo::new(1, 1);
+                coo.push(0, 0, 2.0 * u[0]);
+                coo.to_csr()
+            }
+        }
+        let r = newton(&Sq, &[1.0], &NewtonOpts::default());
+        assert!(r.converged);
+        assert!((r.u[0] - 2.0).abs() < 1e-10);
+    }
+}

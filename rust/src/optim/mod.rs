@@ -1,0 +1,71 @@
+//! Optimizers for the end-to-end training loops (paper §4.4 uses Adam).
+
+/// Adam (Kingma & Ba 2015) over a flat parameter vector.
+pub struct Adam {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    m: Vec<f64>,
+    v: Vec<f64>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(n: usize, lr: f64) -> Self {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            t: 0,
+        }
+    }
+
+    /// One update step: params -= lr * mhat / (sqrt(vhat) + eps).
+    pub fn step(&mut self, params: &mut [f64], grads: &[f64]) {
+        assert_eq!(params.len(), self.m.len());
+        assert_eq!(grads.len(), self.m.len());
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..params.len() {
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * grads[i];
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * grads[i] * grads[i];
+            let mhat = self.m[i] / b1t;
+            let vhat = self.v[i] / b2t;
+            params[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimizes_quadratic() {
+        // f(x) = ||x - c||^2
+        let c = [3.0, -1.0, 0.5];
+        let mut x = vec![0.0; 3];
+        let mut adam = Adam::new(3, 0.1);
+        for _ in 0..500 {
+            let grads: Vec<f64> = x.iter().zip(&c).map(|(xi, ci)| 2.0 * (xi - ci)).collect();
+            adam.step(&mut x, &grads);
+        }
+        for (xi, ci) in x.iter().zip(&c) {
+            assert!((xi - ci).abs() < 1e-3, "{xi} vs {ci}");
+        }
+    }
+
+    #[test]
+    fn bias_correction_first_step() {
+        // first step should move by ~lr in the gradient direction
+        let mut x = vec![0.0];
+        let mut adam = Adam::new(1, 0.01);
+        adam.step(&mut x, &[1.0]);
+        assert!((x[0] + 0.01).abs() < 1e-6);
+    }
+}

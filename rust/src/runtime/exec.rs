@@ -1,0 +1,121 @@
+//! Literal marshalling: `Vec<f64>` / scalars <-> XLA literals.
+//!
+//! All artifacts are lowered with `return_tuple=True`, so results come
+//! back as one tuple literal that we decompose against the manifest's
+//! output specs.
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+
+use super::registry::TensorSpec;
+
+/// A typed argument for an artifact execution.
+#[derive(Clone, Debug)]
+pub enum Arg {
+    /// f64 tensor with explicit dims (row-major).
+    F64(Arc<Vec<f64>>, Vec<usize>),
+    /// i32 tensor.
+    I32(Arc<Vec<i32>>, Vec<usize>),
+    /// f64 scalar.
+    ScalarF64(f64),
+    /// i32 scalar.
+    ScalarI32(i32),
+}
+
+impl Arg {
+    /// Convenience: 1-D f64 vector.
+    pub fn vec(v: Vec<f64>) -> Self {
+        let n = v.len();
+        Arg::F64(Arc::new(v), vec![n])
+    }
+
+    /// Convenience: f64 tensor with dims.
+    pub fn tensor(v: Vec<f64>, dims: Vec<usize>) -> Self {
+        Arg::F64(Arc::new(v), dims)
+    }
+
+    pub fn elem_count(&self) -> usize {
+        match self {
+            Arg::F64(v, _) => v.len(),
+            Arg::I32(v, _) => v.len(),
+            Arg::ScalarF64(_) | Arg::ScalarI32(_) => 1,
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            Arg::F64(v, dims) => {
+                let dims_i: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(v.as_slice()).reshape(&dims_i)?
+            }
+            Arg::I32(v, dims) => {
+                let dims_i: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(v.as_slice()).reshape(&dims_i)?
+            }
+            Arg::ScalarF64(s) => xla::Literal::scalar(*s),
+            Arg::ScalarI32(s) => xla::Literal::scalar(*s),
+        })
+    }
+}
+
+/// A typed output from an artifact execution.
+#[derive(Clone, Debug)]
+pub enum OutValue {
+    F64(Vec<f64>),
+    I32(Vec<i32>),
+}
+
+impl OutValue {
+    pub fn as_f64(&self) -> &Vec<f64> {
+        match self {
+            OutValue::F64(v) => v,
+            OutValue::I32(_) => panic!("expected f64 output"),
+        }
+    }
+
+    pub fn scalar_f64(&self) -> f64 {
+        self.as_f64()[0]
+    }
+
+    pub fn scalar_i32(&self) -> i32 {
+        match self {
+            OutValue::I32(v) => v[0],
+            OutValue::F64(v) => v[0] as i32,
+        }
+    }
+}
+
+/// Execute a loaded executable with typed args, decomposing the tuple
+/// result per `out_specs`.
+pub fn execute(
+    exe: &xla::PjRtLoadedExecutable,
+    args: &[Arg],
+    out_specs: &[TensorSpec],
+) -> Result<Vec<OutValue>> {
+    let literals: Vec<xla::Literal> = args
+        .iter()
+        .map(|a| a.to_literal())
+        .collect::<Result<Vec<_>>>()?;
+    let result = exe.execute::<xla::Literal>(&literals)?;
+    let tuple = result[0][0].to_literal_sync()?;
+    let parts = tuple.to_tuple()?;
+    if parts.len() != out_specs.len() {
+        return Err(Error::Xla(format!(
+            "expected {} outputs, got {}",
+            out_specs.len(),
+            parts.len()
+        )));
+    }
+    parts
+        .into_iter()
+        .zip(out_specs)
+        .map(|(lit, spec)| {
+            if spec.dtype.starts_with("int32") {
+                Ok(OutValue::I32(lit.to_vec::<i32>()?))
+            } else {
+                Ok(OutValue::F64(lit.to_vec::<f64>()?))
+            }
+        })
+        .collect()
+}

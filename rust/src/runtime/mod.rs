@@ -1,0 +1,16 @@
+//! PJRT runtime: load AOT HLO-text artifacts once, execute from the
+//! Rust hot path.  Python never runs here (paper architecture: the
+//! "CUDA backend" half of torch-sla, re-hosted on XLA-CPU).
+//!
+//! * [`registry::Registry`] — artifact discovery (manifest.tsv), lazy
+//!   compile, executable cache.
+//! * [`exec`] — typed argument/result marshalling between `Vec<f64>` /
+//!   scalars and XLA literals.
+
+pub mod exec;
+pub mod registry;
+pub mod service;
+
+pub use exec::{Arg, OutValue};
+pub use registry::{ArtifactSpec, Registry};
+pub use service::RuntimeHandle;

@@ -1,0 +1,211 @@
+//! Artifact registry: manifest parsing, lazy compilation, executable
+//! caching.
+//!
+//! `make artifacts` (the one-time Python step) writes
+//! `artifacts/NAME.hlo.txt` plus `manifest.tsv` describing each entry's
+//! parameter and result shapes.  The registry compiles each module on
+//! first use through the PJRT CPU client and memoizes the loaded
+//! executable — one compiled executable per model variant, as the paper
+//! keeps one cuDSS plan / CUDA graph per shape.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+
+use super::exec::{execute, Arg, OutValue};
+
+/// Dtype/shape of one parameter or result, parsed from manifest.tsv
+/// entries like `float64:5x32x32` (empty dims = scalar).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: String,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    fn parse(s: &str) -> Result<Self> {
+        let (dtype, dims_s) = s
+            .split_once(':')
+            .ok_or_else(|| Error::Artifact("manifest".into(), format!("bad spec '{s}'")))?;
+        let dims = if dims_s.is_empty() {
+            vec![]
+        } else {
+            dims_s
+                .split('x')
+                .map(|d| {
+                    d.parse::<usize>().map_err(|e| {
+                        Error::Artifact("manifest".into(), format!("bad dim '{d}': {e}"))
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(TensorSpec {
+            dtype: dtype.to_string(),
+            dims,
+        })
+    }
+
+    pub fn elem_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// Manifest entry for one artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub params: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Compile-once, execute-many artifact store.  Thread-safe; executables
+/// are shared behind `Arc`.
+pub struct Registry {
+    dir: PathBuf,
+    client: xla::PjRtClient,
+    specs: HashMap<String, ArtifactSpec>,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    /// Wall-clock spent compiling (perf accounting; excluded from solve
+    /// timings the way the paper excludes cuDSS plan creation).
+    compile_seconds: Mutex<f64>,
+}
+
+/// Parse `manifest.tsv` in `dir` into artifact specs.
+pub fn parse_manifest(dir: &Path) -> Result<HashMap<String, ArtifactSpec>> {
+    let manifest = dir.join("manifest.tsv");
+    let text = std::fs::read_to_string(&manifest).map_err(|e| {
+        Error::Artifact(
+            manifest.display().to_string(),
+            format!("missing manifest ({e}); run `make artifacts`"),
+        )
+    })?;
+    let mut specs = HashMap::new();
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let mut parts = line.split('\t');
+        let name = parts
+            .next()
+            .ok_or_else(|| Error::Artifact("manifest".into(), "empty line".into()))?
+            .to_string();
+        let params = parts
+            .next()
+            .unwrap_or("")
+            .split(';')
+            .filter(|s| !s.is_empty())
+            .map(TensorSpec::parse)
+            .collect::<Result<Vec<_>>>()?;
+        let outputs = parts
+            .next()
+            .unwrap_or("")
+            .split(';')
+            .filter(|s| !s.is_empty())
+            .map(TensorSpec::parse)
+            .collect::<Result<Vec<_>>>()?;
+        specs.insert(
+            name.clone(),
+            ArtifactSpec {
+                name,
+                params,
+                outputs,
+            },
+        );
+    }
+    Ok(specs)
+}
+
+impl Registry {
+    /// Open the artifact directory (looks for `manifest.tsv`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let specs = parse_manifest(&dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Registry {
+            dir,
+            client,
+            specs,
+            cache: Mutex::new(HashMap::new()),
+            compile_seconds: Mutex::new(0.0),
+        })
+    }
+
+    /// Default location: `$RSLA_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> Result<Self> {
+        let dir = std::env::var("RSLA_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::open(dir)
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.specs.get(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.specs.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.specs.contains_key(name)
+    }
+
+    pub fn compile_seconds(&self) -> f64 {
+        *self.compile_seconds.lock().unwrap()
+    }
+
+    /// Get (compiling on first use) the executable for `name`.
+    pub fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        if !self.specs.contains_key(name) {
+            return Err(Error::Artifact(
+                name.into(),
+                "not in manifest (regenerate with `make artifacts`)".into(),
+            ));
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Artifact(name.into(), "non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(self.client.compile(&comp)?);
+        *self.compile_seconds.lock().unwrap() += t0.elapsed().as_secs_f64();
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute artifact `name` with typed args; validates arity against
+    /// the manifest.
+    pub fn run(&self, name: &str, args: &[Arg]) -> Result<Vec<OutValue>> {
+        let spec = self
+            .spec(name)
+            .ok_or_else(|| Error::Artifact(name.into(), "unknown artifact".into()))?;
+        if spec.params.len() != args.len() {
+            return Err(Error::Artifact(
+                name.into(),
+                format!("expected {} args, got {}", spec.params.len(), args.len()),
+            ));
+        }
+        for (i, (p, a)) in spec.params.iter().zip(args).enumerate() {
+            let want = p.elem_count();
+            let got = a.elem_count();
+            if want != got {
+                return Err(Error::Artifact(
+                    name.into(),
+                    format!("arg {i}: expected {want} elements, got {got}"),
+                ));
+            }
+        }
+        let exe = self.executable(name)?;
+        execute(&exe, args, &spec.outputs)
+    }
+}

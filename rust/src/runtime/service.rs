@@ -1,0 +1,169 @@
+//! Runtime executor thread: the PJRT client is not thread-safe (the
+//! `xla` crate wraps it in `Rc` + raw pointers), so — like a CUDA
+//! context pinned to one stream thread — a single executor thread owns
+//! the [`Registry`] and serves executions over a channel.
+//! [`RuntimeHandle`] is the cheap, `Send + Sync` handle the backends
+//! and the coordinator share.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{mpsc, Arc, Mutex};
+
+use crate::error::{Error, Result};
+
+use super::exec::{Arg, OutValue};
+use super::registry::{parse_manifest, ArtifactSpec, Registry};
+
+enum Msg {
+    Run {
+        name: String,
+        args: Vec<Arg>,
+        reply: mpsc::Sender<Result<Vec<OutValue>>>,
+    },
+    CompileSeconds {
+        reply: mpsc::Sender<f64>,
+    },
+    Shutdown,
+}
+
+/// Shareable handle to the runtime executor thread.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: mpsc::Sender<Msg>,
+    specs: Arc<HashMap<String, ArtifactSpec>>,
+    // serialize senders so the reply channels stay ordered per caller
+    lock: Arc<Mutex<()>>,
+}
+
+impl RuntimeHandle {
+    /// Spawn the executor thread over an artifact directory.
+    pub fn spawn(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let specs = Arc::new(parse_manifest(&dir)?);
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let dir_thread = dir.clone();
+        std::thread::Builder::new()
+            .name("rsla-pjrt".into())
+            .spawn(move || {
+                let registry = match Registry::open(&dir_thread) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        // fail every request with the open error
+                        while let Ok(msg) = rx.recv() {
+                            match msg {
+                                Msg::Run { reply, .. } => {
+                                    let _ = reply.send(Err(Error::Xla(format!(
+                                        "runtime failed to open: {e}"
+                                    ))));
+                                }
+                                Msg::CompileSeconds { reply } => {
+                                    let _ = reply.send(0.0);
+                                }
+                                Msg::Shutdown => break,
+                            }
+                        }
+                        return;
+                    }
+                };
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        Msg::Run { name, args, reply } => {
+                            let _ = reply.send(registry.run(&name, &args));
+                        }
+                        Msg::CompileSeconds { reply } => {
+                            let _ = reply.send(registry.compile_seconds());
+                        }
+                        Msg::Shutdown => break,
+                    }
+                }
+            })
+            .map_err(|e| Error::Xla(format!("spawn runtime thread: {e}")))?;
+        Ok(RuntimeHandle {
+            tx,
+            specs,
+            lock: Arc::new(Mutex::new(())),
+        })
+    }
+
+    /// `$RSLA_ARTIFACTS` or `./artifacts`.
+    pub fn spawn_default() -> Result<Self> {
+        let dir = std::env::var("RSLA_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::spawn(dir)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.specs.contains_key(name)
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.specs.get(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.specs.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    /// Execute an artifact on the runtime thread (blocking).
+    pub fn run(&self, name: &str, args: &[Arg]) -> Result<Vec<OutValue>> {
+        let _g = self.lock.lock().unwrap();
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Run {
+                name: name.to_string(),
+                args: args.to_vec(),
+                reply: reply_tx,
+            })
+            .map_err(|_| Error::Xla("runtime thread gone".into()))?;
+        reply_rx
+            .recv()
+            .map_err(|_| Error::Xla("runtime thread dropped reply".into()))?
+    }
+
+    pub fn compile_seconds(&self) -> f64 {
+        let _g = self.lock.lock().unwrap();
+        let (reply_tx, reply_rx) = mpsc::channel();
+        if self.tx.send(Msg::CompileSeconds { reply: reply_tx }).is_err() {
+            return 0.0;
+        }
+        reply_rx.recv().unwrap_or(0.0)
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Msg::Shutdown);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handle_runs_from_multiple_threads() {
+        let h = RuntimeHandle::spawn_default().expect("make artifacts");
+        let mut joins = Vec::new();
+        for t in 0..4 {
+            let h = h.clone();
+            joins.push(std::thread::spawn(move || {
+                let x: Vec<f64> = (0..65536).map(|i| ((i + t) % 7) as f64).collect();
+                let y = vec![1.0; 65536];
+                let out = h
+                    .run("dot_n65536", &[Arg::vec(x.clone()), Arg::vec(y)])
+                    .unwrap();
+                let want: f64 = x.iter().sum();
+                assert!((out[0].scalar_f64() - want).abs() < 1e-6);
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn unknown_artifact_fails_cleanly() {
+        let h = RuntimeHandle::spawn_default().expect("make artifacts");
+        assert!(!h.has("nope"));
+        assert!(h.run("nope", &[]).is_err());
+    }
+}

@@ -1,0 +1,184 @@
+//! COO (coordinate) format — the assembly-side representation.
+
+use crate::error::{Error, Result};
+
+/// Coordinate-format sparse matrix.  Duplicate (row, col) entries are
+/// legal and **sum** on conversion to CSR (matching `torch.sparse` /
+//  scipy assembly semantics).
+#[derive(Clone, Debug)]
+pub struct Coo {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub rows: Vec<usize>,
+    pub cols: Vec<usize>,
+    pub vals: Vec<f64>,
+}
+
+impl Coo {
+    pub fn new(nrows: usize, ncols: usize) -> Self {
+        Coo {
+            nrows,
+            ncols,
+            rows: Vec::new(),
+            cols: Vec::new(),
+            vals: Vec::new(),
+        }
+    }
+
+    pub fn with_capacity(nrows: usize, ncols: usize, cap: usize) -> Self {
+        Coo {
+            nrows,
+            ncols,
+            rows: Vec::with_capacity(cap),
+            cols: Vec::with_capacity(cap),
+            vals: Vec::with_capacity(cap),
+        }
+    }
+
+    /// Build from parallel triplet arrays.
+    pub fn from_triplets(
+        nrows: usize,
+        ncols: usize,
+        rows: Vec<usize>,
+        cols: Vec<usize>,
+        vals: Vec<f64>,
+    ) -> Result<Self> {
+        if rows.len() != cols.len() || rows.len() != vals.len() {
+            return Err(Error::InvalidProblem(format!(
+                "triplet length mismatch: rows {} cols {} vals {}",
+                rows.len(),
+                cols.len(),
+                vals.len()
+            )));
+        }
+        if let Some(&r) = rows.iter().max() {
+            if r >= nrows {
+                return Err(Error::InvalidProblem(format!("row {r} >= nrows {nrows}")));
+            }
+        }
+        if let Some(&c) = cols.iter().max() {
+            if c >= ncols {
+                return Err(Error::InvalidProblem(format!("col {c} >= ncols {ncols}")));
+            }
+        }
+        Ok(Coo {
+            nrows,
+            ncols,
+            rows,
+            cols,
+            vals,
+        })
+    }
+
+    #[inline]
+    pub fn push(&mut self, r: usize, c: usize, v: f64) {
+        debug_assert!(r < self.nrows && c < self.ncols);
+        self.rows.push(r);
+        self.cols.push(c);
+        self.vals.push(v);
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Convert to CSR, summing duplicates; drops explicit zeros created by
+    /// cancellation only if `drop_zeros`.
+    pub fn to_csr(&self) -> super::Csr {
+        // counting sort by row
+        let mut counts = vec![0usize; self.nrows + 1];
+        for &r in &self.rows {
+            counts[r + 1] += 1;
+        }
+        for i in 0..self.nrows {
+            counts[i + 1] += counts[i];
+        }
+        let mut order_cols = vec![0usize; self.nnz()];
+        let mut order_vals = vec![0f64; self.nnz()];
+        let mut next = counts.clone();
+        for k in 0..self.nnz() {
+            let r = self.rows[k];
+            let slot = next[r];
+            next[r] += 1;
+            order_cols[slot] = self.cols[k];
+            order_vals[slot] = self.vals[k];
+        }
+        // sort within each row by column, then merge duplicates
+        let mut indptr = Vec::with_capacity(self.nrows + 1);
+        let mut indices = Vec::with_capacity(self.nnz());
+        let mut vals = Vec::with_capacity(self.nnz());
+        indptr.push(0);
+        let mut rowbuf: Vec<(usize, f64)> = Vec::new();
+        for r in 0..self.nrows {
+            rowbuf.clear();
+            for k in counts[r]..counts[r + 1] {
+                rowbuf.push((order_cols[k], order_vals[k]));
+            }
+            rowbuf.sort_unstable_by_key(|e| e.0);
+            let mut i = 0;
+            while i < rowbuf.len() {
+                let c = rowbuf[i].0;
+                let mut v = rowbuf[i].1;
+                let mut j = i + 1;
+                while j < rowbuf.len() && rowbuf[j].0 == c {
+                    v += rowbuf[j].1;
+                    j += 1;
+                }
+                indices.push(c);
+                vals.push(v);
+                i = j;
+            }
+            indptr.push(indices.len());
+        }
+        super::Csr {
+            nrows: self.nrows,
+            ncols: self.ncols,
+            indptr,
+            indices,
+            vals,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn duplicates_sum_in_csr() {
+        let mut a = Coo::new(2, 2);
+        a.push(0, 1, 2.0);
+        a.push(0, 1, 3.0);
+        a.push(1, 0, 1.0);
+        let c = a.to_csr();
+        assert_eq!(c.nnz(), 2);
+        assert_eq!(c.get(0, 1), 5.0);
+        assert_eq!(c.get(1, 0), 1.0);
+    }
+
+    #[test]
+    fn rows_sorted_by_column() {
+        let mut a = Coo::new(1, 5);
+        a.push(0, 4, 4.0);
+        a.push(0, 0, 1.0);
+        a.push(0, 2, 2.0);
+        let c = a.to_csr();
+        assert_eq!(c.indices, vec![0, 2, 4]);
+        assert_eq!(c.vals, vec![1.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn from_triplets_validates() {
+        assert!(Coo::from_triplets(2, 2, vec![0], vec![0, 1], vec![1.0]).is_err());
+        assert!(Coo::from_triplets(2, 2, vec![5], vec![0], vec![1.0]).is_err());
+        assert!(Coo::from_triplets(2, 2, vec![1], vec![1], vec![1.0]).is_ok());
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let a = Coo::new(3, 3);
+        let c = a.to_csr();
+        assert_eq!(c.nnz(), 0);
+        assert_eq!(c.indptr, vec![0, 0, 0, 0]);
+    }
+}

@@ -1,0 +1,392 @@
+//! CSR (compressed sparse row) — the compute format.
+//!
+//! SpMV here is the L3-native hot path (the XLA backends run the Pallas
+//! kernels instead); see EXPERIMENTS.md §Perf for the optimization log.
+
+use crate::error::{Error, Result};
+
+/// CSR sparse matrix with f64 values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// Row start offsets, length nrows + 1.
+    pub indptr: Vec<usize>,
+    /// Column indices, sorted within each row.
+    pub indices: Vec<usize>,
+    pub vals: Vec<f64>,
+}
+
+impl Csr {
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn identity(n: usize) -> Self {
+        Csr {
+            nrows: n,
+            ncols: n,
+            indptr: (0..=n).collect(),
+            indices: (0..n).collect(),
+            vals: vec![1.0; n],
+        }
+    }
+
+    /// Entry (r, c), 0.0 if not stored.  O(log row_nnz).
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        let lo = self.indptr[r];
+        let hi = self.indptr[r + 1];
+        match self.indices[lo..hi].binary_search(&c) {
+            Ok(k) => self.vals[lo + k],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Row view: (indices, vals).
+    #[inline]
+    pub fn row(&self, r: usize) -> (&[usize], &[f64]) {
+        let lo = self.indptr[r];
+        let hi = self.indptr[r + 1];
+        (&self.indices[lo..hi], &self.vals[lo..hi])
+    }
+
+    /// y = A x.
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.ncols);
+        debug_assert_eq!(y.len(), self.nrows);
+        for r in 0..self.nrows {
+            let lo = self.indptr[r];
+            let hi = self.indptr[r + 1];
+            let mut acc = 0.0;
+            for k in lo..hi {
+                acc += self.vals[k] * x[self.indices[k]];
+            }
+            y[r] = acc;
+        }
+    }
+
+    /// Allocating SpMV.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.nrows];
+        self.spmv(x, &mut y);
+        y
+    }
+
+    /// y = A^T x without materializing the transpose (scatter form).
+    pub fn spmv_t(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.nrows);
+        debug_assert_eq!(y.len(), self.ncols);
+        y.fill(0.0);
+        for r in 0..self.nrows {
+            let xr = x[r];
+            if xr == 0.0 {
+                continue;
+            }
+            let lo = self.indptr[r];
+            let hi = self.indptr[r + 1];
+            for k in lo..hi {
+                y[self.indices[k]] += self.vals[k] * xr;
+            }
+        }
+    }
+
+    /// Materialized transpose (CSR of A^T), sorted columns.
+    pub fn transpose(&self) -> Csr {
+        let mut counts = vec![0usize; self.ncols + 1];
+        for &c in &self.indices {
+            counts[c + 1] += 1;
+        }
+        for i in 0..self.ncols {
+            counts[i + 1] += counts[i];
+        }
+        let mut indices = vec![0usize; self.nnz()];
+        let mut vals = vec![0f64; self.nnz()];
+        let mut next = counts.clone();
+        for r in 0..self.nrows {
+            for k in self.indptr[r]..self.indptr[r + 1] {
+                let c = self.indices[k];
+                let slot = next[c];
+                next[c] += 1;
+                indices[slot] = r;
+                vals[slot] = self.vals[k];
+            }
+        }
+        // rows were visited in order, so each transposed row is sorted
+        Csr {
+            nrows: self.ncols,
+            ncols: self.nrows,
+            indptr: counts,
+            indices,
+            vals,
+        }
+    }
+
+    /// Main diagonal (length min(nrows, ncols)).
+    pub fn diag(&self) -> Vec<f64> {
+        let n = self.nrows.min(self.ncols);
+        (0..n).map(|i| self.get(i, i)).collect()
+    }
+
+    /// Structural + numerical symmetry check (|a_ij - a_ji| <= tol).
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        if self.nrows != self.ncols {
+            return false;
+        }
+        let t = self.transpose();
+        if t.indptr != self.indptr || t.indices != self.indices {
+            // patterns differ; fall back to value comparison via get
+            for r in 0..self.nrows {
+                let (cols, vals) = self.row(r);
+                for (c, v) in cols.iter().zip(vals) {
+                    if (v - self.get(*c, r)).abs() > tol {
+                        return false;
+                    }
+                }
+            }
+            return true;
+        }
+        self.vals
+            .iter()
+            .zip(&t.vals)
+            .all(|(a, b)| (a - b).abs() <= tol)
+    }
+
+    /// SPD heuristic used by auto-dispatch (paper §3.1: "symmetry and SPD
+    /// are detected on the matrix values"): symmetric, positive diagonal.
+    /// Definiteness is confirmed by the Cholesky attempt itself; backends
+    /// fall back to LU on breakdown.
+    pub fn looks_spd(&self) -> bool {
+        self.nrows == self.ncols
+            && self.diag().iter().all(|&d| d > 0.0)
+            && self.is_symmetric(1e-12)
+    }
+
+    /// C = A B (classical Gustavson row-merge SpMM).
+    pub fn spmm(&self, b: &Csr) -> Result<Csr> {
+        if self.ncols != b.nrows {
+            return Err(Error::InvalidProblem(format!(
+                "spmm shape mismatch: ({}, {}) x ({}, {})",
+                self.nrows, self.ncols, b.nrows, b.ncols
+            )));
+        }
+        let mut indptr = Vec::with_capacity(self.nrows + 1);
+        indptr.push(0usize);
+        let mut indices: Vec<usize> = Vec::new();
+        let mut vals: Vec<f64> = Vec::new();
+        // sparse accumulator
+        let mut marker = vec![usize::MAX; b.ncols];
+        let mut acc = vec![0f64; b.ncols];
+        let mut active: Vec<usize> = Vec::new();
+        for r in 0..self.nrows {
+            active.clear();
+            for ka in self.indptr[r]..self.indptr[r + 1] {
+                let j = self.indices[ka];
+                let va = self.vals[ka];
+                for kb in b.indptr[j]..b.indptr[j + 1] {
+                    let c = b.indices[kb];
+                    if marker[c] != r {
+                        marker[c] = r;
+                        acc[c] = 0.0;
+                        active.push(c);
+                    }
+                    acc[c] += va * b.vals[kb];
+                }
+            }
+            active.sort_unstable();
+            for &c in &active {
+                indices.push(c);
+                vals.push(acc[c]);
+            }
+            indptr.push(indices.len());
+        }
+        Ok(Csr {
+            nrows: self.nrows,
+            ncols: b.ncols,
+            indptr,
+            indices,
+            vals,
+        })
+    }
+
+    /// Dense materialization (tests / tiny systems only).
+    pub fn to_dense(&self) -> Vec<Vec<f64>> {
+        let mut d = vec![vec![0.0; self.ncols]; self.nrows];
+        for r in 0..self.nrows {
+            let (cols, vals) = self.row(r);
+            for (c, v) in cols.iter().zip(vals) {
+                d[r][*c] += v;
+            }
+        }
+        d
+    }
+
+    /// Apply a symmetric permutation: B = P A P^T where new index
+    /// `i` holds old index `perm[i]` (perm is new->old).
+    pub fn permute_sym(&self, perm: &[usize]) -> Csr {
+        assert_eq!(self.nrows, self.ncols);
+        assert_eq!(perm.len(), self.nrows);
+        let n = self.nrows;
+        let mut inv = vec![0usize; n];
+        for (new, &old) in perm.iter().enumerate() {
+            inv[old] = new;
+        }
+        let mut coo = super::Coo::with_capacity(n, n, self.nnz());
+        for r in 0..n {
+            let (cols, vals) = self.row(r);
+            for (c, v) in cols.iter().zip(vals) {
+                coo.push(inv[r], inv[*c], *v);
+            }
+        }
+        coo.to_csr()
+    }
+
+    /// Frobenius-norm relative difference to another matrix (tests).
+    pub fn rel_diff(&self, other: &Csr) -> f64 {
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for r in 0..self.nrows {
+            let mut cols: std::collections::BTreeSet<usize> = std::collections::BTreeSet::new();
+            cols.extend(self.row(r).0.iter().copied());
+            cols.extend(other.row(r).0.iter().copied());
+            for c in cols {
+                let a = self.get(r, c);
+                let b = other.get(r, c);
+                num += (a - b) * (a - b);
+                den += b * b;
+            }
+        }
+        if den == 0.0 {
+            num.sqrt()
+        } else {
+            (num / den).sqrt()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+    use crate::util::Prng;
+
+    fn random_csr(rng: &mut Prng, n: usize, per_row: usize) -> Csr {
+        let mut coo = Coo::new(n, n);
+        for r in 0..n {
+            for c in rng.choose_distinct(n, per_row) {
+                coo.push(r, c, rng.normal());
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        let mut rng = Prng::new(1);
+        let a = random_csr(&mut rng, 40, 5);
+        let x = rng.normal_vec(40);
+        let y = a.matvec(&x);
+        let d = a.to_dense();
+        for r in 0..40 {
+            let want: f64 = (0..40).map(|c| d[r][c] * x[c]).sum();
+            assert!((y[r] - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn spmv_t_matches_transpose_spmv() {
+        let mut rng = Prng::new(2);
+        let a = random_csr(&mut rng, 30, 4);
+        let x = rng.normal_vec(30);
+        let mut y1 = vec![0.0; 30];
+        a.spmv_t(&x, &mut y1);
+        let y2 = a.transpose().matvec(&x);
+        for i in 0..30 {
+            assert!((y1[i] - y2[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Prng::new(3);
+        let a = random_csr(&mut rng, 25, 3);
+        let att = a.transpose().transpose();
+        assert_eq!(a, att);
+    }
+
+    #[test]
+    fn symmetric_detection() {
+        let mut coo = Coo::new(3, 3);
+        coo.push(0, 0, 2.0);
+        coo.push(1, 1, 2.0);
+        coo.push(2, 2, 2.0);
+        coo.push(0, 1, -1.0);
+        coo.push(1, 0, -1.0);
+        let a = coo.to_csr();
+        assert!(a.is_symmetric(0.0));
+        assert!(a.looks_spd());
+
+        let mut coo2 = Coo::new(2, 2);
+        coo2.push(0, 1, 1.0);
+        coo2.push(1, 0, 2.0);
+        let b = coo2.to_csr();
+        assert!(!b.is_symmetric(1e-15));
+    }
+
+    #[test]
+    fn spmm_matches_dense() {
+        let mut rng = Prng::new(4);
+        let a = random_csr(&mut rng, 15, 3);
+        let b = random_csr(&mut rng, 15, 3);
+        let c = a.spmm(&b).unwrap();
+        let da = a.to_dense();
+        let db = b.to_dense();
+        for r in 0..15 {
+            for j in 0..15 {
+                let want: f64 = (0..15).map(|k| da[r][k] * db[k][j]).sum();
+                assert!((c.get(r, j) - want).abs() < 1e-12, "({r},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn spmm_shape_mismatch_errors() {
+        let a = Csr::identity(3);
+        let b = Csr::identity(4);
+        assert!(a.spmm(&b).is_err());
+    }
+
+    #[test]
+    fn permute_sym_preserves_spectrum_action() {
+        let mut rng = Prng::new(5);
+        let a = random_csr(&mut rng, 10, 3);
+        let perm: Vec<usize> = {
+            let mut p: Vec<usize> = (0..10).collect();
+            rng.shuffle(&mut p);
+            p
+        };
+        let b = a.permute_sym(&perm);
+        // b[new_i][new_j] == a[perm[new_i]][perm[new_j]]
+        for i in 0..10 {
+            for j in 0..10 {
+                assert!((b.get(i, j) - a.get(perm[i], perm[j])).abs() < 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn identity_spmv_is_identity() {
+        let a = Csr::identity(5);
+        let x = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(a.matvec(&x), x);
+    }
+
+    #[test]
+    fn diag_extraction() {
+        let mut coo = Coo::new(3, 3);
+        coo.push(0, 0, 1.0);
+        coo.push(1, 2, 5.0);
+        coo.push(2, 2, 3.0);
+        let a = coo.to_csr();
+        assert_eq!(a.diag(), vec![1.0, 0.0, 3.0]);
+    }
+}

@@ -1,0 +1,216 @@
+//! Graph workload generators: Laplacians of random graphs and random SPD
+//! matrices — the paper's "GNN minibatches / neural operators on irregular
+//! meshes" batched workloads (§3.1, SparseTensorList) and eigensolver
+//! benchmarks.
+
+use super::{Coo, Csr};
+use crate::util::Prng;
+
+/// Laplacian L = D - W of a random connected graph with `n` nodes and
+/// roughly `avg_degree` edges per node (ring + random chords, so it is
+/// always connected).  SPD after the +eps*I shift.
+pub fn random_graph_laplacian(rng: &mut Prng, n: usize, avg_degree: usize, shift: f64) -> Csr {
+    assert!(n >= 3);
+    let mut edges: std::collections::BTreeSet<(usize, usize)> = std::collections::BTreeSet::new();
+    for i in 0..n {
+        let j = (i + 1) % n; // ring keeps it connected
+        edges.insert((i.min(j), i.max(j)));
+    }
+    let extra = n * avg_degree.saturating_sub(2) / 2;
+    while edges.len() < n + extra {
+        let a = rng.below(n);
+        let b = rng.below(n);
+        if a != b {
+            edges.insert((a.min(b), a.max(b)));
+        }
+    }
+    let mut coo = Coo::with_capacity(n, n, 2 * edges.len() + n);
+    let mut deg = vec![0.0f64; n];
+    for &(a, b) in &edges {
+        let w = rng.range(0.5, 1.5);
+        coo.push(a, b, -w);
+        coo.push(b, a, -w);
+        deg[a] += w;
+        deg[b] += w;
+    }
+    for (i, d) in deg.iter().enumerate() {
+        coo.push(i, i, d + shift);
+    }
+    coo.to_csr()
+}
+
+/// Like [`random_graph_laplacian`] but with a hard per-node degree cap
+/// (so rows fit an ELL layout with `max_degree + 1` slots).
+pub fn bounded_degree_laplacian(rng: &mut Prng, n: usize, max_degree: usize, shift: f64) -> Csr {
+    assert!(n >= 3 && max_degree >= 2);
+    let mut edges: std::collections::BTreeSet<(usize, usize)> = std::collections::BTreeSet::new();
+    let mut deg = vec![0usize; n];
+    for i in 0..n {
+        let j = (i + 1) % n;
+        if edges.insert((i.min(j), i.max(j))) {
+            deg[i] += 1;
+            deg[j] += 1;
+        }
+    }
+    let attempts = n * max_degree * 4;
+    for _ in 0..attempts {
+        let a = rng.below(n);
+        let b = rng.below(n);
+        if a == b || deg[a] >= max_degree || deg[b] >= max_degree {
+            continue;
+        }
+        if edges.insert((a.min(b), a.max(b))) {
+            deg[a] += 1;
+            deg[b] += 1;
+        }
+    }
+    let mut coo = Coo::with_capacity(n, n, 2 * edges.len() + n);
+    let mut wdeg = vec![0.0f64; n];
+    for &(a, b) in &edges {
+        let w = rng.range(0.5, 1.5);
+        coo.push(a, b, -w);
+        coo.push(b, a, -w);
+        wdeg[a] += w;
+        wdeg[b] += w;
+    }
+    for (i, d) in wdeg.iter().enumerate() {
+        coo.push(i, i, d + shift);
+    }
+    coo.to_csr()
+}
+
+/// Random sparse SPD matrix: A = B B^T + shift I where B is a random
+/// sparse matrix with `per_row` entries per row.  Pattern differs per
+/// call — the "distinct patterns" batched workload.
+pub fn random_spd(rng: &mut Prng, n: usize, per_row: usize, shift: f64) -> Csr {
+    let mut coo = Coo::with_capacity(n, n, n * per_row);
+    for r in 0..n {
+        for c in rng.choose_distinct(n, per_row) {
+            coo.push(r, c, rng.normal());
+        }
+    }
+    let b = coo.to_csr();
+    let bt = b.transpose();
+    let mut a = b.spmm(&bt).expect("square");
+    // add shift on the diagonal (pattern may lack some diagonal entries)
+    let mut coo2 = Coo::with_capacity(n, n, a.nnz() + n);
+    for r in 0..n {
+        let (cols, vals) = a.row(r);
+        for (c, v) in cols.iter().zip(vals) {
+            coo2.push(r, *c, *v);
+        }
+    }
+    for i in 0..n {
+        coo2.push(i, i, shift);
+    }
+    a = coo2.to_csr();
+    a
+}
+
+/// Random diagonally-dominant nonsymmetric matrix (BiCGStab / LU tests).
+pub fn random_nonsymmetric(rng: &mut Prng, n: usize, per_row: usize) -> Csr {
+    let mut coo = Coo::with_capacity(n, n, n * (per_row + 1));
+    for r in 0..n {
+        let mut off = 0.0;
+        for c in rng.choose_distinct(n, per_row) {
+            if c == r {
+                continue;
+            }
+            let v = rng.normal();
+            off += v.abs();
+            coo.push(r, c, v);
+        }
+        coo.push(r, r, off + 1.0 + rng.uniform());
+    }
+    coo.to_csr()
+}
+
+/// Convert a CSR matrix to ELL slots (cols, vals) padded to `s` per row.
+/// Returns None if some row exceeds `s` nonzeros.
+pub fn to_ell(m: &Csr, s: usize) -> Option<(Vec<i32>, Vec<f64>)> {
+    let n = m.nrows;
+    let mut cols = vec![0i32; n * s];
+    let mut vals = vec![0f64; n * s];
+    for r in 0..n {
+        let (ci, vi) = m.row(r);
+        if ci.len() > s {
+            return None;
+        }
+        for (k, (c, v)) in ci.iter().zip(vi).enumerate() {
+            cols[r * s + k] = *c as i32;
+            vals[r * s + k] = *v;
+        }
+    }
+    Some((cols, vals))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{self};
+
+    #[test]
+    fn laplacian_rows_sum_to_shift() {
+        let mut rng = Prng::new(1);
+        let l = random_graph_laplacian(&mut rng, 50, 4, 0.1);
+        for r in 0..50 {
+            let (_, vals) = l.row(r);
+            let s: f64 = vals.iter().sum();
+            assert!((s - 0.1).abs() < 1e-10, "row {r} sums to {s}");
+        }
+        assert!(l.looks_spd());
+    }
+
+    #[test]
+    fn random_spd_is_spd() {
+        let mut rng = Prng::new(2);
+        let a = random_spd(&mut rng, 30, 3, 0.5);
+        assert!(a.looks_spd());
+        let x = rng.normal_vec(30);
+        let ax = a.matvec(&x);
+        assert!(util::dot(&x, &ax) > 0.0);
+    }
+
+    #[test]
+    fn nonsymmetric_is_diagonally_dominant() {
+        let mut rng = Prng::new(3);
+        let a = random_nonsymmetric(&mut rng, 40, 5);
+        for r in 0..40 {
+            let (cols, vals) = a.row(r);
+            let mut diag = 0.0;
+            let mut off = 0.0;
+            for (c, v) in cols.iter().zip(vals) {
+                if *c == r {
+                    diag = *v;
+                } else {
+                    off += v.abs();
+                }
+            }
+            assert!(diag > off, "row {r}: {diag} <= {off}");
+        }
+    }
+
+    #[test]
+    fn ell_roundtrip_spmv() {
+        let mut rng = Prng::new(4);
+        let a = random_graph_laplacian(&mut rng, 20, 3, 0.2);
+        let s = (0..20).map(|r| a.row(r).0.len()).max().unwrap();
+        let (cols, vals) = to_ell(&a, s).unwrap();
+        let x = rng.normal_vec(20);
+        let mut y_ell = vec![0.0; 20];
+        for r in 0..20 {
+            for k in 0..s {
+                y_ell[r] += vals[r * s + k] * x[cols[r * s + k] as usize];
+            }
+        }
+        let y = a.matvec(&x);
+        assert!(util::max_abs_diff(&y, &y_ell) < 1e-12);
+    }
+
+    #[test]
+    fn ell_overflow_returns_none() {
+        let mut rng = Prng::new(5);
+        let a = random_graph_laplacian(&mut rng, 20, 6, 0.1);
+        assert!(to_ell(&a, 1).is_none());
+    }
+}

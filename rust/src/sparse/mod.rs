@@ -1,0 +1,22 @@
+//! Sparse matrix substrate: storage formats, kernels, and assemblers.
+//!
+//! The paper builds on `torch.sparse` COO/CSR storage; this module is the
+//! from-scratch equivalent.  [`Coo`] is the assembly format (duplicate
+//! entries sum), [`Csr`] the compute format (SpMV/SpMM/transpose), and
+//! [`pattern::Pattern`] the shared sparsity-structure handle that lets a
+//! batch of matrices reuse one symbolic analysis (paper §3.1,
+//! `SparseTensor` with a leading batch dimension).
+//!
+//! Assemblers ([`poisson`], [`graphs`]) generate every workload used by
+//! the paper's evaluation: variable-coefficient 2D Poisson operators and
+//! graph Laplacians.
+
+pub mod coo;
+pub mod csr;
+pub mod graphs;
+pub mod pattern;
+pub mod poisson;
+
+pub use coo::Coo;
+pub use csr::Csr;
+pub use pattern::Pattern;

@@ -1,0 +1,114 @@
+//! Shared sparsity patterns — the structural half of a CSR matrix.
+//!
+//! The paper's `SparseTensor` batches matrices over ONE pattern so that a
+//! single symbolic factorization / halo plan is reused across the batch
+//! (§3.1).  [`Pattern`] is that shared handle: `Arc`-backed indptr/indices
+//! plus per-batch value planes.
+
+use std::sync::Arc;
+
+use super::Csr;
+
+/// Immutable sparsity structure shared across a batch of matrices.
+#[derive(Clone, Debug)]
+pub struct Pattern {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub indptr: Arc<Vec<usize>>,
+    pub indices: Arc<Vec<usize>>,
+}
+
+impl Pattern {
+    pub fn of(m: &Csr) -> Self {
+        Pattern {
+            nrows: m.nrows,
+            ncols: m.ncols,
+            indptr: Arc::new(m.indptr.clone()),
+            indices: Arc::new(m.indices.clone()),
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Bind values to the pattern, producing a full CSR view (cheap clone
+    /// of the Arc'd structure).
+    pub fn with_vals(&self, vals: Vec<f64>) -> Csr {
+        assert_eq!(vals.len(), self.nnz(), "value count != pattern nnz");
+        Csr {
+            nrows: self.nrows,
+            ncols: self.ncols,
+            indptr: (*self.indptr).clone(),
+            indices: (*self.indices).clone(),
+            vals,
+        }
+    }
+
+    /// True if two patterns are the same structure (pointer or content).
+    pub fn same_as(&self, other: &Pattern) -> bool {
+        if Arc::ptr_eq(&self.indptr, &other.indptr) && Arc::ptr_eq(&self.indices, &other.indices)
+        {
+            return true;
+        }
+        self.nrows == other.nrows
+            && self.ncols == other.ncols
+            && *self.indptr == *other.indptr
+            && *self.indices == *other.indices
+    }
+
+    /// Position of (r, c) in the value array, if stored.
+    pub fn find(&self, r: usize, c: usize) -> Option<usize> {
+        let lo = self.indptr[r];
+        let hi = self.indptr[r + 1];
+        self.indices[lo..hi].binary_search(&c).ok().map(|k| lo + k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+
+    fn sample() -> Csr {
+        let mut c = Coo::new(3, 3);
+        c.push(0, 0, 1.0);
+        c.push(0, 2, 2.0);
+        c.push(1, 1, 3.0);
+        c.push(2, 0, 4.0);
+        c.to_csr()
+    }
+
+    #[test]
+    fn roundtrip_with_vals() {
+        let m = sample();
+        let p = Pattern::of(&m);
+        let m2 = p.with_vals(m.vals.clone());
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn same_as_by_content_and_ptr() {
+        let m = sample();
+        let p1 = Pattern::of(&m);
+        let p2 = p1.clone();
+        let p3 = Pattern::of(&m);
+        assert!(p1.same_as(&p2));
+        assert!(p1.same_as(&p3));
+    }
+
+    #[test]
+    fn find_positions() {
+        let p = Pattern::of(&sample());
+        assert_eq!(p.find(0, 2), Some(1));
+        assert_eq!(p.find(1, 1), Some(2));
+        assert_eq!(p.find(1, 0), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "value count")]
+    fn with_vals_checks_len() {
+        let p = Pattern::of(&sample());
+        p.with_vals(vec![1.0]);
+    }
+}

@@ -1,0 +1,271 @@
+//! 2D Poisson assembly — the paper's benchmark workload family.
+//!
+//! `-div(kappa(x) grad u) = f` on the unit square, homogeneous Dirichlet,
+//! discretized with a cell-centered 5-point scheme on a g x g interior
+//! grid (h = 1/(g+1)); face conductivities are harmonic means, exactly
+//! matching `python/tests/test_model.py::poisson_coeffs` so that the
+//! native CSR operator and the AOT stencil artifacts implement the SAME
+//! matrix (cross-checked in rust/tests/runtime_integration.rs).
+
+use super::{Coo, Csr};
+
+/// Stencil-form operator: five (g*g)-length coefficient planes in row-major
+/// grid order — the layout the L1 Pallas kernel consumes.
+/// `up` multiplies u[i-1, j], `dn` u[i+1, j], `lf` u[i, j-1], `rt` u[i, j+1].
+#[derive(Clone, Debug)]
+pub struct StencilCoeffs {
+    pub g: usize,
+    pub center: Vec<f64>,
+    pub up: Vec<f64>,
+    pub dn: Vec<f64>,
+    pub lf: Vec<f64>,
+    pub rt: Vec<f64>,
+}
+
+impl StencilCoeffs {
+    pub fn n(&self) -> usize {
+        self.g * self.g
+    }
+
+    /// Flatten into the (5, g, g) layout of the AOT artifacts.
+    pub fn to_planes(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(5 * self.n());
+        out.extend_from_slice(&self.center);
+        out.extend_from_slice(&self.up);
+        out.extend_from_slice(&self.dn);
+        out.extend_from_slice(&self.lf);
+        out.extend_from_slice(&self.rt);
+        out
+    }
+
+    /// Inverse of [`StencilCoeffs::to_planes`].
+    pub fn from_planes(g: usize, planes: &[f64]) -> Self {
+        let n = g * g;
+        assert_eq!(planes.len(), 5 * n);
+        StencilCoeffs {
+            g,
+            center: planes[0..n].to_vec(),
+            up: planes[n..2 * n].to_vec(),
+            dn: planes[2 * n..3 * n].to_vec(),
+            lf: planes[3 * n..4 * n].to_vec(),
+            rt: planes[4 * n..5 * n].to_vec(),
+        }
+    }
+
+    /// y = A x applied natively in stencil form (no CSR materialization).
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        let g = self.g;
+        debug_assert_eq!(x.len(), g * g);
+        for i in 0..g {
+            for j in 0..g {
+                let k = i * g + j;
+                let mut acc = self.center[k] * x[k];
+                if i > 0 {
+                    acc += self.up[k] * x[k - g];
+                }
+                if i + 1 < g {
+                    acc += self.dn[k] * x[k + g];
+                }
+                if j > 0 {
+                    acc += self.lf[k] * x[k - 1];
+                }
+                if j + 1 < g {
+                    acc += self.rt[k] * x[k + 1];
+                }
+                y[k] = acc;
+            }
+        }
+    }
+
+    /// Assemble the equivalent CSR matrix (row-major grid ordering).
+    pub fn to_csr(&self) -> Csr {
+        let g = self.g;
+        let n = g * g;
+        let mut coo = Coo::with_capacity(n, n, 5 * n);
+        for i in 0..g {
+            for j in 0..g {
+                let k = i * g + j;
+                coo.push(k, k, self.center[k]);
+                if i > 0 {
+                    coo.push(k, k - g, self.up[k]);
+                }
+                if i + 1 < g {
+                    coo.push(k, k + g, self.dn[k]);
+                }
+                if j > 0 {
+                    coo.push(k, k - 1, self.lf[k]);
+                }
+                if j + 1 < g {
+                    coo.push(k, k + 1, self.rt[k]);
+                }
+            }
+        }
+        coo.to_csr()
+    }
+}
+
+/// A fully assembled Poisson problem.
+#[derive(Clone, Debug)]
+pub struct PoissonSystem {
+    pub g: usize,
+    pub coeffs: StencilCoeffs,
+    pub matrix: Csr,
+    /// Node coordinates (x, y) per unknown, for coordinate partitioners.
+    pub coords: Vec<(f64, f64)>,
+}
+
+/// Build the variable-coefficient 5-point operator.  `kappa` is a g*g
+/// row-major conductivity field (None = constant 1).
+pub fn poisson2d(g: usize, kappa: Option<&[f64]>) -> PoissonSystem {
+    let coeffs = stencil_coeffs(g, kappa);
+    let matrix = coeffs.to_csr();
+    let h = 1.0 / (g as f64 + 1.0);
+    let coords = (0..g * g)
+        .map(|k| {
+            let i = k / g;
+            let j = k % g;
+            ((j as f64 + 1.0) * h, (i as f64 + 1.0) * h)
+        })
+        .collect();
+    PoissonSystem {
+        g,
+        coeffs,
+        matrix,
+        coords,
+    }
+}
+
+/// Harmonic-mean face coefficients; mirrors python poisson_coeffs exactly.
+pub fn stencil_coeffs(g: usize, kappa: Option<&[f64]>) -> StencilCoeffs {
+    let n = g * g;
+    let kap = |i: isize, j: isize| -> f64 {
+        // edge-padded lookup
+        let ic = i.clamp(0, g as isize - 1) as usize;
+        let jc = j.clamp(0, g as isize - 1) as usize;
+        match kappa {
+            Some(k) => k[ic * g + jc],
+            None => 1.0,
+        }
+    };
+    let face = |a: f64, b: f64| 2.0 * a * b / (a + b);
+    let h = 1.0 / (g as f64 + 1.0);
+    let inv_h2 = 1.0 / (h * h);
+    let mut up = vec![0.0; n];
+    let mut dn = vec![0.0; n];
+    let mut lf = vec![0.0; n];
+    let mut rt = vec![0.0; n];
+    let mut center = vec![0.0; n];
+    for i in 0..g as isize {
+        for j in 0..g as isize {
+            let k = (i as usize) * g + j as usize;
+            let kc = kap(i, j);
+            let fu = face(kc, kap(i - 1, j));
+            let fd = face(kc, kap(i + 1, j));
+            let fl = face(kc, kap(i, j - 1));
+            let fr = face(kc, kap(i, j + 1));
+            center[k] = (fu + fd + fl + fr) * inv_h2;
+            up[k] = -fu * inv_h2;
+            dn[k] = -fd * inv_h2;
+            lf[k] = -fl * inv_h2;
+            rt[k] = -fr * inv_h2;
+        }
+    }
+    StencilCoeffs {
+        g,
+        center,
+        up,
+        dn,
+        lf,
+        rt,
+    }
+}
+
+/// The paper's ground-truth conductivity for the inverse problem (Fig. 3):
+/// kappa*(x, y) = 1 + 0.5 sin(2 pi x) sin(2 pi y) on cell centers.
+pub fn kappa_star(g: usize) -> Vec<f64> {
+    let h = 1.0 / (g as f64 + 1.0);
+    (0..g * g)
+        .map(|k| {
+            let i = k / g;
+            let j = k % g;
+            let x = (j as f64 + 1.0) * h;
+            let y = (i as f64 + 1.0) * h;
+            1.0 + 0.5
+                * (2.0 * std::f64::consts::PI * x).sin()
+                * (2.0 * std::f64::consts::PI * y).sin()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{self, Prng};
+
+    #[test]
+    fn constant_coefficient_is_classic_laplacian() {
+        let g = 8;
+        let sys = poisson2d(g, None);
+        let h2 = (1.0 / (g as f64 + 1.0)).powi(2);
+        // interior node: center 4/h^2, neighbors -1/h^2
+        let k = (g / 2) * g + g / 2;
+        assert!((sys.matrix.get(k, k) - 4.0 / h2).abs() < 1e-9);
+        assert!((sys.matrix.get(k, k - 1) + 1.0 / h2).abs() < 1e-9);
+        assert!((sys.matrix.get(k, k - g) + 1.0 / h2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn csr_and_stencil_spmv_agree() {
+        let g = 12;
+        let kappa = kappa_star(g);
+        let sys = poisson2d(g, Some(&kappa));
+        let mut rng = Prng::new(0);
+        let x = rng.normal_vec(g * g);
+        let y_csr = sys.matrix.matvec(&x);
+        let mut y_st = vec![0.0; g * g];
+        sys.coeffs.spmv(&x, &mut y_st);
+        assert!(util::max_abs_diff(&y_csr, &y_st) < 1e-11);
+    }
+
+    #[test]
+    fn matrix_is_spd() {
+        let g = 8;
+        let sys = poisson2d(g, Some(&kappa_star(g)));
+        assert!(sys.matrix.looks_spd());
+        // Gershgorin: rows strictly diagonally dominant or weakly with
+        // positive diagonal => positive semidefinite; Dirichlet rows make
+        // it definite. x^T A x > 0 spot check:
+        let mut rng = Prng::new(1);
+        for _ in 0..5 {
+            let x = rng.normal_vec(g * g);
+            let ax = sys.matrix.matvec(&x);
+            assert!(util::dot(&x, &ax) > 0.0);
+        }
+    }
+
+    #[test]
+    fn planes_roundtrip() {
+        let g = 6;
+        let c = stencil_coeffs(g, Some(&kappa_star(g)));
+        let planes = c.to_planes();
+        let c2 = StencilCoeffs::from_planes(g, &planes);
+        assert_eq!(c.center, c2.center);
+        assert_eq!(c.rt, c2.rt);
+    }
+
+    #[test]
+    fn kappa_star_range() {
+        let k = kappa_star(64);
+        let lo = k.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = k.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert!(lo >= 0.5 - 1e-9 && hi <= 1.5 + 1e-9, "range [{lo}, {hi}]");
+    }
+
+    #[test]
+    fn nnz_is_five_point() {
+        let g = 10;
+        let sys = poisson2d(g, None);
+        // 5n - 4g boundary-truncated entries
+        assert_eq!(sys.matrix.nnz(), 5 * g * g - 4 * g);
+    }
+}

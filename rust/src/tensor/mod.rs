@@ -1,0 +1,22 @@
+//! Typed sparse-tensor hierarchy (paper §3.1):
+//!
+//! | layout      | single matrix                        | matrix list |
+//! |-------------|--------------------------------------|-------------|
+//! | local       | [`SparseTensor`]                     | [`SparseTensorList`] |
+//! | distributed | [`crate::distributed::DSparseTensor`] | [`crate::distributed::DSparseTensorList`] |
+//!
+//! `SparseTensor` carries one sparsity pattern and a *batch* of value
+//! planes sharing it, so one symbolic factorization / artifact / halo
+//! plan serves the whole batch; `SparseTensorList` batches matrices
+//! with distinct patterns (GNN minibatches), dispatching each element
+//! independently.  All types expose the same surface: `.solve`,
+//! `.matvec`, `.eigsh`, `.det`, plus autograd-aware `solve_ad`.
+
+pub mod list;
+pub mod poisson_ad;
+pub mod sparse_tensor;
+
+pub use crate::backend::{Device, Method, SolveOpts};
+pub use list::SparseTensorList;
+pub use poisson_ad::PoissonAssembler;
+pub use sparse_tensor::SparseTensor;

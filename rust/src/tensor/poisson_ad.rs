@@ -1,0 +1,192 @@
+//! Differentiable variable-coefficient Poisson assembly on the tape —
+//! the user-level code of the paper's inverse problem (§4.4): gradients
+//! flow from the loss through the solve (adjoint node) AND through the
+//! assembly `kappa -> A(kappa)` (ordinary tape ops), with
+//! `kappa = softplus(theta)` enforcing positivity.
+
+use std::sync::Arc;
+
+use crate::autograd::{Tape, Var};
+use crate::sparse::poisson::poisson2d;
+use crate::sparse::Pattern;
+
+/// Precomputed index maps for a g x g grid assembly.
+pub struct PoissonAssembler {
+    pub g: usize,
+    pub pattern: Pattern,
+    idx_up: Arc<Vec<usize>>,
+    idx_dn: Arc<Vec<usize>>,
+    idx_lf: Arc<Vec<usize>>,
+    idx_rt: Arc<Vec<usize>>,
+    /// entry -> position in the concatenated (5, g, g) planes.
+    entry_map: Arc<Vec<usize>>,
+    inv_h2: f64,
+}
+
+impl PoissonAssembler {
+    pub fn new(g: usize) -> Self {
+        let n = g * g;
+        let sys = poisson2d(g, None);
+        let pattern = Pattern::of(&sys.matrix);
+        let clampi = |i: isize, j: isize| -> usize {
+            let ic = i.clamp(0, g as isize - 1) as usize;
+            let jc = j.clamp(0, g as isize - 1) as usize;
+            ic * g + jc
+        };
+        let mut up = vec![0usize; n];
+        let mut dn = vec![0usize; n];
+        let mut lf = vec![0usize; n];
+        let mut rt = vec![0usize; n];
+        for i in 0..g as isize {
+            for j in 0..g as isize {
+                let k = (i as usize) * g + j as usize;
+                up[k] = clampi(i - 1, j);
+                dn[k] = clampi(i + 1, j);
+                lf[k] = clampi(i, j - 1);
+                rt[k] = clampi(i, j + 1);
+            }
+        }
+        // map stored CSR entries to plane positions
+        let mut entry_map = vec![0usize; pattern.nnz()];
+        for r in 0..n {
+            for e in pattern.indptr[r]..pattern.indptr[r + 1] {
+                let c = pattern.indices[e];
+                entry_map[e] = if c == r {
+                    r
+                } else if c + g == r {
+                    n + r // up neighbor (i-1, j)
+                } else if c == r + g {
+                    2 * n + r // down
+                } else if c + 1 == r {
+                    3 * n + r // left
+                } else if c == r + 1 {
+                    4 * n + r // right
+                } else {
+                    unreachable!("non-5-point entry")
+                };
+            }
+        }
+        let h = 1.0 / (g as f64 + 1.0);
+        PoissonAssembler {
+            g,
+            pattern,
+            idx_up: Arc::new(up),
+            idx_dn: Arc::new(dn),
+            idx_lf: Arc::new(lf),
+            idx_rt: Arc::new(rt),
+            entry_map: Arc::new(entry_map),
+            inv_h2: 1.0 / (h * h),
+        }
+    }
+
+    /// kappa (g*g Var, positive) -> CSR values Var on `self.pattern`.
+    /// Harmonic-mean faces, matching `sparse::poisson::stencil_coeffs`.
+    pub fn assemble(&self, tape: &Tape, kappa: Var) -> Var {
+        let face = |nbr_idx: &Arc<Vec<usize>>| -> Var {
+            let kn = tape.gather(kappa, nbr_idx.clone());
+            let prod = tape.mul(kappa, kn);
+            let two_prod = tape.scale_const(2.0, prod);
+            let sum = tape.add(kappa, kn);
+            tape.div(two_prod, sum)
+        };
+        let fu = face(&self.idx_up);
+        let fd = face(&self.idx_dn);
+        let fl = face(&self.idx_lf);
+        let fr = face(&self.idx_rt);
+        let s1 = tape.add(fu, fd);
+        let s2 = tape.add(fl, fr);
+        let center_raw = tape.add(s1, s2);
+        let center = tape.scale_const(self.inv_h2, center_raw);
+        let up = tape.scale_const(-self.inv_h2, fu);
+        let dn = tape.scale_const(-self.inv_h2, fd);
+        let lf = tape.scale_const(-self.inv_h2, fl);
+        let rt = tape.scale_const(-self.inv_h2, fr);
+        let planes = tape.concat(&[center, up, dn, lf, rt]);
+        tape.gather(planes, self.entry_map.clone())
+    }
+
+    /// Tikhonov smoothness regularizer ||grad_h kappa||^2 / n (paper
+    /// §4.4): squared forward differences in both grid directions.
+    pub fn smoothness(&self, tape: &Tape, kappa: Var) -> Var {
+        let g = self.g;
+        let n = g * g;
+        // forward-difference neighbor indices (clamped at the far edge
+        // so boundary rows contribute zero difference)
+        let mut right = vec![0usize; n];
+        let mut down = vec![0usize; n];
+        for i in 0..g {
+            for j in 0..g {
+                let k = i * g + j;
+                right[k] = if j + 1 < g { k + 1 } else { k };
+                down[k] = if i + 1 < g { k + g } else { k };
+            }
+        }
+        let kr = tape.gather(kappa, Arc::new(right));
+        let kd = tape.gather(kappa, Arc::new(down));
+        let dx = tape.sub(kr, kappa);
+        let dy = tape.sub(kd, kappa);
+        let sx = tape.dot(dx, dx);
+        let sy = tape.dot(dy, dy);
+        let s = tape.add_ss(sx, sy);
+        tape.scale_const_s(1.0 / n as f64, s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::poisson::{kappa_star, stencil_coeffs};
+    use crate::util::{self, Prng};
+
+    #[test]
+    fn tape_assembly_matches_native_assembly() {
+        let g = 12;
+        let asm = PoissonAssembler::new(g);
+        let kappa = kappa_star(g);
+        let tape = Tape::new();
+        let kv = tape.leaf_vec(kappa.clone());
+        let vals = asm.assemble(&tape, kv);
+        let got = tape.vec_of(vals);
+        let want = stencil_coeffs(g, Some(&kappa)).to_csr().vals;
+        assert!(util::max_abs_diff(&got, &want) < 1e-9, "assembly mismatch");
+    }
+
+    #[test]
+    fn assembly_gradient_checks_against_fd() {
+        let g = 5;
+        let n = g * g;
+        let asm = PoissonAssembler::new(g);
+        let mut rng = Prng::new(0);
+        let kappa0: Vec<f64> = (0..n).map(|_| 1.0 + 0.5 * rng.uniform()).collect();
+        let w = rng.normal_vec(asm.pattern.nnz());
+
+        let loss_of = |kappa: &[f64]| -> f64 {
+            let tape = Tape::new();
+            let kv = tape.leaf_vec(kappa.to_vec());
+            let vals = asm.assemble(&tape, kv);
+            let wv = tape.constant_vec(w.clone());
+            tape.scalar_of(tape.dot(vals, wv))
+        };
+
+        let tape = Tape::new();
+        let kv = tape.leaf_vec(kappa0.clone());
+        let vals = asm.assemble(&tape, kv);
+        let wv = tape.constant_vec(w.clone());
+        let loss = tape.dot(vals, wv);
+        let grads = tape.backward(loss);
+        let gk = grads.vec(kv).clone();
+
+        let r = crate::gradcheck::check_direction(loss_of, &kappa0, &gk, 1e-6, 3, 1);
+        assert!(r.rel_error < 1e-6, "rel err {}", r.rel_error);
+    }
+
+    #[test]
+    fn smoothness_zero_for_constant_field() {
+        let g = 8;
+        let asm = PoissonAssembler::new(g);
+        let tape = Tape::new();
+        let kv = tape.leaf_vec(vec![3.0; g * g]);
+        let s = asm.smoothness(&tape, kv);
+        assert_eq!(tape.scalar_of(s), 0.0);
+    }
+}

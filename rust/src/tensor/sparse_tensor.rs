@@ -1,0 +1,339 @@
+//! `SparseTensor`: one sparsity pattern, a batch of value planes.
+
+use std::sync::Arc;
+
+use crate::adjoint::{self, SolveFn};
+use crate::autograd::{Tape, Var};
+use crate::backend::{Dispatcher, Operator, Problem, SolveOpts, SolveOutcome};
+use crate::direct::{EnvelopeCholesky, SparseLu};
+use crate::eigen::{EigResult, LobpcgOpts};
+use crate::error::{Error, Result};
+use crate::sparse::poisson::StencilCoeffs;
+use crate::sparse::{Csr, Pattern};
+
+/// A sparse matrix — or a batch of matrices sharing ONE pattern.
+///
+/// The shared pattern is what makes batching cheap: direct backends
+/// reuse the RCM ordering and symbolic envelope, the XLA backends reuse
+/// one compiled artifact, and the distributed layer reuses one halo
+/// plan (paper §3.1).
+#[derive(Clone)]
+pub struct SparseTensor {
+    pattern: Pattern,
+    /// B value planes, each of length pattern.nnz().
+    vals: Vec<Vec<f64>>,
+    /// Stencil view per batch element, when the operator came from a
+    /// structured grid (unlocks the fused cg_poisson artifacts).
+    stencil: Option<Vec<StencilCoeffs>>,
+    dispatcher: Arc<Dispatcher>,
+}
+
+impl SparseTensor {
+    /// Single matrix from CSR, CPU-native dispatcher.
+    pub fn from_csr(m: Csr) -> Self {
+        SparseTensor {
+            pattern: Pattern::of(&m),
+            vals: vec![m.vals],
+            stencil: None,
+            dispatcher: Arc::new(Dispatcher::new(None)),
+        }
+    }
+
+    /// From COO triplets (duplicates sum), like the paper's
+    /// `SparseTensor(val, row, col, shape)`.
+    pub fn from_triplets(
+        nrows: usize,
+        ncols: usize,
+        rows: Vec<usize>,
+        cols: Vec<usize>,
+        vals: Vec<f64>,
+    ) -> Result<Self> {
+        let coo = crate::sparse::Coo::from_triplets(nrows, ncols, rows, cols, vals)?;
+        Ok(Self::from_csr(coo.to_csr()))
+    }
+
+    /// From a stencil operator (keeps the grid structure for fused
+    /// accelerator artifacts).
+    pub fn from_stencil(s: StencilCoeffs) -> Self {
+        let m = s.to_csr();
+        SparseTensor {
+            pattern: Pattern::of(&m),
+            vals: vec![m.vals],
+            stencil: Some(vec![s]),
+            dispatcher: Arc::new(Dispatcher::new(None)),
+        }
+    }
+
+    /// Batch of value planes over one pattern.
+    pub fn batched(pattern: Pattern, vals: Vec<Vec<f64>>) -> Result<Self> {
+        for (i, v) in vals.iter().enumerate() {
+            if v.len() != pattern.nnz() {
+                return Err(Error::InvalidProblem(format!(
+                    "batch element {i}: {} values != pattern nnz {}",
+                    v.len(),
+                    pattern.nnz()
+                )));
+            }
+        }
+        Ok(SparseTensor {
+            pattern,
+            vals,
+            stencil: None,
+            dispatcher: Arc::new(Dispatcher::new(None)),
+        })
+    }
+
+    /// Attach a dispatcher (e.g. with XLA backends); the paper's
+    /// `.cuda()` analog is `with_dispatcher(accel_dispatcher)` + Accel
+    /// device in SolveOpts.
+    pub fn with_dispatcher(mut self, d: Arc<Dispatcher>) -> Self {
+        self.dispatcher = d;
+        self
+    }
+
+    pub fn pattern(&self) -> &Pattern {
+        &self.pattern
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.pattern.nrows
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.pattern.nnz()
+    }
+
+    pub fn vals(&self, b: usize) -> &[f64] {
+        &self.vals[b]
+    }
+
+    /// CSR view of batch element `b`.
+    pub fn to_csr(&self, b: usize) -> Csr {
+        self.pattern.with_vals(self.vals[b].clone())
+    }
+
+    fn problem_op(&self, b: usize) -> (Option<&StencilCoeffs>, Csr) {
+        let st = self.stencil.as_ref().map(|v| &v[b]);
+        (st, self.to_csr(b))
+    }
+
+    /// y = A x (first batch element).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        self.to_csr(0).matvec(x)
+    }
+
+    /// Solve A x = b for the first batch element.
+    pub fn solve(&self, b: &[f64], opts: &SolveOpts) -> Result<Vec<f64>> {
+        Ok(self.solve_full(0, b, opts)?.x)
+    }
+
+    /// Solve with the full outcome report (backend, iters, memory).
+    pub fn solve_full(&self, batch: usize, b: &[f64], opts: &SolveOpts) -> Result<SolveOutcome> {
+        let (st, csr) = self.problem_op(batch);
+        let p = match st {
+            Some(s) => Problem {
+                op: Operator::Stencil(s),
+                b,
+            },
+            None => Problem {
+                op: Operator::Csr(&csr),
+                b,
+            },
+        };
+        self.dispatcher.solve(&p, opts)
+    }
+
+    /// Batched solve: one RHS per batch element, single symbolic
+    /// factorization when the matrix is SPD and shared-pattern direct
+    /// dispatch applies.
+    pub fn solve_batch(&self, bs: &[Vec<f64>], opts: &SolveOpts) -> Result<Vec<Vec<f64>>> {
+        if bs.len() != self.batch_size() && self.batch_size() == 1 {
+            // one matrix, many rhs: factor once
+            let a = self.to_csr(0);
+            if a.looks_spd() {
+                if let Ok(f) = EnvelopeCholesky::factor_rcm(&a) {
+                    return Ok(f.solve_many(bs));
+                }
+            }
+            let f = SparseLu::factor(&a)?;
+            return bs.iter().map(|b| f.solve(b)).collect();
+        }
+        if bs.len() != self.batch_size() {
+            return Err(Error::InvalidProblem(format!(
+                "{} rhs for batch of {}",
+                bs.len(),
+                self.batch_size()
+            )));
+        }
+        (0..bs.len())
+            .map(|i| Ok(self.solve_full(i, &bs[i], opts)?.x))
+            .collect()
+    }
+
+    /// Differentiable solve: ONE adjoint node on `tape` (paper §3.2).
+    /// `vals_var` must hold nnz values bound to this tensor's pattern.
+    pub fn solve_ad(
+        &self,
+        tape: &Tape,
+        vals_var: Var,
+        b_var: Var,
+        opts: &SolveOpts,
+    ) -> Result<Var> {
+        let solver = self.solver_fn(opts.clone());
+        adjoint::solve_linear(tape, &self.pattern, vals_var, b_var, &solver)
+    }
+
+    /// The dispatcher as an adjoint-framework black-box solver.
+    pub fn solver_fn(&self, opts: SolveOpts) -> SolveFn {
+        self.dispatcher.solver_fn(opts)
+    }
+
+    /// Differentiable k smallest eigenvalues (first batch element).
+    pub fn eigsh_ad(
+        &self,
+        tape: &Tape,
+        vals_var: Var,
+        k: usize,
+        opts: &LobpcgOpts,
+    ) -> Result<(Var, EigResult)> {
+        adjoint::eigsh(tape, &self.pattern, vals_var, k, opts)
+    }
+
+    /// Non-differentiable eigsh (first batch element).
+    pub fn eigsh(&self, k: usize, opts: &LobpcgOpts) -> Result<EigResult> {
+        let a = self.to_csr(0);
+        if !a.is_symmetric(1e-10) {
+            return Err(Error::InvalidProblem("eigsh needs symmetric".into()));
+        }
+        let m = crate::iterative::Jacobi::new(&a)?;
+        Ok(crate::eigen::lobpcg(&a, &m, k, opts))
+    }
+
+    /// Determinant via sparse LU: det(A) = sign(P) * prod(diag U).
+    /// Returns (sign, log|det|) to stay finite at scale.
+    pub fn slogdet(&self) -> Result<(f64, f64)> {
+        let a = self.to_csr(0);
+        let f = SparseLu::factor(&a)?;
+        Ok(f.slogdet())
+    }
+
+    pub fn det(&self) -> Result<f64> {
+        let (sign, logabs) = self.slogdet()?;
+        Ok(sign * logabs.exp())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::poisson::{kappa_star, poisson2d};
+    use crate::util::{self, Prng};
+
+    #[test]
+    fn solve_roundtrip() {
+        let sys = poisson2d(10, None);
+        let t = SparseTensor::from_csr(sys.matrix.clone());
+        let mut rng = Prng::new(0);
+        let b = rng.normal_vec(100);
+        let x = t.solve(&b, &SolveOpts::default()).unwrap();
+        assert!(util::rel_l2(&sys.matrix.matvec(&x), &b) < 1e-9);
+    }
+
+    #[test]
+    fn stencil_tensor_keeps_structure() {
+        let g = 12;
+        let sys = poisson2d(g, Some(&kappa_star(g)));
+        let t = SparseTensor::from_stencil(sys.coeffs.clone());
+        let mut rng = Prng::new(1);
+        let b = rng.normal_vec(g * g);
+        let out = t.solve_full(0, &b, &SolveOpts::default()).unwrap();
+        assert!(util::rel_l2(&sys.matrix.matvec(&out.x), &b) < 1e-8);
+    }
+
+    #[test]
+    fn multi_rhs_reuses_factorization() {
+        let sys = poisson2d(8, None);
+        let t = SparseTensor::from_csr(sys.matrix.clone());
+        let mut rng = Prng::new(2);
+        let bs: Vec<Vec<f64>> = (0..5).map(|_| rng.normal_vec(64)).collect();
+        let xs = t.solve_batch(&bs, &SolveOpts::default()).unwrap();
+        for (x, b) in xs.iter().zip(&bs) {
+            assert!(util::rel_l2(&sys.matrix.matvec(x), b) < 1e-9);
+        }
+    }
+
+    #[test]
+    fn batched_shared_pattern() {
+        let sys = poisson2d(6, None);
+        let pattern = Pattern::of(&sys.matrix);
+        let mut rng = Prng::new(3);
+        // batch = base matrix with scaled values (stays SPD)
+        let scales = [1.0, 2.0, 0.5];
+        let vals: Vec<Vec<f64>> = scales
+            .iter()
+            .map(|s| sys.matrix.vals.iter().map(|v| v * s).collect())
+            .collect();
+        let t = SparseTensor::batched(pattern, vals).unwrap();
+        assert_eq!(t.batch_size(), 3);
+        let bs: Vec<Vec<f64>> = (0..3).map(|_| rng.normal_vec(36)).collect();
+        let xs = t.solve_batch(&bs, &SolveOpts::default()).unwrap();
+        for ((x, b), s) in xs.iter().zip(&bs).zip(&scales) {
+            let mut ax = sys.matrix.matvec(x);
+            for v in ax.iter_mut() {
+                *v *= s;
+            }
+            assert!(util::rel_l2(&ax, b) < 1e-9);
+        }
+    }
+
+    #[test]
+    fn solve_ad_gradients_flow() {
+        let sys = poisson2d(6, None);
+        let t = SparseTensor::from_csr(sys.matrix.clone());
+        let tape = Tape::new();
+        let vals = tape.leaf_vec(sys.matrix.vals.clone());
+        let b = tape.leaf_vec(vec![1.0; 36]);
+        let x = t.solve_ad(&tape, vals, b, &SolveOpts::default()).unwrap();
+        let loss = tape.dot(x, x);
+        let g = tape.backward(loss);
+        assert!(g.vec(vals).iter().any(|v| *v != 0.0));
+        assert!(g.vec(b).iter().any(|v| *v != 0.0));
+    }
+
+    #[test]
+    fn det_of_identity_and_diagonal() {
+        use crate::sparse::Coo;
+        let t = SparseTensor::from_csr(Csr::identity(5));
+        assert!((t.det().unwrap() - 1.0).abs() < 1e-12);
+
+        let mut coo = Coo::new(3, 3);
+        coo.push(0, 0, 2.0);
+        coo.push(1, 1, -3.0);
+        coo.push(2, 2, 4.0);
+        let t = SparseTensor::from_csr(coo.to_csr());
+        assert!((t.det().unwrap() + 24.0).abs() < 1e-10);
+        let (sign, logabs) = t.slogdet().unwrap();
+        assert_eq!(sign, -1.0);
+        assert!((logabs - 24.0f64.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eigsh_entry_point() {
+        let sys = poisson2d(8, None);
+        let t = SparseTensor::from_csr(sys.matrix.clone());
+        let r = t.eigsh(2, &LobpcgOpts::default()).unwrap();
+        assert_eq!(r.values.len(), 2);
+        assert!(r.values[0] > 0.0 && r.values[0] <= r.values[1]);
+    }
+
+    #[test]
+    fn batched_rejects_wrong_nnz() {
+        let sys = poisson2d(4, None);
+        let pattern = Pattern::of(&sys.matrix);
+        assert!(SparseTensor::batched(pattern, vec![vec![1.0; 3]]).is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! Small shared utilities: dense vector kernels, a deterministic PRNG,
+//! and the property-testing helper used across the test suite.
+
+pub mod prng;
+pub mod proptest;
+pub mod vec_ops;
+
+pub use prng::Prng;
+pub use vec_ops::*;

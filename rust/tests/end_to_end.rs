@@ -1,0 +1,628 @@
+//! End-to-end: the full three-layer stack on a real small workload.
+//!
+//! These tests prove the layers compose: 2D Poisson assembly (substrate)
+//! → auto-dispatched solves across native AND xla/PJRT backends → O(1)
+//! adjoint gradients through the solve → nonlinear + eigenvalue adjoints
+//! → distributed domain decomposition with transposed-halo backward →
+//! coordinator service batching → the paper's Fig. 3 inverse
+//! coefficient-learning loop (compressed) recovering kappa from
+//! observations alone.
+
+use std::sync::Arc;
+
+use rsla::autograd::Tape;
+use rsla::backend::{Device, Method, SolveOpts};
+use rsla::coordinator::{ServiceConfig, SolveService};
+use rsla::distributed::{DSparseTensor, DistIterOpts, PartitionStrategy};
+use rsla::eigen::LobpcgOpts;
+use rsla::nonlinear::NewtonOpts;
+use rsla::optim::Adam;
+use rsla::sparse::poisson::{kappa_star, poisson2d};
+use rsla::sparse::{Csr, Pattern};
+use rsla::tensor::{PoissonAssembler, SparseTensor, SparseTensorList};
+use rsla::util::{self, dot, norm2, rel_l2, Prng};
+
+fn default_dispatcher() -> Arc<rsla::backend::Dispatcher> {
+    // Wires the PJRT runtime (artifacts built by `make artifacts`);
+    // falls back to native-only if artifacts are missing so the test
+    // suite stays runnable without them.
+    rsla::backend::Dispatcher::default_full()
+}
+
+// ---------------------------------------------------------------------
+// 1. Full solve path: assembly -> dispatch -> solve, every backend that
+//    claims support must agree with the direct reference.
+// ---------------------------------------------------------------------
+
+#[test]
+fn all_backends_agree_on_poisson() {
+    let g = 32;
+    let n = g * g;
+    let sys = poisson2d(g, Some(&kappa_star(g)));
+    let disp = default_dispatcher();
+    let a = SparseTensor::from_csr(sys.matrix.clone()).with_dispatcher(disp.clone());
+    let mut rng = Prng::new(7);
+    let b = rng.normal_vec(n);
+
+    let reference = {
+        let f = rsla::direct::SparseLu::factor(&sys.matrix).unwrap();
+        f.solve(&b).unwrap()
+    };
+
+    let mut solved = 0;
+    for name in disp.backend_names() {
+        let opts = SolveOpts {
+            backend: Some(name.to_string()),
+            device: if name.starts_with("xla") {
+                Device::Accel
+            } else {
+                Device::Cpu
+            },
+            tol: 1e-11,
+            ..Default::default()
+        };
+        match a.solve_full(0, &b, &opts) {
+            Ok(out) => {
+                assert!(
+                    rel_l2(&out.x, &reference) < 1e-6,
+                    "backend {name} disagrees with direct reference: rel_l2={}",
+                    rel_l2(&out.x, &reference)
+                );
+                solved += 1;
+            }
+            // a backend may legitimately refuse an operator FORM it does
+            // not serve (xla-hybrid is stencil-only); anything else is a
+            // real failure.
+            Err(rsla::Error::BackendUnavailable { .. }) => {}
+            Err(e) => panic!("backend {name} failed on supported problem: {e}"),
+        }
+    }
+    assert!(
+        solved >= 4,
+        "expected at least 4 backends to solve a CSR Poisson system, got {solved}"
+    );
+
+    // xla-hybrid serves the STENCIL operator form: same system, same answer.
+    let a_st =
+        SparseTensor::from_stencil(sys.coeffs.clone()).with_dispatcher(disp.clone());
+    let opts = SolveOpts {
+        backend: Some("xla-hybrid".into()),
+        device: Device::Accel,
+        tol: 1e-11,
+        ..Default::default()
+    };
+    match a_st.solve_full(0, &b, &opts) {
+        Ok(out) => {
+            assert!(
+                rel_l2(&out.x, &reference) < 1e-6,
+                "xla-hybrid disagrees: rel_l2={}",
+                rel_l2(&out.x, &reference)
+            );
+        }
+        Err(rsla::Error::BackendUnavailable { reason, .. }) => {
+            panic!("xla-hybrid refused its own stencil form: {reason}")
+        }
+        Err(e) => panic!("xla-hybrid failed: {e}"),
+    }
+}
+
+#[test]
+fn auto_dispatch_picks_device_appropriate_backend() {
+    let g = 24;
+    let sys = poisson2d(g, None);
+    let a = SparseTensor::from_csr(sys.matrix.clone()).with_dispatcher(default_dispatcher());
+    let b = vec![1.0; g * g];
+
+    let cpu = a.solve_full(0, &b, &SolveOpts::default()).unwrap();
+    assert!(
+        cpu.backend.starts_with("native"),
+        "CPU device must route to a native backend, got {}",
+        cpu.backend
+    );
+
+    let accel = a.solve_full(0, &b, &SolveOpts::on_accel()).unwrap();
+    assert!(
+        accel.backend.starts_with("xla"),
+        "Accel device must route to an xla backend, got {}",
+        accel.backend
+    );
+    assert!(rel_l2(&cpu.x, &accel.x) < 1e-6);
+}
+
+// ---------------------------------------------------------------------
+// 2. Adjoint gradients through the full dispatch path (including the
+//    PJRT-backed forward) match finite differences.
+// ---------------------------------------------------------------------
+
+#[test]
+fn adjoint_gradients_through_xla_backend_match_fd() {
+    let g = 16;
+    let n = g * g;
+    let sys = poisson2d(g, Some(&kappa_star(g)));
+    let a = SparseTensor::from_csr(sys.matrix.clone()).with_dispatcher(default_dispatcher());
+    let mut rng = Prng::new(1);
+    let b0 = rng.normal_vec(n);
+
+    let opts = SolveOpts {
+        device: Device::Accel,
+        tol: 1e-12,
+        ..Default::default()
+    };
+
+    let tape = Tape::new();
+    let vals = tape.leaf_vec(sys.matrix.vals.clone());
+    let bv = tape.leaf_vec(b0.clone());
+    let x = a.solve_ad(&tape, vals, bv, &opts).unwrap();
+    let loss = tape.dot(x, x);
+    let grads = tape.backward(loss);
+    let db = grads.vec(bv).clone();
+
+    let loss_of_b = |bb: &[f64]| {
+        let x = a.solve(bb, &opts).unwrap();
+        dot(&x, &x)
+    };
+    let chk = rsla::gradcheck::check_direction(loss_of_b, &b0, &db, 1e-6, 3, 3);
+    assert!(
+        chk.rel_error < 1e-5,
+        "xla-path adjoint gradient off: rel={}",
+        chk.rel_error
+    );
+}
+
+#[test]
+fn solve_graph_is_o1_nodes_regardless_of_tolerance() {
+    // Tight tolerance => many CG iterations; the tape must not grow.
+    let g = 24;
+    let sys = poisson2d(g, None);
+    let a = SparseTensor::from_csr(sys.matrix.clone());
+    let b0 = vec![1.0; g * g];
+
+    let count_nodes = |tol: f64| {
+        let tape = Tape::new();
+        let vals = tape.leaf_vec(sys.matrix.vals.clone());
+        let bv = tape.leaf_vec(b0.clone());
+        let opts = SolveOpts {
+            method: Method::Cg,
+            backend: Some("native-iter".into()),
+            tol,
+            ..Default::default()
+        };
+        let x = a.solve_ad(&tape, vals, bv, &opts).unwrap();
+        let _ = tape.dot(x, x);
+        tape.node_count()
+    };
+    let loose = count_nodes(1e-2);
+    let tight = count_nodes(1e-12);
+    assert_eq!(
+        loose, tight,
+        "adjoint graph must be O(1) in iteration count"
+    );
+}
+
+// ---------------------------------------------------------------------
+// 3. Nonlinear + eigenvalue adjoints (paper Table 5 semantics).
+// ---------------------------------------------------------------------
+
+#[test]
+fn nonlinear_solve_end_to_end_gradient() {
+    // F(u; theta) = A u + u^2 - theta, loss = ||u||^2.
+    use rsla::nonlinear::Residual;
+    use rsla::sparse::Coo;
+
+    struct Forced {
+        a: Csr,
+        theta: Vec<f64>,
+    }
+    impl Residual for Forced {
+        fn dim(&self) -> usize {
+            self.theta.len()
+        }
+        fn eval(&self, u: &[f64], out: &mut [f64]) {
+            self.a.spmv(u, out);
+            for i in 0..u.len() {
+                out[i] += u[i] * u[i] - self.theta[i];
+            }
+        }
+        fn jacobian(&self, u: &[f64]) -> Csr {
+            let n = self.a.nrows;
+            let mut coo = Coo::with_capacity(n, n, self.a.nnz() + n);
+            for r in 0..n {
+                let (cols, vals) = self.a.row(r);
+                for (c, v) in cols.iter().zip(vals) {
+                    coo.push(r, *c, *v);
+                }
+                coo.push(r, r, 2.0 * u[r]);
+            }
+            coo.to_csr()
+        }
+        fn vjp_theta(&self, _u: &[f64], lambda: &[f64]) -> Vec<f64> {
+            lambda.iter().map(|l| -l).collect()
+        }
+    }
+
+    let g = 10;
+    let n = g * g;
+    let sys = poisson2d(g, None);
+    let a_mat = sys.matrix.clone();
+    let mut rng = Prng::new(5);
+    let theta0: Vec<f64> = rng.normal_vec(n).iter().map(|t| 1.0 + 0.1 * t).collect();
+
+    let tape = Tape::new();
+    let theta = tape.leaf_vec(theta0.clone());
+    let factory: rsla::adjoint::ResidualFactory = {
+        let a = a_mat.clone();
+        std::rc::Rc::new(move |th: &[f64]| {
+            Box::new(Forced {
+                a: a.clone(),
+                theta: th.to_vec(),
+            }) as Box<dyn Residual>
+        })
+    };
+    let opts = NewtonOpts::default();
+    let (u, result) = rsla::adjoint::solve_nonlinear(&tape, factory, theta, &vec![0.0; n], &opts)
+        .unwrap();
+    assert!(result.converged, "Newton failed to converge");
+    let loss = tape.dot(u, u);
+    let grads = tape.backward(loss);
+    let dtheta = grads.vec(theta).clone();
+
+    // FD check
+    let loss_of_theta = |th: &[f64]| {
+        let f = Forced {
+            a: a_mat.clone(),
+            theta: th.to_vec(),
+        };
+        let r = rsla::nonlinear::newton(&f, &vec![0.0; n], &NewtonOpts::default());
+        dot(&r.u, &r.u)
+    };
+    let chk = rsla::gradcheck::check_direction(loss_of_theta, &theta0, &dtheta, 1e-6, 3, 11);
+    assert!(
+        chk.rel_error < 1e-5,
+        "nonlinear adjoint off: rel={}",
+        chk.rel_error
+    );
+}
+
+#[test]
+fn eigsh_end_to_end_gradient() {
+    let g = 12;
+    let sys = poisson2d(g, None);
+    let pattern = Pattern::of(&sys.matrix);
+    let tape = Tape::new();
+    let vals = tape.leaf_vec(sys.matrix.vals.clone());
+    let opts = LobpcgOpts {
+        tol: 1e-10,
+        max_iters: 2000,
+        seed: 0,
+    };
+    let (lams, res) = rsla::adjoint::eigsh(&tape, &pattern, vals, 3, &opts).unwrap();
+    assert!(res.residuals.iter().all(|r| *r < 1e-6));
+    // loss = sum of the k smallest eigenvalues
+    let ones = tape.constant_vec(vec![1.0; 3]);
+    let loss = tape.dot(lams, ones);
+    let grads = tape.backward(loss);
+    let dvals = grads.vec(vals).clone();
+
+    let vals0 = sys.matrix.vals.clone();
+    let loss_of_vals = |v: &[f64]| {
+        let a = pattern.with_vals(v.to_vec());
+        let precond = rsla::iterative::Jacobi::new(&a).unwrap();
+        let r = rsla::eigen::lobpcg(
+            &a,
+            &precond as &dyn rsla::iterative::Precond,
+            3,
+            &LobpcgOpts {
+                tol: 1e-10,
+                max_iters: 2000,
+                seed: 0,
+            },
+        );
+        r.values.iter().sum::<f64>()
+    };
+    // Symmetric perturbation direction to stay in the symmetric manifold:
+    // perturb via kappa would be cleaner, but a symmetric random direction
+    // works since the pattern is symmetric.
+    let chk =
+        rsla::gradcheck::check_symmetric_direction(loss_of_vals, &pattern, &vals0, &dvals, 1e-6, 17);
+    assert!(
+        chk.rel_error < 1e-4,
+        "eigsh adjoint off: rel={}",
+        chk.rel_error
+    );
+}
+
+// ---------------------------------------------------------------------
+// 4. Distributed: forward + adjoint must equal single-process results,
+//    and the transposed halo must be the exact adjoint of the forward.
+// ---------------------------------------------------------------------
+
+#[test]
+fn distributed_solve_matches_single_process() {
+    let g = 40;
+    let n = g * g;
+    let sys = poisson2d(g, Some(&kappa_star(g)));
+    let mut rng = Prng::new(2);
+    let b = rng.normal_vec(n);
+
+    let single = {
+        let f = rsla::direct::SparseLu::factor(&sys.matrix).unwrap();
+        f.solve(&b).unwrap()
+    };
+
+    for nparts in [2, 3, 4] {
+        for strat in [
+            PartitionStrategy::Contiguous,
+            PartitionStrategy::Rcb,
+            PartitionStrategy::GreedyBfs,
+        ] {
+            let coords = sys.coords.clone();
+            let d = DSparseTensor::from_global(&sys.matrix, Some(&coords), nparts, strat).unwrap();
+            let (x, reports) = d
+                .solve(
+                    &b,
+                    &DistIterOpts {
+                        tol: 1e-11,
+                        max_iters: 20_000,
+                ..Default::default()
+            },
+                )
+                .unwrap();
+            assert!(
+                rel_l2(&x, &single) < 1e-7,
+                "dist solve ({nparts} parts, {strat:?}) off: {}",
+                rel_l2(&x, &single)
+            );
+            assert!(reports.iter().all(|r| r.converged));
+            assert!(reports.iter().all(|r| r.bytes_sent > 0 || nparts == 1));
+        }
+    }
+}
+
+#[test]
+fn distributed_adjoint_gradients_match_serial_adjoint() {
+    let g = 24;
+    let n = g * g;
+    let sys = poisson2d(g, Some(&kappa_star(g)));
+    let mut rng = Prng::new(3);
+    let b = rng.normal_vec(n);
+    let w = rng.normal_vec(n); // loss = <w, x>
+
+    // serial adjoint: lambda = A^{-T} w, db = lambda, dA_ij = -lambda_i x_j
+    let f = rsla::direct::SparseLu::factor(&sys.matrix).unwrap();
+    let x_ref = f.solve(&b).unwrap();
+    let lambda_ref = f.solve_t(&w).unwrap();
+
+    let d = DSparseTensor::from_global(&sys.matrix, None, 3, PartitionStrategy::Contiguous)
+        .unwrap();
+    let (x, db, triplets) = d
+        .solve_adjoint(
+            &b,
+            &w,
+            &DistIterOpts {
+                tol: 1e-12,
+                max_iters: 40_000,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    assert!(rel_l2(&x, &x_ref) < 1e-7);
+    assert!(rel_l2(&db, &lambda_ref) < 1e-7);
+    // every emitted triplet must match the analytic dA_ij = -lambda_i x_j
+    assert_eq!(triplets.len(), sys.matrix.nnz());
+    let (mut num, mut den) = (0.0, 0.0);
+    for &(r, c, v) in &triplets {
+        let want = -lambda_ref[r] * x_ref[c];
+        num += (v - want) * (v - want);
+        den += want * want;
+    }
+    assert!(
+        (num / den.max(1e-300)).sqrt() < 1e-6,
+        "distributed dA off: {}",
+        (num / den).sqrt()
+    );
+    let _ = n;
+}
+
+// ---------------------------------------------------------------------
+// 5. Coordinator service: concurrent mixed-pattern workload.
+// ---------------------------------------------------------------------
+
+#[test]
+fn coordinator_serves_concurrent_mixed_workload() {
+    let disp = default_dispatcher();
+    // one worker + a wide batching window so same-pattern requests are
+    // guaranteed to coalesce regardless of build profile (debug solves
+    // are slow enough to outlive the default 2 ms window)
+    let service = SolveService::start(
+        disp,
+        ServiceConfig {
+            workers: 1,
+            batch: rsla::coordinator::BatchPolicy {
+                max_batch: 16,
+                window: std::time::Duration::from_millis(100),
+            },
+        },
+    );
+
+    let mut rng = Prng::new(9);
+    let mut receivers = Vec::new();
+    let mut expected = Vec::new();
+    for i in 0..24 {
+        let g = 8 + (i % 3) * 4; // three distinct patterns
+        let sys = poisson2d(g, None);
+        let b = rng.normal_vec(g * g);
+        let f = rsla::direct::SparseLu::factor(&sys.matrix).unwrap();
+        expected.push(f.solve(&b).unwrap());
+        receivers.push(service.submit(sys.matrix.clone(), b, SolveOpts::default()));
+    }
+    for (rx, want) in receivers.into_iter().zip(&expected) {
+        let resp = rx.recv().expect("service dropped request");
+        let x = resp.outcome.expect("solve failed").x;
+        assert!(rel_l2(&x, want) < 1e-7);
+    }
+    let stats = service.stats();
+    assert_eq!(stats.completed, 24);
+    assert!(
+        stats.batches < 24,
+        "same-pattern requests should batch (got {} batches)",
+        stats.batches
+    );
+    service.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// 6. Batched solves: shared pattern reuses one factorization; distinct
+//    patterns dispatch independently (SparseTensorList).
+// ---------------------------------------------------------------------
+
+#[test]
+fn batched_shared_pattern_and_tensor_list() {
+    let g = 16;
+    let n = g * g;
+    let sys = poisson2d(g, None);
+    let pat = Pattern::of(&sys.matrix);
+    let mut rng = Prng::new(4);
+
+    // shared-pattern batch: scale the values per batch element
+    let batch = 4;
+    let vals: Vec<Vec<f64>> = (0..batch)
+        .map(|i| {
+            sys.matrix
+                .vals
+                .iter()
+                .map(|v| v * (1.0 + 0.1 * i as f64))
+                .collect()
+        })
+        .collect();
+    let a = SparseTensor::batched(pat.clone(), vals.clone()).unwrap();
+    let bs: Vec<Vec<f64>> = (0..batch).map(|_| rng.normal_vec(n)).collect();
+    let xs = a.solve_batch(&bs, &SolveOpts::default()).unwrap();
+    for i in 0..batch {
+        let ai = pat.with_vals(vals[i].clone());
+        assert!(rel_l2(&ai.matvec(&xs[i]), &bs[i]) < 1e-8);
+    }
+
+    // distinct patterns: a list of different grids
+    let mats: Vec<Csr> = [8usize, 12, 16]
+        .iter()
+        .map(|&gi| poisson2d(gi, None).matrix)
+        .collect();
+    let sizes: Vec<usize> = mats.iter().map(|m| m.nrows).collect();
+    let list = SparseTensorList::from_csrs(mats.clone());
+    let bs: Vec<Vec<f64>> = sizes.iter().map(|&ni| rng.normal_vec(ni)).collect();
+    let xs = list.solve(&bs, &SolveOpts::default()).unwrap();
+    for i in 0..mats.len() {
+        assert!(rel_l2(&mats[i].matvec(&xs[i]), &bs[i]) < 1e-8);
+    }
+}
+
+// ---------------------------------------------------------------------
+// 7. The paper's Fig. 3 loop, compressed: recover kappa on a 16x16 grid
+//    from observations alone, through the adjoint solve, with Adam.
+// ---------------------------------------------------------------------
+
+#[test]
+fn inverse_coefficient_learning_recovers_kappa() {
+    let g = 16;
+    let asm = PoissonAssembler::new(g);
+    let kappa_true = kappa_star(g);
+    let sys = poisson2d(g, Some(&kappa_true));
+    let f_rhs = vec![1.0; g * g];
+    let u_obs = {
+        let f = rsla::direct::SparseLu::factor(&sys.matrix).unwrap();
+        f.solve(&f_rhs).unwrap()
+    };
+
+    // theta -> kappa = softplus(theta); start from kappa ~ 1.0
+    let n_k = g * g;
+    let mut theta = vec![0.5413_f64; n_k]; // softplus(0.5413) ~ 1.0
+    let mut adam = Adam::new(n_k, 5e-2);
+    let mut last_loss = f64::INFINITY;
+
+    for step in 0..600 {
+        let tape = Tape::new();
+        let th = tape.leaf_vec(theta.clone());
+        let kappa = tape.softplus(th);
+        let vals = asm.assemble(&tape, kappa);
+        let bv = tape.constant_vec(f_rhs.clone());
+        let x = rsla::adjoint::solve_linear(
+            &tape,
+            &asm.pattern,
+            vals,
+            bv,
+            &rsla::adjoint::native_solver(),
+        )
+        .unwrap();
+        let obs = tape.constant_vec(u_obs.clone());
+        let diff = tape.sub(x, obs);
+        let misfit = tape.dot(diff, diff);
+        let reg = asm.smoothness(&tape, kappa);
+        let reg_scaled = tape.scale_const_s(1e-3 / n_k as f64, reg);
+        let loss = tape.add_ss(misfit, reg_scaled);
+        let loss_val = tape.scalar_of(loss);
+        let grads = tape.backward(loss);
+        let dtheta = grads.vec(th).clone();
+        adam.step(&mut theta, &dtheta);
+        if step % 50 == 0 {
+            last_loss = loss_val;
+        }
+    }
+
+    let kappa_rec: Vec<f64> = theta.iter().map(|t| util::softplus(*t)).collect();
+    let err = rel_l2(&kappa_rec, &kappa_true);
+    assert!(
+        err < 3e-2,
+        "kappa recovery too poor after 600 steps: rel_l2={err}, last_loss={last_loss}"
+    );
+    // forward solution must match observations closely
+    let sys_rec = poisson2d(g, Some(&kappa_rec));
+    let f = rsla::direct::SparseLu::factor(&sys_rec.matrix).unwrap();
+    let u_rec = f.solve(&f_rhs).unwrap();
+    assert!(rel_l2(&u_rec, &u_obs) < 1e-3);
+}
+
+// ---------------------------------------------------------------------
+// 8. Memory-budget OOM semantics (Table 3/4 "OOM" rows are budget
+//    violations, not crashes).
+// ---------------------------------------------------------------------
+
+#[test]
+fn direct_backend_oom_is_a_clean_error_and_dispatch_falls_back() {
+    let g = 64; // 4096 unknowns: LU fill exceeds a tiny budget
+    let sys = poisson2d(g, None);
+    let a = SparseTensor::from_csr(sys.matrix.clone());
+    let b = vec![1.0; g * g];
+
+    // forcing the direct backend with a tiny budget must error cleanly
+    let opts = SolveOpts {
+        backend: Some("native-direct".into()),
+        host_mem_budget: 64 << 10, // 64 KiB
+        ..Default::default()
+    };
+    let err = a.solve(&b, &opts).unwrap_err();
+    let msg = format!("{err}");
+    assert!(
+        msg.to_lowercase().contains("memory") || msg.to_lowercase().contains("budget"),
+        "expected an OOM/budget error, got: {msg}"
+    );
+
+    // auto-dispatch with the same budget must fall back to iterative
+    let opts = SolveOpts {
+        host_mem_budget: 64 << 10,
+        ..Default::default()
+    };
+    let out = a.solve_full(0, &b, &opts).unwrap();
+    assert_eq!(out.backend, "native-iter");
+    assert!(rel_l2(&sys.matrix.matvec(&out.x), &b) < 1e-7);
+}
+
+// ---------------------------------------------------------------------
+// 9. Utility invariants that glue the layers: norm2/dot consistency.
+// ---------------------------------------------------------------------
+
+#[test]
+fn util_consistency() {
+    let mut rng = Prng::new(0);
+    let v = rng.normal_vec(1000);
+    assert!((norm2(&v).powi(2) - dot(&v, &v)).abs() < 1e-9 * dot(&v, &v).max(1.0));
+}

@@ -1,0 +1,508 @@
+//! Property-based tests over the library's core invariants, using the
+//! in-house PRNG property harness (util::proptest).
+
+use rsla::adjoint::{native_solver, solve_linear, Transpose};
+use rsla::autograd::Tape;
+use rsla::direct::{direct_solve, EnvelopeCholesky, SparseLu};
+use rsla::distributed::{run_ranks, DSparseTensor, DistIterOpts, PartitionStrategy};
+use rsla::eigen::jacobi_eigh;
+use rsla::iterative::{bicgstab, cg, gmres, Identity, IterOpts, Jacobi};
+use rsla::sparse::graphs::{random_graph_laplacian, random_nonsymmetric, random_spd};
+use rsla::sparse::poisson::{poisson2d, stencil_coeffs};
+use rsla::sparse::{Coo, Csr, Pattern};
+use rsla::util::proptest::{check, close};
+use rsla::util::{self, dot, Prng};
+
+fn random_csr(rng: &mut Prng, n: usize, per_row: usize) -> Csr {
+    let mut coo = Coo::new(n, n);
+    for r in 0..n {
+        for c in rng.choose_distinct(n, per_row) {
+            coo.push(r, c, rng.normal());
+        }
+    }
+    coo.to_csr()
+}
+
+#[test]
+fn prop_transpose_is_adjoint() {
+    // <A x, y> == <x, A^T y> for random sparse matrices
+    check("spmv transpose adjoint", 30, |rng| {
+        let n = 10 + rng.below(60);
+        let per_row = 1 + rng.below(5);
+        let a = random_csr(rng, n, per_row);
+        let x = rng.normal_vec(n);
+        let y = rng.normal_vec(n);
+        let ax = a.matvec(&x);
+        let mut aty = vec![0.0; n];
+        a.spmv_t(&y, &mut aty);
+        let lhs = dot(&ax, &y);
+        let rhs = dot(&x, &aty);
+        if (lhs - rhs).abs() > 1e-9 * (1.0 + lhs.abs()) {
+            return Err(format!("{lhs} vs {rhs}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_coo_to_csr_preserves_matvec() {
+    check("coo->csr matvec equivalence", 25, |rng| {
+        let n = 5 + rng.below(40);
+        let mut coo = Coo::new(n, n);
+        let entries = n * (1 + rng.below(4));
+        for _ in 0..entries {
+            coo.push(rng.below(n), rng.below(n), rng.normal());
+        }
+        let x = rng.normal_vec(n);
+        // dense reference straight from triplets
+        let mut want = vec![0.0; n];
+        for k in 0..coo.nnz() {
+            want[coo.rows[k]] += coo.vals[k] * x[coo.cols[k]];
+        }
+        close(&coo.to_csr().matvec(&x), &want, 1e-10)
+    });
+}
+
+#[test]
+fn prop_lu_reconstructs_solve() {
+    check("LU solve residual", 20, |rng| {
+        let n = 10 + rng.below(50);
+        let per_row = 2 + rng.below(4);
+        let a = random_nonsymmetric(rng, n, per_row);
+        let b = rng.normal_vec(n);
+        let f = SparseLu::factor(&a).map_err(|e| e.to_string())?;
+        let x = f.solve(&b).map_err(|e| e.to_string())?;
+        if util::rel_l2(&a.matvec(&x), &b) > 1e-8 {
+            return Err("residual too large".into());
+        }
+        // transpose solve too
+        let xt = f.solve_t(&b).map_err(|e| e.to_string())?;
+        let mut atx = vec![0.0; n];
+        a.spmv_t(&xt, &mut atx);
+        if util::rel_l2(&atx, &b) > 1e-8 {
+            return Err("transpose residual too large".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cholesky_matches_lu_on_spd() {
+    check("cholesky == lu on SPD", 15, |rng| {
+        let n = 10 + rng.below(40);
+        let per_row = 2 + rng.below(3);
+        let shift = 1.0 + rng.uniform();
+        let a = random_spd(rng, n, per_row, shift);
+        let b = rng.normal_vec(n);
+        let xc = EnvelopeCholesky::factor_rcm(&a)
+            .map_err(|e| e.to_string())?
+            .solve(&b);
+        let xl = SparseLu::factor(&a)
+            .map_err(|e| e.to_string())?
+            .solve(&b)
+            .map_err(|e| e.to_string())?;
+        close(&xc, &xl, 1e-6)
+    });
+}
+
+#[test]
+fn prop_krylov_solvers_agree() {
+    check("cg == bicgstab == gmres on SPD", 10, |rng| {
+        let n = 20 + rng.below(40);
+        let a = random_spd(rng, n, 3, 2.0);
+        let b = rng.normal_vec(n);
+        let opts = IterOpts {
+            tol: 1e-11,
+            max_iters: 50_000,
+            record_history: false,
+        };
+        let m = Jacobi::new(&a).map_err(|e| e.to_string())?;
+        let x1 = cg(&a, &b, &m, &opts, None);
+        let x2 = bicgstab(&a, &b, &m, &opts, None);
+        let x3 = gmres(&a, &b, &Identity, 40, &opts, None);
+        if !(x1.converged && x2.converged && x3.converged) {
+            return Err("not all converged".into());
+        }
+        close(&x1.x, &x2.x, 1e-6)?;
+        close(&x1.x, &x3.x, 1e-6)
+    });
+}
+
+#[test]
+fn prop_adjoint_db_equals_transpose_solve() {
+    // dL/db for L = <w, x> must equal A^{-T} w regardless of backend
+    check("adjoint db identity", 10, |rng| {
+        let n = 10 + rng.below(30);
+        let a = random_nonsymmetric(rng, n, 3);
+        let pattern = Pattern::of(&a);
+        let b = rng.normal_vec(n);
+        let w = rng.normal_vec(n);
+        let solver = native_solver();
+        let tape = Tape::new();
+        let vals = tape.leaf_vec(a.vals.clone());
+        let bv = tape.leaf_vec(b);
+        let x = solve_linear(&tape, &pattern, vals, bv, &solver).map_err(|e| e.to_string())?;
+        let wv = tape.constant_vec(w.clone());
+        let loss = tape.dot(x, wv);
+        let grads = tape.backward(loss);
+        let want = (solver)(&pattern, &a.vals, &w, Transpose::Yes).map_err(|e| e.to_string())?;
+        close(grads.vec(bv), &want, 1e-7)
+    });
+}
+
+#[test]
+fn prop_stencil_assembly_consistent() {
+    // stencil spmv == csr spmv for random positive kappa
+    check("stencil == csr", 15, |rng| {
+        let g = 4 + rng.below(20);
+        let kappa: Vec<f64> = (0..g * g).map(|_| 0.2 + rng.uniform() * 3.0).collect();
+        let coeffs = stencil_coeffs(g, Some(&kappa));
+        let a = coeffs.to_csr();
+        let x = rng.normal_vec(g * g);
+        let mut y = vec![0.0; g * g];
+        coeffs.spmv(&x, &mut y);
+        close(&y, &a.matvec(&x), 1e-9)
+    });
+}
+
+#[test]
+fn prop_dense_eigh_reconstructs() {
+    check("jacobi_eigh A v = lambda v", 15, |rng| {
+        let n = 3 + rng.below(12);
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in i..n {
+                let v = rng.normal();
+                a[i * n + j] = v;
+                a[j * n + i] = v;
+            }
+        }
+        let (vals, vecs) = jacobi_eigh(&a, n);
+        for (lam, v) in vals.iter().zip(&vecs) {
+            for i in 0..n {
+                let av: f64 = (0..n).map(|j| a[i * n + j] * v[j]).sum();
+                if (av - lam * v[i]).abs() > 1e-7 {
+                    return Err(format!("residual at lambda={lam}"));
+                }
+            }
+        }
+        // ascending order
+        for w in vals.windows(2) {
+            if w[0] > w[1] + 1e-12 {
+                return Err("not sorted".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_distributed_solve_matches_serial() {
+    check("dist solve == serial", 6, |rng| {
+        let g = 8 + rng.below(8);
+        let nparts = 2 + rng.below(3);
+        let sys = poisson2d(g, None);
+        let strat = match rng.below(3) {
+            0 => PartitionStrategy::Contiguous,
+            1 => PartitionStrategy::Rcb,
+            _ => PartitionStrategy::GreedyBfs,
+        };
+        let dt = DSparseTensor::from_global(&sys.matrix, Some(&sys.coords), nparts, strat)
+            .map_err(|e| e.to_string())?;
+        let b = rng.normal_vec(g * g);
+        let (x, _) = dt
+            .solve(
+                &b,
+                &DistIterOpts {
+                    tol: 1e-11,
+                    max_iters: 50_000,
+                ..Default::default()
+            },
+            )
+            .map_err(|e| e.to_string())?;
+        let want = direct_solve(&sys.matrix, &b).map_err(|e| e.to_string())?;
+        close(&x, &want, 1e-5)
+    });
+}
+
+#[test]
+fn prop_all_reduce_is_deterministic_sum() {
+    check("all_reduce sum", 10, |rng| {
+        let p = 2 + rng.below(5);
+        let vals: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+        let want: f64 = vals.iter().sum();
+        let vals2 = vals.clone();
+        let results = run_ranks(p, move |c| c.all_reduce_sum(vals2[c.rank()]));
+        for r in results {
+            if (r - want).abs() > 1e-12 * (1.0 + want.abs()) {
+                return Err(format!("{r} vs {want}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_graph_laplacian_kernel_is_constants() {
+    // L * 1 = shift * 1 for every generated Laplacian
+    check("laplacian null space", 15, |rng| {
+        let n = 10 + rng.below(100);
+        let shift = rng.uniform();
+        let deg = 3 + rng.below(3);
+        let l = random_graph_laplacian(rng, n, deg, shift);
+        let ones = vec![1.0; n];
+        let y = l.matvec(&ones);
+        close(&y, &vec![shift; n], 1e-9)
+    });
+}
+
+#[test]
+fn prop_tape_grad_accumulation_linear() {
+    // gradient of a*L1 + b*L2 == a*grad(L1) + b*grad(L2)
+    check("tape linearity", 10, |rng| {
+        let n = 5 + rng.below(20);
+        let x0 = rng.normal_vec(n);
+        let (ca, cb) = (rng.normal(), rng.normal());
+        let grad_of = |wa: f64, wb: f64| -> Vec<f64> {
+            let t = Tape::new();
+            let x = t.leaf_vec(x0.clone());
+            let l1 = t.dot(x, x);
+            let sq = t.mul(x, x);
+            let l2 = t.sum(sq);
+            let s1 = t.scale_const_s(wa, l1);
+            let s2 = t.scale_const_s(wb, l2);
+            let loss = t.add_ss(s1, s2);
+            t.backward(loss).vec(x).clone()
+        };
+        let g_both = grad_of(ca, cb);
+        let g_a = grad_of(ca, 0.0);
+        let g_b = grad_of(0.0, cb);
+        let combined: Vec<f64> = g_a.iter().zip(&g_b).map(|(p, q)| p + q).collect();
+        close(&g_both, &combined, 1e-10)
+    });
+}
+
+#[test]
+fn prop_slogdet_matches_dense_2x2_blocks() {
+    // random block-diagonal 2x2 matrices have analytic determinants
+    check("slogdet block diagonal", 15, |rng| {
+        let blocks = 1 + rng.below(10);
+        let n = 2 * blocks;
+        let mut coo = Coo::new(n, n);
+        let mut det = 1.0f64;
+        for b in 0..blocks {
+            let (i, j) = (2 * b, 2 * b + 1);
+            let (a11, a12, a21, a22) = (
+                rng.normal() + 3.0,
+                rng.normal(),
+                rng.normal(),
+                rng.normal() + 3.0,
+            );
+            coo.push(i, i, a11);
+            coo.push(i, j, a12);
+            coo.push(j, i, a21);
+            coo.push(j, j, a22);
+            det *= a11 * a22 - a12 * a21;
+        }
+        let f = SparseLu::factor(&coo.to_csr()).map_err(|e| e.to_string())?;
+        let (sign, logabs) = f.slogdet();
+        let got = sign * logabs.exp();
+        if (got - det).abs() > 1e-6 * (1.0 + det.abs()) {
+            return Err(format!("{got} vs {det}"));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Properties over the extension features: MINRES, IC(0), AMG, pipelined
+// CG, eigenvector adjoints.
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_minres_agrees_with_cg_on_spd() {
+    // on SPD systems MINRES and CG must find the same solution
+    check("minres == cg on SPD", 10, |rng| {
+        let n = 12 + rng.below(40);
+        let a = random_spd(rng, n, 3, 1.0);
+        let b = rng.normal_vec(n);
+        let opts = IterOpts {
+            tol: 1e-11,
+            max_iters: 50_000,
+            record_history: false,
+        };
+        let r1 = cg(&a, &b, &Identity, &opts, None);
+        let r2 = rsla::iterative::minres(&a, &b, &Identity, &opts, None);
+        if !r1.converged || !r2.converged {
+            return Err(format!(
+                "not converged: cg {} minres {}",
+                r1.residual, r2.residual
+            ));
+        }
+        close(&r1.x, &r2.x, 1e-6)
+    });
+}
+
+#[test]
+fn prop_ic0_is_spd_preserving_preconditioner() {
+    // z = M^{-1} r from IC(0) must satisfy <x, M^{-1} y> == <M^{-1} x, y>
+    // and accelerate CG on random SPD systems
+    check("ic0 symmetric + accelerates", 10, |rng| {
+        let g = 8 + rng.below(16);
+        let kappa: Vec<f64> = (0..g * g).map(|_| 0.2 + rng.uniform() * 3.0).collect();
+        let sys = poisson2d(g, Some(&kappa));
+        let ic = rsla::iterative::Ic0::new(&sys.matrix).map_err(|e| e.to_string())?;
+        let n = g * g;
+        let x = rng.normal_vec(n);
+        let y = rng.normal_vec(n);
+        let mut mx = vec![0.0; n];
+        let mut my = vec![0.0; n];
+        use rsla::iterative::Precond;
+        ic.apply(&x, &mut mx);
+        ic.apply(&y, &mut my);
+        let lhs = dot(&x, &my);
+        let rhs = dot(&mx, &y);
+        if (lhs - rhs).abs() > 1e-8 * lhs.abs().max(rhs.abs()).max(1.0) {
+            return Err(format!("IC0 not symmetric: {lhs} vs {rhs}"));
+        }
+        let opts = IterOpts {
+            tol: 1e-9,
+            max_iters: 50_000,
+            record_history: false,
+        };
+        let plain = cg(&sys.matrix, &x, &Identity, &opts, None);
+        let pre = cg(&sys.matrix, &x, &ic, &opts, None);
+        if !pre.converged {
+            return Err("IC0-CG did not converge".into());
+        }
+        if pre.iters > plain.iters {
+            return Err(format!("IC0 slower: {} vs {}", pre.iters, plain.iters));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_amg_vcycle_contracts_error() {
+    // one V-cycle must strictly reduce the A-norm error of a random
+    // initial guess on Poisson-like systems
+    check("amg v-cycle contracts", 8, |rng| {
+        let g = 12 + rng.below(24);
+        let kappa: Vec<f64> = (0..g * g).map(|_| 0.5 + rng.uniform() * 2.0).collect();
+        let sys = poisson2d(g, Some(&kappa));
+        let amg = rsla::iterative::Amg::new(&sys.matrix, &rsla::iterative::AmgOpts::default())
+            .map_err(|e| e.to_string())?;
+        let n = g * g;
+        // error equation: A e = r with random r
+        let r = rng.normal_vec(n);
+        use rsla::iterative::Precond;
+        let mut z = vec![0.0; n];
+        amg.apply(&r, &mut z);
+        // residual after the cycle: ||r - A z|| must be < ||r||
+        let az = sys.matrix.matvec(&z);
+        let before = util::norm2(&r);
+        let after = util::norm2(
+            &r.iter()
+                .zip(&az)
+                .map(|(a, b)| a - b)
+                .collect::<Vec<f64>>(),
+        );
+        if after >= before {
+            return Err(format!("V-cycle did not contract: {before} -> {after}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pipelined_cg_equals_standard_cg() {
+    // the single-reduction recurrence is algebraically the same Krylov
+    // method: solutions must agree on random SPD systems
+    check("pipelined == standard dist CG", 6, |rng| {
+        let g = 10 + rng.below(14);
+        let n = g * g;
+        let kappa: Vec<f64> = (0..n).map(|_| 0.3 + rng.uniform() * 2.0).collect();
+        let sys = poisson2d(g, Some(&kappa));
+        let nparts = 2 + rng.below(3) as usize;
+        let dt = DSparseTensor::from_global(
+            &sys.matrix,
+            Some(&sys.coords),
+            nparts,
+            PartitionStrategy::Contiguous,
+        )
+        .map_err(|e| e.to_string())?;
+        let b = rng.normal_vec(n);
+        let opts = DistIterOpts {
+            tol: 1e-11,
+            max_iters: 50_000,
+            ..Default::default()
+        };
+        let (x_std, _) = dt.solve(&b, &opts).map_err(|e| e.to_string())?;
+        // pipelined via raw rank API
+        use rsla::distributed::dist_cg_pipelined;
+        use std::sync::Arc;
+        let part = dt.partition();
+        let a_perm = sys.matrix.permute_sym(&part.perm);
+        let shares = Arc::new(rsla::distributed::halo::distribute(&a_perm, part));
+        let mut b_perm = vec![0.0; n];
+        for i in 0..n {
+            b_perm[i] = b[part.perm[i]];
+        }
+        let b_perm = Arc::new(b_perm);
+        let offsets: Vec<std::ops::Range<usize>> =
+            (0..nparts).map(|p| part.rank_range(p)).collect();
+        let o2 = offsets.clone();
+        let opts2 = opts.clone();
+        let reports = run_ranks(nparts, move |c| {
+            let p = c.rank();
+            dist_cg_pipelined(&shares[p], &b_perm[o2[p].clone()], &c, &opts2)
+        });
+        let mut x_pip = vec![0.0; n];
+        let mut idx = 0;
+        for r in &reports {
+            for v in &r.x_own {
+                // un-permute: new index idx holds old row perm[idx]
+                x_pip[part.perm[idx]] = *v;
+                idx += 1;
+            }
+        }
+        close(&x_pip, &x_std, 1e-6)
+    });
+}
+
+#[test]
+fn prop_eigsh_vector_gradient_scaling_invariance() {
+    // eigenvectors are invariant under A -> (1+t) A, so the directional
+    // derivative of any eigenvector-only loss along E = A must vanish:
+    // sum_k dvals_k * A_k ~ 0.  (This direction IS representable on the
+    // sparsity pattern, unlike a dense rank-1 probe.)
+    check("eigsh vector grad scaling invariance", 5, |rng| {
+        let a = random_graph_laplacian(rng, 24, 4, 0.5);
+        let pattern = Pattern::of(&a);
+        let tape = Tape::new();
+        let vals = tape.leaf_vec(a.vals.clone());
+        let opts = rsla::eigen::LobpcgOpts {
+            tol: 1e-12,
+            max_iters: 3000,
+            seed: 9,
+        };
+        let (_l, vecs, res) = rsla::adjoint::eigsh_with_vectors(&tape, &pattern, vals, 2, &opts)
+            .map_err(|e| e.to_string())?;
+        let u = rng.normal_vec(24);
+        let uv = tape.constant_vec(u);
+        let s = tape.dot(vecs[1], uv);
+        let loss = tape.mul_ss(s, s);
+        let grads = tape.backward(loss);
+        let dvals = grads.vec(vals).clone();
+        let _ = &res;
+        // <dL/dA, A> on the pattern = d/dt L((1+t)A) at t=0 = 0
+        let q = dot(&dvals, &a.vals);
+        let scale = util::norm2(&dvals) * util::norm2(&a.vals);
+        if q.abs() > 1e-6 * (1.0 + scale) {
+            return Err(format!(
+                "<dA, A> = {q} (should vanish; scale {scale:.3e})"
+            ));
+        }
+        Ok(())
+    });
+}
