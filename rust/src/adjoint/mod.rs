@@ -49,19 +49,19 @@ pub type SolveFn =
     Arc<dyn Fn(&Pattern, &[f64], &[f64], Transpose) -> Result<Vec<f64>> + Send + Sync>;
 
 /// Reference SolveFn built on the native substrate: Cholesky+RCM for
-/// SPD-looking matrices, sparse LU otherwise.  Used by tests and as the
-/// default when no dispatcher is wired.
+/// SPD-looking matrices, sparse LU otherwise, served through the
+/// pattern-keyed factor cache so the forward solve and the adjoint
+/// (`Transpose::Yes`) solve share ONE numeric factorization — and
+/// training loops that re-solve on updated values reuse the symbolic
+/// analysis.  Used by tests and as the default when no dispatcher is
+/// wired.
 pub fn native_solver() -> SolveFn {
     Arc::new(|pattern, vals, rhs, transpose| {
         let a = pattern.with_vals(vals.to_vec());
-        if a.looks_spd() {
-            crate::direct::direct_solve(&a, rhs)
-        } else {
-            let f = crate::direct::SparseLu::factor(&a)?;
-            match transpose {
-                Transpose::No => f.solve(rhs),
-                Transpose::Yes => f.solve_t(rhs),
-            }
+        let f = crate::factor_cache::FactorCache::global().factor(&a, u64::MAX, None)?;
+        match transpose {
+            Transpose::No => f.solve(rhs),
+            Transpose::Yes => f.solve_t(rhs),
         }
     })
 }

@@ -29,10 +29,14 @@ impl CustomOp for NonlinearSolveOp {
         let gy = out_grad.as_vec();
         let theta = inputs[0].as_vec();
         let residual = (self.factory)(theta);
-        // J^T lambda = dL/du at the converged state
+        // J^T lambda = dL/du at the converged state.  The forward
+        // Newton loop factored J with the same pattern, so the cached
+        // factorization (or at least its symbolic half) serves the
+        // transpose solve without building J^T at all.
         let j = residual.jacobian(u_star);
-        let jt = j.transpose();
-        let lambda = crate::direct::direct_solve(&jt, gy).expect("adjoint solve failed");
+        let lambda = crate::factor_cache::FactorCache::global()
+            .solve_t(&j, gy, None)
+            .expect("adjoint solve failed");
         // dL/dtheta = -lambda^T dF/dtheta
         let mut dtheta = residual.vjp_theta(u_star, &lambda);
         for d in dtheta.iter_mut() {

@@ -13,9 +13,10 @@
 
 use std::sync::Arc;
 
-use super::{Backend, Device, Problem, SolveOpts, SolveOutcome};
+use super::{Backend, Device, Method, Problem, SolveOpts, SolveOutcome};
 use crate::adjoint::{SolveFn, Transpose};
 use crate::error::{Error, Result};
+use crate::factor_cache::FactorCache;
 use crate::metrics;
 use crate::runtime::RuntimeHandle;
 use crate::sparse::Pattern;
@@ -86,9 +87,25 @@ impl Dispatcher {
         }
         let n = p.op.nrows();
         let prefer_direct = n <= DIRECT_CROSSOVER_N;
+        // `native-direct` closes every chain: when the PJRT backends
+        // refuse (missing artifacts, size, SPD-ness) AND `native-iter`
+        // breaks down (e.g. CG on a small non-SPD system), the solve
+        // must still reach the one backend that can always factor.
         let order: Vec<&'static str> = match (opts.device, prefer_direct) {
-            (Device::Accel, true) => vec!["xla-direct", "xla-cg", "xla-hybrid", "native-iter"],
-            (Device::Accel, false) => vec!["xla-cg", "xla-hybrid", "xla-direct", "native-iter"],
+            (Device::Accel, true) => vec![
+                "xla-direct",
+                "xla-cg",
+                "xla-hybrid",
+                "native-iter",
+                "native-direct",
+            ],
+            (Device::Accel, false) => vec![
+                "xla-cg",
+                "xla-hybrid",
+                "xla-direct",
+                "native-iter",
+                "native-direct",
+            ],
             (Device::Cpu, true) => vec!["native-direct", "native-iter"],
             (Device::Cpu, false) => vec!["native-iter", "native-direct"],
         };
@@ -149,16 +166,82 @@ impl Dispatcher {
         }))
     }
 
+    /// True when `solver_fn` may serve the request straight from the
+    /// pattern-keyed factor cache: fully-auto policy (explicit backend
+    /// or method overrides go through dispatch so their seed semantics
+    /// — e.g. forced LU on an SPD matrix, Cholesky breakdown surfacing
+    /// — are preserved), CPU device, and a problem small enough that
+    /// the policy prefers a direct solver anyway.
+    fn cache_eligible(opts: &SolveOpts, n: usize) -> bool {
+        opts.backend.is_none()
+            && opts.method == Method::Auto
+            && opts.device == Device::Cpu
+            && n <= DIRECT_CROSSOVER_N
+    }
+
     /// Adapt the dispatcher into the adjoint framework's black-box
     /// solver hook.  `self` is moved behind an Arc so the closure can be
     /// shared with tape nodes.
+    ///
+    /// Solves are served from the process-wide [`FactorCache`] whenever
+    /// the dispatch policy would pick a direct backend: ONE numeric
+    /// factorization per (pattern, values) pair serves the forward solve
+    /// AND every `Transpose::Yes` adjoint solve (paper §3.2.3) — the
+    /// seed's per-backward LU rebuild and per-call `is_symmetric` scan
+    /// are gone.  Cache hit/miss/eviction counters land in
+    /// `self.metrics` under `factor_cache.*`.
     pub fn solver_fn(self: &Arc<Self>, opts: SolveOpts) -> SolveFn {
         let this = self.clone();
         Arc::new(move |pattern: &Pattern, vals: &[f64], rhs: &[f64], transpose: Transpose| {
             let a = pattern.with_vals(vals.to_vec());
-            let symmetric = a.is_symmetric(1e-12);
-            if transpose == Transpose::Yes && !symmetric {
-                // nonsymmetric adjoint: reuse the LU factorization path
+            let mut cache_decline: Option<Error> = None;
+            if Self::cache_eligible(&opts, a.nrows) {
+                match FactorCache::global().factor(&a, opts.host_mem_budget, Some(&this.metrics))
+                {
+                    Ok(f) => {
+                        return match transpose {
+                            Transpose::No => f.solve(rhs),
+                            Transpose::Yes => f.solve_t(rhs),
+                        };
+                    }
+                    // singular / over-budget: forward solves fall
+                    // through to the dispatcher's backend chain below;
+                    // the error is kept so the adjoint path doesn't
+                    // repeat the identical failed factorization
+                    Err(e) => {
+                        log::debug!("factor cache declined ({e}); dispatching");
+                        cache_decline = Some(e);
+                    }
+                }
+            }
+            // symmetry gates only the transpose path, so don't pay the
+            // O(nnz) probe/scan on forward calls at all; the cache
+            // probe (a PatternKey hash) is only worth it where the
+            // cache could actually hold the matrix
+            let transpose_nonsym = transpose == Transpose::Yes && {
+                let symmetric = if a.nrows <= DIRECT_CROSSOVER_N {
+                    FactorCache::global().symmetry_of(&a)
+                } else {
+                    a.is_symmetric(1e-12)
+                };
+                !symmetric
+            };
+            if transpose_nonsym {
+                // nonsymmetric adjoint needs a direct transpose solve;
+                // a decline above would only repeat itself
+                if let Some(e) = cache_decline {
+                    return Err(e);
+                }
+                // within the direct crossover it is served (and
+                // retained) by the cache UNDER THE CALLER'S BUDGET,
+                // while oversized systems keep the seed's one-shot LU
+                // so a single huge factor cannot flush the process-wide
+                // cache
+                if a.nrows <= DIRECT_CROSSOVER_N {
+                    let f = FactorCache::global()
+                        .factor(&a, opts.host_mem_budget, Some(&this.metrics))?;
+                    return f.solve_t(rhs);
+                }
                 let f = crate::direct::SparseLu::factor(&a)?;
                 return f.solve_t(rhs);
             }
@@ -255,6 +338,94 @@ mod tests {
                 }
             )
             .is_err());
+    }
+
+    #[test]
+    fn accel_chain_ends_in_native_direct() {
+        // Regression: neither Accel branch used to include
+        // `native-direct`, so a CPU-only dispatcher serving an Accel
+        // request had no way out when `native-iter` broke down.  CG on
+        // this symmetric-looking but indefinite system breaks down at
+        // iteration 1; the chain must fall through to the direct LU.
+        use crate::sparse::Coo;
+        let mut coo = Coo::new(2, 2);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 1, 2.0);
+        coo.push(1, 0, 2.0);
+        coo.push(1, 1, 1.0);
+        let a = coo.to_csr();
+        assert!(a.looks_spd(), "test needs a looks-SPD indefinite matrix");
+        let b = vec![1.0, -1.0];
+        let p = Problem {
+            op: Operator::Csr(&a),
+            b: &b,
+        };
+        let d = cpu_dispatcher();
+        let out = d.solve(&p, &SolveOpts::on_accel()).unwrap();
+        assert_eq!(out.backend, "native-direct");
+        assert!(util::rel_l2(&a.matvec(&out.x), &b) < 1e-10);
+        assert!(
+            d.metrics.get("dispatch.failed.native-iter") >= 1,
+            "native-iter must have been tried and failed first"
+        );
+    }
+
+    #[test]
+    fn solver_fn_factors_once_per_forward_backward_pass() {
+        // Acceptance: at most one numeric factorization per (pattern,
+        // values) pair across a forward + backward (transpose) pass,
+        // observable through the dispatcher's own metrics registry.
+        let mut rng = Prng::new(0xFAC7);
+        let a = random_nonsymmetric(&mut rng, 37, 4);
+        let pattern = crate::sparse::Pattern::of(&a);
+        let d = Arc::new(cpu_dispatcher());
+        let f = d.solver_fn(SolveOpts::default());
+        let b = rng.normal_vec(37);
+        let gy = rng.normal_vec(37);
+
+        let x = f(&pattern, &a.vals, &b, Transpose::No).unwrap();
+        let lambda = f(&pattern, &a.vals, &gy, Transpose::Yes).unwrap();
+        // plus a second forward (training-loop shape): still one factorization
+        let x2 = f(&pattern, &a.vals, &b, Transpose::No).unwrap();
+
+        assert!(util::rel_l2(&a.matvec(&x), &b) < 1e-9);
+        let mut atl = vec![0.0; 37];
+        a.spmv_t(&lambda, &mut atl);
+        assert!(util::rel_l2(&atl, &gy) < 1e-9);
+        assert_eq!(x, x2, "cached forward must be bit-stable");
+
+        let factorizations = d.metrics.get("factor_cache.numeric_factorizations");
+        assert!(
+            factorizations <= 1,
+            "expected at most one numeric factorization, got {factorizations}"
+        );
+        assert!(
+            d.metrics.get("factor_cache.hit.numeric") >= 2,
+            "backward and repeat solves must be cache hits"
+        );
+    }
+
+    #[test]
+    fn solver_fn_respects_iterative_overrides() {
+        // an explicit iterative backend/method must bypass the factor
+        // cache and go through dispatch
+        let sys = poisson2d(8, None);
+        let pattern = crate::sparse::Pattern::of(&sys.matrix);
+        let d = Arc::new(cpu_dispatcher());
+        let f = d.solver_fn(SolveOpts {
+            backend: Some("native-iter".into()),
+            tol: 1e-11,
+            ..Default::default()
+        });
+        let b = vec![1.0; 64];
+        let x = f(&pattern, &sys.matrix.vals, &b, Transpose::No).unwrap();
+        assert!(util::rel_l2(&sys.matrix.matvec(&x), &b) < 1e-8);
+        assert_eq!(
+            d.metrics.get("factor_cache.numeric_factorizations"),
+            0,
+            "iterative override must not factor"
+        );
+        assert!(d.metrics.get("dispatch.solved.native-iter") >= 1);
     }
 
     #[test]

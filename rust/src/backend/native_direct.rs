@@ -6,6 +6,7 @@
 use super::{Backend, Device, Method, Problem, SolveOpts, SolveOutcome};
 use crate::direct::{EnvelopeCholesky, SparseLu};
 use crate::error::{Error, Result};
+use crate::factor_cache::FactorCache;
 
 pub struct NativeDirect;
 
@@ -42,45 +43,68 @@ impl Backend for NativeDirect {
     fn solve(&self, p: &Problem, opts: &SolveOpts) -> Result<SolveOutcome> {
         let a = p.op.to_csr();
         let spd = p.op.is_spd_like();
-        let try_chol = spd && opts.method != Method::Lu;
-        if try_chol {
-            // pre-factorization fill check against the budget
-            let perm = crate::direct::ordering::rcm(&a);
-            let pa = a.permute_sym(&perm);
-            let fill = EnvelopeCholesky::predicted_fill(&pa) as u64 * 8;
+        if opts.method == Method::Lu {
+            // explicit-LU override keeps the uncached seed path: the
+            // cache's family policy would pick Cholesky for SPD inputs
+            let cap = (opts.host_mem_budget / 16) as usize;
+            let f = SparseLu::factor_with_cap(&a, cap)?;
+            let x = f.solve(p.b)?;
+            let residual = residual_of(&a, &x, p.b);
+            return Ok(SolveOutcome {
+                x,
+                backend: self.name(),
+                method: "lu",
+                iters: 0,
+                residual,
+                peak_bytes: f.bytes(),
+            });
+        }
+        if spd {
+            // pre-factorization fill check against the budget, kept
+            // BEFORE any factorization so OOM semantics never depend on
+            // cache warmth.  A verified cached symbolic analysis serves
+            // the predicted fill without recomputing RCM; only a
+            // symbolic miss pays the cold ordering pass.
+            let fill = FactorCache::global()
+                .chol_predicted_fill_bytes(&a)
+                .unwrap_or_else(|| {
+                    let perm = crate::direct::ordering::rcm(&a);
+                    let pa = a.permute_sym(&perm);
+                    EnvelopeCholesky::predicted_fill(&pa) as u64 * 8
+                });
             if fill > opts.host_mem_budget {
                 return Err(Error::OutOfMemory {
                     needed_bytes: fill,
                     budget_bytes: opts.host_mem_budget,
                 });
             }
-            match EnvelopeCholesky::factor_rcm(&a) {
-                Ok(f) => {
-                    let x = f.solve(p.b);
-                    let residual = residual_of(&a, &x, p.b);
-                    return Ok(SolveOutcome {
-                        x,
-                        backend: self.name(),
-                        method: "cholesky+rcm",
-                        iters: 0,
-                        residual,
-                        peak_bytes: f.bytes(),
-                    });
-                }
-                Err(Error::Breakdown { .. }) if opts.method == Method::Auto => {
-                    // fall through to LU below
-                }
-                Err(e) => return Err(e),
+            if opts.method == Method::Cholesky {
+                // explicit Cholesky must surface Breakdown (the seed's
+                // contract) instead of the cache's silent LU fallback
+                let f = EnvelopeCholesky::factor_rcm(&a)?;
+                let x = f.solve(p.b);
+                let residual = residual_of(&a, &x, p.b);
+                return Ok(SolveOutcome {
+                    x,
+                    backend: self.name(),
+                    method: "cholesky+rcm",
+                    iters: 0,
+                    residual,
+                    peak_bytes: f.bytes(),
+                });
             }
         }
-        let cap = (opts.host_mem_budget / 16) as usize;
-        let f = SparseLu::factor_with_cap(&a, cap)?;
+        // factorize-once-per-(pattern, values) through the shared cache;
+        // repeated solves (training loops, the batch service, adjoints)
+        // reuse the numeric factor, same-pattern solves reuse the
+        // symbolic analysis.  The cache re-applies the budget on hits.
+        let f = FactorCache::global().factor(&a, opts.host_mem_budget, None)?;
         let x = f.solve(p.b)?;
         let residual = residual_of(&a, &x, p.b);
         Ok(SolveOutcome {
             x,
             backend: self.name(),
-            method: "lu",
+            method: f.method(),
             iters: 0,
             residual,
             peak_bytes: f.bytes(),

@@ -73,7 +73,19 @@ impl Backend for NativeIter {
         // failing to reach tol is an ERROR at the backend boundary: the
         // dispatcher can then fall through to another backend, and a
         // caller never mistakes a stalled Krylov iterate for a solution.
+        // Breakdown (non-SPD operator, degenerate recurrence) is
+        // reported as its own error kind so callers can distinguish it
+        // from an exhausted iteration budget.
         if !result.converged {
+            if result.breakdown {
+                return Err(crate::error::Error::Breakdown {
+                    at: result.iters,
+                    reason: format!(
+                        "krylov breakdown after {} iterations (operator not SPD, or degenerate recurrence); residual {:.3e}",
+                        result.iters, result.residual
+                    ),
+                });
+            }
             return Err(crate::error::Error::NotConverged {
                 iters: result.iters,
                 residual: result.residual,
@@ -156,6 +168,38 @@ mod tests {
             .unwrap();
         assert_eq!(out.method, "gmres50+jacobi");
         assert!(util::rel_l2(&a.matvec(&out.x), &b) < 1e-8);
+    }
+
+    #[test]
+    fn breakdown_surfaces_as_breakdown_error() {
+        use crate::sparse::Coo;
+        // looks SPD (symmetric, positive diagonal) but is indefinite:
+        // auto-method picks CG, which breaks down on pAp < 0.  The
+        // backend must surface Error::Breakdown — the signal the
+        // dispatcher's runtime-fallback path keys on — not NotConverged.
+        let mut coo = Coo::new(2, 2);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 1, 2.0);
+        coo.push(1, 0, 2.0);
+        coo.push(1, 1, 1.0);
+        let a = coo.to_csr();
+        let b = vec![1.0, -1.0];
+        let err = NativeIter
+            .solve(
+                &Problem {
+                    op: Operator::Csr(&a),
+                    b: &b,
+                },
+                &SolveOpts {
+                    method: Method::Cg,
+                    ..Default::default()
+                },
+            )
+            .unwrap_err();
+        assert!(
+            matches!(err, crate::error::Error::Breakdown { .. }),
+            "expected Breakdown, got: {err}"
+        );
     }
 
     #[test]

@@ -1,41 +1,16 @@
 //! Pattern-keyed batching: requests whose matrices share (pattern,
 //! values) coalesce into one factorize-once multi-RHS solve; requests
 //! sharing only the pattern still reuse the dispatch decision.
+//!
+//! The key itself lives in [`crate::sparse::key`] (it is shared with
+//! the factor cache); this module owns the batching *policy*: grouping
+//! by key, and the full-equality re-check that makes hash-keyed groups
+//! sound (a 64-bit collision must never produce a wrong answer).
 
 use std::collections::HashMap;
-use std::hash::{Hash, Hasher};
 
+pub use crate::sparse::key::PatternKey;
 use crate::sparse::Csr;
-
-/// Cheap structural fingerprint of a sparsity pattern + values.
-/// Collisions only cost a missed batching opportunity / an extra value
-/// comparison, never a wrong answer (the service re-checks equality).
-#[derive(Clone, Debug, PartialEq, Eq, Hash)]
-pub struct PatternKey {
-    pub nrows: usize,
-    pub nnz: usize,
-    pub structure_hash: u64,
-    pub values_hash: u64,
-}
-
-impl PatternKey {
-    pub fn of(m: &Csr) -> Self {
-        let mut h = std::collections::hash_map::DefaultHasher::new();
-        m.indptr.hash(&mut h);
-        m.indices.hash(&mut h);
-        let structure_hash = h.finish();
-        let mut hv = std::collections::hash_map::DefaultHasher::new();
-        for v in &m.vals {
-            v.to_bits().hash(&mut hv);
-        }
-        PatternKey {
-            nrows: m.nrows,
-            nnz: m.nnz(),
-            structure_hash,
-            values_hash: hv.finish(),
-        }
-    }
-}
 
 /// Batching policy knobs.
 #[derive(Clone, Debug)]
@@ -77,27 +52,39 @@ pub fn group_by_key(keys: &[PatternKey], max_batch: usize) -> Vec<Vec<usize>> {
     out
 }
 
+/// Soundness re-check for a key-grouped batch: split the group into
+/// sub-groups whose matrices are *actually* equal (indptr, indices, and
+/// values), preserving arrival order within each sub-group.
+///
+/// `group_by_key` groups by 64-bit fingerprints; two different matrices
+/// can in principle land in one group.  The worker factorizes once per
+/// group, so it must only ever see matrices that are bit-identical —
+/// this function is that guarantee.  With no collision (the universal
+/// case) it returns a single group and costs one O(nnz) comparison per
+/// extra member.
+pub fn verify_groups(mats: &[&Csr]) -> Vec<Vec<usize>> {
+    let mut out: Vec<Vec<usize>> = Vec::new();
+    for (i, m) in mats.iter().enumerate() {
+        let mut placed = false;
+        for group in out.iter_mut() {
+            let rep = mats[group[0]];
+            if rep.indptr == m.indptr && rep.indices == m.indices && rep.vals == m.vals {
+                group.push(i);
+                placed = true;
+                break;
+            }
+        }
+        if !placed {
+            out.push(vec![i]);
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::sparse::poisson::poisson2d;
-
-    #[test]
-    fn same_matrix_same_key() {
-        let a = poisson2d(6, None).matrix;
-        let b = poisson2d(6, None).matrix;
-        assert_eq!(PatternKey::of(&a), PatternKey::of(&b));
-    }
-
-    #[test]
-    fn different_values_different_key() {
-        let a = poisson2d(6, None).matrix;
-        let mut b = a.clone();
-        b.vals[0] += 1.0;
-        let (ka, kb) = (PatternKey::of(&a), PatternKey::of(&b));
-        assert_eq!(ka.structure_hash, kb.structure_hash);
-        assert_ne!(ka.values_hash, kb.values_hash);
-    }
 
     #[test]
     fn grouping_respects_max_batch() {
@@ -117,5 +104,40 @@ mod tests {
         let keys = vec![a.clone(), b.clone(), a.clone()];
         let groups = group_by_key(&keys, 8);
         assert_eq!(groups, vec![vec![0, 2], vec![1]]);
+    }
+
+    #[test]
+    fn verify_groups_splits_forced_collision() {
+        // Simulate two different matrices landing in one key group (a
+        // hash collision the worker must survive): the re-check splits
+        // them so each factorize-once sub-batch is uniform.
+        let a = poisson2d(4, None).matrix;
+        let mut b = a.clone();
+        b.vals[0] += 1.0; // same pattern, different values
+        let groups = verify_groups(&[&a, &b, &a, &b, &b]);
+        assert_eq!(groups, vec![vec![0, 2], vec![1, 3, 4]]);
+    }
+
+    #[test]
+    fn verify_groups_keeps_identical_matrices_together() {
+        let a = poisson2d(5, None).matrix;
+        let groups = verify_groups(&[&a, &a, &a]);
+        assert_eq!(groups, vec![vec![0, 1, 2]]);
+    }
+
+    #[test]
+    fn verify_groups_distinguishes_pattern_collisions() {
+        // same nrows/nnz, different structure
+        use crate::sparse::Coo;
+        let mut c1 = Coo::new(3, 3);
+        c1.push(0, 0, 1.0);
+        c1.push(1, 1, 1.0);
+        c1.push(2, 2, 1.0);
+        let mut c2 = Coo::new(3, 3);
+        c2.push(0, 1, 1.0);
+        c2.push(1, 2, 1.0);
+        c2.push(2, 0, 1.0);
+        let (a, b) = (c1.to_csr(), c2.to_csr());
+        assert_eq!(verify_groups(&[&a, &b]), vec![vec![0], vec![1]]);
     }
 }

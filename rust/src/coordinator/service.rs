@@ -6,10 +6,10 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use super::batcher::{group_by_key, BatchPolicy, PatternKey};
-use crate::backend::{Dispatcher, Operator, Problem, SolveOpts, SolveOutcome};
-use crate::direct::EnvelopeCholesky;
+use super::batcher::{group_by_key, verify_groups, BatchPolicy, PatternKey};
+use crate::backend::{Dispatcher, Method, Operator, Problem, SolveOpts, SolveOutcome};
 use crate::error::{Error, Result};
+use crate::factor_cache::FactorCache;
 use crate::metrics;
 use crate::sparse::Csr;
 
@@ -208,36 +208,88 @@ fn intake_loop(
 
 fn serve_batch(batch: Vec<Envelope>, disp: &Dispatcher, metrics: &Arc<metrics::Registry>) {
     let t0 = Instant::now();
+    // Soundness re-check (PatternKey's contract): the intake groups by
+    // 64-bit fingerprints, so before factorizing once for the whole
+    // group we verify the matrices are actually equal and split out any
+    // mismatches into their own uniform sub-batches.
+    let uniform = {
+        let mats: Vec<&Csr> = batch.iter().map(|e| &e.req.matrix).collect();
+        verify_groups(&mats)
+    };
+    if uniform.len() > 1 {
+        metrics.incr("service.key_collisions", (uniform.len() - 1) as u64);
+    }
+    let mut slots: Vec<Option<Envelope>> = batch.into_iter().map(Some).collect();
+    for group in uniform {
+        let sub: Vec<Envelope> = group.into_iter().map(|i| slots[i].take().unwrap()).collect();
+        serve_uniform_batch(sub, t0, disp, metrics);
+    }
+}
+
+/// Serve a batch whose matrices are verified identical: factorize once
+/// through the pattern-keyed cache (which also reuses factors across
+/// batches and windows), fall back to per-request dispatch when the
+/// matrix cannot be factored (singular, over budget, rhs mismatch).
+fn serve_uniform_batch(
+    batch: Vec<Envelope>,
+    t0: Instant,
+    disp: &Dispatcher,
+    metrics: &Arc<metrics::Registry>,
+) {
     let n = batch.len();
-    // factorize-once fast path: same (pattern, values) SPD batch
-    if n > 1 && batch[0].req.matrix.looks_spd() {
+    // Factorize-once applies when a direct solve is the right call:
+    // every request runs the fully-auto policy (explicit backend /
+    // method overrides must reach the dispatcher that honors them),
+    // and the matrix is SPD-looking (the seed's gate — Cholesky
+    // scales) or small enough that the dispatch policy would pick a
+    // direct backend anyway.  Large non-SPD batches fall through to
+    // per-request dispatch (iterative), as before.
+    let auto_policy = batch
+        .iter()
+        .all(|e| e.req.opts.backend.is_none() && e.req.opts.method == Method::Auto);
+    let direct_ok = auto_policy
+        && (batch[0].req.matrix.looks_spd()
+            || batch[0].req.matrix.nrows <= crate::backend::dispatch::DIRECT_CROSSOVER_N);
+    if n > 1 && direct_ok && batch[0].req.matrix.nrows == batch[0].req.b.len() {
         let a = batch[0].req.matrix.clone();
-        if let Ok(f) = EnvelopeCholesky::factor_rcm(&a) {
+        // honor the tightest budget in the group
+        let budget = batch
+            .iter()
+            .map(|e| e.req.opts.host_mem_budget)
+            .min()
+            .unwrap_or(u64::MAX);
+        if let Ok(f) = FactorCache::global().factor(&a, budget, Some(metrics)) {
             let bytes = f.bytes();
+            let method: &'static str = match f.method() {
+                "cholesky+rcm" => "cholesky+rcm(batched)",
+                _ => "lu(batched)",
+            };
             for env in batch {
                 let ts = Instant::now();
-                let x = f.solve(&env.req.b);
-                let residual = {
-                    let ax = a.matvec(&x);
-                    env.req
-                        .b
-                        .iter()
-                        .zip(&ax)
-                        .map(|(bi, ai)| (bi - ai) * (bi - ai))
-                        .sum::<f64>()
-                        .sqrt()
-                };
-                metrics.incr("service.completed", 1);
-                let _ = env.reply.send(SolveResponse {
-                    id: env.req.id,
-                    outcome: Ok(SolveOutcome {
+                let outcome = f.solve(&env.req.b).map(|x| {
+                    let residual = {
+                        let ax = a.matvec(&x);
+                        env.req
+                            .b
+                            .iter()
+                            .zip(&ax)
+                            .map(|(bi, ai)| (bi - ai) * (bi - ai))
+                            .sum::<f64>()
+                            .sqrt()
+                    };
+                    SolveOutcome {
                         x,
                         backend: "native-direct",
-                        method: "cholesky+rcm(batched)",
+                        method,
                         iters: 0,
                         residual,
                         peak_bytes: bytes,
-                    }),
+                    }
+                });
+                metrics.incr("service.completed", 1);
+                let _ = env.reply.send(SolveResponse {
+                    id: env.req.id,
+                    outcome,
                     queue_seconds: (t0 - env.enqueued).as_secs_f64(),
                     service_seconds: ts.elapsed().as_secs_f64(),
                     batch_size: n,

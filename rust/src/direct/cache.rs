@@ -1,0 +1,293 @@
+//! Family-agnostic handles over the split symbolic/numeric direct
+//! factorizations — the plumbing layer under [`crate::factor_cache`].
+//!
+//! [`Symbolic`] is the pattern-reusable half (RCM + envelope + scatter
+//! map for Cholesky; pivot order + elimination reach for LU) and
+//! [`CachedFactor`] is a ready numeric factorization that serves both
+//! the forward solve and the transpose/adjoint solve — the paper's
+//! Eq. 3 adjoint reuses the forward factorization instead of
+//! refactoring (§3.2.3).
+
+use std::sync::Arc;
+
+use super::{CholSymbolic, EnvelopeCholesky, LuSymbolic, SparseLu};
+use crate::error::{Error, Result};
+use crate::sparse::Csr;
+
+/// A symbolic analysis, reusable across value assignments on one
+/// sparsity pattern.
+#[derive(Clone)]
+pub enum Symbolic {
+    Chol(Arc<CholSymbolic>),
+    Lu(Arc<LuSymbolic>),
+}
+
+impl Symbolic {
+    /// Bytes held by the symbolic structure.
+    pub fn bytes(&self) -> u64 {
+        match self {
+            Symbolic::Chol(s) => s.bytes(),
+            Symbolic::Lu(s) => s.bytes(),
+        }
+    }
+}
+
+enum FactorKind {
+    Chol(EnvelopeCholesky),
+    Lu(SparseLu),
+}
+
+/// A numeric factorization plus the facts the adjoint path needs, so a
+/// single factorization serves forward, repeated, and transpose solves
+/// without re-checking anything O(nnz).
+pub struct CachedFactor {
+    kind: FactorKind,
+    /// Numeric symmetry of the factored matrix (cached: kills the
+    /// per-backward `is_symmetric` scan).
+    pub symmetric: bool,
+}
+
+impl CachedFactor {
+    pub fn n(&self) -> usize {
+        match &self.kind {
+            FactorKind::Chol(f) => f.n(),
+            FactorKind::Lu(f) => f.n(),
+        }
+    }
+
+    /// Solve A x = b.
+    pub fn solve(&self, b: &[f64]) -> Result<Vec<f64>> {
+        if b.len() != self.n() {
+            return Err(Error::InvalidProblem(format!(
+                "rhs length {} != n {}",
+                b.len(),
+                self.n()
+            )));
+        }
+        match &self.kind {
+            FactorKind::Chol(f) => Ok(f.solve(b)),
+            FactorKind::Lu(f) => f.solve(b),
+        }
+    }
+
+    /// Solve A^T x = b from the same factorization (Cholesky: A = A^T;
+    /// LU: U^T L^T P forward/backward sweeps).
+    pub fn solve_t(&self, b: &[f64]) -> Result<Vec<f64>> {
+        if b.len() != self.n() {
+            return Err(Error::InvalidProblem(format!(
+                "rhs length {} != n {}",
+                b.len(),
+                self.n()
+            )));
+        }
+        match &self.kind {
+            FactorKind::Chol(f) => Ok(f.solve(b)),
+            FactorKind::Lu(f) => f.solve_t(b),
+        }
+    }
+
+    /// Factor bytes held (for memory accounting).
+    pub fn bytes(&self) -> u64 {
+        match &self.kind {
+            FactorKind::Chol(f) => f.bytes(),
+            FactorKind::Lu(f) => f.bytes(),
+        }
+    }
+
+    /// The exact quantity the cold-path budget checks compare against
+    /// `max_fill_bytes` (Cholesky: predicted fill * 8; LU: stored
+    /// entries * 16, excluding the implicit unit diagonal).  Warm-path
+    /// budget re-checks MUST use this — not [`CachedFactor::bytes`] —
+    /// so a repeated identical request never flips between success and
+    /// OutOfMemory with cache warmth.
+    pub fn fill_bytes(&self) -> u64 {
+        match &self.kind {
+            FactorKind::Chol(f) => (f.fill() * 8) as u64,
+            FactorKind::Lu(f) => ((f.fill() - f.n()) * 16) as u64,
+        }
+    }
+
+    /// Method label for solve outcomes.
+    pub fn method(&self) -> &'static str {
+        match &self.kind {
+            FactorKind::Chol(_) => "cholesky+rcm",
+            FactorKind::Lu(_) => "lu",
+        }
+    }
+}
+
+fn lu_cap(max_fill_bytes: u64) -> usize {
+    if max_fill_bytes == u64::MAX {
+        usize::MAX
+    } else {
+        (max_fill_bytes / 16).min(usize::MAX as u64) as usize
+    }
+}
+
+/// Cold factorization: Cholesky+RCM when the matrix is SPD-looking
+/// (symmetric with positive diagonal), LU otherwise, with LU fallback on
+/// Cholesky breakdown — the same family policy as `direct_solve` /
+/// `native-direct`.  Returns the numeric factor together with its
+/// symbolic half for later values-only refactorization.
+///
+/// `symmetric` is the (already computed) numeric symmetry of `a`;
+/// `max_fill_bytes` bounds factor storage ([`Error::OutOfMemory`] when
+/// exceeded).
+pub fn build_factor(
+    a: &Csr,
+    symmetric: bool,
+    max_fill_bytes: u64,
+) -> Result<(Arc<CachedFactor>, Symbolic)> {
+    let spd_like = symmetric && a.diag().iter().all(|&d| d > 0.0);
+    if spd_like {
+        let sym = CholSymbolic::analyze(a, true)?;
+        let fill_bytes = (sym.predicted_fill() * 8) as u64;
+        if fill_bytes > max_fill_bytes {
+            return Err(Error::OutOfMemory {
+                needed_bytes: fill_bytes,
+                budget_bytes: max_fill_bytes,
+            });
+        }
+        match EnvelopeCholesky::factor_numeric(&sym, &a.vals) {
+            Ok(f) => {
+                return Ok((
+                    Arc::new(CachedFactor {
+                        kind: FactorKind::Chol(f),
+                        symmetric,
+                    }),
+                    Symbolic::Chol(Arc::new(sym)),
+                ));
+            }
+            Err(Error::Breakdown { .. }) => { /* indefinite: fall through to LU */ }
+            Err(e) => return Err(e),
+        }
+    }
+    let (f, sym) = SparseLu::factor_recording(a, lu_cap(max_fill_bytes))?;
+    Ok((
+        Arc::new(CachedFactor {
+            kind: FactorKind::Lu(f),
+            symmetric,
+        }),
+        Symbolic::Lu(Arc::new(sym)),
+    ))
+}
+
+/// Values-only refactorization against a cached symbolic analysis.
+///
+/// Fails with [`Error::Breakdown`] when the cached family no longer
+/// fits the values (asymmetric values on a Cholesky pattern, vanished
+/// LU pivot) — callers fall back to [`build_factor`].
+pub fn refactor(
+    sym: &Symbolic,
+    a: &Csr,
+    symmetric: bool,
+    max_fill_bytes: u64,
+) -> Result<Arc<CachedFactor>> {
+    match sym {
+        Symbolic::Chol(cs) => {
+            if !symmetric {
+                return Err(Error::Breakdown {
+                    at: 0,
+                    reason: "cached Cholesky symbolic, but new values are not symmetric".into(),
+                });
+            }
+            let fill_bytes = (cs.predicted_fill() * 8) as u64;
+            if fill_bytes > max_fill_bytes {
+                return Err(Error::OutOfMemory {
+                    needed_bytes: fill_bytes,
+                    budget_bytes: max_fill_bytes,
+                });
+            }
+            let f = EnvelopeCholesky::factor_numeric(cs, &a.vals)?;
+            Ok(Arc::new(CachedFactor {
+                kind: FactorKind::Chol(f),
+                symmetric,
+            }))
+        }
+        Symbolic::Lu(ls) => {
+            let f = SparseLu::refactor(ls, a, lu_cap(max_fill_bytes))?;
+            Ok(Arc::new(CachedFactor {
+                kind: FactorKind::Lu(f),
+                symmetric,
+            }))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::graphs::{random_nonsymmetric, random_spd};
+    use crate::util::{self, Prng};
+
+    #[test]
+    fn build_factor_picks_family_and_serves_transpose() {
+        let mut rng = Prng::new(1);
+        let spd = random_spd(&mut rng, 40, 3, 1.5);
+        let (f, sym) = build_factor(&spd, true, u64::MAX).unwrap();
+        assert_eq!(f.method(), "cholesky+rcm");
+        assert!(matches!(sym, Symbolic::Chol(_)));
+        let b = rng.normal_vec(40);
+        let x = f.solve(&b).unwrap();
+        assert!(util::rel_l2(&spd.matvec(&x), &b) < 1e-10);
+        // symmetric: transpose solve equals forward solve
+        assert_eq!(f.solve_t(&b).unwrap(), x);
+
+        let gen = random_nonsymmetric(&mut rng, 40, 4);
+        let (f, sym) = build_factor(&gen, false, u64::MAX).unwrap();
+        assert_eq!(f.method(), "lu");
+        assert!(matches!(sym, Symbolic::Lu(_)));
+        let xt = f.solve_t(&b).unwrap();
+        let mut atx = vec![0.0; 40];
+        gen.spmv_t(&xt, &mut atx);
+        assert!(util::rel_l2(&atx, &b) < 1e-9);
+    }
+
+    #[test]
+    fn refactor_reuses_symbolic_for_both_families() {
+        let mut rng = Prng::new(2);
+        let spd = random_spd(&mut rng, 30, 3, 2.0);
+        let (_, sym) = build_factor(&spd, true, u64::MAX).unwrap();
+        let mut spd2 = spd.clone();
+        for v in spd2.vals.iter_mut() {
+            *v *= 2.0;
+        }
+        let f = refactor(&sym, &spd2, true, u64::MAX).unwrap();
+        let b = rng.normal_vec(30);
+        let x = f.solve(&b).unwrap();
+        assert!(util::rel_l2(&spd2.matvec(&x), &b) < 1e-10);
+
+        let gen = random_nonsymmetric(&mut rng, 30, 3);
+        let (_, sym) = build_factor(&gen, false, u64::MAX).unwrap();
+        let mut gen2 = gen.clone();
+        for v in gen2.vals.iter_mut() {
+            *v *= 1.1;
+        }
+        let f = refactor(&sym, &gen2, false, u64::MAX).unwrap();
+        let x = f.solve(&b).unwrap();
+        assert!(util::rel_l2(&gen2.matvec(&x), &b) < 1e-9);
+    }
+
+    #[test]
+    fn chol_symbolic_rejects_asymmetric_values() {
+        let mut rng = Prng::new(3);
+        let spd = random_spd(&mut rng, 20, 3, 2.0);
+        let (_, sym) = build_factor(&spd, true, u64::MAX).unwrap();
+        let mut bad = spd.clone();
+        bad.vals[1] += 0.5; // breaks symmetry
+        assert!(matches!(
+            refactor(&sym, &bad, false, u64::MAX),
+            Err(Error::Breakdown { .. })
+        ));
+    }
+
+    #[test]
+    fn budget_propagates_as_oom() {
+        use crate::sparse::poisson::poisson2d;
+        let sys = poisson2d(24, None);
+        assert!(matches!(
+            build_factor(&sys.matrix, true, 10_000),
+            Err(Error::OutOfMemory { .. })
+        ));
+    }
+}

@@ -21,6 +21,132 @@ pub struct EnvelopeCholesky {
     perm: Option<Vec<usize>>,
 }
 
+/// The pattern-only half of an envelope Cholesky factorization: the
+/// (optional RCM) permutation, the envelope structure, and a scatter
+/// map from original CSR value slots into the skyline array.
+///
+/// Unlike LU, Cholesky needs no pivoting, so this is a *true* symbolic
+/// phase — it depends only on the sparsity pattern and can be computed
+/// once per pattern and reused for every value assignment
+/// ([`EnvelopeCholesky::factor_numeric`]).
+pub struct CholSymbolic {
+    n: usize,
+    perm: Option<Vec<usize>>,
+    first: Vec<usize>,
+    rowptr: Vec<usize>,
+    /// original CSR value index -> slot in the skyline data array;
+    /// `usize::MAX` for entries that land in the (dropped) upper
+    /// triangle of the permuted matrix.
+    scatter: Vec<usize>,
+}
+
+impl CholSymbolic {
+    /// Analyze the pattern of `a` (values are ignored).  With
+    /// `use_rcm`, an RCM reordering is computed first — RCM is itself
+    /// pattern-only, so the whole analysis is value-independent.
+    pub fn analyze(a: &Csr, use_rcm: bool) -> Result<Self> {
+        if a.nrows != a.ncols {
+            return Err(Error::InvalidProblem("cholesky needs square".into()));
+        }
+        let n = a.nrows;
+        let (perm, inv): (Option<Vec<usize>>, Vec<usize>) = if use_rcm {
+            let p = super::ordering::rcm(a);
+            let mut inv = vec![0usize; n];
+            for (new, &old) in p.iter().enumerate() {
+                inv[old] = new;
+            }
+            (Some(p), inv)
+        } else {
+            (None, (0..n).collect())
+        };
+        // envelope of the permuted pattern: first lower column per row
+        let mut first: Vec<usize> = (0..n).collect();
+        for r in 0..n {
+            let (cols, _) = a.row(r);
+            let pr = inv[r];
+            for &c in cols {
+                let pc = inv[c];
+                if pc <= pr && pc < first[pr] {
+                    first[pr] = pc;
+                }
+            }
+        }
+        let mut rowptr = vec![0usize; n + 1];
+        for r in 0..n {
+            rowptr[r + 1] = rowptr[r] + (r - first[r] + 1);
+        }
+        // scatter map original value slots -> skyline slots
+        let mut scatter = vec![usize::MAX; a.nnz()];
+        for r in 0..n {
+            let pr = inv[r];
+            for k in a.indptr[r]..a.indptr[r + 1] {
+                let pc = inv[a.indices[k]];
+                if pc <= pr {
+                    scatter[k] = rowptr[pr] + (pc - first[pr]);
+                }
+            }
+        }
+        Ok(CholSymbolic {
+            n,
+            perm,
+            first,
+            rowptr,
+            scatter,
+        })
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Skyline slots the numeric phase will allocate (f64 count).
+    pub fn predicted_fill(&self) -> usize {
+        self.rowptr[self.n]
+    }
+
+    /// Bytes held by the symbolic structure itself.
+    pub fn bytes(&self) -> u64 {
+        ((self.first.len() + self.rowptr.len() + self.scatter.len()) * 8) as u64
+            + self.perm.as_ref().map_or(0, |p| (p.len() * 8) as u64)
+    }
+}
+
+/// Jennings row-Cholesky within a fixed envelope; shared by the cold
+/// and the numeric-refactorization paths so both run the identical
+/// floating-point schedule (cached refactorized solves are bit-equal to
+/// cold-factorized ones).
+fn jennings_factor(n: usize, first: &[usize], rowptr: &[usize], data: &mut [f64]) -> Result<()> {
+    for i in 0..n {
+        let fi = first[i];
+        for j in fi..i {
+            let fj = first[j];
+            let lo = fi.max(fj);
+            // s = data[i][j] - sum_k L[i,k] L[j,k], k in [lo, j)
+            let mut s = data[rowptr[i] + (j - fi)];
+            if lo < j {
+                let ri = &data[rowptr[i] + (lo - fi)..rowptr[i] + (j - fi)];
+                let rj = &data[rowptr[j] + (lo - fj)..rowptr[j] + (j - fj)];
+                s -= crate::util::dot(ri, rj);
+            }
+            let djj = data[rowptr[j] + (j - first[j])];
+            data[rowptr[i] + (j - fi)] = s / djj;
+        }
+        let mut d = data[rowptr[i] + (i - fi)];
+        for k in fi..i {
+            let lik = data[rowptr[i] + (k - fi)];
+            d -= lik * lik;
+        }
+        if d <= 0.0 || !d.is_finite() {
+            return Err(Error::Breakdown {
+                at: i,
+                reason: format!("non-positive pivot {d:.3e} (matrix not SPD?)"),
+            });
+        }
+        data[rowptr[i] + (i - fi)] = d.sqrt();
+    }
+    Ok(())
+}
+
 impl EnvelopeCholesky {
     /// Predicted factor storage (f64 count) for `a` under its current
     /// ordering — used by backends for the pre-factorization OOM check.
@@ -65,35 +191,7 @@ impl EnvelopeCholesky {
                 }
             }
         }
-        // Jennings row-Cholesky within the envelope
-        for i in 0..n {
-            let fi = first[i];
-            for j in fi..i {
-                let fj = first[j];
-                let lo = fi.max(fj);
-                // s = data[i][j] - sum_k L[i,k] L[j,k], k in [lo, j)
-                let mut s = data[rowptr[i] + (j - fi)];
-                if lo < j {
-                    let ri = &data[rowptr[i] + (lo - fi)..rowptr[i] + (j - fi)];
-                    let rj = &data[rowptr[j] + (lo - fj)..rowptr[j] + (j - fj)];
-                    s -= crate::util::dot(ri, rj);
-                }
-                let djj = data[rowptr[j] + (j - first[j])];
-                data[rowptr[i] + (j - fi)] = s / djj;
-            }
-            let mut d = data[rowptr[i] + (i - fi)];
-            for k in fi..i {
-                let lik = data[rowptr[i] + (k - fi)];
-                d -= lik * lik;
-            }
-            if d <= 0.0 || !d.is_finite() {
-                return Err(Error::Breakdown {
-                    at: i,
-                    reason: format!("non-positive pivot {d:.3e} (matrix not SPD?)"),
-                });
-            }
-            data[rowptr[i] + (i - fi)] = d.sqrt();
-        }
+        jennings_factor(n, &first, &rowptr, &mut data)?;
         Ok(EnvelopeCholesky {
             n,
             first,
@@ -101,6 +199,42 @@ impl EnvelopeCholesky {
             data,
             perm,
         })
+    }
+
+    /// Numeric-only (re)factorization: scatter `vals` (bound to the
+    /// pattern `sym` was analyzed on) through the precomputed envelope
+    /// and run the numeric sweep.  No RCM, no envelope computation, no
+    /// permuted-matrix materialization — only the O(envelope) numeric
+    /// work.  Bit-identical to [`EnvelopeCholesky::factor_rcm`] /
+    /// [`EnvelopeCholesky::factor`] on the same values.
+    pub fn factor_numeric(sym: &CholSymbolic, vals: &[f64]) -> Result<Self> {
+        if vals.len() != sym.scatter.len() {
+            return Err(Error::InvalidProblem(format!(
+                "factor_numeric: {} values != pattern nnz {}",
+                vals.len(),
+                sym.scatter.len()
+            )));
+        }
+        let n = sym.n;
+        let mut data = vec![0f64; sym.rowptr[n]];
+        for (k, &slot) in sym.scatter.iter().enumerate() {
+            if slot != usize::MAX {
+                data[slot] = vals[k];
+            }
+        }
+        jennings_factor(n, &sym.first, &sym.rowptr, &mut data)?;
+        Ok(EnvelopeCholesky {
+            n,
+            first: sym.first.clone(),
+            rowptr: sym.rowptr.clone(),
+            data,
+            perm: sym.perm.clone(),
+        })
+    }
+
+    /// Matrix dimension.
+    pub fn n(&self) -> usize {
+        self.n
     }
 
     /// Stored factor values (the measured fill).
@@ -223,6 +357,60 @@ mod tests {
             (1.3..1.7).contains(&alpha),
             "fill exponent {alpha} not ~1.5"
         );
+    }
+
+    #[test]
+    fn factor_numeric_is_bitwise_identical_to_cold_rcm() {
+        let g = 14;
+        let sys = poisson2d(g, Some(&kappa_star(g)));
+        let cold = EnvelopeCholesky::factor_rcm(&sys.matrix).unwrap();
+        let sym = CholSymbolic::analyze(&sys.matrix, true).unwrap();
+        let warm = EnvelopeCholesky::factor_numeric(&sym, &sys.matrix.vals).unwrap();
+        assert_eq!(cold.data, warm.data, "numeric refactor must replay bitwise");
+        let mut rng = Prng::new(7);
+        let b = rng.normal_vec(g * g);
+        assert_eq!(cold.solve(&b), warm.solve(&b));
+    }
+
+    #[test]
+    fn factor_numeric_natural_matches_cold_natural() {
+        let mut rng = Prng::new(8);
+        let a = random_spd(&mut rng, 50, 3, 2.0);
+        let cold = EnvelopeCholesky::factor(&a).unwrap();
+        let sym = CholSymbolic::analyze(&a, false).unwrap();
+        let warm = EnvelopeCholesky::factor_numeric(&sym, &a.vals).unwrap();
+        assert_eq!(cold.data, warm.data);
+    }
+
+    #[test]
+    fn factor_numeric_reuses_symbolic_across_values() {
+        let g = 10;
+        let sys = poisson2d(g, None);
+        let sym = CholSymbolic::analyze(&sys.matrix, true).unwrap();
+        assert_eq!(sym.predicted_fill(), sym.rowptr[sym.n]);
+        let mut rng = Prng::new(9);
+        for scale in [0.5, 1.0, 3.0] {
+            let vals: Vec<f64> = sys.matrix.vals.iter().map(|v| v * scale).collect();
+            let f = EnvelopeCholesky::factor_numeric(&sym, &vals).unwrap();
+            let b = rng.normal_vec(g * g);
+            let x = f.solve(&b);
+            let a = crate::sparse::Pattern::of(&sys.matrix).with_vals(vals);
+            assert!(util::rel_l2(&a.matvec(&x), &b) < 1e-11);
+        }
+    }
+
+    #[test]
+    fn factor_numeric_rejects_indefinite_values() {
+        use crate::sparse::Coo;
+        let mut coo = Coo::new(2, 2);
+        coo.push(0, 0, 1.0);
+        coo.push(1, 1, 1.0);
+        let a = coo.to_csr();
+        let sym = CholSymbolic::analyze(&a, false).unwrap();
+        assert!(matches!(
+            EnvelopeCholesky::factor_numeric(&sym, &[1.0, -1.0]),
+            Err(Error::Breakdown { .. })
+        ));
     }
 
     #[test]

@@ -13,6 +13,48 @@ use crate::sparse::Csr;
 
 const UNPIVOTED: usize = usize::MAX;
 
+/// The reusable half of a Gilbert–Peierls factorization: pivot order
+/// and per-column elimination reach, recorded during a first
+/// ("recording") factorization and replayed by [`SparseLu::refactor`]
+/// when only the numeric values change (fixed sparsity pattern).
+///
+/// Partial pivoting makes a purely pattern-based symbolic phase
+/// impossible (pivots depend on values), so — like KLU/SuperLU
+/// refactorization — the first factorization decides the pivots and
+/// this struct freezes them.  The recorded reach is computed over the
+/// *structural* (unpruned) L pattern, so it stays a valid superset for
+/// any values bound to the same pattern.  A pivot that becomes zero
+/// under new values surfaces as [`Error::Breakdown`]; callers then fall
+/// back to a fresh pivoting factorization.
+pub struct LuSymbolic {
+    n: usize,
+    /// Per-column postorder reach of A[:,j] in the recorded L graph.
+    post: Vec<Vec<usize>>,
+    /// row -> pivot position (complete).
+    pinv: Vec<usize>,
+    /// pivot position -> row.
+    prow: Vec<usize>,
+    /// Stored factor entries of the recording factorization.
+    fill: usize,
+}
+
+impl LuSymbolic {
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Factor entries the numeric phase will allocate.
+    pub fn fill(&self) -> usize {
+        self.fill
+    }
+
+    /// Bytes held by the symbolic structure itself.
+    pub fn bytes(&self) -> u64 {
+        let post_total: usize = self.post.iter().map(|p| p.len()).sum();
+        ((post_total + 2 * self.n) * 8) as u64
+    }
+}
+
 /// Sparse LU factors: P A = L U (row pivoting only).
 pub struct SparseLu {
     n: usize,
@@ -157,6 +199,261 @@ impl SparseLu {
             pinv,
             prow,
         })
+    }
+
+    /// Factor like [`SparseLu::factor_with_cap`], additionally recording
+    /// the symbolic structure (pivot order + elimination reach) so later
+    /// values on the same pattern can be refactored numerically via
+    /// [`SparseLu::refactor`] without redoing the symbolic DFS or the
+    /// pivot search.
+    ///
+    /// Unlike the plain path, the recorded factorization stores
+    /// structurally-complete columns (no dropping of exact-zero
+    /// entries): the reach must be closed under the *pattern*, not under
+    /// one particular value assignment, for the replay to be sound.
+    ///
+    /// INVARIANT: the numeric clear/scatter/lower-solve/gather sequence
+    /// here and in [`SparseLu::refactor`] must execute the identical
+    /// floating-point schedule (see the note there); edit both together.
+    pub fn factor_recording(a: &Csr, max_fill: usize) -> Result<(Self, LuSymbolic)> {
+        if a.nrows != a.ncols {
+            return Err(Error::InvalidProblem("lu needs square".into()));
+        }
+        let n = a.nrows;
+        let at = a.transpose();
+
+        let mut l_cols: Vec<Vec<(usize, f64)>> = Vec::with_capacity(n);
+        let mut u_cols: Vec<Vec<(usize, f64)>> = Vec::with_capacity(n);
+        let mut pinv = vec![UNPIVOTED; n];
+        let mut prow = vec![0usize; n];
+        let mut post_lists: Vec<Vec<usize>> = Vec::with_capacity(n);
+
+        let mut x = vec![0f64; n];
+        let mut mark = vec![usize::MAX; n];
+        let mut post: Vec<usize> = Vec::with_capacity(n);
+        let mut stack: Vec<(usize, usize)> = Vec::new();
+        let mut fill = 0usize;
+
+        for j in 0..n {
+            // --- symbolic: reach of A[:,j] in the (unpruned) L graph ---
+            post.clear();
+            let (a_rows, a_vals) = at.row(j);
+            for &r0 in a_rows {
+                if mark[r0] == j {
+                    continue;
+                }
+                stack.push((r0, 0));
+                mark[r0] = j;
+                while let Some(&mut (r, ref mut cur)) = stack.last_mut() {
+                    let children: &[(usize, f64)] = if pinv[r] == UNPIVOTED {
+                        &[]
+                    } else {
+                        &l_cols[pinv[r]]
+                    };
+                    let mut advanced = false;
+                    while *cur < children.len() {
+                        let child = children[*cur].0;
+                        *cur += 1;
+                        if mark[child] != j {
+                            mark[child] = j;
+                            stack.push((child, 0));
+                            advanced = true;
+                            break;
+                        }
+                    }
+                    if !advanced {
+                        post.push(r);
+                        stack.pop();
+                    }
+                }
+            }
+            // --- numeric: sparse lower solve in reverse postorder ---
+            for &r in &post {
+                x[r] = 0.0;
+            }
+            for (&r, &v) in a_rows.iter().zip(a_vals) {
+                x[r] = v;
+            }
+            for &r in post.iter().rev() {
+                let k = pinv[r];
+                if k >= j {
+                    continue; // not yet pivoted at step j
+                }
+                let xr = x[r];
+                if xr != 0.0 {
+                    for &(rr, lv) in &l_cols[k] {
+                        x[rr] -= xr * lv;
+                    }
+                }
+            }
+            // --- pivot: largest |x| among unpivoted reach rows ---
+            let mut piv_row = UNPIVOTED;
+            let mut piv_abs = 0.0f64;
+            for &r in &post {
+                if pinv[r] == UNPIVOTED {
+                    let a = x[r].abs();
+                    if a > piv_abs {
+                        piv_abs = a;
+                        piv_row = r;
+                    }
+                }
+            }
+            if piv_row == UNPIVOTED || piv_abs == 0.0 || !piv_abs.is_finite() {
+                return Err(Error::Breakdown {
+                    at: j,
+                    reason: "structurally or numerically singular".into(),
+                });
+            }
+            let piv = x[piv_row];
+            // --- gather, structure-complete (no zero pruning) ---
+            let mut ucol: Vec<(usize, f64)> = Vec::new();
+            let mut lcol: Vec<(usize, f64)> = Vec::new();
+            for &r in &post {
+                let k = pinv[r];
+                if k < j {
+                    ucol.push((k, x[r]));
+                } else if r != piv_row {
+                    lcol.push((r, x[r] / piv));
+                }
+            }
+            ucol.push((j, piv)); // diagonal
+            pinv[piv_row] = j;
+            prow[j] = piv_row;
+            fill += ucol.len() + lcol.len();
+            if fill > max_fill {
+                return Err(Error::OutOfMemory {
+                    needed_bytes: (fill * 16) as u64,
+                    budget_bytes: (max_fill * 16) as u64,
+                });
+            }
+            u_cols.push(ucol);
+            l_cols.push(lcol);
+            post_lists.push(post.clone());
+        }
+        let symbolic = LuSymbolic {
+            n,
+            post: post_lists,
+            pinv: pinv.clone(),
+            prow: prow.clone(),
+            fill,
+        };
+        Ok((
+            SparseLu {
+                n,
+                l_cols,
+                u_cols,
+                pinv,
+                prow,
+            },
+            symbolic,
+        ))
+    }
+
+    /// Numeric-only refactorization: replay a recorded pivot order and
+    /// elimination reach against new values bound to the *same* sparsity
+    /// pattern.  Skips the symbolic DFS and the pivot search entirely;
+    /// with unchanged values the result is bit-identical to the
+    /// recording factorization.
+    ///
+    /// INVARIANT: the per-column clear/scatter/lower-solve/gather
+    /// sequence below must stay in floating-point lockstep with the
+    /// one in [`SparseLu::factor_recording`] — the bitwise-replay
+    /// guarantee (and the cache's property test) depends on the two
+    /// loops executing the identical FP schedule.  Edit both together.
+    ///
+    /// Returns [`Error::Breakdown`] when a recorded pivot becomes zero
+    /// (or non-finite) under the new values — the caller should then
+    /// fall back to a fresh [`SparseLu::factor_recording`].
+    pub fn refactor(sym: &LuSymbolic, a: &Csr, max_fill: usize) -> Result<Self> {
+        if a.nrows != a.ncols || a.nrows != sym.n {
+            return Err(Error::InvalidProblem(format!(
+                "refactor shape mismatch: matrix {}x{}, symbolic n {}",
+                a.nrows, a.ncols, sym.n
+            )));
+        }
+        let n = sym.n;
+        let at = a.transpose();
+
+        let mut l_cols: Vec<Vec<(usize, f64)>> = Vec::with_capacity(n);
+        let mut u_cols: Vec<Vec<(usize, f64)>> = Vec::with_capacity(n);
+        let mut x = vec![0f64; n];
+        let mut fill = 0usize;
+
+        for j in 0..n {
+            let post = &sym.post[j];
+            for &r in post {
+                x[r] = 0.0;
+            }
+            let (a_rows, a_vals) = at.row(j);
+            for (&r, &v) in a_rows.iter().zip(a_vals) {
+                x[r] = v;
+            }
+            for &r in post.iter().rev() {
+                let k = sym.pinv[r];
+                if k >= j {
+                    continue; // not yet pivoted at step j
+                }
+                let xr = x[r];
+                if xr != 0.0 {
+                    for &(rr, lv) in &l_cols[k] {
+                        x[rr] -= xr * lv;
+                    }
+                }
+            }
+            let piv_row = sym.prow[j];
+            let piv = x[piv_row];
+            // KLU-style stability guard: a recorded pivot that became
+            // tiny RELATIVE to its column would replay with unbounded
+            // element growth and hand back a silently inaccurate
+            // factorization.  Bail out so the caller re-pivots cold.
+            // (Read-only on x: does not perturb the bitwise replay.)
+            let mut colmax = 0.0f64;
+            for &r in post {
+                let ax = x[r].abs();
+                if ax > colmax {
+                    colmax = ax;
+                }
+            }
+            if piv == 0.0 || !piv.is_finite() || piv.abs() < 1e-12 * colmax {
+                return Err(Error::Breakdown {
+                    at: j,
+                    reason: "recorded pivot vanished or degraded under new values (refactor aborted)"
+                        .into(),
+                });
+            }
+            let mut ucol: Vec<(usize, f64)> = Vec::new();
+            let mut lcol: Vec<(usize, f64)> = Vec::new();
+            for &r in post {
+                let k = sym.pinv[r];
+                if k < j {
+                    ucol.push((k, x[r]));
+                } else if r != piv_row {
+                    lcol.push((r, x[r] / piv));
+                }
+            }
+            ucol.push((j, piv));
+            fill += ucol.len() + lcol.len();
+            if fill > max_fill {
+                return Err(Error::OutOfMemory {
+                    needed_bytes: (fill * 16) as u64,
+                    budget_bytes: (max_fill * 16) as u64,
+                });
+            }
+            u_cols.push(ucol);
+            l_cols.push(lcol);
+        }
+        Ok(SparseLu {
+            n,
+            l_cols,
+            u_cols,
+            pinv: sym.pinv.clone(),
+            prow: sym.prow.clone(),
+        })
+    }
+
+    /// Matrix dimension.
+    pub fn n(&self) -> usize {
+        self.n
     }
 
     /// Total stored factor entries (measured fill).
@@ -405,6 +702,82 @@ mod tests {
         let xl = SparseLu::factor(&a).unwrap().solve(&b).unwrap();
         let xc = super::super::EnvelopeCholesky::factor(&a).unwrap().solve(&b);
         assert!(util::max_abs_diff(&xl, &xc) < 1e-8);
+    }
+
+    #[test]
+    fn refactor_same_values_is_bitwise_identical() {
+        let mut rng = Prng::new(21);
+        let a = random_nonsymmetric(&mut rng, 60, 4);
+        let (f1, sym) = SparseLu::factor_recording(&a, usize::MAX).unwrap();
+        let f2 = SparseLu::refactor(&sym, &a, usize::MAX).unwrap();
+        let b = rng.normal_vec(60);
+        let x1 = f1.solve(&b).unwrap();
+        let x2 = f2.solve(&b).unwrap();
+        assert_eq!(x1, x2, "refactor with unchanged values must replay bitwise");
+        let t1 = f1.solve_t(&b).unwrap();
+        let t2 = f2.solve_t(&b).unwrap();
+        assert_eq!(t1, t2);
+    }
+
+    #[test]
+    fn refactor_new_values_solves_correctly() {
+        let mut rng = Prng::new(22);
+        let a = random_nonsymmetric(&mut rng, 50, 4);
+        let (_, sym) = SparseLu::factor_recording(&a, usize::MAX).unwrap();
+        // perturb values mildly so the recorded pivot order stays valid
+        let mut a2 = a.clone();
+        for v in a2.vals.iter_mut() {
+            *v *= 1.0 + 0.01 * rng.normal();
+        }
+        let f = SparseLu::refactor(&sym, &a2, usize::MAX).unwrap();
+        let b = rng.normal_vec(50);
+        let x = f.solve(&b).unwrap();
+        assert!(util::rel_l2(&a2.matvec(&x), &b) < 1e-9);
+        let xt = f.solve_t(&b).unwrap();
+        let mut atx = vec![0.0; 50];
+        a2.spmv_t(&xt, &mut atx);
+        assert!(util::rel_l2(&atx, &b) < 1e-9);
+    }
+
+    #[test]
+    fn recording_factor_matches_plain_factor_solutions() {
+        let mut rng = Prng::new(23);
+        let a = random_nonsymmetric(&mut rng, 40, 4);
+        let b = rng.normal_vec(40);
+        let x_plain = SparseLu::factor(&a).unwrap().solve(&b).unwrap();
+        let (f, sym) = SparseLu::factor_recording(&a, usize::MAX).unwrap();
+        let x_rec = f.solve(&b).unwrap();
+        assert!(util::max_abs_diff(&x_plain, &x_rec) < 1e-10);
+        // recording's fill counter excludes the n implicit unit diagonals
+        // that SparseLu::fill() adds
+        assert_eq!(sym.fill(), f.fill() - 40);
+    }
+
+    #[test]
+    fn refactor_zero_pivot_is_breakdown() {
+        use crate::sparse::Coo;
+        let mut coo = Coo::new(2, 2);
+        coo.push(0, 0, 1.0);
+        coo.push(1, 1, 1.0);
+        let a = coo.to_csr();
+        let (_, sym) = SparseLu::factor_recording(&a, usize::MAX).unwrap();
+        let mut a2 = a.clone();
+        a2.vals[0] = 0.0; // kills the recorded pivot of column 0
+        assert!(matches!(
+            SparseLu::refactor(&sym, &a2, usize::MAX),
+            Err(Error::Breakdown { .. })
+        ));
+    }
+
+    #[test]
+    fn refactor_honors_fill_cap() {
+        let g = 12;
+        let sys = poisson2d(g, None);
+        let (_, sym) = SparseLu::factor_recording(&sys.matrix, usize::MAX).unwrap();
+        match SparseLu::refactor(&sym, &sys.matrix, 50) {
+            Err(Error::OutOfMemory { .. }) => {}
+            other => panic!("expected OOM, got {:?}", other.map(|_| ())),
+        }
     }
 
     #[test]

@@ -13,13 +13,15 @@
 //! where possible and report their fill so backends can enforce the
 //! device-memory budget *before* factorizing.
 
+pub mod cache;
 pub mod cholesky;
 pub mod lu;
 pub mod ordering;
 pub mod triangular;
 
-pub use cholesky::EnvelopeCholesky;
-pub use lu::SparseLu;
+pub use cache::{build_factor, refactor, CachedFactor, Symbolic};
+pub use cholesky::{CholSymbolic, EnvelopeCholesky};
+pub use lu::{LuSymbolic, SparseLu};
 
 use crate::error::Result;
 use crate::sparse::Csr;

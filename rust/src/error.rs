@@ -1,12 +1,14 @@
 //! Library-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (no `thiserror`: proc-macro
+//! crates are unavailable in this offline build environment).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors surfaced by rsla solvers, backends, and the runtime.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Solver exceeded its iteration budget without reaching tolerance.
-    #[error("solver did not converge: {iters} iterations, residual {residual:.3e} > tol {tol:.3e}")]
     NotConverged {
         iters: usize,
         residual: f64,
@@ -14,45 +16,85 @@ pub enum Error {
     },
 
     /// Factorization breakdown (zero/negative pivot, singular matrix).
-    #[error("factorization breakdown at pivot {at}: {reason}")]
     Breakdown { at: usize, reason: String },
 
     /// Problem shape/property mismatch (non-square, dimension mismatch...).
-    #[error("invalid problem: {0}")]
     InvalidProblem(String),
 
     /// A backend refused the problem (device mismatch, memory budget...).
     /// The dispatcher treats this as "try the next backend".
-    #[error("backend '{backend}' unavailable: {reason}")]
     BackendUnavailable { backend: String, reason: String },
 
     /// Simulated device-memory exhaustion: the memory model predicts the
     /// solve would not fit the configured accelerator budget.  This is the
     /// analogue of the paper's CUDA OOM rows in Tables 3-4.
-    #[error("out of device memory: needs {needed_bytes} B > budget {budget_bytes} B")]
     OutOfMemory {
         needed_bytes: u64,
         budget_bytes: u64,
     },
 
     /// PJRT / XLA runtime failure.
-    #[error("xla runtime: {0}")]
     Xla(String),
 
     /// Missing or malformed AOT artifact.
-    #[error("artifact '{0}' not available: {1}")]
     Artifact(String, String),
 
     /// Autograd misuse (double backward, wrong tape...).
-    #[error("autograd: {0}")]
     Autograd(String),
 
     /// Distributed layer failure (rank panicked, channel closed...).
-    #[error("distributed: {0}")]
     Distributed(String),
 
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::NotConverged {
+                iters,
+                residual,
+                tol,
+            } => write!(
+                f,
+                "solver did not converge: {iters} iterations, residual {residual:.3e} > tol {tol:.3e}"
+            ),
+            Error::Breakdown { at, reason } => {
+                write!(f, "factorization breakdown at pivot {at}: {reason}")
+            }
+            Error::InvalidProblem(msg) => write!(f, "invalid problem: {msg}"),
+            Error::BackendUnavailable { backend, reason } => {
+                write!(f, "backend '{backend}' unavailable: {reason}")
+            }
+            Error::OutOfMemory {
+                needed_bytes,
+                budget_bytes,
+            } => write!(
+                f,
+                "out of device memory: needs {needed_bytes} B > budget {budget_bytes} B"
+            ),
+            Error::Xla(msg) => write!(f, "xla runtime: {msg}"),
+            Error::Artifact(name, msg) => write!(f, "artifact '{name}' not available: {msg}"),
+            Error::Autograd(msg) => write!(f, "autograd: {msg}"),
+            Error::Distributed(msg) => write!(f, "distributed: {msg}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -62,3 +104,31 @@ impl From<xla::Error> for Error {
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_legacy_format() {
+        let e = Error::NotConverged {
+            iters: 7,
+            residual: 1.5e-3,
+            tol: 1e-10,
+        };
+        assert_eq!(
+            e.to_string(),
+            "solver did not converge: 7 iterations, residual 1.500e-3 > tol 1.000e-10"
+        );
+        let e = Error::OutOfMemory {
+            needed_bytes: 100,
+            budget_bytes: 10,
+        };
+        assert!(e.to_string().contains("needs 100 B > budget 10 B"));
+        let e = Error::BackendUnavailable {
+            backend: "petsc".into(),
+            reason: "not registered".into(),
+        };
+        assert_eq!(e.to_string(), "backend 'petsc' unavailable: not registered");
+    }
+}

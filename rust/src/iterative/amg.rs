@@ -19,8 +19,10 @@
 //! `apply` runs one V(1,1)-cycle with damped-Jacobi smoothing — an SPD
 //! operation, so it is admissible inside CG.
 
-use crate::direct::SparseLu;
+use std::sync::Arc;
+
 use crate::error::{Error, Result};
+use crate::factor_cache::FactorCache;
 use crate::iterative::Precond;
 use crate::sparse::{Coo, Csr};
 
@@ -66,7 +68,11 @@ struct Level {
 /// The assembled hierarchy.
 pub struct Amg {
     levels: Vec<Level>,
-    coarse: SparseLu,
+    /// Coarse-grid direct factorization, served through the pattern-
+    /// keyed cache: rebuilding an AMG hierarchy over an unchanged (or
+    /// same-pattern) coarse operator — the Newton-loop case — reuses
+    /// the numeric factor or at least its symbolic analysis.
+    coarse: Arc<crate::direct::CachedFactor>,
     opts: AmgOpts,
 }
 
@@ -213,7 +219,7 @@ impl Amg {
             });
             cur = a_c;
         }
-        let coarse = SparseLu::factor(&cur)?;
+        let coarse = FactorCache::global().factor(&cur, u64::MAX, None)?;
         let inv_diag: Vec<f64> = cur
             .diag()
             .iter()

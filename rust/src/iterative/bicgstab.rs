@@ -43,10 +43,12 @@ pub fn bicgstab(
     }
 
     let mut iters = 0;
+    let mut breakdown = false;
     while iters < opts.max_iters && rr > tol2 {
         let rho_new = dot(&r0, &r);
         if rho_new == 0.0 {
-            break; // breakdown
+            breakdown = true;
+            break;
         }
         if iters == 0 {
             p.data.copy_from_slice(&r);
@@ -62,6 +64,7 @@ pub fn bicgstab(
         a.apply(&phat, &mut v);
         let r0v = dot(&r0, &v);
         if r0v == 0.0 {
+            breakdown = true;
             break;
         }
         alpha = rho / r0v;
@@ -83,6 +86,7 @@ pub fn bicgstab(
         a.apply(&shat, &mut t);
         let tt = dot(&t, &t);
         if tt == 0.0 {
+            breakdown = true;
             break;
         }
         omega = dot(&t, &s) / tt;
@@ -99,6 +103,7 @@ pub fn bicgstab(
             history.push(rr.sqrt());
         }
         if omega == 0.0 {
+            breakdown = true;
             break;
         }
     }
@@ -108,6 +113,7 @@ pub fn bicgstab(
         iters,
         residual: rr.sqrt(),
         converged: rr <= tol2,
+        breakdown: breakdown && rr > tol2,
         history,
     }
 }

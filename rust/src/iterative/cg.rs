@@ -37,11 +37,15 @@ pub fn cg(a: &dyn LinOp, b: &[f64], m: &dyn Precond, opts: &IterOpts, mem: Optio
     }
 
     let mut iters = 0;
+    let mut breakdown = false;
     while iters < opts.max_iters && rr > tol2 {
         a.apply(&p, &mut ap);
         let pap = dot(&p, &ap);
         if pap <= 0.0 || !pap.is_finite() {
-            // operator not SPD (or breakdown): stop with current iterate
+            // operator not SPD (or breakdown): stop with current
+            // iterate, and SAY SO — callers must be able to tell this
+            // apart from an exhausted iteration budget
+            breakdown = true;
             break;
         }
         let alpha = rz / pap;
@@ -64,6 +68,7 @@ pub fn cg(a: &dyn LinOp, b: &[f64], m: &dyn Precond, opts: &IterOpts, mem: Optio
         iters,
         residual: rr.sqrt(),
         converged: rr <= tol2,
+        breakdown: breakdown && rr > tol2,
         history,
     }
 }
@@ -144,6 +149,37 @@ mod tests {
         );
         let xd = crate::direct::direct_solve(&a, &b).unwrap();
         assert!(util::max_abs_diff(&r.x, &xd) < 1e-8);
+    }
+
+    #[test]
+    fn indefinite_operator_reports_breakdown_not_budget() {
+        use crate::sparse::Coo;
+        // symmetric, positive diagonal (passes the SPD screen) but
+        // indefinite: p^T A p goes negative on the first iteration
+        let mut coo = Coo::new(2, 2);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 1, 2.0);
+        coo.push(1, 0, 2.0);
+        coo.push(1, 1, 1.0);
+        let a = coo.to_csr();
+        let r = cg(&a, &[1.0, -1.0], &Identity, &IterOpts::default(), None);
+        assert!(!r.converged);
+        assert!(r.breakdown, "pAp <= 0 must be reported as breakdown");
+        assert!(r.x.iter().all(|v| v.is_finite()));
+        // budget exhaustion, by contrast, is NOT a breakdown
+        let sys = crate::sparse::poisson::poisson2d(16, None);
+        let r = cg(
+            &sys.matrix,
+            &vec![1.0; 256],
+            &Identity,
+            &IterOpts {
+                tol: 1e-14,
+                max_iters: 3,
+                record_history: false,
+            },
+            None,
+        );
+        assert!(!r.converged && !r.breakdown);
     }
 
     #[test]

@@ -146,6 +146,7 @@ pub fn gmres(
         iters: total_iters,
         residual: beta,
         converged: beta <= opts.tol,
+        breakdown: false,
         history,
     }
 }

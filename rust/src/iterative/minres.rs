@@ -48,6 +48,7 @@ pub fn minres(
             iters: 0,
             residual: crate::util::norm2(b),
             converged: false,
+            breakdown: true,
             history: vec![],
         };
     }
@@ -57,6 +58,7 @@ pub fn minres(
             iters: 0,
             residual: 0.0,
             converged: true,
+            breakdown: false,
             history: vec![0.0],
         };
     }
@@ -76,6 +78,7 @@ pub fn minres(
 
     let mut iters = 0;
     let mut converged = false;
+    let mut breakdown = false;
     while iters < opts.max_iters {
         iters += 1;
         // --- Lanczos step ---
@@ -103,6 +106,7 @@ pub fn minres(
         oldb = beta;
         let betasq = dot(&r2, &y);
         if betasq < 0.0 {
+            breakdown = true;
             break; // preconditioner lost positive-definiteness
         }
         beta = betasq.sqrt();
@@ -148,11 +152,13 @@ pub fn minres(
     }
     let residual = rr.sqrt();
 
+    let converged = converged || residual <= opts.tol * 10.0;
     IterResult {
         x: x.data.clone(),
         iters,
         residual,
-        converged: converged || residual <= opts.tol * 10.0,
+        converged,
+        breakdown: breakdown && !converged,
         history,
     }
 }

@@ -81,12 +81,21 @@ impl Default for IterOpts {
 
 /// Outcome of an iterative solve.  `converged == false` is not an error
 /// at this layer: Table 4 runs a fixed iteration budget on purpose.
+///
+/// `breakdown` distinguishes "the recurrence broke down" (CG's
+/// `p^T A p <= 0` on a non-SPD operator, BiCGStab's rho/omega
+/// degeneracies, a non-SPD MINRES preconditioner) from "ran out of
+/// iteration budget" — callers and the dispatcher's runtime-fallback
+/// path react differently to the two.
 #[derive(Clone, Debug)]
 pub struct IterResult {
     pub x: Vec<f64>,
     pub iters: usize,
     pub residual: f64,
     pub converged: bool,
+    /// True when the iteration stopped on a breakdown condition rather
+    /// than the iteration budget.  Always false when `converged`.
+    pub breakdown: bool,
     pub history: Vec<f64>,
 }
 
@@ -131,6 +140,7 @@ mod tests {
             iters: 5,
             residual: 1.0,
             converged: false,
+            breakdown: false,
             history: vec![],
         };
         assert!(r.require_converged(1e-10).is_err());

@@ -48,6 +48,7 @@ pub mod direct;
 pub mod distributed;
 pub mod eigen;
 pub mod error;
+pub mod factor_cache;
 pub mod gradcheck;
 pub mod iterative;
 pub mod metrics;

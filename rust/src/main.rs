@@ -28,13 +28,32 @@ struct Args {
 fn parse_args() -> Args {
     let mut args = std::env::args().skip(1);
     let cmd = args.next().unwrap_or_else(|| "help".into());
+    parse_tokens(cmd, args.collect())
+}
+
+/// True when `tok` is a VALUE for the preceding `--key`, not a flag of
+/// its own.  Tokens starting with `-` are flags — EXCEPT when the dash
+/// is followed by a digit or `.`, which marks a negative number
+/// (`rsla solve --shift -0.5` must bind `-0.5` to `shift` instead of
+/// misreading it as a flag).
+fn is_cli_value(tok: &str) -> bool {
+    match tok.strip_prefix('-') {
+        None => true,
+        Some(rest) => rest
+            .chars()
+            .next()
+            .map(|c| c.is_ascii_digit() || c == '.')
+            .unwrap_or(false),
+    }
+}
+
+fn parse_tokens(cmd: String, rest: Vec<String>) -> Args {
     let mut kv = std::collections::HashMap::new();
     let mut flags = std::collections::HashSet::new();
-    let rest: Vec<String> = args.collect();
     let mut i = 0;
     while i < rest.len() {
         let a = rest[i].trim_start_matches("--").to_string();
-        if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+        if i + 1 < rest.len() && is_cli_value(&rest[i + 1]) {
             kv.insert(a, rest[i + 1].clone());
             i += 2;
         } else {
@@ -255,5 +274,51 @@ fn cmd_dist(args: &Args) {
             r.peak_bytes as f64 / 1e6,
             r.bytes_sent as f64 / 1e6
         );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn negative_numeric_values_bind_to_their_key() {
+        // regression: `--shift -0.5` used to be fragile because the
+        // value starts with `-`
+        let a = parse_tokens("solve".into(), toks(&["--shift", "-0.5", "--g", "32"]));
+        assert_eq!(a.kv.get("shift").map(String::as_str), Some("-0.5"));
+        assert_eq!(a.usize_or("g", 0), 32);
+        assert!(a.flags.is_empty());
+
+        let a = parse_tokens("solve".into(), toks(&["--shift", "-2"]));
+        assert_eq!(a.kv.get("shift").map(String::as_str), Some("-2"));
+
+        let a = parse_tokens("solve".into(), toks(&["--tol", "-.5e-3"]));
+        assert_eq!(a.kv.get("tol").map(String::as_str), Some("-.5e-3"));
+    }
+
+    #[test]
+    fn flags_are_not_mistaken_for_values() {
+        let a = parse_tokens(
+            "solve".into(),
+            toks(&["--accel", "--g", "8", "--backend", "native-iter"]),
+        );
+        assert!(a.flags.contains("accel"));
+        assert_eq!(a.usize_or("g", 0), 8);
+        assert_eq!(a.kv.get("backend").map(String::as_str), Some("native-iter"));
+    }
+
+    #[test]
+    fn trailing_key_without_value_becomes_flag() {
+        let a = parse_tokens("explain".into(), toks(&["--accel"]));
+        assert!(a.flags.contains("accel"));
+        assert!(a.kv.is_empty());
+        // a bare "-" is a flag, not a value
+        let a = parse_tokens("x".into(), toks(&["--k", "-"]));
+        assert!(a.flags.contains("k"));
     }
 }

@@ -1,7 +1,13 @@
 //! Damped Newton with assembled-Jacobian direct steps.
+//!
+//! The Jacobian's sparsity pattern is fixed across iterations (only the
+//! values move), so each step's linear solve goes through the
+//! pattern-keyed factor cache: iteration 1 pays the symbolic analysis
+//! (ordering, elimination structure, fill allocation), every later
+//! iteration runs the numeric refactorization only.
 
 use super::{NonlinearResult, Residual};
-use crate::direct::direct_solve;
+use crate::factor_cache::cached_direct_solve;
 use crate::util::norm2;
 
 #[derive(Clone, Debug)]
@@ -41,7 +47,7 @@ pub fn newton(f: &dyn Residual, u0: &[f64], opts: &NewtonOpts) -> NonlinearResul
         let j = f.jacobian(&u);
         // Newton step: J du = -F
         let rhs: Vec<f64> = fu.iter().map(|x| -x).collect();
-        let du = match direct_solve(&j, &rhs) {
+        let du = match cached_direct_solve(&j, &rhs) {
             Ok(d) => d,
             Err(_) => break, // singular Jacobian: return best iterate
         };

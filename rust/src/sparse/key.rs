@@ -1,0 +1,113 @@
+//! Pattern/value fingerprints — the cache and batching keys.
+//!
+//! [`PatternKey`] started life inside the coordinator's batcher; it is
+//! promoted here because the factor cache ([`crate::factor_cache`])
+//! keys on the same fingerprint.  Two tiers:
+//!
+//! * [`StructureKey`] — pattern only (indptr/indices).  Matching means
+//!   a symbolic factorization (ordering, elimination structure, fill
+//!   allocation) can be reused and only the numeric phase re-runs.
+//! * [`PatternKey`] — pattern + values.  Matching means the full
+//!   numeric factorization can be reused.
+//!
+//! Keys are cheap 64-bit fingerprints.  Collisions only cost a missed
+//! reuse opportunity / an extra equality comparison, never a wrong
+//! answer: every consumer (the batcher's worker path, the factor
+//! cache) re-checks full equality before acting on a key match.
+
+use std::hash::{Hash, Hasher};
+
+use super::Csr;
+
+/// Cheap structural fingerprint of a sparsity pattern + values.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct PatternKey {
+    pub nrows: usize,
+    pub nnz: usize,
+    pub structure_hash: u64,
+    pub values_hash: u64,
+}
+
+/// Pattern-only fingerprint (the symbolic-reuse tier).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct StructureKey {
+    pub nrows: usize,
+    pub nnz: usize,
+    pub structure_hash: u64,
+}
+
+impl PatternKey {
+    pub fn of(m: &Csr) -> Self {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        m.indptr.hash(&mut h);
+        m.indices.hash(&mut h);
+        let structure_hash = h.finish();
+        let mut hv = std::collections::hash_map::DefaultHasher::new();
+        for v in &m.vals {
+            v.to_bits().hash(&mut hv);
+        }
+        PatternKey {
+            nrows: m.nrows,
+            nnz: m.nnz(),
+            structure_hash,
+            values_hash: hv.finish(),
+        }
+    }
+
+    /// The pattern-only projection of this key.
+    pub fn structure(&self) -> StructureKey {
+        StructureKey {
+            nrows: self.nrows,
+            nnz: self.nnz,
+            structure_hash: self.structure_hash,
+        }
+    }
+}
+
+impl StructureKey {
+    /// Pattern-only fingerprint: hashes indptr/indices and never
+    /// touches the values (callers on hot pre-checks use this, so it
+    /// must not pay the O(nnz) value hash `PatternKey::of` does).
+    pub fn of(m: &Csr) -> Self {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        m.indptr.hash(&mut h);
+        m.indices.hash(&mut h);
+        StructureKey {
+            nrows: m.nrows,
+            nnz: m.nnz(),
+            structure_hash: h.finish(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::poisson::poisson2d;
+
+    #[test]
+    fn same_matrix_same_key() {
+        let a = poisson2d(6, None).matrix;
+        let b = poisson2d(6, None).matrix;
+        assert_eq!(PatternKey::of(&a), PatternKey::of(&b));
+        assert_eq!(StructureKey::of(&a), StructureKey::of(&b));
+    }
+
+    #[test]
+    fn different_values_different_key_same_structure() {
+        let a = poisson2d(6, None).matrix;
+        let mut b = a.clone();
+        b.vals[0] += 1.0;
+        let (ka, kb) = (PatternKey::of(&a), PatternKey::of(&b));
+        assert_eq!(ka.structure_hash, kb.structure_hash);
+        assert_ne!(ka.values_hash, kb.values_hash);
+        assert_eq!(ka.structure(), kb.structure());
+    }
+
+    #[test]
+    fn different_patterns_different_structure() {
+        let a = poisson2d(4, None).matrix;
+        let b = poisson2d(5, None).matrix;
+        assert_ne!(StructureKey::of(&a), StructureKey::of(&b));
+    }
+}

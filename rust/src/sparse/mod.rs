@@ -14,9 +14,11 @@
 pub mod coo;
 pub mod csr;
 pub mod graphs;
+pub mod key;
 pub mod pattern;
 pub mod poisson;
 
 pub use coo::Coo;
 pub use csr::Csr;
+pub use key::{PatternKey, StructureKey};
 pub use pattern::Pattern;

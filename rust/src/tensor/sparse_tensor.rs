@@ -5,8 +5,9 @@ use std::sync::Arc;
 use crate::adjoint::{self, SolveFn};
 use crate::autograd::{Tape, Var};
 use crate::backend::{Dispatcher, Operator, Problem, SolveOpts, SolveOutcome};
-use crate::direct::{EnvelopeCholesky, SparseLu};
+use crate::direct::SparseLu;
 use crate::eigen::{EigResult, LobpcgOpts};
+use crate::factor_cache::FactorCache;
 use crate::error::{Error, Result};
 use crate::sparse::poisson::StencilCoeffs;
 use crate::sparse::{Csr, Pattern};
@@ -152,14 +153,11 @@ impl SparseTensor {
     /// dispatch applies.
     pub fn solve_batch(&self, bs: &[Vec<f64>], opts: &SolveOpts) -> Result<Vec<Vec<f64>>> {
         if bs.len() != self.batch_size() && self.batch_size() == 1 {
-            // one matrix, many rhs: factor once
+            // one matrix, many rhs: ONE cached factorization serves the
+            // whole sweep (and later sweeps on the same values — or,
+            // through the symbolic tier, on updated values)
             let a = self.to_csr(0);
-            if a.looks_spd() {
-                if let Ok(f) = EnvelopeCholesky::factor_rcm(&a) {
-                    return Ok(f.solve_many(bs));
-                }
-            }
-            let f = SparseLu::factor(&a)?;
+            let f = FactorCache::global().factor(&a, u64::MAX, None)?;
             return bs.iter().map(|b| f.solve(b)).collect();
         }
         if bs.len() != self.batch_size() {

@@ -1,0 +1,58 @@
+//! Minimal vendored stand-in for the `log` crate.
+//!
+//! The container this repo builds in has no network access and no
+//! vendored registry, so the real `log` facade cannot be pulled in.
+//! This stub provides the macro surface rsla uses (`warn!`, `debug!`,
+//! `info!`, `error!`, `trace!`).  `warn!`/`error!` go to stderr (they
+//! mark degraded-but-working paths, e.g. "PJRT runtime unavailable");
+//! the rest only evaluate their arguments.
+
+/// Log level marker (API-compatible subset; unused by the stub macros).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Level {
+    Error,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => {
+        eprintln!("[error] {}", format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => {
+        eprintln!("[warn] {}", format!($($arg)*))
+    };
+}
+
+// The low-severity macros must be true no-ops on the hot path (the
+// dispatcher debug-logs every refused candidate): the never-called
+// closure type-checks and "uses" the arguments without evaluating or
+// allocating anything at runtime.
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {{
+        let _ = || format!($($arg)*);
+    }};
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {{
+        let _ = || format!($($arg)*);
+    }};
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => {{
+        let _ = || format!($($arg)*);
+    }};
+}
