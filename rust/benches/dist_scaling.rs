@@ -1,0 +1,141 @@
+//! Distributed scaling microbenchmark: standard (two-reduction) vs
+//! pipelined (single-reduction) CG at 1/2/4 ranks, reporting the
+//! communication structure the paper's Algorithm 1 and Appendix C pin:
+//! iterations, reduction ROUNDS (latency units — the quantity pipelining
+//! halves), and bytes sent per iteration (halo volume — identical for
+//! both variants, since only the reductions are reorganized).
+//!
+//! Emits `BENCH_dist.json` next to the working directory so CI archives
+//! a machine-readable perf trajectory.
+//!
+//! Run: cargo bench --bench dist_scaling
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use rsla::distributed::{dist_cg, dist_cg_pipelined, run_ranks, DistIterOpts, DistSolveReport};
+use rsla::distributed::halo::distribute;
+use rsla::distributed::partition::{partition, PartitionStrategy};
+use rsla::sparse::poisson::{kappa_star, poisson2d};
+use rsla::util::Prng;
+
+struct Row {
+    variant: &'static str,
+    ranks: usize,
+    n: usize,
+    iters: usize,
+    reduce_rounds: u64,
+    rounds_per_iter: f64,
+    bytes_per_iter_per_rank: f64,
+    wall_ms: f64,
+    converged: bool,
+}
+
+fn run_variant(g: usize, nparts: usize, pipelined: bool) -> (Vec<DistSolveReport>, f64) {
+    let sys = poisson2d(g, Some(&kappa_star(g)));
+    let part = partition(&sys.matrix, Some(&sys.coords), nparts, PartitionStrategy::Rcb);
+    let a_perm = sys.matrix.permute_sym(&part.perm);
+    let shares = Arc::new(distribute(&a_perm, &part));
+    let mut rng = Prng::new(g as u64);
+    let b = Arc::new(rng.normal_vec(g * g));
+    let part = Arc::new(part);
+    let t0 = Instant::now();
+    let reports = run_ranks(nparts, move |c| {
+        let p = c.rank();
+        let range = part.rank_range(p);
+        let opts = DistIterOpts {
+            tol: 1e-9,
+            ..Default::default()
+        };
+        if pipelined {
+            dist_cg_pipelined(&shares[p], &b[range], &c, &opts)
+        } else {
+            dist_cg(&shares[p], &b[range], &c, &opts)
+        }
+    });
+    (reports, t0.elapsed().as_secs_f64())
+}
+
+fn main() {
+    let g = 96;
+    let n = g * g;
+    let mut rows: Vec<Row> = Vec::new();
+
+    println!("# dist_scaling: standard vs pipelined CG, Poisson2D g={g} (n={n}), RCB partition");
+    println!(
+        "| {:>9} | {:>5} | {:>6} | {:>7} | {:>11} | {:>12} | {:>9} |",
+        "variant", "ranks", "iters", "rounds", "rounds/iter", "KB/iter/rank", "time"
+    );
+    println!("|-----------|-------|--------|---------|-------------|--------------|-----------|");
+
+    for &ranks in &[1usize, 2, 4] {
+        for &(variant, pipelined) in &[("standard", false), ("pipelined", true)] {
+            let (reports, secs) = run_variant(g, ranks, pipelined);
+            let iters = reports[0].iters.max(1);
+            let rounds = reports[0].reduce_rounds;
+            let max_sent = reports.iter().map(|r| r.bytes_sent).max().unwrap();
+            let row = Row {
+                variant,
+                ranks,
+                n,
+                iters: reports[0].iters,
+                reduce_rounds: rounds,
+                rounds_per_iter: rounds as f64 / iters as f64,
+                bytes_per_iter_per_rank: max_sent as f64 / iters as f64,
+                wall_ms: secs * 1e3,
+                converged: reports.iter().all(|r| r.converged),
+            };
+            println!(
+                "| {:>9} | {:>5} | {:>6} | {:>7} | {:>11.2} | {:>12.2} | {:>6.1} ms |",
+                row.variant,
+                row.ranks,
+                row.iters,
+                row.reduce_rounds,
+                row.rounds_per_iter,
+                row.bytes_per_iter_per_rank / 1e3,
+                row.wall_ms,
+            );
+            rows.push(row);
+        }
+    }
+
+    // acceptance: the communication structure of Algorithm 1 / Appendix C
+    for row in &rows {
+        assert!(row.converged, "{} at {} ranks did not converge", row.variant, row.ranks);
+        if row.ranks >= 2 {
+            if row.variant == "standard" {
+                assert!(
+                    row.rounds_per_iter > 1.9 && row.rounds_per_iter < 2.2,
+                    "standard CG must cost ~2 rounds/iter, got {:.2}",
+                    row.rounds_per_iter
+                );
+            } else {
+                assert!(
+                    row.rounds_per_iter < 1.2,
+                    "pipelined CG must cost ~1 round/iter, got {:.2}",
+                    row.rounds_per_iter
+                );
+            }
+        }
+    }
+
+    // machine-readable trajectory for CI
+    let mut json = String::from("{\n  \"bench\": \"dist_scaling\",\n  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"variant\": \"{}\", \"ranks\": {}, \"n\": {}, \"iterations\": {}, \"reduction_rounds\": {}, \"rounds_per_iter\": {:.4}, \"bytes_per_iter_per_rank\": {:.1}, \"wall_ms\": {:.2}}}{}\n",
+            r.variant,
+            r.ranks,
+            r.n,
+            r.iters,
+            r.reduce_rounds,
+            r.rounds_per_iter,
+            r.bytes_per_iter_per_rank,
+            r.wall_ms,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write("BENCH_dist.json", &json).expect("write BENCH_dist.json");
+    println!("\nwrote BENCH_dist.json ({} rows)", rows.len());
+}

@@ -21,7 +21,7 @@ use std::rc::Rc;
 use crate::autograd::{CustomOp, Tape, Value, Var};
 use crate::eigen::{lobpcg, EigResult, LobpcgOpts};
 use crate::error::{Error, Result};
-use crate::iterative::{minres, IterOpts, Jacobi, LinOp, Precond};
+use crate::iterative::{IterOpts, Jacobi, LinOp, Precond};
 use crate::sparse::{Csr, Pattern};
 
 struct EigshOp {
@@ -155,13 +155,16 @@ impl CustomOp for EigshVectorOp {
         for (ri, vi) in rhs.iter_mut().zip(&self.vector) {
             *ri -= c * vi;
         }
-        // one deflated solve: (A - lambda I) w = rhs on v^perp
+        // one deflated solve: (A - lambda I) w = rhs on v^perp —
+        // symmetric indefinite, served by the generic MINRES kernel
+        // through its serial entry point (the same body the distributed
+        // layer runs over rank teams)
         let op = DeflatedOp {
             a: &a,
             lambda: self.value,
             v: &self.vector,
         };
-        let res = minres(
+        let res = crate::iterative::minres(
             &op,
             &rhs,
             &crate::iterative::Identity,

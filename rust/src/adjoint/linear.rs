@@ -174,6 +174,53 @@ mod tests {
     }
 
     #[test]
+    fn krylov_solver_adjoint_matches_native_solver() {
+        // the matrix-free SolveFn (generic CG/BiCGStab + TransposedOp
+        // under NullComm) must produce the same gradients as the
+        // factorization-backed native solver
+        let g = 6;
+        let n = g * g;
+        let sys = poisson2d(g, Some(&kappa_star(g)));
+        let pattern = Pattern::of(&sys.matrix);
+        let mut rng = Prng::new(3);
+        let b0 = rng.normal_vec(n);
+        let w = rng.normal_vec(n);
+
+        let run = |solver: crate::adjoint::SolveFn| {
+            let tape = Tape::new();
+            let vals = tape.leaf_vec(sys.matrix.vals.clone());
+            let b = tape.leaf_vec(b0.clone());
+            let x = solve_linear(&tape, &pattern, vals, b, &solver).unwrap();
+            let wv = tape.constant_vec(w.clone());
+            let loss = tape.dot(x, wv);
+            let grads = tape.backward(loss);
+            (grads.vec(b).clone(), grads.vec(vals).clone())
+        };
+        let (db_n, dv_n) = run(native_solver());
+        let (db_k, dv_k) = run(crate::adjoint::krylov_solver(1e-12, 100_000));
+        assert!(crate::util::rel_l2(&db_k, &db_n) < 1e-7);
+        assert!(crate::util::rel_l2(&dv_k, &dv_n) < 1e-6);
+
+        // nonsymmetric: the transpose route through TransposedOp
+        let a = random_nonsymmetric(&mut rng, 30, 4);
+        let pat = Pattern::of(&a);
+        let bb = rng.normal_vec(30);
+        let ww = rng.normal_vec(30);
+        let solver = crate::adjoint::krylov_solver(1e-12, 100_000);
+        let tape = Tape::new();
+        let vals = tape.leaf_vec(a.vals.clone());
+        let b = tape.leaf_vec(bb.clone());
+        let x = solve_linear(&tape, &pat, vals, b, &solver).unwrap();
+        let wv = tape.constant_vec(ww.clone());
+        let loss = tape.dot(x, wv);
+        let grads = tape.backward(loss);
+        // db must equal A^{-T} w
+        let f = crate::direct::SparseLu::factor(&a).unwrap();
+        let lambda = f.solve_t(&ww).unwrap();
+        assert!(crate::util::rel_l2(grads.vec(b), &lambda) < 1e-7);
+    }
+
+    #[test]
     fn tape_is_o1_nodes_per_solve() {
         let g = 8;
         let sys = poisson2d(g, None);

@@ -65,3 +65,54 @@ pub fn native_solver() -> SolveFn {
         }
     })
 }
+
+/// Matrix-free SolveFn over the unified Krylov substrate: CG when the
+/// matrix is symmetric, BiCGStab otherwise, with `Transpose::Yes`
+/// served by the SAME kernel through the [`TransposedOp`] wrapper — the
+/// adjoint solve is defined once against the operator, not per
+/// deployment.  For factorization-averse regimes (huge systems, frozen
+/// memory budgets); training loops that can afford factors should
+/// prefer [`native_solver`]'s cache.
+pub fn krylov_solver(tol: f64, max_iters: usize) -> SolveFn {
+    use crate::iterative::{Identity, IterOpts, Jacobi, Precond};
+    use crate::krylov::{self, LinearOperator, NullComm, TransposedOp};
+    Arc::new(move |pattern, vals, rhs, transpose| {
+        let a = pattern.with_vals(vals.to_vec());
+        let opts = IterOpts {
+            tol,
+            max_iters,
+            record_history: false,
+        };
+        let m: Box<dyn Precond> = match Jacobi::new(&a) {
+            Ok(j) => Box::new(j),
+            Err(_) => Box::new(Identity),
+        };
+        // symmetry served from the factor cache when this (pattern,
+        // values) was ever factored (mixed direct/iterative pipelines);
+        // for purely matrix-free use nothing is cached, so this still
+        // degrades to one O(nnz) scan per call.  Positive diagonal is
+        // the cheap O(n) SPD screen on top.
+        let symmetric = crate::factor_cache::FactorCache::global().symmetry_of(&a);
+        let spd_like = symmetric && a.diag().iter().all(|&di| di > 0.0);
+        let t_op = TransposedOp(&a as &dyn LinearOperator);
+        let op: &dyn LinearOperator = match transpose {
+            Transpose::No => &a,
+            Transpose::Yes => &t_op,
+        };
+        let res = if spd_like {
+            let r = krylov::cg(op, rhs, &*m, &NullComm, &opts, None);
+            if r.breakdown {
+                // positive diagonal but indefinite: CG's pAp > 0
+                // assumption failed — the breakdown flag exists exactly
+                // so callers retry instead of erroring (PR 1); rerun on
+                // the same substrate with BiCGStab
+                krylov::bicgstab(op, rhs, &*m, &NullComm, &opts, None)
+            } else {
+                r
+            }
+        } else {
+            krylov::bicgstab(op, rhs, &*m, &NullComm, &opts, None)
+        };
+        Ok(res.require_converged(tol)?.x)
+    })
+}

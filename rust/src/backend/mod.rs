@@ -46,6 +46,9 @@ pub enum Method {
     Cg,
     Bicgstab,
     Gmres,
+    /// Symmetric (possibly indefinite) systems — served by the generic
+    /// MINRES kernel on the native-iter backend.
+    Minres,
 }
 
 /// Per-solve options (paper: keyword arguments on `.solve`).

@@ -1,10 +1,15 @@
 //! `native-iter`: the Eigen-CG/BiCGStab analog.  Jacobi-preconditioned
-//! CG for SPD operators, BiCGStab (or GMRES on request) otherwise;
-//! O(nnz) memory, measured via MemTracker.
+//! CG for SPD operators, BiCGStab (GMRES or MINRES on request)
+//! otherwise; O(nnz) memory, measured via MemTracker.
+//!
+//! Routes straight into the generic [`crate::krylov`] kernels under
+//! [`NullComm`] — the same bodies the distributed layer runs over rank
+//! teams.
 
 use super::{Backend, Device, Method, Operator, Problem, SolveOpts, SolveOutcome};
 use crate::error::Result;
-use crate::iterative::{bicgstab, cg, gmres, IterOpts, Jacobi, LinOp};
+use crate::iterative::{Identity, IterOpts, Jacobi, LinOp};
+use crate::krylov::{self, NullComm, SerialOp};
 use crate::metrics::MemTracker;
 
 pub struct NativeIter;
@@ -30,6 +35,17 @@ impl Backend for NativeIter {
                 return Err("cg requires an SPD operator".into());
             }
         }
+        if opts.method == Method::Minres {
+            let symmetric = match &p.op {
+                Operator::Stencil(_) => true, // 5-point stencil is symmetric
+                // served from the factor cache when this matrix was ever
+                // factored; falls back to one O(nnz) scan otherwise
+                Operator::Csr(a) => crate::factor_cache::FactorCache::global().symmetry_of(a),
+            };
+            if !symmetric {
+                return Err("minres requires a symmetric operator".into());
+            }
+        }
         Ok(())
     }
 
@@ -48,25 +64,66 @@ impl Backend for NativeIter {
             Operator::Stencil(s) => {
                 let m = Jacobi::from_diag(&s.center);
                 let _hold = mem.hold((s.n() * 8) as u64); // diag inverse
-                (cg(*s, p.b, &m, &iter_opts, Some(&mem)), "cg+jacobi")
-            }
-            Operator::Csr(a) => {
-                let _hold = mem.hold(crate::metrics::mem::csr_bytes(a.nrows, a.nnz()));
-                let m = Jacobi::new(a)?;
+                // honor explicit method overrides (the stencil is SPD,
+                // so Jacobi is a valid preconditioner for all of them)
                 match opts.method {
+                    Method::Minres => (
+                        krylov::minres(&SerialOp(*s), p.b, &m, &NullComm, &iter_opts, Some(&mem)),
+                        "minres+jacobi",
+                    ),
                     Method::Gmres => (
-                        gmres(*a as &dyn LinOp, p.b, &m, 50, &iter_opts, Some(&mem)),
+                        krylov::gmres(&SerialOp(*s), p.b, &m, 50, &NullComm, &iter_opts, Some(&mem)),
                         "gmres50+jacobi",
                     ),
                     Method::Bicgstab => (
-                        bicgstab(*a as &dyn LinOp, p.b, &m, &iter_opts, Some(&mem)),
+                        krylov::bicgstab(&SerialOp(*s), p.b, &m, &NullComm, &iter_opts, Some(&mem)),
                         "bicgstab+jacobi",
                     ),
-                    _ if spd => (cg(*a, p.b, &m, &iter_opts, Some(&mem)), "cg+jacobi"),
                     _ => (
-                        bicgstab(*a as &dyn LinOp, p.b, &m, &iter_opts, Some(&mem)),
-                        "bicgstab+jacobi",
+                        krylov::cg(&SerialOp(*s), p.b, &m, &NullComm, &iter_opts, Some(&mem)),
+                        "cg+jacobi",
                     ),
+                }
+            }
+            Operator::Csr(a) => {
+                let _hold = mem.hold(crate::metrics::mem::csr_bytes(a.nrows, a.nnz()));
+                let op = SerialOp(*a as &dyn LinOp);
+                if opts.method == Method::Minres && !spd {
+                    // symmetric-indefinite: MINRES needs an SPD M, which
+                    // Jacobi cannot guarantee (diagonals may be zero or
+                    // negative) — run unpreconditioned, and do NOT build
+                    // the Jacobi below (its zero-diagonal check would
+                    // reject exactly the saddle-point systems MINRES is
+                    // for)
+                    (
+                        krylov::minres(&op, p.b, &Identity, &NullComm, &iter_opts, Some(&mem)),
+                        "minres",
+                    )
+                } else {
+                    let m = Jacobi::new(a)?;
+                    match opts.method {
+                        Method::Gmres => (
+                            krylov::gmres(&op, p.b, &m, 50, &NullComm, &iter_opts, Some(&mem)),
+                            "gmres50+jacobi",
+                        ),
+                        Method::Bicgstab => (
+                            krylov::bicgstab(&op, p.b, &m, &NullComm, &iter_opts, Some(&mem)),
+                            "bicgstab+jacobi",
+                        ),
+                        // SPD-looking: Jacobi is a valid MINRES precond
+                        Method::Minres => (
+                            krylov::minres(&op, p.b, &m, &NullComm, &iter_opts, Some(&mem)),
+                            "minres+jacobi",
+                        ),
+                        _ if spd => (
+                            krylov::cg(&op, p.b, &m, &NullComm, &iter_opts, Some(&mem)),
+                            "cg+jacobi",
+                        ),
+                        _ => (
+                            krylov::bicgstab(&op, p.b, &m, &NullComm, &iter_opts, Some(&mem)),
+                            "bicgstab+jacobi",
+                        ),
+                    }
                 }
             }
         };
@@ -168,6 +225,61 @@ mod tests {
             .unwrap();
         assert_eq!(out.method, "gmres50+jacobi");
         assert!(util::rel_l2(&a.matvec(&out.x), &b) < 1e-8);
+    }
+
+    #[test]
+    fn minres_on_request_handles_symmetric_indefinite() {
+        use crate::sparse::Coo;
+        // Poisson - sigma I with sigma inside the spectrum: symmetric
+        // indefinite — CG is refused/broken, MINRES converges.
+        let g = 10;
+        let n = g * g;
+        let sys = poisson2d(g, None);
+        let sigma = 30.0;
+        let mut coo = Coo::with_capacity(n, n, sys.matrix.nnz());
+        for r in 0..n {
+            let (cols, vals) = sys.matrix.row(r);
+            for (c, v) in cols.iter().zip(vals) {
+                coo.push(r, *c, if *c == r { v - sigma } else { *v });
+            }
+        }
+        let a = coo.to_csr();
+        let mut rng = Prng::new(4);
+        let b = rng.normal_vec(n);
+        let out = NativeIter
+            .solve(
+                &Problem {
+                    op: Operator::Csr(&a),
+                    b: &b,
+                },
+                &SolveOpts {
+                    method: Method::Minres,
+                    tol: 1e-9,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        // the shifted matrix keeps a positive diagonal (Poisson's 1/h^2
+        // scaling dwarfs the shift), so it LOOKS SPD and Jacobi — a
+        // valid SPD preconditioner here — rides along
+        assert_eq!(out.method, "minres+jacobi");
+        assert!(util::rel_l2(&a.matvec(&out.x), &b) < 1e-6);
+        // and the method override is refused on a nonsymmetric operator
+        let mut rng = Prng::new(5);
+        let ns = random_nonsymmetric(&mut rng, 20, 3);
+        let p = Problem {
+            op: Operator::Csr(&ns),
+            b: &b[..20],
+        };
+        assert!(NativeIter
+            .supports(
+                &p,
+                &SolveOpts {
+                    method: Method::Minres,
+                    ..Default::default()
+                }
+            )
+            .is_err());
     }
 
     #[test]

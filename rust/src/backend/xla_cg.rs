@@ -63,8 +63,8 @@ impl Backend for XlaCg {
         if n != p.b.len() {
             return Err("rhs length mismatch".into());
         }
-        if matches!(opts.method, Method::Cholesky | Method::Lu) {
-            return Err("direct method requested".into());
+        if !matches!(opts.method, Method::Auto | Method::Cg) {
+            return Err("method not served by the fused CG artifact".into());
         }
         if !p.op.is_spd_like() {
             return Err("fused CG artifact needs an SPD operator".into());

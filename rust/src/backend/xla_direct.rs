@@ -44,7 +44,10 @@ impl Backend for XlaDirect {
         if n != p.b.len() {
             return Err("rhs length mismatch".into());
         }
-        if matches!(opts.method, Method::Cg | Method::Bicgstab | Method::Gmres) {
+        if matches!(
+            opts.method,
+            Method::Cg | Method::Bicgstab | Method::Gmres | Method::Minres
+        ) {
             return Err("iterative method requested".into());
         }
         if !p.op.is_spd_like() {

@@ -37,8 +37,8 @@ impl Backend for XlaHybrid {
         if p.op.nrows() != p.b.len() {
             return Err("rhs length mismatch".into());
         }
-        if matches!(opts.method, Method::Cholesky | Method::Lu) {
-            return Err("direct method requested".into());
+        if !matches!(opts.method, Method::Auto | Method::Cg) {
+            return Err("method not served by the hybrid CG loop".into());
         }
         if !p.op.is_spd_like() {
             return Err("hybrid CG needs an SPD operator".into());

@@ -55,6 +55,75 @@ impl LuSymbolic {
     }
 }
 
+/// The per-column NUMERIC kernel shared by [`SparseLu::factor_recording`]
+/// and [`SparseLu::refactor`]: clear the workspace over the reach,
+/// scatter A's column, and run the sparse lower solve in reverse
+/// postorder against the already-built L columns.
+///
+/// The bitwise-replay guarantee (and the cache's property test) depends
+/// on the recording and replay paths executing the IDENTICAL
+/// floating-point schedule — sharing this one function is what enforces
+/// that, by code rather than by comment.  `pinv[r] >= j` means "row r
+/// not yet pivoted at step j" in both callers: during recording,
+/// unpivoted rows hold `UNPIVOTED` (= usize::MAX); during replay the
+/// complete pivot map is used and later-pivoted rows compare `>= j`.
+#[inline]
+fn lu_column_numeric(
+    post: &[usize],
+    a_rows: &[usize],
+    a_vals: &[f64],
+    pinv: &[usize],
+    l_cols: &[Vec<(usize, f64)>],
+    j: usize,
+    x: &mut [f64],
+) {
+    for &r in post {
+        x[r] = 0.0;
+    }
+    for (&r, &v) in a_rows.iter().zip(a_vals) {
+        x[r] = v;
+    }
+    for &r in post.iter().rev() {
+        let k = pinv[r];
+        if k >= j {
+            continue; // not yet pivoted at step j
+        }
+        let xr = x[r];
+        if xr != 0.0 {
+            for &(rr, lv) in &l_cols[k] {
+                x[rr] -= xr * lv;
+            }
+        }
+    }
+}
+
+/// The structure-complete column gather shared by the recording and
+/// replay paths (no zero pruning; same FP schedule — see
+/// [`lu_column_numeric`]).  Entries with `pinv[r] < j` belong to U;
+/// the rest (minus the pivot row itself) form L, scaled by the pivot.
+#[inline]
+fn lu_column_gather(
+    post: &[usize],
+    pinv: &[usize],
+    j: usize,
+    piv_row: usize,
+    piv: f64,
+    x: &[f64],
+) -> (Vec<(usize, f64)>, Vec<(usize, f64)>) {
+    let mut ucol: Vec<(usize, f64)> = Vec::new();
+    let mut lcol: Vec<(usize, f64)> = Vec::new();
+    for &r in post {
+        let k = pinv[r];
+        if k < j {
+            ucol.push((k, x[r]));
+        } else if r != piv_row {
+            lcol.push((r, x[r] / piv));
+        }
+    }
+    ucol.push((j, piv)); // diagonal
+    (ucol, lcol)
+}
+
 /// Sparse LU factors: P A = L U (row pivoting only).
 pub struct SparseLu {
     n: usize,
@@ -212,9 +281,10 @@ impl SparseLu {
     /// entries): the reach must be closed under the *pattern*, not under
     /// one particular value assignment, for the replay to be sound.
     ///
-    /// INVARIANT: the numeric clear/scatter/lower-solve/gather sequence
-    /// here and in [`SparseLu::refactor`] must execute the identical
-    /// floating-point schedule (see the note there); edit both together.
+    /// The per-column numeric work (clear/scatter/lower-solve and the
+    /// gather) is the SAME code [`SparseLu::refactor`] replays —
+    /// [`lu_column_numeric`] / [`lu_column_gather`] — so the two paths
+    /// stay in floating-point lockstep by construction.
     pub fn factor_recording(a: &Csr, max_fill: usize) -> Result<(Self, LuSymbolic)> {
         if a.nrows != a.ncols {
             return Err(Error::InvalidProblem("lu needs square".into()));
@@ -267,25 +337,8 @@ impl SparseLu {
                     }
                 }
             }
-            // --- numeric: sparse lower solve in reverse postorder ---
-            for &r in &post {
-                x[r] = 0.0;
-            }
-            for (&r, &v) in a_rows.iter().zip(a_vals) {
-                x[r] = v;
-            }
-            for &r in post.iter().rev() {
-                let k = pinv[r];
-                if k >= j {
-                    continue; // not yet pivoted at step j
-                }
-                let xr = x[r];
-                if xr != 0.0 {
-                    for &(rr, lv) in &l_cols[k] {
-                        x[rr] -= xr * lv;
-                    }
-                }
-            }
+            // --- numeric: the SHARED per-column kernel ---
+            lu_column_numeric(&post, a_rows, a_vals, &pinv, &l_cols, j, &mut x);
             // --- pivot: largest |x| among unpivoted reach rows ---
             let mut piv_row = UNPIVOTED;
             let mut piv_abs = 0.0f64;
@@ -305,18 +358,8 @@ impl SparseLu {
                 });
             }
             let piv = x[piv_row];
-            // --- gather, structure-complete (no zero pruning) ---
-            let mut ucol: Vec<(usize, f64)> = Vec::new();
-            let mut lcol: Vec<(usize, f64)> = Vec::new();
-            for &r in &post {
-                let k = pinv[r];
-                if k < j {
-                    ucol.push((k, x[r]));
-                } else if r != piv_row {
-                    lcol.push((r, x[r] / piv));
-                }
-            }
-            ucol.push((j, piv)); // diagonal
+            // --- gather, structure-complete (SHARED kernel) ---
+            let (ucol, lcol) = lu_column_gather(&post, &pinv, j, piv_row, piv, &x);
             pinv[piv_row] = j;
             prow[j] = piv_row;
             fill += ucol.len() + lcol.len();
@@ -355,11 +398,11 @@ impl SparseLu {
     /// with unchanged values the result is bit-identical to the
     /// recording factorization.
     ///
-    /// INVARIANT: the per-column clear/scatter/lower-solve/gather
-    /// sequence below must stay in floating-point lockstep with the
-    /// one in [`SparseLu::factor_recording`] — the bitwise-replay
-    /// guarantee (and the cache's property test) depends on the two
-    /// loops executing the identical FP schedule.  Edit both together.
+    /// The per-column clear/scatter/lower-solve and gather are the SAME
+    /// functions the recording path ran ([`lu_column_numeric`] /
+    /// [`lu_column_gather`]), so floating-point lockstep — which the
+    /// bitwise-replay guarantee and the cache's property test depend on
+    /// — is enforced by code, not by comment.
     ///
     /// Returns [`Error::Breakdown`] when a recorded pivot becomes zero
     /// (or non-finite) under the new values — the caller should then
@@ -381,25 +424,9 @@ impl SparseLu {
 
         for j in 0..n {
             let post = &sym.post[j];
-            for &r in post {
-                x[r] = 0.0;
-            }
             let (a_rows, a_vals) = at.row(j);
-            for (&r, &v) in a_rows.iter().zip(a_vals) {
-                x[r] = v;
-            }
-            for &r in post.iter().rev() {
-                let k = sym.pinv[r];
-                if k >= j {
-                    continue; // not yet pivoted at step j
-                }
-                let xr = x[r];
-                if xr != 0.0 {
-                    for &(rr, lv) in &l_cols[k] {
-                        x[rr] -= xr * lv;
-                    }
-                }
-            }
+            // --- numeric: the SHARED per-column kernel ---
+            lu_column_numeric(post, a_rows, a_vals, &sym.pinv, &l_cols, j, &mut x);
             let piv_row = sym.prow[j];
             let piv = x[piv_row];
             // KLU-style stability guard: a recorded pivot that became
@@ -421,17 +448,8 @@ impl SparseLu {
                         .into(),
                 });
             }
-            let mut ucol: Vec<(usize, f64)> = Vec::new();
-            let mut lcol: Vec<(usize, f64)> = Vec::new();
-            for &r in post {
-                let k = sym.pinv[r];
-                if k < j {
-                    ucol.push((k, x[r]));
-                } else if r != piv_row {
-                    lcol.push((r, x[r] / piv));
-                }
-            }
-            ucol.push((j, piv));
+            // --- gather (SHARED kernel) ---
+            let (ucol, lcol) = lu_column_gather(post, &sym.pinv, j, piv_row, piv, &x);
             fill += ucol.len() + lcol.len();
             if fill > max_fill {
                 return Err(Error::OutOfMemory {

@@ -113,18 +113,24 @@ impl LocalComm {
 
     /// Global sum (the NCCL all_reduce analog).
     pub fn all_reduce_sum(&self, x: f64) -> f64 {
-        self.all_reduce_sum_vec(&[x])[0]
+        let mut buf = [x];
+        self.all_reduce_inplace(&mut buf);
+        buf[0]
     }
 
-    /// FUSED global sum of several scalars in ONE reduction round —
-    /// the communication primitive behind single-reduction
+    /// FUSED in-place global sum of several scalars in ONE reduction
+    /// round — the communication primitive behind single-reduction
     /// (Chronopoulos–Gear / pipelined) CG, which NCCL expresses as one
-    /// `all_reduce` over a packed buffer.
-    pub fn all_reduce_sum_vec(&self, xs: &[f64]) -> Vec<f64> {
+    /// `all_reduce` over a packed buffer.  The summed result lands
+    /// directly in `xs`; the shared accumulation/result buffers are
+    /// reused across rounds, so the steady state performs no heap
+    /// allocation.
+    pub fn all_reduce_inplace(&self, xs: &mut [f64]) {
         let mut s = self.shared.ar.lock().unwrap();
         let gen = s.generation;
         if s.count == 0 {
-            s.sum = xs.to_vec();
+            s.sum.clear();
+            s.sum.extend_from_slice(xs);
         } else {
             assert_eq!(
                 s.sum.len(),
@@ -132,24 +138,35 @@ impl LocalComm {
                 "rank {}: mismatched all_reduce payload width (protocol desync)",
                 self.rank
             );
-            for (a, b) in s.sum.iter_mut().zip(xs) {
-                *a += b;
+            for (a, b) in s.sum.iter_mut().zip(xs.iter()) {
+                *a += *b;
             }
         }
         s.count += 1;
         if s.count == self.shared.nranks {
-            s.result = std::mem::take(&mut s.sum);
-            s.count = 0;
-            s.generation += 1;
+            let st = &mut *s;
+            st.result.clear();
+            st.result.extend_from_slice(&st.sum);
+            st.count = 0;
+            st.generation += 1;
             self.shared.reduce_rounds.fetch_add(1, Ordering::Relaxed);
             self.shared.cv.notify_all();
-            s.result.clone()
+            xs.copy_from_slice(&st.result);
         } else {
             while s.generation == gen {
                 s = self.shared.cv.wait(s).unwrap();
             }
-            s.result.clone()
+            // a third round cannot start (it would need THIS rank), so
+            // `result` still holds this generation's sum
+            xs.copy_from_slice(&s.result);
         }
+    }
+
+    /// Allocating convenience over [`LocalComm::all_reduce_inplace`].
+    pub fn all_reduce_sum_vec(&self, xs: &[f64]) -> Vec<f64> {
+        let mut buf = xs.to_vec();
+        self.all_reduce_inplace(&mut buf);
+        buf
     }
 
     /// Completed all_reduce rounds across the team (latency units).
@@ -173,6 +190,32 @@ impl LocalComm {
             .iter()
             .map(|b| b.load(Ordering::Relaxed))
             .sum()
+    }
+}
+
+/// [`LocalComm`] is the rank-team [`crate::krylov::Communicator`]: the
+/// generic Krylov kernels run distributed by pairing the halo-exchanged
+/// operator with this impl, and its round/byte counters are what the
+/// reduction-structure tests and the `dist_scaling` bench read.
+impl crate::krylov::Communicator for LocalComm {
+    fn rank(&self) -> usize {
+        LocalComm::rank(self)
+    }
+
+    fn size(&self) -> usize {
+        LocalComm::size(self)
+    }
+
+    fn all_reduce(&self, xs: &mut [f64]) {
+        self.all_reduce_inplace(xs);
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        LocalComm::bytes_sent(self)
+    }
+
+    fn reduce_rounds(&self) -> u64 {
+        LocalComm::reduce_rounds(self)
     }
 }
 

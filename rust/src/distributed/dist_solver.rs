@@ -1,16 +1,32 @@
-//! Distributed Krylov solvers (paper §3.3 + Appendix C Algorithm 1) and
-//! the distributed adjoint solve.
+//! Distributed Krylov entry points (paper §3.3 + Appendix C Algorithm
+//! 1) and the distributed adjoint solve.
 //!
-//! Per CG iteration: ONE halo exchange (inside the SpMV) and TWO
-//! all_reduce calls — the exact communication structure of the paper.
+//! Every recurrence lives in [`crate::krylov`], written once over
+//! `LinearOperator x Communicator`; this module only assembles the
+//! distributed instantiation — a [`DistOp`] (halo-exchanged SpMV over
+//! the rank's share) paired with the rank team's [`LocalComm`] — builds
+//! the rank-local preconditioner, and packages the per-rank report
+//! (bytes sent, reduction rounds, peak working set).
+//!
+//! Communication structure per CG iteration: ONE halo exchange (inside
+//! the operator apply) and TWO reduction rounds (`<p,Ap>` plus the
+//! fused `<r,z>`/`<r,r>` pair) — exactly the paper's Algorithm 1,
+//! pinned by the counter test below.  Pipelined CG costs ONE fused
+//! round per iteration.
+
+use std::sync::Arc;
 
 use super::comm::LocalComm;
-use super::halo::{dist_spmv, DistCsr};
-use crate::iterative::{Amg, AmgOpts, Jacobi, Precond};
-use crate::util::dot;
+use super::halo::DistCsr;
+use super::op::DistOp;
+use crate::direct::CachedFactor;
+use crate::factor_cache::FactorCache;
+use crate::iterative::{Amg, AmgOpts, IterOpts, IterResult, Jacobi, Precond};
+use crate::krylov::{self, LinearOperator};
+use crate::metrics::{MemTracker, Registry};
 
 /// Preconditioner for the distributed Krylov loops.  Application is
-/// purely LOCAL (no communication), so both variants compose with the
+/// purely LOCAL (no communication), so every variant composes with the
 /// transposed-halo backward pass unchanged.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub enum DistPrecondKind {
@@ -22,12 +38,22 @@ pub enum DistPrecondKind {
     /// owned diagonal block — the §5 "stronger preconditioner (e.g.
     /// algebraic multigrid)" future-work item, implemented.
     BlockAmg,
+    /// One-level additive Schwarz with an EXACT direct solve of each
+    /// rank's owned diagonal block, served through the process-wide
+    /// pattern-keyed factor cache: warm distributed solves (training
+    /// loops, repeated adjoints) skip the local refactorization
+    /// entirely — one numeric factorization per (rank, pattern,
+    /// values), pinned by a counter test.
+    BlockLu,
 }
 
 #[derive(Clone, Debug)]
 pub struct DistIterOpts {
     pub tol: f64,
     pub max_iters: usize,
+    /// Rank-local preconditioner for CG / pipelined CG / BiCGStab /
+    /// GMRES.  [`dist_minres`] ignores this field (it needs an SPD `M`;
+    /// see its docs).
     pub precond: DistPrecondKind,
 }
 
@@ -41,52 +67,99 @@ impl Default for DistIterOpts {
     }
 }
 
+fn iter_opts(opts: &DistIterOpts) -> IterOpts {
+    IterOpts {
+        tol: opts.tol,
+        max_iters: opts.max_iters,
+        record_history: false,
+    }
+}
+
+/// Extract the rank's owned diagonal block (owned rows x owned cols)
+/// from its share.
+fn owned_block(a: &DistCsr) -> crate::sparse::Csr {
+    let n_own = a.plan.n_own;
+    let mut coo = crate::sparse::Coo::with_capacity(n_own, n_own, a.local.nnz());
+    for r in 0..n_own {
+        let (cols, vals) = a.local.row(r);
+        for (c, v) in cols.iter().zip(vals) {
+            if *c < n_own {
+                coo.push(r, *c, *v);
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+fn jacobi_of(block_diag: impl Iterator<Item = f64>) -> Box<dyn Precond> {
+    let diag: Vec<f64> = block_diag
+        .map(|d| if d != 0.0 { d } else { 1.0 })
+        .collect();
+    Box::new(Jacobi::from_diag(&diag))
+}
+
+/// Exact additive-Schwarz block application `z = A_pp^{-1} r`, the
+/// factorization held by (and shared through) the factor cache.
+struct BlockDirect {
+    factor: Arc<CachedFactor>,
+}
+
+impl Precond for BlockDirect {
+    fn apply(&self, r: &[f64], z: &mut [f64]) {
+        // CachedFactor's solve API returns a fresh Vec (same idiom as
+        // AMG's coarse solve); a solve-into variant would shave one
+        // O(n) allocation per application — noted in the ROADMAP.
+        match self.factor.solve(r) {
+            Ok(x) => z.copy_from_slice(&x),
+            // a breakdown here means the block factor went stale in a
+            // way the cache could not see; fall back to identity rather
+            // than poisoning the Krylov iterate with garbage — but SAY
+            // SO, because a varying M breaks CG's fixed-preconditioner
+            // assumption and the solve quality signal must not vanish
+            Err(e) => {
+                log::warn!("BlockDirect precondition solve failed ({e}); applying identity");
+                z.copy_from_slice(r);
+            }
+        }
+    }
+}
+
 /// Build the local (per-rank) preconditioner over the owned diagonal
-/// block of the share.
-fn build_precond(a: &DistCsr, kind: &DistPrecondKind) -> Box<dyn Precond> {
+/// block of the share.  Direct block factorizations go through `cache`
+/// (the wrappers pass the process-wide one), so repeated solves on the
+/// same share — warm training loops, forward+adjoint pairs — reuse ONE
+/// numeric factorization per (rank, pattern, values) instead of
+/// refactoring per call.
+pub(crate) fn build_precond(
+    a: &DistCsr,
+    kind: &DistPrecondKind,
+    cache: &FactorCache,
+    reg: Option<&Registry>,
+) -> Box<dyn Precond> {
     let n_own = a.plan.n_own;
     match kind {
-        DistPrecondKind::Jacobi => {
-            let diag: Vec<f64> = (0..n_own)
-                .map(|r| {
-                    let d = a.local.get(r, r);
-                    if d != 0.0 {
-                        d
-                    } else {
-                        1.0
-                    }
-                })
-                .collect();
-            Box::new(Jacobi::from_diag(&diag))
-        }
+        DistPrecondKind::Jacobi => jacobi_of((0..n_own).map(|r| a.local.get(r, r))),
         DistPrecondKind::BlockAmg => {
-            // extract the owned diagonal block (rows x owned cols)
-            let mut coo = crate::sparse::Coo::with_capacity(n_own, n_own, a.local.nnz());
-            for r in 0..n_own {
-                let (cols, vals) = a.local.row(r);
-                for (c, v) in cols.iter().zip(vals) {
-                    if *c < n_own {
-                        coo.push(r, *c, *v);
-                    }
-                }
-            }
-            let block = coo.to_csr();
+            let block = owned_block(a);
+            // AMG's coarse-grid factorization flows through the
+            // process-wide factor cache inside Amg::new.
             match Amg::new(&block, &AmgOpts::default()) {
                 Ok(amg) => Box::new(amg),
                 Err(_) => {
                     // degenerate block: fall back to Jacobi
-                    let diag: Vec<f64> = (0..n_own)
-                        .map(|r| {
-                            let d = block.get(r, r);
-                            if d != 0.0 {
-                                d
-                            } else {
-                                1.0
-                            }
-                        })
-                        .collect();
-                    Box::new(Jacobi::from_diag(&diag))
+                    jacobi_of((0..n_own).map(|r| block.get(r, r)))
                 }
+            }
+        }
+        DistPrecondKind::BlockLu => {
+            // generous but FINITE fill budget (mirrors the default host
+            // budget): a pathological-fill block trips OutOfMemory and
+            // degrades to Jacobi instead of exhausting host memory
+            const BLOCK_FACTOR_BUDGET_BYTES: u64 = 8 << 30;
+            let block = owned_block(a);
+            match cache.factor(&block, BLOCK_FACTOR_BUDGET_BYTES, reg) {
+                Ok(factor) => Box::new(BlockDirect { factor }),
+                Err(_) => jacobi_of((0..n_own).map(|r| block.get(r, r))),
             }
         }
     }
@@ -101,11 +174,36 @@ pub struct DistSolveReport {
     pub converged: bool,
     /// Bytes this rank sent during the solve.
     pub bytes_sent: u64,
-    /// Peak per-rank working set (matrix share + vectors).
+    /// Reduction ROUNDS (team-wide latency units) this solve consumed:
+    /// a fused multi-scalar all_reduce counts one.
+    pub reduce_rounds: u64,
+    /// Peak per-rank working set (matrix share + solver vectors).
     pub peak_bytes: u64,
 }
 
-/// Distributed Jacobi-preconditioned CG; runs inside one rank's thread.
+/// Run one generic kernel over (share, comm) and package the report.
+fn run_dist(
+    a: &DistCsr,
+    comm: &LocalComm,
+    kernel: impl FnOnce(&dyn LinearOperator, &MemTracker) -> IterResult,
+) -> DistSolveReport {
+    let bytes0 = comm.bytes_sent();
+    let rounds0 = comm.reduce_rounds();
+    let mem = MemTracker::new();
+    let op = DistOp::new(a, comm, 100);
+    let res = kernel(&op, &mem);
+    DistSolveReport {
+        x_own: res.x,
+        iters: res.iters,
+        residual: res.residual,
+        converged: res.converged,
+        bytes_sent: comm.bytes_sent() - bytes0,
+        reduce_rounds: comm.reduce_rounds() - rounds0,
+        peak_bytes: a.bytes() + mem.peak(),
+    }
+}
+
+/// Distributed preconditioned CG; runs inside one rank's thread.
 /// `b_own` is this rank's slice of the RHS.
 pub fn dist_cg(
     a: &DistCsr,
@@ -113,156 +211,28 @@ pub fn dist_cg(
     comm: &LocalComm,
     opts: &DistIterOpts,
 ) -> DistSolveReport {
-    let n_own = a.plan.n_own;
-    let n_ext = n_own + a.plan.n_halo();
-    assert_eq!(b_own.len(), n_own);
-    let bytes0 = comm.bytes_sent();
-
-    // local preconditioner (Jacobi, or block-AMG additive Schwarz)
-    let m = build_precond(a, &opts.precond);
-
-    let mut x = vec![0.0; n_own];
-    let mut r: Vec<f64> = b_own.to_vec();
-    let mut z = vec![0.0; n_own];
-    m.apply(&r, &mut z);
-    let mut p_ext = vec![0.0; n_ext];
-    p_ext[..n_own].copy_from_slice(&z);
-    let mut ap = vec![0.0; n_own];
-
-    let mut rz = comm.all_reduce_sum(dot(&r, &z));
-    let mut rr = comm.all_reduce_sum(dot(&r, &r));
-    let tol2 = opts.tol * opts.tol;
-    let mut iters = 0;
-    while iters < opts.max_iters && rr > tol2 {
-        dist_spmv(a, &mut p_ext, &mut ap, comm, 100 + iters as u64);
-        let pap = comm.all_reduce_sum(dot(&p_ext[..n_own], &ap));
-        if pap <= 0.0 || !pap.is_finite() {
-            break;
-        }
-        let alpha = rz / pap;
-        for i in 0..n_own {
-            x[i] += alpha * p_ext[i];
-            r[i] -= alpha * ap[i];
-        }
-        m.apply(&r, &mut z);
-        // <r,z> and <r,r> are available at the same point of the
-        // recurrence, so they ride ONE fused all_reduce (a packed
-        // 2-scalar NCCL buffer) — Algorithm 1's "two all_reduce per
-        // iteration" is exactly <p,Ap> plus this fused pair.
-        // (§Perf L3: was three rounds; fusing saved one latency unit.)
-        let fused = comm.all_reduce_sum_vec(&[dot(&r, &z), dot(&r, &r)]);
-        let (rz_new, rr_new) = (fused[0], fused[1]);
-        let beta = rz_new / rz;
-        for i in 0..n_own {
-            p_ext[i] = z[i] + beta * p_ext[i];
-        }
-        rz = rz_new;
-        rr = rr_new;
-        iters += 1;
-    }
-
-    let vec_bytes = ((n_own * 5 + n_ext) * 8) as u64;
-    DistSolveReport {
-        x_own: x,
-        iters,
-        residual: rr.sqrt(),
-        converged: rr <= tol2,
-        bytes_sent: comm.bytes_sent() - bytes0,
-        peak_bytes: a.bytes() + vec_bytes,
-    }
+    assert_eq!(b_own.len(), a.plan.n_own);
+    let m = build_precond(a, &opts.precond, FactorCache::global(), None);
+    run_dist(a, comm, |op, mem| {
+        krylov::cg(op, b_own, &*m, comm, &iter_opts(opts), Some(mem))
+    })
 }
 
 /// Single-reduction distributed CG (Chronopoulos & Gear 1989; the
-/// "pipelined / communication-avoiding CG" roadmap item of Appendix C).
-///
-/// Algebraically equivalent to [`dist_cg`] but restructured so the two
-/// inner products of each iteration — `<r,u>` and `<w,u>` (plus the
-/// `<r,r>` convergence check) — ride ONE fused `all_reduce` round,
-/// halving the per-iteration reduction latency that dominates at large
-/// P.  Composes with the same transposed-halo backward pass, since only
-/// the reductions are reorganized, not the SpMV (Appendix C).
+/// "pipelined / communication-avoiding CG" roadmap item of Appendix C):
+/// algebraically equivalent to [`dist_cg`] with the per-iteration
+/// reductions fused into ONE round.
 pub fn dist_cg_pipelined(
     a: &DistCsr,
     b_own: &[f64],
     comm: &LocalComm,
     opts: &DistIterOpts,
 ) -> DistSolveReport {
-    let n_own = a.plan.n_own;
-    let n_ext = n_own + a.plan.n_halo();
-    assert_eq!(b_own.len(), n_own);
-    let bytes0 = comm.bytes_sent();
-
-    let m = build_precond(a, &opts.precond);
-
-    let mut x = vec![0.0; n_own];
-    let mut r: Vec<f64> = b_own.to_vec();
-    // u = M^-1 r lives in the extended (owned + halo) layout: it is the
-    // vector whose halo must be current for w = A u.
-    let mut u_ext = vec![0.0; n_ext];
-    let mut u_own = vec![0.0; n_own];
-    m.apply(&r, &mut u_own);
-    u_ext[..n_own].copy_from_slice(&u_own);
-    let mut w = vec![0.0; n_own];
-    dist_spmv(a, &mut u_ext, &mut w, comm, 50);
-
-    let fused = comm.all_reduce_sum_vec(&[
-        dot(&r, &u_ext[..n_own]),
-        dot(&w, &u_ext[..n_own]),
-        dot(&r, &r),
-    ]);
-    let (mut gamma, delta0, mut rr) = (fused[0], fused[1], fused[2]);
-
-    let mut p = vec![0.0; n_own];
-    let mut s = vec![0.0; n_own]; // s = A p
-    let mut alpha = if delta0 > 0.0 { gamma / delta0 } else { 0.0 };
-    let mut beta = 0.0_f64;
-    let tol2 = opts.tol * opts.tol;
-    let mut iters = 0;
-    while iters < opts.max_iters && rr > tol2 && alpha.is_finite() && alpha != 0.0 {
-        // p = u + beta p ; s = w + beta s  (beta = 0 on the first pass)
-        for i in 0..n_own {
-            p[i] = u_ext[i] + beta * p[i];
-            s[i] = w[i] + beta * s[i];
-        }
-        // x += alpha p ; r -= alpha s ; u = M^-1 r
-        for i in 0..n_own {
-            x[i] += alpha * p[i];
-            r[i] -= alpha * s[i];
-        }
-        m.apply(&r, &mut u_own);
-        u_ext[..n_own].copy_from_slice(&u_own);
-        // w = A u (one halo exchange)
-        dist_spmv(a, &mut u_ext, &mut w, comm, 150 + iters as u64);
-        // ONE fused reduction: gamma_new = <r,u>, delta = <w,u>, rr = <r,r>
-        let fused = comm.all_reduce_sum_vec(&[
-            dot(&r, &u_ext[..n_own]),
-            dot(&w, &u_ext[..n_own]),
-            dot(&r, &r),
-        ]);
-        let (gamma_new, delta, rr_new) = (fused[0], fused[1], fused[2]);
-        rr = rr_new;
-        iters += 1;
-        if rr <= tol2 {
-            break;
-        }
-        beta = gamma_new / gamma;
-        let denom = delta - beta / alpha * gamma_new;
-        if denom <= 0.0 || !denom.is_finite() {
-            break; // breakdown: report current iterate
-        }
-        alpha = gamma_new / denom;
-        gamma = gamma_new;
-    }
-
-    let vec_bytes = ((n_own * 6 + n_ext) * 8) as u64;
-    DistSolveReport {
-        x_own: x,
-        iters,
-        residual: rr.sqrt(),
-        converged: rr <= tol2,
-        bytes_sent: comm.bytes_sent() - bytes0,
-        peak_bytes: a.bytes() + vec_bytes,
-    }
+    assert_eq!(b_own.len(), a.plan.n_own);
+    let m = build_precond(a, &opts.precond, FactorCache::global(), None);
+    run_dist(a, comm, |op, mem| {
+        krylov::cg_pipelined(op, b_own, &*m, comm, &iter_opts(opts), Some(mem))
+    })
 }
 
 /// Distributed BiCGStab for general systems (same halo/reduce template).
@@ -272,86 +242,54 @@ pub fn dist_bicgstab(
     comm: &LocalComm,
     opts: &DistIterOpts,
 ) -> DistSolveReport {
-    let n_own = a.plan.n_own;
-    let n_ext = n_own + a.plan.n_halo();
-    let bytes0 = comm.bytes_sent();
+    assert_eq!(b_own.len(), a.plan.n_own);
+    let m = build_precond(a, &opts.precond, FactorCache::global(), None);
+    run_dist(a, comm, |op, mem| {
+        krylov::bicgstab(op, b_own, &*m, comm, &iter_opts(opts), Some(mem))
+    })
+}
 
-    let mut x = vec![0.0; n_own];
-    let mut r: Vec<f64> = b_own.to_vec();
-    let r0: Vec<f64> = b_own.to_vec();
-    let mut p_ext = vec![0.0; n_ext];
-    let mut s_ext = vec![0.0; n_ext];
-    let mut v = vec![0.0; n_own];
-    let mut t = vec![0.0; n_own];
+/// Distributed restarted GMRES(m) — the nonsymmetric/indefinite
+/// workhorse at rank-team scale (a scenario family the serial-only
+/// wrapper could not serve).
+pub fn dist_gmres(
+    a: &DistCsr,
+    b_own: &[f64],
+    restart: usize,
+    comm: &LocalComm,
+    opts: &DistIterOpts,
+) -> DistSolveReport {
+    assert_eq!(b_own.len(), a.plan.n_own);
+    let m = build_precond(a, &opts.precond, FactorCache::global(), None);
+    run_dist(a, comm, |op, mem| {
+        krylov::gmres(op, b_own, &*m, restart, comm, &iter_opts(opts), Some(mem))
+    })
+}
 
-    let mut rho = 1.0f64;
-    let mut alpha = 1.0f64;
-    let mut omega = 1.0f64;
-    let mut rr = comm.all_reduce_sum(dot(&r, &r));
-    let tol2 = opts.tol * opts.tol;
-    let mut iters = 0;
-    let mut tag = 10_000u64;
-    while iters < opts.max_iters && rr > tol2 {
-        let rho_new = comm.all_reduce_sum(dot(&r0, &r));
-        if rho_new == 0.0 {
-            break;
-        }
-        if iters == 0 {
-            p_ext[..n_own].copy_from_slice(&r);
-        } else {
-            let beta = (rho_new / rho) * (alpha / omega);
-            for i in 0..n_own {
-                p_ext[i] = r[i] + beta * (p_ext[i] - omega * v[i]);
-            }
-        }
-        rho = rho_new;
-        tag += 1;
-        dist_spmv(a, &mut p_ext, &mut v, comm, tag);
-        let r0v = comm.all_reduce_sum(dot(&r0, &v));
-        if r0v == 0.0 {
-            break;
-        }
-        alpha = rho / r0v;
-        for i in 0..n_own {
-            s_ext[i] = r[i] - alpha * v[i];
-        }
-        let ss = comm.all_reduce_sum(dot(&s_ext[..n_own], &s_ext[..n_own]));
-        if ss <= tol2 {
-            for i in 0..n_own {
-                x[i] += alpha * p_ext[i];
-            }
-            rr = ss;
-            iters += 1;
-            break;
-        }
-        tag += 1;
-        dist_spmv(a, &mut s_ext, &mut t, comm, tag);
-        let tt = comm.all_reduce_sum(dot(&t, &t));
-        if tt == 0.0 {
-            break;
-        }
-        let ts = comm.all_reduce_sum(dot(&t, &s_ext[..n_own]));
-        omega = ts / tt;
-        for i in 0..n_own {
-            x[i] += alpha * p_ext[i] + omega * s_ext[i];
-            r[i] = s_ext[i] - omega * t[i];
-        }
-        rr = comm.all_reduce_sum(dot(&r, &r));
-        iters += 1;
-        if omega == 0.0 {
-            break;
-        }
-    }
-
-    let vec_bytes = ((n_own * 6 + 2 * n_ext) * 8) as u64;
-    DistSolveReport {
-        x_own: x,
-        iters,
-        residual: rr.sqrt(),
-        converged: rr <= tol2,
-        bytes_sent: comm.bytes_sent() - bytes0,
-        peak_bytes: a.bytes() + vec_bytes,
-    }
+/// Distributed MINRES for symmetric (possibly indefinite) systems.
+///
+/// Always UNPRECONDITIONED: `opts.precond` is deliberately ignored —
+/// MINRES requires an SPD `M`, and none of the [`DistPrecondKind`]
+/// variants guarantee that on an indefinite operator (Jacobi's diagonal
+/// and the exact/AMG block inverses inherit the operator's
+/// indefiniteness).
+pub fn dist_minres(
+    a: &DistCsr,
+    b_own: &[f64],
+    comm: &LocalComm,
+    opts: &DistIterOpts,
+) -> DistSolveReport {
+    assert_eq!(b_own.len(), a.plan.n_own);
+    run_dist(a, comm, |op, mem| {
+        krylov::minres(
+            op,
+            b_own,
+            &crate::iterative::Identity,
+            comm,
+            &iter_opts(opts),
+            Some(mem),
+        )
+    })
 }
 
 /// Distributed LOBPCG for the k smallest eigenpairs (Jacobi
@@ -365,135 +303,20 @@ pub fn dist_lobpcg(
     seed: u64,
 ) -> (Vec<f64>, Vec<Vec<f64>>, usize) {
     let n_own = a.plan.n_own;
-    let n_ext = n_own + a.plan.n_halo();
-    // rank-deterministic start vectors: every rank generates ITS slice
-    let mut rng = crate::util::Prng::new(seed ^ ((comm.rank() as u64) << 32));
-    let inv_diag: Vec<f64> = (0..n_own)
-        .map(|r| {
-            let d = a.local.get(r, r);
-            if d != 0.0 {
-                1.0 / d
-            } else {
-                1.0
-            }
-        })
-        .collect();
-
-    let gdot = |comm: &LocalComm, a_: &[f64], b_: &[f64]| comm.all_reduce_sum(dot(a_, b_));
-    let mut tag = 1_000_000u64;
-    let mut spmv = |a: &DistCsr, x_own: &[f64], comm: &LocalComm| -> Vec<f64> {
-        let mut x_ext = vec![0.0; n_ext];
-        x_ext[..n_own].copy_from_slice(x_own);
-        let mut y = vec![0.0; n_own];
-        tag += 1;
-        dist_spmv(a, &mut x_ext, &mut y, comm, tag);
-        y
-    };
-
-    // distributed modified Gram-Schmidt
-    let orthonormalize = |vs: &mut Vec<Vec<f64>>, comm: &LocalComm| {
-        let mut out: Vec<Vec<f64>> = Vec::with_capacity(vs.len());
-        for v in vs.drain(..) {
-            let mut w = v;
-            for _ in 0..2 {
-                for u in &out {
-                    let c = gdot(comm, &w, u);
-                    for i in 0..w.len() {
-                        w[i] -= c * u[i];
-                    }
-                }
-            }
-            let nw = gdot(comm, &w, &w).sqrt();
-            if nw > 1e-10 {
-                for x in w.iter_mut() {
-                    *x /= nw;
-                }
-                out.push(w);
-            }
-        }
-        *vs = out;
-    };
-
-    let mut x: Vec<Vec<f64>> = (0..k).map(|_| rng.normal_vec(n_own)).collect();
-    orthonormalize(&mut x, comm);
-    let mut p: Vec<Vec<f64>> = Vec::new();
-    let mut values = vec![0.0; k];
-    let mut iters = 0;
-
-    for it in 0..max_iters {
-        iters = it + 1;
-        let ax: Vec<Vec<f64>> = x.iter().map(|xi| spmv(a, xi, comm)).collect();
-        let mut ws: Vec<Vec<f64>> = Vec::with_capacity(k);
-        let mut worst = 0.0f64;
-        for j in 0..k {
-            let lam = gdot(comm, &x[j], &ax[j]);
-            values[j] = lam;
-            let r: Vec<f64> = (0..n_own).map(|i| ax[j][i] - lam * x[j][i]).collect();
-            let rn = gdot(comm, &r, &r).sqrt();
-            worst = worst.max(rn / lam.abs().max(1.0));
-            ws.push(r.iter().zip(&inv_diag).map(|(a, d)| a * d).collect());
-        }
-        if worst < tol {
-            break;
-        }
-        let mut s: Vec<Vec<f64>> = Vec::with_capacity(3 * k);
-        s.extend(x.iter().cloned());
-        s.extend(ws);
-        s.extend(p.iter().cloned());
-        orthonormalize(&mut s, comm);
-        let d = s.len();
-        let as_: Vec<Vec<f64>> = s.iter().map(|si| spmv(a, si, comm)).collect();
-        let mut t = vec![0f64; d * d];
-        for i in 0..d {
-            for j in i..d {
-                let v = gdot(comm, &s[i], &as_[j]);
-                t[i * d + j] = v;
-                t[j * d + i] = v;
-            }
-        }
-        // Rayleigh-Ritz is replicated on every rank (dense d x d)
-        let (_tvals, tvecs) = crate::eigen::jacobi_eigh(&t, d);
-        let x_new: Vec<Vec<f64>> = (0..k)
-            .map(|j| {
-                let mut v = vec![0.0; n_own];
-                for (i, si) in s.iter().enumerate() {
-                    let c = tvecs[j][i];
-                    for l in 0..n_own {
-                        v[l] += c * si[l];
-                    }
-                }
-                v
-            })
-            .collect();
-        let mut p_new = Vec::with_capacity(k);
-        for j in 0..k {
-            let mut pj = x_new[j].clone();
-            for xi in &x {
-                let c = gdot(comm, xi, &x_new[j]);
-                for l in 0..n_own {
-                    pj[l] -= c * xi[l];
-                }
-            }
-            let np = gdot(comm, &pj, &pj).sqrt();
-            if np > 1e-12 {
-                for v in pj.iter_mut() {
-                    *v /= np;
-                }
-                p_new.push(pj);
-            }
-        }
-        x = x_new;
-        orthonormalize(&mut x, comm);
-        p = p_new;
-    }
-
-    let mut order: Vec<usize> = (0..k).collect();
-    order.sort_by(|&i, &j| values[i].partial_cmp(&values[j]).unwrap());
-    (
-        order.iter().map(|&i| values[i]).collect(),
-        order.iter().map(|&i| x[i].clone()).collect(),
-        iters,
-    )
+    let m = jacobi_of((0..n_own).map(|r| a.local.get(r, r)));
+    let op = DistOp::new(a, comm, 1_000_000);
+    let result = krylov::lobpcg(
+        &op,
+        &*m,
+        k,
+        comm,
+        &crate::eigen::LobpcgOpts {
+            tol,
+            max_iters,
+            seed,
+        },
+    );
+    (result.values, result.vectors, result.iters)
 }
 
 /// Distributed adjoint linear solve (paper §3.3 "Autograd composition"):
@@ -582,8 +405,9 @@ mod tests {
         let x: Vec<f64> = reports.iter().flat_map(|r| r.x_own.clone()).collect();
         assert!(reports.iter().all(|r| r.converged));
         assert!(util::rel_l2(&a_perm.matvec(&x), &b) < 1e-8);
-        // communication happened
+        // communication happened and was accounted
         assert!(reports.iter().any(|r| r.bytes_sent > 0));
+        assert!(reports.iter().all(|r| r.reduce_rounds > 0));
     }
 
     #[test]
@@ -641,6 +465,9 @@ mod tests {
             rounds_pip < 1.2,
             "pipelined CG should cost ~1 reduction round/iter, got {rounds_pip:.2}"
         );
+        // the per-solve report carries the same pinned structure
+        assert_eq!(std_out[0].0.reduce_rounds, std_out[0].1);
+        assert_eq!(pip_out[0].0.reduce_rounds, pip_out[0].1);
     }
 
     #[test]
@@ -684,6 +511,75 @@ mod tests {
             amg[0].iters * 3 < jac[0].iters,
             "block-AMG ({}) must beat Jacobi ({}) by >3x in iterations",
             amg[0].iters,
+            jac[0].iters
+        );
+    }
+
+    #[test]
+    fn block_lu_precond_factors_once_per_rank_pattern_values() {
+        // The factor-cache satellite: per-rank exact-block Schwarz must
+        // cost ONE numeric factorization per (rank, pattern, values) —
+        // warm rebuilds are numeric-tier hits, not refactorizations.
+        let nparts = 3;
+        let (_, _, parts) = dist_setup(18, nparts);
+        let cache = FactorCache::new(u64::MAX);
+        let reg = Registry::new();
+        for p in 0..nparts {
+            let _ = build_precond(&parts[p], &DistPrecondKind::BlockLu, &cache, Some(&reg));
+        }
+        assert_eq!(
+            cache.stats().numeric_factorizations,
+            nparts as u64,
+            "cold pass: one factorization per rank block"
+        );
+        assert_eq!(reg.get("factor_cache.miss"), nparts as u64);
+        // warm pass: same shares, same values -> numeric-tier hits only
+        for p in 0..nparts {
+            let _ = build_precond(&parts[p], &DistPrecondKind::BlockLu, &cache, Some(&reg));
+        }
+        assert_eq!(
+            cache.stats().numeric_factorizations,
+            nparts as u64,
+            "warm pass must not refactor"
+        );
+        assert_eq!(reg.get("factor_cache.hit.numeric"), nparts as u64);
+    }
+
+    #[test]
+    fn block_lu_precond_solves_and_beats_jacobi() {
+        let g = 24;
+        let nparts = 4;
+        let (a_perm, part, parts) = dist_setup(g, nparts);
+        let n = g * g;
+        let mut rng = Prng::new(9);
+        let b = Arc::new(rng.normal_vec(n));
+        let part2 = Arc::new(part);
+        let run = |kind: DistPrecondKind| {
+            let (bc, p2, ps) = (b.clone(), part2.clone(), parts.clone());
+            run_ranks(nparts, move |c| {
+                let p = c.rank();
+                let range = p2.rank_range(p);
+                dist_cg(
+                    &ps[p],
+                    &bc[range],
+                    &c,
+                    &DistIterOpts {
+                        tol: 1e-11,
+                        max_iters: 10_000,
+                        precond: kind.clone(),
+                    },
+                )
+            })
+        };
+        let jac = run(DistPrecondKind::Jacobi);
+        let blu = run(DistPrecondKind::BlockLu);
+        assert!(blu.iter().all(|r| r.converged));
+        let x: Vec<f64> = blu.iter().flat_map(|r| r.x_own.clone()).collect();
+        assert!(util::rel_l2(&a_perm.matvec(&x), &b) < 1e-8);
+        assert!(
+            blu[0].iters < jac[0].iters,
+            "exact block solves ({}) must beat Jacobi ({})",
+            blu[0].iters,
             jac[0].iters
         );
     }

@@ -22,14 +22,18 @@
 pub mod comm;
 pub mod dist_solver;
 pub mod halo;
+pub mod newton;
+pub mod op;
 pub mod partition;
 pub mod tensor;
 
 pub use comm::{run_ranks, LocalComm};
 pub use dist_solver::{
-    dist_bicgstab, dist_cg, dist_cg_pipelined, dist_lobpcg, DistIterOpts, DistPrecondKind,
-    DistSolveReport,
+    dist_bicgstab, dist_cg, dist_cg_pipelined, dist_gmres, dist_lobpcg, dist_minres,
+    dist_solve_adjoint, DistAdjointResult, DistIterOpts, DistPrecondKind, DistSolveReport,
 };
 pub use halo::{DistCsr, HaloPlan};
+pub use newton::DistPointwiseResidual;
+pub use op::DistOp;
 pub use partition::{Partition, PartitionStrategy};
 pub use tensor::{DSparseTensor, DSparseTensorList};

@@ -1,14 +1,15 @@
 //! LOBPCG (Knyazev 2001) in the stabilized orthogonal-basis form:
 //! Rayleigh–Ritz on an orthonormalized [X, W, P] basis each iteration.
 //!
-//! The same template the paper distributes (§3.3): the only non-local
-//! operations are the operator apply and inner products, which the
-//! distributed layer swaps for halo-exchange SpMV and all_reduce.
+//! The recurrence lives in [`crate::krylov::lobpcg`], written once over
+//! `LinearOperator x Communicator` — the only non-local operations are
+//! the operator apply and inner products (paper §3.3), so the serial
+//! and distributed eigensolvers share one body.  This wrapper is the
+//! serial entry point ([`NullComm`]).
 
-use super::dense_sym::{jacobi_eigh, matmul};
 use super::EigResult;
 use crate::iterative::{LinOp, Precond};
-use crate::util::{dot, norm2, Prng};
+use crate::krylov::{NullComm, SerialOp};
 
 #[derive(Clone, Debug)]
 pub struct LobpcgOpts {
@@ -29,149 +30,8 @@ impl Default for LobpcgOpts {
 
 /// `k` smallest eigenpairs of symmetric `a` with preconditioner `m`.
 pub fn lobpcg(a: &dyn LinOp, m: &dyn Precond, k: usize, opts: &LobpcgOpts) -> EigResult {
-    let n = a.nrows();
-    assert!(k >= 1 && 3 * k < n, "lobpcg needs 3k < n");
-    let mut rng = Prng::new(opts.seed);
-
-    // X: k column vectors
-    let mut x: Vec<Vec<f64>> = (0..k).map(|_| rng.normal_vec(n)).collect();
-    orthonormalize(&mut x);
-    let mut p: Vec<Vec<f64>> = Vec::new();
-
-    let mut values = vec![0f64; k];
-    let mut iters = 0;
-    let mut residuals = vec![f64::INFINITY; k];
-
-    let mut w_buf = vec![0f64; n];
-    for it in 0..opts.max_iters {
-        iters = it + 1;
-        // Rayleigh quotients + residuals
-        let ax: Vec<Vec<f64>> = x
-            .iter()
-            .map(|xi| {
-                a.apply(xi, &mut w_buf);
-                w_buf.clone()
-            })
-            .collect();
-        let mut ws: Vec<Vec<f64>> = Vec::with_capacity(k);
-        let mut worst = 0.0f64;
-        for j in 0..k {
-            let lam = dot(&x[j], &ax[j]);
-            values[j] = lam;
-            let r: Vec<f64> = (0..n).map(|i| ax[j][i] - lam * x[j][i]).collect();
-            let rn = norm2(&r);
-            residuals[j] = rn;
-            worst = worst.max(rn / lam.abs().max(1.0));
-            let mut z = vec![0f64; n];
-            m.apply(&r, &mut z);
-            ws.push(z);
-        }
-        if worst < opts.tol {
-            break;
-        }
-        // basis S = [X, W, P], orthonormalized with deflation of
-        // near-dependent directions
-        let mut s: Vec<Vec<f64>> = Vec::with_capacity(3 * k);
-        s.extend(x.iter().cloned());
-        s.extend(ws);
-        s.extend(p.iter().cloned());
-        orthonormalize(&mut s);
-        let d = s.len();
-        // projected operator T = S^T A S (row-major d x d)
-        let as_: Vec<Vec<f64>> = s
-            .iter()
-            .map(|si| {
-                a.apply(si, &mut w_buf);
-                w_buf.clone()
-            })
-            .collect();
-        let mut t = vec![0f64; d * d];
-        for i in 0..d {
-            for j in i..d {
-                let v = dot(&s[i], &as_[j]);
-                t[i * d + j] = v;
-                t[j * d + i] = v;
-            }
-        }
-        let (_tvals, tvecs) = jacobi_eigh(&t, d);
-        // new X = S * C[:, :k]; P = the non-X component of the update
-        let mut c = vec![0f64; d * k];
-        for (j, tv) in tvecs.iter().take(k).enumerate() {
-            for i in 0..d {
-                c[i * k + j] = tv[i];
-            }
-        }
-        let sc = {
-            // S as (n x d) row-major
-            let mut sm = vec![0f64; n * d];
-            for (j, sj) in s.iter().enumerate() {
-                for i in 0..n {
-                    sm[i * d + j] = sj[i];
-                }
-            }
-            matmul(&sm, &c, n, d, k)
-        };
-        let x_new: Vec<Vec<f64>> = (0..k)
-            .map(|j| (0..n).map(|i| sc[i * k + j]).collect())
-            .collect();
-        // P = X_new - X (X^T X_new): the locally-optimal direction memory
-        let mut p_new: Vec<Vec<f64>> = Vec::with_capacity(k);
-        for j in 0..k {
-            let mut pj = x_new[j].clone();
-            for xi in &x {
-                let cij = dot(xi, &x_new[j]);
-                for l in 0..n {
-                    pj[l] -= cij * xi[l];
-                }
-            }
-            let np = norm2(&pj);
-            if np > 1e-12 {
-                for v in pj.iter_mut() {
-                    *v /= np;
-                }
-                p_new.push(pj);
-            }
-        }
-        x = x_new;
-        orthonormalize(&mut x);
-        p = p_new;
-    }
-
-    // sort pairs ascending by value
-    let mut order: Vec<usize> = (0..k).collect();
-    order.sort_by(|&i, &j| values[i].partial_cmp(&values[j]).unwrap());
-    EigResult {
-        values: order.iter().map(|&i| values[i]).collect(),
-        vectors: order.iter().map(|&i| x[i].clone()).collect(),
-        iters,
-        residuals: order.iter().map(|&i| residuals[i]).collect(),
-    }
-}
-
-/// In-place modified Gram–Schmidt; drops near-dependent vectors.
-fn orthonormalize(vs: &mut Vec<Vec<f64>>) {
-    let mut out: Vec<Vec<f64>> = Vec::with_capacity(vs.len());
-    for v in vs.drain(..) {
-        let mut w = v;
-        for _ in 0..2 {
-            for u in &out {
-                let c = dot(&w, u);
-                if c != 0.0 {
-                    for i in 0..w.len() {
-                        w[i] -= c * u[i];
-                    }
-                }
-            }
-        }
-        let nw = norm2(&w);
-        if nw > 1e-10 {
-            for x in w.iter_mut() {
-                *x /= nw;
-            }
-            out.push(w);
-        }
-    }
-    *vs = out;
+    assert_eq!(a.nrows(), a.ncols(), "lobpcg needs a square operator");
+    crate::krylov::lobpcg(&SerialOp(a), m, k, &NullComm, opts)
 }
 
 #[cfg(test)]
@@ -179,6 +39,7 @@ mod tests {
     use super::*;
     use crate::iterative::precond::{Identity, Jacobi};
     use crate::sparse::poisson::poisson2d;
+    use crate::util::dot;
 
     #[test]
     fn matches_lanczos_on_poisson() {

@@ -1,9 +1,12 @@
 //! BiCGStab (van der Vorst 1992) for general (nonsymmetric) systems,
-//! with right preconditioning.
+//! with right preconditioning — the serial entry point over the generic
+//! kernel in [`crate::krylov::bicgstab`] (paired with [`NullComm`],
+//! which reproduces the historical serial loop bit for bit — pinned
+//! against a frozen reference body in `tests/krylov_equivalence.rs`).
 
 use super::{IterOpts, IterResult, LinOp, Precond};
+use crate::krylov::{NullComm, SerialOp};
 use crate::metrics::MemTracker;
-use crate::util::{axpy_inplace, dot};
 
 /// Solve A x = b with preconditioned BiCGStab, x0 = 0.
 pub fn bicgstab(
@@ -13,109 +16,9 @@ pub fn bicgstab(
     opts: &IterOpts,
     mem: Option<&MemTracker>,
 ) -> IterResult {
-    let n = a.nrows();
-    assert_eq!(n, a.ncols());
-    assert_eq!(n, b.len());
-
-    let default_tracker = MemTracker::new();
-    let mem = mem.unwrap_or(&default_tracker);
-    let mut x = mem.buf(n);
-    let mut r = mem.buf(n);
-    let mut r0 = mem.buf(n);
-    let mut p = mem.buf(n);
-    let mut v = mem.buf(n);
-    let mut s = mem.buf(n);
-    let mut t = mem.buf(n);
-    let mut phat = mem.buf(n);
-    let mut shat = mem.buf(n);
-
-    r.data.copy_from_slice(b);
-    r0.data.copy_from_slice(b);
-    let mut rho = 1.0f64;
-    let mut alpha = 1.0f64;
-    let mut omega = 1.0f64;
-    let mut rr = dot(&r, &r);
-    let tol2 = opts.tol * opts.tol;
-
-    let mut history = Vec::new();
-    if opts.record_history {
-        history.push(rr.sqrt());
-    }
-
-    let mut iters = 0;
-    let mut breakdown = false;
-    while iters < opts.max_iters && rr > tol2 {
-        let rho_new = dot(&r0, &r);
-        if rho_new == 0.0 {
-            breakdown = true;
-            break;
-        }
-        if iters == 0 {
-            p.data.copy_from_slice(&r);
-        } else {
-            let beta = (rho_new / rho) * (alpha / omega);
-            // p = r + beta * (p - omega * v)
-            for i in 0..n {
-                p.data[i] = r[i] + beta * (p[i] - omega * v[i]);
-            }
-        }
-        rho = rho_new;
-        m.apply(&p, &mut phat);
-        a.apply(&phat, &mut v);
-        let r0v = dot(&r0, &v);
-        if r0v == 0.0 {
-            breakdown = true;
-            break;
-        }
-        alpha = rho / r0v;
-        // s = r - alpha v
-        for i in 0..n {
-            s.data[i] = r[i] - alpha * v[i];
-        }
-        let ss = dot(&s, &s);
-        if ss <= tol2 {
-            axpy_inplace(alpha, &phat, &mut x);
-            rr = ss;
-            iters += 1;
-            if opts.record_history {
-                history.push(rr.sqrt());
-            }
-            break;
-        }
-        m.apply(&s, &mut shat);
-        a.apply(&shat, &mut t);
-        let tt = dot(&t, &t);
-        if tt == 0.0 {
-            breakdown = true;
-            break;
-        }
-        omega = dot(&t, &s) / tt;
-        // x += alpha * phat + omega * shat
-        axpy_inplace(alpha, &phat, &mut x);
-        axpy_inplace(omega, &shat, &mut x);
-        // r = s - omega t
-        for i in 0..n {
-            r.data[i] = s[i] - omega * t[i];
-        }
-        rr = dot(&r, &r);
-        iters += 1;
-        if opts.record_history {
-            history.push(rr.sqrt());
-        }
-        if omega == 0.0 {
-            breakdown = true;
-            break;
-        }
-    }
-
-    IterResult {
-        x: x.take(),
-        iters,
-        residual: rr.sqrt(),
-        converged: rr <= tol2,
-        breakdown: breakdown && rr > tol2,
-        history,
-    }
+    assert_eq!(a.nrows(), a.ncols());
+    assert_eq!(a.nrows(), b.len());
+    crate::krylov::bicgstab(&SerialOp(a), b, m, &NullComm, opts, mem)
 }
 
 #[cfg(test)]

@@ -1,76 +1,24 @@
-//! Preconditioned conjugate gradient (Hestenes & Stiefel 1952).
+//! Preconditioned conjugate gradient (Hestenes & Stiefel 1952) — the
+//! serial entry point.
 //!
-//! The native analogue of the fused ``cg_poisson_*`` XLA artifact; also
-//! the building block the distributed layer re-implements with halo
-//! exchange + all_reduce (Appendix C, Algorithm 1).  The loop is
-//! allocation-free after setup; working vectors are accounted against an
-//! optional [`MemTracker`].
+//! The native analogue of the fused ``cg_poisson_*`` XLA artifact.  The
+//! recurrence itself lives in [`crate::krylov::cg`], written once over
+//! `LinearOperator x Communicator`; this wrapper pairs the caller's
+//! [`LinOp`] with the zero-cost [`NullComm`], which reproduces the
+//! historical serial loop's floating-point schedule exactly (pinned by
+//! `tests/krylov_equivalence.rs`).  The loop is allocation-free after
+//! setup; working vectors are accounted against an optional
+//! [`MemTracker`].
 
 use super::{IterOpts, IterResult, LinOp, Precond};
+use crate::krylov::{NullComm, SerialOp};
 use crate::metrics::MemTracker;
-use crate::util::{axpy_inplace, dot, xpby_inplace};
 
 /// Solve A x = b with preconditioned CG, x0 = 0.
 pub fn cg(a: &dyn LinOp, b: &[f64], m: &dyn Precond, opts: &IterOpts, mem: Option<&MemTracker>) -> IterResult {
-    let n = a.nrows();
-    assert_eq!(n, a.ncols(), "cg needs a square operator");
-    assert_eq!(n, b.len());
-
-    let default_tracker = MemTracker::new();
-    let mem = mem.unwrap_or(&default_tracker);
-    let mut x = mem.buf(n);
-    let mut r = mem.buf(n);
-    let mut z = mem.buf(n);
-    let mut p = mem.buf(n);
-    let mut ap = mem.buf(n);
-
-    r.data.copy_from_slice(b); // r = b - A*0
-    m.apply(&r, &mut z);
-    p.data.copy_from_slice(&z);
-    let mut rz = dot(&r, &z);
-    let mut rr = dot(&r, &r);
-    let tol2 = opts.tol * opts.tol;
-
-    let mut history = Vec::new();
-    if opts.record_history {
-        history.push(rr.sqrt());
-    }
-
-    let mut iters = 0;
-    let mut breakdown = false;
-    while iters < opts.max_iters && rr > tol2 {
-        a.apply(&p, &mut ap);
-        let pap = dot(&p, &ap);
-        if pap <= 0.0 || !pap.is_finite() {
-            // operator not SPD (or breakdown): stop with current
-            // iterate, and SAY SO — callers must be able to tell this
-            // apart from an exhausted iteration budget
-            breakdown = true;
-            break;
-        }
-        let alpha = rz / pap;
-        axpy_inplace(alpha, &p, &mut x);
-        axpy_inplace(-alpha, &ap, &mut r);
-        m.apply(&r, &mut z);
-        let rz_new = dot(&r, &z);
-        let beta = rz_new / rz;
-        xpby_inplace(&z, beta, &mut p);
-        rz = rz_new;
-        rr = dot(&r, &r);
-        iters += 1;
-        if opts.record_history {
-            history.push(rr.sqrt());
-        }
-    }
-
-    IterResult {
-        x: x.take(),
-        iters,
-        residual: rr.sqrt(),
-        converged: rr <= tol2,
-        breakdown: breakdown && rr > tol2,
-        history,
-    }
+    assert_eq!(a.nrows(), a.ncols(), "cg needs a square operator");
+    assert_eq!(a.nrows(), b.len());
+    crate::krylov::cg(&SerialOp(a), b, m, &NullComm, opts, mem)
 }
 
 #[cfg(test)]

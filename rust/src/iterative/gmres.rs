@@ -1,10 +1,16 @@
 //! Restarted GMRES(m) with modified Gram–Schmidt Arnoldi and Givens
 //! rotations — the general-purpose fallback for indefinite /
-//! nonsymmetric systems where BiCGStab stalls.
+//! nonsymmetric systems where BiCGStab stalls.  Serial entry point over
+//! the generic kernel in [`crate::krylov::gmres`] — the kernel body is
+//! the transcribed historical serial loop, and under [`NullComm`] every
+//! reduction is the identity, so the serial FP schedule is preserved
+//! (the frozen-reference parity suite pins this for CG/BiCGStab; the
+//! GMRES/MINRES/LOBPCG transcriptions are covered by their
+//! behavior-pinning unit tests).
 
 use super::{IterOpts, IterResult, LinOp, Precond};
+use crate::krylov::{NullComm, SerialOp};
 use crate::metrics::MemTracker;
-use crate::util::{dot, norm2};
 
 /// Solve A x = b with right-preconditioned restarted GMRES(m), x0 = 0.
 pub fn gmres(
@@ -15,140 +21,9 @@ pub fn gmres(
     opts: &IterOpts,
     mem: Option<&MemTracker>,
 ) -> IterResult {
-    let n = a.nrows();
-    assert_eq!(n, a.ncols());
-    assert_eq!(n, b.len());
-    let restart = restart.max(1).min(n);
-
-    let default_tracker = MemTracker::new();
-    let mem = mem.unwrap_or(&default_tracker);
-    let mut x = mem.buf(n);
-    let mut r = mem.buf(n);
-    let mut w = mem.buf(n);
-    let mut z = mem.buf(n);
-    // Krylov basis (restart+1 vectors)
-    let _basis_guard = mem.hold(((restart + 1) * n * 8) as u64);
-    let mut basis: Vec<Vec<f64>> = Vec::with_capacity(restart + 1);
-
-    let mut history = Vec::new();
-    let mut total_iters = 0usize;
-    let mut beta;
-
-    r.data.copy_from_slice(b);
-    beta = norm2(&r);
-    if opts.record_history {
-        history.push(beta);
-    }
-
-    'outer: while beta > opts.tol && total_iters < opts.max_iters {
-        basis.clear();
-        let mut v0 = r.data.clone();
-        for vi in v0.iter_mut() {
-            *vi /= beta;
-        }
-        basis.push(v0);
-
-        // Hessenberg (restart+1 x restart), Givens cos/sin, residual vec g
-        let mut h = vec![vec![0f64; restart]; restart + 1];
-        let mut cs = vec![0f64; restart];
-        let mut sn = vec![0f64; restart];
-        let mut g = vec![0f64; restart + 1];
-        g[0] = beta;
-
-        let mut k_used = 0;
-        for k in 0..restart {
-            if total_iters >= opts.max_iters {
-                break;
-            }
-            // w = A M^{-1} v_k
-            m.apply(&basis[k], &mut z);
-            a.apply(&z, &mut w);
-            // modified Gram–Schmidt
-            for (i, vi) in basis.iter().enumerate() {
-                h[i][k] = dot(&w, vi);
-                for j in 0..n {
-                    w.data[j] -= h[i][k] * vi[j];
-                }
-            }
-            h[k + 1][k] = norm2(&w);
-            if h[k + 1][k] > 1e-300 {
-                let mut vk1 = w.data.clone();
-                for vi in vk1.iter_mut() {
-                    *vi /= h[k + 1][k];
-                }
-                basis.push(vk1);
-            }
-            // apply previous rotations to column k
-            for i in 0..k {
-                let t = cs[i] * h[i][k] + sn[i] * h[i + 1][k];
-                h[i + 1][k] = -sn[i] * h[i][k] + cs[i] * h[i + 1][k];
-                h[i][k] = t;
-            }
-            // new rotation
-            let denom = (h[k][k] * h[k][k] + h[k + 1][k] * h[k + 1][k]).sqrt();
-            if denom == 0.0 {
-                k_used = k;
-                break;
-            }
-            cs[k] = h[k][k] / denom;
-            sn[k] = h[k + 1][k] / denom;
-            h[k][k] = denom;
-            h[k + 1][k] = 0.0;
-            g[k + 1] = -sn[k] * g[k];
-            g[k] *= cs[k];
-            total_iters += 1;
-            k_used = k + 1;
-            let res = g[k + 1].abs();
-            if opts.record_history {
-                history.push(res);
-            }
-            if res <= opts.tol {
-                break;
-            }
-            if basis.len() <= k + 1 {
-                break; // lucky breakdown: exact solution in span
-            }
-        }
-        // back-substitute y from H y = g
-        let kk = k_used;
-        let mut y = vec![0f64; kk];
-        for i in (0..kk).rev() {
-            let mut s = g[i];
-            for j in i + 1..kk {
-                s -= h[i][j] * y[j];
-            }
-            y[i] = s / h[i][i];
-        }
-        // x += M^{-1} (V y)
-        let mut vy = vec![0f64; n];
-        for (j, yj) in y.iter().enumerate() {
-            for i in 0..n {
-                vy[i] += yj * basis[j][i];
-            }
-        }
-        m.apply(&vy, &mut z);
-        for i in 0..n {
-            x.data[i] += z[i];
-        }
-        // true residual for restart
-        a.apply(&x, &mut w);
-        for i in 0..n {
-            r.data[i] = b[i] - w[i];
-        }
-        beta = norm2(&r);
-        if beta <= opts.tol {
-            break 'outer;
-        }
-    }
-
-    IterResult {
-        x: x.take(),
-        iters: total_iters,
-        residual: beta,
-        converged: beta <= opts.tol,
-        breakdown: false,
-        history,
-    }
+    assert_eq!(a.nrows(), a.ncols());
+    assert_eq!(a.nrows(), b.len());
+    crate::krylov::gmres(&SerialOp(a), b, m, restart, &NullComm, opts, mem)
 }
 
 #[cfg(test)]

@@ -10,11 +10,14 @@
 //! memory, monotone residual.
 
 use super::{IterOpts, IterResult, LinOp, Precond};
+use crate::krylov::{NullComm, SerialOp};
 use crate::metrics::MemTracker;
-use crate::util::dot;
 
 /// Solve A x = b for symmetric (indefinite OK) A with preconditioned
-/// MINRES, x0 = 0.  The preconditioner must be SPD.
+/// MINRES, x0 = 0.  The preconditioner must be SPD.  Serial entry point
+/// over the generic kernel in [`crate::krylov::minres`] — a transcription
+/// of the historical serial loop whose reductions become identities
+/// under [`NullComm`], preserving the serial FP schedule.
 pub fn minres(
     a: &dyn LinOp,
     b: &[f64],
@@ -22,145 +25,9 @@ pub fn minres(
     opts: &IterOpts,
     mem: Option<&MemTracker>,
 ) -> IterResult {
-    let n = a.nrows();
-    assert_eq!(n, a.ncols(), "minres needs a square operator");
-    assert_eq!(n, b.len());
-
-    let default_tracker = MemTracker::new();
-    let mem = mem.unwrap_or(&default_tracker);
-
-    let mut x = mem.buf(n);
-    let mut r1 = mem.buf(n); // v_{k-1} (unscaled Lanczos vectors)
-    let mut r2 = mem.buf(n); // v_k
-    let mut y = mem.buf(n); // M^{-1} r2
-    let mut w = mem.buf(n);
-    let mut w1 = mem.buf(n);
-    let mut w2 = mem.buf(n);
-    let mut v = mem.buf(n);
-
-    r2.data.copy_from_slice(b);
-    m.apply(&r2, &mut y);
-    let mut beta1 = dot(&r2, &y);
-    if beta1 < 0.0 {
-        // preconditioner not SPD
-        return IterResult {
-            x: x.data.clone(),
-            iters: 0,
-            residual: crate::util::norm2(b),
-            converged: false,
-            breakdown: true,
-            history: vec![],
-        };
-    }
-    if beta1 == 0.0 {
-        return IterResult {
-            x: x.data.clone(),
-            iters: 0,
-            residual: 0.0,
-            converged: true,
-            breakdown: false,
-            history: vec![0.0],
-        };
-    }
-    beta1 = beta1.sqrt();
-
-    // QR of the tridiagonal via Givens rotations, updated incrementally.
-    let (mut oldb, mut beta) = (0.0_f64, beta1);
-    let mut dbar = 0.0_f64;
-    let mut epsln = 0.0_f64;
-    let mut phibar = beta1;
-    let (mut cs, mut sn) = (-1.0_f64, 0.0_f64);
-
-    let mut history = Vec::new();
-    if opts.record_history {
-        history.push(phibar);
-    }
-
-    let mut iters = 0;
-    let mut converged = false;
-    let mut breakdown = false;
-    while iters < opts.max_iters {
-        iters += 1;
-        // --- Lanczos step ---
-        let s = 1.0 / beta;
-        for i in 0..n {
-            v.data[i] = y.data[i] * s;
-        }
-        a.apply(&v, &mut y);
-        if iters >= 2 {
-            let c = beta / oldb;
-            for i in 0..n {
-                y.data[i] -= c * r1.data[i];
-            }
-        }
-        let alfa = dot(&v, &y);
-        {
-            let c = alfa / beta;
-            for i in 0..n {
-                y.data[i] -= c * r2.data[i];
-            }
-        }
-        r1.data.copy_from_slice(&r2.data);
-        r2.data.copy_from_slice(&y.data);
-        m.apply(&r2, &mut y);
-        oldb = beta;
-        let betasq = dot(&r2, &y);
-        if betasq < 0.0 {
-            breakdown = true;
-            break; // preconditioner lost positive-definiteness
-        }
-        beta = betasq.sqrt();
-
-        // --- update QR factorization ---
-        let oldeps = epsln;
-        let delta = cs * dbar + sn * alfa;
-        let gbar = sn * dbar - cs * alfa;
-        epsln = sn * beta;
-        dbar = -cs * beta;
-
-        let gamma = (gbar * gbar + beta * beta).sqrt().max(f64::MIN_POSITIVE);
-        cs = gbar / gamma;
-        sn = beta / gamma;
-        let phi = cs * phibar;
-        phibar *= sn;
-
-        // --- update solution ---
-        let denom = 1.0 / gamma;
-        for i in 0..n {
-            w1.data[i] = w2.data[i];
-            w2.data[i] = w.data[i];
-            w.data[i] = (v.data[i] - oldeps * w1.data[i] - delta * w2.data[i]) * denom;
-            x.data[i] += phi * w.data[i];
-        }
-
-        if opts.record_history {
-            history.push(phibar);
-        }
-        if phibar <= opts.tol {
-            converged = true;
-            break;
-        }
-    }
-
-    // true residual (phibar tracks the preconditioned norm)
-    let mut ax = vec![0.0; n];
-    a.apply(&x.data, &mut ax);
-    let mut rr = 0.0;
-    for i in 0..n {
-        let d = b[i] - ax[i];
-        rr += d * d;
-    }
-    let residual = rr.sqrt();
-
-    let converged = converged || residual <= opts.tol * 10.0;
-    IterResult {
-        x: x.data.clone(),
-        iters,
-        residual,
-        converged,
-        breakdown: breakdown && !converged,
-        history,
-    }
+    assert_eq!(a.nrows(), a.ncols(), "minres needs a square operator");
+    assert_eq!(a.nrows(), b.len());
+    crate::krylov::minres(&SerialOp(a), b, m, &NullComm, opts, mem)
 }
 
 #[cfg(test)]

@@ -1,8 +1,13 @@
 //! Iterative Krylov solvers — the Eigen/pytorch-native backend substrate.
 //!
 //! Everything is written against the [`LinOp`] trait so the same CG runs
-//! on CSR matrices, matrix-free stencil operators, Jacobians applied via
-//! autograd JVPs (nonlinear adjoints), and the distributed SpMV.
+//! on CSR matrices, matrix-free stencil operators, and Jacobians applied
+//! via autograd JVPs (nonlinear adjoints).  The recurrences themselves
+//! live in [`crate::krylov`], written once over `LinearOperator x
+//! Communicator`; the entry points here are the serial instantiations
+//! (`NullComm`), and the distributed layer instantiates the SAME kernels
+//! over halo-exchanged operators and rank teams (see
+//! `docs/solver_architecture.md`).
 
 pub mod amg;
 pub mod bicgstab;

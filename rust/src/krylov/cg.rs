@@ -1,0 +1,268 @@
+//! Preconditioned conjugate gradient (Hestenes & Stiefel 1952) and its
+//! single-reduction (Chronopoulos & Gear 1989, "pipelined") variant,
+//! written once over ([`LinearOperator`], [`Communicator`]).
+//!
+//! Communication contract, pinned by the counter test on `LocalComm`:
+//!
+//! * [`cg`]: per iteration ONE operator apply (one halo exchange when
+//!   distributed) and TWO reduction rounds — `<p,Ap>`, then `<r,z>` and
+//!   `<r,r>` packed into one fused round (Appendix C, Algorithm 1).
+//! * [`cg_pipelined`]: per iteration one apply and ONE fused round
+//!   (`<r,u>`, `<w,u>`, `<r,r>`) — algebraically equivalent, half the
+//!   reduction latency.
+//!
+//! Under `NullComm` the [`cg`] body executes the exact FP schedule of
+//! the pre-unification serial CG (see `tests/krylov_equivalence.rs`).
+
+use super::{Communicator, LinearOperator};
+use crate::iterative::{IterOpts, IterResult, Precond};
+use crate::metrics::MemTracker;
+use crate::util::dot;
+
+/// Solve `A x = b` with preconditioned CG, `x0 = 0`.  `b_own` is this
+/// rank's owned slice of the right-hand side; the returned iterate has
+/// the same layout.
+pub fn cg(
+    a: &dyn LinearOperator,
+    b_own: &[f64],
+    m: &dyn Precond,
+    comm: &dyn Communicator,
+    opts: &IterOpts,
+    mem: Option<&MemTracker>,
+) -> IterResult {
+    let n = a.n_own();
+    let n_ext = a.n_ext();
+    assert_eq!(n, b_own.len(), "cg rhs length mismatch");
+
+    let default_tracker = MemTracker::new();
+    let mem = mem.unwrap_or(&default_tracker);
+    let mut x = mem.buf(n);
+    let mut r = mem.buf(n);
+    let mut z = mem.buf(n);
+    let mut p_ext = mem.buf(n_ext);
+    let mut ap = mem.buf(n);
+
+    r.data.copy_from_slice(b_own); // r = b - A*0
+    m.apply(&r, &mut z);
+    p_ext.data[..n].copy_from_slice(&z);
+    // <r,z> and <r,r> ride one fused setup round
+    let mut fused = [dot(&r, &z), dot(&r, &r)];
+    comm.all_reduce(&mut fused);
+    let (mut rz, mut rr) = (fused[0], fused[1]);
+    let tol2 = opts.tol * opts.tol;
+
+    let mut history = Vec::new();
+    if opts.record_history {
+        history.push(rr.sqrt());
+    }
+
+    let mut iters = 0;
+    let mut breakdown = false;
+    while iters < opts.max_iters && rr > tol2 {
+        a.apply(&mut p_ext, &mut ap);
+        let pap = comm.all_reduce_sum(dot(&p_ext[..n], &ap));
+        if pap <= 0.0 || !pap.is_finite() {
+            // operator not SPD (or breakdown): stop with the current
+            // iterate, and SAY SO — callers must be able to tell this
+            // apart from an exhausted iteration budget
+            breakdown = true;
+            break;
+        }
+        let alpha = rz / pap;
+        for i in 0..n {
+            x.data[i] += alpha * p_ext[i];
+            r.data[i] -= alpha * ap[i];
+        }
+        m.apply(&r, &mut z);
+        // <r,z> and <r,r> are available at the same point of the
+        // recurrence, so they ride ONE fused all_reduce (a packed
+        // 2-scalar NCCL buffer) — Algorithm 1's "two all_reduce per
+        // iteration" is exactly <p,Ap> plus this fused pair.
+        let mut fused = [dot(&r, &z), dot(&r, &r)];
+        comm.all_reduce(&mut fused);
+        let (rz_new, rr_new) = (fused[0], fused[1]);
+        let beta = rz_new / rz;
+        for i in 0..n {
+            p_ext.data[i] = z[i] + beta * p_ext[i];
+        }
+        rz = rz_new;
+        rr = rr_new;
+        iters += 1;
+        if opts.record_history {
+            history.push(rr.sqrt());
+        }
+    }
+
+    IterResult {
+        x: x.take(),
+        iters,
+        residual: rr.sqrt(),
+        converged: rr <= tol2,
+        breakdown: breakdown && rr > tol2,
+        history,
+    }
+}
+
+/// Single-reduction CG (Chronopoulos & Gear 1989): algebraically
+/// equivalent to [`cg`] but restructured so each iteration's inner
+/// products — `<r,u>`, `<w,u>` and the `<r,r>` convergence check — ride
+/// ONE fused reduction round, halving the per-iteration latency that
+/// dominates at large P.  Only the reductions are reorganized, not the
+/// operator apply, so it composes with the transposed-halo backward
+/// pass unchanged (Appendix C).
+pub fn cg_pipelined(
+    a: &dyn LinearOperator,
+    b_own: &[f64],
+    m: &dyn Precond,
+    comm: &dyn Communicator,
+    opts: &IterOpts,
+    mem: Option<&MemTracker>,
+) -> IterResult {
+    let n = a.n_own();
+    let n_ext = a.n_ext();
+    assert_eq!(n, b_own.len(), "cg_pipelined rhs length mismatch");
+
+    let default_tracker = MemTracker::new();
+    let mem = mem.unwrap_or(&default_tracker);
+    let mut x = mem.buf(n);
+    let mut r = mem.buf(n);
+    // u = M^-1 r lives in the extended layout: it is the vector whose
+    // halo must be current for w = A u.
+    let mut u_ext = mem.buf(n_ext);
+    let mut w = mem.buf(n);
+    let mut p = mem.buf(n);
+    let mut s = mem.buf(n); // s = A p
+
+    r.data.copy_from_slice(b_own);
+    m.apply(&r, &mut u_ext.data[..n]);
+    a.apply(&mut u_ext, &mut w);
+
+    let mut fused = [
+        dot(&r, &u_ext[..n]),
+        dot(&w, &u_ext[..n]),
+        dot(&r, &r),
+    ];
+    comm.all_reduce(&mut fused);
+    let (mut gamma, delta0, mut rr) = (fused[0], fused[1], fused[2]);
+
+    let mut alpha = if delta0 > 0.0 { gamma / delta0 } else { 0.0 };
+    let mut beta = 0.0_f64;
+    let tol2 = opts.tol * opts.tol;
+
+    let mut history = Vec::new();
+    if opts.record_history {
+        history.push(rr.sqrt());
+    }
+
+    let mut iters = 0;
+    let mut breakdown = false;
+    while iters < opts.max_iters && rr > tol2 && alpha.is_finite() && alpha != 0.0 {
+        // p = u + beta p ; s = w + beta s  (beta = 0 on the first pass)
+        for i in 0..n {
+            p.data[i] = u_ext[i] + beta * p[i];
+            s.data[i] = w[i] + beta * s[i];
+        }
+        // x += alpha p ; r -= alpha s ; u = M^-1 r
+        for i in 0..n {
+            x.data[i] += alpha * p[i];
+            r.data[i] -= alpha * s[i];
+        }
+        m.apply(&r, &mut u_ext.data[..n]);
+        // w = A u (one halo exchange when distributed)
+        a.apply(&mut u_ext, &mut w);
+        // ONE fused reduction: gamma_new = <r,u>, delta = <w,u>, rr
+        let mut fused = [
+            dot(&r, &u_ext[..n]),
+            dot(&w, &u_ext[..n]),
+            dot(&r, &r),
+        ];
+        comm.all_reduce(&mut fused);
+        let (gamma_new, delta, rr_new) = (fused[0], fused[1], fused[2]);
+        rr = rr_new;
+        iters += 1;
+        if opts.record_history {
+            history.push(rr.sqrt());
+        }
+        if rr <= tol2 {
+            break;
+        }
+        beta = gamma_new / gamma;
+        let denom = delta - beta / alpha * gamma_new;
+        if denom <= 0.0 || !denom.is_finite() {
+            breakdown = true;
+            break; // breakdown: report the current iterate
+        }
+        alpha = gamma_new / denom;
+        gamma = gamma_new;
+    }
+
+    IterResult {
+        x: x.take(),
+        iters,
+        residual: rr.sqrt(),
+        converged: rr <= tol2,
+        breakdown: breakdown && rr > tol2,
+        history,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::iterative::precond::{Identity, Jacobi};
+    use crate::krylov::NullComm;
+    use crate::sparse::poisson::{kappa_star, poisson2d};
+    use crate::util::{self, Prng};
+
+    #[test]
+    fn generic_cg_solves_poisson_under_null_comm() {
+        let g = 16;
+        let sys = poisson2d(g, Some(&kappa_star(g)));
+        let mut rng = Prng::new(0);
+        let b = rng.normal_vec(g * g);
+        let m = Jacobi::new(&sys.matrix).unwrap();
+        let r = cg(&sys.matrix, &b, &m, &NullComm, &IterOpts::default(), None);
+        assert!(r.converged, "residual {}", r.residual);
+        assert!(util::rel_l2(&sys.matrix.matvec(&r.x), &b) < 1e-9);
+    }
+
+    #[test]
+    fn serial_pipelined_cg_matches_standard_cg() {
+        let g = 20;
+        let sys = poisson2d(g, None);
+        let mut rng = Prng::new(1);
+        let b = rng.normal_vec(g * g);
+        let m = Jacobi::new(&sys.matrix).unwrap();
+        let std = cg(&sys.matrix, &b, &m, &NullComm, &IterOpts::default(), None);
+        let pip = cg_pipelined(&sys.matrix, &b, &m, &NullComm, &IterOpts::default(), None);
+        assert!(std.converged && pip.converged);
+        assert!(util::rel_l2(&pip.x, &std.x) < 1e-6);
+        assert!(
+            (std.iters as i64 - pip.iters as i64).abs() <= 3,
+            "iters diverged: {} vs {}",
+            std.iters,
+            pip.iters
+        );
+    }
+
+    #[test]
+    fn pipelined_cg_respects_budget() {
+        let g = 24;
+        let sys = poisson2d(g, None);
+        let r = cg_pipelined(
+            &sys.matrix,
+            &vec![1.0; g * g],
+            &Identity,
+            &NullComm,
+            &IterOpts {
+                tol: 1e-14,
+                max_iters: 10,
+                record_history: true,
+            },
+            None,
+        );
+        assert!(!r.converged);
+        assert!(r.iters <= 10);
+        assert!(r.history.iter().all(|h| h.is_finite()));
+    }
+}

@@ -1,0 +1,79 @@
+//! The [`Communicator`] trait: what a Krylov kernel needs from the
+//! collective layer — nothing more than rank identity and a fused
+//! sum-all-reduce.
+//!
+//! Two implementations ship: [`NullComm`] (serial; every collective is
+//! the identity and costs nothing) and `distributed::LocalComm` (the
+//! in-process NCCL stand-in whose rounds and bytes are accounted).
+//! Kernels written against this trait therefore run serially and
+//! distributed from the one body, and the *number* of `all_reduce`
+//! calls per iteration is the latency model the pipelined-CG ablation
+//! measures.
+
+/// Collective communication surface of the Krylov kernels.
+pub trait Communicator {
+    /// This rank's index in `[0, size)`.
+    fn rank(&self) -> usize;
+
+    /// Number of ranks in the team.
+    fn size(&self) -> usize;
+
+    /// Fused in-place sum-all-reduce: after the call every rank holds
+    /// the team-wide elementwise sum.  One call is ONE reduction round
+    /// (one latency unit) regardless of `xs.len()` — NCCL expresses
+    /// this as a single all_reduce over a packed buffer.
+    fn all_reduce(&self, xs: &mut [f64]);
+
+    /// Scalar convenience over [`Communicator::all_reduce`].
+    fn all_reduce_sum(&self, x: f64) -> f64 {
+        let mut buf = [x];
+        self.all_reduce(&mut buf);
+        buf[0]
+    }
+
+    /// Bytes this rank has sent so far (0 for serial communicators).
+    fn bytes_sent(&self) -> u64 {
+        0
+    }
+
+    /// Completed reduction rounds so far (latency units; 0 for serial).
+    fn reduce_rounds(&self) -> u64 {
+        0
+    }
+}
+
+/// The serial communicator: a team of one.  `all_reduce` is the
+/// identity and compiles to nothing, so kernels pay zero cost for being
+/// written distributed-first.
+pub struct NullComm;
+
+impl Communicator for NullComm {
+    fn rank(&self) -> usize {
+        0
+    }
+
+    fn size(&self) -> usize {
+        1
+    }
+
+    #[inline]
+    fn all_reduce(&self, _xs: &mut [f64]) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn null_comm_is_identity() {
+        let c = NullComm;
+        assert_eq!(c.rank(), 0);
+        assert_eq!(c.size(), 1);
+        let mut xs = [1.5, -2.0];
+        c.all_reduce(&mut xs);
+        assert_eq!(xs, [1.5, -2.0]);
+        assert_eq!(c.all_reduce_sum(3.25), 3.25);
+        assert_eq!(c.bytes_sent(), 0);
+        assert_eq!(c.reduce_rounds(), 0);
+    }
+}

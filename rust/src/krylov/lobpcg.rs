@@ -1,0 +1,219 @@
+//! LOBPCG (Knyazev 2001) in the stabilized orthogonal-basis form,
+//! written once over ([`LinearOperator`], [`Communicator`]) — the
+//! paper's §3.3 point made literal: the only non-local operations are
+//! the operator apply and the inner products, so the serial and
+//! distributed eigensolvers are ONE body.
+//!
+//! Per-rank data layout: every tall vector (iterates X, residuals W,
+//! directions P, basis S) is the rank's owned slice; the Rayleigh–Ritz
+//! problem `T = S^T A S` is assembled from all-reduced inner products
+//! and solved redundantly on every rank (dense d x d with d <= 3k), so
+//! all ranks stay in lockstep without broadcasts.
+
+use super::{gdot, Communicator, LinearOperator};
+use crate::eigen::dense_sym::{jacobi_eigh, matmul};
+use crate::eigen::{EigResult, LobpcgOpts};
+use crate::iterative::Precond;
+use crate::util::Prng;
+
+/// `k` smallest eigenpairs of the symmetric operator `a` with rank-local
+/// preconditioner `m`.  Vectors in the result are this rank's owned
+/// slices (globally unit-norm).
+pub fn lobpcg(
+    a: &dyn LinearOperator,
+    m: &dyn Precond,
+    k: usize,
+    comm: &dyn Communicator,
+    opts: &LobpcgOpts,
+) -> EigResult {
+    let n = a.n_own();
+    let n_ext = a.n_ext();
+    let n_glob = comm.all_reduce_sum(n as f64) as usize;
+    assert!(k >= 1 && 3 * k < n_glob, "lobpcg needs 3k < n");
+    // rank-deterministic start vectors: every rank generates ITS slice
+    // (rank 0 under NullComm reproduces the serial stream exactly)
+    let mut rng = Prng::new(opts.seed ^ ((comm.rank() as u64) << 32));
+
+    let mut x: Vec<Vec<f64>> = (0..k).map(|_| rng.normal_vec(n)).collect();
+    orthonormalize(&mut x, comm);
+    let mut p: Vec<Vec<f64>> = Vec::new();
+
+    let mut values = vec![0f64; k];
+    let mut iters = 0;
+    let mut residuals = vec![f64::INFINITY; k];
+
+    let mut scratch_ext = vec![0f64; n_ext];
+    let mut w_buf = vec![0f64; n];
+    let spmv = |a: &dyn LinearOperator, xi: &[f64], scratch: &mut Vec<f64>, out: &mut Vec<f64>| {
+        scratch[..n].copy_from_slice(xi);
+        a.apply(scratch, out);
+    };
+
+    for it in 0..opts.max_iters {
+        iters = it + 1;
+        // Rayleigh quotients + residuals
+        let ax: Vec<Vec<f64>> = x
+            .iter()
+            .map(|xi| {
+                spmv(a, xi, &mut scratch_ext, &mut w_buf);
+                w_buf.clone()
+            })
+            .collect();
+        let mut ws: Vec<Vec<f64>> = Vec::with_capacity(k);
+        let mut worst = 0.0f64;
+        for j in 0..k {
+            let lam = gdot(comm, &x[j], &ax[j]);
+            values[j] = lam;
+            let r: Vec<f64> = (0..n).map(|i| ax[j][i] - lam * x[j][i]).collect();
+            let rn = gdot(comm, &r, &r).sqrt();
+            residuals[j] = rn;
+            worst = worst.max(rn / lam.abs().max(1.0));
+            let mut z = vec![0f64; n];
+            m.apply(&r, &mut z);
+            ws.push(z);
+        }
+        if worst < opts.tol {
+            break;
+        }
+        // basis S = [X, W, P], orthonormalized with deflation of
+        // near-dependent directions
+        let mut s: Vec<Vec<f64>> = Vec::with_capacity(3 * k);
+        s.extend(x.iter().cloned());
+        s.extend(ws);
+        s.extend(p.iter().cloned());
+        orthonormalize(&mut s, comm);
+        let d = s.len();
+        // projected operator T = S^T A S (row-major d x d, replicated)
+        let as_: Vec<Vec<f64>> = s
+            .iter()
+            .map(|si| {
+                spmv(a, si, &mut scratch_ext, &mut w_buf);
+                w_buf.clone()
+            })
+            .collect();
+        let mut t = vec![0f64; d * d];
+        for i in 0..d {
+            for j in i..d {
+                let v = gdot(comm, &s[i], &as_[j]);
+                t[i * d + j] = v;
+                t[j * d + i] = v;
+            }
+        }
+        let (_tvals, tvecs) = jacobi_eigh(&t, d);
+        // new X = S * C[:, :k] — a row-local (owned-slice) product
+        let mut c = vec![0f64; d * k];
+        for (j, tv) in tvecs.iter().take(k).enumerate() {
+            for i in 0..d {
+                c[i * k + j] = tv[i];
+            }
+        }
+        let sc = {
+            // S as (n_own x d) row-major
+            let mut sm = vec![0f64; n * d];
+            for (j, sj) in s.iter().enumerate() {
+                for i in 0..n {
+                    sm[i * d + j] = sj[i];
+                }
+            }
+            matmul(&sm, &c, n, d, k)
+        };
+        let x_new: Vec<Vec<f64>> = (0..k)
+            .map(|j| (0..n).map(|i| sc[i * k + j]).collect())
+            .collect();
+        // P = X_new - X (X^T X_new): the locally-optimal direction memory
+        let mut p_new: Vec<Vec<f64>> = Vec::with_capacity(k);
+        for j in 0..k {
+            let mut pj = x_new[j].clone();
+            for xi in &x {
+                let cij = gdot(comm, xi, &x_new[j]);
+                for l in 0..n {
+                    pj[l] -= cij * xi[l];
+                }
+            }
+            let np = gdot(comm, &pj, &pj).sqrt();
+            if np > 1e-12 {
+                for v in pj.iter_mut() {
+                    *v /= np;
+                }
+                p_new.push(pj);
+            }
+        }
+        x = x_new;
+        orthonormalize(&mut x, comm);
+        p = p_new;
+    }
+
+    // sort pairs ascending by value
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by(|&i, &j| values[i].partial_cmp(&values[j]).unwrap());
+    EigResult {
+        values: order.iter().map(|&i| values[i]).collect(),
+        vectors: order.iter().map(|&i| x[i].clone()).collect(),
+        iters,
+        residuals: order.iter().map(|&i| residuals[i]).collect(),
+    }
+}
+
+/// In-place modified Gram–Schmidt with globally-reduced inner products;
+/// drops near-dependent vectors.  Identical deflation thresholds on
+/// every rank keep the basis dimension in lockstep.
+fn orthonormalize(vs: &mut Vec<Vec<f64>>, comm: &dyn Communicator) {
+    let mut out: Vec<Vec<f64>> = Vec::with_capacity(vs.len());
+    for v in vs.drain(..) {
+        let mut w = v;
+        for _ in 0..2 {
+            for u in &out {
+                let c = gdot(comm, &w, u);
+                if c != 0.0 {
+                    for i in 0..w.len() {
+                        w[i] -= c * u[i];
+                    }
+                }
+            }
+        }
+        let nw = gdot(comm, &w, &w).sqrt();
+        if nw > 1e-10 {
+            for x in w.iter_mut() {
+                *x /= nw;
+            }
+            out.push(w);
+        }
+    }
+    *vs = out;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::iterative::precond::Jacobi;
+    use crate::krylov::NullComm;
+    use crate::sparse::poisson::poisson2d;
+
+    #[test]
+    fn generic_lobpcg_matches_lanczos_under_null_comm() {
+        let g = 10;
+        let sys = poisson2d(g, None);
+        let m = Jacobi::new(&sys.matrix).unwrap();
+        let r = lobpcg(
+            &sys.matrix,
+            &m,
+            4,
+            &NullComm,
+            &LobpcgOpts {
+                tol: 1e-9,
+                max_iters: 300,
+                seed: 0,
+            },
+        );
+        let l = crate::eigen::lanczos(
+            &sys.matrix,
+            4,
+            crate::eigen::lanczos::Which::Smallest,
+            90,
+            0,
+        );
+        for (a, b) in r.values.iter().zip(&l.values) {
+            assert!((a - b).abs() < 1e-6 * b, "{a} vs {b}");
+        }
+    }
+}

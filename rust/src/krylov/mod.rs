@@ -1,0 +1,65 @@
+//! Unified Krylov substrate: every Krylov recurrence in the crate is
+//! written ONCE here, generic over a [`LinearOperator`] (how `y = A x`
+//! is applied — serial CSR, matrix-free stencil, matrix-free Newton
+//! Jacobian, or halo-exchanged distributed SpMV) and a [`Communicator`]
+//! (how inner products become global — the zero-cost [`NullComm`] for
+//! serial, the in-process `LocalComm` for rank teams, NCCL in the
+//! paper's deployment).
+//!
+//! This is the paper's §3.3 observation turned into architecture: a
+//! distributed solve is the *same* recurrence with halo-exchanged SpMV
+//! (Eq. 5) and all-reduced dot products, so the serial and distributed
+//! layers must not maintain two solver copies.  `iterative/`, `eigen/`,
+//! `backend/native_iter`, `nonlinear/newton` (Newton–Krylov) and
+//! `distributed/dist_solver` are all thin wrappers over these kernels.
+//!
+//! Communication structure is part of each kernel's contract and is
+//! pinned by counter tests on `LocalComm`:
+//!
+//! * [`cg`] — one halo exchange (inside the operator apply) plus TWO
+//!   reduction rounds per iteration: `<p,Ap>`, then `<r,z>` and `<r,r>`
+//!   packed into one fused round (Appendix C, Algorithm 1).
+//! * [`cg_pipelined`] — Chronopoulos–Gear CG: ONE fused round per
+//!   iteration (`<r,u>`, `<w,u>`, `<r,r>` packed).
+//! * [`bicgstab`] — five rounds (`<t,t>`/`<t,s>` ride one fused round).
+//! * [`gmres`] / [`minres`] / [`lobpcg`] — one round per inner product
+//!   (the Gram–Schmidt/Lanczos recurrences are sequential).
+//!
+//! Under [`NullComm`] every kernel executes the floating-point schedule
+//! of the pre-unification serial solvers (each body is the transcribed
+//! historical loop; `tests/krylov_equivalence.rs` pins CG and BiCGStab
+//! against frozen reference copies — same iterate counts, solutions to
+//! 1e-12 — and the remaining kernels are covered by their
+//! behavior-pinning unit tests).
+
+pub mod bicgstab;
+pub mod cg;
+pub mod comm;
+pub mod gmres;
+pub mod lobpcg;
+pub mod minres;
+pub mod op;
+
+pub use bicgstab::bicgstab;
+pub use cg::{cg, cg_pipelined};
+pub use comm::{Communicator, NullComm};
+pub use gmres::gmres;
+pub use lobpcg::lobpcg;
+pub use minres::minres;
+pub use op::{LinearOperator, SerialOp, ShiftedOp, TransposedOp};
+
+use crate::util::dot;
+
+/// Globally-reduced inner product of two owned-layout slices: ONE
+/// reduction round.
+#[inline]
+pub fn gdot(comm: &dyn Communicator, a: &[f64], b: &[f64]) -> f64 {
+    comm.all_reduce_sum(dot(a, b))
+}
+
+/// Globally-reduced Euclidean norm (matches `util::norm2` bitwise under
+/// [`NullComm`]: both are `dot(x,x).sqrt()`).
+#[inline]
+pub fn gnorm(comm: &dyn Communicator, x: &[f64]) -> f64 {
+    gdot(comm, x, x).sqrt()
+}

@@ -1,0 +1,203 @@
+//! The [`LinearOperator`] trait: how a Krylov kernel applies `A` (and
+//! `A^T`) in the *extended* vector layout that distributed operators
+//! need.
+//!
+//! Layout contract: a rank owns `n_own` entries; the operator may need
+//! `n_ext >= n_own` slots of workspace, where `[n_own, n_ext)` are halo
+//! copies of remote entries the apply refreshes itself (serial
+//! operators have `n_ext == n_own` and the extended layout degenerates
+//! to the plain one).  Kernels allocate any vector that feeds `apply`
+//! at length `n_ext`, keep its owned prefix current, and never read the
+//! halo tail themselves.
+//!
+//! Implementations here: [`SerialOp`] (bridge from the crate's existing
+//! [`LinOp`] matrix/matrix-free operators), [`ShiftedOp`] (`A - sigma
+//! I`, local in any layout) and [`TransposedOp`] (`A^T`, for adjoint
+//! solves through the same kernels).  The distributed implementation
+//! (`DistOp`: halo-exchanged SpMV over a `DistCsr` share, Eq. 5-6)
+//! lives in `distributed::op` next to the halo machinery.
+
+use crate::iterative::LinOp;
+use crate::sparse::Csr;
+
+/// A square linear operator in the extended (owned + halo) layout.
+pub trait LinearOperator {
+    /// Entries owned by this rank: the length of result vectors and of
+    /// the owned prefix of extended-layout inputs.
+    fn n_own(&self) -> usize;
+
+    /// Extended workspace length (owned + halo); `n_own` for serial.
+    fn n_ext(&self) -> usize {
+        self.n_own()
+    }
+
+    /// `y = A x`.  `x_ext[..n_own]` holds the owned entries; the
+    /// operator may refresh `x_ext[n_own..]` (halo slots) as a side
+    /// effect — which is exactly the one halo exchange per SpMV of the
+    /// paper's Algorithm 1.
+    fn apply(&self, x_ext: &mut [f64], y_own: &mut [f64]);
+
+    /// `gx = A^T gy`, owned layout on both sides (the transposed-halo
+    /// backward path, Eq. 6).  Default panics for operators without an
+    /// adjoint, mirroring [`LinOp::apply_t`].
+    fn apply_adjoint(&self, _gy_own: &[f64], _gx_own: &mut [f64]) {
+        panic!("apply_adjoint not implemented for this operator");
+    }
+}
+
+/// A serial CSR matrix is a [`LinearOperator`] with an empty halo.
+impl LinearOperator for Csr {
+    fn n_own(&self) -> usize {
+        self.nrows
+    }
+
+    fn apply(&self, x_ext: &mut [f64], y_own: &mut [f64]) {
+        self.spmv(x_ext, y_own);
+    }
+
+    fn apply_adjoint(&self, gy_own: &[f64], gx_own: &mut [f64]) {
+        self.spmv_t(gy_own, gx_own);
+    }
+}
+
+/// Bridge from any [`LinOp`] (CSR, matrix-free stencil, autograd-JVP
+/// Jacobians, deflated operators...) to the extended-layout trait.  The
+/// serial entry points in `iterative/` and `eigen/` wrap their operator
+/// in this and pair it with [`super::NullComm`].
+pub struct SerialOp<'a>(pub &'a dyn LinOp);
+
+impl LinearOperator for SerialOp<'_> {
+    fn n_own(&self) -> usize {
+        self.0.nrows()
+    }
+
+    fn apply(&self, x_ext: &mut [f64], y_own: &mut [f64]) {
+        self.0.apply(x_ext, y_own);
+    }
+
+    fn apply_adjoint(&self, gy_own: &[f64], gx_own: &mut [f64]) {
+        self.0.apply_t(gy_own, gx_own);
+    }
+}
+
+/// `A - sigma I` over any operator, serial or distributed: the shift
+/// acts on owned entries only, so it composes with halo exchange
+/// unchanged (used for shift-invert style spectral probes and the
+/// symmetric-indefinite MINRES scenarios).
+pub struct ShiftedOp<'a> {
+    pub op: &'a dyn LinearOperator,
+    pub sigma: f64,
+}
+
+impl LinearOperator for ShiftedOp<'_> {
+    fn n_own(&self) -> usize {
+        self.op.n_own()
+    }
+
+    fn n_ext(&self) -> usize {
+        self.op.n_ext()
+    }
+
+    fn apply(&self, x_ext: &mut [f64], y_own: &mut [f64]) {
+        self.op.apply(x_ext, y_own);
+        for (yi, xi) in y_own.iter_mut().zip(x_ext.iter()) {
+            *yi -= self.sigma * xi;
+        }
+    }
+
+    fn apply_adjoint(&self, gy_own: &[f64], gx_own: &mut [f64]) {
+        self.op.apply_adjoint(gy_own, gx_own);
+        for (gi, yi) in gx_own.iter_mut().zip(gy_own) {
+            *gi -= self.sigma * yi;
+        }
+    }
+}
+
+/// `A^T` as a [`LinearOperator`]: routes adjoint solves (`A^T lambda =
+/// dL/dx`, Eq. 3) through the same generic kernels as forward solves.
+pub struct TransposedOp<'a>(pub &'a dyn LinearOperator);
+
+impl LinearOperator for TransposedOp<'_> {
+    fn n_own(&self) -> usize {
+        self.0.n_own()
+    }
+
+    fn apply(&self, x_ext: &mut [f64], y_own: &mut [f64]) {
+        self.0.apply_adjoint(&x_ext[..self.0.n_own()], y_own);
+    }
+
+    fn apply_adjoint(&self, gy_own: &[f64], gx_own: &mut [f64]) {
+        // (A^T)^T = A; needs the extended layout only for the halo tail,
+        // which serial operators do not have.
+        let mut x_ext = vec![0.0; self.0.n_ext()];
+        x_ext[..gy_own.len()].copy_from_slice(gy_own);
+        self.0.apply(&mut x_ext, gx_own);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::graphs::random_nonsymmetric;
+    use crate::sparse::poisson::poisson2d;
+    use crate::util::{self, Prng};
+
+    #[test]
+    fn csr_and_serial_op_agree() {
+        let sys = poisson2d(8, None);
+        let mut rng = Prng::new(0);
+        let x = rng.normal_vec(64);
+        let mut x_ext = x.clone();
+        let mut y1 = vec![0.0; 64];
+        let mut y2 = vec![0.0; 64];
+        LinearOperator::apply(&sys.matrix, &mut x_ext, &mut y1);
+        SerialOp(&sys.matrix).apply(&mut x_ext, &mut y2);
+        assert_eq!(y1, y2);
+        assert_eq!(y1, sys.matrix.matvec(&x));
+        assert_eq!(LinearOperator::n_own(&sys.matrix), 64);
+        assert_eq!(LinearOperator::n_ext(&sys.matrix), 64);
+    }
+
+    #[test]
+    fn shifted_op_subtracts_sigma() {
+        let sys = poisson2d(6, None);
+        let mut rng = Prng::new(1);
+        let x = rng.normal_vec(36);
+        let op = ShiftedOp {
+            op: &sys.matrix,
+            sigma: 2.5,
+        };
+        let mut x_ext = x.clone();
+        let mut y = vec![0.0; 36];
+        op.apply(&mut x_ext, &mut y);
+        let want: Vec<f64> = sys
+            .matrix
+            .matvec(&x)
+            .iter()
+            .zip(&x)
+            .map(|(ax, xi)| ax - 2.5 * xi)
+            .collect();
+        assert!(util::max_abs_diff(&y, &want) < 1e-14);
+    }
+
+    #[test]
+    fn transposed_op_is_adjoint() {
+        let mut rng = Prng::new(2);
+        let a = random_nonsymmetric(&mut rng, 20, 3);
+        let x = rng.normal_vec(20);
+        let y = rng.normal_vec(20);
+        let t = TransposedOp(&a);
+        // <A^T x, y> == <x, A y>
+        let mut atx = vec![0.0; 20];
+        let mut x_ext = x.clone();
+        t.apply(&mut x_ext, &mut atx);
+        let ay = a.matvec(&y);
+        let lhs = util::dot(&atx, &y);
+        let rhs = util::dot(&x, &ay);
+        assert!((lhs - rhs).abs() < 1e-10 * lhs.abs().max(1.0));
+        // apply_adjoint of the transpose is A itself
+        let mut back = vec![0.0; 20];
+        t.apply_adjoint(&y, &mut back);
+        assert!(util::max_abs_diff(&back, &ay) < 1e-14);
+    }
+}

@@ -12,9 +12,10 @@
 //!   ([`tensor`]), five interchangeable solver backends with auto-dispatch
 //!   ([`backend`]), a reverse-mode autograd engine ([`autograd`]), the
 //!   implicit-function-theorem adjoint framework ([`adjoint`]), the
-//!   distributed domain-decomposition layer with autograd-compatible halo
-//!   exchange ([`distributed`]), and a solve service/router
-//!   ([`coordinator`]).
+//!   unified Krylov substrate written once over `LinearOperator x
+//!   Communicator` ([`krylov`]), the distributed domain-decomposition
+//!   layer with autograd-compatible halo exchange ([`distributed`]),
+//!   and a solve service/router ([`coordinator`]).
 //! * **L2 (python/compile/model.py)** — JAX compute graphs (fused
 //!   Jacobi-PCG, dense Cholesky solve, SpMV entry points) AOT-lowered to
 //!   HLO text artifacts.
@@ -51,6 +52,7 @@ pub mod error;
 pub mod factor_cache;
 pub mod gradcheck;
 pub mod iterative;
+pub mod krylov;
 pub mod metrics;
 pub mod nonlinear;
 pub mod optim;

@@ -187,7 +187,7 @@ fn cmd_serve_sim(args: &Args) {
     let workers = args.usize_or("workers", 4);
     let d = dispatcher(false);
     let svc = SolveService::start(
-        d,
+        d.clone(),
         ServiceConfig {
             workers,
             ..Default::default()
@@ -232,6 +232,24 @@ fn cmd_serve_sim(args: &Args) {
         lat[lat.len() * 99 / 100] * 1e3,
         stats.batches,
     );
+    // factor-cache effectiveness across the request stream.  Counters
+    // land in TWO registries: the dispatcher's (single solves routed
+    // through solver_fn / native-direct) and the service's (the
+    // factorize-once batched path) — sum both or the report undercounts
+    // the dominant batched traffic.
+    let count = |name: &str| d.metrics.get(name) + svc.metrics.get(name);
+    let hits = count("factor_cache.hit.numeric") + count("factor_cache.hit.symbolic");
+    let misses = count("factor_cache.miss");
+    let lookups = hits + misses;
+    println!(
+        "factor cache: {:.0}% hit rate ({} numeric + {} symbolic hits, {} misses, {} evictions, {} refactorizations)",
+        if lookups > 0 { 100.0 * hits as f64 / lookups as f64 } else { 0.0 },
+        count("factor_cache.hit.numeric"),
+        count("factor_cache.hit.symbolic"),
+        misses,
+        count("factor_cache.eviction"),
+        count("factor_cache.numeric_factorizations"),
+    );
     svc.shutdown();
 }
 
@@ -261,6 +279,7 @@ fn cmd_dist(args: &Args) {
             .sum::<f64>()
             .sqrt()
     };
+    let iters = reports[0].iters.max(1);
     println!(
         "dist-cg g={g} n={} ranks={ranks} iters={} residual={:.2e} time={:.1} ms",
         g * g,
@@ -268,11 +287,17 @@ fn cmd_dist(args: &Args) {
         res,
         secs * 1e3
     );
+    println!(
+        "  reductions: {} rounds total ({:.2} rounds/iter — Algorithm 1 pins 2 for standard CG)",
+        reports[0].reduce_rounds,
+        reports[0].reduce_rounds as f64 / iters as f64,
+    );
     for (p, r) in reports.iter().enumerate() {
         println!(
-            "  rank {p}: mem {:.2} MB, sent {:.2} MB",
+            "  rank {p}: mem {:.2} MB, sent {:.2} MB ({:.1} KB/iter)",
             r.peak_bytes as f64 / 1e6,
-            r.bytes_sent as f64 / 1e6
+            r.bytes_sent as f64 / 1e6,
+            r.bytes_sent as f64 / iters as f64 / 1e3,
         );
     }
 }

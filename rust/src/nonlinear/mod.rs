@@ -11,10 +11,53 @@ pub mod newton;
 pub mod picard;
 
 pub use anderson::anderson;
-pub use newton::{newton, NewtonOpts};
+pub use newton::{newton, newton_krylov, newton_krylov_serial, NewtonOpts};
 pub use picard::{picard, PicardOpts};
 
 use crate::sparse::Csr;
+
+/// Rank-local view of a nonlinear residual for matrix-free
+/// Newton–Krylov over the unified substrate: the residual is evaluated
+/// on owned rows and the Jacobian is *applied*, never assembled, in the
+/// same extended (owned + halo) layout the [`crate::krylov`] kernels
+/// use.  Serial residuals get this view through [`SerialResidual`];
+/// `distributed::DistPointwiseResidual` is the halo-exchanged
+/// implementation.
+pub trait KrylovResidual {
+    /// Entries owned by this rank.
+    fn n_own(&self) -> usize;
+
+    /// Extended workspace length (owned + halo); `n_own` for serial.
+    fn n_ext(&self) -> usize {
+        self.n_own()
+    }
+
+    /// `out = F(u)` on owned rows.  `u_ext[..n_own]` is current; the
+    /// implementation may refresh the halo tail (one exchange).
+    fn eval(&self, u_ext: &mut [f64], out_own: &mut [f64]);
+
+    /// `y = J(u) v` on owned rows — matrix-free.  `v_ext`'s halo may be
+    /// refreshed; `u_ext`'s halo is current from the last `eval`.
+    fn jv(&self, u_ext: &[f64], v_ext: &mut [f64], y_own: &mut [f64]);
+}
+
+/// Bridge from any serial [`Residual`] (JVP-capable) to the rank-local
+/// [`KrylovResidual`] view.
+pub struct SerialResidual<'a>(pub &'a dyn Residual);
+
+impl KrylovResidual for SerialResidual<'_> {
+    fn n_own(&self) -> usize {
+        self.0.dim()
+    }
+
+    fn eval(&self, u_ext: &mut [f64], out_own: &mut [f64]) {
+        self.0.eval(u_ext, out_own);
+    }
+
+    fn jv(&self, u_ext: &[f64], v_ext: &mut [f64], y_own: &mut [f64]) {
+        self.0.jvp(u_ext, v_ext, y_own);
+    }
+}
 
 /// A nonlinear residual F(u; theta) = 0 with differentiable structure.
 ///

@@ -1,0 +1,391 @@
+//! Equivalence suite for the unified Krylov substrate.
+//!
+//! Two contracts are pinned here:
+//!
+//! 1. **Serial parity.**  The generic kernels under `NullComm` must
+//!    reproduce the PRE-unification serial solvers: the reference
+//!    loops below are frozen copies of the historical `iterative::cg`
+//!    and `iterative::bicgstab` bodies, and the unified entry points
+//!    must match them in iterate count and solution (1e-12 relative).
+//! 2. **Distributed parity.**  The `dist_*` wrappers must match the
+//!    serial solution on Poisson2D across 1/2/4 ranks — including the
+//!    NEW distributed GMRES and MINRES paths and the transposed-halo
+//!    adjoint — with the per-iteration reduction structure unchanged
+//!    (standard CG: 2 rounds; pipelined: 1; pinned in
+//!    `distributed::dist_solver` on `LocalComm`).
+
+use std::sync::Arc;
+
+use rsla::distributed::{
+    dist_bicgstab, dist_cg, dist_cg_pipelined, dist_gmres, dist_minres, dist_solve_adjoint,
+    run_ranks, DistCsr, DistIterOpts,
+};
+use rsla::distributed::halo::distribute;
+use rsla::distributed::partition::{partition, Partition, PartitionStrategy};
+use rsla::iterative::{bicgstab, cg, IterOpts, Jacobi, LinOp, Precond};
+use rsla::sparse::poisson::{kappa_star, poisson2d};
+use rsla::sparse::{Coo, Csr};
+use rsla::util::{self, axpy_inplace, dot, xpby_inplace, Prng};
+
+// ------------------------------------------------------------------
+// 1. Frozen pre-refactor serial reference loops
+// ------------------------------------------------------------------
+
+/// The historical serial CG body, frozen verbatim (modulo MemTracker).
+fn reference_cg(a: &dyn LinOp, b: &[f64], m: &dyn Precond, opts: &IterOpts) -> (Vec<f64>, usize, f64) {
+    let n = a.nrows();
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec();
+    let mut z = vec![0.0; n];
+    m.apply(&r, &mut z);
+    let mut p = z.clone();
+    let mut ap = vec![0.0; n];
+    let mut rz = dot(&r, &z);
+    let mut rr = dot(&r, &r);
+    let tol2 = opts.tol * opts.tol;
+    let mut iters = 0;
+    while iters < opts.max_iters && rr > tol2 {
+        a.apply(&p, &mut ap);
+        let pap = dot(&p, &ap);
+        if pap <= 0.0 || !pap.is_finite() {
+            break;
+        }
+        let alpha = rz / pap;
+        axpy_inplace(alpha, &p, &mut x);
+        axpy_inplace(-alpha, &ap, &mut r);
+        m.apply(&r, &mut z);
+        let rz_new = dot(&r, &z);
+        let beta = rz_new / rz;
+        xpby_inplace(&z, beta, &mut p);
+        rz = rz_new;
+        rr = dot(&r, &r);
+        iters += 1;
+    }
+    (x, iters, rr.sqrt())
+}
+
+/// The historical serial BiCGStab body, frozen verbatim.
+fn reference_bicgstab(
+    a: &dyn LinOp,
+    b: &[f64],
+    m: &dyn Precond,
+    opts: &IterOpts,
+) -> (Vec<f64>, usize, f64) {
+    let n = a.nrows();
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec();
+    let r0 = b.to_vec();
+    let mut p = vec![0.0; n];
+    let mut v = vec![0.0; n];
+    let mut s = vec![0.0; n];
+    let mut t = vec![0.0; n];
+    let mut phat = vec![0.0; n];
+    let mut shat = vec![0.0; n];
+    let mut rho = 1.0f64;
+    let mut alpha = 1.0f64;
+    let mut omega = 1.0f64;
+    let mut rr = dot(&r, &r);
+    let tol2 = opts.tol * opts.tol;
+    let mut iters = 0;
+    while iters < opts.max_iters && rr > tol2 {
+        let rho_new = dot(&r0, &r);
+        if rho_new == 0.0 {
+            break;
+        }
+        if iters == 0 {
+            p.copy_from_slice(&r);
+        } else {
+            let beta = (rho_new / rho) * (alpha / omega);
+            for i in 0..n {
+                p[i] = r[i] + beta * (p[i] - omega * v[i]);
+            }
+        }
+        rho = rho_new;
+        m.apply(&p, &mut phat);
+        a.apply(&phat, &mut v);
+        let r0v = dot(&r0, &v);
+        if r0v == 0.0 {
+            break;
+        }
+        alpha = rho / r0v;
+        for i in 0..n {
+            s[i] = r[i] - alpha * v[i];
+        }
+        let ss = dot(&s, &s);
+        if ss <= tol2 {
+            axpy_inplace(alpha, &phat, &mut x);
+            rr = ss;
+            iters += 1;
+            break;
+        }
+        m.apply(&s, &mut shat);
+        a.apply(&shat, &mut t);
+        let tt = dot(&t, &t);
+        if tt == 0.0 {
+            break;
+        }
+        omega = dot(&t, &s) / tt;
+        axpy_inplace(alpha, &phat, &mut x);
+        axpy_inplace(omega, &shat, &mut x);
+        for i in 0..n {
+            r[i] = s[i] - omega * t[i];
+        }
+        rr = dot(&r, &r);
+        iters += 1;
+        if omega == 0.0 {
+            break;
+        }
+    }
+    (x, iters, rr.sqrt())
+}
+
+#[test]
+fn unified_cg_under_null_comm_reproduces_pre_refactor_serial_cg() {
+    for (g, seed) in [(16usize, 0u64), (24, 1), (32, 2)] {
+        let sys = poisson2d(g, Some(&kappa_star(g)));
+        let mut rng = Prng::new(seed);
+        let b = rng.normal_vec(g * g);
+        let m = Jacobi::new(&sys.matrix).unwrap();
+        let opts = IterOpts::default();
+        let (x_ref, iters_ref, res_ref) = reference_cg(&sys.matrix, &b, &m, &opts);
+        let got = cg(&sys.matrix, &b, &m, &opts, None);
+        assert_eq!(
+            got.iters, iters_ref,
+            "g={g}: iterate count changed by the unification"
+        );
+        assert!(
+            util::rel_l2(&got.x, &x_ref) < 1e-12,
+            "g={g}: solution drifted from the pre-refactor serial CG"
+        );
+        assert!((got.residual - res_ref).abs() <= 1e-12 * (1.0 + res_ref));
+    }
+}
+
+#[test]
+fn unified_bicgstab_under_null_comm_reproduces_pre_refactor_serial() {
+    let mut rng = Prng::new(7);
+    let a = rsla::sparse::graphs::random_nonsymmetric(&mut rng, 120, 5);
+    let b = rng.normal_vec(120);
+    let m = Jacobi::new(&a).unwrap();
+    let opts = IterOpts::default();
+    let (x_ref, iters_ref, _) = reference_bicgstab(&a, &b, &m, &opts);
+    let got = bicgstab(&a, &b, &m, &opts, None);
+    assert_eq!(got.iters, iters_ref);
+    assert!(util::rel_l2(&got.x, &x_ref) < 1e-12);
+}
+
+// ------------------------------------------------------------------
+// 2. Distributed parity at 1/2/4 ranks
+// ------------------------------------------------------------------
+
+fn dist_setup(g: usize, nparts: usize, shift: f64) -> (Csr, Partition, Arc<Vec<DistCsr>>) {
+    let sys = poisson2d(g, Some(&kappa_star(g)));
+    let a = if shift == 0.0 {
+        sys.matrix.clone()
+    } else {
+        let n = g * g;
+        let mut coo = Coo::with_capacity(n, n, sys.matrix.nnz());
+        for r in 0..n {
+            let (cols, vals) = sys.matrix.row(r);
+            for (c, v) in cols.iter().zip(vals) {
+                coo.push(r, *c, if *c == r { v - shift } else { *v });
+            }
+        }
+        coo.to_csr()
+    };
+    let part = partition(&a, Some(&sys.coords), nparts, PartitionStrategy::Contiguous);
+    let a_perm = a.permute_sym(&part.perm);
+    let shares = Arc::new(distribute(&a_perm, &part));
+    (a_perm, part, shares)
+}
+
+#[test]
+fn dist_cg_and_pipelined_match_serial_across_rank_counts() {
+    let g = 16;
+    for nparts in [1usize, 2, 4] {
+        let (a_perm, part, shares) = dist_setup(g, nparts, 0.0);
+        let mut rng = Prng::new(40 + nparts as u64);
+        let b = Arc::new(rng.normal_vec(g * g));
+        let x_ref = rsla::direct::direct_solve(&a_perm, &b).unwrap();
+        let part = Arc::new(part);
+
+        for pipelined in [false, true] {
+            let (bc, p2, ps) = (b.clone(), part.clone(), shares.clone());
+            let reports = run_ranks(nparts, move |c| {
+                let p = c.rank();
+                let range = p2.rank_range(p);
+                let opts = DistIterOpts {
+                    tol: 1e-11,
+                    ..Default::default()
+                };
+                if pipelined {
+                    dist_cg_pipelined(&ps[p], &bc[range], &c, &opts)
+                } else {
+                    dist_cg(&ps[p], &bc[range], &c, &opts)
+                }
+            });
+            assert!(reports.iter().all(|r| r.converged));
+            let x: Vec<f64> = reports.iter().flat_map(|r| r.x_own.clone()).collect();
+            assert!(
+                util::rel_l2(&x, &x_ref) < 1e-7,
+                "ranks={nparts} pipelined={pipelined}"
+            );
+        }
+    }
+}
+
+#[test]
+fn dist_gmres_matches_serial_across_rank_counts() {
+    let g = 12;
+    for nparts in [1usize, 2, 4] {
+        let (a_perm, part, shares) = dist_setup(g, nparts, 0.0);
+        let mut rng = Prng::new(50 + nparts as u64);
+        let b = Arc::new(rng.normal_vec(g * g));
+        let x_ref = rsla::direct::direct_solve(&a_perm, &b).unwrap();
+        let part = Arc::new(part);
+        let (bc, p2, ps) = (b.clone(), part.clone(), shares.clone());
+        let reports = run_ranks(nparts, move |c| {
+            let p = c.rank();
+            let range = p2.rank_range(p);
+            dist_gmres(
+                &ps[p],
+                &bc[range],
+                40,
+                &c,
+                &DistIterOpts {
+                    tol: 1e-10,
+                    ..Default::default()
+                },
+            )
+        });
+        assert!(reports.iter().all(|r| r.converged), "ranks={nparts}");
+        let x: Vec<f64> = reports.iter().flat_map(|r| r.x_own.clone()).collect();
+        assert!(util::rel_l2(&x, &x_ref) < 1e-7, "ranks={nparts}");
+    }
+}
+
+#[test]
+fn dist_minres_solves_symmetric_indefinite_across_rank_counts() {
+    // shifted Poisson with the shift inside the spectrum: symmetric
+    // INDEFINITE — CG's assumption fails; distributed MINRES converges
+    // and matches the direct solution.
+    let g = 10;
+    let shift = 30.0;
+    for nparts in [1usize, 2, 4] {
+        let (a_perm, part, shares) = dist_setup(g, nparts, shift);
+        let mut rng = Prng::new(60 + nparts as u64);
+        let b = Arc::new(rng.normal_vec(g * g));
+        let x_ref = rsla::direct::direct_solve(&a_perm, &b).unwrap();
+        let part = Arc::new(part);
+        let (bc, p2, ps) = (b.clone(), part.clone(), shares.clone());
+        let reports = run_ranks(nparts, move |c| {
+            let p = c.rank();
+            let range = p2.rank_range(p);
+            dist_minres(
+                &ps[p],
+                &bc[range],
+                &c,
+                &DistIterOpts {
+                    tol: 1e-10,
+                    max_iters: 50_000,
+                    ..Default::default()
+                },
+            )
+        });
+        assert!(reports.iter().all(|r| r.converged), "ranks={nparts}");
+        let x: Vec<f64> = reports.iter().flat_map(|r| r.x_own.clone()).collect();
+        assert!(util::rel_l2(&x, &x_ref) < 1e-6, "ranks={nparts}");
+    }
+}
+
+#[test]
+fn dist_bicgstab_matches_serial_across_rank_counts() {
+    let g = 12;
+    for nparts in [1usize, 2, 4] {
+        let (a_perm, part, shares) = dist_setup(g, nparts, 0.0);
+        let mut rng = Prng::new(70 + nparts as u64);
+        let b = Arc::new(rng.normal_vec(g * g));
+        let x_ref = rsla::direct::direct_solve(&a_perm, &b).unwrap();
+        let part = Arc::new(part);
+        let (bc, p2, ps) = (b.clone(), part.clone(), shares.clone());
+        let reports = run_ranks(nparts, move |c| {
+            let p = c.rank();
+            let range = p2.rank_range(p);
+            dist_bicgstab(&ps[p], &bc[range], &c, &DistIterOpts::default())
+        });
+        let x: Vec<f64> = reports.iter().flat_map(|r| r.x_own.clone()).collect();
+        assert!(util::rel_l2(&x, &x_ref) < 1e-6, "ranks={nparts}");
+    }
+}
+
+#[test]
+fn transposed_halo_spmv_adjoint_matches_global_across_rank_counts() {
+    // pins the H^T (sum-at-owner) path itself: A^T x computed through
+    // TransposedOp over DistOp — i.e. dist_spmv_adjoint and
+    // halo_exchange_adjoint — must equal the global transpose product
+    // at every rank count.
+    use rsla::distributed::DistOp;
+    use rsla::krylov::{LinearOperator, TransposedOp};
+    let g = 11;
+    for nparts in [1usize, 2, 4] {
+        let (a_perm, part, shares) = dist_setup(g, nparts, 0.0);
+        let n = g * g;
+        let mut rng = Prng::new(90 + nparts as u64);
+        let x = Arc::new(rng.normal_vec(n));
+        let mut want = vec![0.0; n];
+        a_perm.spmv_t(&x, &mut want);
+        let part = Arc::new(part);
+        let (xc, p2, ps) = (x.clone(), part.clone(), shares.clone());
+        let results = run_ranks(nparts, move |c| {
+            let p = c.rank();
+            let range = p2.rank_range(p);
+            let op = DistOp::new(&ps[p], &c, 9_000);
+            let t = TransposedOp(&op);
+            let mut x_ext = vec![0.0; t.n_ext()];
+            x_ext[..range.len()].copy_from_slice(&xc[range.clone()]);
+            let mut y = vec![0.0; range.len()];
+            t.apply(&mut x_ext, &mut y);
+            y
+        });
+        let got: Vec<f64> = results.concat();
+        assert!(
+            util::max_abs_diff(&got, &want) < 1e-12,
+            "ranks={nparts}: transposed-halo A^T x diverged from global"
+        );
+    }
+}
+
+#[test]
+fn dist_adjoint_matches_serial_across_rank_counts() {
+    let g = 10;
+    for nparts in [1usize, 2, 4] {
+        let (a_perm, part, shares) = dist_setup(g, nparts, 0.0);
+        let n = g * g;
+        let mut rng = Prng::new(80 + nparts as u64);
+        let b = Arc::new(rng.normal_vec(n));
+        let gy = Arc::new(rng.normal_vec(n));
+        let x_ref = rsla::direct::direct_solve(&a_perm, &b).unwrap();
+        let lam_ref = rsla::direct::direct_solve(&a_perm, &gy).unwrap();
+        let part = Arc::new(part);
+        let (bc, gc, p2, ps) = (b.clone(), gy.clone(), part.clone(), shares.clone());
+        let results = run_ranks(nparts, move |c| {
+            let p = c.rank();
+            let range = p2.rank_range(p);
+            dist_solve_adjoint(
+                &ps[p],
+                &bc[range.clone()],
+                &gc[range],
+                &c,
+                &DistIterOpts {
+                    tol: 1e-12,
+                    max_iters: 20_000,
+                    ..Default::default()
+                },
+            )
+        });
+        let x: Vec<f64> = results.iter().flat_map(|r| r.x_own.clone()).collect();
+        let lam: Vec<f64> = results.iter().flat_map(|r| r.lambda_own.clone()).collect();
+        assert!(util::rel_l2(&x, &x_ref) < 1e-6, "ranks={nparts}");
+        assert!(util::rel_l2(&lam, &lam_ref) < 1e-6, "ranks={nparts}");
+    }
+}
