@@ -9,44 +9,11 @@ use std::rc::Rc;
 use rsla::adjoint::{eigsh, solve_nonlinear};
 use rsla::autograd::Tape;
 use rsla::eigen::LobpcgOpts;
-use rsla::nonlinear::{newton, NewtonOpts, Residual};
+use rsla::nonlinear::{examples::QuadPoisson, newton, NewtonOpts, Residual};
 use rsla::sparse::graphs::random_graph_laplacian;
-use rsla::sparse::poisson::{poisson2d, PoissonSystem};
-use rsla::sparse::{Coo, Csr, Pattern};
+use rsla::sparse::poisson::poisson2d;
+use rsla::sparse::Pattern;
 use rsla::util::{dot, Prng};
-
-struct QuadPoisson {
-    sys: PoissonSystem,
-    f: Vec<f64>,
-}
-
-impl Residual for QuadPoisson {
-    fn dim(&self) -> usize {
-        self.f.len()
-    }
-    fn eval(&self, u: &[f64], out: &mut [f64]) {
-        self.sys.matrix.spmv(u, out);
-        for i in 0..u.len() {
-            out[i] += u[i] * u[i] - self.f[i];
-        }
-    }
-    fn jacobian(&self, u: &[f64]) -> Csr {
-        let a = &self.sys.matrix;
-        let n = a.nrows;
-        let mut coo = Coo::with_capacity(n, n, a.nnz() + n);
-        for r in 0..n {
-            let (cols, vals) = a.row(r);
-            for (c, v) in cols.iter().zip(vals) {
-                coo.push(r, *c, *v);
-            }
-            coo.push(r, r, 2.0 * u[r]);
-        }
-        coo.to_csr()
-    }
-    fn vjp_theta(&self, _u: &[f64], w: &[f64]) -> Vec<f64> {
-        w.iter().map(|x| -x).collect()
-    }
-}
 
 fn main() {
     let mut rng = Prng::new(0);
@@ -127,7 +94,7 @@ fn main() {
         let w = rng.normal_vec(n);
         let factory: rsla::adjoint::nonlinear::ResidualFactory = Rc::new(move |theta: &[f64]| {
             Box::new(QuadPoisson {
-                sys: poisson2d(12, None),
+                a: poisson2d(12, None).matrix,
                 f: theta.to_vec(),
             }) as Box<dyn Residual>
         });

@@ -10,6 +10,13 @@
 //! 5. a backend failing at runtime (OOM, breakdown) falls through to the
 //!    next candidate, and the decision is recorded in the metrics
 //!    registry.
+//!
+//! The dispatcher is consumed two ways: inline (a `SparseTensor` or
+//! CLI call solves directly), and per-worker — every
+//! [`crate::engine`] worker holds an `Arc<Dispatcher>` handle and
+//! falls back to this chain whenever its shard-local direct path
+//! declines a job (explicit backend/method overrides, singular or
+//! over-budget factorizations, Accel devices).
 
 use std::sync::Arc;
 

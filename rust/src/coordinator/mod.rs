@@ -1,14 +1,19 @@
-//! L3 coordinator: a solve *service* in the vLLM-router mold.
+//! L3 coordinator — now a thin compatibility shim over the solve
+//! [`crate::engine`].
 //!
-//! torch-sla is a library, but its batched/auto-dispatch semantics are
-//! exactly a serving problem: requests (solves) arrive, get grouped by
-//! sparsity pattern (shared-pattern batches amortize one symbolic
-//! factorization — paper §3.1), routed to a backend by the dispatch
-//! policy, and executed on a worker pool.  This module is that runtime:
+//! Historically this module owned the windowed batcher and the linear
+//! worker pool.  Both grew into the engine (`rust/src/engine/`), which
+//! serves EVERY solver family (linear, multi-RHS, nonlinear, eigen,
+//! adjoint, distributed) with pattern-affinity scheduling, priority +
+//! deadline queues, and admission control.  What remains here:
 //!
-//! * [`batcher`] — windowed intake that coalesces same-pattern,
-//!   same-values requests into multi-RHS batches;
-//! * [`service`] — worker pool + queue + per-request latency metrics.
+//! * [`batcher`] — re-exports of the fusion policy from
+//!   [`crate::engine::fuse`];
+//! * [`service`] — [`SolveService`], the original linear-only API,
+//!   implemented as a shim that submits [`crate::engine::JobSpec::Linear`]
+//!   jobs and converts replies.  Its semantics (windowed same-pattern
+//!   batching, factorize-once, per-request latency metrics) are
+//!   preserved and its tests run unchanged.
 
 pub mod batcher;
 pub mod service;

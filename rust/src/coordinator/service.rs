@@ -1,15 +1,20 @@
-//! The solve service: intake thread (windowed batcher) + worker pool +
-//! metrics.  Requests are routed by the [`Dispatcher`] policy; batches
-//! of identical (pattern, values) matrices run factorize-once.
+//! [`SolveService`]: the original linear solve-service API, kept
+//! API-compatible as a thin shim over the [`crate::engine`].
+//!
+//! `submit` wraps the request in a [`JobSpec::Linear`] and converts the
+//! engine's [`JobResult`] back into a [`SolveResponse`] through the
+//! engine's callback-reply path (no forwarding thread per request).
+//! Windowed same-pattern batching, the factorize-once multi-RHS path,
+//! the hash-collision re-check, and the per-request latency fields all
+//! live in the engine now; this file only adapts types.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
 
-use super::batcher::{group_by_key, verify_groups, BatchPolicy, PatternKey};
-use crate::backend::{Dispatcher, Method, Operator, Problem, SolveOpts, SolveOutcome};
-use crate::error::{Error, Result};
-use crate::factor_cache::FactorCache;
+use super::batcher::BatchPolicy;
+use crate::backend::{Dispatcher, SolveOpts, SolveOutcome};
+use crate::engine::{Engine, EngineConfig, JobOutput, JobResult, JobSpec, SubmitOpts};
+use crate::error::Result;
 use crate::metrics;
 use crate::sparse::Csr;
 
@@ -46,13 +51,6 @@ impl Default for ServiceConfig {
     }
 }
 
-struct Envelope {
-    req: SolveRequest,
-    key: PatternKey,
-    enqueued: Instant,
-    reply: Sender<SolveResponse>,
-}
-
 /// Aggregate statistics snapshot.
 #[derive(Clone, Debug, Default)]
 pub struct ServiceStats {
@@ -62,87 +60,57 @@ pub struct ServiceStats {
 }
 
 pub struct SolveService {
-    intake_tx: Option<Sender<Envelope>>,
-    threads: Vec<std::thread::JoinHandle<()>>,
+    engine: Engine,
     pub metrics: Arc<metrics::Registry>,
-    next_id: std::sync::atomic::AtomicU64,
 }
 
 impl SolveService {
     pub fn start(dispatcher: Arc<Dispatcher>, config: ServiceConfig) -> Self {
-        let metrics = Arc::new(metrics::Registry::new());
-        let (intake_tx, intake_rx) = channel::<Envelope>();
-        let (work_tx, work_rx) = channel::<Vec<Envelope>>();
-        let work_rx = Arc::new(Mutex::new(work_rx));
-
-        let mut threads = Vec::new();
-
-        // intake thread: windowed batching by pattern key
-        {
-            let policy = config.batch.clone();
-            let metrics = metrics.clone();
-            threads.push(
-                std::thread::Builder::new()
-                    .name("rsla-intake".into())
-                    .spawn(move || {
-                        intake_loop(intake_rx, work_tx, policy, metrics);
-                    })
-                    .unwrap(),
-            );
-        }
-        // worker pool
-        for w in 0..config.workers.max(1) {
-            let rx = work_rx.clone();
-            let disp = dispatcher.clone();
-            let metrics = metrics.clone();
-            threads.push(
-                std::thread::Builder::new()
-                    .name(format!("rsla-worker-{w}"))
-                    .spawn(move || loop {
-                        let batch = {
-                            let guard = rx.lock().unwrap();
-                            match guard.recv() {
-                                Ok(b) => b,
-                                Err(_) => break,
-                            }
-                        };
-                        serve_batch(batch, &disp, &metrics);
-                    })
-                    .unwrap(),
-            );
-        }
-
-        SolveService {
-            intake_tx: Some(intake_tx),
-            threads,
-            metrics,
-            next_id: std::sync::atomic::AtomicU64::new(1),
-        }
+        let engine = Engine::start(
+            dispatcher,
+            EngineConfig {
+                workers: config.workers,
+                fuse: config.batch,
+                // the legacy service had no admission control and
+                // default affinity routing
+                ..Default::default()
+            },
+        );
+        let metrics = engine.metrics.clone();
+        SolveService { engine, metrics }
     }
 
     /// Submit a request; returns the reply receiver.
     pub fn submit(&self, matrix: Csr, b: Vec<f64>, opts: SolveOpts) -> Receiver<SolveResponse> {
-        let id = self
-            .next_id
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let (reply_tx, reply_rx) = channel();
-        let key = PatternKey::of(&matrix);
-        let env = Envelope {
-            req: SolveRequest {
+        let (reply_tx, reply_rx) = channel::<SolveResponse>();
+        let convert = Box::new(move |r: JobResult| {
+            let JobResult {
                 id,
-                matrix,
-                b,
-                opts,
-            },
-            key,
-            enqueued: Instant::now(),
-            reply: reply_tx,
-        };
-        self.intake_tx
-            .as_ref()
-            .expect("service stopped")
-            .send(env)
-            .expect("intake thread gone");
+                outcome,
+                queue_seconds,
+                service_seconds,
+                batch_size,
+                ..
+            } = r;
+            let outcome = outcome.map(|out| match out {
+                JobOutput::Linear(o) => o,
+                _ => unreachable!("linear job produced a non-linear output"),
+            });
+            let _ = reply_tx.send(SolveResponse {
+                id,
+                outcome,
+                queue_seconds,
+                service_seconds,
+                batch_size,
+            });
+        });
+        self.engine
+            .submit_with_reply(
+                JobSpec::Linear { matrix, b, opts },
+                SubmitOpts::default(),
+                convert,
+            )
+            .expect("service engine stopped");
         reply_rx
     }
 
@@ -155,171 +123,8 @@ impl SolveService {
     }
 
     /// Graceful shutdown: drain queues, join threads.
-    pub fn shutdown(mut self) {
-        drop(self.intake_tx.take());
-        for t in self.threads.drain(..) {
-            let _ = t.join();
-        }
-    }
-}
-
-fn intake_loop(
-    rx: Receiver<Envelope>,
-    work_tx: Sender<Vec<Envelope>>,
-    policy: BatchPolicy,
-    metrics: Arc<metrics::Registry>,
-) {
-    loop {
-        // block for the first request
-        let first = match rx.recv() {
-            Ok(e) => e,
-            Err(_) => break,
-        };
-        let mut window: Vec<Envelope> = vec![first];
-        let deadline = Instant::now() + policy.window;
-        while window.len() < policy.max_batch * 4 {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(e) => window.push(e),
-                Err(_) => break,
-            }
-        }
-        // group by key and dispatch groups to workers
-        let keys: Vec<PatternKey> = window.iter().map(|e| e.key.clone()).collect();
-        let groups = group_by_key(&keys, policy.max_batch);
-        metrics.incr("service.batches", groups.len() as u64);
-        // pull envelopes out by index, preserving group structure
-        let mut slots: Vec<Option<Envelope>> = window.into_iter().map(Some).collect();
-        for group in groups {
-            let batch: Vec<Envelope> = group
-                .into_iter()
-                .map(|i| slots[i].take().unwrap())
-                .collect();
-            metrics.incr("service.batched_requests", batch.len() as u64);
-            if work_tx.send(batch).is_err() {
-                return;
-            }
-        }
-    }
-}
-
-fn serve_batch(batch: Vec<Envelope>, disp: &Dispatcher, metrics: &Arc<metrics::Registry>) {
-    let t0 = Instant::now();
-    // Soundness re-check (PatternKey's contract): the intake groups by
-    // 64-bit fingerprints, so before factorizing once for the whole
-    // group we verify the matrices are actually equal and split out any
-    // mismatches into their own uniform sub-batches.
-    let uniform = {
-        let mats: Vec<&Csr> = batch.iter().map(|e| &e.req.matrix).collect();
-        verify_groups(&mats)
-    };
-    if uniform.len() > 1 {
-        metrics.incr("service.key_collisions", (uniform.len() - 1) as u64);
-    }
-    let mut slots: Vec<Option<Envelope>> = batch.into_iter().map(Some).collect();
-    for group in uniform {
-        let sub: Vec<Envelope> = group.into_iter().map(|i| slots[i].take().unwrap()).collect();
-        serve_uniform_batch(sub, t0, disp, metrics);
-    }
-}
-
-/// Serve a batch whose matrices are verified identical: factorize once
-/// through the pattern-keyed cache (which also reuses factors across
-/// batches and windows), fall back to per-request dispatch when the
-/// matrix cannot be factored (singular, over budget, rhs mismatch).
-fn serve_uniform_batch(
-    batch: Vec<Envelope>,
-    t0: Instant,
-    disp: &Dispatcher,
-    metrics: &Arc<metrics::Registry>,
-) {
-    let n = batch.len();
-    // Factorize-once applies when a direct solve is the right call:
-    // every request runs the fully-auto policy (explicit backend /
-    // method overrides must reach the dispatcher that honors them),
-    // and the matrix is SPD-looking (the seed's gate — Cholesky
-    // scales) or small enough that the dispatch policy would pick a
-    // direct backend anyway.  Large non-SPD batches fall through to
-    // per-request dispatch (iterative), as before.
-    let auto_policy = batch
-        .iter()
-        .all(|e| e.req.opts.backend.is_none() && e.req.opts.method == Method::Auto);
-    let direct_ok = auto_policy
-        && (batch[0].req.matrix.looks_spd()
-            || batch[0].req.matrix.nrows <= crate::backend::dispatch::DIRECT_CROSSOVER_N);
-    if n > 1 && direct_ok && batch[0].req.matrix.nrows == batch[0].req.b.len() {
-        let a = batch[0].req.matrix.clone();
-        // honor the tightest budget in the group
-        let budget = batch
-            .iter()
-            .map(|e| e.req.opts.host_mem_budget)
-            .min()
-            .unwrap_or(u64::MAX);
-        if let Ok(f) = FactorCache::global().factor(&a, budget, Some(metrics)) {
-            let bytes = f.bytes();
-            let method: &'static str = match f.method() {
-                "cholesky+rcm" => "cholesky+rcm(batched)",
-                _ => "lu(batched)",
-            };
-            for env in batch {
-                let ts = Instant::now();
-                let outcome = f.solve(&env.req.b).map(|x| {
-                    let residual = {
-                        let ax = a.matvec(&x);
-                        env.req
-                            .b
-                            .iter()
-                            .zip(&ax)
-                            .map(|(bi, ai)| (bi - ai) * (bi - ai))
-                            .sum::<f64>()
-                            .sqrt()
-                    };
-                    SolveOutcome {
-                        x,
-                        backend: "native-direct",
-                        method,
-                        iters: 0,
-                        residual,
-                        peak_bytes: bytes,
-                    }
-                });
-                metrics.incr("service.completed", 1);
-                let _ = env.reply.send(SolveResponse {
-                    id: env.req.id,
-                    outcome,
-                    queue_seconds: (t0 - env.enqueued).as_secs_f64(),
-                    service_seconds: ts.elapsed().as_secs_f64(),
-                    batch_size: n,
-                });
-            }
-            return;
-        }
-    }
-    // per-request dispatch
-    for env in batch {
-        let ts = Instant::now();
-        let outcome = if env.req.matrix.nrows != env.req.b.len() {
-            Err(Error::InvalidProblem("rhs length mismatch".into()))
-        } else {
-            disp.solve(
-                &Problem {
-                    op: Operator::Csr(&env.req.matrix),
-                    b: &env.req.b,
-                },
-                &env.req.opts,
-            )
-        };
-        metrics.incr("service.completed", 1);
-        let _ = env.reply.send(SolveResponse {
-            id: env.req.id,
-            outcome,
-            queue_seconds: (t0 - env.enqueued).as_secs_f64(),
-            service_seconds: ts.elapsed().as_secs_f64(),
-            batch_size: n,
-        });
+    pub fn shutdown(self) {
+        self.engine.shutdown();
     }
 }
 

@@ -64,9 +64,38 @@ impl CachedFactor {
                 self.n()
             )));
         }
+        crate::metrics::mem::note_factor_solve_alloc((self.n() * 8) as u64);
         match &self.kind {
             FactorKind::Chol(f) => Ok(f.solve(b)),
             FactorKind::Lu(f) => f.solve(b),
+        }
+    }
+
+    /// Allocation-free solve: writes A^{-1} b into `out`, using
+    /// `scratch` (grown to length n on first use) as sweep workspace.
+    /// Bitwise-identical results to [`CachedFactor::solve`] — both
+    /// families run the same floating-point operation sequence — but no
+    /// per-call `Vec` is returned, so per-Krylov-iteration callers
+    /// (`BlockDirect`, AMG's coarse correction) stop allocating on the
+    /// hot path.
+    pub fn solve_into(&self, b: &[f64], out: &mut [f64], scratch: &mut Vec<f64>) -> Result<()> {
+        let n = self.n();
+        if b.len() != n || out.len() != n {
+            return Err(Error::InvalidProblem(format!(
+                "rhs length {} != n {}",
+                b.len(),
+                n
+            )));
+        }
+        if scratch.len() != n {
+            scratch.resize(n, 0.0);
+        }
+        match &self.kind {
+            FactorKind::Chol(f) => {
+                f.solve_into(b, out, scratch);
+                Ok(())
+            }
+            FactorKind::Lu(f) => f.solve_into(b, out, scratch),
         }
     }
 
@@ -80,6 +109,7 @@ impl CachedFactor {
                 self.n()
             )));
         }
+        crate::metrics::mem::note_factor_solve_alloc((self.n() * 8) as u64);
         match &self.kind {
             FactorKind::Chol(f) => Ok(f.solve(b)),
             FactorKind::Lu(f) => f.solve_t(b),
@@ -279,6 +309,26 @@ mod tests {
             refactor(&sym, &bad, false, u64::MAX),
             Err(Error::Breakdown { .. })
         ));
+    }
+
+    #[test]
+    fn solve_into_bitwise_matches_solve_for_both_families() {
+        let mut rng = Prng::new(4);
+        let b = rng.normal_vec(35);
+        let spd = random_spd(&mut rng, 35, 3, 1.5);
+        let gen = random_nonsymmetric(&mut rng, 35, 4);
+        for (a, symmetric) in [(&spd, true), (&gen, false)] {
+            let (f, _) = build_factor(a, symmetric, u64::MAX).unwrap();
+            let x = f.solve(&b).unwrap();
+            let mut out = vec![0.0; 35];
+            let mut scratch = Vec::new();
+            f.solve_into(&b, &mut out, &mut scratch).unwrap();
+            assert_eq!(x, out, "solve_into diverged from solve ({})", f.method());
+        }
+        // shape misuse stays a typed error
+        let (f, _) = build_factor(&spd, true, u64::MAX).unwrap();
+        let mut short = vec![0.0; 3];
+        assert!(f.solve_into(&b, &mut short, &mut Vec::new()).is_err());
     }
 
     #[test]

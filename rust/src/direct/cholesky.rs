@@ -293,6 +293,55 @@ impl EnvelopeCholesky {
     pub fn solve_many(&self, bs: &[Vec<f64>]) -> Vec<Vec<f64>> {
         bs.iter().map(|b| self.solve(b)).collect()
     }
+
+    /// Allocation-free variant of [`EnvelopeCholesky::solve`]: writes
+    /// the solution into `out` using `scratch` (both length n) for the
+    /// permuted-space sweeps.  Identical floating-point operation
+    /// sequence as `solve`, so results are bitwise equal.
+    pub fn solve_into(&self, b: &[f64], out: &mut [f64], scratch: &mut [f64]) {
+        assert_eq!(b.len(), self.n);
+        assert_eq!(out.len(), self.n);
+        assert_eq!(scratch.len(), self.n);
+        // permute b into the working buffer (identity when unpermuted)
+        let work: &mut [f64] = match &self.perm {
+            Some(p) => {
+                for (new, &old) in p.iter().enumerate() {
+                    scratch[new] = b[old];
+                }
+                &mut *scratch
+            }
+            None => {
+                out.copy_from_slice(b);
+                &mut *out
+            }
+        };
+        // forward: L y = pb
+        for i in 0..self.n {
+            let fi = self.first[i];
+            let mut s = work[i];
+            let row = &self.data[self.rowptr[i]..self.rowptr[i + 1]];
+            for (k, c) in (fi..i).enumerate() {
+                s -= row[k] * work[c];
+            }
+            work[i] = s / row[i - fi];
+        }
+        // backward: L^T x = y
+        for i in (0..self.n).rev() {
+            let fi = self.first[i];
+            let row = &self.data[self.rowptr[i]..self.rowptr[i + 1]];
+            let xi = work[i] / row[i - fi];
+            work[i] = xi;
+            for (k, c) in (fi..i).enumerate() {
+                work[c] -= row[k] * xi;
+            }
+        }
+        if let Some(p) = &self.perm {
+            // work aliases scratch here; un-permute into out
+            for (new, &old) in p.iter().enumerate() {
+                out[old] = scratch[new];
+            }
+        }
+    }
 }
 
 #[cfg(test)]

@@ -574,6 +574,58 @@ impl SparseLu {
         Ok(x)
     }
 
+    /// Allocation-free variant of [`SparseLu::solve`]: writes the
+    /// solution into `out` using `scratch` (both length n) as the
+    /// forward-sweep workspace.  Performs the identical floating-point
+    /// operation sequence as `solve`, so results are bitwise equal —
+    /// only the buffer ownership differs (callers in per-Krylov-
+    /// iteration positions reuse both buffers across applications).
+    pub fn solve_into(&self, b: &[f64], out: &mut [f64], scratch: &mut [f64]) -> Result<()> {
+        if b.len() != self.n || out.len() != self.n || scratch.len() != self.n {
+            return Err(crate::error::Error::InvalidProblem(format!(
+                "solve_into buffer length mismatch (n = {})",
+                self.n
+            )));
+        }
+        // forward: L y = P b — `scratch` plays `work`, `out` plays `y`
+        scratch.copy_from_slice(b);
+        for k in 0..self.n {
+            let r = self.prow[k];
+            let yk = scratch[r];
+            out[k] = yk;
+            if yk != 0.0 {
+                for &(rr, lv) in &self.l_cols[k] {
+                    scratch[rr] -= yk * lv;
+                }
+            }
+        }
+        // backward: U x = y, in place on `out`
+        for j in (0..self.n).rev() {
+            let mut diag = 0.0;
+            for &(i, v) in &self.u_cols[j] {
+                if i == j {
+                    diag = v;
+                }
+            }
+            if diag == 0.0 {
+                return Err(Error::Breakdown {
+                    at: j,
+                    reason: "zero U diagonal".into(),
+                });
+            }
+            let xj = out[j] / diag;
+            out[j] = xj;
+            if xj != 0.0 {
+                for &(i, v) in &self.u_cols[j] {
+                    if i < j {
+                        out[i] -= v * xj;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Solve A^T x = b (the adjoint solve reuses the same factorization,
     /// paper §3.2.3: "reusing the same backend and, where applicable, the
     /// same factorization").  From P A = L U: A^T = U^T L^T P.

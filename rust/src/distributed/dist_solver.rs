@@ -75,22 +75,6 @@ fn iter_opts(opts: &DistIterOpts) -> IterOpts {
     }
 }
 
-/// Extract the rank's owned diagonal block (owned rows x owned cols)
-/// from its share.
-fn owned_block(a: &DistCsr) -> crate::sparse::Csr {
-    let n_own = a.plan.n_own;
-    let mut coo = crate::sparse::Coo::with_capacity(n_own, n_own, a.local.nnz());
-    for r in 0..n_own {
-        let (cols, vals) = a.local.row(r);
-        for (c, v) in cols.iter().zip(vals) {
-            if *c < n_own {
-                coo.push(r, *c, *v);
-            }
-        }
-    }
-    coo.to_csr()
-}
-
 fn jacobi_of(block_diag: impl Iterator<Item = f64>) -> Box<dyn Precond> {
     let diag: Vec<f64> = block_diag
         .map(|d| if d != 0.0 { d } else { 1.0 })
@@ -99,18 +83,20 @@ fn jacobi_of(block_diag: impl Iterator<Item = f64>) -> Box<dyn Precond> {
 }
 
 /// Exact additive-Schwarz block application `z = A_pp^{-1} r`, the
-/// factorization held by (and shared through) the factor cache.
+/// factorization held by (and shared through) the factor cache.  The
+/// triangular sweeps run through `solve_into` with a reused scratch
+/// buffer, so a warm application performs NO heap allocation — pinned
+/// by the `factor_solve_alloc_bytes` metric in the serve bench.
 struct BlockDirect {
     factor: Arc<CachedFactor>,
+    scratch: std::sync::Mutex<Vec<f64>>,
 }
 
 impl Precond for BlockDirect {
     fn apply(&self, r: &[f64], z: &mut [f64]) {
-        // CachedFactor's solve API returns a fresh Vec (same idiom as
-        // AMG's coarse solve); a solve-into variant would shave one
-        // O(n) allocation per application — noted in the ROADMAP.
-        match self.factor.solve(r) {
-            Ok(x) => z.copy_from_slice(&x),
+        let mut scratch = self.scratch.lock().unwrap();
+        match self.factor.solve_into(r, z, &mut scratch) {
+            Ok(()) => {}
             // a breakdown here means the block factor went stale in a
             // way the cache could not see; fall back to identity rather
             // than poisoning the Krylov iterate with garbage — but SAY
@@ -140,7 +126,9 @@ pub(crate) fn build_precond(
     match kind {
         DistPrecondKind::Jacobi => jacobi_of((0..n_own).map(|r| a.local.get(r, r))),
         DistPrecondKind::BlockAmg => {
-            let block = owned_block(a);
+            // the owned diagonal block is extracted once per share and
+            // cached on it (warm rebuilds skip the O(nnz) extraction)
+            let block = a.owned_diag_block();
             // AMG's coarse-grid factorization flows through the
             // process-wide factor cache inside Amg::new.
             match Amg::new(&block, &AmgOpts::default()) {
@@ -156,9 +144,12 @@ pub(crate) fn build_precond(
             // budget): a pathological-fill block trips OutOfMemory and
             // degrades to Jacobi instead of exhausting host memory
             const BLOCK_FACTOR_BUDGET_BYTES: u64 = 8 << 30;
-            let block = owned_block(a);
+            let block = a.owned_diag_block();
             match cache.factor(&block, BLOCK_FACTOR_BUDGET_BYTES, reg) {
-                Ok(factor) => Box::new(BlockDirect { factor }),
+                Ok(factor) => Box::new(BlockDirect {
+                    factor,
+                    scratch: std::sync::Mutex::new(Vec::new()),
+                }),
                 Err(_) => jacobi_of((0..n_own).map(|r| block.get(r, r))),
             }
         }
@@ -169,6 +160,10 @@ pub(crate) fn build_precond(
 #[derive(Clone, Debug)]
 pub struct DistSolveReport {
     pub x_own: Vec<f64>,
+    /// Which Krylov kernel served the solve ("cg", "cg-pipelined",
+    /// "bicgstab", "gmres", "minres") — the routing decision of
+    /// `DSparseTensor::solve` is observable, not inferred.
+    pub method: &'static str,
     pub iters: usize,
     pub residual: f64,
     pub converged: bool,
@@ -185,6 +180,7 @@ pub struct DistSolveReport {
 fn run_dist(
     a: &DistCsr,
     comm: &LocalComm,
+    method: &'static str,
     kernel: impl FnOnce(&dyn LinearOperator, &MemTracker) -> IterResult,
 ) -> DistSolveReport {
     let bytes0 = comm.bytes_sent();
@@ -194,6 +190,7 @@ fn run_dist(
     let res = kernel(&op, &mem);
     DistSolveReport {
         x_own: res.x,
+        method,
         iters: res.iters,
         residual: res.residual,
         converged: res.converged,
@@ -201,6 +198,14 @@ fn run_dist(
         reduce_rounds: comm.reduce_rounds() - rounds0,
         peak_bytes: a.bytes() + mem.peak(),
     }
+}
+
+/// Restart length for [`dist_gmres`] when the caller does not pin one:
+/// grows like sqrt(n) (deeper Krylov spaces pay off on larger systems)
+/// but stays within [30, 200] so per-iteration orthogonalization cost
+/// and basis storage remain bounded; tiny systems use n (full GMRES).
+pub fn auto_restart(n_global: usize) -> usize {
+    n_global.min(((n_global as f64).sqrt().ceil() as usize).clamp(30, 200))
 }
 
 /// Distributed preconditioned CG; runs inside one rank's thread.
@@ -213,7 +218,7 @@ pub fn dist_cg(
 ) -> DistSolveReport {
     assert_eq!(b_own.len(), a.plan.n_own);
     let m = build_precond(a, &opts.precond, FactorCache::global(), None);
-    run_dist(a, comm, |op, mem| {
+    run_dist(a, comm, "cg", |op, mem| {
         krylov::cg(op, b_own, &*m, comm, &iter_opts(opts), Some(mem))
     })
 }
@@ -230,7 +235,7 @@ pub fn dist_cg_pipelined(
 ) -> DistSolveReport {
     assert_eq!(b_own.len(), a.plan.n_own);
     let m = build_precond(a, &opts.precond, FactorCache::global(), None);
-    run_dist(a, comm, |op, mem| {
+    run_dist(a, comm, "cg-pipelined", |op, mem| {
         krylov::cg_pipelined(op, b_own, &*m, comm, &iter_opts(opts), Some(mem))
     })
 }
@@ -244,7 +249,7 @@ pub fn dist_bicgstab(
 ) -> DistSolveReport {
     assert_eq!(b_own.len(), a.plan.n_own);
     let m = build_precond(a, &opts.precond, FactorCache::global(), None);
-    run_dist(a, comm, |op, mem| {
+    run_dist(a, comm, "bicgstab", |op, mem| {
         krylov::bicgstab(op, b_own, &*m, comm, &iter_opts(opts), Some(mem))
     })
 }
@@ -261,7 +266,7 @@ pub fn dist_gmres(
 ) -> DistSolveReport {
     assert_eq!(b_own.len(), a.plan.n_own);
     let m = build_precond(a, &opts.precond, FactorCache::global(), None);
-    run_dist(a, comm, |op, mem| {
+    run_dist(a, comm, "gmres", |op, mem| {
         krylov::gmres(op, b_own, &*m, restart, comm, &iter_opts(opts), Some(mem))
     })
 }
@@ -280,7 +285,7 @@ pub fn dist_minres(
     opts: &DistIterOpts,
 ) -> DistSolveReport {
     assert_eq!(b_own.len(), a.plan.n_own);
-    run_dist(a, comm, |op, mem| {
+    run_dist(a, comm, "minres", |op, mem| {
         krylov::minres(
             op,
             b_own,
@@ -543,6 +548,65 @@ mod tests {
             "warm pass must not refactor"
         );
         assert_eq!(reg.get("factor_cache.hit.numeric"), nparts as u64);
+    }
+
+    #[test]
+    fn owned_diag_block_extracted_once_per_share() {
+        // Satellite: warm preconditioner builds must reuse the share's
+        // cached owned-block extraction — pinned by pointer identity.
+        let (_, _, parts) = dist_setup(12, 2);
+        let cache = FactorCache::new(u64::MAX);
+        assert!(parts[0].cached_block().is_none(), "no block before first build");
+        let _ = build_precond(&parts[0], &DistPrecondKind::BlockLu, &cache, None);
+        let first = parts[0].cached_block().expect("block cached after build");
+        let _ = build_precond(&parts[0], &DistPrecondKind::BlockLu, &cache, None);
+        let second = parts[0].cached_block().unwrap();
+        assert!(
+            Arc::ptr_eq(&first, &second),
+            "warm build must not re-extract the owned block"
+        );
+        assert!(Arc::ptr_eq(&first, &parts[0].owned_diag_block()));
+    }
+
+    #[test]
+    fn block_direct_applications_do_not_allocate() {
+        // Satellite: BlockDirect runs through solve_into — the factor-
+        // solve allocation tally must not move across applications.
+        // (The tally is process-global and monotonic; other tests bump
+        // it concurrently, so pin via a PRIVATE precond apply loop with
+        // the counter read inside a single-threaded region is not
+        // reliable.  Instead pin the contract at the CachedFactor
+        // level: solve_into leaves the tally unchanged.)
+        let (_, _, parts) = dist_setup(10, 2);
+        let cache = FactorCache::new(u64::MAX);
+        let block = parts[0].owned_diag_block();
+        let f = cache.factor(&block, u64::MAX, None).unwrap();
+        let n = block.nrows;
+        let mut out = vec![0.0; n];
+        let mut scratch = Vec::new();
+        let b = vec![1.0; n];
+        // prime buffers, then measure: repeated solve_into adds nothing.
+        // The tally is process-global, so a concurrent test can bump it
+        // mid-window; require one clean window out of many rather than
+        // asserting on a single racy read.
+        f.solve_into(&b, &mut out, &mut scratch).unwrap();
+        let mut clean = false;
+        for _ in 0..20 {
+            let before = crate::metrics::mem::factor_solve_alloc_bytes();
+            for _ in 0..8 {
+                f.solve_into(&b, &mut out, &mut scratch).unwrap();
+            }
+            if crate::metrics::mem::factor_solve_alloc_bytes() == before {
+                clean = true;
+                break;
+            }
+        }
+        assert!(
+            clean,
+            "solve_into must not bump the factor-solve allocation tally"
+        );
+        // and the result matches the allocating path bitwise
+        assert_eq!(f.solve(&b).unwrap(), out);
     }
 
     #[test]

@@ -1,0 +1,146 @@
+//! Multi-RHS fusion policy: jobs whose matrices share (pattern, values)
+//! coalesce into one factorize-once multi-RHS unit.
+//!
+//! Moved here from `coordinator::batcher` when the engine became the
+//! one scheduling layer (the coordinator re-exports these names for
+//! compatibility).  The key itself lives in [`crate::sparse::key`] (it
+//! is shared with the factor cache); this module owns the fusion
+//! *policy*: grouping by key, and the full-equality re-check that makes
+//! hash-keyed groups sound (a 64-bit collision must never produce a
+//! wrong answer).
+
+use std::collections::HashMap;
+
+pub use crate::sparse::key::PatternKey;
+use crate::sparse::Csr;
+
+/// Fusion/batching policy knobs.
+#[derive(Clone, Debug)]
+pub struct BatchPolicy {
+    /// Max requests coalesced into one multi-RHS solve (<= 1 disables
+    /// fusion; jobs are still windowed for scheduling).
+    pub max_batch: usize,
+    /// Max time the scheduler waits to fill a window.
+    pub window: std::time::Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 32,
+            window: std::time::Duration::from_millis(2),
+        }
+    }
+}
+
+/// Group indices of requests by pattern+values key, preserving arrival
+/// order inside each group.
+pub fn group_by_key(keys: &[PatternKey], max_batch: usize) -> Vec<Vec<usize>> {
+    let mut groups: HashMap<&PatternKey, Vec<usize>> = HashMap::new();
+    let mut order: Vec<&PatternKey> = Vec::new();
+    for (i, k) in keys.iter().enumerate() {
+        let e = groups.entry(k).or_insert_with(|| {
+            order.push(k);
+            Vec::new()
+        });
+        e.push(i);
+    }
+    let mut out = Vec::new();
+    for k in order {
+        let idxs = &groups[k];
+        for chunk in idxs.chunks(max_batch.max(1)) {
+            out.push(chunk.to_vec());
+        }
+    }
+    out
+}
+
+/// Soundness re-check for a key-grouped batch: split the group into
+/// sub-groups whose matrices are *actually* equal (indptr, indices, and
+/// values), preserving arrival order within each sub-group.
+///
+/// `group_by_key` groups by 64-bit fingerprints; two different matrices
+/// can in principle land in one group.  The worker factorizes once per
+/// group, so it must only ever see matrices that are bit-identical —
+/// this function is that guarantee.  With no collision (the universal
+/// case) it returns a single group and costs one O(nnz) comparison per
+/// extra member.
+pub fn verify_groups(mats: &[&Csr]) -> Vec<Vec<usize>> {
+    let mut out: Vec<Vec<usize>> = Vec::new();
+    for (i, m) in mats.iter().enumerate() {
+        let mut placed = false;
+        for group in out.iter_mut() {
+            let rep = mats[group[0]];
+            if rep.indptr == m.indptr && rep.indices == m.indices && rep.vals == m.vals {
+                group.push(i);
+                placed = true;
+                break;
+            }
+        }
+        if !placed {
+            out.push(vec![i]);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::poisson::poisson2d;
+
+    #[test]
+    fn grouping_respects_max_batch() {
+        let a = poisson2d(4, None).matrix;
+        let k = PatternKey::of(&a);
+        let keys = vec![k.clone(); 7];
+        let groups = group_by_key(&keys, 3);
+        assert_eq!(groups.len(), 3);
+        assert_eq!(groups[0], vec![0, 1, 2]);
+        assert_eq!(groups[2], vec![6]);
+    }
+
+    #[test]
+    fn mixed_patterns_stay_separate() {
+        let a = PatternKey::of(&poisson2d(4, None).matrix);
+        let b = PatternKey::of(&poisson2d(5, None).matrix);
+        let keys = vec![a.clone(), b.clone(), a.clone()];
+        let groups = group_by_key(&keys, 8);
+        assert_eq!(groups, vec![vec![0, 2], vec![1]]);
+    }
+
+    #[test]
+    fn verify_groups_splits_forced_collision() {
+        // Simulate two different matrices landing in one key group (a
+        // hash collision the worker must survive): the re-check splits
+        // them so each factorize-once sub-batch is uniform.
+        let a = poisson2d(4, None).matrix;
+        let mut b = a.clone();
+        b.vals[0] += 1.0; // same pattern, different values
+        let groups = verify_groups(&[&a, &b, &a, &b, &b]);
+        assert_eq!(groups, vec![vec![0, 2], vec![1, 3, 4]]);
+    }
+
+    #[test]
+    fn verify_groups_keeps_identical_matrices_together() {
+        let a = poisson2d(5, None).matrix;
+        let groups = verify_groups(&[&a, &a, &a]);
+        assert_eq!(groups, vec![vec![0, 1, 2]]);
+    }
+
+    #[test]
+    fn verify_groups_distinguishes_pattern_collisions() {
+        // same nrows/nnz, different structure
+        use crate::sparse::Coo;
+        let mut c1 = Coo::new(3, 3);
+        c1.push(0, 0, 1.0);
+        c1.push(1, 1, 1.0);
+        c1.push(2, 2, 1.0);
+        let mut c2 = Coo::new(3, 3);
+        c2.push(0, 1, 1.0);
+        c2.push(1, 2, 1.0);
+        c2.push(2, 0, 1.0);
+        let (a, b) = (c1.to_csr(), c2.to_csr());
+        assert_eq!(verify_groups(&[&a, &b]), vec![vec![0], vec![1]]);
+    }
+}

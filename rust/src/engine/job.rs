@@ -1,0 +1,226 @@
+//! The typed `Job` surface of the solve engine: what can be submitted
+//! ([`JobSpec`]), how it is classified for scheduling and metrics
+//! ([`JobKind`]), and what comes back ([`JobResult`] through a
+//! [`Ticket`]).
+
+use std::sync::mpsc::Receiver;
+use std::time::Duration;
+
+use crate::backend::{SolveOpts, SolveOutcome};
+use crate::distributed::{DSparseTensor, DistIterOpts, DistSolveReport};
+use crate::eigen::{EigResult, LobpcgOpts};
+use crate::error::{Error, Result};
+use crate::nonlinear::{NewtonOpts, NonlinearResult, Residual};
+use crate::sparse::Csr;
+
+/// Solver family of a job — the scheduling/metrics label.  Every kind
+/// executes through the one `Engine::submit` path.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum JobKind {
+    Linear,
+    MultiRhs,
+    Nonlinear,
+    Eig,
+    Adjoint,
+    Dist,
+}
+
+impl JobKind {
+    pub const ALL: [JobKind; 6] = [
+        JobKind::Linear,
+        JobKind::MultiRhs,
+        JobKind::Nonlinear,
+        JobKind::Eig,
+        JobKind::Adjoint,
+        JobKind::Dist,
+    ];
+
+    pub fn idx(self) -> usize {
+        match self {
+            JobKind::Linear => 0,
+            JobKind::MultiRhs => 1,
+            JobKind::Nonlinear => 2,
+            JobKind::Eig => 3,
+            JobKind::Adjoint => 4,
+            JobKind::Dist => 5,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            JobKind::Linear => "linear",
+            JobKind::MultiRhs => "multi_rhs",
+            JobKind::Nonlinear => "nonlinear",
+            JobKind::Eig => "eig",
+            JobKind::Adjoint => "adjoint",
+            JobKind::Dist => "dist",
+        }
+    }
+}
+
+/// One unit of work.  Owns everything it needs (matrices, right-hand
+/// sides, residual objects, distributed tensors) so it can cross the
+/// scheduler thread boundary.
+pub enum JobSpec {
+    /// A x = b.
+    Linear {
+        matrix: Csr,
+        b: Vec<f64>,
+        opts: SolveOpts,
+    },
+    /// One matrix, many right-hand sides: factorize once, sweep all.
+    MultiRhs {
+        matrix: Csr,
+        bs: Vec<Vec<f64>>,
+        opts: SolveOpts,
+    },
+    /// F(u) = 0 by damped Newton; each step's linear solve runs through
+    /// the serving worker's factor-cache shard.
+    Nonlinear {
+        residual: Box<dyn Residual + Send>,
+        u0: Vec<f64>,
+        opts: NewtonOpts,
+    },
+    /// k smallest eigenpairs of a symmetric matrix (LOBPCG).
+    Eig {
+        matrix: Csr,
+        k: usize,
+        opts: LobpcgOpts,
+    },
+    /// Forward + adjoint pair: x = A^{-1} b and lambda = A^{-T} gy from
+    /// ONE factorization (paper Eq. 3).
+    Adjoint {
+        matrix: Csr,
+        b: Vec<f64>,
+        gy: Vec<f64>,
+        opts: SolveOpts,
+    },
+    /// Distributed solve: the worker launches and manages the rank team
+    /// for the tensor's partition.
+    Dist {
+        tensor: DSparseTensor,
+        b: Vec<f64>,
+        opts: DistIterOpts,
+    },
+}
+
+impl JobSpec {
+    pub fn kind(&self) -> JobKind {
+        match self {
+            JobSpec::Linear { .. } => JobKind::Linear,
+            JobSpec::MultiRhs { .. } => JobKind::MultiRhs,
+            JobSpec::Nonlinear { .. } => JobKind::Nonlinear,
+            JobSpec::Eig { .. } => JobKind::Eig,
+            JobSpec::Adjoint { .. } => JobKind::Adjoint,
+            JobSpec::Dist { .. } => JobKind::Dist,
+        }
+    }
+
+    /// The matrix whose sparsity pattern drives affinity routing, when
+    /// the job has one (nonlinear and distributed jobs route by load).
+    pub fn affinity_matrix(&self) -> Option<&Csr> {
+        match self {
+            JobSpec::Linear { matrix, .. }
+            | JobSpec::MultiRhs { matrix, .. }
+            | JobSpec::Eig { matrix, .. }
+            | JobSpec::Adjoint { matrix, .. } => Some(matrix),
+            JobSpec::Nonlinear { .. } | JobSpec::Dist { .. } => None,
+        }
+    }
+}
+
+/// Scheduling priority; within a priority class jobs run
+/// earliest-deadline-first, then FIFO.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    Low,
+    Normal,
+    High,
+}
+
+/// Per-submission options.
+#[derive(Clone, Debug)]
+pub struct SubmitOpts {
+    pub priority: Priority,
+    /// Budget from submission to execution START; a job still queued
+    /// when it expires is failed with [`Error::Timeout`] instead of
+    /// run.
+    pub deadline: Option<Duration>,
+}
+
+impl Default for SubmitOpts {
+    fn default() -> Self {
+        SubmitOpts {
+            priority: Priority::Normal,
+            deadline: None,
+        }
+    }
+}
+
+/// Family-specific payload of a completed job.
+pub enum JobOutput {
+    Linear(SolveOutcome),
+    MultiRhs(Vec<SolveOutcome>),
+    Nonlinear(NonlinearResult),
+    Eig(EigResult),
+    Adjoint {
+        x: Vec<f64>,
+        /// Solution of A^T lambda = gy ( = dL/db for the linear adjoint).
+        lambda: Vec<f64>,
+    },
+    Dist {
+        x: Vec<f64>,
+        reports: Vec<DistSolveReport>,
+    },
+}
+
+/// The reply for one job, with queueing/service latency for the
+/// metrics tables.
+pub struct JobResult {
+    pub id: u64,
+    pub kind: JobKind,
+    pub outcome: Result<JobOutput>,
+    pub queue_seconds: f64,
+    pub service_seconds: f64,
+    /// How many requests shared the fused batch that served this one
+    /// (1 for unfused jobs).
+    pub batch_size: usize,
+    /// Index of the worker that executed the job (usize::MAX when it
+    /// never reached one, e.g. a queued-deadline timeout).
+    pub worker: usize,
+}
+
+/// Handle to an in-flight job.
+#[derive(Debug)]
+pub struct Ticket {
+    pub id: u64,
+    pub kind: JobKind,
+    pub(crate) rx: Receiver<JobResult>,
+}
+
+impl Ticket {
+    /// Block until the result arrives.  A worker that died without
+    /// replying (process teardown) surfaces as a typed error, never a
+    /// hang-forever on a dropped channel.
+    pub fn wait(self) -> JobResult {
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => JobResult {
+                id: self.id,
+                kind: self.kind,
+                outcome: Err(Error::WorkerPanic(
+                    "engine dropped the reply channel".into(),
+                )),
+                queue_seconds: 0.0,
+                service_seconds: 0.0,
+                batch_size: 1,
+                worker: usize::MAX,
+            },
+        }
+    }
+
+    /// Non-blocking poll.
+    pub fn try_wait(&self) -> Option<JobResult> {
+        self.rx.try_recv().ok()
+    }
+}

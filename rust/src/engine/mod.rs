@@ -1,0 +1,1124 @@
+//! The solve engine: ONE submission path for every solver family.
+//!
+//! The paper frames torch-sla's batched/auto-dispatch semantics as a
+//! serving problem (§3.1): requests grouped by sparsity pattern
+//! amortize one symbolic factorization.  The old coordinator served
+//! only *linear* solves; this engine serves every family — linear,
+//! multi-RHS, nonlinear (damped Newton), eigen (LOBPCG), adjoint
+//! (forward + transpose from one factorization), and distributed
+//! (engine-managed rank teams) — through one typed [`JobSpec`] and one
+//! [`Engine::submit`] → [`Ticket`] → [`JobResult`] lifecycle.
+//!
+//! Scheduling:
+//!
+//! * **Windowed intake** — the scheduler collects a short window
+//!   ([`BatchPolicy::window`]) and orders it by (priority, earliest
+//!   deadline, arrival).
+//! * **Multi-RHS fusion** — linear jobs sharing a (pattern, values)
+//!   [`PatternKey`](fuse::PatternKey) fuse into one factorize-once
+//!   batch; the worker re-verifies full equality (`verify_groups`)
+//!   before acting on hash-keyed groups, so fusion is bitwise-identical
+//!   to per-request solves (pinned by `tests/engine_serve.rs`).
+//! * **Pattern-affinity routing** — each worker owns a factor-cache
+//!   shard ([`crate::factor_cache::CacheShards`]); jobs are routed to
+//!   the worker whose shard already holds their pattern, so warm
+//!   factors are reused instead of re-built per worker.  Jobs without
+//!   a pattern (nonlinear, distributed) go to the least-loaded worker.
+//! * **Admission control** — a bounded pending count rejects submits
+//!   with [`Error::QueueFull`] (backpressure); queued jobs whose
+//!   deadline lapses fail with [`Error::Timeout`] instead of running.
+//! * **Failure isolation** — a panicking job (e.g. inside a user
+//!   residual) is caught per-unit and surfaced as
+//!   [`Error::WorkerPanic`]; the worker pool survives.
+//!
+//! Per-kind latency histograms (p50/p95/p99), queue depth, and affinity
+//! hit counters are readable through [`Engine::stats`]; `rsla serve-sim
+//! --mixed` prints the table.  `coordinator::SolveService` remains as a
+//! thin compatibility shim over this engine.
+
+pub mod fuse;
+pub mod job;
+pub mod workload;
+
+pub use fuse::{group_by_key, verify_groups, BatchPolicy};
+pub use job::{
+    JobKind, JobOutput, JobResult, JobSpec, Priority, SubmitOpts, Ticket,
+};
+
+use std::collections::HashMap;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::adjoint::Transpose;
+use crate::backend::dispatch::DIRECT_CROSSOVER_N;
+use crate::backend::native_direct::residual_of;
+use crate::backend::{Device, Dispatcher, Method, Operator, Problem, SolveOpts, SolveOutcome};
+use crate::error::{Error, Result};
+use crate::factor_cache::{CacheShards, CacheStats, DEFAULT_BUDGET_BYTES};
+use crate::metrics::{self, LatencyHist};
+use crate::sparse::key::{PatternKey, StructureKey};
+use crate::sparse::Csr;
+
+/// Engine construction knobs.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Worker threads (>= 1); each owns one factor-cache shard.
+    pub workers: usize,
+    /// Intake window + multi-RHS fusion policy (`max_batch <= 1`
+    /// disables fusion, jobs are still windowed for ordering).
+    pub fuse: BatchPolicy,
+    /// Pattern-affinity routing; `false` = round-robin assignment (the
+    /// bench baseline).
+    pub affinity: bool,
+    /// Admission-control bound on jobs in flight (submitted, not yet
+    /// replied).  `usize::MAX` = unbounded, the shim default.
+    pub max_pending: usize,
+    /// Byte budget of each worker's factor-cache shard.
+    pub shard_budget_bytes: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            workers: 2,
+            fuse: BatchPolicy::default(),
+            affinity: true,
+            max_pending: usize::MAX,
+            shard_budget_bytes: DEFAULT_BUDGET_BYTES,
+        }
+    }
+}
+
+/// An admitted job travelling through the scheduler.
+struct Envelope {
+    id: u64,
+    spec: JobSpec,
+    priority: Priority,
+    deadline: Option<Instant>,
+    enqueued: Instant,
+    seq: u64,
+    reply: Box<dyn FnOnce(JobResult) + Send>,
+}
+
+/// What the scheduler hands a worker.
+enum Unit {
+    One(Envelope),
+    /// Linear jobs sharing a (pattern, values) key, to be factorized
+    /// once (after the worker's full-equality re-check).
+    Fused(Vec<Envelope>),
+}
+
+/// State shared by submitters, the scheduler, and the workers.
+struct Shared {
+    pending: AtomicUsize,
+    depths: Vec<AtomicUsize>,
+    hists: Vec<LatencyHist>,
+    registry: Arc<metrics::Registry>,
+}
+
+fn respond(shared: &Shared, reply: Box<dyn FnOnce(JobResult) + Send>, result: JobResult) {
+    shared.hists[result.kind.idx()]
+        .record(result.queue_seconds + result.service_seconds);
+    shared.registry.incr("service.completed", 1);
+    shared
+        .registry
+        .incr(&format!("engine.completed.{}", result.kind.name()), 1);
+    shared.pending.fetch_sub(1, Ordering::Relaxed);
+    // Reply closures are caller-supplied code running on an engine
+    // thread: a panicking callback must not take the worker (and every
+    // pattern affinity-pinned to it) down with its own job.
+    if std::panic::catch_unwind(AssertUnwindSafe(move || reply(result))).is_err() {
+        shared.registry.incr("engine.reply_panic", 1);
+    }
+}
+
+fn respond_timeout(env: Envelope, now: Instant, shared: &Shared) {
+    let Envelope {
+        id,
+        spec,
+        deadline,
+        enqueued,
+        reply,
+        ..
+    } = env;
+    let kind = spec.kind();
+    let waited = now.saturating_duration_since(enqueued);
+    let allowed = deadline
+        .map(|d| d.saturating_duration_since(enqueued))
+        .unwrap_or_default();
+    shared.registry.incr("engine.timeout", 1);
+    respond(
+        shared,
+        reply,
+        JobResult {
+            id,
+            kind,
+            outcome: Err(Error::Timeout {
+                waited_ms: waited.as_millis() as u64,
+                deadline_ms: allowed.as_millis() as u64,
+            }),
+            queue_seconds: waited.as_secs_f64(),
+            service_seconds: 0.0,
+            batch_size: 1,
+            worker: usize::MAX,
+        },
+    );
+}
+
+fn expired(deadline: Option<Instant>, now: Instant) -> bool {
+    deadline.map(|d| now >= d).unwrap_or(false)
+}
+
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".into()
+    }
+}
+
+/// Per-kind latency snapshot (seconds).
+#[derive(Clone, Debug)]
+pub struct KindStats {
+    pub kind: JobKind,
+    pub count: u64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+/// Aggregate engine snapshot for reports and benches.
+#[derive(Clone, Debug)]
+pub struct EngineStats {
+    pub kinds: Vec<KindStats>,
+    /// Jobs admitted and not yet replied (queued + executing).
+    pub queue_depth: usize,
+    pub affinity_hits: u64,
+    pub affinity_misses: u64,
+    pub timeouts: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub batches: u64,
+    pub batched_requests: u64,
+    /// Aggregated over all worker shards.
+    pub cache: CacheStats,
+}
+
+impl EngineStats {
+    /// Factor-cache hit rate across shards in [0, 1].
+    pub fn cache_hit_rate(&self) -> f64 {
+        let hits = self.cache.hits_numeric + self.cache.hits_symbolic;
+        let total = hits + self.cache.misses;
+        if total == 0 {
+            0.0
+        } else {
+            hits as f64 / total as f64
+        }
+    }
+}
+
+/// The solve engine: scheduler thread + worker pool, one factor-cache
+/// shard per worker, every solver family behind [`Engine::submit`].
+pub struct Engine {
+    intake: Mutex<Option<Sender<Envelope>>>,
+    threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    shared: Arc<Shared>,
+    shards: Arc<CacheShards>,
+    pub metrics: Arc<metrics::Registry>,
+    next_id: AtomicU64,
+    max_pending: usize,
+}
+
+impl Engine {
+    pub fn start(dispatcher: Arc<Dispatcher>, config: EngineConfig) -> Self {
+        let workers = config.workers.max(1);
+        let registry = Arc::new(metrics::Registry::new());
+        let shared = Arc::new(Shared {
+            pending: AtomicUsize::new(0),
+            depths: (0..workers).map(|_| AtomicUsize::new(0)).collect(),
+            hists: JobKind::ALL.iter().map(|_| LatencyHist::new()).collect(),
+            registry: registry.clone(),
+        });
+        let shards = Arc::new(CacheShards::new(workers, config.shard_budget_bytes));
+
+        let mut threads = Vec::new();
+        let mut worker_txs: Vec<Sender<Unit>> = Vec::new();
+        for w in 0..workers {
+            let (tx, rx) = channel::<Unit>();
+            worker_txs.push(tx);
+            let ctx = WorkerCtx {
+                idx: w,
+                disp: dispatcher.clone(),
+                shards: shards.clone(),
+                shared: shared.clone(),
+            };
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("rsla-engine-worker-{w}"))
+                    .spawn(move || worker_loop(rx, ctx))
+                    .expect("spawn engine worker"),
+            );
+        }
+        let (intake_tx, intake_rx) = channel::<Envelope>();
+        {
+            let fuse = config.fuse.clone();
+            let affinity = config.affinity;
+            let shared = shared.clone();
+            threads.insert(
+                0,
+                std::thread::Builder::new()
+                    .name("rsla-engine-sched".into())
+                    .spawn(move || scheduler_loop(intake_rx, worker_txs, fuse, affinity, shared))
+                    .expect("spawn engine scheduler"),
+            );
+        }
+
+        Engine {
+            intake: Mutex::new(Some(intake_tx)),
+            threads: Mutex::new(threads),
+            shared,
+            shards,
+            metrics: registry,
+            next_id: AtomicU64::new(1),
+            max_pending: config.max_pending,
+        }
+    }
+
+    /// The process-global engine (CPU dispatcher, default config) that
+    /// `SparseTensor::via_engine` submits through.
+    pub fn global() -> &'static Engine {
+        static GLOBAL: OnceLock<Engine> = OnceLock::new();
+        GLOBAL.get_or_init(|| {
+            Engine::start(Arc::new(Dispatcher::new(None)), EngineConfig::default())
+        })
+    }
+
+    /// Submit with default priority and no deadline.
+    pub fn submit(&self, spec: JobSpec) -> Result<Ticket> {
+        self.submit_with(spec, SubmitOpts::default())
+    }
+
+    /// Submit with explicit priority/deadline; returns a [`Ticket`] to
+    /// wait on, or [`Error::QueueFull`] when admission control rejects.
+    pub fn submit_with(&self, spec: JobSpec, opts: SubmitOpts) -> Result<Ticket> {
+        let kind = spec.kind();
+        let (tx, rx) = channel::<JobResult>();
+        let id = self.submit_with_reply(
+            spec,
+            opts,
+            Box::new(move |r| {
+                let _ = tx.send(r);
+            }),
+        )?;
+        Ok(Ticket { id, kind, rx })
+    }
+
+    /// Callback-form submission (the coordinator shim converts replies
+    /// into its own response type without a forwarding thread).
+    pub fn submit_with_reply(
+        &self,
+        spec: JobSpec,
+        opts: SubmitOpts,
+        reply: Box<dyn FnOnce(JobResult) + Send>,
+    ) -> Result<u64> {
+        let depth = self.shared.pending.load(Ordering::Relaxed);
+        if depth >= self.max_pending {
+            self.metrics.incr("engine.rejected", 1);
+            return Err(Error::QueueFull {
+                depth,
+                capacity: self.max_pending,
+            });
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let now = Instant::now();
+        let env = Envelope {
+            id,
+            spec,
+            priority: opts.priority,
+            deadline: opts.deadline.map(|d| now + d),
+            enqueued: now,
+            seq: id,
+            reply,
+        };
+        let guard = self.intake.lock().unwrap();
+        match guard.as_ref() {
+            Some(tx) => {
+                self.shared.pending.fetch_add(1, Ordering::Relaxed);
+                if tx.send(env).is_err() {
+                    self.shared.pending.fetch_sub(1, Ordering::Relaxed);
+                    return Err(Error::InvalidProblem("engine scheduler stopped".into()));
+                }
+                Ok(id)
+            }
+            None => Err(Error::InvalidProblem("engine stopped".into())),
+        }
+    }
+
+    /// Snapshot of per-kind latency quantiles, queue depth, affinity
+    /// counters, and aggregated shard cache stats.
+    pub fn stats(&self) -> EngineStats {
+        EngineStats {
+            kinds: JobKind::ALL
+                .iter()
+                .map(|&k| {
+                    let h = &self.shared.hists[k.idx()];
+                    KindStats {
+                        kind: k,
+                        count: h.count(),
+                        p50: h.quantile(0.50),
+                        p95: h.quantile(0.95),
+                        p99: h.quantile(0.99),
+                    }
+                })
+                .collect(),
+            queue_depth: self.shared.pending.load(Ordering::Relaxed),
+            affinity_hits: self.metrics.get("engine.affinity.hit"),
+            affinity_misses: self.metrics.get("engine.affinity.miss"),
+            timeouts: self.metrics.get("engine.timeout"),
+            rejected: self.metrics.get("engine.rejected"),
+            completed: self.metrics.get("service.completed"),
+            batches: self.metrics.get("service.batches"),
+            batched_requests: self.metrics.get("service.batched_requests"),
+            cache: self.shards.stats(),
+        }
+    }
+
+    /// The per-worker factor-cache shards (tests and benches read
+    /// per-shard warmth through this).
+    pub fn shards(&self) -> &CacheShards {
+        &self.shards
+    }
+
+    /// Graceful shutdown: stop intake, drain queues, join threads.
+    /// Idempotent; in-flight jobs are served before workers exit.
+    pub fn shutdown(&self) {
+        let tx = self.intake.lock().unwrap().take();
+        drop(tx);
+        let mut threads = self.threads.lock().unwrap();
+        for t in threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scheduler
+// ---------------------------------------------------------------------
+
+fn scheduler_loop(
+    rx: Receiver<Envelope>,
+    worker_txs: Vec<Sender<Unit>>,
+    fuse_policy: BatchPolicy,
+    affinity: bool,
+    shared: Arc<Shared>,
+) {
+    let mut affinity_map: HashMap<StructureKey, usize> = HashMap::new();
+    let mut rr = 0usize;
+    loop {
+        // block for the first job of the round
+        let first = match rx.recv() {
+            Ok(e) => e,
+            Err(_) => break,
+        };
+        let mut window: Vec<Envelope> = vec![first];
+        let deadline = Instant::now() + fuse_policy.window;
+        while window.len() < fuse_policy.max_batch.max(1) * 4 {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(e) => window.push(e),
+                Err(_) => break,
+            }
+        }
+        schedule_window(
+            window,
+            &worker_txs,
+            &fuse_policy,
+            affinity,
+            &mut affinity_map,
+            &mut rr,
+            &shared,
+        );
+    }
+    // dropping worker_txs lets the workers drain and exit
+}
+
+fn unit_priority(u: &Unit) -> Priority {
+    match u {
+        Unit::One(e) => e.priority,
+        Unit::Fused(envs) => envs.iter().map(|e| e.priority).max().unwrap_or(Priority::Normal),
+    }
+}
+
+fn unit_order_key(u: &Unit) -> (bool, Instant, u64) {
+    // (no-deadline-last, earliest deadline, arrival)
+    let (deadline, enqueued, seq) = match u {
+        Unit::One(e) => (e.deadline, e.enqueued, e.seq),
+        Unit::Fused(envs) => {
+            let d = envs.iter().filter_map(|e| e.deadline).min();
+            let s = envs.iter().map(|e| e.seq).min().unwrap_or(0);
+            (d, envs[0].enqueued, s)
+        }
+    };
+    (deadline.is_none(), deadline.unwrap_or(enqueued), seq)
+}
+
+/// Bound on the scheduler's pattern→worker map.  A process-lifetime
+/// engine (`Engine::global`) serving unbounded distinct patterns must
+/// not grow without limit; at the cap the map is cleared (warmth is
+/// re-learned, correctness is unaffected).  64-byte-ish entries make
+/// this ~1 MiB worst case.
+const AFFINITY_MAP_CAP: usize = 16_384;
+
+fn least_depth(depths: &[AtomicUsize]) -> usize {
+    let mut best = 0usize;
+    let mut best_depth = usize::MAX;
+    for (i, d) in depths.iter().enumerate() {
+        let v = d.load(Ordering::Relaxed);
+        if v < best_depth {
+            best = i;
+            best_depth = v;
+        }
+    }
+    best
+}
+
+fn schedule_window(
+    window: Vec<Envelope>,
+    worker_txs: &[Sender<Unit>],
+    fuse_policy: &BatchPolicy,
+    affinity: bool,
+    affinity_map: &mut HashMap<StructureKey, usize>,
+    rr: &mut usize,
+    shared: &Shared,
+) {
+    // split fusable linear jobs from everything else, keeping arrival
+    // order; each unit carries its routing key so the pattern is hashed
+    // ONCE per job on the scheduling path
+    let mut units: Vec<(Option<StructureKey>, Unit)> = Vec::new();
+    let mut linear: Vec<Envelope> = Vec::new();
+    for env in window {
+        match &env.spec {
+            JobSpec::Linear { .. } => linear.push(env),
+            _ => {
+                let key = env.spec.affinity_matrix().map(StructureKey::of);
+                units.push((key, Unit::One(env)));
+            }
+        }
+    }
+    if !linear.is_empty() {
+        let keys: Vec<PatternKey> = linear
+            .iter()
+            .map(|e| match &e.spec {
+                JobSpec::Linear { matrix, .. } => PatternKey::of(matrix),
+                _ => unreachable!(),
+            })
+            .collect();
+        let groups = group_by_key(&keys, fuse_policy.max_batch);
+        shared
+            .registry
+            .incr("service.batches", groups.len() as u64);
+        let mut slots: Vec<Option<Envelope>> = linear.into_iter().map(Some).collect();
+        for group in groups {
+            shared
+                .registry
+                .incr("service.batched_requests", group.len() as u64);
+            let key = Some(keys[group[0]].structure());
+            let mut envs: Vec<Envelope> = group
+                .into_iter()
+                .map(|i| slots[i].take().unwrap())
+                .collect();
+            if envs.len() == 1 {
+                units.push((key, Unit::One(envs.pop().unwrap())));
+            } else {
+                units.push((key, Unit::Fused(envs)));
+            }
+        }
+    }
+    // priority first, then earliest deadline, then arrival
+    units.sort_by_key(|(_, u)| (std::cmp::Reverse(unit_priority(u)), unit_order_key(u)));
+
+    for (key, unit) in units {
+        // affinity routing on the unit's pattern, load balance otherwise
+        let w = if !affinity {
+            let w = *rr % worker_txs.len();
+            *rr += 1;
+            w
+        } else {
+            match key {
+                Some(key) => match affinity_map.get(&key) {
+                    Some(&w) => {
+                        shared.registry.incr("engine.affinity.hit", 1);
+                        w
+                    }
+                    None => {
+                        let w = least_depth(&shared.depths);
+                        // bound the map: a process-lifetime engine fed
+                        // unbounded distinct patterns must not leak;
+                        // clearing forfeits warmth, never correctness
+                        if affinity_map.len() >= AFFINITY_MAP_CAP {
+                            affinity_map.clear();
+                            shared.registry.incr("engine.affinity.map_reset", 1);
+                        }
+                        affinity_map.insert(key, w);
+                        shared.registry.incr("engine.affinity.miss", 1);
+                        w
+                    }
+                },
+                None => least_depth(&shared.depths),
+            }
+        };
+        shared.depths[w].fetch_add(1, Ordering::Relaxed);
+        if let Err(std::sync::mpsc::SendError(unit)) = worker_txs[w].send(unit) {
+            // worker gone (shutdown race): fail the jobs, don't hang
+            // them — and un-pin every pattern routed to the dead worker
+            // so later same-pattern jobs re-route to a live one
+            shared.depths[w].fetch_sub(1, Ordering::Relaxed);
+            affinity_map.retain(|_, &mut v| v != w);
+            let envs = match unit {
+                Unit::One(e) => vec![e],
+                Unit::Fused(envs) => envs,
+            };
+            for env in envs {
+                let Envelope {
+                    id,
+                    spec,
+                    enqueued,
+                    reply,
+                    ..
+                } = env;
+                let kind = spec.kind();
+                respond(
+                    shared,
+                    reply,
+                    JobResult {
+                        id,
+                        kind,
+                        outcome: Err(Error::WorkerPanic("worker pool stopped".into())),
+                        queue_seconds: enqueued.elapsed().as_secs_f64(),
+                        service_seconds: 0.0,
+                        batch_size: 1,
+                        worker: w,
+                    },
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Workers
+// ---------------------------------------------------------------------
+
+struct WorkerCtx {
+    idx: usize,
+    disp: Arc<Dispatcher>,
+    shards: Arc<CacheShards>,
+    shared: Arc<Shared>,
+}
+
+fn worker_loop(rx: Receiver<Unit>, ctx: WorkerCtx) {
+    loop {
+        let unit = match rx.recv() {
+            Ok(u) => u,
+            Err(_) => break,
+        };
+        match unit {
+            Unit::One(env) => serve_one(env, &ctx),
+            Unit::Fused(envs) => serve_fused(envs, &ctx),
+        }
+        ctx.shared.depths[ctx.idx].fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Execute one job, catching panics so a bad residual (or any bug in a
+/// solver path) fails THIS job instead of wedging the worker.
+fn exec_caught(spec: JobSpec, ctx: &WorkerCtx) -> Result<JobOutput> {
+    match std::panic::catch_unwind(AssertUnwindSafe(|| exec_spec(spec, ctx))) {
+        Ok(r) => r,
+        Err(p) => {
+            ctx.shared.registry.incr("engine.panic", 1);
+            Err(Error::WorkerPanic(panic_msg(&*p)))
+        }
+    }
+}
+
+fn serve_one(env: Envelope, ctx: &WorkerCtx) {
+    let t0 = Instant::now();
+    if expired(env.deadline, t0) {
+        respond_timeout(env, t0, &ctx.shared);
+        return;
+    }
+    let Envelope {
+        id,
+        spec,
+        enqueued,
+        reply,
+        ..
+    } = env;
+    let kind = spec.kind();
+    let queue_seconds = (t0 - enqueued).as_secs_f64();
+    let outcome = exec_caught(spec, ctx);
+    respond(
+        &ctx.shared,
+        reply,
+        JobResult {
+            id,
+            kind,
+            outcome,
+            queue_seconds,
+            service_seconds: t0.elapsed().as_secs_f64(),
+            batch_size: 1,
+            worker: ctx.idx,
+        },
+    );
+}
+
+fn serve_fused(envs: Vec<Envelope>, ctx: &WorkerCtx) {
+    let t0 = Instant::now();
+    let mut live: Vec<Envelope> = Vec::with_capacity(envs.len());
+    for env in envs {
+        if expired(env.deadline, t0) {
+            respond_timeout(env, t0, &ctx.shared);
+        } else {
+            live.push(env);
+        }
+    }
+    if live.is_empty() {
+        return;
+    }
+    // Soundness re-check (PatternKey's contract): the scheduler groups
+    // by 64-bit fingerprints, so before factorizing once for the whole
+    // group verify the matrices are actually equal and split out any
+    // mismatches into their own uniform sub-batches.
+    let uniform = {
+        let mats: Vec<&Csr> = live
+            .iter()
+            .map(|e| match &e.spec {
+                JobSpec::Linear { matrix, .. } => matrix,
+                _ => unreachable!("fused unit holds a non-linear job"),
+            })
+            .collect();
+        verify_groups(&mats)
+    };
+    if uniform.len() > 1 {
+        ctx.shared
+            .registry
+            .incr("service.key_collisions", (uniform.len() - 1) as u64);
+    }
+    let mut slots: Vec<Option<Envelope>> = live.into_iter().map(Some).collect();
+    for group in uniform {
+        let sub: Vec<Envelope> = group.into_iter().map(|i| slots[i].take().unwrap()).collect();
+        serve_uniform(sub, t0, ctx);
+    }
+}
+
+/// True when the engine may serve a SINGLE job straight from a worker
+/// shard.  Mirrors `Dispatcher::cache_eligible` — fully-auto policy,
+/// CPU device, below the direct crossover — so shard-direct execution
+/// never inverts the dispatcher's size/device routing: a large SPD
+/// system the dispatcher would hand to CG, or an Accel-device request,
+/// falls through to `disp.solve` exactly as it did pre-engine.
+fn direct_eligible(a: &Csr, opts: &SolveOpts) -> bool {
+    opts.backend.is_none()
+        && opts.method == Method::Auto
+        && opts.device == Device::Cpu
+        && a.nrows <= DIRECT_CROSSOVER_N
+}
+
+/// The factorize-once gate for fused/multi-RHS batches — the old
+/// coordinator's gate (fully-auto policy, SPD-looking or below the
+/// crossover) plus the CPU-device guard, so Accel-device batches keep
+/// their dispatcher semantics instead of being silently served on the
+/// CPU shard.  Large non-SPD batches fall through to per-request
+/// dispatch (iterative), as before.
+fn batch_direct_eligible(a: &Csr, opts: &SolveOpts) -> bool {
+    opts.backend.is_none()
+        && opts.method == Method::Auto
+        && opts.device == Device::Cpu
+        && (a.looks_spd() || a.nrows <= DIRECT_CROSSOVER_N)
+}
+
+fn batched_label(method: &str) -> &'static str {
+    match method {
+        "cholesky+rcm" => "cholesky+rcm(batched)",
+        _ => "lu(batched)",
+    }
+}
+
+/// Serve a verified-identical batch: factorize once through this
+/// worker's shard, sweep every RHS.  Falls back to per-request
+/// execution when the matrix cannot be factored (singular, over
+/// budget) or any member opted out of the auto policy.
+fn serve_uniform(batch: Vec<Envelope>, t0: Instant, ctx: &WorkerCtx) {
+    let n = batch.len();
+    let mut eligible = true;
+    let mut budget = u64::MAX;
+    for env in &batch {
+        match &env.spec {
+            JobSpec::Linear { matrix, b, opts } => {
+                eligible &= batch_direct_eligible(matrix, opts) && matrix.nrows == b.len();
+                budget = budget.min(opts.host_mem_budget);
+            }
+            _ => unreachable!("fused unit holds a non-linear job"),
+        }
+    }
+    if n > 1 && eligible {
+        let a = match &batch[0].spec {
+            JobSpec::Linear { matrix, .. } => matrix.clone(),
+            _ => unreachable!(),
+        };
+        // The fused path runs outside exec_caught, so it carries its
+        // own panic guards: a factorization panic falls through to the
+        // per-request path (which isolates per job), and a solve panic
+        // fails THAT member only — the worker must survive either way.
+        let factored = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            ctx.shards
+                .factor_on(ctx.idx, &a, budget, Some(&ctx.shared.registry))
+        }));
+        if factored.is_err() {
+            ctx.shared.registry.incr("engine.panic", 1);
+        }
+        if let Ok(Ok(f)) = factored {
+            let bytes = f.bytes();
+            let method = batched_label(f.method());
+            for env in batch {
+                let ts = Instant::now();
+                let Envelope {
+                    id,
+                    spec,
+                    enqueued,
+                    reply,
+                    ..
+                } = env;
+                let b = match spec {
+                    JobSpec::Linear { b, .. } => b,
+                    _ => unreachable!(),
+                };
+                let outcome = match std::panic::catch_unwind(AssertUnwindSafe(|| {
+                    f.solve(&b).map(|x| {
+                        let residual = residual_of(&a, &x, &b);
+                        JobOutput::Linear(SolveOutcome {
+                            x,
+                            backend: "native-direct",
+                            method,
+                            iters: 0,
+                            residual,
+                            peak_bytes: bytes,
+                        })
+                    })
+                })) {
+                    Ok(r) => r,
+                    Err(p) => {
+                        ctx.shared.registry.incr("engine.panic", 1);
+                        Err(Error::WorkerPanic(panic_msg(&*p)))
+                    }
+                };
+                respond(
+                    &ctx.shared,
+                    reply,
+                    JobResult {
+                        id,
+                        kind: JobKind::Linear,
+                        outcome,
+                        queue_seconds: (t0 - enqueued).as_secs_f64(),
+                        service_seconds: ts.elapsed().as_secs_f64(),
+                        batch_size: n,
+                        worker: ctx.idx,
+                    },
+                );
+            }
+            return;
+        }
+    }
+    // per-request execution; batch_size stays n (these requests DID
+    // share the scheduling batch)
+    for env in batch {
+        let ts = Instant::now();
+        let Envelope {
+            id,
+            spec,
+            enqueued,
+            reply,
+            ..
+        } = env;
+        let kind = spec.kind();
+        let outcome = exec_caught(spec, ctx);
+        respond(
+            &ctx.shared,
+            reply,
+            JobResult {
+                id,
+                kind,
+                outcome,
+                queue_seconds: (t0 - enqueued).as_secs_f64(),
+                service_seconds: ts.elapsed().as_secs_f64(),
+                batch_size: n,
+                worker: ctx.idx,
+            },
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Family adapters
+// ---------------------------------------------------------------------
+
+fn exec_spec(spec: JobSpec, ctx: &WorkerCtx) -> Result<JobOutput> {
+    match spec {
+        JobSpec::Linear { matrix, b, opts } => {
+            exec_linear(&matrix, &b, &opts, ctx).map(JobOutput::Linear)
+        }
+        JobSpec::MultiRhs { matrix, bs, opts } => {
+            exec_multi_rhs(&matrix, &bs, &opts, ctx).map(JobOutput::MultiRhs)
+        }
+        JobSpec::Nonlinear { residual, u0, opts } => {
+            Ok(JobOutput::Nonlinear(exec_nonlinear(
+                residual.as_ref(),
+                &u0,
+                &opts,
+                ctx,
+            )))
+        }
+        JobSpec::Eig { matrix, k, opts } => exec_eig(&matrix, k, &opts).map(JobOutput::Eig),
+        JobSpec::Adjoint {
+            matrix,
+            b,
+            gy,
+            opts,
+        } => exec_adjoint(&matrix, &b, &gy, &opts, ctx),
+        JobSpec::Dist { tensor, b, opts } => {
+            let (x, reports) = tensor.solve(&b, &opts)?;
+            Ok(JobOutput::Dist { x, reports })
+        }
+    }
+}
+
+fn exec_linear(a: &Csr, b: &[f64], opts: &SolveOpts, ctx: &WorkerCtx) -> Result<SolveOutcome> {
+    if a.nrows != b.len() {
+        return Err(Error::InvalidProblem("rhs length mismatch".into()));
+    }
+    if direct_eligible(a, opts) {
+        if let Ok(f) =
+            ctx.shards
+                .factor_on(ctx.idx, a, opts.host_mem_budget, Some(&ctx.shared.registry))
+        {
+            let x = f.solve(b)?;
+            let residual = residual_of(a, &x, b);
+            return Ok(SolveOutcome {
+                x,
+                backend: "native-direct",
+                method: f.method(),
+                iters: 0,
+                residual,
+                peak_bytes: f.bytes(),
+            });
+        }
+        // shard declined (singular / over budget): the dispatcher's
+        // fallback chain decides, same as the old coordinator
+    }
+    ctx.disp.solve(
+        &Problem {
+            op: Operator::Csr(a),
+            b,
+        },
+        opts,
+    )
+}
+
+fn exec_multi_rhs(
+    a: &Csr,
+    bs: &[Vec<f64>],
+    opts: &SolveOpts,
+    ctx: &WorkerCtx,
+) -> Result<Vec<SolveOutcome>> {
+    for b in bs {
+        if a.nrows != b.len() {
+            return Err(Error::InvalidProblem("rhs length mismatch".into()));
+        }
+    }
+    if batch_direct_eligible(a, opts) {
+        if let Ok(f) =
+            ctx.shards
+                .factor_on(ctx.idx, a, opts.host_mem_budget, Some(&ctx.shared.registry))
+        {
+            let bytes = f.bytes();
+            let method = batched_label(f.method());
+            return bs
+                .iter()
+                .map(|b| {
+                    let x = f.solve(b)?;
+                    let residual = residual_of(a, &x, b);
+                    Ok(SolveOutcome {
+                        x,
+                        backend: "native-direct",
+                        method,
+                        iters: 0,
+                        residual,
+                        peak_bytes: bytes,
+                    })
+                })
+                .collect();
+        }
+    }
+    bs.iter()
+        .map(|b| {
+            ctx.disp.solve(
+                &Problem {
+                    op: Operator::Csr(a),
+                    b,
+                },
+                opts,
+            )
+        })
+        .collect()
+}
+
+fn exec_nonlinear(
+    f: &dyn crate::nonlinear::Residual,
+    u0: &[f64],
+    opts: &crate::nonlinear::NewtonOpts,
+    ctx: &WorkerCtx,
+) -> crate::nonlinear::NonlinearResult {
+    // Newton steps solve through THIS worker's shard, so repeated
+    // nonlinear jobs inherit symbolic/numeric warmth from the shard
+    // (the Jacobian pattern is fixed across iterations).
+    let shards = ctx.shards.clone();
+    let idx = ctx.idx;
+    let reg = ctx.shared.registry.clone();
+    let mut step = move |j: &Csr, rhs: &[f64]| -> Option<Vec<f64>> {
+        let factor = shards.factor_on(idx, j, u64::MAX, Some(&reg)).ok()?;
+        factor.solve(rhs).ok()
+    };
+    crate::nonlinear::newton_with_step(f, u0, opts, &mut step)
+}
+
+fn exec_eig(
+    a: &Csr,
+    k: usize,
+    opts: &crate::eigen::LobpcgOpts,
+) -> Result<crate::eigen::EigResult> {
+    if !a.is_symmetric(1e-10) {
+        return Err(Error::InvalidProblem("eigsh needs symmetric".into()));
+    }
+    let m = crate::iterative::Jacobi::new(a)?;
+    Ok(crate::eigen::lobpcg(a, &m, k, opts))
+}
+
+fn exec_adjoint(
+    a: &Csr,
+    b: &[f64],
+    gy: &[f64],
+    opts: &SolveOpts,
+    ctx: &WorkerCtx,
+) -> Result<JobOutput> {
+    if a.nrows != b.len() || a.nrows != gy.len() {
+        return Err(Error::InvalidProblem("rhs length mismatch".into()));
+    }
+    if direct_eligible(a, opts) {
+        if let Ok(f) =
+            ctx.shards
+                .factor_on(ctx.idx, a, opts.host_mem_budget, Some(&ctx.shared.registry))
+        {
+            // ONE numeric factorization serves forward + transpose
+            // (paper Eq. 3)
+            let x = f.solve(b)?;
+            let lambda = f.solve_t(gy)?;
+            return Ok(JobOutput::Adjoint { x, lambda });
+        }
+    }
+    // dispatcher route: the adjoint framework's black-box solver hook
+    let solver = ctx.disp.solver_fn(opts.clone());
+    let pattern = crate::sparse::Pattern::of(a);
+    let x = solver(&pattern, &a.vals, b, Transpose::No)?;
+    let lambda = solver(&pattern, &a.vals, gy, Transpose::Yes)?;
+    Ok(JobOutput::Adjoint { x, lambda })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::poisson::poisson2d;
+    use crate::util::{self, Prng};
+
+    fn engine(workers: usize, fuse: BatchPolicy) -> Engine {
+        Engine::start(
+            Arc::new(Dispatcher::new(None)),
+            EngineConfig {
+                workers,
+                fuse,
+                ..Default::default()
+            },
+        )
+    }
+
+    #[test]
+    fn linear_roundtrip_through_submit() {
+        let e = engine(2, BatchPolicy::default());
+        let sys = poisson2d(8, None);
+        let mut rng = Prng::new(0);
+        let b = rng.normal_vec(64);
+        let t = e
+            .submit(JobSpec::Linear {
+                matrix: sys.matrix.clone(),
+                b: b.clone(),
+                opts: SolveOpts::default(),
+            })
+            .unwrap();
+        let r = t.wait();
+        assert_eq!(r.kind, JobKind::Linear);
+        match r.outcome.unwrap() {
+            JobOutput::Linear(out) => {
+                assert!(util::rel_l2(&sys.matrix.matvec(&out.x), &b) < 1e-8);
+            }
+            _ => panic!("wrong output family"),
+        }
+        e.shutdown();
+    }
+
+    #[test]
+    fn priority_and_order_keys_are_well_formed() {
+        // Priority ordering drives the scheduler sort
+        assert!(Priority::High > Priority::Normal);
+        assert!(Priority::Normal > Priority::Low);
+    }
+
+    #[test]
+    fn queue_full_admission_rejection() {
+        let e = Engine::start(
+            Arc::new(Dispatcher::new(None)),
+            EngineConfig {
+                workers: 1,
+                max_pending: 0,
+                ..Default::default()
+            },
+        );
+        let sys = poisson2d(4, None);
+        let err = e
+            .submit(JobSpec::Linear {
+                matrix: sys.matrix.clone(),
+                b: vec![1.0; 16],
+                opts: SolveOpts::default(),
+            })
+            .unwrap_err();
+        assert!(matches!(err, Error::QueueFull { .. }));
+        assert_eq!(e.stats().rejected, 1);
+        e.shutdown();
+    }
+
+    #[test]
+    fn stats_snapshot_has_all_kinds() {
+        let e = engine(1, BatchPolicy::default());
+        let s = e.stats();
+        assert_eq!(s.kinds.len(), 6);
+        assert_eq!(s.queue_depth, 0);
+        e.shutdown();
+    }
+}

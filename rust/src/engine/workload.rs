@@ -1,0 +1,130 @@
+//! The mixed-family demo workload, defined ONCE and shared by
+//! `rsla serve-sim --mixed` (the CI smoke job) and the `serve_mixed`
+//! bench, so both drive the SAME kind mix and cannot drift: per
+//! request index `i % 10` — 60% linear on a small set of recurring
+//! Poisson patterns, then one multi-RHS, one nonlinear (damped Newton
+//! on [`QuadPoisson`]), one eigen (LOBPCG), and alternating adjoint /
+//! distributed.
+
+use crate::backend::SolveOpts;
+use crate::distributed::{DSparseTensor, DistIterOpts, PartitionStrategy};
+use crate::eigen::LobpcgOpts;
+use crate::nonlinear::{examples::QuadPoisson, NewtonOpts};
+use crate::sparse::poisson::{poisson2d, PoissonSystem};
+use crate::util::Prng;
+
+use super::JobSpec;
+
+/// Deterministic open-loop request generator over recurring sparsity
+/// patterns.  Family opts are public knobs so the CLI demo (small
+/// grids, RCB partitions) and the bench (large grids, bounded eig /
+/// Newton budgets) tune the same generator instead of re-implementing
+/// the mix.
+pub struct MixedWorkload {
+    patterns: Vec<PoissonSystem>,
+    rng: Prng,
+    pub newton: NewtonOpts,
+    pub eig: LobpcgOpts,
+    pub dist: DistIterOpts,
+    pub dist_strategy: PartitionStrategy,
+    /// Hand the partitioner grid coordinates (RCB needs them).
+    pub dist_use_coords: bool,
+    pub dist_ranks: usize,
+    /// Right-hand sides per multi-RHS job.
+    pub multi_rhs: usize,
+}
+
+impl MixedWorkload {
+    pub fn new(grids: &[usize], seed: u64) -> Self {
+        MixedWorkload {
+            patterns: grids.iter().map(|&g| poisson2d(g, None)).collect(),
+            rng: Prng::new(seed),
+            newton: NewtonOpts::default(),
+            eig: LobpcgOpts::default(),
+            dist: DistIterOpts::default(),
+            dist_strategy: PartitionStrategy::Contiguous,
+            dist_use_coords: false,
+            dist_ranks: 2,
+            multi_rhs: 3,
+        }
+    }
+
+    /// The `i`-th request of the stream.
+    pub fn spec(&mut self, i: usize) -> JobSpec {
+        let idx = i % self.patterns.len();
+        let matrix = self.patterns[idx].matrix.clone();
+        let n = matrix.nrows;
+        match i % 10 {
+            0..=5 => JobSpec::Linear {
+                b: self.rng.normal_vec(n),
+                matrix,
+                opts: SolveOpts::default(),
+            },
+            6 => JobSpec::MultiRhs {
+                bs: (0..self.multi_rhs).map(|_| self.rng.normal_vec(n)).collect(),
+                matrix,
+                opts: SolveOpts::default(),
+            },
+            7 => JobSpec::Nonlinear {
+                residual: Box::new(QuadPoisson {
+                    a: matrix,
+                    f: (0..n).map(|_| 0.5 + self.rng.uniform()).collect(),
+                }),
+                u0: vec![0.0; n],
+                opts: self.newton.clone(),
+            },
+            8 => JobSpec::Eig {
+                matrix,
+                k: 2,
+                opts: self.eig.clone(),
+            },
+            _ => {
+                if i % 20 == 9 {
+                    JobSpec::Adjoint {
+                        b: self.rng.normal_vec(n),
+                        gy: self.rng.normal_vec(n),
+                        matrix,
+                        opts: SolveOpts::default(),
+                    }
+                } else {
+                    let tensor = {
+                        let sys = &self.patterns[idx];
+                        let coords = if self.dist_use_coords {
+                            Some(sys.coords.as_slice())
+                        } else {
+                            None
+                        };
+                        DSparseTensor::from_global(
+                            &sys.matrix,
+                            coords,
+                            self.dist_ranks,
+                            self.dist_strategy,
+                        )
+                        .expect("partition demo system")
+                    };
+                    JobSpec::Dist {
+                        tensor,
+                        b: self.rng.normal_vec(n),
+                        opts: self.dist.clone(),
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::JobKind;
+
+    #[test]
+    fn stream_covers_every_job_kind() {
+        let mut w = MixedWorkload::new(&[6, 8], 1);
+        let mut seen = [false; 6];
+        for i in 0..20 {
+            seen[w.spec(i).kind().idx()] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "20 requests must cover all kinds");
+    }
+}

@@ -45,6 +45,20 @@ pub enum Error {
     /// Distributed layer failure (rank panicked, channel closed...).
     Distributed(String),
 
+    /// Engine job missed its deadline while queued (it never executed).
+    Timeout {
+        waited_ms: u64,
+        deadline_ms: u64,
+    },
+
+    /// Engine admission control rejected the job: the pending queue is
+    /// at capacity (backpressure — resubmit later or shed load).
+    QueueFull { depth: usize, capacity: usize },
+
+    /// An engine worker panicked while executing the job.  The worker
+    /// pool survives; only this job is lost.
+    WorkerPanic(String),
+
     Io(std::io::Error),
 }
 
@@ -77,6 +91,17 @@ impl fmt::Display for Error {
             Error::Artifact(name, msg) => write!(f, "artifact '{name}' not available: {msg}"),
             Error::Autograd(msg) => write!(f, "autograd: {msg}"),
             Error::Distributed(msg) => write!(f, "distributed: {msg}"),
+            Error::Timeout {
+                waited_ms,
+                deadline_ms,
+            } => write!(
+                f,
+                "job deadline exceeded: waited {waited_ms} ms > deadline {deadline_ms} ms"
+            ),
+            Error::QueueFull { depth, capacity } => {
+                write!(f, "engine queue full: {depth} pending >= capacity {capacity}")
+            }
+            Error::WorkerPanic(msg) => write!(f, "engine worker panicked: {msg}"),
             Error::Io(e) => write!(f, "io: {e}"),
         }
     }

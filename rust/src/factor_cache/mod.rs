@@ -372,6 +372,24 @@ impl FactorCache {
         }
     }
 
+    /// True when this cache holds a VERIFIED numeric-tier entry for
+    /// exactly `a` (pattern + values).  Used by the shard layer to
+    /// account cross-shard misses: a lookup that misses here while a
+    /// sibling shard holds the factor is a scheduling failure, not a
+    /// cold matrix.
+    pub fn holds_numeric(&self, a: &Csr) -> bool {
+        let key = PatternKey::of(a);
+        let inner = self.inner.lock().unwrap();
+        match inner.numeric.get(&key) {
+            Some(e) => {
+                e.matrix.indptr == a.indptr
+                    && e.matrix.indices == a.indices
+                    && e.matrix.vals == a.vals
+            }
+            None => false,
+        }
+    }
+
     /// Numeric symmetry of `a`, served from a verified cached factor
     /// when one exists (no O(nnz) scan), computed otherwise.  Sound
     /// under hash collisions: the cached answer is only used after a
@@ -390,6 +408,88 @@ impl FactorCache {
             }
         }
         a.is_symmetric(1e-12)
+    }
+}
+
+/// Per-worker factor-cache shards for the solve engine's
+/// pattern-affinity scheduling: worker `w` factors through shard `w`,
+/// and the scheduler routes same-pattern jobs to the worker whose shard
+/// is already warm.  [`CacheShards::factor_on`] additionally accounts
+/// CROSS-SHARD traffic — a numeric miss on the probing shard while a
+/// sibling shard holds the factor means the scheduler sent the job to
+/// the wrong worker (counter `factor_cache.cross_shard_miss`); a
+/// numeric-tier hit on the probing shard is a `factor_cache.shard_local_hit`.
+pub struct CacheShards {
+    shards: Vec<Arc<FactorCache>>,
+}
+
+impl CacheShards {
+    /// `n` shards of `budget_bytes` each (n is clamped to >= 1).
+    pub fn new(n: usize, budget_bytes: u64) -> Self {
+        CacheShards {
+            shards: (0..n.max(1))
+                .map(|_| Arc::new(FactorCache::new(budget_bytes)))
+                .collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    pub fn shard(&self, i: usize) -> &Arc<FactorCache> {
+        &self.shards[i]
+    }
+
+    /// True when any shard holds a verified numeric factor for `a`.
+    pub fn any_holds(&self, a: &Csr) -> bool {
+        self.shards.iter().any(|s| s.holds_numeric(a))
+    }
+
+    /// Factor `a` through shard `i`, accounting shard-local hits and
+    /// cross-shard misses in `reg`.
+    pub fn factor_on(
+        &self,
+        i: usize,
+        a: &Csr,
+        max_fill_bytes: u64,
+        reg: Option<&metrics::Registry>,
+    ) -> Result<Arc<CachedFactor>> {
+        let shard = &self.shards[i];
+        if let Some(r) = reg {
+            if shard.holds_numeric(a) {
+                r.incr("factor_cache.shard_local_hit", 1);
+            } else if self
+                .shards
+                .iter()
+                .enumerate()
+                .any(|(j, s)| j != i && s.holds_numeric(a))
+            {
+                r.incr("factor_cache.cross_shard_miss", 1);
+            }
+        }
+        shard.factor(a, max_fill_bytes, reg)
+    }
+
+    /// Aggregate counter/byte snapshot across all shards.
+    pub fn stats(&self) -> CacheStats {
+        let mut total = CacheStats::default();
+        for s in &self.shards {
+            let st = s.stats();
+            total.hits_numeric += st.hits_numeric;
+            total.hits_symbolic += st.hits_symbolic;
+            total.misses += st.misses;
+            total.evictions += st.evictions;
+            total.collisions += st.collisions;
+            total.numeric_factorizations += st.numeric_factorizations;
+            total.bytes_current += st.bytes_current;
+            total.bytes_peak += st.bytes_peak;
+        }
+        total
     }
 }
 
@@ -590,6 +690,28 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn shards_account_local_hits_and_cross_shard_misses() {
+        let shards = CacheShards::new(2, u64::MAX);
+        let reg = metrics::Registry::new();
+        let sys = poisson2d(8, None);
+        // cold on shard 0: neither local hit nor cross-shard miss
+        shards.factor_on(0, &sys.matrix, u64::MAX, Some(&reg)).unwrap();
+        assert_eq!(reg.get("factor_cache.shard_local_hit"), 0);
+        assert_eq!(reg.get("factor_cache.cross_shard_miss"), 0);
+        // warm on shard 0: local hit
+        shards.factor_on(0, &sys.matrix, u64::MAX, Some(&reg)).unwrap();
+        assert_eq!(reg.get("factor_cache.shard_local_hit"), 1);
+        // same matrix routed to shard 1: cross-shard miss (the factor
+        // exists, just not where the job landed)
+        shards.factor_on(1, &sys.matrix, u64::MAX, Some(&reg)).unwrap();
+        assert_eq!(reg.get("factor_cache.cross_shard_miss"), 1);
+        assert!(shards.any_holds(&sys.matrix));
+        let agg = shards.stats();
+        assert_eq!(agg.misses, 2, "one cold miss per shard");
+        assert_eq!(agg.hits_numeric, 1);
     }
 
     #[test]

@@ -73,6 +73,10 @@ pub struct Amg {
     /// same-pattern) coarse operator — the Newton-loop case — reuses
     /// the numeric factor or at least its symbolic analysis.
     coarse: Arc<crate::direct::CachedFactor>,
+    /// Scratch for the coarse `solve_into` sweeps, reused across
+    /// V-cycles so the coarse correction allocates nothing per
+    /// application (pinned by the factor-solve allocation tally).
+    coarse_scratch: std::sync::Mutex<Vec<f64>>,
     opts: AmgOpts,
 }
 
@@ -234,6 +238,7 @@ impl Amg {
         Ok(Amg {
             levels,
             coarse,
+            coarse_scratch: std::sync::Mutex::new(Vec::new()),
             opts: opts.clone(),
         })
     }
@@ -268,8 +273,10 @@ impl Amg {
         let lev = &self.levels[depth];
         let n = lev.a.nrows;
         if depth + 1 == self.levels.len() {
-            let xc = self.coarse.solve(b).expect("amg coarse solve");
-            x.copy_from_slice(&xc);
+            let mut scratch = self.coarse_scratch.lock().unwrap();
+            self.coarse
+                .solve_into(b, x, &mut scratch)
+                .expect("amg coarse solve");
             return;
         }
         let mut tmp = vec![0.0; n];

@@ -15,7 +15,9 @@
 //!   unified Krylov substrate written once over `LinearOperator x
 //!   Communicator` ([`krylov`]), the distributed domain-decomposition
 //!   layer with autograd-compatible halo exchange ([`distributed`]),
-//!   and a solve service/router ([`coordinator`]).
+//!   and the solve [`engine`] — one typed submission path with
+//!   pattern-affinity scheduling for every solver family
+//!   ([`coordinator`] remains as its compatibility shim).
 //! * **L2 (python/compile/model.py)** — JAX compute graphs (fused
 //!   Jacobi-PCG, dense Cholesky solve, SpMV entry points) AOT-lowered to
 //!   HLO text artifacts.
@@ -48,6 +50,7 @@ pub mod coordinator;
 pub mod direct;
 pub mod distributed;
 pub mod eigen;
+pub mod engine;
 pub mod error;
 pub mod factor_cache;
 pub mod gradcheck;

@@ -6,6 +6,10 @@
 //!   solve --g G [--backend B]    solve a 2D Poisson system, report stats
 //!   serve-sim [--requests N]     run the solve service on a synthetic
 //!                                request stream, report throughput
+//!   serve-sim --mixed            drive a mixed-family (linear/multi-rhs/
+//!                                nonlinear/eig/adjoint/dist) open-loop
+//!                                workload through the engine; print
+//!                                per-kind p50/p95/p99 + affinity stats
 //!   dist --g G --ranks P [--precond jacobi|amg]   distributed CG demo
 
 use std::sync::Arc;
@@ -13,6 +17,7 @@ use std::sync::Arc;
 use rsla::backend::{Device, Dispatcher, Operator, Problem, SolveOpts};
 use rsla::coordinator::{ServiceConfig, SolveService};
 use rsla::distributed::{DSparseTensor, DistIterOpts, PartitionStrategy};
+use rsla::engine::{workload::MixedWorkload, Engine, EngineConfig, Ticket};
 use rsla::metrics::stopwatch::timed;
 use rsla::runtime::RuntimeHandle;
 use rsla::sparse::poisson::{kappa_star, poisson2d};
@@ -102,7 +107,7 @@ fn main() {
                  \x20 backends                      list backends + artifacts\n\
                  \x20 explain --n N [--accel]       dispatch decision for size N\n\
                  \x20 solve --g G [--backend B] [--accel]\n\
-                 \x20 serve-sim [--requests N] [--workers W]\n\
+                 \x20 serve-sim [--requests N] [--workers W] [--mixed]\n\
                  \x20 dist --g G --ranks P"
             );
         }
@@ -183,6 +188,9 @@ fn cmd_solve(args: &Args) {
 }
 
 fn cmd_serve_sim(args: &Args) {
+    if args.flags.contains("mixed") {
+        return cmd_serve_mixed(args);
+    }
     let requests = args.usize_or("requests", 64);
     let workers = args.usize_or("workers", 4);
     let d = dispatcher(false);
@@ -251,6 +259,87 @@ fn cmd_serve_sim(args: &Args) {
         count("factor_cache.numeric_factorizations"),
     );
     svc.shutdown();
+}
+
+/// Mixed-family open-loop workload through the engine: every JobKind,
+/// per-kind latency histograms, affinity hit rate, shard cache stats.
+fn cmd_serve_mixed(args: &Args) {
+    let requests = args.usize_or("requests", 96);
+    let workers = args.usize_or("workers", 4);
+    let engine = Engine::start(
+        dispatcher(false),
+        EngineConfig {
+            workers,
+            ..Default::default()
+        },
+    );
+    // the SAME generator the serve_mixed bench measures: a few small
+    // recurring patterns so affinity has something to exploit, RCB
+    // partitions for the dist jobs (the demo shows the coords path)
+    let mut workload = MixedWorkload::new(&[16, 20, 24], 42);
+    workload.dist_strategy = PartitionStrategy::Rcb;
+    workload.dist_use_coords = true;
+    workload.multi_rhs = 4;
+    let t0 = std::time::Instant::now();
+    let mut tickets: Vec<Ticket> = Vec::new();
+    for i in 0..requests {
+        tickets.push(engine.submit(workload.spec(i)).expect("admission"));
+    }
+    let mut failures = 0usize;
+    for t in tickets {
+        if t.wait().outcome.is_err() {
+            failures += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = engine.stats();
+    println!(
+        "served {requests} mixed-family jobs in {:.1} ms ({:.0} job/s), workers={workers}, failures={failures}",
+        wall * 1e3,
+        requests as f64 / wall
+    );
+    println!(
+        "| {:>9} | {:>6} | {:>9} | {:>9} | {:>9} |",
+        "kind", "count", "p50", "p95", "p99"
+    );
+    println!("|-----------|--------|-----------|-----------|-----------|");
+    for k in &stats.kinds {
+        if k.count == 0 {
+            continue;
+        }
+        println!(
+            "| {:>9} | {:>6} | {:>6.2} ms | {:>6.2} ms | {:>6.2} ms |",
+            k.kind.name(),
+            k.count,
+            k.p50 * 1e3,
+            k.p95 * 1e3,
+            k.p99 * 1e3
+        );
+    }
+    let aff_total = stats.affinity_hits + stats.affinity_misses;
+    println!(
+        "affinity: {:.0}% warm routing ({} hits / {} routed), queue depth now {}",
+        if aff_total > 0 {
+            100.0 * stats.affinity_hits as f64 / aff_total as f64
+        } else {
+            0.0
+        },
+        stats.affinity_hits,
+        aff_total,
+        stats.queue_depth
+    );
+    println!(
+        "shard factor caches: {:.0}% hit rate ({} numeric + {} symbolic hits, {} misses, {} evictions)",
+        100.0 * stats.cache_hit_rate(),
+        stats.cache.hits_numeric,
+        stats.cache.hits_symbolic,
+        stats.cache.misses,
+        stats.cache.evictions,
+    );
+    engine.shutdown();
+    if failures > 0 {
+        std::process::exit(1);
+    }
 }
 
 fn cmd_dist(args: &Args) {

@@ -1,0 +1,113 @@
+//! Lock-free log-scale latency histograms for the solve engine's
+//! per-kind p50/p95/p99 tables.
+//!
+//! Samples land in power-of-two microsecond buckets (bucket `i` covers
+//! `[2^i, 2^{i+1})` µs), so recording is one atomic increment and the
+//! memory footprint is constant regardless of traffic.  Quantiles are
+//! read back as the upper edge of the covering bucket — an upper bound
+//! with at most 2x resolution error, which is the right bias for
+//! latency SLO tables (never under-report a tail).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const BUCKETS: usize = 64;
+
+/// A fixed-footprint latency histogram; `record` is wait-free.
+pub struct LatencyHist {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHist {
+    pub fn new() -> Self {
+        LatencyHist {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(seconds: f64) -> usize {
+        let us = (seconds * 1e6).max(0.0) as u64;
+        // us in [2^i, 2^{i+1}) -> i; sub-microsecond samples land in 0
+        (63 - us.max(1).leading_zeros() as usize).min(BUCKETS - 1)
+    }
+
+    pub fn record(&self, seconds: f64) {
+        let idx = Self::bucket_of(seconds);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Latency (seconds) below which at least a fraction `q` of the
+    /// recorded samples fall, reported as the covering bucket's upper
+    /// edge.  Returns 0.0 for an empty histogram.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                // upper edge of bucket i: 2^{i+1} microseconds
+                return 2f64.powi(i as i32 + 1) * 1e-6;
+            }
+        }
+        2f64.powi(BUCKETS as i32) * 1e-6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_bound_known_samples() {
+        let h = LatencyHist::new();
+        // 99 fast samples at ~100us, one slow at ~50ms
+        for _ in 0..99 {
+            h.record(100e-6);
+        }
+        h.record(50e-3);
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile(0.50);
+        let p99 = h.quantile(0.99);
+        let p999 = h.quantile(0.999);
+        // p50/p99 cover the fast mode (within one power of two above)
+        assert!(p50 >= 100e-6 && p50 <= 400e-6, "p50 = {p50}");
+        assert!(p99 <= 400e-6, "p99 = {p99}");
+        // the extreme tail sees the slow sample
+        assert!(p999 >= 50e-3 && p999 <= 200e-3, "p999 = {p999}");
+        // monotone in q
+        assert!(p50 <= p99 && p99 <= p999);
+    }
+
+    #[test]
+    fn empty_histogram_reads_zero() {
+        let h = LatencyHist::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.99), 0.0);
+    }
+
+    #[test]
+    fn sub_microsecond_and_huge_samples_stay_in_range() {
+        let h = LatencyHist::new();
+        h.record(0.0);
+        h.record(1e-9);
+        h.record(1e9);
+        assert_eq!(h.count(), 3);
+        assert!(h.quantile(1.0).is_finite());
+    }
+}

@@ -122,6 +122,22 @@ pub fn csr_bytes(nrows: usize, nnz: usize) -> u64 {
     ((nrows + 1) * 8 + nnz * 16) as u64
 }
 
+/// Process-wide tally of bytes allocated by `CachedFactor::solve` /
+/// `solve_t` (each returns a fresh `Vec`).  `solve_into` adds nothing,
+/// which is exactly what the serve bench asserts for per-Krylov-
+/// iteration preconditioner applications (`BlockDirect`, AMG's coarse
+/// solve): a measured zero, not a claim.
+static FACTOR_SOLVE_ALLOC: AtomicU64 = AtomicU64::new(0);
+
+pub fn note_factor_solve_alloc(bytes: u64) {
+    FACTOR_SOLVE_ALLOC.fetch_add(bytes, Ordering::Relaxed);
+}
+
+/// Cumulative bytes allocated by factor solves so far (monotonic).
+pub fn factor_solve_alloc_bytes() -> u64 {
+    FACTOR_SOLVE_ALLOC.load(Ordering::Relaxed)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

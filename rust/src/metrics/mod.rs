@@ -8,9 +8,11 @@
 //! configurable budget before running — reproducing the OOM rows as
 //! budget violations backed by real byte counts.
 
+pub mod hist;
 pub mod mem;
 pub mod stopwatch;
 
+pub use hist::LatencyHist;
 pub use mem::MemTracker;
 pub use stopwatch::Stopwatch;
 

@@ -1,0 +1,98 @@
+//! Shared example residuals: the nonlinearities the benches, tests,
+//! and CLI demos put on the solvers.  Defined ONCE here so every
+//! harness exercises the same F (previously each site carried its own
+//! copy of the paper's quadratic Poisson and they could drift).
+
+use super::{KrylovResidual, Residual};
+use crate::sparse::{Coo, Csr};
+
+/// The paper's example nonlinearity `F(u) = A u + u^2 - f` (Table 5's
+/// nonlinear row): a Poisson-like operator plus a pointwise quadratic,
+/// with `theta = f` as the differentiable parameter (`dF/df = -I`).
+///
+/// Implements both residual interfaces: [`Residual`] (assembled
+/// Jacobian `J = A + 2 diag(u)`) for damped Newton and the adjoint
+/// framework, and [`KrylovResidual`] (`J v = A v + 2 u .* v`, no
+/// assembly) for matrix-free Newton–Krylov.
+pub struct QuadPoisson {
+    pub a: Csr,
+    pub f: Vec<f64>,
+}
+
+impl Residual for QuadPoisson {
+    fn dim(&self) -> usize {
+        self.f.len()
+    }
+
+    fn eval(&self, u: &[f64], out: &mut [f64]) {
+        self.a.spmv(u, out);
+        for i in 0..u.len() {
+            out[i] += u[i] * u[i] - self.f[i];
+        }
+    }
+
+    fn jacobian(&self, u: &[f64]) -> Csr {
+        let n = self.a.nrows;
+        let mut coo = Coo::with_capacity(n, n, self.a.nnz() + n);
+        for r in 0..n {
+            let (cols, vals) = self.a.row(r);
+            for (c, v) in cols.iter().zip(vals) {
+                coo.push(r, *c, *v);
+            }
+            coo.push(r, r, 2.0 * u[r]);
+        }
+        coo.to_csr()
+    }
+
+    fn vjp_theta(&self, _u: &[f64], w: &[f64]) -> Vec<f64> {
+        // theta = f and dF/df = -I, so w^T dF/df = -w
+        w.iter().map(|x| -x).collect()
+    }
+}
+
+impl KrylovResidual for QuadPoisson {
+    fn n_own(&self) -> usize {
+        self.f.len()
+    }
+
+    fn eval(&self, u_ext: &mut [f64], out_own: &mut [f64]) {
+        Residual::eval(self, u_ext, out_own);
+    }
+
+    fn jv(&self, u_ext: &[f64], v_ext: &mut [f64], y_own: &mut [f64]) {
+        // J v = A v + 2 u .* v
+        self.a.spmv(v_ext, y_own);
+        for i in 0..y_own.len() {
+            y_own[i] += 2.0 * u_ext[i] * v_ext[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::poisson::poisson2d;
+    use crate::util::{norm2, Prng};
+
+    #[test]
+    fn assembled_jacobian_matches_matrix_free_jv() {
+        let sys = poisson2d(6, None);
+        let n = 36;
+        let mut rng = Prng::new(8);
+        let r = QuadPoisson {
+            a: sys.matrix,
+            f: vec![1.0; n],
+        };
+        let u = rng.normal_vec(n);
+        let mut v = rng.normal_vec(n);
+        let jv_assembled = Residual::jacobian(&r, &u).matvec(&v);
+        let mut jv_free = vec![0.0; n];
+        KrylovResidual::jv(&r, &u, &mut v, &mut jv_free);
+        let diff: Vec<f64> = jv_assembled
+            .iter()
+            .zip(&jv_free)
+            .map(|(a, b)| a - b)
+            .collect();
+        assert!(norm2(&diff) < 1e-12 * norm2(&jv_assembled).max(1.0));
+    }
+}

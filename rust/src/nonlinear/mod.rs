@@ -7,11 +7,12 @@
 //! — the adjoint solve `J^T lambda = dL/du` in [`crate::adjoint`].
 
 pub mod anderson;
+pub mod examples;
 pub mod newton;
 pub mod picard;
 
 pub use anderson::anderson;
-pub use newton::{newton, newton_krylov, newton_krylov_serial, NewtonOpts};
+pub use newton::{newton, newton_krylov, newton_krylov_serial, newton_with_step, NewtonOpts};
 pub use picard::{picard, PicardOpts};
 
 use crate::sparse::Csr;

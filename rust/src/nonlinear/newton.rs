@@ -43,36 +43,95 @@ impl Default for NewtonOpts {
     }
 }
 
-/// Solve F(u) = 0 by Newton's method from `u0`.
-pub fn newton(f: &dyn Residual, u0: &[f64], opts: &NewtonOpts) -> NonlinearResult {
-    let n = f.dim();
-    assert_eq!(u0.len(), n);
-    let mut u = u0.to_vec();
+/// What one Newton instantiation must provide to the shared outer
+/// driver: a residual evaluation, a (global) norm, and a step solver.
+/// Both the assembled-Jacobian and matrix-free Newton–Krylov paths are
+/// instantiations of [`damped_newton`] over this trait, so the outer
+/// control flows CANNOT diverge — there is only one (pinned bitwise by
+/// `tests/newton_equivalence.rs` against the frozen pre-refactor
+/// loops).
+trait NewtonFlow {
+    /// Entries owned by this rank (serial: the full dimension).
+    fn n_own(&self) -> usize;
+
+    /// Extended workspace length (owned + halo); `n_own` for serial.
+    fn n_ext(&self) -> usize {
+        self.n_own()
+    }
+
+    /// `out = F(u)` on owned rows; may refresh `u_ext`'s halo tail.
+    fn eval(&mut self, u_ext: &mut [f64], out_own: &mut [f64]);
+
+    /// Globally-reduced Euclidean norm of an owned vector.
+    fn norm(&mut self, v: &[f64]) -> f64;
+
+    /// Solve the Newton step `J(u) du = rhs`.  `None` signals a
+    /// degenerate step (singular Jacobian, non-finite Krylov iterate);
+    /// the driver returns the best iterate so far.  Implementations
+    /// with a rank team must make the degeneracy decision GLOBAL so
+    /// control flow cannot desynchronize across ranks.
+    fn solve_step(&mut self, u_ext: &[f64], rhs: &[f64]) -> Option<Vec<f64>>;
+
+    /// Whether a degenerate `solve_step` still consumed a linear solve.
+    /// The matrix-free flow runs GMRES BEFORE it can see the non-finite
+    /// iterate, so its failed step counts (matching the pre-refactor
+    /// `newton_krylov`); a failed direct factorization never reached a
+    /// solve, so the assembled flow's does not (matching `newton`).
+    fn failed_step_counts(&self) -> bool {
+        false
+    }
+}
+
+/// The ONE damped-Newton outer loop: residual evaluation, step solve,
+/// Armijo-style backtracking on the (global) ||F||, full-step fallback,
+/// fixed-iteration mode.  Works on the extended (owned + halo) layout;
+/// serial instantiations have an empty halo tail.
+fn damped_newton<F: NewtonFlow>(
+    flow: &mut F,
+    u0_own: &[f64],
+    opts: &NewtonOpts,
+) -> NonlinearResult {
+    let n = flow.n_own();
+    assert_eq!(u0_own.len(), n);
+    let n_ext = flow.n_ext();
+    let mut u_ext = vec![0.0; n_ext];
+    u_ext[..n].copy_from_slice(u0_own);
     let mut fu = vec![0.0; n];
-    f.eval(&u, &mut fu);
-    let mut fnorm = norm2(&fu);
+    flow.eval(&mut u_ext, &mut fu);
+    let mut fnorm = flow.norm(&fu);
     let mut linear_solves = 0;
+    let mut trial_ext = vec![0.0; n_ext];
 
     let mut iters = 0;
     while iters < opts.max_iters && (opts.fixed_iters || fnorm > opts.tol) {
-        let j = f.jacobian(&u);
         // Newton step: J du = -F
         let rhs: Vec<f64> = fu.iter().map(|x| -x).collect();
-        let du = match cached_direct_solve(&j, &rhs) {
-            Ok(d) => d,
-            Err(_) => break, // singular Jacobian: return best iterate
+        let du = match flow.solve_step(&u_ext, &rhs) {
+            Some(du) => du,
+            None => {
+                // degenerate Jacobian: return best iterate
+                if flow.failed_step_counts() {
+                    linear_solves += 1;
+                }
+                break;
+            }
         };
         linear_solves += 1;
-        // backtracking line search on ||F||
+        // backtracking line search on the (global) ||F||
         let mut t = 1.0;
         let mut accepted = false;
         for _ in 0..=opts.max_halvings {
-            let trial: Vec<f64> = u.iter().zip(&du).map(|(ui, di)| ui + t * di).collect();
+            for i in 0..n {
+                trial_ext[i] = u_ext[i] + t * du[i];
+            }
             let mut ftrial = vec![0.0; n];
-            f.eval(&trial, &mut ftrial);
-            let fn_trial = norm2(&ftrial);
+            flow.eval(&mut trial_ext, &mut ftrial);
+            let fn_trial = flow.norm(&ftrial);
             if fn_trial < fnorm || opts.max_halvings == 0 {
-                u = trial;
+                // full extended copy: the eval above refreshed
+                // trial_ext's halo, and the next step solve is promised
+                // a CURRENT halo on u_ext
+                u_ext.copy_from_slice(&trial_ext);
                 fu = ftrial;
                 fnorm = fn_trial;
                 accepted = true;
@@ -83,21 +142,71 @@ pub fn newton(f: &dyn Residual, u0: &[f64], opts: &NewtonOpts) -> NonlinearResul
         if !accepted {
             // full step as a last resort (keeps fixed_iters semantics)
             for i in 0..n {
-                u[i] += du[i];
+                u_ext[i] += du[i];
             }
-            f.eval(&u, &mut fu);
-            fnorm = norm2(&fu);
+            flow.eval(&mut u_ext, &mut fu);
+            fnorm = flow.norm(&fu);
         }
         iters += 1;
     }
 
     NonlinearResult {
         converged: fnorm <= opts.tol,
-        u,
+        u: u_ext[..n].to_vec(),
         iters,
         residual_norm: fnorm,
         linear_solves,
     }
+}
+
+/// Assembled-Jacobian instantiation: serial layout, `norm2`, and a
+/// pluggable linear step solver over the assembled `J`.
+struct AssembledFlow<'a> {
+    f: &'a dyn Residual,
+    step: &'a mut dyn FnMut(&crate::sparse::Csr, &[f64]) -> Option<Vec<f64>>,
+}
+
+impl NewtonFlow for AssembledFlow<'_> {
+    fn n_own(&self) -> usize {
+        self.f.dim()
+    }
+
+    fn eval(&mut self, u_ext: &mut [f64], out_own: &mut [f64]) {
+        self.f.eval(u_ext, out_own);
+    }
+
+    fn norm(&mut self, v: &[f64]) -> f64 {
+        norm2(v)
+    }
+
+    fn solve_step(&mut self, u_ext: &[f64], rhs: &[f64]) -> Option<Vec<f64>> {
+        let j = self.f.jacobian(u_ext);
+        (self.step)(&j, rhs)
+    }
+}
+
+/// Solve F(u) = 0 by damped Newton from `u0`, each step solved through
+/// the pattern-keyed factor cache (iteration 1 pays the symbolic
+/// analysis; later iterations refactor numerically only).
+pub fn newton(f: &dyn Residual, u0: &[f64], opts: &NewtonOpts) -> NonlinearResult {
+    let mut step =
+        |j: &crate::sparse::Csr, rhs: &[f64]| cached_direct_solve(j, rhs).ok();
+    newton_with_step(f, u0, opts, &mut step)
+}
+
+/// Damped Newton over a caller-supplied step solver (`None` = singular
+/// Jacobian, return best iterate).  The engine's workers pass a
+/// shard-local factor-cache solve here so Newton jobs inherit
+/// pattern-affinity warmth; `newton` itself is the process-wide-cache
+/// instantiation.
+pub fn newton_with_step(
+    f: &dyn Residual,
+    u0: &[f64],
+    opts: &NewtonOpts,
+    step: &mut dyn FnMut(&crate::sparse::Csr, &[f64]) -> Option<Vec<f64>>,
+) -> NonlinearResult {
+    let mut flow = AssembledFlow { f, step };
+    damped_newton(&mut flow, u0, opts)
 }
 
 /// The matrix-free Jacobian as a [`LinearOperator`]: `J(u) v` through
@@ -121,6 +230,53 @@ impl LinearOperator for JvOp<'_> {
     }
 }
 
+/// Matrix-free instantiation: extended (owned + halo) layout, global
+/// norms via `comm`, GMRES step through JVPs, with the degenerate-step
+/// decision made GLOBALLY (a NaN on one rank with divergent control
+/// flow would deadlock the team).
+struct KrylovFlow<'a> {
+    f: &'a dyn KrylovResidual,
+    comm: &'a dyn Communicator,
+    inner: &'a IterOpts,
+}
+
+impl NewtonFlow for KrylovFlow<'_> {
+    fn n_own(&self) -> usize {
+        self.f.n_own()
+    }
+
+    fn n_ext(&self) -> usize {
+        self.f.n_ext()
+    }
+
+    fn eval(&mut self, u_ext: &mut [f64], out_own: &mut [f64]) {
+        self.f.eval(u_ext, out_own);
+    }
+
+    fn norm(&mut self, v: &[f64]) -> f64 {
+        gdot(self.comm, v, v).sqrt()
+    }
+
+    fn solve_step(&mut self, u_ext: &[f64], rhs: &[f64]) -> Option<Vec<f64>> {
+        // matrix-free GMRES (the Jacobian is nonsymmetric in general)
+        let res = {
+            let jop = JvOp { f: self.f, u_ext };
+            krylov::gmres(&jop, rhs, &Identity, 50, self.comm, self.inner, None)
+        };
+        let du = res.x;
+        let local_bad = if du.iter().any(|d| !d.is_finite()) { 1.0 } else { 0.0 };
+        if self.comm.all_reduce_sum(local_bad) > 0.0 {
+            None
+        } else {
+            Some(du)
+        }
+    }
+
+    fn failed_step_counts(&self) -> bool {
+        true // GMRES ran before the finiteness check
+    }
+}
+
 /// Matrix-free (Jacobian-free) Newton–Krylov: solve `F(u) = 0` from
 /// `u0_own`, each step solved by the generic GMRES kernel applying `J`
 /// through JVPs.  `comm` makes the same body serial ([`NullComm`]) or
@@ -132,74 +288,8 @@ pub fn newton_krylov(
     opts: &NewtonOpts,
     inner: &IterOpts,
 ) -> NonlinearResult {
-    let n = f.n_own();
-    assert_eq!(u0_own.len(), n);
-    let n_ext = f.n_ext();
-    let mut u_ext = vec![0.0; n_ext];
-    u_ext[..n].copy_from_slice(u0_own);
-    let mut fu = vec![0.0; n];
-    f.eval(&mut u_ext, &mut fu);
-    let mut fnorm = gdot(comm, &fu, &fu).sqrt();
-    let mut linear_solves = 0;
-    let mut trial_ext = vec![0.0; n_ext];
-
-    let mut iters = 0;
-    while iters < opts.max_iters && (opts.fixed_iters || fnorm > opts.tol) {
-        // Newton step: J du = -F, matrix-free GMRES (the Jacobian is
-        // nonsymmetric in general)
-        let rhs: Vec<f64> = fu.iter().map(|x| -x).collect();
-        let res = {
-            let jop = JvOp { f, u_ext: &u_ext };
-            krylov::gmres(&jop, &rhs, &Identity, 50, comm, inner, None)
-        };
-        linear_solves += 1;
-        let du = res.x;
-        // degenerate-step check must be a GLOBAL decision: a NaN on one
-        // rank with divergent control flow would deadlock the team
-        let local_bad = if du.iter().any(|d| !d.is_finite()) { 1.0 } else { 0.0 };
-        if comm.all_reduce_sum(local_bad) > 0.0 {
-            break; // degenerate Jacobian: return best iterate
-        }
-        // backtracking line search on the GLOBAL ||F||
-        let mut t = 1.0;
-        let mut accepted = false;
-        for _ in 0..=opts.max_halvings {
-            for i in 0..n {
-                trial_ext[i] = u_ext[i] + t * du[i];
-            }
-            let mut ftrial = vec![0.0; n];
-            f.eval(&mut trial_ext, &mut ftrial);
-            let fn_trial = gdot(comm, &ftrial, &ftrial).sqrt();
-            if fn_trial < fnorm || opts.max_halvings == 0 {
-                // full extended copy: the eval above refreshed
-                // trial_ext's halo, and jv's contract promises the next
-                // JvOp a CURRENT halo on u_ext
-                u_ext.copy_from_slice(&trial_ext);
-                fu = ftrial;
-                fnorm = fn_trial;
-                accepted = true;
-                break;
-            }
-            t *= 0.5;
-        }
-        if !accepted {
-            // full step as a last resort (keeps fixed_iters semantics)
-            for i in 0..n {
-                u_ext[i] += du[i];
-            }
-            f.eval(&mut u_ext, &mut fu);
-            fnorm = gdot(comm, &fu, &fu).sqrt();
-        }
-        iters += 1;
-    }
-
-    NonlinearResult {
-        converged: fnorm <= opts.tol,
-        u: u_ext[..n].to_vec(),
-        iters,
-        residual_norm: fnorm,
-        linear_solves,
-    }
+    let mut flow = KrylovFlow { f, comm, inner };
+    damped_newton(&mut flow, u0_own, opts)
 }
 
 /// Serial convenience wrapper: matrix-free Newton–Krylov on any

@@ -27,6 +27,16 @@ pub struct SparseTensor {
     /// structured grid (unlocks the fused cg_poisson artifacts).
     stencil: Option<Vec<StencilCoeffs>>,
     dispatcher: Arc<Dispatcher>,
+    /// Route `solve`/`solve_batch`/`eigsh` through the process-global
+    /// solve engine (pattern-affinity scheduling, per-kind metrics)
+    /// instead of calling the dispatcher inline.  Off by default;
+    /// enable per tensor with [`SparseTensor::via_engine`] or process-
+    /// wide with `RSLA_ENGINE=1`.
+    use_engine: bool,
+    /// Set by [`SparseTensor::with_dispatcher`]; a tensor with a
+    /// caller-chosen dispatcher never routes through the global engine
+    /// (whose workers hold the default dispatcher).
+    custom_dispatcher: bool,
 }
 
 impl SparseTensor {
@@ -37,6 +47,8 @@ impl SparseTensor {
             vals: vec![m.vals],
             stencil: None,
             dispatcher: Arc::new(Dispatcher::new(None)),
+            use_engine: false,
+            custom_dispatcher: false,
         }
     }
 
@@ -62,6 +74,8 @@ impl SparseTensor {
             vals: vec![m.vals],
             stencil: Some(vec![s]),
             dispatcher: Arc::new(Dispatcher::new(None)),
+            use_engine: false,
+            custom_dispatcher: false,
         }
     }
 
@@ -81,6 +95,8 @@ impl SparseTensor {
             vals,
             stencil: None,
             dispatcher: Arc::new(Dispatcher::new(None)),
+            use_engine: false,
+            custom_dispatcher: false,
         })
     }
 
@@ -89,7 +105,37 @@ impl SparseTensor {
     /// device in SolveOpts.
     pub fn with_dispatcher(mut self, d: Arc<Dispatcher>) -> Self {
         self.dispatcher = d;
+        self.custom_dispatcher = true;
         self
+    }
+
+    /// Route solves/eigsh through the process-global solve engine
+    /// ([`crate::engine::Engine::global`]): requests join the shared
+    /// scheduling queue, gain pattern-affinity factor-cache locality and
+    /// per-kind latency metrics, and may fuse with same-(pattern,
+    /// values) traffic from other callers.  Results are identical to
+    /// the inline path (the engine's direct route runs the same
+    /// factorizations).
+    ///
+    /// The engine route only applies to tensors on the DEFAULT
+    /// dispatcher with no stencil operator: the global engine's workers
+    /// hold the default (native) dispatcher, so a tensor configured via
+    /// [`SparseTensor::with_dispatcher`] (e.g. XLA backends) or one
+    /// built from a stencil keeps its inline path — routing those
+    /// through the engine would silently drop the caller's backend
+    /// choice or the stencil fast path.
+    pub fn via_engine(mut self, on: bool) -> Self {
+        self.use_engine = on;
+        self
+    }
+
+    fn engine_enabled(&self) -> bool {
+        // read the env flag once per process: this sits on every
+        // solve/eigsh call and must not take the environment lock
+        static ENV_ENGINE: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+        let env_on = *ENV_ENGINE
+            .get_or_init(|| std::env::var("RSLA_ENGINE").map(|v| v == "1").unwrap_or(false));
+        (self.use_engine || env_on) && !self.custom_dispatcher && self.stencil.is_none()
     }
 
     pub fn pattern(&self) -> &Pattern {
@@ -134,6 +180,17 @@ impl SparseTensor {
 
     /// Solve with the full outcome report (backend, iters, memory).
     pub fn solve_full(&self, batch: usize, b: &[f64], opts: &SolveOpts) -> Result<SolveOutcome> {
+        if self.engine_enabled() {
+            let ticket = crate::engine::Engine::global().submit(crate::engine::JobSpec::Linear {
+                matrix: self.to_csr(batch),
+                b: b.to_vec(),
+                opts: opts.clone(),
+            })?;
+            return match ticket.wait().outcome? {
+                crate::engine::JobOutput::Linear(out) => Ok(out),
+                _ => unreachable!("linear job produced a non-linear output"),
+            };
+        }
         let (st, csr) = self.problem_op(batch);
         let p = match st {
             Some(s) => Problem {
@@ -153,9 +210,24 @@ impl SparseTensor {
     /// dispatch applies.
     pub fn solve_batch(&self, bs: &[Vec<f64>], opts: &SolveOpts) -> Result<Vec<Vec<f64>>> {
         if bs.len() != self.batch_size() && self.batch_size() == 1 {
-            // one matrix, many rhs: ONE cached factorization serves the
-            // whole sweep (and later sweeps on the same values — or,
-            // through the symbolic tier, on updated values)
+            // one matrix, many rhs: ONE factorization serves the whole
+            // sweep.  Through the engine this is a single MultiRhs job
+            // (the worker's shard holds the factor); inline it goes
+            // through the process-wide cache as before.
+            if self.engine_enabled() {
+                let ticket =
+                    crate::engine::Engine::global().submit(crate::engine::JobSpec::MultiRhs {
+                        matrix: self.to_csr(0),
+                        bs: bs.to_vec(),
+                        opts: opts.clone(),
+                    })?;
+                return match ticket.wait().outcome? {
+                    crate::engine::JobOutput::MultiRhs(outs) => {
+                        Ok(outs.into_iter().map(|o| o.x).collect())
+                    }
+                    _ => unreachable!("multi-rhs job produced a different output"),
+                };
+            }
             let a = self.to_csr(0);
             let f = FactorCache::global().factor(&a, u64::MAX, None)?;
             return bs.iter().map(|b| f.solve(b)).collect();
@@ -203,6 +275,17 @@ impl SparseTensor {
 
     /// Non-differentiable eigsh (first batch element).
     pub fn eigsh(&self, k: usize, opts: &LobpcgOpts) -> Result<EigResult> {
+        if self.engine_enabled() {
+            let ticket = crate::engine::Engine::global().submit(crate::engine::JobSpec::Eig {
+                matrix: self.to_csr(0),
+                k,
+                opts: opts.clone(),
+            })?;
+            return match ticket.wait().outcome? {
+                crate::engine::JobOutput::Eig(r) => Ok(r),
+                _ => unreachable!("eig job produced a different output"),
+            };
+        }
         let a = self.to_csr(0);
         if !a.is_symmetric(1e-10) {
             return Err(Error::InvalidProblem("eigsh needs symmetric".into()));
@@ -326,6 +409,31 @@ mod tests {
         let r = t.eigsh(2, &LobpcgOpts::default()).unwrap();
         assert_eq!(r.values.len(), 2);
         assert!(r.values[0] > 0.0 && r.values[0] <= r.values[1]);
+    }
+
+    #[test]
+    fn engine_path_matches_inline_path() {
+        // via_engine routes through the process-global engine; results
+        // must match the inline dispatcher path (same factorizations).
+        let sys = poisson2d(8, None);
+        let mut rng = Prng::new(7);
+        let b = rng.normal_vec(64);
+        let inline = SparseTensor::from_csr(sys.matrix.clone());
+        let engined = SparseTensor::from_csr(sys.matrix.clone()).via_engine(true);
+        let x0 = inline.solve(&b, &SolveOpts::default()).unwrap();
+        let x1 = engined.solve(&b, &SolveOpts::default()).unwrap();
+        assert!(util::rel_l2(&x1, &x0) < 1e-12);
+        // multi-rhs sweep through a single MultiRhs job
+        let bs: Vec<Vec<f64>> = (0..3).map(|_| rng.normal_vec(64)).collect();
+        let xs0 = inline.solve_batch(&bs, &SolveOpts::default()).unwrap();
+        let xs1 = engined.solve_batch(&bs, &SolveOpts::default()).unwrap();
+        assert_eq!(xs0, xs1, "engine multi-rhs must be bitwise identical");
+        // eigsh as an Eig job
+        let e0 = inline.eigsh(2, &crate::eigen::LobpcgOpts::default()).unwrap();
+        let e1 = engined.eigsh(2, &crate::eigen::LobpcgOpts::default()).unwrap();
+        for (a, b) in e0.values.iter().zip(&e1.values) {
+            assert!((a - b).abs() < 1e-9 * b.abs().max(1.0));
+        }
     }
 
     #[test]

@@ -1,0 +1,437 @@
+//! End-to-end suite for the solve engine: every [`JobKind`] executes
+//! through `Engine::submit`, multi-RHS fusion is bitwise-identical to
+//! per-request solves (the acceptance pin), pattern-affinity routing
+//! measurably beats round-robin on shard warmth, and priority ordering
+//! holds inside a scheduling window.
+
+use std::sync::{Arc, Mutex};
+
+use rsla::backend::{Dispatcher, SolveOpts};
+use rsla::distributed::{DSparseTensor, DistIterOpts, PartitionStrategy};
+use rsla::eigen::LobpcgOpts;
+use rsla::engine::{
+    BatchPolicy, Engine, EngineConfig, JobKind, JobOutput, JobSpec, Priority, SubmitOpts,
+};
+use rsla::nonlinear::{examples::QuadPoisson, NewtonOpts, Residual};
+use rsla::sparse::graphs::random_nonsymmetric;
+use rsla::sparse::poisson::poisson2d;
+use rsla::util::{self, Prng};
+
+fn engine(workers: usize, fuse: BatchPolicy, affinity: bool) -> Engine {
+    Engine::start(
+        Arc::new(Dispatcher::new(None)),
+        EngineConfig {
+            workers,
+            fuse,
+            affinity,
+            ..Default::default()
+        },
+    )
+}
+
+fn no_fusion() -> BatchPolicy {
+    BatchPolicy {
+        max_batch: 1,
+        window: std::time::Duration::from_millis(1),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Acceptance: all six JobKinds execute through Engine::submit
+// ---------------------------------------------------------------------
+
+#[test]
+fn all_six_jobkinds_execute_through_submit() {
+    let e = engine(2, BatchPolicy::default(), true);
+    let sys = poisson2d(8, None);
+    let n = 64;
+    let mut rng = Prng::new(3);
+
+    // Linear
+    let b = rng.normal_vec(n);
+    let r = e
+        .submit(JobSpec::Linear {
+            matrix: sys.matrix.clone(),
+            b: b.clone(),
+            opts: SolveOpts::default(),
+        })
+        .unwrap()
+        .wait();
+    assert_eq!(r.kind, JobKind::Linear);
+    match r.outcome.unwrap() {
+        JobOutput::Linear(out) => {
+            assert!(util::rel_l2(&sys.matrix.matvec(&out.x), &b) < 1e-8)
+        }
+        _ => panic!("linear job produced wrong output family"),
+    }
+
+    // MultiRhs
+    let bs: Vec<Vec<f64>> = (0..3).map(|_| rng.normal_vec(n)).collect();
+    let r = e
+        .submit(JobSpec::MultiRhs {
+            matrix: sys.matrix.clone(),
+            bs: bs.clone(),
+            opts: SolveOpts::default(),
+        })
+        .unwrap()
+        .wait();
+    assert_eq!(r.kind, JobKind::MultiRhs);
+    match r.outcome.unwrap() {
+        JobOutput::MultiRhs(outs) => {
+            assert_eq!(outs.len(), 3);
+            for (out, b) in outs.iter().zip(&bs) {
+                assert!(util::rel_l2(&sys.matrix.matvec(&out.x), b) < 1e-8);
+            }
+        }
+        _ => panic!("multi-rhs job produced wrong output family"),
+    }
+
+    // Nonlinear
+    let res = QuadPoisson {
+        a: sys.matrix.clone(),
+        f: vec![1.0; n],
+    };
+    let probe = QuadPoisson {
+        a: sys.matrix.clone(),
+        f: vec![1.0; n],
+    };
+    let r = e
+        .submit(JobSpec::Nonlinear {
+            residual: Box::new(res),
+            u0: vec![0.0; n],
+            opts: NewtonOpts::default(),
+        })
+        .unwrap()
+        .wait();
+    assert_eq!(r.kind, JobKind::Nonlinear);
+    match r.outcome.unwrap() {
+        JobOutput::Nonlinear(nl) => {
+            assert!(nl.converged, "Newton did not converge through the engine");
+            let mut fu = vec![0.0; n];
+            probe.eval(&nl.u, &mut fu);
+            assert!(util::norm2(&fu) < 1e-8);
+        }
+        _ => panic!("nonlinear job produced wrong output family"),
+    }
+
+    // Eig
+    let r = e
+        .submit(JobSpec::Eig {
+            matrix: sys.matrix.clone(),
+            k: 2,
+            opts: LobpcgOpts::default(),
+        })
+        .unwrap()
+        .wait();
+    assert_eq!(r.kind, JobKind::Eig);
+    match r.outcome.unwrap() {
+        JobOutput::Eig(eig) => {
+            assert_eq!(eig.values.len(), 2);
+            assert!(eig.values[0] > 0.0 && eig.values[0] <= eig.values[1]);
+        }
+        _ => panic!("eig job produced wrong output family"),
+    }
+
+    // Adjoint: one factorization serves forward + transpose; verify on
+    // a NONsymmetric matrix so the transpose is observable.
+    let a = random_nonsymmetric(&mut rng, 30, 3);
+    let b = rng.normal_vec(30);
+    let gy = rng.normal_vec(30);
+    let r = e
+        .submit(JobSpec::Adjoint {
+            matrix: a.clone(),
+            b: b.clone(),
+            gy: gy.clone(),
+            opts: SolveOpts::default(),
+        })
+        .unwrap()
+        .wait();
+    assert_eq!(r.kind, JobKind::Adjoint);
+    match r.outcome.unwrap() {
+        JobOutput::Adjoint { x, lambda } => {
+            assert!(util::rel_l2(&a.matvec(&x), &b) < 1e-8);
+            let mut aty = vec![0.0; 30];
+            a.spmv_t(&lambda, &mut aty);
+            assert!(util::rel_l2(&aty, &gy) < 1e-8);
+        }
+        _ => panic!("adjoint job produced wrong output family"),
+    }
+
+    // Dist: the worker launches and manages the rank team.
+    let t = DSparseTensor::from_global(&sys.matrix, None, 2, PartitionStrategy::Contiguous)
+        .unwrap();
+    let b = rng.normal_vec(n);
+    let r = e
+        .submit(JobSpec::Dist {
+            tensor: t,
+            b: b.clone(),
+            opts: DistIterOpts::default(),
+        })
+        .unwrap()
+        .wait();
+    assert_eq!(r.kind, JobKind::Dist);
+    match r.outcome.unwrap() {
+        JobOutput::Dist { x, reports } => {
+            assert_eq!(reports.len(), 2);
+            assert!(reports.iter().all(|r| r.converged));
+            assert!(util::rel_l2(&sys.matrix.matvec(&x), &b) < 1e-6);
+        }
+        _ => panic!("dist job produced wrong output family"),
+    }
+
+    // every kind showed up in the per-kind histograms
+    let stats = e.stats();
+    for k in &stats.kinds {
+        assert!(k.count >= 1, "kind {:?} never recorded a latency", k.kind);
+    }
+    assert_eq!(stats.queue_depth, 0);
+    e.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Acceptance: multi-RHS fusion output is bitwise-identical to
+// per-request solves
+// ---------------------------------------------------------------------
+
+#[test]
+fn fused_batch_is_bitwise_identical_to_per_request_solves() {
+    let sys = poisson2d(9, None);
+    let n = 81;
+    let mut rng = Prng::new(5);
+    let bs: Vec<Vec<f64>> = (0..6).map(|_| rng.normal_vec(n)).collect();
+
+    // fusion ON: submit the burst before waiting so the window groups it
+    let fused_engine = engine(
+        1,
+        BatchPolicy {
+            max_batch: 16,
+            window: std::time::Duration::from_millis(50),
+        },
+        true,
+    );
+    let tickets: Vec<_> = bs
+        .iter()
+        .map(|b| {
+            fused_engine
+                .submit(JobSpec::Linear {
+                    matrix: sys.matrix.clone(),
+                    b: b.clone(),
+                    opts: SolveOpts::default(),
+                })
+                .unwrap()
+        })
+        .collect();
+    let mut fused_xs = Vec::new();
+    let mut max_batch_size = 0;
+    for t in tickets {
+        let r = t.wait();
+        max_batch_size = max_batch_size.max(r.batch_size);
+        match r.outcome.unwrap() {
+            JobOutput::Linear(out) => fused_xs.push(out.x),
+            _ => panic!("wrong output family"),
+        }
+    }
+    assert!(
+        max_batch_size >= 2,
+        "burst of identical matrices never fused (max batch size {max_batch_size})"
+    );
+
+    // fusion OFF: same requests, strictly per-request
+    let solo_engine = engine(1, no_fusion(), true);
+    for (b, fused_x) in bs.iter().zip(&fused_xs) {
+        let r = solo_engine
+            .submit(JobSpec::Linear {
+                matrix: sys.matrix.clone(),
+                b: b.clone(),
+                opts: SolveOpts::default(),
+            })
+            .unwrap()
+            .wait();
+        assert_eq!(r.batch_size, 1);
+        match r.outcome.unwrap() {
+            JobOutput::Linear(out) => {
+                assert_eq!(
+                    &out.x, fused_x,
+                    "fused solve diverged bitwise from the per-request solve"
+                );
+            }
+            _ => panic!("wrong output family"),
+        }
+    }
+    fused_engine.shutdown();
+    solo_engine.shutdown();
+}
+
+#[test]
+fn multi_rhs_job_matches_individual_linear_jobs_bitwise() {
+    let sys = poisson2d(7, None);
+    let n = 49;
+    let mut rng = Prng::new(6);
+    let bs: Vec<Vec<f64>> = (0..4).map(|_| rng.normal_vec(n)).collect();
+    let e = engine(1, no_fusion(), true);
+    let multi = match e
+        .submit(JobSpec::MultiRhs {
+            matrix: sys.matrix.clone(),
+            bs: bs.clone(),
+            opts: SolveOpts::default(),
+        })
+        .unwrap()
+        .wait()
+        .outcome
+        .unwrap()
+    {
+        JobOutput::MultiRhs(outs) => outs,
+        _ => panic!("wrong output family"),
+    };
+    for (b, m) in bs.iter().zip(&multi) {
+        let solo = match e
+            .submit(JobSpec::Linear {
+                matrix: sys.matrix.clone(),
+                b: b.clone(),
+                opts: SolveOpts::default(),
+            })
+            .unwrap()
+            .wait()
+            .outcome
+            .unwrap()
+        {
+            JobOutput::Linear(out) => out,
+            _ => panic!("wrong output family"),
+        };
+        assert_eq!(m.x, solo.x, "MultiRhs diverged from per-rhs Linear jobs");
+    }
+    e.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Acceptance: pattern-affinity routing beats round-robin on shard
+// warmth (deterministic counter version; the latency version lives in
+// benches/serve_mixed.rs)
+// ---------------------------------------------------------------------
+
+fn run_sequential_same_pattern(affinity: bool, jobs: usize) -> (Engine, rsla::engine::EngineStats) {
+    let e = engine(2, no_fusion(), affinity);
+    let sys = poisson2d(10, None);
+    let mut rng = Prng::new(9);
+    for _ in 0..jobs {
+        // sequential submit→wait so every job is routed alone
+        let r = e
+            .submit(JobSpec::Linear {
+                matrix: sys.matrix.clone(),
+                b: rng.normal_vec(100),
+                opts: SolveOpts::default(),
+            })
+            .unwrap()
+            .wait();
+        r.outcome.unwrap();
+    }
+    let stats = e.stats();
+    (e, stats)
+}
+
+#[test]
+fn affinity_routes_same_pattern_to_the_warm_shard() {
+    let (e, stats) = run_sequential_same_pattern(true, 6);
+    // one cold factorization total: every later job found its shard warm
+    assert_eq!(stats.cache.misses, 1, "affinity must factor exactly once");
+    assert_eq!(stats.cache.hits_numeric, 5);
+    assert_eq!(
+        e.metrics.get("factor_cache.cross_shard_miss"),
+        0,
+        "affinity routing must never send a warm pattern to a cold shard"
+    );
+    assert_eq!(stats.affinity_misses, 1, "only the first routing is cold");
+    assert_eq!(stats.affinity_hits, 5);
+    e.shutdown();
+}
+
+#[test]
+fn round_robin_pays_one_cold_factorization_per_shard() {
+    let (e, stats) = run_sequential_same_pattern(false, 6);
+    // rr over 2 workers: BOTH shards factor the same pattern once
+    assert_eq!(
+        stats.cache.misses, 2,
+        "round-robin must go cold once per shard"
+    );
+    assert_eq!(stats.cache.hits_numeric, 4);
+    assert!(
+        e.metrics.get("factor_cache.cross_shard_miss") >= 1,
+        "round-robin must be caught routing a warm pattern to a cold shard"
+    );
+    e.shutdown();
+}
+
+#[test]
+fn affinity_beats_round_robin_on_hit_rate() {
+    let (ea, aff) = run_sequential_same_pattern(true, 6);
+    let (er, rnd) = run_sequential_same_pattern(false, 6);
+    assert!(
+        aff.cache_hit_rate() > rnd.cache_hit_rate(),
+        "affinity hit rate {:.2} must beat round-robin {:.2}",
+        aff.cache_hit_rate(),
+        rnd.cache_hit_rate()
+    );
+    ea.shutdown();
+    er.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Scheduling order: priority classes inside one window
+// ---------------------------------------------------------------------
+
+#[test]
+fn priority_orders_jobs_within_a_window() {
+    // one worker, a long window: Low/Normal/High submitted back-to-back
+    // land in one scheduling window and must execute High-first.  Three
+    // distinct patterns keep them from fusing into one unit.
+    let e = engine(
+        1,
+        BatchPolicy {
+            max_batch: 8,
+            window: std::time::Duration::from_millis(100),
+        },
+        true,
+    );
+    let order: Arc<Mutex<Vec<&'static str>>> = Arc::new(Mutex::new(Vec::new()));
+    let (done_tx, done_rx) = std::sync::mpsc::channel::<()>();
+    let mut rng = Prng::new(12);
+    for (label, g, priority) in [
+        ("low", 6usize, Priority::Low),
+        ("normal", 7, Priority::Normal),
+        ("high", 8, Priority::High),
+    ] {
+        let sys = poisson2d(g, None);
+        let b = rng.normal_vec(g * g);
+        let order = order.clone();
+        let done = done_tx.clone();
+        e.submit_with_reply(
+            JobSpec::Linear {
+                matrix: sys.matrix,
+                b,
+                opts: SolveOpts::default(),
+            },
+            SubmitOpts {
+                priority,
+                deadline: None,
+            },
+            Box::new(move |r| {
+                r.outcome.unwrap();
+                order.lock().unwrap().push(label);
+                let _ = done.send(());
+            }),
+        )
+        .unwrap();
+    }
+    for _ in 0..3 {
+        done_rx
+            .recv_timeout(std::time::Duration::from_secs(30))
+            .expect("job reply");
+    }
+    let got = order.lock().unwrap().clone();
+    assert_eq!(
+        got,
+        vec!["high", "normal", "low"],
+        "priority classes must execute high-first within a window"
+    );
+    e.shutdown();
+}

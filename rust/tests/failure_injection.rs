@@ -415,3 +415,264 @@ fn nan_in_rhs_propagates_to_unconverged_not_hang() {
     );
     assert!(!r.converged, "NaN rhs cannot converge");
 }
+
+// ---------------------------------------------------------------------
+// Solve engine failure paths: every failure is a typed JobResult error,
+// never a hang, and the worker pool survives its workers' worst day
+// ---------------------------------------------------------------------
+
+mod engine_failures {
+    use super::*;
+    use rsla::engine::{Engine, EngineConfig, JobOutput, JobSpec, SubmitOpts};
+    use rsla::nonlinear::{NewtonOpts, Residual};
+
+    fn engine(workers: usize, max_pending: usize) -> Engine {
+        Engine::start(
+            Arc::new(Dispatcher::new(None)),
+            EngineConfig {
+                workers,
+                max_pending,
+                ..Default::default()
+            },
+        )
+    }
+
+    /// A residual that panics on first evaluation — the hostile-user
+    /// payload an engine worker must survive.
+    struct PanickingResidual;
+
+    impl Residual for PanickingResidual {
+        fn dim(&self) -> usize {
+            4
+        }
+
+        fn eval(&self, _u: &[f64], _out: &mut [f64]) {
+            panic!("user residual exploded");
+        }
+
+        fn jacobian(&self, _u: &[f64]) -> Csr {
+            unreachable!("eval panics first")
+        }
+    }
+
+    /// A residual that sleeps, to hold a worker busy deterministically.
+    struct SlowResidual {
+        ms: u64,
+    }
+
+    impl Residual for SlowResidual {
+        fn dim(&self) -> usize {
+            2
+        }
+
+        fn eval(&self, _u: &[f64], out: &mut [f64]) {
+            std::thread::sleep(std::time::Duration::from_millis(self.ms));
+            out.fill(0.0); // converged immediately after the nap
+        }
+
+        fn jacobian(&self, _u: &[f64]) -> Csr {
+            let mut coo = Coo::new(2, 2);
+            coo.push(0, 0, 1.0);
+            coo.push(1, 1, 1.0);
+            coo.to_csr()
+        }
+    }
+
+    #[test]
+    fn worker_panic_is_a_job_error_not_a_hang_and_the_pool_survives() {
+        let e = engine(1, usize::MAX);
+        let r = e
+            .submit(JobSpec::Nonlinear {
+                residual: Box::new(PanickingResidual),
+                u0: vec![0.0; 4],
+                opts: NewtonOpts::default(),
+            })
+            .unwrap()
+            .wait();
+        match r.outcome {
+            Err(Error::WorkerPanic(msg)) => {
+                assert!(msg.contains("user residual exploded"), "lost panic payload: {msg}")
+            }
+            Err(e) => panic!("expected WorkerPanic, got {e}"),
+            Ok(_) => panic!("panicking job reported success"),
+        }
+        // the SAME worker (workers = 1) must still serve new jobs
+        let sys = poisson2d(6, None);
+        let r = e
+            .submit(JobSpec::Linear {
+                matrix: sys.matrix.clone(),
+                b: vec![1.0; 36],
+                opts: SolveOpts::default(),
+            })
+            .unwrap()
+            .wait();
+        assert!(r.outcome.is_ok(), "worker pool did not survive the panic");
+        assert_eq!(e.stats().queue_depth, 0);
+        e.shutdown();
+    }
+
+    #[test]
+    fn expired_deadline_surfaces_timeout_without_executing() {
+        let e = engine(1, usize::MAX);
+        let sys = poisson2d(6, None);
+        // a zero budget-to-start can never be met, even by an idle
+        // worker: the job must fail with Timeout, not run
+        let r = e
+            .submit_with(
+                JobSpec::Linear {
+                    matrix: sys.matrix.clone(),
+                    b: vec![1.0; 36],
+                    opts: SolveOpts::default(),
+                },
+                SubmitOpts {
+                    deadline: Some(std::time::Duration::ZERO),
+                    ..Default::default()
+                },
+            )
+            .unwrap()
+            .wait();
+        match r.outcome {
+            Err(Error::Timeout { .. }) => {}
+            Err(e) => panic!("expected Timeout, got {e}"),
+            Ok(_) => panic!("zero-deadline job executed"),
+        }
+        assert_eq!(r.worker, usize::MAX, "timed-out job must never reach a worker");
+        assert!(e.stats().timeouts >= 1);
+        // a sane deadline on the now-idle engine still succeeds
+        let r = e
+            .submit_with(
+                JobSpec::Linear {
+                    matrix: sys.matrix.clone(),
+                    b: vec![1.0; 36],
+                    opts: SolveOpts::default(),
+                },
+                SubmitOpts {
+                    deadline: Some(std::time::Duration::from_secs(30)),
+                    ..Default::default()
+                },
+            )
+            .unwrap()
+            .wait();
+        assert!(r.outcome.is_ok());
+        e.shutdown();
+    }
+
+    #[test]
+    fn deadline_lapsing_in_queue_behind_a_slow_job_times_out() {
+        let e = engine(1, usize::MAX);
+        // occupy the only worker for ~400ms
+        let slow = e
+            .submit(JobSpec::Nonlinear {
+                residual: Box::new(SlowResidual { ms: 400 }),
+                u0: vec![0.0; 2],
+                opts: NewtonOpts::default(),
+            })
+            .unwrap();
+        // let the scheduler hand the slow job to the worker first
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let sys = poisson2d(6, None);
+        let queued = e
+            .submit_with(
+                JobSpec::Linear {
+                    matrix: sys.matrix.clone(),
+                    b: vec![1.0; 36],
+                    opts: SolveOpts::default(),
+                },
+                SubmitOpts {
+                    deadline: Some(std::time::Duration::from_millis(10)),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        let r = queued.wait();
+        match r.outcome {
+            Err(Error::Timeout {
+                waited_ms,
+                deadline_ms,
+            }) => assert!(
+                waited_ms >= deadline_ms,
+                "timeout reported a wait ({waited_ms}ms) shorter than the deadline ({deadline_ms}ms)"
+            ),
+            Err(e) => panic!("expected Timeout for the queued job, got {e}"),
+            Ok(_) => panic!("expired queued job executed anyway"),
+        }
+        assert!(slow.wait().outcome.is_ok(), "slow job must still complete");
+        e.shutdown();
+    }
+
+    #[test]
+    fn queue_full_admission_rejection_sheds_load_without_losing_accepted_work() {
+        let e = engine(1, 1);
+        let slow = e
+            .submit(JobSpec::Nonlinear {
+                residual: Box::new(SlowResidual { ms: 300 }),
+                u0: vec![0.0; 2],
+                opts: NewtonOpts::default(),
+            })
+            .unwrap();
+        // pending == max_pending: the next submit must bounce
+        let sys = poisson2d(6, None);
+        let err = e
+            .submit(JobSpec::Linear {
+                matrix: sys.matrix.clone(),
+                b: vec![1.0; 36],
+                opts: SolveOpts::default(),
+            })
+            .unwrap_err();
+        match err {
+            Error::QueueFull { depth, capacity } => {
+                assert!(depth >= capacity, "rejected below capacity: {depth}/{capacity}")
+            }
+            other => panic!("expected QueueFull, got {other:?}"),
+        }
+        assert!(e.stats().rejected >= 1);
+        // the accepted job is unaffected by the shed load
+        assert!(slow.wait().outcome.is_ok());
+        // capacity freed: admission works again
+        let r = e
+            .submit(JobSpec::Linear {
+                matrix: sys.matrix.clone(),
+                b: vec![1.0; 36],
+                opts: SolveOpts::default(),
+            })
+            .unwrap()
+            .wait();
+        assert!(r.outcome.is_ok());
+        e.shutdown();
+    }
+
+    #[test]
+    fn engine_shutdown_drains_inflight_jobs() {
+        let e = engine(2, usize::MAX);
+        let sys = poisson2d(16, None);
+        let tickets: Vec<_> = (0..12)
+            .map(|_| {
+                e.submit(JobSpec::Linear {
+                    matrix: sys.matrix.clone(),
+                    b: vec![1.0; 256],
+                    opts: SolveOpts::default(),
+                })
+                .unwrap()
+            })
+            .collect();
+        e.shutdown(); // must not drop queued work
+        for t in tickets {
+            assert!(
+                t.wait().outcome.is_ok(),
+                "job dropped at engine shutdown"
+            );
+        }
+        // every JobOutput variant still pattern-matches after shutdown
+        // (compile-time exhaustiveness guard for the enum)
+        fn _exhaustive(out: JobOutput) {
+            match out {
+                JobOutput::Linear(_)
+                | JobOutput::MultiRhs(_)
+                | JobOutput::Nonlinear(_)
+                | JobOutput::Eig(_)
+                | JobOutput::Adjoint { .. }
+                | JobOutput::Dist { .. } => {}
+            }
+        }
+    }
+}

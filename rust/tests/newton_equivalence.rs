@@ -1,0 +1,329 @@
+//! Iterate-trajectory equivalence for the damped-Newton refactor: the
+//! assembled-Jacobian `newton` and matrix-free `newton_krylov` outer
+//! loops were collapsed into ONE driver (`damped_newton` over a
+//! `NewtonFlow`), so the two control flows cannot diverge.  These tests
+//! pin that claim against FROZEN copies of the pre-refactor loops:
+//! same iterate trajectory, bitwise — same `u`, same iteration count,
+//! same linear-solve count, same residual norm.
+
+use rsla::factor_cache::cached_direct_solve;
+use rsla::iterative::{Identity, IterOpts};
+use rsla::krylov::{self, gdot, Communicator, LinearOperator, NullComm};
+use rsla::nonlinear::{
+    examples::QuadPoisson, newton, newton_krylov, newton_with_step, KrylovResidual, NewtonOpts,
+    NonlinearResult, Residual,
+};
+use rsla::sparse::poisson::poisson2d;
+use rsla::sparse::Csr;
+use rsla::util::{norm2, Prng};
+
+// ---------------------------------------------------------------------
+// Frozen pre-refactor loops (verbatim from the code before the shared
+// damped_newton driver existed).  Do not "improve" these: they are the
+// reference semantics.
+// ---------------------------------------------------------------------
+
+fn frozen_newton(f: &dyn Residual, u0: &[f64], opts: &NewtonOpts) -> NonlinearResult {
+    let n = f.dim();
+    assert_eq!(u0.len(), n);
+    let mut u = u0.to_vec();
+    let mut fu = vec![0.0; n];
+    f.eval(&u, &mut fu);
+    let mut fnorm = norm2(&fu);
+    let mut linear_solves = 0;
+
+    let mut iters = 0;
+    while iters < opts.max_iters && (opts.fixed_iters || fnorm > opts.tol) {
+        let j = f.jacobian(&u);
+        let rhs: Vec<f64> = fu.iter().map(|x| -x).collect();
+        let du = match cached_direct_solve(&j, &rhs) {
+            Ok(d) => d,
+            Err(_) => break,
+        };
+        linear_solves += 1;
+        let mut t = 1.0;
+        let mut accepted = false;
+        for _ in 0..=opts.max_halvings {
+            let trial: Vec<f64> = u.iter().zip(&du).map(|(ui, di)| ui + t * di).collect();
+            let mut ftrial = vec![0.0; n];
+            f.eval(&trial, &mut ftrial);
+            let fn_trial = norm2(&ftrial);
+            if fn_trial < fnorm || opts.max_halvings == 0 {
+                u = trial;
+                fu = ftrial;
+                fnorm = fn_trial;
+                accepted = true;
+                break;
+            }
+            t *= 0.5;
+        }
+        if !accepted {
+            for i in 0..n {
+                u[i] += du[i];
+            }
+            f.eval(&u, &mut fu);
+            fnorm = norm2(&fu);
+        }
+        iters += 1;
+    }
+
+    NonlinearResult {
+        converged: fnorm <= opts.tol,
+        u,
+        iters,
+        residual_norm: fnorm,
+        linear_solves,
+    }
+}
+
+struct FrozenJvOp<'a> {
+    f: &'a dyn KrylovResidual,
+    u_ext: &'a [f64],
+}
+
+impl LinearOperator for FrozenJvOp<'_> {
+    fn n_own(&self) -> usize {
+        self.f.n_own()
+    }
+
+    fn n_ext(&self) -> usize {
+        self.f.n_ext()
+    }
+
+    fn apply(&self, x_ext: &mut [f64], y_own: &mut [f64]) {
+        self.f.jv(self.u_ext, x_ext, y_own);
+    }
+}
+
+fn frozen_newton_krylov(
+    f: &dyn KrylovResidual,
+    u0_own: &[f64],
+    comm: &dyn Communicator,
+    opts: &NewtonOpts,
+    inner: &IterOpts,
+) -> NonlinearResult {
+    let n = f.n_own();
+    assert_eq!(u0_own.len(), n);
+    let n_ext = f.n_ext();
+    let mut u_ext = vec![0.0; n_ext];
+    u_ext[..n].copy_from_slice(u0_own);
+    let mut fu = vec![0.0; n];
+    f.eval(&mut u_ext, &mut fu);
+    let mut fnorm = gdot(comm, &fu, &fu).sqrt();
+    let mut linear_solves = 0;
+    let mut trial_ext = vec![0.0; n_ext];
+
+    let mut iters = 0;
+    while iters < opts.max_iters && (opts.fixed_iters || fnorm > opts.tol) {
+        let rhs: Vec<f64> = fu.iter().map(|x| -x).collect();
+        let res = {
+            let jop = FrozenJvOp { f, u_ext: &u_ext };
+            krylov::gmres(&jop, &rhs, &Identity, 50, comm, inner, None)
+        };
+        linear_solves += 1;
+        let du = res.x;
+        let local_bad = if du.iter().any(|d| !d.is_finite()) {
+            1.0
+        } else {
+            0.0
+        };
+        if comm.all_reduce_sum(local_bad) > 0.0 {
+            break;
+        }
+        let mut t = 1.0;
+        let mut accepted = false;
+        for _ in 0..=opts.max_halvings {
+            for i in 0..n {
+                trial_ext[i] = u_ext[i] + t * du[i];
+            }
+            let mut ftrial = vec![0.0; n];
+            f.eval(&mut trial_ext, &mut ftrial);
+            let fn_trial = gdot(comm, &ftrial, &ftrial).sqrt();
+            if fn_trial < fnorm || opts.max_halvings == 0 {
+                u_ext.copy_from_slice(&trial_ext);
+                fu = ftrial;
+                fnorm = fn_trial;
+                accepted = true;
+                break;
+            }
+            t *= 0.5;
+        }
+        if !accepted {
+            for i in 0..n {
+                u_ext[i] += du[i];
+            }
+            f.eval(&mut u_ext, &mut fu);
+            fnorm = gdot(comm, &fu, &fu).sqrt();
+        }
+        iters += 1;
+    }
+
+    NonlinearResult {
+        converged: fnorm <= opts.tol,
+        u: u_ext[..n].to_vec(),
+        iters,
+        residual_norm: fnorm,
+        linear_solves,
+    }
+}
+
+// ---------------------------------------------------------------------
+// The pins
+// ---------------------------------------------------------------------
+
+fn problem(seed: u64, g: usize) -> QuadPoisson {
+    let sys = poisson2d(g, None);
+    let mut rng = Prng::new(seed);
+    let n = g * g;
+    QuadPoisson {
+        a: sys.matrix,
+        // large forcing so the first Newton step overshoots and the
+        // backtracking branch is actually exercised by the trajectory
+        f: (0..n).map(|_| 5.0 + 10.0 * rng.uniform()).collect(),
+    }
+}
+
+fn assert_same_trajectory(got: &NonlinearResult, want: &NonlinearResult, label: &str) {
+    assert_eq!(got.iters, want.iters, "{label}: iteration count diverged");
+    assert_eq!(
+        got.linear_solves, want.linear_solves,
+        "{label}: linear-solve count diverged"
+    );
+    assert_eq!(got.converged, want.converged, "{label}: converged flag diverged");
+    assert_eq!(
+        got.residual_norm.to_bits(),
+        want.residual_norm.to_bits(),
+        "{label}: residual norm diverged ({} vs {})",
+        got.residual_norm,
+        want.residual_norm
+    );
+    assert_eq!(got.u.len(), want.u.len());
+    for (i, (a, b)) in got.u.iter().zip(&want.u).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "{label}: iterate diverged at entry {i} ({a} vs {b})"
+        );
+    }
+}
+
+#[test]
+fn assembled_newton_matches_frozen_loop_bitwise() {
+    let f = problem(1, 8);
+    let u0 = vec![0.0; 64];
+    for opts in [
+        NewtonOpts::default(),
+        NewtonOpts {
+            max_halvings: 0,
+            ..Default::default()
+        },
+        NewtonOpts {
+            fixed_iters: true,
+            max_iters: 3,
+            ..Default::default()
+        },
+    ] {
+        let want = frozen_newton(&f, &u0, &opts);
+        let got = newton(&f, &u0, &opts);
+        assert_same_trajectory(&got, &want, "newton");
+        assert!(want.linear_solves > 0);
+    }
+}
+
+#[test]
+fn newton_krylov_matches_frozen_loop_bitwise() {
+    let f = problem(2, 8);
+    let u0 = vec![0.0; 64];
+    let inner = IterOpts {
+        tol: 1e-12,
+        max_iters: 400,
+        ..Default::default()
+    };
+    for opts in [
+        NewtonOpts::default(),
+        NewtonOpts {
+            fixed_iters: true,
+            max_iters: 3,
+            ..Default::default()
+        },
+    ] {
+        let want = frozen_newton_krylov(&f, &u0, &NullComm, &opts, &inner);
+        let got = newton_krylov(&f, &u0, &NullComm, &opts, &inner);
+        assert_same_trajectory(&got, &want, "newton_krylov");
+    }
+}
+
+#[test]
+fn newton_with_step_is_the_engine_instantiation_of_the_same_loop() {
+    // the engine's workers hand Newton a shard-local step solver; with
+    // an equivalent step (the same cached direct solve) the trajectory
+    // must be identical to plain `newton`
+    let f = problem(3, 7);
+    let u0 = vec![0.0; 49];
+    let opts = NewtonOpts::default();
+    let want = newton(&f, &u0, &opts);
+    let mut steps = 0usize;
+    let mut step = |j: &Csr, rhs: &[f64]| {
+        steps += 1;
+        cached_direct_solve(j, rhs).ok()
+    };
+    let got = newton_with_step(&f, &u0, &opts, &mut step);
+    assert_same_trajectory(&got, &want, "newton_with_step");
+    assert_eq!(steps, want.linear_solves, "step solver called once per solve");
+}
+
+/// A residual whose Jacobian-vector product is non-finite: the GMRES
+/// step degenerates immediately, exercising the early-break path.
+struct NanJv;
+
+impl KrylovResidual for NanJv {
+    fn n_own(&self) -> usize {
+        4
+    }
+
+    fn eval(&self, _u_ext: &mut [f64], out_own: &mut [f64]) {
+        out_own.fill(1.0); // never converges
+    }
+
+    fn jv(&self, _u_ext: &[f64], _v_ext: &mut [f64], y_own: &mut [f64]) {
+        y_own.fill(f64::NAN);
+    }
+}
+
+#[test]
+fn degenerate_krylov_step_matches_frozen_loop_including_solve_count() {
+    // the pre-refactor loop counted the GMRES solve BEFORE the
+    // non-finite check broke out; the unified driver must agree
+    let u0 = vec![0.0; 4];
+    let opts = NewtonOpts::default();
+    let inner = IterOpts {
+        tol: 1e-12,
+        max_iters: 20,
+        ..Default::default()
+    };
+    let want = frozen_newton_krylov(&NanJv, &u0, &NullComm, &opts, &inner);
+    let got = newton_krylov(&NanJv, &u0, &NullComm, &opts, &inner);
+    assert!(!want.converged);
+    assert_same_trajectory(&got, &want, "degenerate newton_krylov");
+}
+
+#[test]
+fn both_flows_agree_on_the_solution_itself() {
+    // not bitwise across flows (different step solvers), but both must
+    // land on the same root of F
+    let f = problem(4, 8);
+    let u0 = vec![0.0; 64];
+    let opts = NewtonOpts {
+        tol: 1e-11,
+        ..Default::default()
+    };
+    let inner = IterOpts {
+        tol: 1e-13,
+        max_iters: 800,
+        ..Default::default()
+    };
+    let a = newton(&f, &u0, &opts);
+    let b = newton_krylov(&f, &u0, &NullComm, &opts, &inner);
+    assert!(a.converged && b.converged);
+    assert!(rsla::util::rel_l2(&a.u, &b.u) < 1e-8);
+}
