@@ -46,7 +46,7 @@ impl CustomOp for LinearSolveOp {
         let vals = inputs[0].as_vec();
         // one adjoint solve: A^T lambda = dL/dx
         let lambda = (self.solver)(&self.pattern, vals, gy, Transpose::Yes)
-            .expect("adjoint solve failed");
+            .expect("adjoint solve failed"); // rsla-lint: allow(L1, autograd backward has no error channel; adjoint failure must abort)
         // dL/dA_ij = -lambda_i x_j on the pattern (O(nnz))
         let mut dvals = vec![0.0; vals.len()];
         for k in 0..dvals.len() {

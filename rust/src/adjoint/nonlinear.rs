@@ -36,7 +36,7 @@ impl CustomOp for NonlinearSolveOp {
         let j = residual.jacobian(u_star);
         let lambda = crate::factor_cache::FactorCache::global()
             .solve_t(&j, gy, None)
-            .expect("adjoint solve failed");
+            .expect("adjoint solve failed"); // rsla-lint: allow(L1, autograd backward has no error channel; adjoint failure must abort)
         // dL/dtheta = -lambda^T dF/dtheta
         let mut dtheta = residual.vjp_theta(u_star, &lambda);
         for d in dtheta.iter_mut() {

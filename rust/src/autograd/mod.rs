@@ -35,14 +35,14 @@ impl Value {
     pub fn as_vec(&self) -> &Vec<f64> {
         match self {
             Value::V(v) => v,
-            Value::S(_) => panic!("expected vector value"),
+            Value::S(_) => panic!("expected vector value"), // rsla-lint: allow(L1, typed accessor; wrong-kind access is a tape programming error)
         }
     }
 
     pub fn as_scalar(&self) -> f64 {
         match self {
             Value::S(s) => *s,
-            Value::V(_) => panic!("expected scalar value"),
+            Value::V(_) => panic!("expected scalar value"), // rsla-lint: allow(L1, typed accessor; wrong-kind access is a tape programming error)
         }
     }
 
@@ -249,11 +249,11 @@ impl Grads {
     }
 
     pub fn vec(&self, v: Var) -> &Vec<f64> {
-        self.get(v).expect("no gradient recorded").as_vec()
+        self.get(v).expect("no gradient recorded").as_vec() // rsla-lint: allow(L1, typed accessor; caller asserts a gradient was recorded)
     }
 
     pub fn scalar(&self, v: Var) -> f64 {
-        self.get(v).expect("no gradient recorded").as_scalar()
+        self.get(v).expect("no gradient recorded").as_scalar() // rsla-lint: allow(L1, typed accessor; caller asserts a gradient was recorded)
     }
 
     pub fn bytes(&self) -> usize {

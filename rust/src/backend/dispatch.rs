@@ -144,7 +144,8 @@ impl Dispatcher {
                 Ok(()) => {}
                 Err(reason) => {
                     log::debug!("backend {} refused: {reason}", b.name());
-                    self.metrics.incr(&format!("dispatch.refused.{}", b.name()), 1);
+                    self.metrics
+                        .incr_labeled(metrics::names::DISPATCH_REFUSED, b.name(), 1);
                     // keep the refusal reason: if no candidate accepts —
                     // in particular when the user forced `backend=` —
                     // the caller sees WHY (e.g. a memory-budget OOM).
@@ -157,12 +158,14 @@ impl Dispatcher {
             }
             match b.solve(p, opts) {
                 Ok(out) => {
-                    self.metrics.incr(&format!("dispatch.solved.{}", b.name()), 1);
+                    self.metrics
+                        .incr_labeled(metrics::names::DISPATCH_SOLVED, b.name(), 1);
                     return Ok(out);
                 }
                 Err(e) => {
                     // runtime fallback (e.g. OOM mid-solve, breakdown)
-                    self.metrics.incr(&format!("dispatch.failed.{}", b.name()), 1);
+                    self.metrics
+                        .incr_labeled(metrics::names::DISPATCH_FAILED, b.name(), 1);
                     last_err = Some(e);
                 }
             }

@@ -135,7 +135,10 @@ impl Backend for XlaCg {
                 })
             }
             Operator::Csr(a) => {
-                let padded = Self::ell_size(n).unwrap();
+                let padded = Self::ell_size(n).ok_or_else(|| Error::BackendUnavailable {
+                    backend: "xla-cg".into(),
+                    reason: format!("no compiled ELL size covers n={n}"),
+                })?;
                 // pad with identity rows so the extra unknowns are inert
                 let (mut cols, mut vals) = to_ell(a, ELL_SLOTS).ok_or_else(|| {
                     Error::BackendUnavailable {

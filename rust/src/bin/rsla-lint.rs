@@ -1,0 +1,49 @@
+//! `rsla-lint` — run the repo-invariant static-analysis pass over a
+//! source tree (default `rust/src`, falling back to the crate's own
+//! `src/` when run from `rust/`).
+//!
+//! ```text
+//! cargo run --bin rsla-lint -- rust/src
+//! ```
+//!
+//! Exit status: 0 when clean, 1 when any diagnostic fires, 2 on I/O
+//! errors.  Rule catalog and suppression grammar: docs/static_analysis.md.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use rsla::lint;
+
+fn main() -> ExitCode {
+    let root = std::env::args()
+        .nth(1)
+        .map(PathBuf::from)
+        .or_else(|| {
+            ["rust/src", "src"]
+                .iter()
+                .map(PathBuf::from)
+                .find(|p| p.is_dir())
+        })
+        .unwrap_or_else(|| PathBuf::from("rust/src"));
+    if !root.is_dir() {
+        eprintln!("rsla-lint: {} is not a directory", root.display());
+        return ExitCode::from(2);
+    }
+    match lint::run(&root) {
+        Ok(diags) if diags.is_empty() => {
+            println!("rsla-lint: clean ({})", root.display());
+            ExitCode::SUCCESS
+        }
+        Ok(diags) => {
+            for d in &diags {
+                println!("{d}");
+            }
+            println!("rsla-lint: {} violation(s)", diags.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("rsla-lint: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

@@ -14,7 +14,7 @@ use std::sync::Arc;
 use super::batcher::BatchPolicy;
 use crate::backend::{Dispatcher, SolveOpts, SolveOutcome};
 use crate::engine::{Engine, EngineConfig, JobOutput, JobResult, JobSpec, SubmitOpts};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::metrics;
 use crate::sparse::Csr;
 
@@ -83,6 +83,7 @@ impl SolveService {
     /// Submit a request; returns the reply receiver.
     pub fn submit(&self, matrix: Csr, b: Vec<f64>, opts: SolveOpts) -> Receiver<SolveResponse> {
         let (reply_tx, reply_rx) = channel::<SolveResponse>();
+        let submit_err_tx = reply_tx.clone();
         let convert = Box::new(move |r: JobResult| {
             let JobResult {
                 id,
@@ -92,9 +93,11 @@ impl SolveService {
                 batch_size,
                 ..
             } = r;
-            let outcome = outcome.map(|out| match out {
-                JobOutput::Linear(o) => o,
-                _ => unreachable!("linear job produced a non-linear output"),
+            let outcome = outcome.and_then(|out| match out {
+                JobOutput::Linear(o) => Ok(o),
+                _ => Err(Error::WorkerPanic(
+                    "linear job produced a non-linear output".into(),
+                )),
             });
             let _ = reply_tx.send(SolveResponse {
                 id,
@@ -104,26 +107,34 @@ impl SolveService {
                 batch_size,
             });
         });
-        self.engine
-            .submit_with_reply(
-                JobSpec::Linear { matrix, b, opts },
-                SubmitOpts::default(),
-                convert,
-            )
-            .expect("service engine stopped");
+        if let Err(e) = self.engine.submit_with_reply(
+            JobSpec::Linear { matrix, b, opts },
+            SubmitOpts::default(),
+            convert,
+        ) {
+            // a stopped or saturated engine becomes an error reply on
+            // the same channel, not a panic in the submitting thread
+            let _ = submit_err_tx.send(SolveResponse {
+                id: 0,
+                outcome: Err(e),
+                queue_seconds: 0.0,
+                service_seconds: 0.0,
+                batch_size: 1,
+            });
+        }
         reply_rx
     }
 
     pub fn stats(&self) -> ServiceStats {
         ServiceStats {
-            completed: self.metrics.get("service.completed"),
-            batches: self.metrics.get("service.batches"),
-            batched_requests: self.metrics.get("service.batched_requests"),
+            completed: self.metrics.get(metrics::names::SERVICE_COMPLETED),
+            batches: self.metrics.get(metrics::names::SERVICE_BATCHES),
+            batched_requests: self.metrics.get(metrics::names::SERVICE_BATCHED_REQUESTS),
         }
     }
 
     /// Graceful shutdown: drain queues, join threads.
-    pub fn shutdown(self) {
+    pub fn shutdown(&self) {
         self.engine.shutdown();
     }
 }

@@ -78,9 +78,11 @@ impl CachedFactor {
     /// per-call `Vec` is returned, so per-Krylov-iteration callers
     /// (`BlockDirect`, AMG's coarse correction) stop allocating on the
     /// hot path.
+    // rsla-lint: no_alloc
     pub fn solve_into(&self, b: &[f64], out: &mut [f64], scratch: &mut Vec<f64>) -> Result<()> {
         let n = self.n();
         if b.len() != n || out.len() != n {
+            // rsla-lint: allow(L5, cold error path; allocates only when rejecting bad input)
             return Err(Error::InvalidProblem(format!(
                 "rhs length {} != n {}",
                 b.len(),

@@ -67,6 +67,7 @@ impl LuSymbolic {
 /// not yet pivoted at step j" in both callers: during recording,
 /// unpivoted rows hold `UNPIVOTED` (= usize::MAX); during replay the
 /// complete pivot map is used and later-pivoted rows compare `>= j`.
+// rsla-lint: no_alloc
 #[inline]
 fn lu_column_numeric(
     post: &[usize],

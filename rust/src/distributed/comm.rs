@@ -8,6 +8,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
+use crate::util::lock_recover;
 
 /// Message: (tag, payload).  Tags catch protocol mismatches early.
 type Msg = (u64, Vec<f64>);
@@ -71,11 +72,11 @@ impl LocalComm {
             .map(|rank| LocalComm {
                 rank,
                 senders: (0..nranks)
-                    .map(|to| txs[to][rank].take().unwrap())
+                    .map(|to| txs[to][rank].take().unwrap()) // rsla-lint: allow(L1, mesh wiring; each channel end is taken exactly once)
                     .collect(),
                 receivers: rxs[rank]
                     .iter_mut()
-                    .map(|r| Mutex::new(r.take().unwrap()))
+                    .map(|r| Mutex::new(r.take().unwrap())) // rsla-lint: allow(L1, mesh wiring; each channel end is taken exactly once)
                     .collect(),
                 shared: shared.clone(),
             })
@@ -96,13 +97,13 @@ impl LocalComm {
         self.shared.bytes_sent[self.rank].fetch_add((data.len() * 8) as u64, Ordering::Relaxed);
         self.senders[to]
             .send((tag, data))
-            .expect("receiver rank hung up");
+            .expect("receiver rank hung up"); // rsla-lint: allow(L1, a dropped peer rank is an unrecoverable protocol failure)
     }
 
     /// Blocking receive from a specific rank; asserts the tag matches.
     pub fn recv(&self, from: usize, tag: u64) -> Vec<f64> {
-        let rx = self.receivers[from].lock().unwrap();
-        let (got_tag, data) = rx.recv().expect("sender rank hung up");
+        let rx = lock_recover(&self.receivers[from]);
+        let (got_tag, data) = rx.recv().expect("sender rank hung up"); // rsla-lint: allow(L1, a dropped peer rank is an unrecoverable protocol failure)
         assert_eq!(
             got_tag, tag,
             "rank {}: tag mismatch from {from} (protocol desync)",
@@ -126,7 +127,7 @@ impl LocalComm {
     /// reused across rounds, so the steady state performs no heap
     /// allocation.
     pub fn all_reduce_inplace(&self, xs: &mut [f64]) {
-        let mut s = self.shared.ar.lock().unwrap();
+        let mut s = lock_recover(&self.shared.ar);
         let gen = s.generation;
         if s.count == 0 {
             s.sum.clear();
@@ -154,7 +155,7 @@ impl LocalComm {
             xs.copy_from_slice(&st.result);
         } else {
             while s.generation == gen {
-                s = self.shared.cv.wait(s).unwrap();
+                s = self.shared.cv.wait(s).unwrap_or_else(|p| p.into_inner());
             }
             // a third round cannot start (it would need THIS rank), so
             // `result` still holds this generation's sum
@@ -236,13 +237,13 @@ where
             std::thread::Builder::new()
                 .name(format!("rsla-rank-{}", c.rank()))
                 .spawn(move || f(c))
-                .expect("spawn rank")
+                .expect("spawn rank") // rsla-lint: allow(L1, spawn fails only on OS thread exhaustion)
         })
         .collect();
     handles
         .into_iter()
         .enumerate()
-        .map(|(r, h)| h.join().unwrap_or_else(|_| panic!("rank {r} panicked")))
+        .map(|(r, h)| h.join().unwrap_or_else(|_| panic!("rank {r} panicked"))) // rsla-lint: allow(L1, run_ranks re-raises rank panics to the caller by design)
         .collect()
 }
 

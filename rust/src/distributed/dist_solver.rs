@@ -24,6 +24,7 @@ use crate::factor_cache::FactorCache;
 use crate::iterative::{Amg, AmgOpts, IterOpts, IterResult, Jacobi, Precond};
 use crate::krylov::{self, LinearOperator};
 use crate::metrics::{MemTracker, Registry};
+use crate::util::lock_recover;
 
 /// Preconditioner for the distributed Krylov loops.  Application is
 /// purely LOCAL (no communication), so every variant composes with the
@@ -94,7 +95,7 @@ struct BlockDirect {
 
 impl Precond for BlockDirect {
     fn apply(&self, r: &[f64], z: &mut [f64]) {
-        let mut scratch = self.scratch.lock().unwrap();
+        let mut scratch = lock_recover(&self.scratch);
         match self.factor.solve_into(r, z, &mut scratch) {
             Ok(()) => {}
             // a breakdown here means the block factor went stale in a

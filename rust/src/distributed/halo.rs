@@ -49,6 +49,17 @@ pub struct DistCsr {
 
 impl DistCsr {
     pub fn new(local: Csr, plan: HaloPlan) -> Self {
+        debug_assert!(
+            local.validate().is_ok(),
+            "dist share: invalid local CSR: {:?}",
+            local.validate()
+        );
+        debug_assert_eq!(local.nrows, plan.n_own, "dist share: local rows != owned rows");
+        debug_assert_eq!(
+            local.ncols,
+            plan.n_own + plan.halo_globals.len(),
+            "dist share: local cols != owned + halo columns"
+        );
         DistCsr {
             local,
             plan,

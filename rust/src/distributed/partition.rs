@@ -119,7 +119,7 @@ fn rcb_sort(idx: &mut [usize], coords: &[(f64, f64)], parts: usize, split_x: boo
     idx.select_nth_unstable_by(mid, |&a, &b| {
         let ka = if split_x { coords[a].0 } else { coords[a].1 };
         let kb = if split_x { coords[b].0 } else { coords[b].1 };
-        ka.partial_cmp(&kb).unwrap()
+        ka.total_cmp(&kb)
     });
     let (lo, hi) = idx.split_at_mut(mid);
     rcb_sort(lo, coords, parts / 2, !split_x);

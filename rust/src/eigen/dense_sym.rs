@@ -64,7 +64,7 @@ pub fn jacobi_eigh(a: &[f64], n: usize) -> (Vec<f64>, Vec<Vec<f64>>) {
     }
     // extract and sort
     let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m[i * n + i], i)).collect();
-    pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    pairs.sort_by(|a, b| a.0.total_cmp(&b.0));
     let values: Vec<f64> = pairs.iter().map(|p| p.0).collect();
     let vectors: Vec<Vec<f64>> = pairs
         .iter()

@@ -47,7 +47,7 @@ pub fn group_by_key(keys: &[PatternKey], max_batch: usize) -> Vec<Vec<usize>> {
     }
     let mut out = Vec::new();
     for k in order {
-        let idxs = &groups[k];
+        let Some(idxs) = groups.get(k) else { continue };
         for chunk in idxs.chunks(max_batch.max(1)) {
             out.push(chunk.to_vec());
         }
@@ -70,7 +70,10 @@ pub fn verify_groups(mats: &[&Csr]) -> Vec<Vec<usize>> {
     for (i, m) in mats.iter().enumerate() {
         let mut placed = false;
         for group in out.iter_mut() {
-            let rep = mats[group[0]];
+            let rep = match group.first().and_then(|&j| mats.get(j)) {
+                Some(r) => *r,
+                None => continue,
+            };
             if rep.indptr == m.indptr && rep.indices == m.indices && rep.vals == m.vals {
                 group.push(i);
                 placed = true;

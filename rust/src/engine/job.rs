@@ -127,6 +127,26 @@ impl JobSpec {
             JobSpec::Nonlinear { .. } | JobSpec::Dist { .. } => None,
         }
     }
+
+    /// The `(matrix, b, opts)` view of a linear job; `None` for every
+    /// other family.  The fuse/batch paths use this instead of matching
+    /// `JobSpec::Linear` inline so a non-linear spec reaching them is a
+    /// graceful fallback, never a panic.
+    pub fn linear_parts(&self) -> Option<(&Csr, &[f64], &SolveOpts)> {
+        match self {
+            JobSpec::Linear { matrix, b, opts } => Some((matrix, b.as_slice(), opts)),
+            _ => None,
+        }
+    }
+
+    /// Take a linear job apart; any other family is handed back intact
+    /// so the caller can serve it through the generic path.
+    pub fn into_linear(self) -> std::result::Result<(Csr, Vec<f64>, SolveOpts), Box<JobSpec>> {
+        match self {
+            JobSpec::Linear { matrix, b, opts } => Ok((matrix, b, opts)),
+            other => Err(Box::new(other)),
+        }
+    }
 }
 
 /// Scheduling priority; within a priority class jobs run

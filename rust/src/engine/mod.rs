@@ -56,11 +56,13 @@ use crate::adjoint::Transpose;
 use crate::backend::dispatch::DIRECT_CROSSOVER_N;
 use crate::backend::native_direct::residual_of;
 use crate::backend::{Device, Dispatcher, Method, Operator, Problem, SolveOpts, SolveOutcome};
+use crate::direct::CachedFactor;
 use crate::error::{Error, Result};
 use crate::factor_cache::{CacheShards, CacheStats, DEFAULT_BUDGET_BYTES};
-use crate::metrics::{self, LatencyHist};
+use crate::metrics::{self, names, LatencyHist};
 use crate::sparse::key::{PatternKey, StructureKey};
 use crate::sparse::Csr;
+use crate::util::lock_recover;
 
 /// Engine construction knobs.
 #[derive(Clone, Debug)]
@@ -103,12 +105,17 @@ struct Envelope {
     reply: Box<dyn FnOnce(JobResult) + Send>,
 }
 
-/// What the scheduler hands a worker.
+/// What the scheduler hands a worker.  Units carry the scheduler's
+/// pattern fingerprint so workers never pay a second O(nnz)
+/// `PatternKey::of` pass on the serve path (pinned by
+/// `tests/hash_count.rs`).
 enum Unit {
-    One(Envelope),
+    /// A single job, with its fingerprint when the family has an
+    /// affinity matrix (`None` for nonlinear/distributed jobs).
+    One(Envelope, Option<PatternKey>),
     /// Linear jobs sharing a (pattern, values) key, to be factorized
     /// once (after the worker's full-equality re-check).
-    Fused(Vec<Envelope>),
+    Fused(Vec<Envelope>, PatternKey),
 }
 
 /// State shared by submitters, the scheduler, and the workers.
@@ -120,18 +127,19 @@ struct Shared {
 }
 
 fn respond(shared: &Shared, reply: Box<dyn FnOnce(JobResult) + Send>, result: JobResult) {
-    shared.hists[result.kind.idx()]
-        .record(result.queue_seconds + result.service_seconds);
-    shared.registry.incr("service.completed", 1);
+    if let Some(hist) = shared.hists.get(result.kind.idx()) {
+        hist.record(result.queue_seconds + result.service_seconds);
+    }
+    shared.registry.incr(names::SERVICE_COMPLETED, 1);
     shared
         .registry
-        .incr(&format!("engine.completed.{}", result.kind.name()), 1);
+        .incr_labeled(names::ENGINE_COMPLETED, result.kind.name(), 1);
     shared.pending.fetch_sub(1, Ordering::Relaxed);
     // Reply closures are caller-supplied code running on an engine
     // thread: a panicking callback must not take the worker (and every
     // pattern affinity-pinned to it) down with its own job.
     if std::panic::catch_unwind(AssertUnwindSafe(move || reply(result))).is_err() {
-        shared.registry.incr("engine.reply_panic", 1);
+        shared.registry.incr(names::ENGINE_REPLY_PANIC, 1);
     }
 }
 
@@ -149,7 +157,7 @@ fn respond_timeout(env: Envelope, now: Instant, shared: &Shared) {
     let allowed = deadline
         .map(|d| d.saturating_duration_since(enqueued))
         .unwrap_or_default();
-    shared.registry.incr("engine.timeout", 1);
+    shared.registry.incr(names::ENGINE_TIMEOUT, 1);
     respond(
         shared,
         reply,
@@ -261,6 +269,7 @@ impl Engine {
                 std::thread::Builder::new()
                     .name(format!("rsla-engine-worker-{w}"))
                     .spawn(move || worker_loop(rx, ctx))
+                    // rsla-lint: allow(L1, spawn fails only on OS thread exhaustion at engine construction)
                     .expect("spawn engine worker"),
             );
         }
@@ -274,6 +283,7 @@ impl Engine {
                 std::thread::Builder::new()
                     .name("rsla-engine-sched".into())
                     .spawn(move || scheduler_loop(intake_rx, worker_txs, fuse, affinity, shared))
+                    // rsla-lint: allow(L1, spawn fails only on OS thread exhaustion at engine construction)
                     .expect("spawn engine scheduler"),
             );
         }
@@ -328,7 +338,7 @@ impl Engine {
     ) -> Result<u64> {
         let depth = self.shared.pending.load(Ordering::Relaxed);
         if depth >= self.max_pending {
-            self.metrics.incr("engine.rejected", 1);
+            self.metrics.incr(names::ENGINE_REJECTED, 1);
             return Err(Error::QueueFull {
                 depth,
                 capacity: self.max_pending,
@@ -345,7 +355,7 @@ impl Engine {
             seq: id,
             reply,
         };
-        let guard = self.intake.lock().unwrap();
+        let guard = lock_recover(&self.intake);
         match guard.as_ref() {
             Some(tx) => {
                 self.shared.pending.fetch_add(1, Ordering::Relaxed);
@@ -365,25 +375,25 @@ impl Engine {
         EngineStats {
             kinds: JobKind::ALL
                 .iter()
-                .map(|&k| {
-                    let h = &self.shared.hists[k.idx()];
-                    KindStats {
+                .filter_map(|&k| {
+                    let h = self.shared.hists.get(k.idx())?;
+                    Some(KindStats {
                         kind: k,
                         count: h.count(),
                         p50: h.quantile(0.50),
                         p95: h.quantile(0.95),
                         p99: h.quantile(0.99),
-                    }
+                    })
                 })
                 .collect(),
             queue_depth: self.shared.pending.load(Ordering::Relaxed),
-            affinity_hits: self.metrics.get("engine.affinity.hit"),
-            affinity_misses: self.metrics.get("engine.affinity.miss"),
-            timeouts: self.metrics.get("engine.timeout"),
-            rejected: self.metrics.get("engine.rejected"),
-            completed: self.metrics.get("service.completed"),
-            batches: self.metrics.get("service.batches"),
-            batched_requests: self.metrics.get("service.batched_requests"),
+            affinity_hits: self.metrics.get(names::ENGINE_AFFINITY_HIT),
+            affinity_misses: self.metrics.get(names::ENGINE_AFFINITY_MISS),
+            timeouts: self.metrics.get(names::ENGINE_TIMEOUT),
+            rejected: self.metrics.get(names::ENGINE_REJECTED),
+            completed: self.metrics.get(names::SERVICE_COMPLETED),
+            batches: self.metrics.get(names::SERVICE_BATCHES),
+            batched_requests: self.metrics.get(names::SERVICE_BATCHED_REQUESTS),
             cache: self.shards.stats(),
         }
     }
@@ -397,9 +407,9 @@ impl Engine {
     /// Graceful shutdown: stop intake, drain queues, join threads.
     /// Idempotent; in-flight jobs are served before workers exit.
     pub fn shutdown(&self) {
-        let tx = self.intake.lock().unwrap().take();
+        let tx = lock_recover(&self.intake).take();
         drop(tx);
-        let mut threads = self.threads.lock().unwrap();
+        let mut threads = lock_recover(&self.threads);
         for t in threads.drain(..) {
             let _ = t.join();
         }
@@ -452,19 +462,28 @@ fn scheduler_loop(
 
 fn unit_priority(u: &Unit) -> Priority {
     match u {
-        Unit::One(e) => e.priority,
-        Unit::Fused(envs) => envs.iter().map(|e| e.priority).max().unwrap_or(Priority::Normal),
+        Unit::One(e, _) => e.priority,
+        Unit::Fused(envs, _) => {
+            envs.iter().map(|e| e.priority).max().unwrap_or(Priority::Normal)
+        }
     }
 }
 
 fn unit_order_key(u: &Unit) -> (bool, Instant, u64) {
     // (no-deadline-last, earliest deadline, arrival)
     let (deadline, enqueued, seq) = match u {
-        Unit::One(e) => (e.deadline, e.enqueued, e.seq),
-        Unit::Fused(envs) => {
+        Unit::One(e, _) => (e.deadline, e.enqueued, e.seq),
+        Unit::Fused(envs, _) => {
             let d = envs.iter().filter_map(|e| e.deadline).min();
             let s = envs.iter().map(|e| e.seq).min().unwrap_or(0);
-            (d, envs[0].enqueued, s)
+            // group members keep arrival order, so the min IS the
+            // first member's enqueue time
+            let arrival = envs
+                .iter()
+                .map(|e| e.enqueued)
+                .min()
+                .unwrap_or_else(Instant::now);
+            (d, arrival, s)
         }
     };
     (deadline.is_none(), deadline.unwrap_or(enqueued), seq)
@@ -500,45 +519,53 @@ fn schedule_window(
     shared: &Shared,
 ) {
     // split fusable linear jobs from everything else, keeping arrival
-    // order; each unit carries its routing key so the pattern is hashed
-    // ONCE per job on the scheduling path
+    // order; each job's pattern is hashed ONCE here and the key rides
+    // the unit to the worker's shard, so the serve path never re-hashes
+    // (pinned by tests/hash_count.rs)
     let mut units: Vec<(Option<StructureKey>, Unit)> = Vec::new();
-    let mut linear: Vec<Envelope> = Vec::new();
+    let mut linear: Vec<(Envelope, PatternKey)> = Vec::new();
     for env in window {
         match &env.spec {
-            JobSpec::Linear { .. } => linear.push(env),
+            JobSpec::Linear { matrix, .. } => {
+                let key = PatternKey::of(matrix);
+                linear.push((env, key));
+            }
             _ => {
-                let key = env.spec.affinity_matrix().map(StructureKey::of);
-                units.push((key, Unit::One(env)));
+                let key = env.spec.affinity_matrix().map(PatternKey::of);
+                let skey = key.as_ref().map(PatternKey::structure);
+                units.push((skey, Unit::One(env, key)));
             }
         }
     }
     if !linear.is_empty() {
-        let keys: Vec<PatternKey> = linear
-            .iter()
-            .map(|e| match &e.spec {
-                JobSpec::Linear { matrix, .. } => PatternKey::of(matrix),
-                _ => unreachable!(),
-            })
-            .collect();
+        let keys: Vec<PatternKey> = linear.iter().map(|(_, k)| k.clone()).collect();
         let groups = group_by_key(&keys, fuse_policy.max_batch);
         shared
             .registry
-            .incr("service.batches", groups.len() as u64);
-        let mut slots: Vec<Option<Envelope>> = linear.into_iter().map(Some).collect();
+            .incr(names::SERVICE_BATCHES, groups.len() as u64);
+        let mut slots: Vec<Option<Envelope>> =
+            linear.into_iter().map(|(e, _)| Some(e)).collect();
         for group in groups {
             shared
                 .registry
-                .incr("service.batched_requests", group.len() as u64);
-            let key = Some(keys[group[0]].structure());
+                .incr(names::SERVICE_BATCHED_REQUESTS, group.len() as u64);
+            // group_by_key never emits an empty group; degrade to
+            // skipping one rather than indexing on faith
+            let key = match group.first().and_then(|&i| keys.get(i)) {
+                Some(k) => k.clone(),
+                None => continue,
+            };
+            let skey = Some(key.structure());
             let mut envs: Vec<Envelope> = group
-                .into_iter()
-                .map(|i| slots[i].take().unwrap())
+                .iter()
+                .filter_map(|&i| slots.get_mut(i).and_then(Option::take))
                 .collect();
             if envs.len() == 1 {
-                units.push((key, Unit::One(envs.pop().unwrap())));
-            } else {
-                units.push((key, Unit::Fused(envs)));
+                if let Some(env) = envs.pop() {
+                    units.push((skey, Unit::One(env, Some(key))));
+                }
+            } else if !envs.is_empty() {
+                units.push((skey, Unit::Fused(envs, key)));
             }
         }
     }
@@ -548,14 +575,14 @@ fn schedule_window(
     for (key, unit) in units {
         // affinity routing on the unit's pattern, load balance otherwise
         let w = if !affinity {
-            let w = *rr % worker_txs.len();
+            let w = *rr % worker_txs.len().max(1);
             *rr += 1;
             w
         } else {
             match key {
                 Some(key) => match affinity_map.get(&key) {
                     Some(&w) => {
-                        shared.registry.incr("engine.affinity.hit", 1);
+                        shared.registry.incr(names::ENGINE_AFFINITY_HIT, 1);
                         w
                     }
                     None => {
@@ -565,26 +592,43 @@ fn schedule_window(
                         // clearing forfeits warmth, never correctness
                         if affinity_map.len() >= AFFINITY_MAP_CAP {
                             affinity_map.clear();
-                            shared.registry.incr("engine.affinity.map_reset", 1);
+                            shared.registry.incr(names::ENGINE_AFFINITY_MAP_RESET, 1);
                         }
                         affinity_map.insert(key, w);
-                        shared.registry.incr("engine.affinity.miss", 1);
+                        shared.registry.incr(names::ENGINE_AFFINITY_MISS, 1);
                         w
                     }
                 },
                 None => least_depth(&shared.depths),
             }
         };
-        shared.depths[w].fetch_add(1, Ordering::Relaxed);
-        if let Err(std::sync::mpsc::SendError(unit)) = worker_txs[w].send(unit) {
+        let undeliverable = match worker_txs.get(w) {
+            Some(tx) => {
+                if let Some(d) = shared.depths.get(w) {
+                    d.fetch_add(1, Ordering::Relaxed);
+                }
+                match tx.send(unit) {
+                    Ok(()) => None,
+                    Err(std::sync::mpsc::SendError(unit)) => {
+                        if let Some(d) = shared.depths.get(w) {
+                            d.fetch_sub(1, Ordering::Relaxed);
+                        }
+                        Some(unit)
+                    }
+                }
+            }
+            // w is always in range (every route is mod/over the worker
+            // count); treat a miss like a dead worker anyway
+            None => Some(unit),
+        };
+        if let Some(unit) = undeliverable {
             // worker gone (shutdown race): fail the jobs, don't hang
             // them — and un-pin every pattern routed to the dead worker
             // so later same-pattern jobs re-route to a live one
-            shared.depths[w].fetch_sub(1, Ordering::Relaxed);
             affinity_map.retain(|_, &mut v| v != w);
             let envs = match unit {
-                Unit::One(e) => vec![e],
-                Unit::Fused(envs) => envs,
+                Unit::One(e, _) => vec![e],
+                Unit::Fused(envs, _) => envs,
             };
             for env in envs {
                 let Envelope {
@@ -631,26 +675,49 @@ fn worker_loop(rx: Receiver<Unit>, ctx: WorkerCtx) {
             Err(_) => break,
         };
         match unit {
-            Unit::One(env) => serve_one(env, &ctx),
-            Unit::Fused(envs) => serve_fused(envs, &ctx),
+            Unit::One(env, key) => serve_one(env, key, &ctx),
+            Unit::Fused(envs, key) => serve_fused(envs, key, &ctx),
         }
-        ctx.shared.depths[ctx.idx].fetch_sub(1, Ordering::Relaxed);
+        if let Some(d) = ctx.shared.depths.get(ctx.idx) {
+            d.fetch_sub(1, Ordering::Relaxed);
+        }
     }
 }
 
 /// Execute one job, catching panics so a bad residual (or any bug in a
-/// solver path) fails THIS job instead of wedging the worker.
-fn exec_caught(spec: JobSpec, ctx: &WorkerCtx) -> Result<JobOutput> {
-    match std::panic::catch_unwind(AssertUnwindSafe(|| exec_spec(spec, ctx))) {
+/// solver path) fails THIS job instead of wedging the worker.  `key` is
+/// the scheduler's fingerprint of the job's matrix, when it has one.
+fn exec_caught(spec: JobSpec, key: Option<PatternKey>, ctx: &WorkerCtx) -> Result<JobOutput> {
+    match std::panic::catch_unwind(AssertUnwindSafe(|| exec_spec(spec, key, ctx))) {
         Ok(r) => r,
         Err(p) => {
-            ctx.shared.registry.incr("engine.panic", 1);
+            ctx.shared.registry.incr(names::ENGINE_PANIC, 1);
             Err(Error::WorkerPanic(panic_msg(&*p)))
         }
     }
 }
 
-fn serve_one(env: Envelope, ctx: &WorkerCtx) {
+/// Factor through this worker's shard, re-using the scheduler's
+/// fingerprint when the caller carries one (`None` re-hashes — the
+/// Newton path, where the Jacobian values change between calls).
+fn shard_factor(
+    ctx: &WorkerCtx,
+    a: &Csr,
+    key: Option<&PatternKey>,
+    budget: u64,
+) -> Result<Arc<CachedFactor>> {
+    match key {
+        Some(k) => {
+            ctx.shards
+                .factor_on_keyed(ctx.idx, a, k, budget, Some(&ctx.shared.registry))
+        }
+        None => ctx
+            .shards
+            .factor_on(ctx.idx, a, budget, Some(&ctx.shared.registry)),
+    }
+}
+
+fn serve_one(env: Envelope, key: Option<PatternKey>, ctx: &WorkerCtx) {
     let t0 = Instant::now();
     if expired(env.deadline, t0) {
         respond_timeout(env, t0, &ctx.shared);
@@ -665,7 +732,7 @@ fn serve_one(env: Envelope, ctx: &WorkerCtx) {
     } = env;
     let kind = spec.kind();
     let queue_seconds = (t0 - enqueued).as_secs_f64();
-    let outcome = exec_caught(spec, ctx);
+    let outcome = exec_caught(spec, key, ctx);
     respond(
         &ctx.shared,
         reply,
@@ -681,7 +748,7 @@ fn serve_one(env: Envelope, ctx: &WorkerCtx) {
     );
 }
 
-fn serve_fused(envs: Vec<Envelope>, ctx: &WorkerCtx) {
+fn serve_fused(envs: Vec<Envelope>, key: PatternKey, ctx: &WorkerCtx) {
     let t0 = Instant::now();
     let mut live: Vec<Envelope> = Vec::with_capacity(envs.len());
     for env in envs {
@@ -701,22 +768,35 @@ fn serve_fused(envs: Vec<Envelope>, ctx: &WorkerCtx) {
     let uniform = {
         let mats: Vec<&Csr> = live
             .iter()
-            .map(|e| match &e.spec {
-                JobSpec::Linear { matrix, .. } => matrix,
-                _ => unreachable!("fused unit holds a non-linear job"),
-            })
-            .collect();
-        verify_groups(&mats)
+            .filter_map(|e| e.spec.linear_parts().map(|(m, _, _)| m))
+            .collect::<Vec<&Csr>>();
+        if mats.len() == live.len() {
+            verify_groups(&mats)
+        } else {
+            Vec::new()
+        }
     };
+    if uniform.is_empty() {
+        // only linear jobs fuse; a non-linear spec in the unit means a
+        // scheduler bug — serve every member individually rather than
+        // panicking the worker
+        for env in live {
+            serve_one(env, None, ctx);
+        }
+        return;
+    }
     if uniform.len() > 1 {
         ctx.shared
             .registry
-            .incr("service.key_collisions", (uniform.len() - 1) as u64);
+            .incr(names::SERVICE_KEY_COLLISIONS, (uniform.len() - 1) as u64);
     }
     let mut slots: Vec<Option<Envelope>> = live.into_iter().map(Some).collect();
     for group in uniform {
-        let sub: Vec<Envelope> = group.into_iter().map(|i| slots[i].take().unwrap()).collect();
-        serve_uniform(sub, t0, ctx);
+        let sub: Vec<Envelope> = group
+            .into_iter()
+            .filter_map(|i| slots.get_mut(i).and_then(Option::take))
+            .collect();
+        serve_uniform(sub, &key, t0, ctx);
     }
 }
 
@@ -754,37 +834,43 @@ fn batched_label(method: &str) -> &'static str {
 }
 
 /// Serve a verified-identical batch: factorize once through this
-/// worker's shard, sweep every RHS.  Falls back to per-request
-/// execution when the matrix cannot be factored (singular, over
-/// budget) or any member opted out of the auto policy.
-fn serve_uniform(batch: Vec<Envelope>, t0: Instant, ctx: &WorkerCtx) {
+/// worker's shard (re-using the scheduler's key — no re-hash), sweep
+/// every RHS.  Falls back to per-request execution when the matrix
+/// cannot be factored (singular, over budget), any member opted out of
+/// the auto policy, or a non-linear spec reached the batch (a
+/// scheduler bug; served generically, never a panic).
+fn serve_uniform(batch: Vec<Envelope>, key: &PatternKey, t0: Instant, ctx: &WorkerCtx) {
     let n = batch.len();
     let mut eligible = true;
     let mut budget = u64::MAX;
     for env in &batch {
-        match &env.spec {
-            JobSpec::Linear { matrix, b, opts } => {
+        match env.spec.linear_parts() {
+            Some((matrix, b, opts)) => {
                 eligible &= batch_direct_eligible(matrix, opts) && matrix.nrows == b.len();
                 budget = budget.min(opts.host_mem_budget);
             }
-            _ => unreachable!("fused unit holds a non-linear job"),
+            None => eligible = false,
         }
     }
-    if n > 1 && eligible {
-        let a = match &batch[0].spec {
-            JobSpec::Linear { matrix, .. } => matrix.clone(),
-            _ => unreachable!(),
-        };
+    let rep = if n > 1 && eligible {
+        batch
+            .first()
+            .and_then(|e| e.spec.linear_parts())
+            .map(|(matrix, _, _)| matrix.clone())
+    } else {
+        None
+    };
+    if let Some(a) = rep {
         // The fused path runs outside exec_caught, so it carries its
         // own panic guards: a factorization panic falls through to the
         // per-request path (which isolates per job), and a solve panic
         // fails THAT member only — the worker must survive either way.
         let factored = std::panic::catch_unwind(AssertUnwindSafe(|| {
             ctx.shards
-                .factor_on(ctx.idx, &a, budget, Some(&ctx.shared.registry))
+                .factor_on_keyed(ctx.idx, &a, key, budget, Some(&ctx.shared.registry))
         }));
         if factored.is_err() {
-            ctx.shared.registry.incr("engine.panic", 1);
+            ctx.shared.registry.incr(names::ENGINE_PANIC, 1);
         }
         if let Ok(Ok(f)) = factored {
             let bytes = f.bytes();
@@ -798,9 +884,28 @@ fn serve_uniform(batch: Vec<Envelope>, t0: Instant, ctx: &WorkerCtx) {
                     reply,
                     ..
                 } = env;
-                let b = match spec {
-                    JobSpec::Linear { b, .. } => b,
-                    _ => unreachable!(),
+                let b = match spec.into_linear() {
+                    Ok((_, b, _)) => b,
+                    Err(spec) => {
+                        // unreachable in a batch the eligibility loop
+                        // verified all-linear; serve generically anyway
+                        let kind = spec.kind();
+                        let outcome = exec_caught(*spec, None, ctx);
+                        respond(
+                            &ctx.shared,
+                            reply,
+                            JobResult {
+                                id,
+                                kind,
+                                outcome,
+                                queue_seconds: (t0 - enqueued).as_secs_f64(),
+                                service_seconds: ts.elapsed().as_secs_f64(),
+                                batch_size: n,
+                                worker: ctx.idx,
+                            },
+                        );
+                        continue;
+                    }
                 };
                 let outcome = match std::panic::catch_unwind(AssertUnwindSafe(|| {
                     f.solve(&b).map(|x| {
@@ -817,7 +922,7 @@ fn serve_uniform(batch: Vec<Envelope>, t0: Instant, ctx: &WorkerCtx) {
                 })) {
                     Ok(r) => r,
                     Err(p) => {
-                        ctx.shared.registry.incr("engine.panic", 1);
+                        ctx.shared.registry.incr(names::ENGINE_PANIC, 1);
                         Err(Error::WorkerPanic(panic_msg(&*p)))
                     }
                 };
@@ -839,7 +944,8 @@ fn serve_uniform(batch: Vec<Envelope>, t0: Instant, ctx: &WorkerCtx) {
         }
     }
     // per-request execution; batch_size stays n (these requests DID
-    // share the scheduling batch)
+    // share the scheduling batch) and each member re-uses the group's
+    // key — it IS that member's fingerprint (they were grouped by it)
     for env in batch {
         let ts = Instant::now();
         let Envelope {
@@ -850,7 +956,8 @@ fn serve_uniform(batch: Vec<Envelope>, t0: Instant, ctx: &WorkerCtx) {
             ..
         } = env;
         let kind = spec.kind();
-        let outcome = exec_caught(spec, ctx);
+        let key = spec.linear_parts().is_some().then(|| key.clone());
+        let outcome = exec_caught(spec, key, ctx);
         respond(
             &ctx.shared,
             reply,
@@ -871,13 +978,14 @@ fn serve_uniform(batch: Vec<Envelope>, t0: Instant, ctx: &WorkerCtx) {
 // Family adapters
 // ---------------------------------------------------------------------
 
-fn exec_spec(spec: JobSpec, ctx: &WorkerCtx) -> Result<JobOutput> {
+fn exec_spec(spec: JobSpec, key: Option<PatternKey>, ctx: &WorkerCtx) -> Result<JobOutput> {
+    let key = key.as_ref();
     match spec {
         JobSpec::Linear { matrix, b, opts } => {
-            exec_linear(&matrix, &b, &opts, ctx).map(JobOutput::Linear)
+            exec_linear(&matrix, &b, &opts, key, ctx).map(JobOutput::Linear)
         }
         JobSpec::MultiRhs { matrix, bs, opts } => {
-            exec_multi_rhs(&matrix, &bs, &opts, ctx).map(JobOutput::MultiRhs)
+            exec_multi_rhs(&matrix, &bs, &opts, key, ctx).map(JobOutput::MultiRhs)
         }
         JobSpec::Nonlinear { residual, u0, opts } => {
             Ok(JobOutput::Nonlinear(exec_nonlinear(
@@ -893,7 +1001,7 @@ fn exec_spec(spec: JobSpec, ctx: &WorkerCtx) -> Result<JobOutput> {
             b,
             gy,
             opts,
-        } => exec_adjoint(&matrix, &b, &gy, &opts, ctx),
+        } => exec_adjoint(&matrix, &b, &gy, &opts, key, ctx),
         JobSpec::Dist { tensor, b, opts } => {
             let (x, reports) = tensor.solve(&b, &opts)?;
             Ok(JobOutput::Dist { x, reports })
@@ -901,15 +1009,18 @@ fn exec_spec(spec: JobSpec, ctx: &WorkerCtx) -> Result<JobOutput> {
     }
 }
 
-fn exec_linear(a: &Csr, b: &[f64], opts: &SolveOpts, ctx: &WorkerCtx) -> Result<SolveOutcome> {
+fn exec_linear(
+    a: &Csr,
+    b: &[f64],
+    opts: &SolveOpts,
+    key: Option<&PatternKey>,
+    ctx: &WorkerCtx,
+) -> Result<SolveOutcome> {
     if a.nrows != b.len() {
         return Err(Error::InvalidProblem("rhs length mismatch".into()));
     }
     if direct_eligible(a, opts) {
-        if let Ok(f) =
-            ctx.shards
-                .factor_on(ctx.idx, a, opts.host_mem_budget, Some(&ctx.shared.registry))
-        {
+        if let Ok(f) = shard_factor(ctx, a, key, opts.host_mem_budget) {
             let x = f.solve(b)?;
             let residual = residual_of(a, &x, b);
             return Ok(SolveOutcome {
@@ -937,6 +1048,7 @@ fn exec_multi_rhs(
     a: &Csr,
     bs: &[Vec<f64>],
     opts: &SolveOpts,
+    key: Option<&PatternKey>,
     ctx: &WorkerCtx,
 ) -> Result<Vec<SolveOutcome>> {
     for b in bs {
@@ -945,10 +1057,7 @@ fn exec_multi_rhs(
         }
     }
     if batch_direct_eligible(a, opts) {
-        if let Ok(f) =
-            ctx.shards
-                .factor_on(ctx.idx, a, opts.host_mem_budget, Some(&ctx.shared.registry))
-        {
+        if let Ok(f) = shard_factor(ctx, a, key, opts.host_mem_budget) {
             let bytes = f.bytes();
             let method = batched_label(f.method());
             return bs
@@ -1017,16 +1126,14 @@ fn exec_adjoint(
     b: &[f64],
     gy: &[f64],
     opts: &SolveOpts,
+    key: Option<&PatternKey>,
     ctx: &WorkerCtx,
 ) -> Result<JobOutput> {
     if a.nrows != b.len() || a.nrows != gy.len() {
         return Err(Error::InvalidProblem("rhs length mismatch".into()));
     }
     if direct_eligible(a, opts) {
-        if let Ok(f) =
-            ctx.shards
-                .factor_on(ctx.idx, a, opts.host_mem_budget, Some(&ctx.shared.registry))
-        {
+        if let Ok(f) = shard_factor(ctx, a, key, opts.host_mem_budget) {
             // ONE numeric factorization serves forward + transpose
             // (paper Eq. 3)
             let x = f.solve(b)?;

@@ -36,6 +36,9 @@ pub struct MixedWorkload {
 
 impl MixedWorkload {
     pub fn new(grids: &[usize], seed: u64) -> Self {
+        // an empty grid list would make every `i % len` below panic;
+        // clamp to the default demo grid instead
+        let grids: &[usize] = if grids.is_empty() { &[6] } else { grids };
         MixedWorkload {
             patterns: grids.iter().map(|&g| poisson2d(g, None)).collect(),
             rng: Prng::new(seed),
@@ -52,7 +55,7 @@ impl MixedWorkload {
     /// The `i`-th request of the stream.
     pub fn spec(&mut self, i: usize) -> JobSpec {
         let idx = i % self.patterns.len();
-        let matrix = self.patterns[idx].matrix.clone();
+        let matrix = self.patterns[idx].matrix.clone(); // rsla-lint: allow(L1, idx = i % len and patterns is non-empty by construction)
         let n = matrix.nrows;
         match i % 10 {
             0..=5 => JobSpec::Linear {
@@ -88,7 +91,7 @@ impl MixedWorkload {
                     }
                 } else {
                     let tensor = {
-                        let sys = &self.patterns[idx];
+                        let sys = &self.patterns[idx]; // rsla-lint: allow(L1, idx = i % len and patterns is non-empty by construction)
                         let coords = if self.dist_use_coords {
                             Some(sys.coords.as_slice())
                         } else {
@@ -100,7 +103,7 @@ impl MixedWorkload {
                             self.dist_ranks,
                             self.dist_strategy,
                         )
-                        .expect("partition demo system")
+                        .expect("partition demo system") // rsla-lint: allow(L1, bundled Poisson demo systems always partition)
                     };
                     JobSpec::Dist {
                         tensor,

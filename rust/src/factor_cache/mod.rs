@@ -29,9 +29,10 @@ use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::direct::{build_factor, refactor, CachedFactor, Symbolic};
 use crate::error::{Error, Result};
-use crate::metrics::{self, MemTracker};
+use crate::metrics::{self, names, MemTracker};
 use crate::sparse::key::{PatternKey, StructureKey};
 use crate::sparse::Csr;
+use crate::util::lock_recover;
 
 /// Default byte budget for the process-wide cache.  Override per
 /// process with `RSLA_FACTOR_CACHE_BYTES`, or construct private caches
@@ -142,7 +143,7 @@ impl FactorCache {
 
     /// Drop every cached entry (tests, memory pressure).
     pub fn clear(&self) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_recover(&self.inner);
         for (_, e) in inner.numeric.drain() {
             self.mem.sub(e.bytes);
         }
@@ -169,11 +170,29 @@ impl FactorCache {
         reg: Option<&metrics::Registry>,
     ) -> Result<Arc<CachedFactor>> {
         let key = PatternKey::of(a);
+        self.factor_keyed(a, &key, max_fill_bytes, reg)
+    }
+
+    /// [`factor`](Self::factor) with a caller-supplied key — the engine
+    /// scheduler already fingerprints every linear job to group and
+    /// route it, so the worker threads that key through here instead of
+    /// paying a second O(nnz) `PatternKey::of` pass.  The key MUST be
+    /// `PatternKey::of(a)`; every tier re-verifies full equality before
+    /// acting on it, so a wrong key costs a missed reuse, never a wrong
+    /// answer.
+    pub fn factor_keyed(
+        &self,
+        a: &Csr,
+        key: &PatternKey,
+        max_fill_bytes: u64,
+        reg: Option<&metrics::Registry>,
+    ) -> Result<Arc<CachedFactor>> {
+        let key = key.clone();
         let skey = key.structure();
 
         // numeric tier
         let cached_sym: Option<Symbolic> = {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = lock_recover(&self.inner);
             inner.clock += 1;
             let now = inner.clock;
             if let Some(e) = inner.numeric.get_mut(&key) {
@@ -195,10 +214,10 @@ impl FactorCache {
                     e.last_used = now;
                     let factor = e.factor.clone();
                     drop(inner);
-                    Self::bump(&self.hits_numeric, reg, "factor_cache.hit.numeric");
+                    Self::bump(&self.hits_numeric, reg, names::FACTOR_CACHE_HIT_NUMERIC);
                     return Ok(factor);
                 }
-                Self::bump(&self.collisions, reg, "factor_cache.collision");
+                Self::bump(&self.collisions, reg, names::FACTOR_CACHE_COLLISION);
             }
             // symbolic tier lookup (equality-verified)
             match inner.symbolic.get_mut(&skey) {
@@ -215,7 +234,7 @@ impl FactorCache {
         let (factor, sym, was_symbolic_hit) = match cached_sym {
             Some(sym) => match refactor(&sym, a, symmetric, max_fill_bytes) {
                 Ok(f) => {
-                    Self::bump(&self.hits_symbolic, reg, "factor_cache.hit.symbolic");
+                    Self::bump(&self.hits_symbolic, reg, names::FACTOR_CACHE_HIT_SYMBOLIC);
                     (f, sym, true)
                 }
                 Err(_) => {
@@ -226,15 +245,15 @@ impl FactorCache {
                     // (including OutOfMemory) never depend on cache
                     // warmth.
                     if let Some(r) = reg {
-                        r.incr("factor_cache.refactor_fallback", 1);
+                        r.incr(names::FACTOR_CACHE_REFACTOR_FALLBACK, 1);
                     }
-                    Self::bump(&self.misses, reg, "factor_cache.miss");
+                    Self::bump(&self.misses, reg, names::FACTOR_CACHE_MISS);
                     let (f, s) = build_factor(a, symmetric, max_fill_bytes)?;
                     (f, s, false)
                 }
             },
             None => {
-                Self::bump(&self.misses, reg, "factor_cache.miss");
+                Self::bump(&self.misses, reg, names::FACTOR_CACHE_MISS);
                 let (f, s) = build_factor(a, symmetric, max_fill_bytes)?;
                 (f, s, false)
             }
@@ -242,12 +261,12 @@ impl FactorCache {
         Self::bump(
             &self.numeric_factorizations,
             reg,
-            "factor_cache.numeric_factorizations",
+            names::FACTOR_CACHE_NUMERIC_FACTORIZATIONS,
         );
 
         // insert + evict
         {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = lock_recover(&self.inner);
             inner.clock += 1;
             let now = inner.clock;
             let entry_bytes =
@@ -307,7 +326,7 @@ impl FactorCache {
             if let Some(k) = victim {
                 if let Some(e) = inner.numeric.remove(&k) {
                     self.mem.sub(e.bytes);
-                    Self::bump(&self.evictions, reg, "factor_cache.eviction");
+                    Self::bump(&self.evictions, reg, names::FACTOR_CACHE_EVICTION);
                 }
                 continue;
             }
@@ -320,19 +339,19 @@ impl FactorCache {
             if let Some(k) = victim {
                 if let Some(e) = inner.symbolic.remove(&k) {
                     self.mem.sub(e.bytes);
-                    Self::bump(&self.evictions, reg, "factor_cache.eviction");
+                    Self::bump(&self.evictions, reg, names::FACTOR_CACHE_EVICTION);
                 }
                 continue;
             }
             // only the just-inserted entries remain
             if let Some(e) = inner.numeric.remove(keep_num) {
                 self.mem.sub(e.bytes);
-                Self::bump(&self.evictions, reg, "factor_cache.eviction");
+                Self::bump(&self.evictions, reg, names::FACTOR_CACHE_EVICTION);
                 continue;
             }
             if let Some(e) = inner.symbolic.remove(keep_sym) {
                 self.mem.sub(e.bytes);
-                Self::bump(&self.evictions, reg, "factor_cache.eviction");
+                Self::bump(&self.evictions, reg, names::FACTOR_CACHE_EVICTION);
                 continue;
             }
             break;
@@ -362,7 +381,7 @@ impl FactorCache {
     /// on a symbolic miss or when the cached family is LU.
     pub fn chol_predicted_fill_bytes(&self, a: &Csr) -> Option<u64> {
         let skey = StructureKey::of(a);
-        let inner = self.inner.lock().unwrap();
+        let inner = lock_recover(&self.inner);
         match inner.symbolic.get(&skey) {
             Some(e) if e.indptr == a.indptr && e.indices == a.indices => match &e.sym {
                 Symbolic::Chol(cs) => Some((cs.predicted_fill() * 8) as u64),
@@ -379,8 +398,15 @@ impl FactorCache {
     /// cold matrix.
     pub fn holds_numeric(&self, a: &Csr) -> bool {
         let key = PatternKey::of(a);
-        let inner = self.inner.lock().unwrap();
-        match inner.numeric.get(&key) {
+        self.holds_numeric_keyed(a, &key)
+    }
+
+    /// [`holds_numeric`](Self::holds_numeric) with a caller-supplied
+    /// key (the engine's scheduler-computed fingerprint), skipping the
+    /// O(nnz) re-hash.
+    pub fn holds_numeric_keyed(&self, a: &Csr, key: &PatternKey) -> bool {
+        let inner = lock_recover(&self.inner);
+        match inner.numeric.get(key) {
             Some(e) => {
                 e.matrix.indptr == a.indptr
                     && e.matrix.indices == a.indices
@@ -397,7 +423,7 @@ impl FactorCache {
     pub fn symmetry_of(&self, a: &Csr) -> bool {
         let key = PatternKey::of(a);
         {
-            let inner = self.inner.lock().unwrap();
+            let inner = lock_recover(&self.inner);
             if let Some(e) = inner.numeric.get(&key) {
                 if e.matrix.indptr == a.indptr
                     && e.matrix.indices == a.indices
@@ -442,12 +468,14 @@ impl CacheShards {
     }
 
     pub fn shard(&self, i: usize) -> &Arc<FactorCache> {
+        // rsla-lint: allow(L1, shard index is a worker index and shards is sized to the worker count)
         &self.shards[i]
     }
 
     /// True when any shard holds a verified numeric factor for `a`.
     pub fn any_holds(&self, a: &Csr) -> bool {
-        self.shards.iter().any(|s| s.holds_numeric(a))
+        let key = PatternKey::of(a);
+        self.shards.iter().any(|s| s.holds_numeric_keyed(a, &key))
     }
 
     /// Factor `a` through shard `i`, accounting shard-local hits and
@@ -459,20 +487,44 @@ impl CacheShards {
         max_fill_bytes: u64,
         reg: Option<&metrics::Registry>,
     ) -> Result<Arc<CachedFactor>> {
-        let shard = &self.shards[i];
+        let key = PatternKey::of(a);
+        self.factor_on_keyed(i, a, &key, max_fill_bytes, reg)
+    }
+
+    /// [`factor_on`](Self::factor_on) with the scheduler's
+    /// already-computed key: the whole shard probe (local hit,
+    /// cross-shard miss, factor/fetch) runs without re-hashing `a`.
+    pub fn factor_on_keyed(
+        &self,
+        i: usize,
+        a: &Csr,
+        key: &PatternKey,
+        max_fill_bytes: u64,
+        reg: Option<&metrics::Registry>,
+    ) -> Result<Arc<CachedFactor>> {
+        // an out-of-range worker index (impossible by construction)
+        // degrades to shard 0 rather than panicking the worker
+        let shard = match self.shards.get(i).or_else(|| self.shards.first()) {
+            Some(s) => s,
+            None => {
+                return Err(Error::InvalidProblem(
+                    "factor cache has no shards".into(),
+                ))
+            }
+        };
         if let Some(r) = reg {
-            if shard.holds_numeric(a) {
-                r.incr("factor_cache.shard_local_hit", 1);
+            if shard.holds_numeric_keyed(a, key) {
+                r.incr(names::FACTOR_CACHE_SHARD_LOCAL_HIT, 1);
             } else if self
                 .shards
                 .iter()
                 .enumerate()
-                .any(|(j, s)| j != i && s.holds_numeric(a))
+                .any(|(j, s)| j != i && s.holds_numeric_keyed(a, key))
             {
-                r.incr("factor_cache.cross_shard_miss", 1);
+                r.incr(names::FACTOR_CACHE_CROSS_SHARD_MISS, 1);
             }
         }
-        shard.factor(a, max_fill_bytes, reg)
+        shard.factor_keyed(a, key, max_fill_bytes, reg)
     }
 
     /// Aggregate counter/byte snapshot across all shards.

@@ -84,7 +84,7 @@ where
             let c = pattern.indices[k];
             let kt = pattern
                 .find(c, r)
-                .expect("pattern must be structurally symmetric");
+                .expect("pattern must be structurally symmetric"); // rsla-lint: allow(L1, gradcheck requires structurally symmetric patterns by contract)
             d[k] = 0.5 * (raw[k] + raw[kt]);
         }
     }

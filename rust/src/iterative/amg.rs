@@ -25,6 +25,7 @@ use crate::error::{Error, Result};
 use crate::factor_cache::FactorCache;
 use crate::iterative::Precond;
 use crate::sparse::{Coo, Csr};
+use crate::util::lock_recover;
 
 /// AMG construction options.
 #[derive(Clone, Debug)]
@@ -273,10 +274,12 @@ impl Amg {
         let lev = &self.levels[depth];
         let n = lev.a.nrows;
         if depth + 1 == self.levels.len() {
-            let mut scratch = self.coarse_scratch.lock().unwrap();
-            self.coarse
-                .solve_into(b, x, &mut scratch)
-                .expect("amg coarse solve");
+            let mut scratch = lock_recover(&self.coarse_scratch);
+            if self.coarse.solve_into(b, x, &mut scratch).is_err() {
+                // a singular coarse factor degrades to an identity
+                // coarse correction instead of aborting the solve
+                x.copy_from_slice(b);
+            }
             return;
         }
         let mut tmp = vec![0.0; n];
@@ -289,7 +292,11 @@ impl Amg {
             res[i] = b[i] - tmp[i];
         }
         // restrict
-        let r = lev.r.as_ref().unwrap();
+        let Some(r) = lev.r.as_ref() else {
+            // non-coarse levels always carry restriction/prolongation;
+            // degrade to the smoothed iterate if one is missing
+            return;
+        };
         let nc = r.nrows;
         let mut bc = vec![0.0; nc];
         r.spmv(&res, &mut bc);
@@ -297,7 +304,9 @@ impl Amg {
         let mut xc = vec![0.0; nc];
         self.vcycle(depth + 1, &bc, &mut xc);
         // prolong + correct
-        let p = lev.p.as_ref().unwrap();
+        let Some(p) = lev.p.as_ref() else {
+            return;
+        };
         p.spmv(&xc, &mut tmp);
         for i in 0..n {
             x[i] += tmp[i];

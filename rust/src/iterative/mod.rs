@@ -33,7 +33,7 @@ pub trait LinOp {
     fn apply(&self, x: &[f64], y: &mut [f64]);
     /// Transpose apply; default panics for operators without one.
     fn apply_t(&self, _x: &[f64], _y: &mut [f64]) {
-        panic!("apply_t not implemented for this operator");
+        panic!("apply_t not implemented for this operator"); // rsla-lint: allow(L1, documented contract: operators without a transpose must not be applied transposed)
     }
 }
 

@@ -128,11 +128,12 @@ impl Ilu0 {
             .map(|r| {
                 let lo = lu.indptr[r];
                 let hi = lu.indptr[r + 1];
-                lo + lu.indices[lo..hi]
+                lu.indices[lo..hi]
                     .binary_search(&r)
-                    .unwrap_or_else(|_| panic!("ilu0: missing diagonal at row {r}"))
+                    .map(|off| lo + off)
+                    .map_err(|_| Error::InvalidProblem(format!("ilu0: missing diagonal at row {r}")))
             })
-            .collect();
+            .collect::<Result<_>>()?;
         for i in 0..n {
             let (lo, hi) = (lu.indptr[i], lu.indptr[i + 1]);
             let mut k_idx = lo;

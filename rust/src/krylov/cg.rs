@@ -58,6 +58,7 @@ pub fn cg(
 
     let mut iters = 0;
     let mut breakdown = false;
+    // rsla-lint: no_alloc
     while iters < opts.max_iters && rr > tol2 {
         a.apply(&mut p_ext, &mut ap);
         let pap = comm.all_reduce_sum(dot(&p_ext[..n], &ap));
@@ -156,6 +157,7 @@ pub fn cg_pipelined(
 
     let mut iters = 0;
     let mut breakdown = false;
+    // rsla-lint: no_alloc
     while iters < opts.max_iters && rr > tol2 && alpha.is_finite() && alpha != 0.0 {
         // p = u + beta p ; s = w + beta s  (beta = 0 on the first pass)
         for i in 0..n {

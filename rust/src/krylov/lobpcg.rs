@@ -145,7 +145,7 @@ pub fn lobpcg(
 
     // sort pairs ascending by value
     let mut order: Vec<usize> = (0..k).collect();
-    order.sort_by(|&i, &j| values[i].partial_cmp(&values[j]).unwrap());
+    order.sort_by(|&i, &j| values[i].total_cmp(&values[j]));
     EigResult {
         values: order.iter().map(|&i| values[i]).collect(),
         vectors: order.iter().map(|&i| x[i].clone()).collect(),

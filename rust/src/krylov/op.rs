@@ -41,7 +41,7 @@ pub trait LinearOperator {
     /// backward path, Eq. 6).  Default panics for operators without an
     /// adjoint, mirroring [`LinOp::apply_t`].
     fn apply_adjoint(&self, _gy_own: &[f64], _gx_own: &mut [f64]) {
-        panic!("apply_adjoint not implemented for this operator");
+        panic!("apply_adjoint not implemented for this operator"); // rsla-lint: allow(L1, documented contract mirroring LinOp::apply_t)
     }
 }
 

@@ -56,6 +56,7 @@ pub mod factor_cache;
 pub mod gradcheck;
 pub mod iterative;
 pub mod krylov;
+pub mod lint;
 pub mod metrics;
 pub mod nonlinear;
 pub mod optim;

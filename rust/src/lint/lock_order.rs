@@ -1,0 +1,53 @@
+//! The repo's declared lock hierarchy (lint rule **L2**).
+//!
+//! Locks must be acquired top-down; the tiers, highest first:
+//!
+//! ```text
+//!   tier 0   engine scheduler state        Engine.intake / Engine.threads
+//!      |     (submission + lifecycle)
+//!      v
+//!   tier 1   CacheShards routing           (no mutex today; reserved so the
+//!      |                                    planned shared-shard work slots in)
+//!      v
+//!   tier 2   factor_cache LRU              FactorCache.inner
+//!      |
+//!      v
+//!   tier 3   metrics::Registry             Registry.counters
+//! ```
+//!
+//! Acquiring a *deeper* (higher-numbered) lock while holding a shallower
+//! one is legal — that is the call direction: the engine locks intake,
+//! workers enter the factor cache, the cache mirrors counters into the
+//! registry.  Acquiring a *shallower* lock while a deeper guard is live
+//! inverts the order and can deadlock against a thread walking the legal
+//! direction; L2 flags it.  L2 also flags holding ANY tracked guard
+//! across a reply-callback or `solver_fn` call site: both run
+//! caller-supplied code of unknown locking behavior.
+//!
+//! The checker is lexical: a lock site is recognized by the receiver
+//! field it is acquired through (`.lock()` / `.read()` / `.write()` on
+//! `intake`, `threads`, `inner`, `counters`, or through
+//! `lock_recover(&...)`).  Receivers not named here are untracked.
+//! Renaming one of these fields must update this table — the lint
+//! self-test corpus pins the tier assignments.
+
+/// (receiver field name, tier, human description).
+pub const TIERS: &[(&str, u8, &str)] = &[
+    ("intake", 0, "engine scheduler: Engine.intake"),
+    ("threads", 0, "engine scheduler: Engine.threads"),
+    ("shards", 1, "CacheShards routing state (reserved)"),
+    ("inner", 2, "factor_cache LRU: FactorCache.inner"),
+    ("counters", 3, "metrics::Registry.counters"),
+];
+
+/// Call tokens that run caller-supplied code; no tracked guard may be
+/// live across them.
+pub const CALLBACK_SITES: &[&str] = &["reply(", "respond(", "respond_timeout(", "solver_fn("];
+
+/// Tier of a receiver field name, if tracked.
+pub fn tier_of(field: &str) -> Option<(u8, &'static str)> {
+    TIERS
+        .iter()
+        .find(|(name, _, _)| *name == field)
+        .map(|&(_, t, desc)| (t, desc))
+}

@@ -1,0 +1,353 @@
+//! `rsla-lint` — the repo-invariant static-analysis pass.
+//!
+//! The library's correctness contract is bitwise determinism (frozen FP
+//! schedules pinned by `krylov_equivalence`, refactor-vs-cold,
+//! fused-vs-per-request) and its serving contract is no worker death and
+//! no deadlock across three mutex-bearing subsystems.  Those contracts
+//! are invisible to `rustc` and `clippy`; this pass makes them
+//! machine-checked.  Rules (catalog + rationale in
+//! `docs/static_analysis.md`):
+//!
+//! * **L1** no-panic-in-library: `unwrap`/`expect`/`panic!`/
+//!   `unreachable!`/`todo!`/`unimplemented!` forbidden outside tests and
+//!   binaries; `[idx]` indexing additionally forbidden in the strict
+//!   control-plane modules ([`rules::STRICT_INDEX_MODULES`]).
+//! * **L2** lock-ordering against the hierarchy in [`lock_order`], plus
+//!   no tracked guard held across a reply-callback / `solver_fn` site.
+//! * **L3** determinism: float accumulation inside `HashMap`/`HashSet`
+//!   iteration, `par_iter`-style unordered reductions.
+//! * **L4** metrics hygiene: every metric name literal is declared
+//!   exactly once in `metrics/names.rs`; dynamic names go through
+//!   `incr_labeled`.
+//! * **L5** no-alloc-on-warm-path: bodies annotated
+//!   `// rsla-lint: no_alloc` must not allocate.
+//!
+//! Suppression is per-site and must carry a reason:
+//! `// rsla-lint: allow(L1, why this site is safe)` on the offending
+//! line or the line above.  A reasonless `allow` is itself an error.
+//!
+//! Run as `cargo run --bin rsla-lint -- rust/src` (CI blocks on it).
+
+pub mod lock_order;
+pub mod rules;
+pub mod scanner;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use scanner::SourceFile;
+
+/// One finding.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Path relative to the scan root.
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    /// Rule id: L1..L5, or ANN for malformed annotations.
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file, self.line, self.rule, self.message
+        )
+    }
+}
+
+/// Lint every `.rs` file under `root` (sorted walk, deterministic
+/// output order).  Returns diagnostics; empty means the tree is clean.
+pub fn run(root: &Path) -> std::io::Result<Vec<Diagnostic>> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    files.sort();
+    let mut scanned = Vec::with_capacity(files.len());
+    for path in &files {
+        let raw = std::fs::read_to_string(path)?;
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        scanned.push(SourceFile::scan(&rel, raw));
+    }
+    Ok(lint_files(&scanned))
+}
+
+/// Rule passes over already-scanned files (the self-test corpus enters
+/// here without touching the filesystem).
+pub fn lint_files(files: &[SourceFile]) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let registered = rules::l4_collect_registered(files, &mut diags);
+    for f in files {
+        rules::check_annotations(f, &mut diags);
+        rules::l1_no_panic(f, &mut diags);
+        rules::l2_lock_order(f, &mut diags);
+        rules::l3_determinism(f, &mut diags);
+        rules::l4_metric_names(f, &registered, &mut diags);
+        rules::l5_no_alloc(f, &mut diags);
+    }
+    diags.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    diags
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint_snippet(rel: &str, src: &str) -> Vec<Diagnostic> {
+        lint_files(&[SourceFile::scan(rel, src.to_string())])
+    }
+
+    // ---------------- fixture corpus: one firing + one suppressed ----
+    // snippet per rule, pinning fire/no-fire behavior (acceptance
+    // criterion of the lint PR).
+
+    #[test]
+    fn l1_fires_on_unwrap_and_respects_allow() {
+        let fire = lint_snippet("engine/x.rs", "fn f(o: Option<u8>) { o.unwrap(); }\n");
+        assert!(
+            fire.iter().any(|d| d.rule == "L1" && d.message.contains("unwrap")),
+            "expected an L1 unwrap finding, got {fire:?}"
+        );
+        let ok = lint_snippet(
+            "engine/x.rs",
+            "fn f(o: Option<u8>) {\n    // rsla-lint: allow(L1, value guaranteed by caller)\n    o.unwrap();\n}\n",
+        );
+        assert!(ok.is_empty(), "allow(L1, reason) must suppress: {ok:?}");
+    }
+
+    #[test]
+    fn l1_exempts_tests_and_binaries() {
+        let in_test = lint_snippet(
+            "engine/x.rs",
+            "#[cfg(test)]\nmod tests {\n    fn t(o: Option<u8>) { o.unwrap(); }\n}\n",
+        );
+        assert!(in_test.is_empty(), "{in_test:?}");
+        let in_bin = lint_snippet("bin/tool.rs", "fn main() { None::<u8>.unwrap(); }\n");
+        assert!(in_bin.is_empty(), "{in_bin:?}");
+        let in_main = lint_snippet("main.rs", "fn main() { None::<u8>.unwrap(); }\n");
+        assert!(in_main.is_empty(), "{in_main:?}");
+    }
+
+    #[test]
+    fn l1_indexing_only_in_strict_modules() {
+        let strict = lint_snippet("factor_cache/x.rs", "fn f(v: &[u8]) -> u8 { v[0] }\n");
+        assert!(
+            strict.iter().any(|d| d.rule == "L1" && d.message.contains("index")),
+            "{strict:?}"
+        );
+        let kernel = lint_snippet("direct/x.rs", "fn f(v: &[u8]) -> u8 { v[0] }\n");
+        assert!(
+            kernel.is_empty(),
+            "numeric kernels are exempt from the indexing sub-rule: {kernel:?}"
+        );
+        let suppressed = lint_snippet(
+            "factor_cache/x.rs",
+            "fn f(v: &[u8]) -> u8 {\n    // rsla-lint: allow(L1, len checked by caller)\n    v[0]\n}\n",
+        );
+        assert!(suppressed.is_empty(), "{suppressed:?}");
+    }
+
+    #[test]
+    fn l2_fires_on_inverted_order_and_callback_under_lock() {
+        // counters (tier 3) held while acquiring inner (tier 2): inverted
+        let fire = lint_snippet(
+            "metrics/x.rs",
+            "fn f(&self) {\n    let g = self.counters.lock().unwrap();\n    let h = self.inner.lock().unwrap();\n    drop(h); drop(g);\n}\n",
+        );
+        assert!(
+            fire.iter().any(|d| d.rule == "L2" && d.message.contains("tier")),
+            "{fire:?}"
+        );
+        // legal direction: inner then counters
+        let ok = lint_snippet(
+            "factor_cache/x.rs",
+            "fn f(&self) {\n    let g = self.inner.lock().unwrap();\n    let h = self.counters.lock().unwrap();\n    drop(h); drop(g);\n}\n",
+        );
+        assert!(ok.iter().all(|d| d.rule != "L2"), "{ok:?}");
+        // reply under a tracked guard
+        let cb = lint_snippet(
+            "engine/x.rs",
+            "fn f(&self) {\n    let g = self.intake.lock().unwrap();\n    reply(result);\n    drop(g);\n}\n",
+        );
+        assert!(
+            cb.iter().any(|d| d.rule == "L2" && d.message.contains("callback")),
+            "{cb:?}"
+        );
+        // suppressed
+        let sup = lint_snippet(
+            "metrics/x.rs",
+            "fn f(&self) {\n    let g = self.counters.lock().unwrap();\n    // rsla-lint: allow(L2, single-threaded init path)\n    let h = self.inner.lock().unwrap();\n    drop(h); drop(g);\n}\n",
+        );
+        assert!(sup.iter().all(|d| d.rule != "L2"), "{sup:?}");
+    }
+
+    #[test]
+    fn l2_guard_dropped_before_acquisition_is_clean() {
+        let ok = lint_snippet(
+            "engine/x.rs",
+            "fn f(&self) {\n    let g = self.counters.lock().unwrap();\n    drop(g);\n    let h = self.intake.lock().unwrap();\n    drop(h);\n}\n",
+        );
+        assert!(ok.iter().all(|d| d.rule != "L2"), "{ok:?}");
+        // temporary guard (consumed same statement) does not leak liveness
+        let tmp = lint_snippet(
+            "engine/x.rs",
+            "fn f(&self) {\n    let tx = self.intake.lock().unwrap().take();\n    let h = self.counters.lock().unwrap();\n    drop(h);\n}\n",
+        );
+        assert!(tmp.iter().all(|d| d.rule != "L2"), "{tmp:?}");
+    }
+
+    #[test]
+    fn l3_fires_on_float_accumulation_over_hashmap() {
+        let fire = lint_snippet(
+            "sparse/x.rs",
+            "use std::collections::HashMap;\nfn f(m: &HashMap<u32, f64>) -> f64 {\n    let mut acc = 0.0;\n    for (_, v) in m {\n        acc += v;\n    }\n    acc\n}\n",
+        );
+        assert!(fire.iter().any(|d| d.rule == "L3"), "{fire:?}");
+        let ok = lint_snippet(
+            "sparse/x.rs",
+            "use std::collections::HashMap;\nfn f(m: &HashMap<u32, f64>) -> f64 {\n    let mut keys: Vec<u32> = m.keys().copied().collect();\n    keys.sort_unstable();\n    let mut acc = 0.0;\n    for k in keys { acc += 1.0; }\n    acc\n}\n",
+        );
+        assert!(ok.iter().all(|d| d.rule != "L3"), "sorted-key iteration is fine: {ok:?}");
+        let sup = lint_snippet(
+            "sparse/x.rs",
+            "use std::collections::HashMap;\nfn f(m: &HashMap<u32, u64>) -> u64 {\n    let mut acc = 0;\n    for (_, v) in m {\n        // rsla-lint: allow(L3, integer accumulation is order-independent)\n        acc += v;\n    }\n    acc\n}\n",
+        );
+        assert!(sup.iter().all(|d| d.rule != "L3"), "{sup:?}");
+    }
+
+    #[test]
+    fn l4_checks_names_against_the_declared_registry() {
+        let names = SourceFile::scan(
+            "metrics/names.rs",
+            "pub const A: &str = \"engine.good\";\n".to_string(),
+        );
+        let user_bad = SourceFile::scan(
+            "engine/x.rs",
+            "fn f(r: &Registry) { r.incr(\"engine.bogus\", 1); }\n".to_string(),
+        );
+        let diags = lint_files(&[names, user_bad]);
+        assert!(
+            diags.iter().any(|d| d.rule == "L4" && d.message.contains("engine.bogus")),
+            "{diags:?}"
+        );
+
+        let names = SourceFile::scan(
+            "metrics/names.rs",
+            "pub const A: &str = \"engine.good\";\n".to_string(),
+        );
+        let user_ok = SourceFile::scan(
+            "engine/x.rs",
+            "fn f(r: &Registry) { r.incr(\"engine.good\", 1); }\n".to_string(),
+        );
+        assert!(lint_files(&[names, user_ok]).is_empty());
+
+        // double declaration fires
+        let dup = SourceFile::scan(
+            "metrics/names.rs",
+            "pub const A: &str = \"engine.twice\";\npub const B: &str = \"engine.twice\";\n"
+                .to_string(),
+        );
+        let diags = lint_files(&[dup]);
+        assert!(
+            diags.iter().any(|d| d.rule == "L4" && d.message.contains("twice")),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn l4_flags_format_built_names() {
+        let names = SourceFile::scan(
+            "metrics/names.rs",
+            "pub const A: &str = \"engine.completed\";\n".to_string(),
+        );
+        let dynamic = SourceFile::scan(
+            "engine/x.rs",
+            "fn f(r: &Registry, k: &str) { r.incr(&format!(\"engine.completed.{k}\"), 1); }\n"
+                .to_string(),
+        );
+        let diags = lint_files(&[names, dynamic]);
+        assert!(
+            diags.iter().any(|d| d.rule == "L4" && d.message.contains("incr_labeled")),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn l5_fires_inside_no_alloc_bodies_only() {
+        let fire = lint_snippet(
+            "direct/x.rs",
+            "// rsla-lint: no_alloc\nfn f(xs: &[f64]) -> Vec<f64> { xs.to_vec() }\n",
+        );
+        assert!(fire.iter().any(|d| d.rule == "L5"), "{fire:?}");
+        let unannotated = lint_snippet("direct/x.rs", "fn f(xs: &[f64]) -> Vec<f64> { xs.to_vec() }\n");
+        assert!(unannotated.is_empty(), "{unannotated:?}");
+        let sup = lint_snippet(
+            "direct/x.rs",
+            "// rsla-lint: no_alloc\nfn f(xs: &[f64]) -> Vec<f64> {\n    // rsla-lint: allow(L5, one-time setup before the hot loop)\n    xs.to_vec()\n}\n",
+        );
+        assert!(sup.is_empty(), "{sup:?}");
+        // loop-scoped annotation: setup may allocate, the loop may not
+        let loop_scoped = lint_snippet(
+            "krylov/x.rs",
+            "fn f(n: usize) {\n    let mut v = Vec::new();\n    // rsla-lint: no_alloc\n    while v.len() < n {\n        v.push(0.0);\n    }\n}\n",
+        );
+        assert!(loop_scoped.is_empty(), "{loop_scoped:?}");
+        let loop_fire = lint_snippet(
+            "krylov/x.rs",
+            "fn f(n: usize) {\n    // rsla-lint: no_alloc\n    for _ in 0..n {\n        let v = Vec::new();\n        drop(v);\n    }\n}\n",
+        );
+        assert!(loop_fire.iter().any(|d| d.rule == "L5"), "{loop_fire:?}");
+    }
+
+    #[test]
+    fn reasonless_allow_is_an_error() {
+        let diags = lint_snippet(
+            "engine/x.rs",
+            "fn f(o: Option<u8>) {\n    // rsla-lint: allow(L1)\n    o.unwrap();\n}\n",
+        );
+        assert!(
+            diags.iter().any(|d| d.rule == "ANN" && d.message.contains("reason")),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn the_repo_tree_is_clean() {
+        // The gate CI enforces, runnable as a plain unit test: zero
+        // unannotated violations across rust/src.  CARGO_MANIFEST_DIR
+        // points at rust/, so the scan root is <manifest>/src.
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+        let diags = run(&root).expect("scan rust/src");
+        assert!(
+            diags.is_empty(),
+            "rsla-lint found {} violation(s):\n{}",
+            diags.len(),
+            diags
+                .iter()
+                .map(|d| d.to_string())
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+    }
+}

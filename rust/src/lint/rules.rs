@@ -1,0 +1,800 @@
+//! Rule implementations for `rsla-lint`.  Each pass is lexical (see
+//! [`super::scanner`]); precision comes from narrow token shapes plus
+//! the reasoned `allow` escape hatch, not from type information.
+
+use std::collections::{HashMap, HashSet};
+
+use super::lock_order;
+use super::scanner::{find_all, matching_brace, Annotation, SourceFile};
+use super::Diagnostic;
+
+/// Modules where plain `[idx]` indexing is an L1 violation: the
+/// control-plane layers whose panics take down workers, wedge the
+/// scheduler, or poison shared locks.  Numeric kernels (`direct/`,
+/// `krylov/`, `iterative/`, ...) are exempt — tight index loops are
+/// their idiom, their bounds are loop invariants, and a blanket ban
+/// would bury the signal under hundreds of annotations.
+pub const STRICT_INDEX_MODULES: &[&str] = &[
+    "engine/",
+    "factor_cache/",
+    "metrics/",
+    "coordinator/",
+    "runtime/",
+    "lint/",
+];
+
+const L1_TOKENS: &[&str] = &[
+    ".unwrap()",
+    ".expect(",
+    "panic!",
+    "unreachable!",
+    "todo!",
+    "unimplemented!",
+];
+
+/// Tokens L5 forbids inside `no_alloc` bodies.
+const L5_TOKENS: &[&str] = &[
+    "Vec::new",
+    "vec![",
+    ".to_vec()",
+    ".clone()",
+    ".collect()",
+    "Box::new",
+    "format!",
+];
+
+/// Keywords that may legitimately precede a `[` opening an array
+/// literal (`for x in [..]`, `return [..]`) rather than indexing.
+const PRE_BRACKET_KEYWORDS: &[&str] = &[
+    "in", "return", "break", "if", "else", "match", "loop", "while", "mut", "ref",
+];
+
+fn push(diags: &mut Vec<Diagnostic>, f: &SourceFile, line: usize, rule: &'static str, msg: String) {
+    diags.push(Diagnostic {
+        file: f.rel.clone(),
+        line,
+        rule,
+        message: msg,
+    });
+}
+
+/// Binaries never serve library callers; panicking there is normal CLI
+/// error handling.
+fn is_binary(f: &SourceFile) -> bool {
+    f.rel == "main.rs" || f.rel.starts_with("bin/")
+}
+
+/// Malformed annotations: `allow` without a reason.
+pub fn check_annotations(f: &SourceFile, diags: &mut Vec<Diagnostic>) {
+    let mut lines: Vec<_> = f.annotations.iter().collect();
+    lines.sort_by_key(|(line, _)| **line);
+    for (line, anns) in lines {
+        for a in anns {
+            if let Annotation::AllowNoReason { rule } = a {
+                push(
+                    diags,
+                    f,
+                    *line,
+                    "ANN",
+                    format!(
+                        "allow({rule}) has no reason; write allow({rule}, why this site is safe)"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// Is the byte directly before `pos` an identifier char?  Guards
+/// macro-name matches (`unreachable!` must not match inside
+/// `my_unreachable!`) and keyword matches (`fn ` inside `often `).
+fn ident_before(code: &str, pos: usize) -> bool {
+    pos > 0
+        && code
+            .as_bytes()
+            .get(pos - 1)
+            .map(|&b| b.is_ascii_alphanumeric() || b == b'_')
+            .unwrap_or(false)
+}
+
+/// L1: no panic paths in library code.
+pub fn l1_no_panic(f: &SourceFile, diags: &mut Vec<Diagnostic>) {
+    if is_binary(f) {
+        return;
+    }
+    for token in L1_TOKENS {
+        for pos in find_all(&f.code, token) {
+            if token.ends_with('!') && ident_before(&f.code, pos) {
+                continue;
+            }
+            if f.in_test_region(pos) {
+                continue;
+            }
+            let line = f.line_of(pos);
+            if f.allowed(line, "L1") {
+                continue;
+            }
+            push(
+                diags,
+                f,
+                line,
+                "L1",
+                format!(
+                    "`{token}` on a library path; propagate an Error or annotate allow(L1, reason)"
+                ),
+            );
+        }
+    }
+    if STRICT_INDEX_MODULES.iter().any(|m| f.rel.starts_with(m)) {
+        l1_indexing(f, diags);
+    }
+}
+
+/// `expr[...]` indexing in strict modules.  An opening `[` counts when
+/// the previous non-space token ends in an identifier char, `)` or `]`
+/// — i.e. it indexes a value — and that token is not a keyword that
+/// introduces an array literal (`for x in [...]`).
+fn l1_indexing(f: &SourceFile, diags: &mut Vec<Diagnostic>) {
+    let bytes = f.code.as_bytes();
+    for pos in find_all(&f.code, "[") {
+        let mut end = pos;
+        while end > 0 && bytes.get(end - 1) == Some(&b' ') {
+            end -= 1;
+        }
+        let prev = if end > 0 {
+            *bytes.get(end - 1).unwrap_or(&b' ')
+        } else {
+            b' '
+        };
+        if !(prev.is_ascii_alphanumeric() || prev == b'_' || prev == b')' || prev == b']') {
+            continue;
+        }
+        let mut start = end;
+        while start > 0
+            && bytes
+                .get(start - 1)
+                .map(|&b| b.is_ascii_alphanumeric() || b == b'_')
+                .unwrap_or(false)
+        {
+            start -= 1;
+        }
+        let word = f.code.get(start..end).unwrap_or("");
+        if PRE_BRACKET_KEYWORDS.contains(&word) {
+            continue;
+        }
+        if f.in_test_region(pos) {
+            continue;
+        }
+        let line = f.line_of(pos);
+        if f.allowed(line, "L1") {
+            continue;
+        }
+        push(
+            diags,
+            f,
+            line,
+            "L1",
+            "`[..]` indexing in a strict module; use .get()/iterators or annotate allow(L1, reason)"
+                .to_string(),
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// L2 lock ordering
+// ---------------------------------------------------------------------
+
+struct LockSite {
+    /// Byte offset of the acquisition token (absolute, into `f.code`).
+    pos: usize,
+    tier: u8,
+    desc: &'static str,
+    /// Receiver field the lock was classified by.
+    field: String,
+}
+
+/// Find tracked lock acquisitions in a function body: `X.lock()`,
+/// `X.read()`, `X.write()`, and `lock_recover(&X)` where `X` ends in a
+/// field named in [`lock_order::TIERS`].
+fn lock_sites(body: &str, base: usize) -> Vec<LockSite> {
+    let mut sites = Vec::new();
+    for token in [".lock()", ".read()", ".write()"] {
+        for pos in find_all(body, token) {
+            let field = last_ident_ending_at(body, pos);
+            if let Some((tier, desc)) = lock_order::tier_of(&field) {
+                sites.push(LockSite {
+                    pos: base + pos,
+                    tier,
+                    desc,
+                    field,
+                });
+            }
+        }
+    }
+    for pos in find_all(body, "lock_recover(") {
+        if ident_before(body, pos) {
+            continue;
+        }
+        let open = pos + "lock_recover(".len();
+        let arg: String = body
+            .get(open..)
+            .unwrap_or("")
+            .chars()
+            .take_while(|&c| c != ')')
+            .collect();
+        let field = trailing_ident(&arg);
+        if let Some((tier, desc)) = lock_order::tier_of(&field) {
+            sites.push(LockSite {
+                pos: base + pos,
+                tier,
+                desc,
+                field,
+            });
+        }
+    }
+    sites.sort_by_key(|s| s.pos);
+    sites
+}
+
+/// The identifier whose last byte is at `pos - 1` (empty if the byte
+/// before `pos` is not an identifier char).
+fn last_ident_ending_at(text: &str, pos: usize) -> String {
+    let bytes = text.as_bytes();
+    let mut start = pos;
+    while start > 0
+        && bytes
+            .get(start - 1)
+            .map(|&b| b.is_ascii_alphanumeric() || b == b'_')
+            .unwrap_or(false)
+    {
+        start -= 1;
+    }
+    text.get(start..pos).unwrap_or("").to_string()
+}
+
+/// Trailing identifier of an expression like `&self.inner`.
+fn trailing_ident(expr: &str) -> String {
+    let rev: String = expr
+        .trim_end()
+        .chars()
+        .rev()
+        .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+        .collect();
+    rev.chars().rev().collect()
+}
+
+struct LiveGuard {
+    /// Binding name, if the guard was kept in a `let`.
+    name: Option<String>,
+    tier: u8,
+    field: String,
+    /// Brace depth the guard was bound at; it dies when the walk
+    /// returns to a shallower depth.
+    depth: usize,
+}
+
+/// L2: out-of-order acquisition, and callbacks run under tracked
+/// guards.  Walks each `fn` body line by line, tracking named guards
+/// (`let g = ...lock...;`) until `drop(g)` or their block closes;
+/// guards consumed within one statement are live only on their line.
+pub fn l2_lock_order(f: &SourceFile, diags: &mut Vec<Diagnostic>) {
+    for fn_pos in find_all(&f.code, "fn ") {
+        if ident_before(&f.code, fn_pos) {
+            continue;
+        }
+        let open = match f.code.get(fn_pos..).and_then(|s| {
+            // a `;` before the `{` means a bodyless trait method
+            match (s.find(';'), s.find('{')) {
+                (Some(a), Some(b)) if a < b => None,
+                (_, Some(b)) => Some(fn_pos + b),
+                _ => None,
+            }
+        }) {
+            Some(o) => o,
+            None => continue,
+        };
+        let close = match matching_brace(&f.code, open) {
+            Some(c) => c,
+            None => continue,
+        };
+        if let Some(body) = f.code.get(open..=close) {
+            l2_check_body(f, body, open, diags);
+        }
+    }
+}
+
+fn l2_check_body(f: &SourceFile, body: &str, base: usize, diags: &mut Vec<Diagnostic>) {
+    let sites = lock_sites(body, base);
+    let has_callback = lock_order::CALLBACK_SITES.iter().any(|c| body.contains(c));
+    if sites.is_empty() && !has_callback {
+        return;
+    }
+    let mut live: Vec<LiveGuard> = Vec::new();
+    let mut depth = 0usize;
+    let mut offset = 0usize;
+    for raw_line in body.split_inclusive('\n') {
+        let line_start = base + offset;
+        let line_end = line_start + raw_line.len();
+        let line_no = f.line_of(line_start);
+        let trimmed = raw_line.trim();
+
+        // leading `}`s close blocks before anything else on the line
+        let leading_closes = trimmed.bytes().take_while(|&b| b == b'}').count();
+        let depth_at_entry = depth.saturating_sub(leading_closes);
+        live.retain(|g| g.depth <= depth_at_entry);
+
+        // explicit drop(name)
+        live.retain(|g| match &g.name {
+            Some(name) => !trimmed.contains(&format!("drop({name})")),
+            None => true,
+        });
+
+        // callback sites under any live tracked guard
+        for cb in lock_order::CALLBACK_SITES {
+            for cb_rel in find_all(raw_line, cb) {
+                let abs = line_start + cb_rel;
+                let is_def = raw_line
+                    .get(..cb_rel)
+                    .map(|pre| pre.trim_end().ends_with("fn"))
+                    .unwrap_or(false);
+                if is_def || ident_before(raw_line, cb_rel) || f.in_test_region(abs) {
+                    continue;
+                }
+                if let Some(g) = live.first() {
+                    if !f.allowed(line_no, "L2") {
+                        push(
+                            diags,
+                            f,
+                            line_no,
+                            "L2",
+                            format!(
+                                "callback site `{}` reached while holding `{}` ({}); \
+                                 drop the guard before running caller-supplied code",
+                                cb.trim_end_matches('('),
+                                g.field,
+                                g.desc
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+
+        // acquisitions on this line, in order
+        for site in sites
+            .iter()
+            .filter(|s| s.pos >= line_start && s.pos < line_end)
+        {
+            if f.in_test_region(site.pos) {
+                continue;
+            }
+            if let Some(held) = live.iter().find(|g| g.tier > site.tier) {
+                if !f.allowed(line_no, "L2") {
+                    push(
+                        diags,
+                        f,
+                        line_no,
+                        "L2",
+                        format!(
+                            "acquiring `{}` (tier {}, {}) while holding `{}` (tier {}, {}); \
+                             lock order is top-down — see lint/lock_order.rs",
+                            site.field, site.tier, site.desc, held.field, held.tier, held.desc
+                        ),
+                    );
+                }
+            }
+            live.push(LiveGuard {
+                name: binds_guard(trimmed),
+                tier: site.tier,
+                field: site.field.clone(),
+                depth,
+            });
+        }
+
+        // guards not kept in a `let` die with their statement/line
+        live.retain(|g| g.name.is_some());
+
+        for b in raw_line.bytes() {
+            match b {
+                b'{' => depth += 1,
+                b'}' => depth = depth.saturating_sub(1),
+                _ => {}
+            }
+        }
+        offset += raw_line.len();
+    }
+}
+
+/// Does this statement keep the guard?  `let g = x.lock().unwrap();`
+/// binds it; `let v = x.lock().unwrap().take();` consumes it within
+/// the statement (guard is a temporary).
+fn binds_guard(line: &str) -> Option<String> {
+    let rest = line.strip_prefix("let ")?;
+    let rest = rest.strip_prefix("mut ").unwrap_or(rest);
+    let name: String = rest
+        .chars()
+        .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+        .collect();
+    if name.is_empty() {
+        return None;
+    }
+    // end of the acquisition expression
+    let end = if let Some(p) = line.find("lock_recover(") {
+        let inner = line.get(p..)?;
+        p + inner.find(')')? + 1
+    } else {
+        [".lock()", ".read()", ".write()"]
+            .iter()
+            .filter_map(|t| line.rfind(t).map(|q| q + t.len()))
+            .max()?
+    };
+    let mut tail = line.get(end..).unwrap_or("");
+    for suffix in [
+        ".unwrap()",
+        ".expect(",
+        ".unwrap_or_else(|poisoned| poisoned.into_inner())",
+    ] {
+        if let Some(t) = tail.strip_prefix(suffix) {
+            // for `.expect("...")`, also skip past the closing paren
+            tail = if suffix.ends_with('(') {
+                let close = t.find(')').map(|c| c + 1).unwrap_or(t.len());
+                t.get(close..).unwrap_or("")
+            } else {
+                t
+            };
+        }
+    }
+    if tail.trim_end() == ";" {
+        Some(name)
+    } else {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------
+// L3 determinism
+// ---------------------------------------------------------------------
+
+/// L3: float accumulation inside `HashMap`/`HashSet` iteration, and
+/// unordered parallel reductions.
+pub fn l3_determinism(f: &SourceFile, diags: &mut Vec<Diagnostic>) {
+    for pos in find_all(&f.code, "par_iter(") {
+        if ident_before(&f.code, pos) || f.in_test_region(pos) {
+            continue;
+        }
+        let line = f.line_of(pos);
+        if !f.allowed(line, "L3") {
+            push(
+                diags,
+                f,
+                line,
+                "L3",
+                "unordered parallel iteration; reductions over it break bitwise determinism"
+                    .to_string(),
+            );
+        }
+    }
+
+    // names bound to HashMap/HashSet in this file (locals and params)
+    let mut tracked: HashSet<String> = HashSet::new();
+    for ty in [
+        "HashMap<",
+        "HashSet<",
+        "HashMap::new",
+        "HashSet::new",
+        "HashMap::with_capacity",
+        "HashSet::with_capacity",
+    ] {
+        for pos in find_all(&f.code, ty) {
+            if let Some(name) = binding_name_before(&f.code, pos) {
+                tracked.insert(name);
+            }
+        }
+    }
+    if tracked.is_empty() {
+        return;
+    }
+
+    // `for PAT in <tracked> { body }` loops with `+=` accumulation
+    for for_pos in find_all(&f.code, "for ") {
+        if ident_before(&f.code, for_pos) || f.in_test_region(for_pos) {
+            continue;
+        }
+        let header_end = match f.code.get(for_pos..).and_then(|s| s.find('{')) {
+            Some(rel) => for_pos + rel,
+            None => continue,
+        };
+        let header = f.code.get(for_pos..header_end).unwrap_or("");
+        let iterated = match header.split(" in ").nth(1) {
+            Some(expr) => expr.trim_start().trim_start_matches('&'),
+            None => continue,
+        };
+        let head_ident: String = iterated
+            .trim_start_matches("mut ")
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+            .collect();
+        if !tracked.contains(&head_ident) {
+            continue;
+        }
+        let close = match matching_brace(&f.code, header_end) {
+            Some(c) => c,
+            None => continue,
+        };
+        let body = f.code.get(header_end..=close).unwrap_or("");
+        for acc_pos in find_all(body, "+=") {
+            let line = f.line_of(header_end + acc_pos);
+            let stmt = f.code_line(line);
+            // integer-literal increments (`+= 1;`) are order-independent
+            let rhs = stmt.split("+=").nth(1).unwrap_or("").trim();
+            let bare = rhs.trim_end_matches(';').trim_end();
+            if !bare.is_empty() && bare.chars().all(|c| c.is_ascii_digit()) {
+                continue;
+            }
+            if !f.allowed(line, "L3") {
+                push(
+                    diags,
+                    f,
+                    line,
+                    "L3",
+                    format!(
+                        "accumulation over unordered iteration of `{head_ident}` \
+                         (HashMap/HashSet order is nondeterministic); sort keys first"
+                    ),
+                );
+            }
+        }
+    }
+
+    // reduction chains rooted at a tracked collection
+    for name in &tracked {
+        for method in [".values()", ".iter()", ".keys()"] {
+            let chain = format!("{name}{method}");
+            for pos in find_all(&f.code, &chain) {
+                if ident_before(&f.code, pos) || f.in_test_region(pos) {
+                    continue;
+                }
+                let line = f.line_of(pos);
+                let stmt = f.code_line(line);
+                if (stmt.contains(".sum(") || stmt.contains(".fold(")) && !f.allowed(line, "L3") {
+                    push(
+                        diags,
+                        f,
+                        line,
+                        "L3",
+                        format!(
+                            "reduction chained on unordered `{name}{method}`; \
+                             collect-and-sort before reducing"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// For a `HashMap<`/`HashSet<` type token at `pos`, recover the bound
+/// name from the same line: `let NAME[: ..] =` or a `NAME: &Type`
+/// parameter/field.
+fn binding_name_before(code: &str, pos: usize) -> Option<String> {
+    let line_start = code.get(..pos)?.rfind('\n').map(|p| p + 1).unwrap_or(0);
+    let prefix = code.get(line_start..pos)?;
+    if let Some(let_pos) = prefix.rfind("let ") {
+        let after = prefix.get(let_pos + 4..)?;
+        let after = after.strip_prefix("mut ").unwrap_or(after);
+        let name: String = after
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+            .collect();
+        if !name.is_empty() {
+            return Some(name);
+        }
+    }
+    let colon = prefix.rfind(':')?;
+    let name = trailing_ident(prefix.get(..colon)?);
+    if name.is_empty() {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+// ---------------------------------------------------------------------
+// L4 metrics hygiene
+// ---------------------------------------------------------------------
+
+/// Collect metric names declared in `metrics/names.rs`, flagging
+/// duplicate declarations.
+pub fn l4_collect_registered(
+    files: &[SourceFile],
+    diags: &mut Vec<Diagnostic>,
+) -> HashSet<String> {
+    let mut registered: HashMap<String, usize> = HashMap::new();
+    for f in files.iter().filter(|f| f.rel == "metrics/names.rs") {
+        for pos in find_all(&f.code, ": &str =") {
+            if f.in_test_region(pos) {
+                continue;
+            }
+            let Some(lit) = literal_after(f, pos) else {
+                continue;
+            };
+            let line = f.line_of(pos);
+            if let Some(first) = registered.get(&lit) {
+                push(
+                    diags,
+                    f,
+                    line,
+                    "L4",
+                    format!("metric name \"{lit}\" declared twice (first at line {first})"),
+                );
+            } else {
+                registered.insert(lit, line);
+            }
+        }
+    }
+    registered.into_keys().collect()
+}
+
+/// The first `"..."` literal at or after `pos`, with content read from
+/// the RAW text (the stripped view blanks literal contents but keeps
+/// the quotes in place).
+fn literal_after(f: &SourceFile, pos: usize) -> Option<String> {
+    let open = pos + f.code.get(pos..)?.find('"')?;
+    let close = open + 1 + f.code.get(open + 1..)?.find('"')?;
+    f.raw.get(open + 1..close).map(|s| s.to_string())
+}
+
+/// Does `name` look like a metric name (`namespace.counter[.sub]`)?
+/// Filters unrelated `.get("key")` lookups (CLI args, config maps).
+fn metric_shaped(name: &str) -> bool {
+    name.contains('.')
+        && name
+            .chars()
+            .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '.' || c == '_')
+}
+
+/// L4: string literals passed to `Registry::incr`/`get`/`incr_labeled`
+/// must be declared in `metrics/names.rs`; `format!`-built names must
+/// go through `incr_labeled` with a declared base.
+pub fn l4_metric_names(f: &SourceFile, registered: &HashSet<String>, diags: &mut Vec<Diagnostic>) {
+    if f.rel == "metrics/names.rs" {
+        return;
+    }
+    for method in [".incr(", ".get(", ".incr_labeled("] {
+        for pos in find_all(&f.code, method) {
+            if f.in_test_region(pos) {
+                continue;
+            }
+            let line = f.line_of(pos);
+            let arg_start = pos + method.len();
+            let arg = f.code.get(arg_start..).unwrap_or("").trim_start();
+            if arg.starts_with("&format!") || arg.starts_with("format!") {
+                if !f.allowed(line, "L4") {
+                    push(
+                        diags,
+                        f,
+                        line,
+                        "L4",
+                        "metric name built with format!; use incr_labeled with a declared base"
+                            .to_string(),
+                    );
+                }
+                continue;
+            }
+            if !arg.starts_with('"') {
+                continue; // a names:: const or variable, declared by construction
+            }
+            let Some(lit) = literal_after(f, arg_start) else {
+                continue;
+            };
+            // `.get("...")` is ubiquitous (HashMap, CLI args): only
+            // metric-shaped literals are checked there.  `.incr(` and
+            // `.incr_labeled(` are Registry-specific: always checked.
+            if !metric_shaped(&lit) {
+                if method != ".get(" && !f.allowed(line, "L4") {
+                    push(
+                        diags,
+                        f,
+                        line,
+                        "L4",
+                        format!("metric name \"{lit}\" is not namespace.counter shaped"),
+                    );
+                }
+                continue;
+            }
+            if !registered.contains(&lit) && !f.allowed(line, "L4") {
+                push(
+                    diags,
+                    f,
+                    line,
+                    "L4",
+                    format!("metric name \"{lit}\" is not declared in metrics/names.rs"),
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// L5 no-alloc-on-warm-path
+// ---------------------------------------------------------------------
+
+/// L5: bodies annotated `// rsla-lint: no_alloc` must not allocate.
+/// The annotation binds to the next `fn`/`for`/`while`/`loop` at or
+/// after its line; the brace-matched body is the checked region.
+pub fn l5_no_alloc(f: &SourceFile, diags: &mut Vec<Diagnostic>) {
+    let mut ann_lines: Vec<usize> = f
+        .annotations
+        .iter()
+        .filter(|(_, anns)| anns.iter().any(|a| *a == Annotation::NoAlloc))
+        .map(|(line, _)| *line)
+        .collect();
+    ann_lines.sort_unstable();
+    for ann_line in ann_lines {
+        let Some((start, end)) = no_alloc_region(f, ann_line) else {
+            push(
+                diags,
+                f,
+                ann_line,
+                "ANN",
+                "no_alloc annotation is not followed by a fn or loop body".to_string(),
+            );
+            continue;
+        };
+        let body = f.code.get(start..=end).unwrap_or("");
+        for token in L5_TOKENS {
+            for pos in find_all(body, token) {
+                let abs = start + pos;
+                if f.in_test_region(abs) {
+                    continue;
+                }
+                let line = f.line_of(abs);
+                if f.allowed(line, "L5") {
+                    continue;
+                }
+                push(
+                    diags,
+                    f,
+                    line,
+                    "L5",
+                    format!("`{token}` inside a no_alloc body (annotated at line {ann_line})"),
+                );
+            }
+        }
+    }
+}
+
+/// The brace-matched body following a `no_alloc` annotation: search a
+/// few lines down for the next `fn`/`for`/`while`/`loop` keyword, then
+/// take its first `{...}` block.
+fn no_alloc_region(f: &SourceFile, ann_line: usize) -> Option<(usize, usize)> {
+    let mut kw_line = None;
+    'probe: for probe in ann_line..ann_line + 6 {
+        let text = f.code_line(probe);
+        for kw in ["fn ", "for ", "while ", "loop"] {
+            if let Some(col) = text.find(kw) {
+                let standalone = col == 0
+                    || text
+                        .get(..col)
+                        .and_then(|p| p.chars().last())
+                        .map(|c| !(c.is_ascii_alphanumeric() || c == '_'))
+                        .unwrap_or(true);
+                if standalone {
+                    kw_line = Some(probe);
+                    break 'probe;
+                }
+            }
+        }
+    }
+    let kw_line = kw_line?;
+    let mut offset = 0usize;
+    for (i, l) in f.code.split_inclusive('\n').enumerate() {
+        if i + 1 == kw_line {
+            break;
+        }
+        offset += l.len();
+    }
+    let open = offset + f.code.get(offset..)?.find('{')?;
+    let close = matching_brace(&f.code, open)?;
+    Some((open, close))
+}

@@ -1,0 +1,477 @@
+//! The hand-rolled source scanner behind `rsla-lint`.
+//!
+//! `rsla-lint` deliberately carries no parser dependency (`syn` would
+//! drag in proc-macro2 and break the offline build), so rules operate
+//! on a *stripped* view of each file produced here:
+//!
+//! * comments (line, nested block) and the contents of string / raw
+//!   string / char literals are blanked to spaces, **byte-for-byte** —
+//!   every remaining token sits at its original offset, so positions
+//!   in the stripped text index directly into the raw text;
+//! * `// rsla-lint: ...` annotations are collected per line while
+//!   comments are stripped;
+//! * `#[cfg(test)]` (and `#[cfg(all(test, ...))]` etc.) item regions
+//!   are brace-matched so rules can exempt test code.
+//!
+//! The trade-off is lexical, not semantic, precision: rules match
+//! token shapes, and the escape hatch for the false positive they
+//! cannot see through is an explicit, reasoned
+//! `// rsla-lint: allow(RULE, reason)`.
+
+use std::collections::HashMap;
+
+/// A parsed `// rsla-lint:` annotation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Annotation {
+    /// `allow(RULE, reason)` — suppress RULE on this or the next line.
+    Allow { rule: String, reason: String },
+    /// `allow(RULE)` with no reason — collected so the driver can
+    /// reject it (reasons are mandatory).
+    AllowNoReason { rule: String },
+    /// `no_alloc` — the next `fn`/loop body must not allocate (L5).
+    NoAlloc,
+}
+
+/// One scanned source file.
+pub struct SourceFile {
+    /// Path relative to the scan root, with `/` separators.
+    pub rel: String,
+    /// Raw source text.
+    pub raw: String,
+    /// Stripped text: identical length/line structure to `raw`, with
+    /// comments and literal contents blanked.
+    pub code: String,
+    /// `rsla-lint:` annotations by (1-based) line number of the comment.
+    pub annotations: HashMap<usize, Vec<Annotation>>,
+    /// Byte offset of the start of each (1-based) line in `code`.
+    line_starts: Vec<usize>,
+    /// Byte ranges of `#[cfg(test)]` item bodies in `code`.
+    pub test_regions: Vec<(usize, usize)>,
+}
+
+impl SourceFile {
+    pub fn scan(rel: &str, raw: String) -> SourceFile {
+        let (code, annotations) = strip(&raw);
+        let line_starts = line_starts_of(&code);
+        let test_regions = test_regions_of(&code);
+        SourceFile {
+            rel: rel.to_string(),
+            raw,
+            code,
+            annotations,
+            line_starts,
+            test_regions,
+        }
+    }
+
+    /// 1-based line number of byte offset `pos`.
+    pub fn line_of(&self, pos: usize) -> usize {
+        match self.line_starts.binary_search(&pos) {
+            Ok(i) => i + 1,
+            Err(i) => i,
+        }
+    }
+
+    /// Is `pos` inside a `#[cfg(test)]` region?
+    pub fn in_test_region(&self, pos: usize) -> bool {
+        self.test_regions.iter().any(|&(a, b)| a <= pos && pos <= b)
+    }
+
+    /// Does line `line` (or the line above it) carry `allow(rule, ...)`
+    /// with a non-empty reason?
+    pub fn allowed(&self, line: usize, rule: &str) -> bool {
+        for l in [line, line.saturating_sub(1)] {
+            if let Some(anns) = self.annotations.get(&l) {
+                for a in anns {
+                    if let Annotation::Allow { rule: r, .. } = a {
+                        if r == rule {
+                            return true;
+                        }
+                    }
+                }
+            }
+        }
+        false
+    }
+
+    /// The stripped text of 1-based line `line` (empty if out of range).
+    pub fn code_line(&self, line: usize) -> &str {
+        let start = match self.line_starts.get(line.saturating_sub(1)) {
+            Some(&s) => s,
+            None => return "",
+        };
+        let end = self
+            .line_starts
+            .get(line)
+            .map(|&e| e.saturating_sub(1))
+            .unwrap_or(self.code.len());
+        self.code.get(start..end).unwrap_or("")
+    }
+}
+
+fn line_starts_of(code: &str) -> Vec<usize> {
+    let mut starts = vec![0usize];
+    for (i, b) in code.bytes().enumerate() {
+        if b == b'\n' {
+            starts.push(i + 1);
+        }
+    }
+    starts
+}
+
+fn parse_annotation(text: &str) -> Option<Annotation> {
+    let body = text.strip_prefix("rsla-lint:")?.trim();
+    if body == "no_alloc" {
+        return Some(Annotation::NoAlloc);
+    }
+    let inner = body.strip_prefix("allow(")?.strip_suffix(')')?;
+    match inner.split_once(',') {
+        Some((rule, reason)) if !reason.trim().is_empty() => Some(Annotation::Allow {
+            rule: rule.trim().to_string(),
+            reason: reason.trim().to_string(),
+        }),
+        _ => Some(Annotation::AllowNoReason {
+            rule: inner.trim().to_string(),
+        }),
+    }
+}
+
+/// Blank comments and literal contents, collecting annotations.
+/// The output has exactly the same byte length and newline positions
+/// as the input.
+fn strip(src: &str) -> (String, HashMap<usize, Vec<Annotation>>) {
+    #[derive(PartialEq)]
+    enum Mode {
+        Code,
+        LineComment,
+        BlockComment,
+        Str,
+        RawStr,
+        Char,
+    }
+    let bytes = src.as_bytes();
+    let n = bytes.len();
+    let mut out: Vec<u8> = Vec::with_capacity(n);
+    let mut annotations: HashMap<usize, Vec<Annotation>> = HashMap::new();
+    let mut mode = Mode::Code;
+    let mut line = 1usize;
+    let mut comment_buf = String::new();
+    let mut comment_line = 1usize;
+    let mut block_depth = 0usize;
+    let mut raw_hashes = 0usize;
+    let mut i = 0usize;
+    // push `c` preserving newlines; everything else becomes a space
+    fn blank(out: &mut Vec<u8>, c: u8, line: &mut usize) {
+        if c == b'\n' {
+            out.push(b'\n');
+            *line += 1;
+        } else {
+            out.push(b' ');
+        }
+    }
+    while i < n {
+        // rsla-lint: allow(L1, i < n is the loop guard and i+1 is checked)
+        let c = bytes[i];
+        let next = if i + 1 < n { bytes[i + 1] } else { 0 }; // rsla-lint: allow(L1, i + 1 < n is checked inline)
+        match mode {
+            Mode::Code => {
+                if c == b'/' && next == b'/' {
+                    mode = Mode::LineComment;
+                    comment_buf.clear();
+                    comment_line = line;
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                } else if c == b'/' && next == b'*' {
+                    mode = Mode::BlockComment;
+                    block_depth = 1;
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                } else if c == b'"' {
+                    mode = Mode::Str;
+                    out.push(b'"');
+                    i += 1;
+                } else if c == b'b' && next == b'"' && !prev_is_ident(&out) {
+                    // byte string b"...": same escape rules as a string
+                    mode = Mode::Str;
+                    out.extend_from_slice(b" \"");
+                    i += 2;
+                } else if (c == b'r' || c == b'b')
+                    && (next == b'"' || next == b'#' || next == b'r')
+                    && !prev_is_ident(&out)
+                {
+                    // raw string r"..." / r#"..."# / br#"..."#
+                    let mut j = i + 1;
+                    if c == b'b' && bytes.get(j) == Some(&b'r') {
+                        j += 1;
+                    }
+                    let mut hashes = 0usize;
+                    while bytes.get(j) == Some(&b'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if bytes.get(j) == Some(&b'"') {
+                        mode = Mode::RawStr;
+                        raw_hashes = hashes;
+                        // blank the prefix, keep the opening quote
+                        for _ in i..j {
+                            out.push(b' ');
+                        }
+                        out.push(b'"');
+                        i = j + 1;
+                    } else {
+                        out.push(c);
+                        i += 1;
+                    }
+                } else if c == b'\'' {
+                    // char literal vs lifetime: a lifetime is ' followed
+                    // by an identifier NOT closed by another '
+                    if next == b'\\' {
+                        mode = Mode::Char;
+                        out.push(b'\'');
+                        i += 1;
+                    // rsla-lint: allow(L1, i + 2 < n is checked first)
+                    } else if i + 2 < n && bytes[i + 2] == b'\'' {
+                        out.extend_from_slice(b"' '");
+                        i += 3;
+                    } else {
+                        out.push(c); // lifetime marker
+                        i += 1;
+                    }
+                } else {
+                    if c == b'\n' {
+                        line += 1;
+                    }
+                    out.push(c);
+                    i += 1;
+                }
+            }
+            Mode::LineComment => {
+                if c == b'\n' {
+                    let text = comment_buf.trim().trim_start_matches(['/', '!']).trim();
+                    if text.starts_with("rsla-lint:") {
+                        if let Some(a) = parse_annotation(text) {
+                            annotations.entry(comment_line).or_default().push(a);
+                        }
+                    }
+                    mode = Mode::Code;
+                    out.push(b'\n');
+                    line += 1;
+                    i += 1;
+                } else {
+                    comment_buf.push(c as char);
+                    out.push(b' ');
+                    i += 1;
+                }
+            }
+            Mode::BlockComment => {
+                if c == b'/' && next == b'*' {
+                    block_depth += 1;
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                } else if c == b'*' && next == b'/' {
+                    block_depth -= 1;
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                    if block_depth == 0 {
+                        mode = Mode::Code;
+                    }
+                } else {
+                    blank(&mut out, c, &mut line);
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == b'\\' && i + 1 < n {
+                    blank(&mut out, c, &mut line);
+                    blank(&mut out, next, &mut line);
+                    i += 2;
+                } else if c == b'"' {
+                    out.push(b'"');
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    blank(&mut out, c, &mut line);
+                    i += 1;
+                }
+            }
+            Mode::RawStr => {
+                let closes =
+                    c == b'"' && (1..=raw_hashes).all(|k| bytes.get(i + k) == Some(&b'#'));
+                if closes {
+                    out.push(b'"');
+                    for _ in 0..raw_hashes {
+                        out.push(b' ');
+                    }
+                    i += 1 + raw_hashes;
+                    mode = Mode::Code;
+                } else {
+                    blank(&mut out, c, &mut line);
+                    i += 1;
+                }
+            }
+            Mode::Char => {
+                if c == b'\\' && i + 1 < n {
+                    blank(&mut out, c, &mut line);
+                    blank(&mut out, next, &mut line);
+                    i += 2;
+                } else if c == b'\'' {
+                    out.push(b'\'');
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    blank(&mut out, c, &mut line);
+                    i += 1;
+                }
+            }
+        }
+    }
+    // a trailing line comment without newline still carries annotations
+    if mode == Mode::LineComment {
+        let text = comment_buf.trim().trim_start_matches(['/', '!']).trim();
+        if text.starts_with("rsla-lint:") {
+            if let Some(a) = parse_annotation(text) {
+                annotations.entry(comment_line).or_default().push(a);
+            }
+        }
+    }
+    debug_assert_eq!(out.len(), n, "strip must preserve byte offsets");
+    (String::from_utf8_lossy(&out).into_owned(), annotations)
+}
+
+/// Would appending `r`/`b` continue an identifier? (avoid treating the
+/// `r` of e.g. `attr"` or `for"` as a raw-string sigil)
+fn prev_is_ident(out: &[u8]) -> bool {
+    out.last()
+        .map(|&b| b.is_ascii_alphanumeric() || b == b'_')
+        .unwrap_or(false)
+}
+
+/// Find every occurrence of `pat` in `hay` starting at or after `from`.
+pub fn find_all(hay: &str, pat: &str) -> Vec<usize> {
+    let mut found = Vec::new();
+    let mut at = 0usize;
+    // rsla-lint: allow(L1, at advances by match offsets and stays <= hay.len())
+    while let Some(p) = hay[at..].find(pat) {
+        found.push(at + p);
+        at += p + pat.len().max(1);
+    }
+    found
+}
+
+/// Byte offset of the `{` matching brace-depth entry at `open`, i.e.
+/// the position of the closing `}` for the `{` at `open`.
+pub fn matching_brace(code: &str, open: usize) -> Option<usize> {
+    let bytes = code.as_bytes();
+    if bytes.get(open) != Some(&b'{') {
+        return None;
+    }
+    let mut depth = 0isize;
+    for (k, &b) in bytes.iter().enumerate().skip(open) {
+        if b == b'{' {
+            depth += 1;
+        } else if b == b'}' {
+            depth -= 1;
+            if depth == 0 {
+                return Some(k);
+            }
+        }
+    }
+    None
+}
+
+/// Brace-matched body ranges of items annotated `#[cfg(test)]` /
+/// `#[cfg(all(test, ...))]` / `#[cfg(any(test, ...))]`.
+fn test_regions_of(code: &str) -> Vec<(usize, usize)> {
+    let mut regions = Vec::new();
+    for pat in ["#[cfg(test)]", "#[cfg(all(test", "#[cfg(any(test"] {
+        for start in find_all(code, pat) {
+            // rsla-lint: allow(L1, start comes from find_all over the same text)
+            if let Some(open_rel) = code[start..].find('{') {
+                let open = start + open_rel;
+                if let Some(close) = matching_brace(code, open) {
+                    regions.push((open, close));
+                }
+            }
+        }
+    }
+    regions.sort_unstable();
+    regions
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strip_preserves_offsets_and_blanks_literals() {
+        let src = "let s = \"un wrap() inside\"; // tail\nlet t = 1;\n";
+        let (code, _) = strip(src);
+        assert_eq!(code.len(), src.len());
+        assert!(!code.contains("wrap"));
+        assert!(!code.contains("tail"));
+        assert!(code.contains("let t = 1;"));
+        // newline structure intact
+        assert_eq!(
+            code.match_indices('\n').count(),
+            src.match_indices('\n').count()
+        );
+    }
+
+    #[test]
+    fn raw_strings_and_chars_are_blanked() {
+        let src = r####"let r = r#"panic!("no")"#; let c = '"'; let l: &'static str = "x";"####;
+        let (code, _) = strip(src);
+        assert_eq!(code.len(), src.len());
+        assert!(!code.contains("panic!"));
+        assert!(code.contains("let c ="));
+        assert!(code.contains("'static"));
+    }
+
+    #[test]
+    fn escaped_newline_in_string_keeps_line_numbers() {
+        let src = "let a = \"x\\\ny\";\nlet b = 2;\n";
+        let f = SourceFile::scan("t.rs", src.to_string());
+        // the escaped newline is blanked, so line 3 still starts at the
+        // same raw offset as in the source
+        let pos = f.code.find("let b").expect("let b survives stripping");
+        assert_eq!(f.line_of(pos), 3);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "/* a /* nested */ still comment */ let x = 1;";
+        let (code, _) = strip(src);
+        assert!(code.contains("let x = 1;"));
+        assert!(!code.contains("nested"));
+    }
+
+    #[test]
+    fn annotations_parse_with_and_without_reason() {
+        let src = "// rsla-lint: allow(L1, checked above)\nx();\n// rsla-lint: allow(L2)\ny();\n// rsla-lint: no_alloc\nfn f() {}\n";
+        let f = SourceFile::scan("t.rs", src.to_string());
+        assert_eq!(
+            f.annotations.get(&1),
+            Some(&vec![Annotation::Allow {
+                rule: "L1".into(),
+                reason: "checked above".into()
+            }])
+        );
+        assert_eq!(
+            f.annotations.get(&3),
+            Some(&vec![Annotation::AllowNoReason { rule: "L2".into() }])
+        );
+        assert_eq!(f.annotations.get(&5), Some(&vec![Annotation::NoAlloc]));
+        assert!(f.allowed(2, "L1"), "allow applies to the next line");
+        assert!(!f.allowed(4, "L2"), "reasonless allow must not suppress");
+    }
+
+    #[test]
+    fn test_regions_cover_cfg_test_mods() {
+        let src = "fn lib() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\n";
+        let f = SourceFile::scan("t.rs", src.to_string());
+        let pos = f.code.find(".unwrap").expect("unwrap token present");
+        assert!(f.in_test_region(pos));
+        let lib = f.code.find("fn lib").expect("fn lib present");
+        assert!(!f.in_test_region(lib));
+    }
+}

@@ -40,6 +40,7 @@ impl LatencyHist {
 
     pub fn record(&self, seconds: f64) {
         let idx = Self::bucket_of(seconds);
+        // rsla-lint: allow(L1, bucket_of clamps its result to BUCKETS-1)
         self.buckets[idx].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
     }

@@ -10,6 +10,7 @@
 
 pub mod hist;
 pub mod mem;
+pub mod names;
 pub mod stopwatch;
 
 pub use hist::LatencyHist;
@@ -19,8 +20,16 @@ pub use stopwatch::Stopwatch;
 use std::collections::HashMap;
 use std::sync::Mutex;
 
+use crate::util::lock_recover;
+
 /// Process-wide named counters/gauges used by the coordinator
 /// (requests routed per backend, batches formed, halo bytes moved...).
+///
+/// Counter names are declared once in [`names`]; lint rule L4 checks
+/// that every literal passed to [`incr`](Registry::incr)/[`get`](Registry::get)
+/// in library code is a declared name.  Locking goes through
+/// [`lock_recover`], so a worker that panics mid-increment cannot wedge
+/// metrics reporting for every other thread in the process.
 #[derive(Default)]
 pub struct Registry {
     counters: Mutex<HashMap<String, u64>>,
@@ -32,17 +41,30 @@ impl Registry {
     }
 
     pub fn incr(&self, name: &str, by: u64) {
-        let mut m = self.counters.lock().unwrap();
+        let mut m = lock_recover(&self.counters);
         *m.entry(name.to_string()).or_insert(0) += by;
     }
 
+    /// Increment `base.label` — the dynamic-suffix form for per-kind /
+    /// per-backend counters.  `base` must be a declared name in
+    /// [`names`]; the label (a job kind, a backend name) is appended at
+    /// runtime.
+    pub fn incr_labeled(&self, base: &str, label: &str, by: u64) {
+        let mut m = lock_recover(&self.counters);
+        let mut name = String::with_capacity(base.len() + 1 + label.len());
+        name.push_str(base);
+        name.push('.');
+        name.push_str(label);
+        *m.entry(name).or_insert(0) += by;
+    }
+
     pub fn get(&self, name: &str) -> u64 {
-        *self.counters.lock().unwrap().get(name).unwrap_or(&0)
+        *lock_recover(&self.counters).get(name).unwrap_or(&0)
     }
 
     /// Sorted snapshot for reports.
     pub fn snapshot(&self) -> Vec<(String, u64)> {
-        let m = self.counters.lock().unwrap();
+        let m = lock_recover(&self.counters);
         let mut v: Vec<_> = m.iter().map(|(k, c)| (k.clone(), *c)).collect();
         v.sort();
         v
@@ -61,5 +83,32 @@ mod tests {
         assert_eq!(r.get("solves"), 5);
         assert_eq!(r.get("missing"), 0);
         assert_eq!(r.snapshot(), vec![("solves".to_string(), 5)]);
+    }
+
+    #[test]
+    fn labeled_incr_composes_the_full_name() {
+        let r = Registry::new();
+        r.incr_labeled(names::ENGINE_COMPLETED, "linear", 2);
+        r.incr_labeled(names::ENGINE_COMPLETED, "eig", 1);
+        assert_eq!(r.get("engine.completed.linear"), 2);
+        assert_eq!(r.get("engine.completed.eig"), 1);
+    }
+
+    #[test]
+    fn registry_survives_a_panic_while_locked() {
+        // Poison the counters mutex the way a panicking worker would,
+        // then check that every Registry operation still works: the
+        // whole point of lock_recover (satellite 3 regression).
+        let r = Registry::new();
+        r.incr("solves", 1);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = r.counters.lock().unwrap();
+            panic!("worker died holding the metrics lock");
+        }));
+        assert!(res.is_err());
+        assert!(r.counters.is_poisoned());
+        r.incr("solves", 2);
+        assert_eq!(r.get("solves"), 3);
+        assert_eq!(r.snapshot(), vec![("solves".to_string(), 3)]);
     }
 }

@@ -1,0 +1,114 @@
+//! Canonical [`Registry`](super::Registry) counter names.
+//!
+//! Every counter the library increments or reads is declared here,
+//! exactly once, as a `pub const`.  `rsla-lint` rule **L4** enforces the
+//! contract: a string literal passed to `Registry::incr`/`get` anywhere
+//! in non-test library code must match one of these declarations, and no
+//! name may be declared twice — so a typo'd counter name ("batchs") is a
+//! CI failure instead of a silently-zero dashboard column.
+//!
+//! Names with a dynamic suffix (per job kind, per backend) declare their
+//! *base* here and go through [`Registry::incr_labeled`](super::Registry::incr_labeled),
+//! which appends `.{label}`; the full name is still discoverable by
+//! prefix in snapshots.
+
+/// Jobs completed (any kind), mirrored into `ServiceStats::completed`.
+pub const SERVICE_COMPLETED: &str = "service.completed";
+/// Scheduling batches formed by the intake window.
+pub const SERVICE_BATCHES: &str = "service.batches";
+/// Requests that shared a scheduling batch.
+pub const SERVICE_BATCHED_REQUESTS: &str = "service.batched_requests";
+/// Fused groups split by the worker's full-equality re-check
+/// (64-bit `PatternKey` collisions).
+pub const SERVICE_KEY_COLLISIONS: &str = "service.key_collisions";
+
+/// Base for per-kind completion counters (`engine.completed.linear`, ...).
+pub const ENGINE_COMPLETED: &str = "engine.completed";
+/// Reply callbacks that panicked (caught; the worker survives).
+pub const ENGINE_REPLY_PANIC: &str = "engine.reply_panic";
+/// Jobs failed with `Error::Timeout` before execution.
+pub const ENGINE_TIMEOUT: &str = "engine.timeout";
+/// Submissions rejected by admission control (`Error::QueueFull`).
+pub const ENGINE_REJECTED: &str = "engine.rejected";
+/// Pattern routed to the worker already pinned to it.
+pub const ENGINE_AFFINITY_HIT: &str = "engine.affinity.hit";
+/// Pattern seen for the first time (or after a map reset).
+pub const ENGINE_AFFINITY_MISS: &str = "engine.affinity.miss";
+/// Affinity map cleared at its size cap.
+pub const ENGINE_AFFINITY_MAP_RESET: &str = "engine.affinity.map_reset";
+/// Job panics caught by a worker (`Error::WorkerPanic`).
+pub const ENGINE_PANIC: &str = "engine.panic";
+
+/// Numeric-tier cache hits (pattern + values; no numeric work).
+pub const FACTOR_CACHE_HIT_NUMERIC: &str = "factor_cache.hit.numeric";
+/// Symbolic-tier hits (pattern only; numeric phase re-ran).
+pub const FACTOR_CACHE_HIT_SYMBOLIC: &str = "factor_cache.hit.symbolic";
+/// Cold factorizations.
+pub const FACTOR_CACHE_MISS: &str = "factor_cache.miss";
+/// LRU evictions against the byte budget.
+pub const FACTOR_CACHE_EVICTION: &str = "factor_cache.eviction";
+/// 64-bit key matches rejected by the full-equality re-check.
+pub const FACTOR_CACHE_COLLISION: &str = "factor_cache.collision";
+/// Numeric factorizations actually executed (cold + refactor).
+pub const FACTOR_CACHE_NUMERIC_FACTORIZATIONS: &str = "factor_cache.numeric_factorizations";
+/// Symbolic replay failed; the cold path decided instead.
+pub const FACTOR_CACHE_REFACTOR_FALLBACK: &str = "factor_cache.refactor_fallback";
+/// Numeric-tier hit on the shard the job was routed to.
+pub const FACTOR_CACHE_SHARD_LOCAL_HIT: &str = "factor_cache.shard_local_hit";
+/// Numeric miss on the routed shard while a sibling held the factor
+/// (a scheduling failure, not a cold matrix).
+pub const FACTOR_CACHE_CROSS_SHARD_MISS: &str = "factor_cache.cross_shard_miss";
+
+/// Base for per-backend refusal counters (`dispatch.refused.{backend}`).
+pub const DISPATCH_REFUSED: &str = "dispatch.refused";
+/// Base for per-backend success counters (`dispatch.solved.{backend}`).
+pub const DISPATCH_SOLVED: &str = "dispatch.solved";
+/// Base for per-backend failure counters (`dispatch.failed.{backend}`).
+pub const DISPATCH_FAILED: &str = "dispatch.failed";
+
+/// Every declared name/base, for exhaustiveness checks and reports.
+pub const ALL: &[&str] = &[
+    SERVICE_COMPLETED,
+    SERVICE_BATCHES,
+    SERVICE_BATCHED_REQUESTS,
+    SERVICE_KEY_COLLISIONS,
+    ENGINE_COMPLETED,
+    ENGINE_REPLY_PANIC,
+    ENGINE_TIMEOUT,
+    ENGINE_REJECTED,
+    ENGINE_AFFINITY_HIT,
+    ENGINE_AFFINITY_MISS,
+    ENGINE_AFFINITY_MAP_RESET,
+    ENGINE_PANIC,
+    FACTOR_CACHE_HIT_NUMERIC,
+    FACTOR_CACHE_HIT_SYMBOLIC,
+    FACTOR_CACHE_MISS,
+    FACTOR_CACHE_EVICTION,
+    FACTOR_CACHE_COLLISION,
+    FACTOR_CACHE_NUMERIC_FACTORIZATIONS,
+    FACTOR_CACHE_REFACTOR_FALLBACK,
+    FACTOR_CACHE_SHARD_LOCAL_HIT,
+    FACTOR_CACHE_CROSS_SHARD_MISS,
+    DISPATCH_REFUSED,
+    DISPATCH_SOLVED,
+    DISPATCH_FAILED,
+];
+
+#[cfg(test)]
+mod tests {
+    use super::ALL;
+
+    #[test]
+    fn names_are_unique_and_well_formed() {
+        let mut seen = std::collections::HashSet::new();
+        for name in ALL {
+            assert!(seen.insert(*name), "duplicate metric name {name}");
+            assert!(
+                name.chars()
+                    .all(|c| c.is_ascii_lowercase() || c == '.' || c == '_'),
+                "metric name {name} has characters outside [a-z._]"
+            );
+            assert!(name.contains('.'), "metric name {name} has no namespace");
+        }
+    }
+}

@@ -63,19 +63,20 @@ pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
     (out, t0.elapsed().as_secs_f64())
 }
 
-/// Median-of-k timing for micro-benches: runs `f` k times, returns
-/// (last_result, median_seconds).
+/// Median-of-k timing for micro-benches: runs `f` k times (at least
+/// once), returns (last_result, median_seconds).
 pub fn timed_median<T>(k: usize, mut f: impl FnMut() -> T) -> (T, f64) {
-    assert!(k >= 1);
-    let mut times = Vec::with_capacity(k);
-    let mut out = None;
-    for _ in 0..k {
+    let t0 = Instant::now();
+    let mut out = f();
+    let mut times = vec![t0.elapsed().as_secs_f64()];
+    for _ in 1..k {
         let t0 = Instant::now();
-        out = Some(f());
+        out = f();
         times.push(t0.elapsed().as_secs_f64());
     }
-    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    (out.unwrap(), times[k / 2])
+    times.sort_by(f64::total_cmp);
+    // rsla-lint: allow(L1, index k/2 < times.len() because the loop above pushed max(k,1) samples)
+    (out, times[k.max(1) / 2])
 }
 
 #[cfg(test)]

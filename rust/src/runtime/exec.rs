@@ -70,18 +70,18 @@ impl OutValue {
     pub fn as_f64(&self) -> &Vec<f64> {
         match self {
             OutValue::F64(v) => v,
-            OutValue::I32(_) => panic!("expected f64 output"),
+            OutValue::I32(_) => panic!("expected f64 output"), // rsla-lint: allow(L1, typed accessor; wrong-kind access is a caller bug)
         }
     }
 
     pub fn scalar_f64(&self) -> f64 {
-        self.as_f64()[0]
+        self.as_f64()[0] // rsla-lint: allow(L1, scalar artifacts declare exactly one element)
     }
 
     pub fn scalar_i32(&self) -> i32 {
         match self {
-            OutValue::I32(v) => v[0],
-            OutValue::F64(v) => v[0] as i32,
+            OutValue::I32(v) => v[0], // rsla-lint: allow(L1, scalar artifacts declare exactly one element)
+            OutValue::F64(v) => v[0] as i32, // rsla-lint: allow(L1, scalar artifacts declare exactly one element)
         }
     }
 }
@@ -98,7 +98,7 @@ pub fn execute(
         .map(|a| a.to_literal())
         .collect::<Result<Vec<_>>>()?;
     let result = exe.execute::<xla::Literal>(&literals)?;
-    let tuple = result[0][0].to_literal_sync()?;
+    let tuple = result[0][0].to_literal_sync()?; // rsla-lint: allow(L1, single-device PJRT execute returns one result list)
     let parts = tuple.to_tuple()?;
     if parts.len() != out_specs.len() {
         return Err(Error::Xla(format!(

@@ -15,6 +15,7 @@ use std::sync::{Arc, Mutex};
 use crate::error::{Error, Result};
 
 use super::exec::{execute, Arg, OutValue};
+use crate::util::lock_recover;
 
 /// Dtype/shape of one parameter or result, parsed from manifest.tsv
 /// entries like `float64:5x32x32` (empty dims = scalar).
@@ -153,12 +154,12 @@ impl Registry {
     }
 
     pub fn compile_seconds(&self) -> f64 {
-        *self.compile_seconds.lock().unwrap()
+        *lock_recover(&self.compile_seconds)
     }
 
     /// Get (compiling on first use) the executable for `name`.
     pub fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(name) {
+        if let Some(e) = lock_recover(&self.cache).get(name) {
             return Ok(e.clone());
         }
         if !self.specs.contains_key(name) {
@@ -175,11 +176,8 @@ impl Registry {
         )?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = Arc::new(self.client.compile(&comp)?);
-        *self.compile_seconds.lock().unwrap() += t0.elapsed().as_secs_f64();
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(name.to_string(), exe.clone());
+        *lock_recover(&self.compile_seconds) += t0.elapsed().as_secs_f64();
+        lock_recover(&self.cache).insert(name.to_string(), exe.clone());
         Ok(exe)
     }
 

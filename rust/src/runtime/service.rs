@@ -13,6 +13,7 @@ use crate::error::{Error, Result};
 
 use super::exec::{Arg, OutValue};
 use super::registry::{parse_manifest, ArtifactSpec, Registry};
+use crate::util::lock_recover;
 
 enum Msg {
     Run {
@@ -107,7 +108,7 @@ impl RuntimeHandle {
 
     /// Execute an artifact on the runtime thread (blocking).
     pub fn run(&self, name: &str, args: &[Arg]) -> Result<Vec<OutValue>> {
-        let _g = self.lock.lock().unwrap();
+        let _g = lock_recover(&self.lock);
         let (reply_tx, reply_rx) = mpsc::channel();
         self.tx
             .send(Msg::Run {
@@ -122,7 +123,7 @@ impl RuntimeHandle {
     }
 
     pub fn compile_seconds(&self) -> f64 {
-        let _g = self.lock.lock().unwrap();
+        let _g = lock_recover(&self.lock);
         let (reply_tx, reply_rx) = mpsc::channel();
         if self.tx.send(Msg::CompileSeconds { reply: reply_tx }).is_err() {
             return 0.0;

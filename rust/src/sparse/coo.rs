@@ -137,6 +137,7 @@ impl Coo {
             indices,
             vals,
         }
+        .debug_validate()
     }
 }
 

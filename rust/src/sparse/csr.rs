@@ -22,6 +22,74 @@ impl Csr {
         self.vals.len()
     }
 
+    /// Structural invariants of the CSR format: indptr shape and
+    /// monotone coverage of indices/vals, and per-row strictly
+    /// increasing, in-range column indices.  Returns the first violated
+    /// invariant so corrupt assembly fails loudly instead of
+    /// mis-solving.
+    pub fn validate(&self) -> Result<()> {
+        if self.indptr.len() != self.nrows + 1 {
+            return Err(Error::InvalidProblem(format!(
+                "csr: indptr length {} != nrows + 1 ({})",
+                self.indptr.len(),
+                self.nrows + 1
+            )));
+        }
+        if self.indptr.first() != Some(&0) {
+            return Err(Error::InvalidProblem("csr: indptr[0] != 0".into()));
+        }
+        if self.indices.len() != self.vals.len() {
+            return Err(Error::InvalidProblem(format!(
+                "csr: indices length {} != vals length {}",
+                self.indices.len(),
+                self.vals.len()
+            )));
+        }
+        if self.indptr.last() != Some(&self.vals.len()) {
+            return Err(Error::InvalidProblem(format!(
+                "csr: indptr end {:?} != nnz {}",
+                self.indptr.last(),
+                self.vals.len()
+            )));
+        }
+        for (r, w) in self.indptr.windows(2).enumerate() {
+            let (lo, hi) = (w[0], w[1]);
+            if lo > hi || hi > self.indices.len() {
+                return Err(Error::InvalidProblem(format!(
+                    "csr: indptr not monotone within nnz at row {r}"
+                )));
+            }
+            let mut prev: Option<usize> = None;
+            for &c in &self.indices[lo..hi] {
+                if c >= self.ncols {
+                    return Err(Error::InvalidProblem(format!(
+                        "csr: column {c} out of range at row {r} (ncols {})",
+                        self.ncols
+                    )));
+                }
+                if prev.is_some_and(|p| p >= c) {
+                    return Err(Error::InvalidProblem(format!(
+                        "csr: columns not strictly increasing at row {r}"
+                    )));
+                }
+                prev = Some(c);
+            }
+        }
+        Ok(())
+    }
+
+    /// Debug-build invariant gate used by every constructor: release
+    /// builds pay nothing, debug builds fail fast on corrupt assembly.
+    #[inline]
+    pub fn debug_validate(self) -> Self {
+        debug_assert!(
+            self.validate().is_ok(),
+            "invalid CSR from constructor: {:?}",
+            self.validate()
+        );
+        self
+    }
+
     pub fn identity(n: usize) -> Self {
         Csr {
             nrows: n,
@@ -30,6 +98,7 @@ impl Csr {
             indices: (0..n).collect(),
             vals: vec![1.0; n],
         }
+        .debug_validate()
     }
 
     /// Entry (r, c), 0.0 if not stored.  O(log row_nnz).
@@ -119,6 +188,7 @@ impl Csr {
             indices,
             vals,
         }
+        .debug_validate()
     }
 
     /// Main diagonal (length min(nrows, ncols)).
@@ -205,7 +275,8 @@ impl Csr {
             indptr,
             indices,
             vals,
-        })
+        }
+        .debug_validate())
     }
 
     /// Dense materialization (tests / tiny systems only).
@@ -388,5 +459,54 @@ mod tests {
         coo.push(2, 2, 3.0);
         let a = coo.to_csr();
         assert_eq!(a.diag(), vec![1.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn validate_accepts_every_generated_matrix() {
+        crate::util::proptest::check("csr validate accepts", 32, |rng| {
+            let n = 2 + rng.below(14);
+            let a = random_csr(rng, n, 1 + rng.below(4));
+            a.validate().map_err(|e| format!("{e:?}"))
+        });
+    }
+
+    #[test]
+    fn validate_rejects_every_corruption() {
+        crate::util::proptest::check("csr validate rejects", 64, |rng| {
+            let n = 3 + rng.below(12);
+            let mut m = random_csr(rng, n, 2);
+            let which = rng.below(6);
+            match which {
+                0 => {
+                    // wrong indptr length
+                    m.indptr.pop();
+                }
+                1 => {
+                    // indptr escapes the nnz range mid-array
+                    m.indptr[n / 2] = m.vals.len() + 1;
+                }
+                2 => {
+                    // out-of-range column
+                    let k = rng.below(m.indices.len());
+                    m.indices[k] = m.ncols;
+                }
+                3 => {
+                    // duplicate column within a row (rows have 2 entries)
+                    m.indices[1] = m.indices[0];
+                }
+                4 => {
+                    // indices/vals length mismatch
+                    m.vals.pop();
+                }
+                _ => {
+                    // indptr must start at zero
+                    m.indptr[0] = 1;
+                }
+            }
+            match m.validate() {
+                Err(_) => Ok(()),
+                Ok(()) => Err(format!("corruption {which} passed validate")),
+            }
+        });
     }
 }

@@ -91,7 +91,7 @@ pub fn random_spd(rng: &mut Prng, n: usize, per_row: usize, shift: f64) -> Csr {
     }
     let b = coo.to_csr();
     let bt = b.transpose();
-    let mut a = b.spmm(&bt).expect("square");
+    let mut a = b.spmm(&bt).expect("square"); // rsla-lint: allow(L1, b and bt are n x n by construction so spmm agrees)
     // add shift on the diagonal (pattern may lack some diagonal entries)
     let mut coo2 = Coo::with_capacity(n, n, a.nnz() + n);
     for r in 0..n {

@@ -16,8 +16,22 @@
 //! cache) re-checks full equality before acting on a key match.
 
 use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::Csr;
+
+/// Process-wide count of [`PatternKey::of`] executions.  Each call is a
+/// full O(nnz) pass over the matrix, so the engine is expected to hash
+/// every linear job exactly once (in the scheduler) and thread the key
+/// to the worker's cache shard — `tests/hash_count.rs` pins that
+/// contract against this counter.
+static PATTERN_HASHES: AtomicU64 = AtomicU64::new(0);
+
+/// Monotone snapshot of how many times [`PatternKey::of`] has run in
+/// this process.
+pub fn pattern_hash_count() -> u64 {
+    PATTERN_HASHES.load(Ordering::Relaxed)
+}
 
 /// Cheap structural fingerprint of a sparsity pattern + values.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
@@ -38,6 +52,7 @@ pub struct StructureKey {
 
 impl PatternKey {
     pub fn of(m: &Csr) -> Self {
+        PATTERN_HASHES.fetch_add(1, Ordering::Relaxed);
         let mut h = std::collections::hash_map::DefaultHasher::new();
         m.indptr.hash(&mut h);
         m.indices.hash(&mut h);

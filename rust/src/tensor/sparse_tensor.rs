@@ -188,7 +188,9 @@ impl SparseTensor {
             })?;
             return match ticket.wait().outcome? {
                 crate::engine::JobOutput::Linear(out) => Ok(out),
-                _ => unreachable!("linear job produced a non-linear output"),
+                _ => Err(Error::WorkerPanic(
+                    "linear job produced a non-linear output".into(),
+                )),
             };
         }
         let (st, csr) = self.problem_op(batch);
@@ -225,7 +227,9 @@ impl SparseTensor {
                     crate::engine::JobOutput::MultiRhs(outs) => {
                         Ok(outs.into_iter().map(|o| o.x).collect())
                     }
-                    _ => unreachable!("multi-rhs job produced a different output"),
+                    _ => Err(Error::WorkerPanic(
+                        "multi-rhs job produced a different output".into(),
+                    )),
                 };
             }
             let a = self.to_csr(0);
@@ -283,7 +287,9 @@ impl SparseTensor {
             })?;
             return match ticket.wait().outcome? {
                 crate::engine::JobOutput::Eig(r) => Ok(r),
-                _ => unreachable!("eig job produced a different output"),
+                _ => Err(Error::WorkerPanic(
+                    "eig job produced a different output".into(),
+                )),
             };
         }
         let a = self.to_csr(0);

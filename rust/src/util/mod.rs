@@ -3,7 +3,9 @@
 
 pub mod prng;
 pub mod proptest;
+pub mod sync;
 pub mod vec_ops;
 
 pub use prng::Prng;
+pub use sync::lock_recover;
 pub use vec_ops::*;

@@ -17,7 +17,7 @@ where
     for seed in 0..cases {
         let mut rng = Prng::new(0xC0FFEE ^ seed);
         if let Err(msg) = f(&mut rng) {
-            panic!("property '{name}' failed at seed {seed}: {msg}");
+            panic!("property '{name}' failed at seed {seed}: {msg}"); // rsla-lint: allow(L1, the harness must fail the test on a falsified property)
         }
     }
 }

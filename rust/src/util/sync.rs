@@ -1,0 +1,38 @@
+//! Poison-recovering lock helpers.
+//!
+//! A worker that panics while holding a `Mutex` poisons it; the default
+//! `.lock().unwrap()` idiom then propagates that panic into every other
+//! thread touching the lock — one bad job wedges metrics reporting (or
+//! the whole engine) for the rest of the process.  Every subsystem the
+//! engine shares across workers locks through [`lock_recover`] instead:
+//! the data under our mutexes is counters, cache maps, and channel
+//! handles, all of which remain structurally valid after a panic
+//! mid-critical-section, so recovering the guard is always sound here.
+
+use std::sync::{Mutex, MutexGuard};
+
+/// Acquire `m`, recovering the guard if a previous holder panicked.
+#[inline]
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    #[test]
+    fn recovers_after_panic_while_held() {
+        let m = Mutex::new(7u64);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let _g = m.lock().unwrap();
+            panic!("poison it");
+        }));
+        assert!(r.is_err());
+        assert!(m.is_poisoned());
+        // plain .lock().unwrap() would now panic; lock_recover does not
+        *lock_recover(&m) += 1;
+        assert_eq!(*lock_recover(&m), 8);
+    }
+}

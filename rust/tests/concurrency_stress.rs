@@ -1,0 +1,108 @@
+//! Seeded multi-thread interleaving stress for the lock-holding layers
+//! the concurrency audit (TSan/Miri in CI) watches: `CacheShards` and
+//! the metrics registry/histogram.
+//!
+//! The schedule is nondeterministic but the *counters* are not: after a
+//! warm phase that replicates every pattern onto every shard with an
+//! unbounded budget, each of the `THREADS x ITERS` stress operations is
+//! exactly one shard-local numeric hit, one histogram sample, and one
+//! counter increment — so every final counter has one correct value,
+//! and any lost update, double count, or poisoned lock fails the
+//! assertion instead of flaking.
+
+use std::sync::Arc;
+use std::thread;
+
+use rsla::factor_cache::CacheShards;
+use rsla::metrics::{names, LatencyHist, Registry};
+use rsla::sparse::poisson::poisson2d;
+use rsla::sparse::PatternKey;
+use rsla::util::Prng;
+
+const SHARDS: usize = 4;
+const THREADS: usize = 8;
+const ITERS: usize = 64;
+
+#[test]
+fn seeded_shard_and_hist_stress_has_exact_final_counters() {
+    let shards = Arc::new(CacheShards::new(SHARDS, u64::MAX));
+    let reg = Arc::new(Registry::new());
+    let hist = Arc::new(LatencyHist::new());
+    let mats: Vec<_> = [5usize, 6, 7]
+        .iter()
+        .map(|&g| poisson2d(g, None).matrix)
+        .collect();
+    let keys: Vec<_> = mats.iter().map(PatternKey::of).collect();
+
+    // Warm phase: every pattern factored onto every shard, so the
+    // stress phase below performs no numeric work and no eviction.
+    for i in 0..SHARDS {
+        for (m, k) in mats.iter().zip(&keys) {
+            shards
+                .factor_on_keyed(i, m, k, u64::MAX, Some(&reg))
+                .expect("warm factorization");
+        }
+    }
+    let warm_factored = reg.get(names::FACTOR_CACHE_NUMERIC_FACTORIZATIONS);
+    assert_eq!(warm_factored, (SHARDS * mats.len()) as u64);
+    let warm_hits = reg.get(names::FACTOR_CACHE_HIT_NUMERIC);
+    let warm_local = reg.get(names::FACTOR_CACHE_SHARD_LOCAL_HIT);
+    let warm_cross = reg.get(names::FACTOR_CACHE_CROSS_SHARD_MISS);
+    let warm_miss = reg.get(names::FACTOR_CACHE_MISS);
+
+    let handles: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let (shards, reg, hist) = (shards.clone(), reg.clone(), hist.clone());
+            let (mats, keys) = (mats.clone(), keys.clone());
+            thread::spawn(move || {
+                let mut rng = Prng::new(0xD00D + t as u64);
+                let mut scratch = Vec::new();
+                for _ in 0..ITERS {
+                    let which = rng.below(mats.len());
+                    let shard = rng.below(SHARDS);
+                    let t0 = std::time::Instant::now();
+                    let f = shards
+                        .factor_on_keyed(shard, &mats[which], &keys[which], u64::MAX, Some(&reg))
+                        .expect("stress factorization");
+                    let n = mats[which].nrows;
+                    let b = vec![1.0; n];
+                    let mut x = vec![0.0; n];
+                    f.solve_into(&b, &mut x, &mut scratch)
+                        .expect("stress solve");
+                    hist.record(t0.elapsed().as_secs_f64());
+                    reg.incr(names::ENGINE_COMPLETED, 1);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("stress thread panicked");
+    }
+
+    let total = (THREADS * ITERS) as u64;
+    assert_eq!(
+        reg.get(names::FACTOR_CACHE_NUMERIC_FACTORIZATIONS),
+        warm_factored,
+        "stress phase must not refactor"
+    );
+    assert_eq!(reg.get(names::FACTOR_CACHE_MISS), warm_miss);
+    assert_eq!(
+        reg.get(names::FACTOR_CACHE_HIT_NUMERIC) - warm_hits,
+        total,
+        "every stress op must be a numeric hit"
+    );
+    assert_eq!(
+        reg.get(names::FACTOR_CACHE_SHARD_LOCAL_HIT) - warm_local,
+        total,
+        "every stress op must hit its routed shard"
+    );
+    assert_eq!(
+        reg.get(names::FACTOR_CACHE_CROSS_SHARD_MISS),
+        warm_cross,
+        "no cross-shard miss once every shard is warm"
+    );
+    assert_eq!(reg.get(names::ENGINE_COMPLETED), total);
+    assert_eq!(hist.count(), total, "histogram lost or duplicated samples");
+    // quantiles stay readable (non-NaN) after concurrent recording
+    assert!(hist.quantile(0.5).is_finite());
+}

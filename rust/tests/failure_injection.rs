@@ -382,6 +382,21 @@ fn service_shutdown_drains_inflight_requests() {
     }
 }
 
+#[test]
+fn service_submit_after_shutdown_is_an_error_reply_not_a_panic() {
+    let svc = SolveService::start(Arc::new(Dispatcher::new(None)), ServiceConfig::default());
+    svc.shutdown();
+    let sys = poisson2d(6, None);
+    // the old shim panicked the SUBMITTING thread here; a stopped
+    // engine must instead surface as an error reply on the channel
+    let rx = svc.submit(sys.matrix.clone(), vec![1.0; 36], SolveOpts::default());
+    let resp = rx.recv().expect("stopped service must still reply");
+    assert!(
+        resp.outcome.is_err(),
+        "submit to a stopped engine cannot succeed"
+    );
+}
+
 // ---------------------------------------------------------------------
 // Autograd tape misuse
 // ---------------------------------------------------------------------
@@ -507,6 +522,28 @@ mod engine_failures {
             .unwrap()
             .wait();
         assert!(r.outcome.is_ok(), "worker pool did not survive the panic");
+        assert_eq!(e.stats().queue_depth, 0);
+        e.shutdown();
+    }
+
+    #[test]
+    fn worker_panic_leaves_the_metrics_registry_usable() {
+        use rsla::metrics::names;
+        let e = engine(1, usize::MAX);
+        let r = e
+            .submit(JobSpec::Nonlinear {
+                residual: Box::new(PanickingResidual),
+                u0: vec![0.0; 4],
+                opts: NewtonOpts::default(),
+            })
+            .unwrap()
+            .wait();
+        assert!(r.outcome.is_err(), "panicking job reported success");
+        // the unwind crossed registry lock scopes; poison recovery must
+        // keep every counter and the stats snapshot fully readable
+        assert_eq!(e.metrics.get(names::ENGINE_PANIC), 1, "panic not counted");
+        e.metrics.incr(names::ENGINE_PANIC, 1);
+        assert_eq!(e.metrics.get(names::ENGINE_PANIC), 2, "counter unusable after panic");
         assert_eq!(e.stats().queue_depth, 0);
         e.shutdown();
     }

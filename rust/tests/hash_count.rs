@@ -1,0 +1,70 @@
+//! Pin: the engine computes each linear job's [`PatternKey`] exactly
+//! once — in the scheduler — and threads it to the worker's factor-cache
+//! shard instead of re-hashing on the serve path.
+//!
+//! `PatternKey::of` is a full O(nnz) pass, so a second hash per job is a
+//! real regression; `rsla::sparse::key::pattern_hash_count` counts every
+//! execution process-wide.  This lives in its own integration binary so
+//! no other test's hashing races the counter.
+//!
+//! [`PatternKey`]: rsla::sparse::PatternKey
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use rsla::backend::{Dispatcher, SolveOpts};
+use rsla::engine::{BatchPolicy, Engine, EngineConfig, JobSpec};
+use rsla::sparse::key::pattern_hash_count;
+use rsla::sparse::poisson::poisson2d;
+use rsla::util::Prng;
+
+#[test]
+fn engine_hashes_each_linear_job_exactly_once() {
+    let e = Engine::start(
+        Arc::new(Dispatcher::new(None)),
+        EngineConfig {
+            workers: 1,
+            fuse: BatchPolicy {
+                max_batch: 1,
+                window: Duration::from_millis(1),
+            },
+            affinity: true,
+            ..Default::default()
+        },
+    );
+    let sys = poisson2d(8, None);
+    let n = sys.matrix.nrows;
+    let mut rng = Prng::new(7);
+
+    // One warm-up request so lazy setup (shard allocation, the first
+    // factorization) is outside the measured window.
+    let warm = e
+        .submit(JobSpec::Linear {
+            matrix: sys.matrix.clone(),
+            b: rng.normal_vec(n),
+            opts: SolveOpts::default(),
+        })
+        .expect("submit")
+        .wait();
+    assert!(warm.outcome.is_ok(), "warm-up solve failed");
+
+    let baseline = pattern_hash_count();
+    let k = 6u64;
+    for _ in 0..k {
+        let r = e
+            .submit(JobSpec::Linear {
+                matrix: sys.matrix.clone(),
+                b: rng.normal_vec(n),
+                opts: SolveOpts::default(),
+            })
+            .expect("submit")
+            .wait();
+        assert!(r.outcome.is_ok(), "solve failed");
+    }
+    let hashed = pattern_hash_count() - baseline;
+    assert_eq!(
+        hashed, k,
+        "expected exactly one PatternKey::of per linear job ({k} jobs, {hashed} hashes)"
+    );
+    e.shutdown();
+}
