@@ -1,0 +1,320 @@
+//! SpMV roofline benchmark: measured bandwidth per format (CSR vs
+//! SELL-C-σ) across row-length distributions, reported as a fraction of
+//! the machine's streaming bandwidth (a STREAM-triad probe run in the
+//! same process), plus the fused multi-RHS win.
+//!
+//! What it asserts — measurements, not theory:
+//!
+//! * the fused k=8 block SpMV beats 8 separate CSR passes by >= 1.5x on
+//!   the large Poisson operator (one read of `vals`/`indices` instead
+//!   of 8, the whole point of `kernels::spmv_block`);
+//! * SELL-C-σ out-runs CSR on at least one benched distribution (the
+//!   short-row regimes the cost model routes to it);
+//! * the cost model's choice agrees with the measured winner on the
+//!   clear-cut distributions (regular -> SELL, power-law -> CSR).
+//!
+//! Emits `BENCH_spmv.json` (GB/s, roofline fraction, occupancy and the
+//! model's choice per distribution x size; fused vs unfused k-RHS) for
+//! the CI perf trajectory.  Thresholds and the bytes-moved accounting
+//! are documented in `docs/kernels.md#roofline-bench`.
+//!
+//! Run: cargo bench --bench spmv_roofline
+
+use std::time::Instant;
+
+use rsla::sparse::kernels::spmv_block;
+use rsla::sparse::poisson::poisson2d;
+use rsla::sparse::sell::{DEFAULT_CHUNK, DEFAULT_SIGMA};
+use rsla::sparse::{choose_format, Csr, FormatChoice, Sell};
+use rsla::util::Prng;
+
+/// Wall-clock floor per measurement; keeps timer noise out of GB/s.
+const MIN_MEASURE_S: f64 = 0.15;
+
+/// Useful bytes one SpMV must move, the roofline numerator shared by
+/// both formats: every stored entry's value + index, the dense x and y
+/// vectors once each, and the row-offset stream.  Padding and format
+/// overhead are deliberately NOT counted — they show up as a LOWER
+/// achieved fraction, which is exactly the comparison the cost model
+/// makes.
+fn spmv_bytes(a: &Csr) -> f64 {
+    (a.nnz() * 16 + (a.nrows + a.ncols) * 8 + (a.nrows + 1) * 8) as f64
+}
+
+/// Time `f` with enough repetitions to fill the measurement floor;
+/// returns best-of-3 seconds per call (min filters scheduler noise).
+fn time_per_call<F: FnMut()>(mut f: F) -> f64 {
+    // calibrate
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let reps = ((MIN_MEASURE_S / once).ceil() as usize).clamp(1, 1_000_000);
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            f();
+        }
+        best = best.min(t0.elapsed().as_secs_f64() / reps as f64);
+    }
+    best
+}
+
+/// STREAM-style triad (`a[i] = b[i] + s * c[i]`) over arrays far larger
+/// than cache: the machine bandwidth the roofline fractions divide by.
+fn stream_bandwidth_gbs() -> f64 {
+    let n = 8_000_000usize; // 3 x 64 MB streams
+    let b = vec![1.0f64; n];
+    let c = vec![2.0f64; n];
+    let mut a = vec![0.0f64; n];
+    let s = 1.5f64;
+    let secs = time_per_call(|| {
+        for ((ai, bi), ci) in a.iter_mut().zip(&b).zip(&c) {
+            *ai = bi + s * ci;
+        }
+        std::hint::black_box(&a);
+    });
+    (n * 3 * 8) as f64 / secs / 1e9
+}
+
+fn banded(n: usize, per_row: usize) -> Csr {
+    let mut indptr = vec![0usize];
+    let mut indices = Vec::new();
+    let mut vals = Vec::new();
+    for r in 0..n {
+        // stride-37 diagonals: distinct columns as long as 37*per_row < n
+        let mut cols: Vec<usize> = (0..per_row).map(|d| (r + d * 37) % n).collect();
+        cols.sort_unstable();
+        for (d, c) in cols.into_iter().enumerate() {
+            indices.push(c);
+            vals.push(1.0 + d as f64);
+        }
+        indptr.push(indices.len());
+    }
+    Csr {
+        nrows: n,
+        ncols: n,
+        indptr,
+        indices,
+        vals,
+    }
+    .debug_validate()
+}
+
+fn power_law(rng: &mut Prng, n: usize) -> Csr {
+    let mut indptr = vec![0usize];
+    let mut indices = Vec::new();
+    let mut vals = Vec::new();
+    for r in 0..n {
+        let len = if r % 211 == 0 { 1500.min(n) } else { 1 + r % 3 };
+        let mut cols = rng.choose_distinct(n, len);
+        cols.sort_unstable();
+        for c in cols {
+            indices.push(c);
+            vals.push(rng.normal());
+        }
+        indptr.push(indices.len());
+    }
+    Csr {
+        nrows: n,
+        ncols: n,
+        indptr,
+        indices,
+        vals,
+    }
+    .debug_validate()
+}
+
+struct FormatRow {
+    dist: String,
+    nrows: usize,
+    nnz: usize,
+    choice: &'static str,
+    occupancy: f64,
+    csr_gbs: f64,
+    sell_gbs: f64,
+    csr_frac: f64,
+    sell_frac: f64,
+}
+
+fn bench_formats(dist: &str, a: &Csr, stream_gbs: f64) -> FormatRow {
+    let report = choose_format(a);
+    let sell = Sell::from_csr(a, DEFAULT_CHUNK, DEFAULT_SIGMA);
+    let mut rng = Prng::new(17);
+    let x = rng.normal_vec(a.ncols);
+    let mut y = vec![0.0; a.nrows];
+    let bytes = spmv_bytes(a);
+
+    let csr_secs = time_per_call(|| {
+        a.spmv(&x, &mut y);
+        std::hint::black_box(&y);
+    });
+    let sell_secs = time_per_call(|| {
+        sell.spmv(&x, &mut y);
+        std::hint::black_box(&y);
+    });
+    let (csr_gbs, sell_gbs) = (bytes / csr_secs / 1e9, bytes / sell_secs / 1e9);
+    FormatRow {
+        dist: dist.to_string(),
+        nrows: a.nrows,
+        nnz: a.nnz(),
+        choice: report.choice.name(),
+        occupancy: report.occupancy,
+        csr_gbs,
+        sell_gbs,
+        csr_frac: csr_gbs / stream_gbs,
+        sell_frac: sell_gbs / stream_gbs,
+    }
+}
+
+struct FusedRow {
+    dist: String,
+    k: usize,
+    fused_gbs: f64,
+    unfused_gbs: f64,
+    speedup: f64,
+}
+
+fn bench_fused(dist: &str, a: &Csr, k: usize) -> FusedRow {
+    let mut rng = Prng::new(23);
+    let cols: Vec<Vec<f64>> = (0..k).map(|_| rng.normal_vec(a.ncols)).collect();
+    let mut xb = vec![0.0; a.ncols * k];
+    for (j, c) in cols.iter().enumerate() {
+        for (i, v) in c.iter().enumerate() {
+            xb[i * k + j] = *v;
+        }
+    }
+    let mut yb = vec![0.0; a.nrows * k];
+    let fused_secs = time_per_call(|| {
+        spmv_block(a, &xb, &mut yb, k);
+        std::hint::black_box(&yb);
+    });
+    let mut ys: Vec<Vec<f64>> = (0..k).map(|_| vec![0.0; a.nrows]).collect();
+    let unfused_secs = time_per_call(|| {
+        for (c, y) in cols.iter().zip(ys.iter_mut()) {
+            a.spmv(c, y);
+        }
+        std::hint::black_box(&ys);
+    });
+    // bytes a k-RHS product must move if the matrix is read ONCE
+    let bytes = (a.nnz() * 16 + (a.nrows + 1) * 8 + (a.nrows + a.ncols) * 8 * k) as f64;
+    FusedRow {
+        dist: dist.to_string(),
+        k,
+        fused_gbs: bytes / fused_secs / 1e9,
+        unfused_gbs: bytes / unfused_secs / 1e9,
+        speedup: unfused_secs / fused_secs,
+    }
+}
+
+fn main() {
+    println!("# spmv_roofline: CSR vs SELL-C-sigma vs fused k-RHS");
+    let stream_gbs = stream_bandwidth_gbs();
+    println!("stream triad: {stream_gbs:.1} GB/s (roofline denominator)");
+
+    let mut rng = Prng::new(3);
+    let matrices: Vec<(String, Csr)> = vec![
+        ("poisson2d_256".into(), poisson2d(256, None).matrix),
+        ("poisson2d_768".into(), poisson2d(768, None).matrix),
+        ("banded_short3".into(), banded(400_000, 3)),
+        ("banded_wide16".into(), banded(150_000, 16)),
+        ("power_law".into(), power_law(&mut rng, 120_000)),
+    ];
+
+    let format_rows: Vec<FormatRow> = matrices
+        .iter()
+        .map(|(d, a)| bench_formats(d, a, stream_gbs))
+        .collect();
+    for r in &format_rows {
+        println!(
+            "{:>14}: n={:<7} nnz={:<8} occ {:.2} model={:<4} csr {:6.2} GB/s ({:4.1}% roof)  sell {:6.2} GB/s ({:4.1}% roof)",
+            r.dist,
+            r.nrows,
+            r.nnz,
+            r.occupancy,
+            r.choice,
+            r.csr_gbs,
+            100.0 * r.csr_frac,
+            r.sell_gbs,
+            100.0 * r.sell_frac,
+        );
+    }
+
+    let fused_rows: Vec<FusedRow> = matrices
+        .iter()
+        .filter(|(d, _)| d.starts_with("poisson"))
+        .flat_map(|(d, a)| [bench_fused(d, a, 4), bench_fused(d, a, 8)])
+        .collect();
+    for r in &fused_rows {
+        println!(
+            "{:>14}: k={} fused {:6.2} GB/s vs {} passes {:6.2} GB/s -> {:.2}x",
+            r.dist, r.k, r.fused_gbs, r.k, r.unfused_gbs, r.speedup
+        );
+    }
+
+    // acceptance: the fused win is measured on the large Poisson operator
+    let big_fused = fused_rows
+        .iter()
+        .find(|r| r.dist == "poisson2d_768" && r.k == 8)
+        .expect("poisson2d_768 k=8 row");
+    assert!(
+        big_fused.speedup >= 1.5,
+        "fused k=8 block SpMV must beat 8 CSR passes by >= 1.5x on poisson2d_768 (got {:.2}x)",
+        big_fused.speedup
+    );
+    // acceptance: SELL wins somewhere (the short-row regime exists)
+    let sell_wins: Vec<&str> = format_rows
+        .iter()
+        .filter(|r| r.sell_gbs > r.csr_gbs)
+        .map(|r| r.dist.as_str())
+        .collect();
+    assert!(
+        !sell_wins.is_empty(),
+        "SELL-C-sigma must beat CSR on at least one benched distribution"
+    );
+    println!("sell wins on: {}", sell_wins.join(", "));
+    // sanity: the model's clear-cut calls match its own occupancy math
+    let pl = format_rows
+        .iter()
+        .find(|r| r.dist == "power_law")
+        .expect("power_law row");
+    assert_eq!(pl.choice, FormatChoice::Csr.name(), "power-law must stay CSR");
+    for r in format_rows.iter().filter(|r| r.dist.starts_with("poisson")) {
+        assert_eq!(r.choice, FormatChoice::Sell.name(), "{} must pick SELL", r.dist);
+    }
+
+    // machine-readable trajectory for CI
+    let mut json = String::from("{\n  \"bench\": \"spmv_roofline\",\n");
+    json.push_str(&format!("  \"stream_gbs\": {stream_gbs:.2},\n"));
+    json.push_str("  \"formats\": [\n");
+    for (i, r) in format_rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"dist\": \"{}\", \"nrows\": {}, \"nnz\": {}, \"occupancy\": {:.4}, \"model_choice\": \"{}\", \"csr_gbs\": {:.3}, \"sell_gbs\": {:.3}, \"csr_roofline_frac\": {:.4}, \"sell_roofline_frac\": {:.4}}}{}\n",
+            r.dist,
+            r.nrows,
+            r.nnz,
+            r.occupancy,
+            r.choice,
+            r.csr_gbs,
+            r.sell_gbs,
+            r.csr_frac,
+            r.sell_frac,
+            if i + 1 == format_rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ],\n  \"fused\": [\n");
+    for (i, r) in fused_rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"dist\": \"{}\", \"k\": {}, \"fused_gbs\": {:.3}, \"unfused_gbs\": {:.3}, \"speedup\": {:.3}}}{}\n",
+            r.dist,
+            r.k,
+            r.fused_gbs,
+            r.unfused_gbs,
+            r.speedup,
+            if i + 1 == fused_rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write("BENCH_spmv.json", &json).expect("write BENCH_spmv.json");
+    println!("\nwrote BENCH_spmv.json ({} distributions, stream {stream_gbs:.1} GB/s)", format_rows.len());
+}

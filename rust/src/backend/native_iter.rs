@@ -8,7 +8,7 @@
 
 use super::{Backend, Device, Method, Operator, Problem, SolveOpts, SolveOutcome};
 use crate::error::Result;
-use crate::iterative::{Identity, IterOpts, Jacobi, LinOp};
+use crate::iterative::{Identity, IterOpts, Jacobi};
 use crate::krylov::{self, NullComm, SerialOp};
 use crate::metrics::MemTracker;
 
@@ -87,7 +87,13 @@ impl Backend for NativeIter {
             }
             Operator::Csr(a) => {
                 let _hold = mem.hold(crate::metrics::mem::csr_bytes(a.nrows, a.nnz()));
-                let op = SerialOp(*a as &dyn LinOp);
+                // roofline-tuned operator: the cost model picks CSR or
+                // SELL-C-σ per matrix, recording the choice in the
+                // process-global registry (`spmv.format.*`); either
+                // kernel applies each vector in CSR's per-row FP order,
+                // so solver iterates are unchanged
+                let op = crate::sparse::TunedOp::new(a, Some(crate::metrics::Registry::global()));
+                let _fmt_hold = mem.hold(op.extra_bytes());
                 if opts.method == Method::Minres && !spd {
                     // symmetric-indefinite: MINRES needs an SPD M, which
                     // Jacobi cannot guarantee (diagonals may be zero or

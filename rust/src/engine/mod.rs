@@ -80,6 +80,12 @@ pub struct EngineConfig {
     pub max_pending: usize,
     /// Byte budget of each worker's factor-cache shard.
     pub shard_budget_bytes: u64,
+    /// Latency-histogram horizon: `None` keeps every sample forever
+    /// (the bench/report default); `Some((window, n_windows))` rotates
+    /// generational histograms so [`Engine::stats`] quantiles reflect
+    /// the last `window * n_windows` jobs of each kind — long-running
+    /// servers use this so a cold-start burst can't pin p99 forever.
+    pub hist_window: Option<(u64, usize)>,
 }
 
 impl Default for EngineConfig {
@@ -90,6 +96,7 @@ impl Default for EngineConfig {
             affinity: true,
             max_pending: usize::MAX,
             shard_budget_bytes: DEFAULT_BUDGET_BYTES,
+            hist_window: None,
         }
     }
 }
@@ -249,7 +256,13 @@ impl Engine {
         let shared = Arc::new(Shared {
             pending: AtomicUsize::new(0),
             depths: (0..workers).map(|_| AtomicUsize::new(0)).collect(),
-            hists: JobKind::ALL.iter().map(|_| LatencyHist::new()).collect(),
+            hists: JobKind::ALL
+                .iter()
+                .map(|_| match config.hist_window {
+                    Some((w, n)) => LatencyHist::windowed(w, n),
+                    None => LatencyHist::new(),
+                })
+                .collect(),
             registry: registry.clone(),
         });
         let shards = Arc::new(CacheShards::new(workers, config.shard_budget_bytes));
@@ -698,8 +711,10 @@ fn exec_caught(spec: JobSpec, key: Option<PatternKey>, ctx: &WorkerCtx) -> Resul
 }
 
 /// Factor through this worker's shard, re-using the scheduler's
-/// fingerprint when the caller carries one (`None` re-hashes — the
-/// Newton path, where the Jacobian values change between calls).
+/// fingerprint when the caller carries one.  When it doesn't, the key
+/// is computed HERE, exactly once — `CacheShards` is keyed-only, so
+/// every path to a shard pays the O(nnz) hash at most once (pinned by
+/// `tests/hash_count.rs`).
 fn shard_factor(
     ctx: &WorkerCtx,
     a: &Csr,
@@ -711,9 +726,11 @@ fn shard_factor(
             ctx.shards
                 .factor_on_keyed(ctx.idx, a, k, budget, Some(&ctx.shared.registry))
         }
-        None => ctx
-            .shards
-            .factor_on(ctx.idx, a, budget, Some(&ctx.shared.registry)),
+        None => {
+            let k = PatternKey::of(a);
+            ctx.shards
+                .factor_on_keyed(ctx.idx, a, &k, budget, Some(&ctx.shared.registry))
+        }
     }
 }
 
@@ -1060,21 +1077,22 @@ fn exec_multi_rhs(
         if let Ok(f) = shard_factor(ctx, a, key, opts.host_mem_budget) {
             let bytes = f.bytes();
             let method = batched_label(f.method());
-            return bs
-                .iter()
-                .map(|b| {
-                    let x = f.solve(b)?;
-                    let residual = residual_of(a, &x, b);
-                    Ok(SolveOutcome {
-                        x,
-                        backend: "native-direct",
-                        method,
-                        iters: 0,
-                        residual,
-                        peak_bytes: bytes,
-                    })
+            let xs = bs.iter().map(|b| f.solve(b)).collect::<Result<Vec<_>>>()?;
+            // ONE fused k-column SpMV verifies every solution — per
+            // column bitwise identical to the k separate matvec passes
+            let residuals = block_residuals(a, &xs, bs);
+            return Ok(xs
+                .into_iter()
+                .zip(residuals)
+                .map(|(x, residual)| SolveOutcome {
+                    x,
+                    backend: "native-direct",
+                    method,
+                    iters: 0,
+                    residual,
+                    peak_bytes: bytes,
                 })
-                .collect();
+                .collect());
         }
     }
     bs.iter()
@@ -1086,6 +1104,38 @@ fn exec_multi_rhs(
                 },
                 opts,
             )
+        })
+        .collect()
+}
+
+/// Residual norms for a block of solutions against one matrix: one
+/// fused k-column SpMV ([`crate::sparse::kernels::spmv_block`]) instead
+/// of k separate `matvec` traversals.  Each column's SpMV and the
+/// single-accumulator norm loop replicate `residual_of`'s FP schedule
+/// exactly, so the reported residuals are bitwise identical to the
+/// unfused path.
+fn block_residuals(a: &Csr, xs: &[Vec<f64>], bs: &[Vec<f64>]) -> Vec<f64> {
+    let k = xs.len();
+    let n = a.nrows;
+    let mut xb = vec![0.0; n * k];
+    for (j, x) in xs.iter().enumerate() {
+        for (i, v) in x.iter().enumerate() {
+            if let Some(slot) = xb.get_mut(i * k + j) {
+                *slot = *v;
+            }
+        }
+    }
+    let mut axb = vec![0.0; n * k];
+    crate::sparse::kernels::spmv_block(a, &xb, &mut axb, k);
+    bs.iter()
+        .enumerate()
+        .map(|(j, b)| {
+            let mut r2 = 0.0;
+            for (i, bi) in b.iter().enumerate() {
+                let d = bi - axb.get(i * k + j).copied().unwrap_or(0.0);
+                r2 += d * d;
+            }
+            r2.sqrt()
         })
         .collect()
 }
@@ -1103,7 +1153,12 @@ fn exec_nonlinear(
     let idx = ctx.idx;
     let reg = ctx.shared.registry.clone();
     let mut step = move |j: &Csr, rhs: &[f64]| -> Option<Vec<f64>> {
-        let factor = shards.factor_on(idx, j, u64::MAX, Some(&reg)).ok()?;
+        // the Jacobian values change every step, so each step hashes
+        // its matrix once here (the shards API is keyed-only)
+        let key = PatternKey::of(j);
+        let factor = shards
+            .factor_on_keyed(idx, j, &key, u64::MAX, Some(&reg))
+            .ok()?;
         factor.solve(rhs).ok()
     };
     crate::nonlinear::newton_with_step(f, u0, opts, &mut step)

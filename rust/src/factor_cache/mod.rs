@@ -440,7 +440,11 @@ impl FactorCache {
 /// Per-worker factor-cache shards for the solve engine's
 /// pattern-affinity scheduling: worker `w` factors through shard `w`,
 /// and the scheduler routes same-pattern jobs to the worker whose shard
-/// is already warm.  [`CacheShards::factor_on`] additionally accounts
+/// is already warm.  The API is *keyed-only*: every caller carries a
+/// [`PatternKey`] (the engine threads the scheduler's fingerprint
+/// through, or computes one exactly once at the call site), so no
+/// shard probe ever pays a second O(nnz) hash.
+/// [`CacheShards::factor_on_keyed`] additionally accounts
 /// CROSS-SHARD traffic — a numeric miss on the probing shard while a
 /// sibling shard holds the factor means the scheduler sent the job to
 /// the wrong worker (counter `factor_cache.cross_shard_miss`); a
@@ -478,22 +482,12 @@ impl CacheShards {
         self.shards.iter().any(|s| s.holds_numeric_keyed(a, &key))
     }
 
-    /// Factor `a` through shard `i`, accounting shard-local hits and
-    /// cross-shard misses in `reg`.
-    pub fn factor_on(
-        &self,
-        i: usize,
-        a: &Csr,
-        max_fill_bytes: u64,
-        reg: Option<&metrics::Registry>,
-    ) -> Result<Arc<CachedFactor>> {
-        let key = PatternKey::of(a);
-        self.factor_on_keyed(i, a, &key, max_fill_bytes, reg)
-    }
-
-    /// [`factor_on`](Self::factor_on) with the scheduler's
-    /// already-computed key: the whole shard probe (local hit,
-    /// cross-shard miss, factor/fetch) runs without re-hashing `a`.
+    /// Factor `a` through shard `i` with the caller's already-computed
+    /// key, accounting shard-local hits and cross-shard misses in
+    /// `reg`.  The whole shard probe (local hit, cross-shard miss,
+    /// factor/fetch) runs without re-hashing `a` — there is
+    /// deliberately no unkeyed variant, so every path that reaches a
+    /// shard has paid the O(nnz) hash exactly once.
     pub fn factor_on_keyed(
         &self,
         i: usize,
@@ -749,16 +743,24 @@ mod tests {
         let shards = CacheShards::new(2, u64::MAX);
         let reg = metrics::Registry::new();
         let sys = poisson2d(8, None);
+        // the shards API is keyed-only: hash once, probe many times
+        let key = PatternKey::of(&sys.matrix);
         // cold on shard 0: neither local hit nor cross-shard miss
-        shards.factor_on(0, &sys.matrix, u64::MAX, Some(&reg)).unwrap();
+        shards
+            .factor_on_keyed(0, &sys.matrix, &key, u64::MAX, Some(&reg))
+            .unwrap();
         assert_eq!(reg.get("factor_cache.shard_local_hit"), 0);
         assert_eq!(reg.get("factor_cache.cross_shard_miss"), 0);
         // warm on shard 0: local hit
-        shards.factor_on(0, &sys.matrix, u64::MAX, Some(&reg)).unwrap();
+        shards
+            .factor_on_keyed(0, &sys.matrix, &key, u64::MAX, Some(&reg))
+            .unwrap();
         assert_eq!(reg.get("factor_cache.shard_local_hit"), 1);
         // same matrix routed to shard 1: cross-shard miss (the factor
         // exists, just not where the job landed)
-        shards.factor_on(1, &sys.matrix, u64::MAX, Some(&reg)).unwrap();
+        shards
+            .factor_on_keyed(1, &sys.matrix, &key, u64::MAX, Some(&reg))
+            .unwrap();
         assert_eq!(reg.get("factor_cache.cross_shard_miss"), 1);
         assert!(shards.any_holds(&sys.matrix));
         let agg = shards.stats();

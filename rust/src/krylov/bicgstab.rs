@@ -8,9 +8,10 @@
 //! changing the algorithm.  Preconditioner application is rank-local,
 //! so the same body serves the distributed wrappers unchanged.
 
-use super::{Communicator, LinearOperator};
+use super::{gdot2, Communicator, LinearOperator};
 use crate::iterative::{IterOpts, IterResult, Precond};
 use crate::metrics::MemTracker;
+use crate::sparse::kernels;
 use crate::util::{axpy_inplace, dot};
 
 /// Solve `A x = b` with right-preconditioned BiCGStab, `x0 = 0`.
@@ -77,11 +78,9 @@ pub fn bicgstab(
             break;
         }
         alpha = rho / r0v;
-        // s = r - alpha v
-        for i in 0..n {
-            s.data[i] = r[i] - alpha * v[i];
-        }
-        let ss = comm.all_reduce_sum(dot(&s, &s));
+        // s = r - alpha v and <s,s>, fused into one pass over the
+        // operands; bitwise identical to the write-loop + dot pair.
+        let ss = comm.all_reduce_sum(kernels::sub_scaled_norm2sq(&r, alpha, &v, &mut s.data));
         if ss <= tol2 {
             axpy_inplace(alpha, &phat_ext[..n], &mut x);
             rr = ss;
@@ -93,9 +92,9 @@ pub fn bicgstab(
         }
         m.apply(&s, &mut shat_ext.data[..n]);
         a.apply(&mut shat_ext, &mut t);
-        // <t,t> and <t,s> ride one fused round
-        let mut fused = [dot(&t, &t), dot(&t, &s)];
-        comm.all_reduce(&mut fused);
+        // <t,t> and <t,s> ride one fused round; both locals come from
+        // a single pass (`kernels::dot2`).
+        let fused = gdot2(comm, &t, &t, &t, &s);
         let (tt, ts) = (fused[0], fused[1]);
         if tt == 0.0 {
             breakdown = true;
@@ -105,11 +104,8 @@ pub fn bicgstab(
         // x += alpha * phat + omega * shat
         axpy_inplace(alpha, &phat_ext[..n], &mut x);
         axpy_inplace(omega, &shat_ext[..n], &mut x);
-        // r = s - omega t
-        for i in 0..n {
-            r.data[i] = s[i] - omega * t[i];
-        }
-        rr = comm.all_reduce_sum(dot(&r, &r));
+        // r = s - omega t and <r,r>, fused into one pass.
+        rr = comm.all_reduce_sum(kernels::sub_scaled_norm2sq(&s, omega, &t, &mut r.data));
         iters += 1;
         if opts.record_history {
             history.push(rr.sqrt());

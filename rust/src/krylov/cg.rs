@@ -14,7 +14,7 @@
 //! Under `NullComm` the [`cg`] body executes the exact FP schedule of
 //! the pre-unification serial CG (see `tests/krylov_equivalence.rs`).
 
-use super::{Communicator, LinearOperator};
+use super::{gdot2, gdot3, Communicator, LinearOperator};
 use crate::iterative::{IterOpts, IterResult, Precond};
 use crate::metrics::MemTracker;
 use crate::util::dot;
@@ -45,9 +45,10 @@ pub fn cg(
     r.data.copy_from_slice(b_own); // r = b - A*0
     m.apply(&r, &mut z);
     p_ext.data[..n].copy_from_slice(&z);
-    // <r,z> and <r,r> ride one fused setup round
-    let mut fused = [dot(&r, &z), dot(&r, &r)];
-    comm.all_reduce(&mut fused);
+    // <r,z> and <r,r> ride one fused setup round; gdot2 computes both
+    // locals in a single pass over the operands, bitwise identical to
+    // two separate `dot` calls.
+    let fused = gdot2(comm, &r, &z, &r, &r);
     let (mut rz, mut rr) = (fused[0], fused[1]);
     let tol2 = opts.tol * opts.tol;
 
@@ -78,9 +79,10 @@ pub fn cg(
         // <r,z> and <r,r> are available at the same point of the
         // recurrence, so they ride ONE fused all_reduce (a packed
         // 2-scalar NCCL buffer) — Algorithm 1's "two all_reduce per
-        // iteration" is exactly <p,Ap> plus this fused pair.
-        let mut fused = [dot(&r, &z), dot(&r, &r)];
-        comm.all_reduce(&mut fused);
+        // iteration" is exactly <p,Ap> plus this fused pair.  The
+        // locals come from one fused pass (`kernels::dot2`), which is
+        // bitwise identical to two separate `dot` calls.
+        let fused = gdot2(comm, &r, &z, &r, &r);
         let (rz_new, rr_new) = (fused[0], fused[1]);
         let beta = rz_new / rz;
         for i in 0..n {
@@ -138,12 +140,7 @@ pub fn cg_pipelined(
     m.apply(&r, &mut u_ext.data[..n]);
     a.apply(&mut u_ext, &mut w);
 
-    let mut fused = [
-        dot(&r, &u_ext[..n]),
-        dot(&w, &u_ext[..n]),
-        dot(&r, &r),
-    ];
-    comm.all_reduce(&mut fused);
+    let fused = gdot3(comm, &r, &u_ext[..n], &w, &u_ext[..n], &r, &r);
     let (mut gamma, delta0, mut rr) = (fused[0], fused[1], fused[2]);
 
     let mut alpha = if delta0 > 0.0 { gamma / delta0 } else { 0.0 };
@@ -172,13 +169,10 @@ pub fn cg_pipelined(
         m.apply(&r, &mut u_ext.data[..n]);
         // w = A u (one halo exchange when distributed)
         a.apply(&mut u_ext, &mut w);
-        // ONE fused reduction: gamma_new = <r,u>, delta = <w,u>, rr
-        let mut fused = [
-            dot(&r, &u_ext[..n]),
-            dot(&w, &u_ext[..n]),
-            dot(&r, &r),
-        ];
-        comm.all_reduce(&mut fused);
+        // ONE fused reduction: gamma_new = <r,u>, delta = <w,u>, rr —
+        // all three locals from a single pass (`kernels::dot3`),
+        // bitwise identical to three separate `dot` calls.
+        let fused = gdot3(comm, &r, &u_ext[..n], &w, &u_ext[..n], &r, &r);
         let (gamma_new, delta, rr_new) = (fused[0], fused[1], fused[2]);
         rr = rr_new;
         iters += 1;

@@ -53,7 +53,7 @@ pub fn gmres(
 
     'outer: while beta > opts.tol && total_iters < opts.max_iters {
         basis.clear();
-        let mut v0 = r.data.clone();
+        let mut v0 = r.data.to_vec();
         for vi in v0.iter_mut() {
             *vi /= beta;
         }
@@ -83,7 +83,7 @@ pub fn gmres(
             }
             h[k + 1][k] = gnorm(comm, &w);
             if h[k + 1][k] > 1e-300 {
-                let mut vk1 = w.data.clone();
+                let mut vk1 = w.data.to_vec();
                 for vi in vk1.iter_mut() {
                     *vi /= h[k + 1][k];
                 }

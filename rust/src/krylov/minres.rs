@@ -45,7 +45,7 @@ pub fn minres(
     if beta1 < 0.0 {
         // preconditioner not SPD
         return IterResult {
-            x: x.data.clone(),
+            x: x.data.to_vec(),
             iters: 0,
             residual: gdot(comm, b_own, b_own).sqrt(),
             converged: false,
@@ -55,7 +55,7 @@ pub fn minres(
     }
     if beta1 == 0.0 {
         return IterResult {
-            x: x.data.clone(),
+            x: x.data.to_vec(),
             iters: 0,
             residual: 0.0,
             converged: true,
@@ -156,7 +156,7 @@ pub fn minres(
 
     let converged = converged || residual <= opts.tol * 10.0;
     IterResult {
-        x: x.data.clone(),
+        x: x.data.to_vec(),
         iters,
         residual,
         converged,

@@ -48,6 +48,7 @@ pub use lobpcg::lobpcg;
 pub use minres::minres;
 pub use op::{LinearOperator, SerialOp, ShiftedOp, TransposedOp};
 
+use crate::sparse::kernels;
 use crate::util::dot;
 
 /// Globally-reduced inner product of two owned-layout slices: ONE
@@ -62,4 +63,35 @@ pub fn gdot(comm: &dyn Communicator, a: &[f64], b: &[f64]) -> f64 {
 #[inline]
 pub fn gnorm(comm: &dyn Communicator, x: &[f64]) -> f64 {
     gdot(comm, x, x).sqrt()
+}
+
+/// Two fused global inner products — ONE local pass over the operands
+/// ([`kernels::dot2`]) and ONE packed reduction round.  Local results
+/// are bitwise identical to two [`gdot`] calls, so adopting this in a
+/// kernel changes neither its FP schedule nor its round count (the
+/// packed round was already the contract for co-available scalars).
+#[inline]
+pub fn gdot2(comm: &dyn Communicator, x0: &[f64], y0: &[f64], x1: &[f64], y1: &[f64]) -> [f64; 2] {
+    let mut fused = kernels::dot2(x0, y0, x1, y1);
+    comm.all_reduce(&mut fused);
+    fused
+}
+
+/// Three fused global inner products (the pipelined-CG triple): one
+/// local pass ([`kernels::dot3`]), one packed reduction round, bitwise
+/// identical locals to three [`gdot`] calls.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn gdot3(
+    comm: &dyn Communicator,
+    x0: &[f64],
+    y0: &[f64],
+    x1: &[f64],
+    y1: &[f64],
+    x2: &[f64],
+    y2: &[f64],
+) -> [f64; 3] {
+    let mut fused = kernels::dot3(x0, y0, x1, y1, x2, y2);
+    comm.all_reduce(&mut fused);
+    fused
 }

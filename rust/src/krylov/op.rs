@@ -43,6 +43,34 @@ pub trait LinearOperator {
     fn apply_adjoint(&self, _gy_own: &[f64], _gx_own: &mut [f64]) {
         panic!("apply_adjoint not implemented for this operator"); // rsla-lint: allow(L1, documented contract mirroring LinOp::apply_t)
     }
+
+    /// Block apply: `Y = A X` for `k` interleaved owned-layout columns
+    /// (`x_own[i * k + j]` is row `i` of column `j`; `x_own` has length
+    /// `n_own * k`, `y_own` length `n_own * k`).
+    ///
+    /// The default loops columns through [`LinearOperator::apply`]
+    /// (allocating per-call scratch), so every operator supports it;
+    /// operators with a fused multi-vector kernel override it to make
+    /// one matrix pass serve all `k` columns (LOBPCG blocks, the
+    /// engine's multi-RHS fusion).  Overrides must keep each column
+    /// bitwise identical to a scalar `apply` on that column — callers
+    /// rely on block/scalar interchangeability.
+    fn apply_block(&self, x_own: &[f64], y_own: &mut [f64], k: usize) {
+        let n = self.n_own();
+        debug_assert_eq!(x_own.len(), n * k);
+        debug_assert_eq!(y_own.len(), n * k);
+        let mut col_ext = vec![0.0; self.n_ext()];
+        let mut col_y = vec![0.0; n];
+        for j in 0..k {
+            for (i, slot) in col_ext[..n].iter_mut().enumerate() {
+                *slot = x_own[i * k + j];
+            }
+            self.apply(&mut col_ext, &mut col_y);
+            for (i, &yi) in col_y.iter().enumerate() {
+                y_own[i * k + j] = yi;
+            }
+        }
+    }
 }
 
 /// A serial CSR matrix is a [`LinearOperator`] with an empty halo.
@@ -57,6 +85,12 @@ impl LinearOperator for Csr {
 
     fn apply_adjoint(&self, gy_own: &[f64], gx_own: &mut [f64]) {
         self.spmv_t(gy_own, gx_own);
+    }
+
+    /// Fused multi-RHS SpMV: one pass over `vals`/`indices` for all `k`
+    /// columns, each column bitwise identical to a scalar [`Csr::spmv`].
+    fn apply_block(&self, x_own: &[f64], y_own: &mut [f64], k: usize) {
+        crate::sparse::kernels::spmv_block(self, x_own, y_own, k);
     }
 }
 
@@ -156,6 +190,23 @@ mod tests {
         assert_eq!(y1, sys.matrix.matvec(&x));
         assert_eq!(LinearOperator::n_own(&sys.matrix), 64);
         assert_eq!(LinearOperator::n_ext(&sys.matrix), 64);
+    }
+
+    #[test]
+    fn apply_block_override_is_bitwise_the_default_column_loop() {
+        let sys = poisson2d(7, None);
+        let a = &sys.matrix;
+        let n = a.nrows;
+        let mut rng = Prng::new(5);
+        for k in [1usize, 3, 8] {
+            let x = rng.normal_vec(n * k);
+            let mut fused = vec![0.0; n * k];
+            a.apply_block(&x, &mut fused, k);
+            // SerialOp takes the default (column-looped) path
+            let mut looped = vec![0.0; n * k];
+            SerialOp(a).apply_block(&x, &mut looped, k);
+            assert_eq!(fused, looped, "k={k}");
+        }
     }
 
     #[test]

@@ -106,7 +106,7 @@ fn main() {
                  usage: rsla <backends|explain|solve|serve-sim|dist> [--key value]\n\
                  \x20 backends                      list backends + artifacts\n\
                  \x20 explain --n N [--accel]       dispatch decision for size N\n\
-                 \x20 solve --g G [--backend B] [--accel]\n\
+                 \x20 solve --g G [--backend B] [--accel] [--csr]\n\
                  \x20 serve-sim [--requests N] [--workers W] [--mixed]\n\
                  \x20 dist --g G --ranks P"
             );
@@ -167,10 +167,14 @@ fn cmd_solve(args: &Args) {
     if let Some(be) = args.kv.get("backend") {
         opts.backend = Some(be.clone());
     }
-    let p = Problem {
-        op: Operator::Stencil(&sys.coeffs),
-        b: &b,
+    // --csr assembles the operator instead of staying matrix-free, so
+    // the iterative path runs the roofline format selection
+    let op = if args.flags.contains("csr") {
+        Operator::Csr(&sys.matrix)
+    } else {
+        Operator::Stencil(&sys.coeffs)
     };
+    let p = Problem { op, b: &b };
     let (out, secs) = timed(|| d.solve(&p, &opts));
     match out {
         Ok(out) => println!(
@@ -184,6 +188,12 @@ fn cmd_solve(args: &Args) {
             secs * 1e3
         ),
         Err(e) => println!("solve failed: {e}"),
+    }
+    // the roofline cost model records every per-matrix format decision
+    let reg = rsla::metrics::Registry::global();
+    let (fmt_csr, fmt_sell) = (reg.get("spmv.format.csr"), reg.get("spmv.format.sell"));
+    if fmt_csr + fmt_sell > 0 {
+        println!("spmv format (roofline): csr={fmt_csr} sell={fmt_sell}");
     }
 }
 
@@ -270,6 +280,10 @@ fn cmd_serve_mixed(args: &Args) {
         dispatcher(false),
         EngineConfig {
             workers,
+            // serving mode: generational latency histograms, so the
+            // table's p99 tracks recent traffic instead of being pinned
+            // forever by the cold-start burst
+            hist_window: Some((64, 4)),
             ..Default::default()
         },
     );
@@ -335,6 +349,15 @@ fn cmd_serve_mixed(args: &Args) {
         stats.cache.hits_symbolic,
         stats.cache.misses,
         stats.cache.evictions,
+    );
+    // format decisions land in the engine registry (engine-held
+    // operators) and the process-global one (the backend dispatch
+    // path); report both so no decision goes missing
+    let fmt = |name: &str| engine.metrics.get(name) + rsla::metrics::Registry::global().get(name);
+    println!(
+        "spmv formats (roofline): csr={} sell={} (latency table windowed to the last 256 jobs/kind)",
+        fmt("spmv.format.csr"),
+        fmt("spmv.format.sell"),
     );
     engine.shutdown();
     if failures > 0 {

@@ -7,15 +7,40 @@
 //! read back as the upper edge of the covering bucket — an upper bound
 //! with at most 2x resolution error, which is the right bias for
 //! latency SLO tables (never under-report a tail).
+//!
+//! Two accumulation modes:
+//!
+//! * [`LatencyHist::new`] — infinite horizon: every sample ever
+//!   recorded weighs on every quantile (the right mode for a bench
+//!   that reports one number at the end).
+//! * [`LatencyHist::windowed`] — generational window: samples land in
+//!   the current generation's bucket array; every `window` samples a
+//!   new generation opens and the oldest of `n_windows` generations is
+//!   discarded.  Quantiles aggregate the live generations only, so a
+//!   long-running server's p99 reflects *recent* traffic instead of
+//!   being pinned forever by a cold-start burst.  Rotation is a CAS on
+//!   the epoch counter; the winning thread clears the reclaimed slot.
+//!   `count()` stays lifetime-monotone in both modes.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
 const BUCKETS: usize = 64;
 
-/// A fixed-footprint latency histogram; `record` is wait-free.
+/// A fixed-footprint latency histogram; `record` is wait-free in the
+/// infinite mode and lock-free in the windowed mode (one CAS loop per
+/// generation boundary).
 pub struct LatencyHist {
+    /// Slot-major bucket matrix: bucket `i` of slot `s` lives at
+    /// `s * BUCKETS + i`.  The infinite mode has exactly one slot.
     buckets: Vec<AtomicU64>,
-    count: AtomicU64,
+    /// Per-slot sample counts (the window's total is their sum).
+    slot_counts: Vec<AtomicU64>,
+    /// Lifetime sample count; also the generation sequencer.
+    total: AtomicU64,
+    /// Samples per generation; 0 means infinite horizon.
+    window: u64,
+    /// Current generation number (windowed mode only).
+    epoch: AtomicU64,
 }
 
 impl Default for LatencyHist {
@@ -25,10 +50,27 @@ impl Default for LatencyHist {
 }
 
 impl LatencyHist {
+    /// Infinite-horizon histogram: nothing is ever forgotten.
     pub fn new() -> Self {
+        Self::with_slots(0, 1)
+    }
+
+    /// Generational histogram: quantiles cover at most the last
+    /// `window * n_windows` samples and at least the last
+    /// `window * (n_windows - 1)` (the oldest live generation may be
+    /// mid-fill when reclaimed).  `n_windows` is clamped to >= 2 so a
+    /// rotation never empties the whole histogram at once.
+    pub fn windowed(window: u64, n_windows: usize) -> Self {
+        Self::with_slots(window.max(1), n_windows.max(2))
+    }
+
+    fn with_slots(window: u64, n_slots: usize) -> Self {
         LatencyHist {
-            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
-            count: AtomicU64::new(0),
+            buckets: (0..n_slots * BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            slot_counts: (0..n_slots).map(|_| AtomicU64::new(0)).collect(),
+            total: AtomicU64::new(0),
+            window,
+            epoch: AtomicU64::new(0),
         }
     }
 
@@ -39,28 +81,76 @@ impl LatencyHist {
     }
 
     pub fn record(&self, seconds: f64) {
-        let idx = Self::bucket_of(seconds);
-        // rsla-lint: allow(L1, bucket_of clamps its result to BUCKETS-1)
-        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
-        self.count.fetch_add(1, Ordering::Relaxed);
+        let seq = self.total.fetch_add(1, Ordering::Relaxed);
+        let slot = if self.window == 0 {
+            0
+        } else {
+            let generation = seq / self.window;
+            self.advance_to(generation);
+            (generation % self.slot_counts.len() as u64) as usize
+        };
+        if let Some(b) = self.buckets.get(slot * BUCKETS + Self::bucket_of(seconds)) {
+            b.fetch_add(1, Ordering::Relaxed);
+        }
+        if let Some(c) = self.slot_counts.get(slot) {
+            c.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
+    /// Raise the epoch to `generation`, clearing each reclaimed slot.
+    /// The thread that wins the CAS for a step owns that step's clear,
+    /// so a slot is cleared exactly once per rotation.
+    fn advance_to(&self, generation: u64) {
+        let mut cur = self.epoch.load(Ordering::Acquire);
+        while cur < generation {
+            match self
+                .epoch
+                .compare_exchange(cur, cur + 1, Ordering::AcqRel, Ordering::Acquire)
+            {
+                Ok(_) => {
+                    let s = ((cur + 1) % self.slot_counts.len() as u64) as usize;
+                    for b in self.buckets.iter().skip(s * BUCKETS).take(BUCKETS) {
+                        b.store(0, Ordering::Relaxed);
+                    }
+                    if let Some(c) = self.slot_counts.get(s) {
+                        c.store(0, Ordering::Relaxed);
+                    }
+                    cur += 1;
+                }
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// Lifetime sample count — monotone in both modes (windowing only
+    /// affects which samples weigh on [`quantile`](Self::quantile)).
     pub fn count(&self) -> u64 {
-        self.count.load(Ordering::Relaxed)
+        self.total.load(Ordering::Relaxed)
     }
 
     /// Latency (seconds) below which at least a fraction `q` of the
-    /// recorded samples fall, reported as the covering bucket's upper
-    /// edge.  Returns 0.0 for an empty histogram.
+    /// live samples fall (all samples in the infinite mode, the last
+    /// `n_windows` generations in the windowed mode), reported as the
+    /// covering bucket's upper edge.  Returns 0.0 for an empty window.
     pub fn quantile(&self, q: f64) -> f64 {
-        let total = self.count();
+        let total: u64 = self
+            .slot_counts
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .sum();
         if total == 0 {
             return 0.0;
         }
         let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
         let mut seen = 0u64;
-        for (i, b) in self.buckets.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
+        for i in 0..BUCKETS {
+            seen += self
+                .buckets
+                .iter()
+                .skip(i)
+                .step_by(BUCKETS)
+                .map(|b| b.load(Ordering::Relaxed))
+                .sum::<u64>();
             if seen >= target {
                 // upper edge of bucket i: 2^{i+1} microseconds
                 return 2f64.powi(i as i32 + 1) * 1e-6;
@@ -110,5 +200,53 @@ mod tests {
         h.record(1e9);
         assert_eq!(h.count(), 3);
         assert!(h.quantile(1.0).is_finite());
+    }
+
+    #[test]
+    fn windowed_histogram_forgets_old_traffic() {
+        let h = LatencyHist::windowed(100, 2);
+        // a slow cold-start burst fills both generations
+        for _ in 0..200 {
+            h.record(50e-3);
+        }
+        assert!(h.quantile(0.99) >= 50e-3);
+        // four generations of fast traffic rotate the slow ones out
+        for _ in 0..400 {
+            h.record(100e-6);
+        }
+        assert_eq!(h.count(), 600); // lifetime count stays monotone
+        let p99 = h.quantile(0.99);
+        assert!(p99 <= 400e-6, "p99 = {p99} still pinned by old traffic");
+    }
+
+    #[test]
+    fn rotation_reclaims_exactly_the_oldest_generation() {
+        let h = LatencyHist::windowed(10, 3);
+        // generation 0: slow; generations 1-2: fast — all three live
+        for _ in 0..10 {
+            h.record(50e-3);
+        }
+        for _ in 0..20 {
+            h.record(100e-6);
+        }
+        assert!(h.quantile(1.0) >= 50e-3);
+        // the 31st sample opens generation 3, reclaiming generation 0's
+        // slot: the max drops to the fast mode in one step
+        h.record(100e-6);
+        assert!(h.quantile(1.0) <= 400e-6);
+        assert_eq!(h.count(), 31);
+    }
+
+    #[test]
+    fn windowed_mode_with_no_rotation_matches_infinite() {
+        let inf = LatencyHist::new();
+        let win = LatencyHist::windowed(1000, 4);
+        for s in [100e-6, 2e-3, 50e-3, 1e-6] {
+            inf.record(s);
+            win.record(s);
+        }
+        for q in [0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(inf.quantile(q), win.quantile(q));
+        }
     }
 }

@@ -10,6 +10,8 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
+use crate::sparse::align::AlignedVec;
+
 /// Current/peak byte counter; clone-shareable across threads.
 #[derive(Clone, Default)]
 pub struct MemTracker {
@@ -51,11 +53,14 @@ impl MemTracker {
             .store(self.current(), Ordering::Relaxed);
     }
 
-    /// Allocate a tracked, zero-initialized f64 buffer.
+    /// Allocate a tracked, zero-initialized, 64-byte-aligned f64
+    /// buffer.  Solver work vectors all come from here, which is how
+    /// the kernel layer's alignment contract (`docs/kernels.md`)
+    /// reaches every Krylov loop without per-solver changes.
     pub fn buf(&self, n: usize) -> TrackedBuf {
         self.add((n * 8) as u64);
         TrackedBuf {
-            data: vec![0.0; n],
+            data: AlignedVec::zeroed(n),
             tracker: self.clone(),
         }
     }
@@ -70,19 +75,20 @@ impl MemTracker {
     }
 }
 
-/// An owned f64 buffer whose bytes are accounted until drop.
+/// An owned, 64-byte-aligned f64 buffer whose bytes are accounted
+/// until drop.
 pub struct TrackedBuf {
-    pub data: Vec<f64>,
+    pub data: AlignedVec<f64>,
     tracker: MemTracker,
 }
 
 impl TrackedBuf {
-    /// Extract the underlying vector, releasing the accounted bytes
-    /// (the buffer is returned to the caller and no longer counted as
-    /// solver working set).
+    /// Extract the contents as a plain vector, releasing the accounted
+    /// bytes (the buffer is returned to the caller and no longer
+    /// counted as solver working set).
     pub fn take(mut self) -> Vec<f64> {
         self.tracker.sub((self.data.len() * 8) as u64);
-        std::mem::take(&mut self.data)
+        std::mem::take(&mut self.data).to_vec()
     }
 }
 
@@ -158,6 +164,19 @@ mod tests {
         assert_eq!(t.peak(), 12000);
         t.reset_peak();
         assert_eq!(t.peak(), 0);
+    }
+
+    #[test]
+    fn buffers_are_64_byte_aligned_and_take_releases() {
+        let t = MemTracker::new();
+        let mut b = t.buf(33);
+        assert_eq!(b.as_ptr() as usize % 64, 0);
+        b[32] = 1.5;
+        assert_eq!(t.current(), 33 * 8);
+        let v = b.take();
+        assert_eq!(v.len(), 33);
+        assert_eq!(v[32], 1.5);
+        assert_eq!(t.current(), 0);
     }
 
     #[test]

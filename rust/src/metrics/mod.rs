@@ -40,6 +40,15 @@ impl Registry {
         Self::default()
     }
 
+    /// The process-global registry, for layers with no engine handle to
+    /// thread one through (the backend dispatch path records its SpMV
+    /// format choices here; `rsla solve` reads them back).  Engine
+    /// instances still carry their own registries.
+    pub fn global() -> &'static Registry {
+        static GLOBAL: std::sync::OnceLock<Registry> = std::sync::OnceLock::new();
+        GLOBAL.get_or_init(Registry::new)
+    }
+
     pub fn incr(&self, name: &str, by: u64) {
         let mut m = lock_recover(&self.counters);
         *m.entry(name.to_string()).or_insert(0) += by;

@@ -59,6 +59,11 @@ pub const FACTOR_CACHE_SHARD_LOCAL_HIT: &str = "factor_cache.shard_local_hit";
 /// (a scheduling failure, not a cold matrix).
 pub const FACTOR_CACHE_CROSS_SHARD_MISS: &str = "factor_cache.cross_shard_miss";
 
+/// Matrices the roofline cost model kept on the CSR SpMV kernel.
+pub const SPMV_FORMAT_CSR: &str = "spmv.format.csr";
+/// Matrices the roofline cost model converted to SELL-C-σ.
+pub const SPMV_FORMAT_SELL: &str = "spmv.format.sell";
+
 /// Base for per-backend refusal counters (`dispatch.refused.{backend}`).
 pub const DISPATCH_REFUSED: &str = "dispatch.refused";
 /// Base for per-backend success counters (`dispatch.solved.{backend}`).
@@ -89,6 +94,8 @@ pub const ALL: &[&str] = &[
     FACTOR_CACHE_REFACTOR_FALLBACK,
     FACTOR_CACHE_SHARD_LOCAL_HIT,
     FACTOR_CACHE_CROSS_SHARD_MISS,
+    SPMV_FORMAT_CSR,
+    SPMV_FORMAT_SELL,
     DISPATCH_REFUSED,
     DISPATCH_SOLVED,
     DISPATCH_FAILED,

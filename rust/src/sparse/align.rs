@@ -1,0 +1,202 @@
+//! 64-byte-aligned storage for the vectorized kernel layer.
+//!
+//! Every hot-path array in the SpMV/axpy/dot layer — matrix value and
+//! index arrays ([`super::sell::Sell`]) and solver work vectors
+//! (`metrics::mem::TrackedBuf`) — lives in an [`AlignedVec`]: a typed
+//! view over a `Vec` of 64-byte [`Align64`] blocks.  64 bytes is one
+//! cache line and one AVX-512 register, so kernels never straddle a
+//! line on their first lane and the compiler's vector loads start
+//! aligned regardless of allocator behavior.
+//!
+//! The idiom (an `align(64)` newtype over a byte block, reinterpreted
+//! as the element type) follows neural-reversi's `Align64` buffers;
+//! see `docs/kernels.md#alignment-contract` for the guarantees kernels
+//! may assume.
+
+use std::marker::PhantomData;
+use std::ops::{Deref, DerefMut};
+
+/// One cache line / AVX-512 lane group: 64 bytes at 64-byte alignment.
+#[derive(Clone, Copy)]
+#[repr(C, align(64))]
+pub struct Align64(pub [u8; 64]);
+
+impl Align64 {
+    pub const ZERO: Align64 = Align64([0u8; 64]);
+}
+
+mod sealed {
+    /// Element types an [`super::AlignedVec`] may hold: `Copy` types
+    /// whose size divides 64 and for which the all-zero bit pattern is
+    /// a valid value (so `zeroed` is sound).
+    pub trait Sealed: Copy + 'static {}
+    impl Sealed for f64 {}
+    impl Sealed for usize {}
+}
+
+/// Plain-old-data marker, sealed to `f64` and `usize` — the only two
+/// element types the kernel layer stores.
+pub trait Pod: sealed::Sealed {}
+impl Pod for f64 {}
+impl Pod for usize {}
+
+/// A growable-by-construction, 64-byte-aligned buffer of `T`.
+///
+/// Unlike `Vec<T>` (whose allocation is only `align_of::<T>()`-aligned,
+/// 8 bytes for `f64`), the backing store here is a `Vec<Align64>`, so
+/// `as_slice().as_ptr()` is always 64-byte aligned.  The buffer is
+/// fixed-length after construction ([`AlignedVec::zeroed`] /
+/// [`AlignedVec::from_slice`]); mutation happens through the `[T]`
+/// deref, which is all the kernels need.
+#[derive(Clone)]
+pub struct AlignedVec<T: Pod> {
+    blocks: Vec<Align64>,
+    len: usize,
+    _marker: PhantomData<T>,
+}
+
+impl<T: Pod> AlignedVec<T> {
+    const fn per_block() -> usize {
+        64 / std::mem::size_of::<T>()
+    }
+
+    /// An all-zero buffer of `len` elements (zero bytes are a valid
+    /// `T` for every `Pod` type — that is what the seal guarantees).
+    pub fn zeroed(len: usize) -> Self {
+        let blocks = vec![Align64::ZERO; len.div_ceil(Self::per_block())];
+        AlignedVec {
+            blocks,
+            len,
+            _marker: PhantomData,
+        }
+    }
+
+    /// Copy of `s` in aligned storage.
+    pub fn from_slice(s: &[T]) -> Self {
+        let mut v = Self::zeroed(s.len());
+        v.as_mut_slice().copy_from_slice(s);
+        v
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[T] {
+        // SAFETY: the backing Vec<Align64> holds at least
+        // len.div_ceil(per_block()) * 64 bytes >= len * size_of::<T>(),
+        // at alignment 64 >= align_of::<T>(); T is sealed Pod, so every
+        // byte pattern in the store is a valid T.  An empty Vec's
+        // dangling pointer is aligned to align_of::<Align64>() = 64,
+        // which satisfies from_raw_parts for len == 0.
+        unsafe { std::slice::from_raw_parts(self.blocks.as_ptr() as *const T, self.len) }
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [T] {
+        // SAFETY: as for `as_slice`; &mut self gives unique access.
+        unsafe { std::slice::from_raw_parts_mut(self.blocks.as_mut_ptr() as *mut T, self.len) }
+    }
+}
+
+impl<T: Pod> Default for AlignedVec<T> {
+    fn default() -> Self {
+        AlignedVec {
+            blocks: Vec::new(),
+            len: 0,
+            _marker: PhantomData,
+        }
+    }
+}
+
+impl<T: Pod> Deref for AlignedVec<T> {
+    type Target = [T];
+    #[inline]
+    fn deref(&self) -> &[T] {
+        self.as_slice()
+    }
+}
+
+impl<T: Pod> DerefMut for AlignedVec<T> {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut [T] {
+        self.as_mut_slice()
+    }
+}
+
+impl<T: Pod + std::fmt::Debug> std::fmt::Debug for AlignedVec<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.as_slice().fmt(f)
+    }
+}
+
+impl<T: Pod + PartialEq> PartialEq for AlignedVec<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeroed_is_zero_and_64_byte_aligned() {
+        let v: AlignedVec<f64> = AlignedVec::zeroed(1003);
+        assert_eq!(v.len(), 1003);
+        assert!(v.iter().all(|&x| x == 0.0));
+        assert_eq!(v.as_slice().as_ptr() as usize % 64, 0);
+
+        let w: AlignedVec<usize> = AlignedVec::zeroed(7);
+        assert_eq!(w.len(), 7);
+        assert!(w.iter().all(|&x| x == 0));
+        assert_eq!(w.as_slice().as_ptr() as usize % 64, 0);
+    }
+
+    #[test]
+    fn from_slice_round_trips_and_compares() {
+        let src: Vec<f64> = (0..37).map(|i| (i as f64).sin()).collect();
+        let v = AlignedVec::from_slice(&src);
+        assert_eq!(v.as_slice(), &src[..]);
+        assert_eq!(v, AlignedVec::from_slice(&src));
+        let u = v.clone();
+        assert_eq!(u, v);
+        assert_eq!(u.as_slice().as_ptr() as usize % 64, 0);
+    }
+
+    #[test]
+    fn deref_mut_writes_through() {
+        let mut v: AlignedVec<f64> = AlignedVec::zeroed(9);
+        v[4] = 2.5;
+        v[8] = -1.0;
+        assert_eq!(v[4], 2.5);
+        assert_eq!(v.iter().sum::<f64>(), 1.5);
+        v.fill(3.0);
+        assert!(v.iter().all(|&x| x == 3.0));
+    }
+
+    #[test]
+    fn empty_and_take_via_default() {
+        let mut v = AlignedVec::from_slice(&[1.0f64, 2.0]);
+        let taken = std::mem::take(&mut v);
+        assert_eq!(taken.as_slice(), &[1.0, 2.0]);
+        assert!(v.is_empty());
+        assert_eq!(v.as_slice(), &[] as &[f64]);
+    }
+
+    #[test]
+    fn odd_lengths_do_not_bleed_between_blocks() {
+        // 9 f64s span two Align64 blocks; writes at the seam stay put.
+        let mut v: AlignedVec<f64> = AlignedVec::zeroed(9);
+        v[7] = 7.0;
+        v[8] = 8.0;
+        assert_eq!(&v[6..], &[0.0, 7.0, 8.0]);
+    }
+}

@@ -1,0 +1,378 @@
+//! Roofline-style cost model: pick CSR or SELL-C-σ per matrix from its
+//! row-length statistics, before any conversion work is spent.
+//!
+//! SpMV is bandwidth-bound on every matrix this crate serves, so the
+//! model compares *bytes moved per multiply* instead of FLOPs (the
+//! roofline's memory-side axis; the Python prototype in
+//! `python/compile/kernels/roofline.py` does the same for the Pallas
+//! kernels).  Per stored entry both formats stream 16 bytes
+//! (`f64` value + index); they differ in overhead:
+//!
+//! * **CSR** pays a per-ROW cost — the `indptr` reads plus the short-row
+//!   loop startup/drain that stalls the pipeline.  We charge it
+//!   [`ROW_OVERHEAD`] entry-equivalents per row, so its effective
+//!   traffic is `nnz * 16 * (1 + ROW_OVERHEAD / mean_row_len)`.
+//! * **SELL-C-σ** pays a per-PADDING cost — every padded slot streams
+//!   16 dead bytes: `padded_nnz * 16 = nnz * 16 / occupancy`.
+//!
+//! SELL wins iff `1 / occ < 1 + ROW_OVERHEAD / mean`, i.e. iff
+//!
+//! ```text
+//!     occupancy > mean / (mean + ROW_OVERHEAD)
+//! ```
+//!
+//! — high-occupancy matrices (regular stencils, bounded-degree graphs)
+//! convert; long-tailed ones (power-law graphs, a few dense rows that
+//! survive even the σ-window sort) stay CSR, where padding would swamp
+//! the per-row saving.  Occupancy is computed by an exact dry run over
+//! the row lengths (the σ-window sort on lengths only — no entry
+//! movement), so the decision sees exactly the padding the conversion
+//! would create.  Thresholds and the derivation are documented in
+//! `docs/kernels.md#cost-model`.
+//!
+//! Every decision is recorded in the [`Registry`]
+//! (`spmv.format.csr` / `spmv.format.sell`), so production output
+//! (`rsla solve`, `serve-sim`) can report the chosen format per
+//! pattern, not just the benches.
+
+use super::csr::Csr;
+use super::kernels;
+use super::sell::{Sell, DEFAULT_CHUNK, DEFAULT_SIGMA};
+use crate::krylov::LinearOperator;
+use crate::metrics::{names, Registry};
+
+/// Per-row overhead CSR is charged, in stored-entry equivalents: the
+/// `indptr` access plus loop startup/drain.  Calibrated against the
+/// `spmv_roofline` bench (short-row matrices sit near the break-even
+/// this predicts); see `docs/kernels.md#cost-model` before changing.
+pub const ROW_OVERHEAD: f64 = 4.0;
+
+/// Row-length statistics of a CSR matrix, the cost model's input.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RowStats {
+    pub nrows: usize,
+    pub nnz: usize,
+    pub min_len: usize,
+    pub max_len: usize,
+    /// Mean row length (0.0 for an empty matrix).
+    pub mean: f64,
+    /// Coefficient of variation of row length (stddev / mean).
+    pub cv: f64,
+}
+
+/// One pass over `indptr`.
+pub fn row_stats(a: &Csr) -> RowStats {
+    let nrows = a.nrows;
+    let nnz = a.nnz();
+    let mut min_len = usize::MAX;
+    let mut max_len = 0usize;
+    let mut sum_sq = 0.0f64;
+    for w in a.indptr.windows(2) {
+        let len = w[1] - w[0];
+        min_len = min_len.min(len);
+        max_len = max_len.max(len);
+        sum_sq += (len * len) as f64;
+    }
+    if nrows == 0 {
+        min_len = 0;
+    }
+    let mean = if nrows == 0 {
+        0.0
+    } else {
+        nnz as f64 / nrows as f64
+    };
+    let var = if nrows == 0 {
+        0.0
+    } else {
+        (sum_sq / nrows as f64 - mean * mean).max(0.0)
+    };
+    let cv = if mean > 0.0 { var.sqrt() / mean } else { 0.0 };
+    RowStats {
+        nrows,
+        nnz,
+        min_len,
+        max_len,
+        mean,
+        cv,
+    }
+}
+
+/// Exact SELL-C-σ occupancy (nnz / padded-nnz) the conversion would
+/// produce, from row lengths alone: the σ-window sort runs on lengths,
+/// widths accumulate per chunk, no entries move.
+pub fn sell_occupancy(a: &Csr, chunk: usize, sigma: usize) -> f64 {
+    let chunk = chunk.max(1);
+    let sigma = sigma.max(1);
+    let mut lens: Vec<usize> = a.indptr.windows(2).map(|w| w[1] - w[0]).collect();
+    if sigma > 1 {
+        for win in lens.chunks_mut(sigma) {
+            win.sort_unstable_by(|x, y| y.cmp(x));
+        }
+    }
+    let mut padded = 0usize;
+    for chunk_rows in lens.chunks(chunk) {
+        let width = chunk_rows.iter().copied().max().unwrap_or(0);
+        padded += width * chunk;
+    }
+    if padded == 0 {
+        1.0
+    } else {
+        a.nnz() as f64 / padded as f64
+    }
+}
+
+/// The format the cost model picked.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FormatChoice {
+    Csr,
+    Sell,
+}
+
+impl FormatChoice {
+    pub fn name(self) -> &'static str {
+        match self {
+            FormatChoice::Csr => "csr",
+            FormatChoice::Sell => "sell",
+        }
+    }
+}
+
+/// The cost model's decision plus the numbers behind it, for
+/// observability (benches print it; `TunedOp` exposes it).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CostReport {
+    pub choice: FormatChoice,
+    pub stats: RowStats,
+    /// Dry-run SELL occupancy at the default (chunk, σ).
+    pub occupancy: f64,
+    /// `mean / (mean + ROW_OVERHEAD)`: SELL wins above this occupancy.
+    pub threshold: f64,
+    /// Effective bytes per SpMV the model charged each format.
+    pub csr_bytes: f64,
+    pub sell_bytes: f64,
+}
+
+/// Run the cost model at the default (chunk, σ).  Pure decision — no
+/// conversion, no metrics; [`TunedOp::new`] is the recording wrapper.
+pub fn choose_format(a: &Csr) -> CostReport {
+    let stats = row_stats(a);
+    let occupancy = sell_occupancy(a, DEFAULT_CHUNK, DEFAULT_SIGMA);
+    let threshold = if stats.mean > 0.0 {
+        stats.mean / (stats.mean + ROW_OVERHEAD)
+    } else {
+        1.0
+    };
+    let entry_bytes = (stats.nnz * 16) as f64;
+    let csr_bytes = if stats.mean > 0.0 {
+        entry_bytes * (1.0 + ROW_OVERHEAD / stats.mean)
+    } else {
+        0.0
+    };
+    let sell_bytes = if occupancy > 0.0 {
+        entry_bytes / occupancy
+    } else {
+        0.0
+    };
+    let choice = if stats.nnz > 0 && occupancy > threshold {
+        FormatChoice::Sell
+    } else {
+        FormatChoice::Csr
+    };
+    CostReport {
+        choice,
+        stats,
+        occupancy,
+        threshold,
+        csr_bytes,
+        sell_bytes,
+    }
+}
+
+/// A CSR matrix behind the cost model: applies through SELL-C-σ when
+/// the model says the conversion pays for itself, plain CSR otherwise.
+/// Construction records the decision in the [`Registry`]
+/// (`spmv.format.*`), making the per-matrix choice observable in
+/// production output.
+pub struct TunedOp<'a> {
+    csr: &'a Csr,
+    sell: Option<Sell>,
+    pub report: CostReport,
+}
+
+impl<'a> TunedOp<'a> {
+    pub fn new(a: &'a Csr, reg: Option<&Registry>) -> TunedOp<'a> {
+        let report = choose_format(a);
+        let sell = match report.choice {
+            FormatChoice::Sell => Some(Sell::from_csr(a, DEFAULT_CHUNK, DEFAULT_SIGMA)),
+            FormatChoice::Csr => None,
+        };
+        if let Some(reg) = reg {
+            match report.choice {
+                FormatChoice::Csr => reg.incr(names::SPMV_FORMAT_CSR, 1),
+                FormatChoice::Sell => reg.incr(names::SPMV_FORMAT_SELL, 1),
+            }
+        }
+        TunedOp { csr: a, sell, report }
+    }
+
+    /// Extra resident bytes the tuned form holds beyond the CSR it
+    /// wraps (the SELL copy), for memory accounting.
+    pub fn extra_bytes(&self) -> u64 {
+        match &self.sell {
+            Some(s) => (s.padded_nnz() * 16 + (s.nrows + s.nchunks() * 2) * 8) as u64,
+            None => 0,
+        }
+    }
+
+    pub fn format(&self) -> FormatChoice {
+        self.report.choice
+    }
+}
+
+impl LinearOperator for TunedOp<'_> {
+    fn n_own(&self) -> usize {
+        self.csr.nrows
+    }
+
+    fn apply(&self, x_ext: &mut [f64], y_own: &mut [f64]) {
+        match &self.sell {
+            Some(s) => s.spmv(x_ext, y_own),
+            None => self.csr.spmv(x_ext, y_own),
+        }
+    }
+
+    fn apply_adjoint(&self, gy_own: &[f64], gx_own: &mut [f64]) {
+        match &self.sell {
+            Some(s) => s.spmv_t(gy_own, gx_own),
+            None => self.csr.spmv_t(gy_own, gx_own),
+        }
+    }
+
+    fn apply_block(&self, x_own: &[f64], y_own: &mut [f64], k: usize) {
+        match &self.sell {
+            Some(s) => s.spmv_block(x_own, y_own, k),
+            None => kernels::spmv_block(self.csr, x_own, y_own, k),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    fn banded(n: usize, per_row: usize) -> Csr {
+        let mut indptr = vec![0usize];
+        let mut indices = Vec::new();
+        let mut vals = Vec::new();
+        for r in 0..n {
+            for d in 0..per_row {
+                let c = (r + d) % n;
+                indices.push(c);
+                vals.push(1.0 + d as f64);
+            }
+            let lo = indptr[r];
+            indices[lo..].sort_unstable();
+            indptr.push(indices.len());
+        }
+        Csr {
+            nrows: n,
+            ncols: n,
+            indptr,
+            indices,
+            vals,
+        }
+        .debug_validate()
+    }
+
+    fn power_law(rng: &mut Prng, n: usize) -> Csr {
+        let mut indptr = vec![0usize];
+        let mut indices = Vec::new();
+        let mut vals = Vec::new();
+        for r in 0..n {
+            // a few hubs with ~n/2 entries, most rows with 1-2
+            let len = if r % 97 == 0 { n / 2 } else { 1 + r % 2 };
+            let mut cols = rng.choose_distinct(n, len.min(n));
+            cols.sort_unstable();
+            for c in cols {
+                indices.push(c);
+                vals.push(rng.normal());
+            }
+            indptr.push(indices.len());
+        }
+        Csr {
+            nrows: n,
+            ncols: n,
+            indptr,
+            indices,
+            vals,
+        }
+        .debug_validate()
+    }
+
+    #[test]
+    fn regular_matrices_pick_sell_skewed_pick_csr() {
+        let reg = Registry::default();
+        let uniform = banded(512, 5);
+        let t = TunedOp::new(&uniform, Some(&reg));
+        assert_eq!(t.format(), FormatChoice::Sell, "{:?}", t.report);
+        assert!(t.extra_bytes() > 0);
+
+        let mut rng = Prng::new(8);
+        let skewed = power_law(&mut rng, 400);
+        let t2 = TunedOp::new(&skewed, Some(&reg));
+        assert_eq!(t2.format(), FormatChoice::Csr, "{:?}", t2.report);
+        assert_eq!(t2.extra_bytes(), 0);
+
+        assert_eq!(reg.get(names::SPMV_FORMAT_SELL), 1);
+        assert_eq!(reg.get(names::SPMV_FORMAT_CSR), 1);
+    }
+
+    #[test]
+    fn poisson_picks_sell_and_occupancy_matches_conversion() {
+        let a = crate::sparse::poisson::poisson2d(16, None).matrix;
+        let report = choose_format(&a);
+        assert_eq!(report.choice, FormatChoice::Sell, "{report:?}");
+        let s = Sell::from_csr(&a, DEFAULT_CHUNK, DEFAULT_SIGMA);
+        assert!((report.occupancy - s.occupancy()).abs() < 1e-12);
+        assert!(report.sell_bytes < report.csr_bytes);
+    }
+
+    #[test]
+    fn tuned_op_applies_like_csr_whatever_it_picked() {
+        let mut rng = Prng::new(9);
+        for a in [banded(300, 7), power_law(&mut rng, 301)] {
+            let t = TunedOp::new(&a, None);
+            let x = rng.normal_vec(a.ncols);
+            let mut x_ext = x.clone();
+            let mut y = vec![0.0; a.nrows];
+            t.apply(&mut x_ext, &mut y);
+            let yref = a.matvec(&x);
+            for (yi, ri) in y.iter().zip(&yref) {
+                assert!((yi - ri).abs() <= 1e-12 * ri.abs().max(1.0));
+            }
+            let mut gx = vec![0.0; a.ncols];
+            t.apply_adjoint(&x, &mut gx);
+            let mut gref = vec![0.0; a.ncols];
+            a.spmv_t(&x, &mut gref);
+            for (gi, ri) in gx.iter().zip(&gref) {
+                assert!((gi - ri).abs() <= 1e-12 * ri.abs().max(1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn empty_matrix_stays_csr() {
+        let a = Csr {
+            nrows: 0,
+            ncols: 0,
+            indptr: vec![0],
+            indices: vec![],
+            vals: vec![],
+        };
+        assert_eq!(choose_format(&a).choice, FormatChoice::Csr);
+        let stats = row_stats(&a);
+        assert_eq!(stats.mean, 0.0);
+        assert_eq!(stats.min_len, 0);
+    }
+}

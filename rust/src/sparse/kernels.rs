@@ -1,0 +1,361 @@
+//! Fused vector and multi-vector kernels for the Krylov hot path.
+//!
+//! Two kernel families live here:
+//!
+//! 1. **Fused reductions with a pinned schedule.**  [`dot2`], [`dot3`]
+//!    and [`sub_scaled_norm2sq`] combine what the solvers previously
+//!    did as separate passes (two/three `util::dot` calls; an axpy-style
+//!    update followed by `dot(out, out)`) into ONE pass over the
+//!    operands — but each logical reduction keeps `util::dot`'s exact
+//!    4-accumulator schedule, so the results are **bitwise identical**
+//!    to the unfused code.  That property is what lets
+//!    CG/pipelined-CG/BiCGStab adopt them without perturbing the FP
+//!    pins in `tests/krylov_equivalence.rs` and the frozen-reference
+//!    trajectory tests.  Do not "optimize" the accumulation order here;
+//!    widen only the un-pinned paths (see [`dot_wide`]).
+//!
+//! 2. **Multi-vector SpMV.**  [`spmv_block`] applies a CSR matrix to
+//!    `k` interleaved right-hand sides in one matrix pass (one read of
+//!    `vals`/`indices` instead of `k`), the kernel behind
+//!    `LinearOperator::apply_block`, LOBPCG block applies, and the
+//!    engine's multi-RHS fused residuals.  Per column it accumulates in
+//!    the same order as the scalar `Csr::spmv`, so column `j` of the
+//!    result is bitwise identical to a scalar pass on column `j`.
+//!
+//! [`dot_wide`] is the runtime-dispatched 8-lane reduction for paths
+//! with no bitwise pin (SELL-C-σ kernels, benches): AVX2-compiled when
+//! the CPU has it, `util::dot` otherwise.  See `docs/kernels.md`.
+
+use super::csr::Csr;
+use crate::util::dot;
+
+/// Two dot products fused into one pass: `[dot(x0, y0), dot(x1, y1)]`.
+///
+/// Bitwise identical to two separate [`crate::util::dot`] calls: each
+/// pair gets its own 4-accumulator set and the per-pair operation
+/// order is exactly `dot`'s.  All four slices must share one length.
+// rsla-lint: no_alloc
+pub fn dot2(x0: &[f64], y0: &[f64], x1: &[f64], y1: &[f64]) -> [f64; 2] {
+    let n = x0.len();
+    debug_assert_eq!(y0.len(), n);
+    debug_assert_eq!(x1.len(), n);
+    debug_assert_eq!(y1.len(), n);
+    let mut a0 = [0.0f64; 4];
+    let mut a1 = [0.0f64; 4];
+    let chunks = n / 4;
+    for i in 0..chunks {
+        let b = i * 4;
+        a0[0] += x0[b] * y0[b];
+        a0[1] += x0[b + 1] * y0[b + 1];
+        a0[2] += x0[b + 2] * y0[b + 2];
+        a0[3] += x0[b + 3] * y0[b + 3];
+        a1[0] += x1[b] * y1[b];
+        a1[1] += x1[b + 1] * y1[b + 1];
+        a1[2] += x1[b + 2] * y1[b + 2];
+        a1[3] += x1[b + 3] * y1[b + 3];
+    }
+    let mut s0 = a0[0] + a0[1] + a0[2] + a0[3];
+    let mut s1 = a1[0] + a1[1] + a1[2] + a1[3];
+    for i in chunks * 4..n {
+        s0 += x0[i] * y0[i];
+        s1 += x1[i] * y1[i];
+    }
+    [s0, s1]
+}
+
+/// Three dot products fused into one pass (the pipelined-CG triple).
+///
+/// Bitwise identical to three separate [`crate::util::dot`] calls; see
+/// [`dot2`] for the schedule contract.
+// rsla-lint: no_alloc
+pub fn dot3(
+    x0: &[f64],
+    y0: &[f64],
+    x1: &[f64],
+    y1: &[f64],
+    x2: &[f64],
+    y2: &[f64],
+) -> [f64; 3] {
+    let n = x0.len();
+    debug_assert_eq!(y0.len(), n);
+    debug_assert_eq!(x1.len(), n);
+    debug_assert_eq!(y1.len(), n);
+    debug_assert_eq!(x2.len(), n);
+    debug_assert_eq!(y2.len(), n);
+    let mut a0 = [0.0f64; 4];
+    let mut a1 = [0.0f64; 4];
+    let mut a2 = [0.0f64; 4];
+    let chunks = n / 4;
+    for i in 0..chunks {
+        let b = i * 4;
+        a0[0] += x0[b] * y0[b];
+        a0[1] += x0[b + 1] * y0[b + 1];
+        a0[2] += x0[b + 2] * y0[b + 2];
+        a0[3] += x0[b + 3] * y0[b + 3];
+        a1[0] += x1[b] * y1[b];
+        a1[1] += x1[b + 1] * y1[b + 1];
+        a1[2] += x1[b + 2] * y1[b + 2];
+        a1[3] += x1[b + 3] * y1[b + 3];
+        a2[0] += x2[b] * y2[b];
+        a2[1] += x2[b + 1] * y2[b + 1];
+        a2[2] += x2[b + 2] * y2[b + 2];
+        a2[3] += x2[b + 3] * y2[b + 3];
+    }
+    let mut s0 = a0[0] + a0[1] + a0[2] + a0[3];
+    let mut s1 = a1[0] + a1[1] + a1[2] + a1[3];
+    let mut s2 = a2[0] + a2[1] + a2[2] + a2[3];
+    for i in chunks * 4..n {
+        s0 += x0[i] * y0[i];
+        s1 += x1[i] * y1[i];
+        s2 += x2[i] * y2[i];
+    }
+    [s0, s1, s2]
+}
+
+/// Fused update + norm: `out = x - alpha * y`, returning
+/// `dot(out, out)` — the BiCGStab `s = r - alpha v` / `r = s - omega t`
+/// step and its residual reduction in ONE pass instead of a write loop
+/// followed by a re-read.
+///
+/// Bitwise identical to the unfused two-step: the update is computed
+/// elementwise first (same expression as the scalar loop) and the
+/// squares accumulate in [`crate::util::dot`]'s schedule over the
+/// freshly written values.
+// rsla-lint: no_alloc
+pub fn sub_scaled_norm2sq(x: &[f64], alpha: f64, y: &[f64], out: &mut [f64]) -> f64 {
+    let n = x.len();
+    debug_assert_eq!(y.len(), n);
+    debug_assert_eq!(out.len(), n);
+    let mut acc = [0.0f64; 4];
+    let chunks = n / 4;
+    for i in 0..chunks {
+        let b = i * 4;
+        out[b] = x[b] - alpha * y[b];
+        out[b + 1] = x[b + 1] - alpha * y[b + 1];
+        out[b + 2] = x[b + 2] - alpha * y[b + 2];
+        out[b + 3] = x[b + 3] - alpha * y[b + 3];
+        acc[0] += out[b] * out[b];
+        acc[1] += out[b + 1] * out[b + 1];
+        acc[2] += out[b + 2] * out[b + 2];
+        acc[3] += out[b + 3] * out[b + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..n {
+        out[i] = x[i] - alpha * y[i];
+        s += out[i] * out[i];
+    }
+    s
+}
+
+/// 8-accumulator dot body.  Not schedule-compatible with `util::dot`
+/// (different reduction tree) — for un-pinned paths only.
+// rsla-lint: no_alloc
+#[inline(always)]
+fn dot8(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = [0.0f64; 8];
+    let chunks = x.len() / 8;
+    for i in 0..chunks {
+        let b = i * 8;
+        acc[0] += x[b] * y[b];
+        acc[1] += x[b + 1] * y[b + 1];
+        acc[2] += x[b + 2] * y[b + 2];
+        acc[3] += x[b + 3] * y[b + 3];
+        acc[4] += x[b + 4] * y[b + 4];
+        acc[5] += x[b + 5] * y[b + 5];
+        acc[6] += x[b + 6] * y[b + 6];
+        acc[7] += x[b + 7] * y[b + 7];
+    }
+    let mut s = ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    for i in chunks * 8..x.len() {
+        s += x[i] * y[i];
+    }
+    s
+}
+
+/// The same 8-lane body compiled with AVX2 enabled, so 256-bit vector
+/// loads/adds are emitted even when the crate's baseline target does
+/// not assume AVX2.  Callers must have verified the feature at runtime.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot8_avx2(x: &[f64], y: &[f64]) -> f64 {
+    dot8(x, y)
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    use std::sync::OnceLock;
+    static AVX2: OnceLock<bool> = OnceLock::new();
+    *AVX2.get_or_init(|| is_x86_feature_detected!("avx2"))
+}
+
+/// Runtime-dispatched wide dot product: 8 unrolled accumulator lanes
+/// compiled for AVX2 when the CPU supports it (detected once per
+/// process), `util::dot`'s 4-lane loop otherwise.
+///
+/// NOT bitwise compatible with [`crate::util::dot`] on the wide path —
+/// use it only where no FP-schedule pin applies (SELL kernels, benches,
+/// cost probes), never inside the pinned solver recurrences or
+/// `gdot`/`gnorm`.
+pub fn dot_wide(x: &[f64], y: &[f64]) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        // SAFETY: gated on runtime AVX2 detection above.
+        return unsafe { dot8_avx2(x, y) };
+    }
+    dot(x, y)
+}
+
+/// Multi-RHS SpMV: `Y = A X` for `k` interleaved columns, ONE pass over
+/// the matrix.  `x[i * k + j]` is row `i` of column `j`; `x` has length
+/// `ncols * k`, `y` length `nrows * k`.
+///
+/// Per column the accumulation order is exactly [`Csr::spmv`]'s
+/// (entries in row order), so column `j` of `y` is bitwise identical to
+/// a scalar `spmv` on column `j` — the property the engine's
+/// fused-equals-per-request pin relies on.
+pub fn spmv_block(a: &Csr, x: &[f64], y: &mut [f64], k: usize) {
+    debug_assert_eq!(x.len(), a.ncols * k);
+    debug_assert_eq!(y.len(), a.nrows * k);
+    match k {
+        1 => a.spmv(x, y),
+        2 => spmv_block_fixed::<2>(a, x, y),
+        4 => spmv_block_fixed::<4>(a, x, y),
+        8 => spmv_block_fixed::<8>(a, x, y),
+        _ => spmv_block_any(a, x, y, k),
+    }
+}
+
+/// Fixed-width block SpMV: the column accumulator is a `[f64; K]`
+/// register file, so the inner `K`-loop fully unrolls and vectorizes.
+// rsla-lint: no_alloc
+fn spmv_block_fixed<const K: usize>(a: &Csr, x: &[f64], y: &mut [f64]) {
+    for r in 0..a.nrows {
+        let lo = a.indptr[r];
+        let hi = a.indptr[r + 1];
+        let mut acc = [0.0f64; K];
+        for p in lo..hi {
+            let v = a.vals[p];
+            let xb = &x[a.indices[p] * K..a.indices[p] * K + K];
+            for (aj, &xj) in acc.iter_mut().zip(xb) {
+                *aj += v * xj;
+            }
+        }
+        y[r * K..r * K + K].copy_from_slice(&acc);
+    }
+}
+
+/// Arbitrary-width block SpMV, accumulating directly into `y` (no
+/// scratch, same per-column operation order as the fixed path).
+// rsla-lint: no_alloc
+fn spmv_block_any(a: &Csr, x: &[f64], y: &mut [f64], k: usize) {
+    for r in 0..a.nrows {
+        let lo = a.indptr[r];
+        let hi = a.indptr[r + 1];
+        let yr = &mut y[r * k..r * k + k];
+        yr.fill(0.0);
+        for p in lo..hi {
+            let v = a.vals[p];
+            let xb = &x[a.indices[p] * k..a.indices[p] * k + k];
+            for (yj, &xj) in yr.iter_mut().zip(xb) {
+                *yj += v * xj;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{norm2, Prng};
+
+    fn bits(x: f64) -> u64 {
+        x.to_bits()
+    }
+
+    #[test]
+    fn dot2_is_bitwise_two_dots() {
+        let mut rng = Prng::new(11);
+        for n in [0usize, 1, 3, 4, 7, 64, 1003] {
+            let x0 = rng.normal_vec(n);
+            let y0 = rng.normal_vec(n);
+            let x1 = rng.normal_vec(n);
+            let y1 = rng.normal_vec(n);
+            let f = dot2(&x0, &y0, &x1, &y1);
+            assert_eq!(bits(f[0]), bits(dot(&x0, &y0)), "n={n}");
+            assert_eq!(bits(f[1]), bits(dot(&x1, &y1)), "n={n}");
+        }
+    }
+
+    #[test]
+    fn dot3_is_bitwise_three_dots() {
+        let mut rng = Prng::new(12);
+        for n in [0usize, 2, 5, 8, 130, 1001] {
+            let v: Vec<Vec<f64>> = (0..6).map(|_| rng.normal_vec(n)).collect();
+            let f = dot3(&v[0], &v[1], &v[2], &v[3], &v[4], &v[5]);
+            assert_eq!(bits(f[0]), bits(dot(&v[0], &v[1])), "n={n}");
+            assert_eq!(bits(f[1]), bits(dot(&v[2], &v[3])), "n={n}");
+            assert_eq!(bits(f[2]), bits(dot(&v[4], &v[5])), "n={n}");
+        }
+    }
+
+    #[test]
+    fn sub_scaled_norm2sq_is_bitwise_update_then_dot() {
+        let mut rng = Prng::new(13);
+        for n in [0usize, 1, 4, 6, 17, 512, 999] {
+            let x = rng.normal_vec(n);
+            let y = rng.normal_vec(n);
+            let alpha = rng.normal();
+            let mut fused = vec![0.0; n];
+            let ss = sub_scaled_norm2sq(&x, alpha, &y, &mut fused);
+            let unfused: Vec<f64> = x.iter().zip(&y).map(|(xi, yi)| xi - alpha * yi).collect();
+            assert_eq!(fused, unfused, "n={n}");
+            assert_eq!(bits(ss), bits(dot(&unfused, &unfused)), "n={n}");
+        }
+    }
+
+    #[test]
+    fn dot_wide_matches_dot_numerically() {
+        let mut rng = Prng::new(14);
+        for n in [0usize, 5, 8, 9, 64, 1003, 4096] {
+            let x = rng.normal_vec(n);
+            let y = rng.normal_vec(n);
+            let exact = dot(&x, &y);
+            let wide = dot_wide(&x, &y);
+            let scale = norm2(&x) * norm2(&y) + 1.0;
+            assert!(
+                (wide - exact).abs() <= 1e-12 * scale,
+                "n={n}: wide {wide} vs dot {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn spmv_block_columns_are_bitwise_scalar_spmv() {
+        let mut rng = Prng::new(15);
+        let sys = crate::sparse::poisson::poisson2d(9, None);
+        let a = &sys.matrix;
+        for k in [1usize, 2, 3, 4, 5, 8] {
+            let cols: Vec<Vec<f64>> = (0..k).map(|_| rng.normal_vec(a.ncols)).collect();
+            let mut x = vec![0.0; a.ncols * k];
+            for (j, c) in cols.iter().enumerate() {
+                for i in 0..a.ncols {
+                    x[i * k + j] = c[i];
+                }
+            }
+            let mut y = vec![0.0; a.nrows * k];
+            spmv_block(a, &x, &mut y, k);
+            for (j, c) in cols.iter().enumerate() {
+                let mut yref = vec![0.0; a.nrows];
+                a.spmv(c, &mut yref);
+                for i in 0..a.nrows {
+                    assert_eq!(
+                        bits(y[i * k + j]),
+                        bits(yref[i]),
+                        "k={k} col={j} row={i}"
+                    );
+                }
+            }
+        }
+    }
+}

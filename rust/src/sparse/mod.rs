@@ -11,14 +11,26 @@
 //! the paper's evaluation: variable-coefficient 2D Poisson operators and
 //! graph Laplacians.
 
+//! The vectorized kernel layer ([`align`], [`sell`], [`kernels`],
+//! [`cost`]) adds 64-byte-aligned storage, the SELL-C-σ format, fused
+//! multi-vector kernels, and the roofline cost model that picks a
+//! format per matrix — see `docs/kernels.md`.
+
+pub mod align;
 pub mod coo;
+pub mod cost;
 pub mod csr;
 pub mod graphs;
+pub mod kernels;
 pub mod key;
 pub mod pattern;
 pub mod poisson;
+pub mod sell;
 
+pub use align::{Align64, AlignedVec};
 pub use coo::Coo;
+pub use cost::{choose_format, CostReport, FormatChoice, TunedOp};
 pub use csr::Csr;
 pub use key::{PatternKey, StructureKey};
 pub use pattern::Pattern;
+pub use sell::Sell;

@@ -1,0 +1,550 @@
+//! SELL-C-σ — the vectorization-friendly sliced-ELLPACK format.
+//!
+//! Rows are grouped into chunks of height `C`; within each chunk every
+//! row is padded to the chunk's widest row and entries are stored
+//! column-major (`chunk_ptr[c] + j * C + lane`), so an SpMV processes
+//! `C` rows in lock-step with unit-stride loads over `vals`/`indices` —
+//! the layout CPUs vectorize and GPUs coalesce.  To keep the padding
+//! small on irregular matrices, rows are pre-sorted by descending
+//! length within windows of `σ` consecutive rows (a *local* sort, so
+//! locality of the original ordering survives); `σ = 1` is the unsorted
+//! degenerate case (classic ELLPACK when `C` spans all rows, see
+//! [`Sell::ell`]).
+//!
+//! Value/index arrays live in 64-byte [`AlignedVec`] storage
+//! (`docs/kernels.md#alignment-contract`).  Padding entries are
+//! `(val = 0.0, index = 0)`: the gather they feed contributes `+0.0`
+//! per padded slot, so per-row results match the CSR kernel exactly up
+//! to `-0.0`/non-finite edge cases (covered by the parity property
+//! tests in `tests/sell_parity.rs`, which pin 1-ulp-scale agreement).
+//!
+//! Whether a given matrix is worth converting is the cost model's call
+//! ([`super::cost`]): SELL wins when occupancy (nnz / padded-nnz) is
+//! high, CSR when padding would swamp the bandwidth saving.
+
+use super::align::AlignedVec;
+use super::csr::Csr;
+use crate::error::{Error, Result};
+
+/// Default chunk height: 8 f64 lanes = one cache line per column step.
+pub const DEFAULT_CHUNK: usize = 8;
+/// Default sort window: local enough to keep x-gather locality.
+pub const DEFAULT_SIGMA: usize = 64;
+
+/// SELL-C-σ sparse matrix with f64 values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sell {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// Chunk height C (rows processed in lock-step).
+    pub chunk: usize,
+    /// Sort-window σ (rows length-sorted within windows of σ).
+    pub sigma: usize,
+    /// `perm[slot]` = original row stored at sorted slot `slot`.
+    pub perm: Vec<usize>,
+    /// Chunk start offsets into `vals`/`indices`, length nchunks + 1;
+    /// chunk `c` occupies `widths[c] * chunk` entries.
+    pub chunk_ptr: Vec<usize>,
+    /// Width (widest row) per chunk, length nchunks.
+    pub widths: Vec<usize>,
+    /// True (unpadded) row length per slot, length nrows.
+    pub lens: Vec<usize>,
+    /// Column indices, column-major per chunk; padding entries are 0.
+    pub indices: AlignedVec<usize>,
+    /// Values, column-major per chunk; padding entries are 0.0.
+    pub vals: AlignedVec<f64>,
+}
+
+impl Sell {
+    /// Convert from CSR.  `chunk`/`sigma` are clamped to >= 1; pass
+    /// [`DEFAULT_CHUNK`]/[`DEFAULT_SIGMA`] unless the cost model says
+    /// otherwise.
+    pub fn from_csr(a: &Csr, chunk: usize, sigma: usize) -> Sell {
+        let chunk = chunk.max(1);
+        let sigma = sigma.max(1);
+        let n = a.nrows;
+        let row_len: Vec<usize> = (0..n).map(|r| a.indptr[r + 1] - a.indptr[r]).collect();
+        let mut perm: Vec<usize> = (0..n).collect();
+        if sigma > 1 {
+            for win in perm.chunks_mut(sigma) {
+                // stable sort: ties keep original order, deterministic
+                win.sort_by_key(|&r| std::cmp::Reverse(row_len[r]));
+            }
+        }
+        let nchunks = n.div_ceil(chunk);
+        let mut widths = vec![0usize; nchunks];
+        let mut lens = vec![0usize; n];
+        for (slot, &r) in perm.iter().enumerate() {
+            lens[slot] = row_len[r];
+            let c = slot / chunk;
+            widths[c] = widths[c].max(row_len[r]);
+        }
+        let mut chunk_ptr = vec![0usize; nchunks + 1];
+        for c in 0..nchunks {
+            chunk_ptr[c + 1] = chunk_ptr[c] + widths[c] * chunk;
+        }
+        let total = chunk_ptr[nchunks];
+        let mut vals: AlignedVec<f64> = AlignedVec::zeroed(total);
+        let mut indices: AlignedVec<usize> = AlignedVec::zeroed(total);
+        for (slot, &r) in perm.iter().enumerate() {
+            let c = slot / chunk;
+            let lane = slot - c * chunk;
+            let base = chunk_ptr[c];
+            let lo = a.indptr[r];
+            for j in 0..row_len[r] {
+                vals[base + j * chunk + lane] = a.vals[lo + j];
+                indices[base + j * chunk + lane] = a.indices[lo + j];
+            }
+        }
+        Sell {
+            nrows: n,
+            ncols: a.ncols,
+            chunk,
+            sigma,
+            perm,
+            chunk_ptr,
+            widths,
+            lens,
+            indices,
+            vals,
+        }
+        .debug_validate()
+    }
+
+    /// Classic ELLPACK: one chunk spanning every row, no sorting — the
+    /// σ = 1 degenerate case with C = nrows.
+    pub fn ell(a: &Csr) -> Sell {
+        Sell::from_csr(a, a.nrows.max(1), 1)
+    }
+
+    pub fn nchunks(&self) -> usize {
+        self.widths.len()
+    }
+
+    /// Stored (unpadded) entry count.
+    pub fn nnz(&self) -> usize {
+        self.lens.iter().sum()
+    }
+
+    /// Allocated entry count including padding.
+    pub fn padded_nnz(&self) -> usize {
+        self.chunk_ptr.last().copied().unwrap_or(0)
+    }
+
+    /// nnz / padded-nnz in [0, 1]; 1.0 for an empty matrix.
+    pub fn occupancy(&self) -> f64 {
+        let padded = self.padded_nnz();
+        if padded == 0 {
+            1.0
+        } else {
+            self.nnz() as f64 / padded as f64
+        }
+    }
+
+    /// Structural invariants of the SELL-C-σ format, first violation
+    /// reported — the [`Csr::validate`] counterpart, gated in every
+    /// constructor via [`Sell::debug_validate`].
+    pub fn validate(&self) -> Result<()> {
+        if self.chunk == 0 || self.sigma == 0 {
+            return Err(Error::InvalidProblem(
+                "sell: chunk and sigma must be >= 1".into(),
+            ));
+        }
+        let nchunks = self.nrows.div_ceil(self.chunk);
+        if self.widths.len() != nchunks {
+            return Err(Error::InvalidProblem(format!(
+                "sell: widths length {} != nchunks {nchunks}",
+                self.widths.len()
+            )));
+        }
+        if self.chunk_ptr.len() != nchunks + 1 || self.chunk_ptr.first() != Some(&0) {
+            return Err(Error::InvalidProblem(format!(
+                "sell: chunk_ptr length {} / start {:?} malformed",
+                self.chunk_ptr.len(),
+                self.chunk_ptr.first()
+            )));
+        }
+        for c in 0..nchunks {
+            if self.chunk_ptr[c + 1] != self.chunk_ptr[c] + self.widths[c] * self.chunk {
+                return Err(Error::InvalidProblem(format!(
+                    "sell: chunk_ptr step at chunk {c} != widths[{c}] * chunk"
+                )));
+            }
+        }
+        let total = self.padded_nnz();
+        if self.vals.len() != total || self.indices.len() != total {
+            return Err(Error::InvalidProblem(format!(
+                "sell: vals/indices lengths {}/{} != padded nnz {total}",
+                self.vals.len(),
+                self.indices.len()
+            )));
+        }
+        if self.perm.len() != self.nrows || self.lens.len() != self.nrows {
+            return Err(Error::InvalidProblem(format!(
+                "sell: perm/lens lengths {}/{} != nrows {}",
+                self.perm.len(),
+                self.lens.len(),
+                self.nrows
+            )));
+        }
+        let mut seen = vec![false; self.nrows];
+        for &r in &self.perm {
+            if r >= self.nrows || seen[r] {
+                return Err(Error::InvalidProblem(format!(
+                    "sell: perm is not a permutation (row {r})"
+                )));
+            }
+            seen[r] = true;
+        }
+        for c in 0..nchunks {
+            let lo = c * self.chunk;
+            let hi = ((c + 1) * self.chunk).min(self.nrows);
+            let widest = self.lens[lo..hi].iter().copied().max().unwrap_or(0);
+            if self.widths[c] != widest {
+                return Err(Error::InvalidProblem(format!(
+                    "sell: widths[{c}] = {} != widest row {widest} in chunk",
+                    self.widths[c]
+                )));
+            }
+        }
+        for (slot, &len) in self.lens.iter().enumerate() {
+            let c = slot / self.chunk;
+            let lane = slot - c * self.chunk;
+            let base = self.chunk_ptr[c];
+            let w = self.widths[c];
+            if len > w {
+                return Err(Error::InvalidProblem(format!(
+                    "sell: row at slot {slot} longer ({len}) than its chunk width {w}"
+                )));
+            }
+            let mut prev: Option<usize> = None;
+            for j in 0..w {
+                let p = base + j * self.chunk + lane;
+                let col = self.indices[p];
+                if j < len {
+                    if col >= self.ncols {
+                        return Err(Error::InvalidProblem(format!(
+                            "sell: column {col} out of range at slot {slot} (ncols {})",
+                            self.ncols
+                        )));
+                    }
+                    if prev.is_some_and(|q| q >= col) {
+                        return Err(Error::InvalidProblem(format!(
+                            "sell: columns not strictly increasing at slot {slot}"
+                        )));
+                    }
+                    prev = Some(col);
+                } else if col != 0 || self.vals[p] != 0.0 {
+                    return Err(Error::InvalidProblem(format!(
+                        "sell: padding at slot {slot} pos {j} is not (0, 0.0)"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Debug-build invariant gate used by every constructor (mirrors
+    /// [`Csr::debug_validate`]).
+    #[inline]
+    pub fn debug_validate(self) -> Self {
+        debug_assert!(
+            self.validate().is_ok(),
+            "invalid SELL from constructor: {:?}",
+            self.validate()
+        );
+        self
+    }
+
+    /// y = A x.  Chunk heights 4/8/16 take the lock-step vector path;
+    /// anything else the per-slot scalar path (same operation order,
+    /// same result).
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.ncols);
+        debug_assert_eq!(y.len(), self.nrows);
+        match self.chunk {
+            4 => self.spmv_chunked::<4>(x, y),
+            8 => self.spmv_chunked::<8>(x, y),
+            16 => self.spmv_chunked::<16>(x, y),
+            _ => self.spmv_generic(x, y),
+        }
+    }
+
+    /// Lock-step SpMV over `C` lanes: the accumulator is a `[f64; C]`
+    /// register file and each column step is one unit-stride load of
+    /// `C` values + `C` indices — the auto-vectorizable shape.
+    // rsla-lint: no_alloc
+    fn spmv_chunked<const C: usize>(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(self.chunk, C);
+        for c in 0..self.nchunks() {
+            let base = self.chunk_ptr[c];
+            let w = self.widths[c];
+            let mut acc = [0.0f64; C];
+            for j in 0..w {
+                let off = base + j * C;
+                let vs = &self.vals[off..off + C];
+                let is = &self.indices[off..off + C];
+                for l in 0..C {
+                    acc[l] += vs[l] * x[is[l]];
+                }
+            }
+            let row0 = c * C;
+            let live = C.min(self.nrows - row0);
+            for l in 0..live {
+                y[self.perm[row0 + l]] = acc[l];
+            }
+        }
+    }
+
+    /// Per-slot scalar SpMV (any chunk height).  Walks the same padded
+    /// width in the same j-order as the lock-step path, so the two are
+    /// bitwise interchangeable.
+    // rsla-lint: no_alloc
+    fn spmv_generic(&self, x: &[f64], y: &mut [f64]) {
+        let chunk = self.chunk;
+        for (slot, &r) in self.perm.iter().enumerate() {
+            let c = slot / chunk;
+            let lane = slot - c * chunk;
+            let base = self.chunk_ptr[c];
+            let w = self.widths[c];
+            let mut acc = 0.0;
+            for j in 0..w {
+                let p = base + j * chunk + lane;
+                acc += self.vals[p] * x[self.indices[p]];
+            }
+            y[r] = acc;
+        }
+    }
+
+    /// y = A^T x without materializing the transpose (scatter form,
+    /// skips zero entries of x like [`Csr::spmv_t`]).
+    // rsla-lint: no_alloc
+    pub fn spmv_t(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.nrows);
+        debug_assert_eq!(y.len(), self.ncols);
+        y.fill(0.0);
+        let chunk = self.chunk;
+        for (slot, &r) in self.perm.iter().enumerate() {
+            let xr = x[r];
+            if xr == 0.0 {
+                continue;
+            }
+            let c = slot / chunk;
+            let lane = slot - c * chunk;
+            let base = self.chunk_ptr[c];
+            for j in 0..self.lens[slot] {
+                let p = base + j * chunk + lane;
+                y[self.indices[p]] += self.vals[p] * xr;
+            }
+        }
+    }
+
+    /// Multi-RHS SpMV over `k` interleaved columns (layout as in
+    /// [`super::kernels::spmv_block`]): one pass over the matrix.
+    // rsla-lint: no_alloc
+    pub fn spmv_block(&self, x: &[f64], y: &mut [f64], k: usize) {
+        debug_assert_eq!(x.len(), self.ncols * k);
+        debug_assert_eq!(y.len(), self.nrows * k);
+        let chunk = self.chunk;
+        for (slot, &r) in self.perm.iter().enumerate() {
+            let c = slot / chunk;
+            let lane = slot - c * chunk;
+            let base = self.chunk_ptr[c];
+            let yr = &mut y[r * k..r * k + k];
+            yr.fill(0.0);
+            for j in 0..self.lens[slot] {
+                let p = base + j * chunk + lane;
+                let v = self.vals[p];
+                let col = self.indices[p];
+                let xb = &x[col * k..col * k + k];
+                for (yj, &xj) in yr.iter_mut().zip(xb) {
+                    *yj += v * xj;
+                }
+            }
+        }
+    }
+
+    /// Exact conversion back to CSR (padding dropped, original row
+    /// order restored) — the round-trip inverse of [`Sell::from_csr`].
+    pub fn to_csr(&self) -> Csr {
+        let mut indptr = vec![0usize; self.nrows + 1];
+        for (slot, &r) in self.perm.iter().enumerate() {
+            indptr[r + 1] = self.lens[slot];
+        }
+        for i in 0..self.nrows {
+            indptr[i + 1] += indptr[i];
+        }
+        let nnz = indptr[self.nrows];
+        let mut indices = vec![0usize; nnz];
+        let mut vals = vec![0f64; nnz];
+        let chunk = self.chunk;
+        for (slot, &r) in self.perm.iter().enumerate() {
+            let c = slot / chunk;
+            let lane = slot - c * chunk;
+            let base = self.chunk_ptr[c];
+            let out = indptr[r];
+            for j in 0..self.lens[slot] {
+                let p = base + j * chunk + lane;
+                indices[out + j] = self.indices[p];
+                vals[out + j] = self.vals[p];
+            }
+        }
+        Csr {
+            nrows: self.nrows,
+            ncols: self.ncols,
+            indptr,
+            indices,
+            vals,
+        }
+        .debug_validate()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    fn poisson(n: usize) -> Csr {
+        crate::sparse::poisson::poisson2d(n, None).matrix
+    }
+
+    #[test]
+    fn round_trips_exactly_for_all_chunk_sigma_combos() {
+        let a = poisson(7);
+        for chunk in [1usize, 3, 4, 8, 16, 64] {
+            for sigma in [1usize, 4, 32] {
+                let s = Sell::from_csr(&a, chunk, sigma);
+                assert!(s.validate().is_ok(), "chunk={chunk} sigma={sigma}");
+                assert_eq!(s.to_csr(), a, "chunk={chunk} sigma={sigma}");
+                assert_eq!(s.nnz(), a.nnz());
+                assert!(s.occupancy() > 0.0 && s.occupancy() <= 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn spmv_matches_csr_on_every_path() {
+        let a = poisson(9);
+        let mut rng = Prng::new(3);
+        let x = rng.normal_vec(a.ncols);
+        let mut yref = vec![0.0; a.nrows];
+        a.spmv(&x, &mut yref);
+        for chunk in [1usize, 5, 8, 16] {
+            let s = Sell::from_csr(&a, chunk, DEFAULT_SIGMA);
+            let mut y = vec![1.0; a.nrows];
+            s.spmv(&x, &mut y);
+            for (yi, ri) in y.iter().zip(&yref) {
+                assert!((yi - ri).abs() <= 1e-13 * ri.abs().max(1.0), "chunk={chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn spmv_t_matches_csr() {
+        let a = poisson(6);
+        let mut rng = Prng::new(4);
+        let x = rng.normal_vec(a.nrows);
+        let mut yref = vec![0.0; a.ncols];
+        a.spmv_t(&x, &mut yref);
+        let s = Sell::from_csr(&a, DEFAULT_CHUNK, DEFAULT_SIGMA);
+        let mut y = vec![0.0; a.ncols];
+        s.spmv_t(&x, &mut y);
+        for (yi, ri) in y.iter().zip(&yref) {
+            assert!((yi - ri).abs() <= 1e-12 * ri.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn ell_is_single_chunk_unsorted() {
+        let a = poisson(5);
+        let e = Sell::ell(&a);
+        assert_eq!(e.nchunks(), 1);
+        assert_eq!(e.sigma, 1);
+        assert_eq!(e.perm, (0..a.nrows).collect::<Vec<_>>());
+        assert_eq!(e.to_csr(), a);
+    }
+
+    #[test]
+    fn empty_matrix_is_fine() {
+        let a = Csr {
+            nrows: 0,
+            ncols: 0,
+            indptr: vec![0],
+            indices: vec![],
+            vals: vec![],
+        };
+        let s = Sell::from_csr(&a, 8, 64);
+        assert!(s.validate().is_ok());
+        assert_eq!(s.padded_nnz(), 0);
+        assert_eq!(s.occupancy(), 1.0);
+        assert_eq!(s.to_csr(), a);
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let a = poisson(4);
+        let good = Sell::from_csr(&a, 4, 16);
+
+        let mut bad = good.clone();
+        bad.perm[0] = bad.perm[1];
+        assert!(bad.validate().is_err(), "duplicate perm entry");
+
+        let mut bad = good.clone();
+        if let Some(w) = bad.widths.first_mut() {
+            *w += 1;
+        }
+        assert!(bad.validate().is_err(), "width != widest row");
+
+        let mut bad = good.clone();
+        // corrupt a padding slot (first chunk has ragged rows)
+        let w = bad.widths[0];
+        let lane = (0..bad.chunk.min(bad.nrows))
+            .find(|&l| bad.lens[l] < w)
+            .expect("poisson chunk has a padded lane");
+        let p = bad.chunk_ptr[0] + (w - 1) * bad.chunk + lane;
+        bad.vals[p] = 1.0;
+        assert!(bad.validate().is_err(), "nonzero padding value");
+
+        let mut bad = good.clone();
+        bad.chunk_ptr[1] += bad.chunk;
+        assert!(bad.validate().is_err(), "chunk_ptr step mismatch");
+    }
+
+    #[test]
+    fn sigma_sorting_reduces_padding_on_skewed_rows() {
+        // one dense row among short ones: with sigma covering the
+        // window the dense row lands in one chunk instead of widening
+        // its neighbors'.
+        let n = 64usize;
+        let mut indptr = vec![0usize];
+        let mut indices = Vec::new();
+        let mut vals = Vec::new();
+        for r in 0..n {
+            let cols: Vec<usize> = if r == 37 {
+                (0..n).collect()
+            } else {
+                vec![r]
+            };
+            for &c in &cols {
+                indices.push(c);
+                vals.push(1.0 + c as f64);
+            }
+            indptr.push(indices.len());
+        }
+        let a = Csr {
+            nrows: n,
+            ncols: n,
+            indptr,
+            indices,
+            vals,
+        }
+        .debug_validate();
+        let unsorted = Sell::from_csr(&a, 8, 1);
+        let sorted = Sell::from_csr(&a, 8, n);
+        assert!(sorted.padded_nnz() <= unsorted.padded_nnz());
+        assert!(sorted.occupancy() >= unsorted.occupancy());
+        assert_eq!(sorted.to_csr(), a);
+        assert_eq!(unsorted.to_csr(), a);
+    }
+}

@@ -68,3 +68,56 @@ fn engine_hashes_each_linear_job_exactly_once() {
     );
     e.shutdown();
 }
+
+#[test]
+fn round_robin_routing_still_hashes_exactly_once() {
+    // With affinity off the scheduler has no routing use for the key,
+    // but the worker's shard probe is keyed-only — so the count must
+    // STAY one per job (the key rides the unit), not drop to zero and
+    // not double on the serve path.
+    let e = Engine::start(
+        Arc::new(Dispatcher::new(None)),
+        EngineConfig {
+            workers: 2,
+            fuse: BatchPolicy {
+                max_batch: 1,
+                window: Duration::from_millis(1),
+            },
+            affinity: false,
+            ..Default::default()
+        },
+    );
+    let sys = poisson2d(8, None);
+    let n = sys.matrix.nrows;
+    let mut rng = Prng::new(11);
+
+    let warm = e
+        .submit(JobSpec::Linear {
+            matrix: sys.matrix.clone(),
+            b: rng.normal_vec(n),
+            opts: SolveOpts::default(),
+        })
+        .expect("submit")
+        .wait();
+    assert!(warm.outcome.is_ok(), "warm-up solve failed");
+
+    let baseline = pattern_hash_count();
+    let k = 6u64;
+    for _ in 0..k {
+        let r = e
+            .submit(JobSpec::Linear {
+                matrix: sys.matrix.clone(),
+                b: rng.normal_vec(n),
+                opts: SolveOpts::default(),
+            })
+            .expect("submit")
+            .wait();
+        assert!(r.outcome.is_ok(), "solve failed");
+    }
+    let hashed = pattern_hash_count() - baseline;
+    assert_eq!(
+        hashed, k,
+        "round-robin routing must not change the one-hash-per-job pin ({k} jobs, {hashed} hashes)"
+    );
+    e.shutdown();
+}

@@ -1,0 +1,300 @@
+//! Property tests for the SELL-C-σ format and the fused multi-vector
+//! kernels: random and pathological matrices, CSR↔SELL round trips over
+//! a grid of (chunk, σ), and spmv / spmv_t / fused-k parity against the
+//! CSR reference within a 1-ulp-scale tolerance.
+//!
+//! These pins back the format swap in `TunedOp`: a solver that is handed
+//! SELL instead of CSR must see the same operator to within rounding of
+//! the padded `+0.0` tail, on EVERY row-length distribution the cost
+//! model can route there — including the ones it would normally reject
+//! (power-law, empty rows), because `Sell::from_csr` has to be total
+//! even where it is not profitable.
+
+use rsla::sparse::kernels::spmv_block;
+use rsla::sparse::sell::{DEFAULT_CHUNK, DEFAULT_SIGMA};
+use rsla::sparse::{choose_format, Csr, Sell, TunedOp};
+use rsla::util::Prng;
+
+/// (chunk, σ) grid: degenerate σ=1, non-divisor chunk heights, the
+/// vectorized 4/8/16 paths, and chunk > nrows.
+const COMBOS: [(usize, usize); 7] = [(1, 1), (3, 1), (4, 16), (8, 64), (16, 7), (5, 2), (128, 64)];
+
+fn assert_close(y: &[f64], yref: &[f64], ctx: &str) {
+    assert_eq!(y.len(), yref.len(), "{ctx}: length mismatch");
+    for (i, (yi, ri)) in y.iter().zip(yref).enumerate() {
+        assert!(
+            (yi - ri).abs() <= 1e-12 * ri.abs().max(1.0),
+            "{ctx}: row {i}: {yi} vs {ri}"
+        );
+    }
+}
+
+/// Random sparse matrix: `per_row_max` bounds each row's length, drawn
+/// uniformly (including 0, so empty rows occur naturally).
+fn random_csr(rng: &mut Prng, nrows: usize, ncols: usize, per_row_max: usize) -> Csr {
+    let mut indptr = vec![0usize];
+    let mut indices = Vec::new();
+    let mut vals = Vec::new();
+    for _ in 0..nrows {
+        let len = (rng.normal().abs() * per_row_max as f64) as usize % (per_row_max + 1);
+        let mut cols = rng.choose_distinct(ncols, len.min(ncols));
+        cols.sort_unstable();
+        for c in cols {
+            indices.push(c);
+            vals.push(rng.normal());
+        }
+        indptr.push(indices.len());
+    }
+    Csr {
+        nrows,
+        ncols,
+        indptr,
+        indices,
+        vals,
+    }
+    .debug_validate()
+}
+
+/// Every row empty except a handful — the min_len = 0 edge the cost
+/// model and the chunk-width logic both have to survive.
+fn mostly_empty(n: usize) -> Csr {
+    let mut indptr = vec![0usize];
+    let mut indices = Vec::new();
+    let mut vals = Vec::new();
+    for r in 0..n {
+        if r % 17 == 3 {
+            indices.push(r);
+            vals.push(2.0 + r as f64);
+        }
+        indptr.push(indices.len());
+    }
+    Csr {
+        nrows: n,
+        ncols: n,
+        indptr,
+        indices,
+        vals,
+    }
+    .debug_validate()
+}
+
+/// One fully dense row among singletons: the worst case for unsorted
+/// ELL padding, the case σ-sorting exists to contain.
+fn single_dense_row(n: usize, dense_at: usize) -> Csr {
+    let mut indptr = vec![0usize];
+    let mut indices = Vec::new();
+    let mut vals = Vec::new();
+    for r in 0..n {
+        if r == dense_at {
+            for c in 0..n {
+                indices.push(c);
+                vals.push(1.0 / (1.0 + c as f64));
+            }
+        } else {
+            indices.push(r);
+            vals.push(1.0 + r as f64);
+        }
+        indptr.push(indices.len());
+    }
+    Csr {
+        nrows: n,
+        ncols: n,
+        indptr,
+        indices,
+        vals,
+    }
+    .debug_validate()
+}
+
+/// Hub-and-spoke degree skew (the cost model's stay-CSR case).
+fn power_law(rng: &mut Prng, n: usize) -> Csr {
+    let mut indptr = vec![0usize];
+    let mut indices = Vec::new();
+    let mut vals = Vec::new();
+    for r in 0..n {
+        let len = if r % 53 == 0 { n / 3 } else { 1 + r % 3 };
+        let mut cols = rng.choose_distinct(n, len.min(n));
+        cols.sort_unstable();
+        for c in cols {
+            indices.push(c);
+            vals.push(rng.normal());
+        }
+        indptr.push(indices.len());
+    }
+    Csr {
+        nrows: n,
+        ncols: n,
+        indptr,
+        indices,
+        vals,
+    }
+    .debug_validate()
+}
+
+fn test_matrices() -> Vec<(String, Csr)> {
+    let mut rng = Prng::new(42);
+    let mut out = vec![
+        (
+            "poisson2d(11)".to_string(),
+            rsla::sparse::poisson::poisson2d(11, None).matrix,
+        ),
+        ("mostly_empty(100)".to_string(), mostly_empty(100)),
+        ("single_dense_row(96)".to_string(), single_dense_row(96, 37)),
+        ("power_law(211)".to_string(), power_law(&mut rng, 211)),
+        (
+            "rect 60x90".to_string(),
+            random_csr(&mut rng, 60, 90, 7),
+        ),
+        (
+            "rect 90x60".to_string(),
+            random_csr(&mut rng, 90, 60, 5),
+        ),
+    ];
+    for trial in 0..4u64 {
+        let mut rng = Prng::new(100 + trial);
+        let n = 40 + 23 * trial as usize;
+        out.push((format!("random n={n}"), random_csr(&mut rng, n, n, 9)));
+    }
+    out
+}
+
+#[test]
+fn round_trip_is_exact_on_every_matrix_and_combo() {
+    for (name, a) in test_matrices() {
+        for &(chunk, sigma) in &COMBOS {
+            let s = Sell::from_csr(&a, chunk, sigma);
+            assert!(
+                s.validate().is_ok(),
+                "{name} chunk={chunk} sigma={sigma}: {:?}",
+                s.validate()
+            );
+            assert_eq!(s.to_csr(), a, "{name} chunk={chunk} sigma={sigma}");
+            assert_eq!(s.nnz(), a.nnz(), "{name}");
+        }
+        // ELL degenerate form round-trips too
+        let e = Sell::ell(&a);
+        assert!(e.validate().is_ok(), "{name} ell");
+        assert_eq!(e.to_csr(), a, "{name} ell");
+    }
+}
+
+#[test]
+fn spmv_and_spmv_t_match_csr_on_every_combo() {
+    for (name, a) in test_matrices() {
+        let mut rng = Prng::new(7);
+        let x = rng.normal_vec(a.ncols);
+        let xt = rng.normal_vec(a.nrows);
+        let mut yref = vec![0.0; a.nrows];
+        a.spmv(&x, &mut yref);
+        let mut ytref = vec![0.0; a.ncols];
+        a.spmv_t(&xt, &mut ytref);
+        for &(chunk, sigma) in &COMBOS {
+            let s = Sell::from_csr(&a, chunk, sigma);
+            let mut y = vec![f64::NAN; a.nrows]; // spmv overwrites every row
+            s.spmv(&x, &mut y);
+            assert_close(&y, &yref, &format!("{name} spmv chunk={chunk} sigma={sigma}"));
+            let mut yt = vec![0.0; a.ncols];
+            s.spmv_t(&xt, &mut yt);
+            assert_close(
+                &yt,
+                &ytref,
+                &format!("{name} spmv_t chunk={chunk} sigma={sigma}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_block_spmv_matches_k_scalar_passes() {
+    for (name, a) in test_matrices() {
+        let mut rng = Prng::new(13);
+        for k in [1usize, 2, 4, 8] {
+            let cols: Vec<Vec<f64>> = (0..k).map(|_| rng.normal_vec(a.ncols)).collect();
+            let mut xb = vec![0.0; a.ncols * k];
+            for (j, c) in cols.iter().enumerate() {
+                for (i, v) in c.iter().enumerate() {
+                    xb[i * k + j] = *v;
+                }
+            }
+            // CSR fused kernel: bitwise per-column contract
+            let mut yb = vec![0.0; a.nrows * k];
+            spmv_block(&a, &xb, &mut yb, k);
+            for (j, c) in cols.iter().enumerate() {
+                let mut yref = vec![0.0; a.nrows];
+                a.spmv(c, &mut yref);
+                for i in 0..a.nrows {
+                    assert_eq!(
+                        yb[i * k + j].to_bits(),
+                        yref[i].to_bits(),
+                        "{name} csr fused k={k} col={j} row={i}"
+                    );
+                }
+            }
+            // SELL fused kernel: 1-ulp-scale tolerance (padding tail)
+            let s = Sell::from_csr(&a, DEFAULT_CHUNK, DEFAULT_SIGMA);
+            let mut ys = vec![0.0; a.nrows * k];
+            s.spmv_block(&xb, &mut ys, k);
+            for (j, c) in cols.iter().enumerate() {
+                let mut yref = vec![0.0; a.nrows];
+                a.spmv(c, &mut yref);
+                let got: Vec<f64> = (0..a.nrows).map(|i| ys[i * k + j]).collect();
+                assert_close(&got, &yref, &format!("{name} sell fused k={k} col={j}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn tuned_op_agrees_with_csr_regardless_of_choice() {
+    for (name, a) in test_matrices() {
+        if a.nrows != a.ncols {
+            continue; // TunedOp serves square solver operators
+        }
+        let t = TunedOp::new(&a, None);
+        let report = choose_format(&a);
+        assert_eq!(t.format(), report.choice, "{name}");
+        let mut rng = Prng::new(3);
+        let x = rng.normal_vec(a.ncols);
+        let mut x_ext = x.clone();
+        let mut y = vec![0.0; a.nrows];
+        rsla::krylov::LinearOperator::apply(&t, &mut x_ext, &mut y);
+        assert_close(&y, &a.matvec(&x), &format!("{name} tuned apply"));
+    }
+}
+
+#[test]
+fn cost_model_decisions_track_occupancy_threshold() {
+    // regular stencil → SELL; skew/empty → CSR; and on every matrix the
+    // reported occupancy must match the conversion it predicts.
+    let poisson = rsla::sparse::poisson::poisson2d(16, None).matrix;
+    assert_eq!(
+        choose_format(&poisson).choice,
+        rsla::sparse::FormatChoice::Sell
+    );
+    let mut rng = Prng::new(5);
+    let skew = power_law(&mut rng, 212);
+    assert_eq!(choose_format(&skew).choice, rsla::sparse::FormatChoice::Csr);
+    // nnz = 0 can never pay for a conversion
+    let empty = Csr {
+        nrows: 8,
+        ncols: 8,
+        indptr: vec![0; 9],
+        indices: vec![],
+        vals: vec![],
+    }
+    .debug_validate();
+    assert_eq!(
+        choose_format(&empty).choice,
+        rsla::sparse::FormatChoice::Csr
+    );
+    for (name, a) in test_matrices() {
+        let report = choose_format(&a);
+        let s = Sell::from_csr(&a, DEFAULT_CHUNK, DEFAULT_SIGMA);
+        assert!(
+            (report.occupancy - s.occupancy()).abs() < 1e-12,
+            "{name}: dry-run occupancy {} vs actual {}",
+            report.occupancy,
+            s.occupancy()
+        );
+    }
+}
