@@ -50,6 +50,7 @@ impl Backend for NativeIter {
     }
 
     fn solve(&self, p: &Problem, opts: &SolveOpts) -> Result<SolveOutcome> {
+        let _sp = crate::trace::span_arg(crate::trace::names::BACKEND_SOLVE, p.b.len() as u64);
         let mem = MemTracker::new();
         let iter_opts = IterOpts {
             tol: opts.tol,

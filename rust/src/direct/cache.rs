@@ -13,6 +13,7 @@ use std::sync::Arc;
 use super::{CholSymbolic, EnvelopeCholesky, LuSymbolic, SparseLu};
 use crate::error::{Error, Result};
 use crate::sparse::Csr;
+use crate::trace::{self, names as tn};
 
 /// A symbolic analysis, reusable across value assignments on one
 /// sparsity pattern.
@@ -65,6 +66,7 @@ impl CachedFactor {
             )));
         }
         crate::metrics::mem::note_factor_solve_alloc((self.n() * 8) as u64);
+        let _sp = trace::span_arg(tn::DIRECT_TRISOLVE, self.n() as u64);
         match &self.kind {
             FactorKind::Chol(f) => Ok(f.solve(b)),
             FactorKind::Lu(f) => f.solve(b),
@@ -112,6 +114,7 @@ impl CachedFactor {
             )));
         }
         crate::metrics::mem::note_factor_solve_alloc((self.n() * 8) as u64);
+        let _sp = trace::span_arg(tn::DIRECT_TRISOLVE, self.n() as u64);
         match &self.kind {
             FactorKind::Chol(f) => Ok(f.solve(b)),
             FactorKind::Lu(f) => f.solve_t(b),
@@ -172,7 +175,10 @@ pub fn build_factor(
 ) -> Result<(Arc<CachedFactor>, Symbolic)> {
     let spd_like = symmetric && a.diag().iter().all(|&d| d > 0.0);
     if spd_like {
-        let sym = CholSymbolic::analyze(a, true)?;
+        let sym = {
+            let _sp = trace::span_arg(tn::DIRECT_SYMBOLIC, a.nnz() as u64);
+            CholSymbolic::analyze(a, true)?
+        };
         let fill_bytes = (sym.predicted_fill() * 8) as u64;
         if fill_bytes > max_fill_bytes {
             return Err(Error::OutOfMemory {
@@ -180,7 +186,11 @@ pub fn build_factor(
                 budget_bytes: max_fill_bytes,
             });
         }
-        match EnvelopeCholesky::factor_numeric(&sym, &a.vals) {
+        let numeric = {
+            let _sp = trace::span_arg(tn::DIRECT_NUMERIC, sym.predicted_fill() as u64);
+            EnvelopeCholesky::factor_numeric(&sym, &a.vals)
+        };
+        match numeric {
             Ok(f) => {
                 return Ok((
                     Arc::new(CachedFactor {
@@ -194,7 +204,14 @@ pub fn build_factor(
             Err(e) => return Err(e),
         }
     }
-    let (f, sym) = SparseLu::factor_recording(a, lu_cap(max_fill_bytes))?;
+    // LU records its elimination structure while factoring, so the
+    // symbolic and numeric laps are one pass here: one span each, with
+    // the symbolic lap carrying zero width at the numeric lap's start.
+    let (f, sym) = {
+        let _sym_sp = trace::span_arg(tn::DIRECT_SYMBOLIC, a.nnz() as u64);
+        let _num_sp = trace::span_arg(tn::DIRECT_NUMERIC, a.nnz() as u64);
+        SparseLu::factor_recording(a, lu_cap(max_fill_bytes))?
+    };
     Ok((
         Arc::new(CachedFactor {
             kind: FactorKind::Lu(f),
@@ -230,14 +247,20 @@ pub fn refactor(
                     budget_bytes: max_fill_bytes,
                 });
             }
-            let f = EnvelopeCholesky::factor_numeric(cs, &a.vals)?;
+            let f = {
+                let _sp = trace::span_arg(tn::DIRECT_NUMERIC, cs.predicted_fill() as u64);
+                EnvelopeCholesky::factor_numeric(cs, &a.vals)?
+            };
             Ok(Arc::new(CachedFactor {
                 kind: FactorKind::Chol(f),
                 symmetric,
             }))
         }
         Symbolic::Lu(ls) => {
-            let f = SparseLu::refactor(ls, a, lu_cap(max_fill_bytes))?;
+            let f = {
+                let _sp = trace::span_arg(tn::DIRECT_NUMERIC, a.nnz() as u64);
+                SparseLu::refactor(ls, a, lu_cap(max_fill_bytes))?
+            };
             Ok(Arc::new(CachedFactor {
                 kind: FactorKind::Lu(f),
                 symmetric,

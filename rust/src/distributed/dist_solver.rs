@@ -188,15 +188,22 @@ fn run_dist(
     let rounds0 = comm.reduce_rounds();
     let mem = MemTracker::new();
     let op = DistOp::new(a, comm, 100);
+    let _sp = crate::trace::span_arg(crate::trace::names::DIST_SOLVE, a.plan.n_own as u64);
+    let ct = crate::trace::ConvergenceTrace::new(crate::trace::names::DIST_SOLVE);
     let res = kernel(&op, &mem);
+    // snapshot the monotonic counters ONCE: the report and the trace
+    // record must agree on what this solve cost
+    let bytes_sent = comm.bytes_sent() - bytes0;
+    let reduce_rounds = comm.reduce_rounds() - rounds0;
+    ct.finish_dist(res.iters, res.residual, res.converged, reduce_rounds, bytes_sent);
     DistSolveReport {
         x_own: res.x,
         method,
         iters: res.iters,
         residual: res.residual,
         converged: res.converged,
-        bytes_sent: comm.bytes_sent() - bytes0,
-        reduce_rounds: comm.reduce_rounds() - rounds0,
+        bytes_sent,
+        reduce_rounds,
         peak_bytes: a.bytes() + mem.peak(),
     }
 }

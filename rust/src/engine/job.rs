@@ -194,6 +194,60 @@ pub enum JobOutput {
     },
 }
 
+/// Convergence telemetry of a completed solve, surfaced end-to-end on
+/// [`JobResult`] so clients (and trace spans) can see WHY a solve was
+/// slow without re-running it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Convergence {
+    /// Iterations the solve consumed (0 for purely direct solves).
+    pub iters: usize,
+    /// Final residual norm; the WORST across a batch or rank team.
+    pub residual: f64,
+    pub converged: bool,
+}
+
+impl Convergence {
+    /// Derive the telemetry from a finished outcome.  `None` for
+    /// families that carry no iteration data (adjoint pairs) and for
+    /// failed jobs (the error already says why).
+    pub fn of(outcome: &Result<JobOutput>) -> Option<Convergence> {
+        let out = match outcome {
+            Ok(o) => o,
+            Err(_) => return None,
+        };
+        match out {
+            // a successful linear/multi-RHS/eig outcome converged by
+            // construction: non-convergence surfaces as Err upstream
+            JobOutput::Linear(s) => Some(Convergence {
+                iters: s.iters,
+                residual: s.residual,
+                converged: true,
+            }),
+            JobOutput::MultiRhs(outs) => Some(Convergence {
+                iters: outs.iter().map(|s| s.iters).max().unwrap_or(0),
+                residual: outs.iter().map(|s| s.residual).fold(0.0, f64::max),
+                converged: true,
+            }),
+            JobOutput::Nonlinear(r) => Some(Convergence {
+                iters: r.iters,
+                residual: r.residual_norm,
+                converged: r.converged,
+            }),
+            JobOutput::Eig(r) => Some(Convergence {
+                iters: r.iters,
+                residual: r.residuals.iter().copied().fold(0.0, f64::max),
+                converged: true,
+            }),
+            JobOutput::Adjoint { .. } => None,
+            JobOutput::Dist { reports, .. } => Some(Convergence {
+                iters: reports.iter().map(|r| r.iters).max().unwrap_or(0),
+                residual: reports.iter().map(|r| r.residual).fold(0.0, f64::max),
+                converged: reports.iter().all(|r| r.converged),
+            }),
+        }
+    }
+}
+
 /// The reply for one job, with queueing/service latency for the
 /// metrics tables.
 pub struct JobResult {
@@ -208,6 +262,9 @@ pub struct JobResult {
     /// Index of the worker that executed the job (usize::MAX when it
     /// never reached one, e.g. a queued-deadline timeout).
     pub worker: usize,
+    /// Iteration/residual telemetry of the solve, when the family has
+    /// any (see [`Convergence::of`]).
+    pub convergence: Option<Convergence>,
 }
 
 /// Handle to an in-flight job.
@@ -235,6 +292,7 @@ impl Ticket {
                 service_seconds: 0.0,
                 batch_size: 1,
                 worker: usize::MAX,
+                convergence: None,
             },
         }
     }

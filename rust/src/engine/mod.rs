@@ -42,7 +42,7 @@ pub mod workload;
 
 pub use fuse::{group_by_key, verify_groups, BatchPolicy};
 pub use job::{
-    JobKind, JobOutput, JobResult, JobSpec, Priority, SubmitOpts, Ticket,
+    Convergence, JobKind, JobOutput, JobResult, JobSpec, Priority, SubmitOpts, Ticket,
 };
 
 use std::collections::HashMap;
@@ -62,6 +62,7 @@ use crate::factor_cache::{CacheShards, CacheStats, DEFAULT_BUDGET_BYTES};
 use crate::metrics::{self, names, LatencyHist};
 use crate::sparse::key::{PatternKey, StructureKey};
 use crate::sparse::Csr;
+use crate::trace::{self, names as tn};
 use crate::util::lock_recover;
 
 /// Engine construction knobs.
@@ -133,7 +134,16 @@ struct Shared {
     registry: Arc<metrics::Registry>,
 }
 
-fn respond(shared: &Shared, reply: Box<dyn FnOnce(JobResult) + Send>, result: JobResult) {
+fn respond(shared: &Shared, reply: Box<dyn FnOnce(JobResult) + Send>, mut result: JobResult) {
+    if result.convergence.is_none() {
+        result.convergence = Convergence::of(&result.outcome);
+    }
+    trace::event_job(
+        tn::JOB_REPLY,
+        result.id,
+        result.kind.name(),
+        result.batch_size as u64,
+    );
     if let Some(hist) = shared.hists.get(result.kind.idx()) {
         hist.record(result.queue_seconds + result.service_seconds);
     }
@@ -179,6 +189,7 @@ fn respond_timeout(env: Envelope, now: Instant, shared: &Shared) {
             service_seconds: 0.0,
             batch_size: 1,
             worker: usize::MAX,
+            convergence: None,
         },
     );
 }
@@ -358,6 +369,7 @@ impl Engine {
             });
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        trace::event_job(tn::JOB_SUBMIT, id, spec.kind().name(), 0);
         let now = Instant::now();
         let env = Envelope {
             id,
@@ -615,6 +627,19 @@ fn schedule_window(
                 None => least_depth(&shared.depths),
             }
         };
+        if trace::enabled() {
+            match &unit {
+                Unit::One(e, _) => {
+                    trace::event_job(tn::JOB_SCHEDULED, e.id, e.spec.kind().name(), w as u64);
+                }
+                Unit::Fused(envs, _) => {
+                    for e in envs {
+                        trace::event_job(tn::JOB_SCHEDULED, e.id, e.spec.kind().name(), w as u64);
+                        trace::event_job(tn::JOB_FUSED, e.id, e.spec.kind().name(), envs.len() as u64);
+                    }
+                }
+            }
+        }
         let undeliverable = match worker_txs.get(w) {
             Some(tx) => {
                 if let Some(d) = shared.depths.get(w) {
@@ -663,6 +688,7 @@ fn schedule_window(
                         service_seconds: 0.0,
                         batch_size: 1,
                         worker: w,
+                        convergence: None,
                     },
                 );
             }
@@ -749,7 +775,13 @@ fn serve_one(env: Envelope, key: Option<PatternKey>, ctx: &WorkerCtx) {
     } = env;
     let kind = spec.kind();
     let queue_seconds = (t0 - enqueued).as_secs_f64();
-    let outcome = exec_caught(spec, key, ctx);
+    let outcome = {
+        let structure_hash = key.as_ref().map(|k| k.structure_hash).unwrap_or(0);
+        let _scope = trace::job_scope(id, kind.name(), structure_hash, ctx.idx as u32);
+        trace::span_between(tn::JOB_QUEUED, enqueued, t0, 0);
+        let _exec = trace::span(tn::JOB_EXEC);
+        exec_caught(spec, key, ctx)
+    };
     respond(
         &ctx.shared,
         reply,
@@ -761,6 +793,7 @@ fn serve_one(env: Envelope, key: Option<PatternKey>, ctx: &WorkerCtx) {
             service_seconds: t0.elapsed().as_secs_f64(),
             batch_size: 1,
             worker: ctx.idx,
+            convergence: None,
         },
     );
 }
@@ -907,7 +940,13 @@ fn serve_uniform(batch: Vec<Envelope>, key: &PatternKey, t0: Instant, ctx: &Work
                         // unreachable in a batch the eligibility loop
                         // verified all-linear; serve generically anyway
                         let kind = spec.kind();
-                        let outcome = exec_caught(*spec, None, ctx);
+                        let outcome = {
+                            let _scope =
+                                trace::job_scope(id, kind.name(), 0, ctx.idx as u32);
+                            trace::span_between(tn::JOB_QUEUED, enqueued, t0, 0);
+                            let _exec = trace::span(tn::JOB_EXEC);
+                            exec_caught(*spec, None, ctx)
+                        };
                         respond(
                             &ctx.shared,
                             reply,
@@ -919,28 +958,39 @@ fn serve_uniform(batch: Vec<Envelope>, key: &PatternKey, t0: Instant, ctx: &Work
                                 service_seconds: ts.elapsed().as_secs_f64(),
                                 batch_size: n,
                                 worker: ctx.idx,
+                                convergence: None,
                             },
                         );
                         continue;
                     }
                 };
-                let outcome = match std::panic::catch_unwind(AssertUnwindSafe(|| {
-                    f.solve(&b).map(|x| {
-                        let residual = residual_of(&a, &x, &b);
-                        JobOutput::Linear(SolveOutcome {
-                            x,
-                            backend: "native-direct",
-                            method,
-                            iters: 0,
-                            residual,
-                            peak_bytes: bytes,
+                let outcome = {
+                    let _scope = trace::job_scope(
+                        id,
+                        JobKind::Linear.name(),
+                        key.structure_hash,
+                        ctx.idx as u32,
+                    );
+                    trace::span_between(tn::JOB_QUEUED, enqueued, t0, 0);
+                    let _exec = trace::span_arg(tn::JOB_EXEC, n as u64);
+                    match std::panic::catch_unwind(AssertUnwindSafe(|| {
+                        f.solve(&b).map(|x| {
+                            let residual = residual_of(&a, &x, &b);
+                            JobOutput::Linear(SolveOutcome {
+                                x,
+                                backend: "native-direct",
+                                method,
+                                iters: 0,
+                                residual,
+                                peak_bytes: bytes,
+                            })
                         })
-                    })
-                })) {
-                    Ok(r) => r,
-                    Err(p) => {
-                        ctx.shared.registry.incr(names::ENGINE_PANIC, 1);
-                        Err(Error::WorkerPanic(panic_msg(&*p)))
+                    })) {
+                        Ok(r) => r,
+                        Err(p) => {
+                            ctx.shared.registry.incr(names::ENGINE_PANIC, 1);
+                            Err(Error::WorkerPanic(panic_msg(&*p)))
+                        }
                     }
                 };
                 respond(
@@ -954,6 +1004,7 @@ fn serve_uniform(batch: Vec<Envelope>, key: &PatternKey, t0: Instant, ctx: &Work
                         service_seconds: ts.elapsed().as_secs_f64(),
                         batch_size: n,
                         worker: ctx.idx,
+                        convergence: None,
                     },
                 );
             }
@@ -974,7 +1025,13 @@ fn serve_uniform(batch: Vec<Envelope>, key: &PatternKey, t0: Instant, ctx: &Work
         } = env;
         let kind = spec.kind();
         let key = spec.linear_parts().is_some().then(|| key.clone());
-        let outcome = exec_caught(spec, key, ctx);
+        let outcome = {
+            let structure_hash = key.as_ref().map(|k| k.structure_hash).unwrap_or(0);
+            let _scope = trace::job_scope(id, kind.name(), structure_hash, ctx.idx as u32);
+            trace::span_between(tn::JOB_QUEUED, enqueued, t0, 0);
+            let _exec = trace::span(tn::JOB_EXEC);
+            exec_caught(spec, key, ctx)
+        };
         respond(
             &ctx.shared,
             reply,
@@ -986,6 +1043,7 @@ fn serve_uniform(batch: Vec<Envelope>, key: &PatternKey, t0: Instant, ctx: &Work
                 service_seconds: ts.elapsed().as_secs_f64(),
                 batch_size: n,
                 worker: ctx.idx,
+                convergence: None,
             },
         );
     }

@@ -32,6 +32,7 @@ use crate::error::{Error, Result};
 use crate::metrics::{self, names, MemTracker};
 use crate::sparse::key::{PatternKey, StructureKey};
 use crate::sparse::Csr;
+use crate::trace::{self, names as tn};
 use crate::util::lock_recover;
 
 /// Default byte budget for the process-wide cache.  Override per
@@ -215,6 +216,7 @@ impl FactorCache {
                     let factor = e.factor.clone();
                     drop(inner);
                     Self::bump(&self.hits_numeric, reg, names::FACTOR_CACHE_HIT_NUMERIC);
+                    trace::event(tn::FACTOR_HIT_NUMERIC, key.structure_hash);
                     return Ok(factor);
                 }
                 Self::bump(&self.collisions, reg, names::FACTOR_CACHE_COLLISION);
@@ -235,6 +237,7 @@ impl FactorCache {
             Some(sym) => match refactor(&sym, a, symmetric, max_fill_bytes) {
                 Ok(f) => {
                     Self::bump(&self.hits_symbolic, reg, names::FACTOR_CACHE_HIT_SYMBOLIC);
+                    trace::event(tn::FACTOR_HIT_SYMBOLIC, key.structure_hash);
                     (f, sym, true)
                 }
                 Err(_) => {
@@ -248,12 +251,14 @@ impl FactorCache {
                         r.incr(names::FACTOR_CACHE_REFACTOR_FALLBACK, 1);
                     }
                     Self::bump(&self.misses, reg, names::FACTOR_CACHE_MISS);
+                    trace::event(tn::FACTOR_MISS, key.structure_hash);
                     let (f, s) = build_factor(a, symmetric, max_fill_bytes)?;
                     (f, s, false)
                 }
             },
             None => {
                 Self::bump(&self.misses, reg, names::FACTOR_CACHE_MISS);
+                trace::event(tn::FACTOR_MISS, key.structure_hash);
                 let (f, s) = build_factor(a, symmetric, max_fill_bytes)?;
                 (f, s, false)
             }
@@ -509,6 +514,7 @@ impl CacheShards {
         if let Some(r) = reg {
             if shard.holds_numeric_keyed(a, key) {
                 r.incr(names::FACTOR_CACHE_SHARD_LOCAL_HIT, 1);
+                trace::event(tn::FACTOR_SHARD_LOCAL_HIT, i as u64);
             } else if self
                 .shards
                 .iter()
@@ -516,6 +522,7 @@ impl CacheShards {
                 .any(|(j, s)| j != i && s.holds_numeric_keyed(a, key))
             {
                 r.incr(names::FACTOR_CACHE_CROSS_SHARD_MISS, 1);
+                trace::event(tn::FACTOR_CROSS_SHARD_MISS, i as u64);
             }
         }
         shard.factor_keyed(a, key, max_fill_bytes, reg)

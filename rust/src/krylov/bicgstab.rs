@@ -12,6 +12,7 @@ use super::{gdot2, Communicator, LinearOperator};
 use crate::iterative::{IterOpts, IterResult, Precond};
 use crate::metrics::MemTracker;
 use crate::sparse::kernels;
+use crate::trace::{self, names as tn};
 use crate::util::{axpy_inplace, dot};
 
 /// Solve `A x = b` with right-preconditioned BiCGStab, `x0 = 0`.
@@ -27,6 +28,8 @@ pub fn bicgstab(
     let n_ext = a.n_ext();
     assert_eq!(n, b_own.len(), "bicgstab rhs length mismatch");
 
+    let _sp = trace::span_arg(tn::KRYLOV_BICGSTAB, n as u64);
+    let mut ct = trace::ConvergenceTrace::new(tn::KRYLOV_BICGSTAB);
     let default_tracker = MemTracker::new();
     let mem = mem.unwrap_or(&default_tracker);
     let mut x = mem.buf(n);
@@ -51,6 +54,7 @@ pub fn bicgstab(
     if opts.record_history {
         history.push(rr.sqrt());
     }
+    ct.record_sq(rr);
 
     let mut iters = 0;
     let mut breakdown = false;
@@ -58,6 +62,7 @@ pub fn bicgstab(
         let rho_new = comm.all_reduce_sum(dot(&r0, &r));
         if rho_new == 0.0 {
             breakdown = true;
+            ct.breakdown(iters);
             break;
         }
         if iters == 0 {
@@ -75,6 +80,7 @@ pub fn bicgstab(
         let r0v = comm.all_reduce_sum(dot(&r0, &v));
         if r0v == 0.0 {
             breakdown = true;
+            ct.breakdown(iters);
             break;
         }
         alpha = rho / r0v;
@@ -88,6 +94,7 @@ pub fn bicgstab(
             if opts.record_history {
                 history.push(rr.sqrt());
             }
+            ct.record_sq(rr);
             break;
         }
         m.apply(&s, &mut shat_ext.data[..n]);
@@ -98,6 +105,7 @@ pub fn bicgstab(
         let (tt, ts) = (fused[0], fused[1]);
         if tt == 0.0 {
             breakdown = true;
+            ct.breakdown(iters);
             break;
         }
         omega = ts / tt;
@@ -110,12 +118,15 @@ pub fn bicgstab(
         if opts.record_history {
             history.push(rr.sqrt());
         }
+        ct.record_sq(rr);
         if omega == 0.0 {
             breakdown = true;
+            ct.breakdown(iters);
             break;
         }
     }
 
+    ct.finish(iters, rr.sqrt(), rr <= tol2);
     IterResult {
         x: x.take(),
         iters,

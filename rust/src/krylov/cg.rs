@@ -17,6 +17,7 @@
 use super::{gdot2, gdot3, Communicator, LinearOperator};
 use crate::iterative::{IterOpts, IterResult, Precond};
 use crate::metrics::MemTracker;
+use crate::trace::{self, names as tn};
 use crate::util::dot;
 
 /// Solve `A x = b` with preconditioned CG, `x0 = 0`.  `b_own` is this
@@ -34,6 +35,8 @@ pub fn cg(
     let n_ext = a.n_ext();
     assert_eq!(n, b_own.len(), "cg rhs length mismatch");
 
+    let _sp = trace::span_arg(tn::KRYLOV_CG, n as u64);
+    let mut ct = trace::ConvergenceTrace::new(tn::KRYLOV_CG);
     let default_tracker = MemTracker::new();
     let mem = mem.unwrap_or(&default_tracker);
     let mut x = mem.buf(n);
@@ -56,6 +59,7 @@ pub fn cg(
     if opts.record_history {
         history.push(rr.sqrt());
     }
+    ct.record_sq(rr);
 
     let mut iters = 0;
     let mut breakdown = false;
@@ -68,6 +72,7 @@ pub fn cg(
             // iterate, and SAY SO — callers must be able to tell this
             // apart from an exhausted iteration budget
             breakdown = true;
+            ct.breakdown(iters);
             break;
         }
         let alpha = rz / pap;
@@ -94,8 +99,10 @@ pub fn cg(
         if opts.record_history {
             history.push(rr.sqrt());
         }
+        ct.record_sq(rr);
     }
 
+    ct.finish(iters, rr.sqrt(), rr <= tol2);
     IterResult {
         x: x.take(),
         iters,
@@ -125,6 +132,8 @@ pub fn cg_pipelined(
     let n_ext = a.n_ext();
     assert_eq!(n, b_own.len(), "cg_pipelined rhs length mismatch");
 
+    let _sp = trace::span_arg(tn::KRYLOV_CG_PIPELINED, n as u64);
+    let mut ct = trace::ConvergenceTrace::new(tn::KRYLOV_CG_PIPELINED);
     let default_tracker = MemTracker::new();
     let mem = mem.unwrap_or(&default_tracker);
     let mut x = mem.buf(n);
@@ -151,6 +160,7 @@ pub fn cg_pipelined(
     if opts.record_history {
         history.push(rr.sqrt());
     }
+    ct.record_sq(rr);
 
     let mut iters = 0;
     let mut breakdown = false;
@@ -179,6 +189,7 @@ pub fn cg_pipelined(
         if opts.record_history {
             history.push(rr.sqrt());
         }
+        ct.record_sq(rr);
         if rr <= tol2 {
             break;
         }
@@ -186,12 +197,14 @@ pub fn cg_pipelined(
         let denom = delta - beta / alpha * gamma_new;
         if denom <= 0.0 || !denom.is_finite() {
             breakdown = true;
+            ct.breakdown(iters);
             break; // breakdown: report the current iterate
         }
         alpha = gamma_new / denom;
         gamma = gamma_new;
     }
 
+    ct.finish(iters, rr.sqrt(), rr <= tol2);
     IterResult {
         x: x.take(),
         iters,

@@ -12,6 +12,7 @@
 use super::{gdot, gnorm, Communicator, LinearOperator};
 use crate::iterative::{IterOpts, IterResult, Precond};
 use crate::metrics::MemTracker;
+use crate::trace::{self, names as tn};
 
 /// Solve `A x = b` with right-preconditioned restarted GMRES(m),
 /// `x0 = 0`.  `restart` is the Krylov basis size between restarts.
@@ -31,6 +32,8 @@ pub fn gmres(
     let n_glob = comm.all_reduce_sum(n as f64) as usize;
     let restart = restart.max(1).min(n_glob);
 
+    let _sp = trace::span_arg(tn::KRYLOV_GMRES, n as u64);
+    let mut ct = trace::ConvergenceTrace::new(tn::KRYLOV_GMRES);
     let default_tracker = MemTracker::new();
     let mem = mem.unwrap_or(&default_tracker);
     let mut x = mem.buf(n);
@@ -50,8 +53,14 @@ pub fn gmres(
     if opts.record_history {
         history.push(beta);
     }
+    ct.record(beta);
 
+    let mut first_cycle = true;
     'outer: while beta > opts.tol && total_iters < opts.max_iters {
+        if !first_cycle {
+            ct.restart();
+        }
+        first_cycle = false;
         basis.clear();
         let mut v0 = r.data.to_vec();
         for vi in v0.iter_mut() {
@@ -98,6 +107,7 @@ pub fn gmres(
             // new rotation
             let denom = (h[k][k] * h[k][k] + h[k + 1][k] * h[k + 1][k]).sqrt();
             if denom == 0.0 {
+                ct.breakdown(total_iters);
                 k_used = k;
                 break;
             }
@@ -113,6 +123,7 @@ pub fn gmres(
             if opts.record_history {
                 history.push(res);
             }
+            ct.record(res);
             if res <= opts.tol {
                 break;
             }
@@ -153,6 +164,7 @@ pub fn gmres(
         }
     }
 
+    ct.finish(total_iters, beta, beta <= opts.tol);
     IterResult {
         x: x.take(),
         iters: total_iters,

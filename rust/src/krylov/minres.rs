@@ -12,6 +12,7 @@
 use super::{gdot, Communicator, LinearOperator};
 use crate::iterative::{IterOpts, IterResult, Precond};
 use crate::metrics::MemTracker;
+use crate::trace::{self, names as tn};
 
 /// Solve `A x = b` for symmetric (indefinite OK) `A` with
 /// preconditioned MINRES, `x0 = 0`.
@@ -27,6 +28,8 @@ pub fn minres(
     let n_ext = a.n_ext();
     assert_eq!(n, b_own.len(), "minres rhs length mismatch");
 
+    let _sp = trace::span_arg(tn::KRYLOV_MINRES, n as u64);
+    let mut ct = trace::ConvergenceTrace::new(tn::KRYLOV_MINRES);
     let default_tracker = MemTracker::new();
     let mem = mem.unwrap_or(&default_tracker);
 
@@ -44,16 +47,20 @@ pub fn minres(
     let mut beta1 = gdot(comm, &r2, &y);
     if beta1 < 0.0 {
         // preconditioner not SPD
+        let residual = gdot(comm, b_own, b_own).sqrt();
+        ct.breakdown(0);
+        ct.finish(0, residual, false);
         return IterResult {
             x: x.data.to_vec(),
             iters: 0,
-            residual: gdot(comm, b_own, b_own).sqrt(),
+            residual,
             converged: false,
             breakdown: true,
             history: vec![],
         };
     }
     if beta1 == 0.0 {
+        ct.finish(0, 0.0, true);
         return IterResult {
             x: x.data.to_vec(),
             iters: 0,
@@ -76,6 +83,7 @@ pub fn minres(
     if opts.record_history {
         history.push(phibar);
     }
+    ct.record(phibar);
 
     let mut iters = 0;
     let mut converged = false;
@@ -108,6 +116,7 @@ pub fn minres(
         let betasq = gdot(comm, &r2, &y);
         if betasq < 0.0 {
             breakdown = true;
+            ct.breakdown(iters);
             break; // preconditioner lost positive-definiteness
         }
         beta = betasq.sqrt();
@@ -137,6 +146,7 @@ pub fn minres(
         if opts.record_history {
             history.push(phibar);
         }
+        ct.record(phibar);
         if phibar <= opts.tol {
             converged = true;
             break;
@@ -155,6 +165,7 @@ pub fn minres(
     let residual = comm.all_reduce_sum(rr).sqrt();
 
     let converged = converged || residual <= opts.tol * 10.0;
+    ct.finish(iters, residual, converged);
     IterResult {
         x: x.data.to_vec(),
         iters,

@@ -63,6 +63,7 @@ pub mod optim;
 pub mod runtime;
 pub mod sparse;
 pub mod tensor;
+pub mod trace;
 pub mod util;
 
 pub use error::{Error, Result};

@@ -294,6 +294,61 @@ mod tests {
     }
 
     #[test]
+    fn l4_covers_trace_span_names_and_cross_file_duplicates() {
+        // a literal passed to a trace probe must be declared in
+        // trace/names.rs (or metrics/names.rs — one shared registry)
+        let names = SourceFile::scan(
+            "trace/names.rs",
+            "pub const A: &str = \"job.exec\";\n".to_string(),
+        );
+        let user_bad = SourceFile::scan(
+            "engine/x.rs",
+            "fn f() { let _s = trace::span(\"job.bogus\"); }\n".to_string(),
+        );
+        let diags = lint_files(&[names, user_bad]);
+        assert!(
+            diags.iter().any(|d| d.rule == "L4" && d.message.contains("job.bogus")),
+            "{diags:?}"
+        );
+
+        let names = SourceFile::scan(
+            "trace/names.rs",
+            "pub const A: &str = \"job.exec\";\n".to_string(),
+        );
+        let user_ok = SourceFile::scan(
+            "engine/x.rs",
+            "fn f(id: u64) { trace::event_job(\"job.exec\", id, \"linear\", 0); }\n".to_string(),
+        );
+        assert!(lint_files(&[names, user_ok]).is_empty());
+
+        // the same name declared in BOTH registries is a duplicate
+        let m = SourceFile::scan(
+            "metrics/names.rs",
+            "pub const A: &str = \"engine.completed\";\n".to_string(),
+        );
+        let t = SourceFile::scan(
+            "trace/names.rs",
+            "pub const B: &str = \"engine.completed\";\n".to_string(),
+        );
+        let diags = lint_files(&[m, t]);
+        assert!(
+            diags
+                .iter()
+                .any(|d| d.rule == "L4" && d.message.contains("declared twice")),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn trace_module_is_strict_indexed() {
+        let strict = lint_snippet("trace/x.rs", "fn f(v: &[u8]) -> u8 { v[0] }\n");
+        assert!(
+            strict.iter().any(|d| d.rule == "L1" && d.message.contains("index")),
+            "trace/ must be under the strict-indexing sub-rule: {strict:?}"
+        );
+    }
+
+    #[test]
     fn l5_fires_inside_no_alloc_bodies_only() {
         let fire = lint_snippet(
             "direct/x.rs",

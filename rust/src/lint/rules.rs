@@ -21,6 +21,7 @@ pub const STRICT_INDEX_MODULES: &[&str] = &[
     "coordinator/",
     "runtime/",
     "lint/",
+    "trace/",
 ];
 
 const L1_TOKENS: &[&str] = &[
@@ -603,14 +604,23 @@ fn binding_name_before(code: &str, pos: usize) -> Option<String> {
 // L4 metrics hygiene
 // ---------------------------------------------------------------------
 
-/// Collect metric names declared in `metrics/names.rs`, flagging
-/// duplicate declarations.
+/// The files that declare the observable-name vocabulary.  Metric
+/// names and trace span names share one grammar and one registry, so a
+/// name declared in BOTH files is a cross-file duplicate and flagged.
+pub const NAME_REGISTRY_FILES: &[&str] = &["metrics/names.rs", "trace/names.rs"];
+
+/// Collect metric and trace-span names declared in the registry files
+/// ([`NAME_REGISTRY_FILES`]), flagging duplicate declarations — within
+/// one file or across the two.
 pub fn l4_collect_registered(
     files: &[SourceFile],
     diags: &mut Vec<Diagnostic>,
 ) -> HashSet<String> {
-    let mut registered: HashMap<String, usize> = HashMap::new();
-    for f in files.iter().filter(|f| f.rel == "metrics/names.rs") {
+    let mut registered: HashMap<String, (String, usize)> = HashMap::new();
+    for f in files
+        .iter()
+        .filter(|f| NAME_REGISTRY_FILES.contains(&f.rel.as_str()))
+    {
         for pos in find_all(&f.code, ": &str =") {
             if f.in_test_region(pos) {
                 continue;
@@ -619,16 +629,16 @@ pub fn l4_collect_registered(
                 continue;
             };
             let line = f.line_of(pos);
-            if let Some(first) = registered.get(&lit) {
+            if let Some((first_file, first)) = registered.get(&lit) {
                 push(
                     diags,
                     f,
                     line,
                     "L4",
-                    format!("metric name \"{lit}\" declared twice (first at line {first})"),
+                    format!("name \"{lit}\" declared twice (first at {first_file}:{first})"),
                 );
             } else {
-                registered.insert(lit, line);
+                registered.insert(lit, (f.rel.clone(), line));
             }
         }
     }
@@ -654,13 +664,23 @@ fn metric_shaped(name: &str) -> bool {
 }
 
 /// L4: string literals passed to `Registry::incr`/`get`/`incr_labeled`
-/// must be declared in `metrics/names.rs`; `format!`-built names must
-/// go through `incr_labeled` with a declared base.
+/// or to the trace probes (`trace::span`/`span_arg`/`event`/`event_job`)
+/// must be declared in a registry file (`metrics/names.rs` or
+/// `trace/names.rs`); `format!`-built names must go through
+/// `incr_labeled` with a declared base.
 pub fn l4_metric_names(f: &SourceFile, registered: &HashSet<String>, diags: &mut Vec<Diagnostic>) {
-    if f.rel == "metrics/names.rs" {
+    if NAME_REGISTRY_FILES.contains(&f.rel.as_str()) {
         return;
     }
-    for method in [".incr(", ".get(", ".incr_labeled("] {
+    for method in [
+        ".incr(",
+        ".get(",
+        ".incr_labeled(",
+        "trace::span(",
+        "trace::span_arg(",
+        "trace::event(",
+        "trace::event_job(",
+    ] {
         for pos in find_all(&f.code, method) {
             if f.in_test_region(pos) {
                 continue;
@@ -708,7 +728,9 @@ pub fn l4_metric_names(f: &SourceFile, registered: &HashSet<String>, diags: &mut
                     f,
                     line,
                     "L4",
-                    format!("metric name \"{lit}\" is not declared in metrics/names.rs"),
+                    format!(
+                        "name \"{lit}\" is not declared in metrics/names.rs or trace/names.rs"
+                    ),
                 );
             }
         }

@@ -10,6 +10,13 @@
 //!                                nonlinear/eig/adjoint/dist) open-loop
 //!                                workload through the engine; print
 //!                                per-kind p50/p95/p99 + affinity stats
+//!   serve-sim --trace PATH       additionally record an rsla-trace
+//!                                profile (chrome://tracing JSON, or
+//!                                JSONL when PATH ends in .jsonl)
+//!   trace [--out PATH]           run a small mixed workload with the
+//!                                tracer on and export the profile
+//!   metrics [--requests N]       run a small mixed workload and dump
+//!                                every counter registry as JSON
 //!   dist --g G --ranks P [--precond jacobi|amg]   distributed CG demo
 
 use std::sync::Arc;
@@ -78,6 +85,86 @@ impl Args {
     }
 }
 
+/// Merge counter snapshots from several registries into one sorted
+/// list — the single source every CLI stat report reads from, instead
+/// of each command probing registries counter-by-counter.
+fn merged_snapshot(regs: &[&rsla::metrics::Registry]) -> Vec<(String, u64)> {
+    let mut m = std::collections::BTreeMap::new();
+    for reg in regs {
+        for (k, v) in reg.snapshot() {
+            *m.entry(k).or_insert(0u64) += v;
+        }
+    }
+    m.into_iter().collect()
+}
+
+fn counter(snap: &[(String, u64)], name: &str) -> u64 {
+    snap.iter()
+        .find(|(k, _)| k == name)
+        .map(|(_, v)| *v)
+        .unwrap_or(0)
+}
+
+/// Render a merged snapshot as a flat JSON object (sorted keys).
+fn metrics_json(snap: &[(String, u64)]) -> String {
+    let mut s = String::from("{");
+    for (i, (k, v)) in snap.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!("\n  \"{k}\": {v}"));
+    }
+    if !snap.is_empty() {
+        s.push('\n');
+    }
+    s.push('}');
+    s
+}
+
+/// Factor-cache effectiveness line, fed by a merged snapshot.
+fn report_factor_cache(snap: &[(String, u64)]) {
+    let hits = counter(snap, "factor_cache.hit.numeric") + counter(snap, "factor_cache.hit.symbolic");
+    let misses = counter(snap, "factor_cache.miss");
+    let lookups = hits + misses;
+    println!(
+        "factor cache: {:.0}% hit rate ({} numeric + {} symbolic hits, {} misses, {} evictions, {} refactorizations)",
+        if lookups > 0 { 100.0 * hits as f64 / lookups as f64 } else { 0.0 },
+        counter(snap, "factor_cache.hit.numeric"),
+        counter(snap, "factor_cache.hit.symbolic"),
+        misses,
+        counter(snap, "factor_cache.eviction"),
+        counter(snap, "factor_cache.numeric_factorizations"),
+    );
+}
+
+/// Roofline format-selection line, fed by a merged snapshot; silent
+/// when no decision was recorded.
+fn report_spmv_formats(snap: &[(String, u64)], suffix: &str) {
+    let (csr, sell) = (counter(snap, "spmv.format.csr"), counter(snap, "spmv.format.sell"));
+    if csr + sell > 0 || !suffix.is_empty() {
+        println!("spmv formats (roofline): csr={csr} sell={sell}{suffix}");
+    }
+}
+
+/// Stop the tracer, export its snapshot to `path` (chrome://tracing
+/// JSON, or JSONL when the path ends in `.jsonl`), and print the
+/// shutdown summary.
+fn export_trace(path: &str) {
+    let tracer = rsla::trace::Tracer::global();
+    tracer.disable();
+    let snap = tracer.snapshot();
+    let text = if path.ends_with(".jsonl") {
+        rsla::trace::export::jsonl(&snap)
+    } else {
+        rsla::trace::export::chrome_trace_json(&snap)
+    };
+    match std::fs::write(path, &text) {
+        Ok(()) => println!("trace: wrote {} records to {path}", snap.spans.len() + snap.convs.len()),
+        Err(e) => eprintln!("trace: failed to write {path}: {e}"),
+    }
+    print!("{}", rsla::trace::TraceSummary::of(&snap));
+}
+
 fn dispatcher(accel: bool) -> Arc<Dispatcher> {
     if accel {
         match RuntimeHandle::spawn_default() {
@@ -99,15 +186,19 @@ fn main() {
         "explain" => cmd_explain(&args),
         "solve" => cmd_solve(&args),
         "serve-sim" => cmd_serve_sim(&args),
+        "trace" => cmd_trace(&args),
+        "metrics" => cmd_metrics(&args),
         "dist" => cmd_dist(&args),
         _ => {
             println!(
                 "rsla — differentiable sparse linear algebra (torch-sla reproduction)\n\n\
-                 usage: rsla <backends|explain|solve|serve-sim|dist> [--key value]\n\
+                 usage: rsla <backends|explain|solve|serve-sim|trace|metrics|dist> [--key value]\n\
                  \x20 backends                      list backends + artifacts\n\
                  \x20 explain --n N [--accel]       dispatch decision for size N\n\
                  \x20 solve --g G [--backend B] [--accel] [--csr]\n\
-                 \x20 serve-sim [--requests N] [--workers W] [--mixed]\n\
+                 \x20 serve-sim [--requests N] [--workers W] [--mixed] [--trace PATH]\n\
+                 \x20 trace [--out PATH] [--requests N] [--workers W]\n\
+                 \x20 metrics [--requests N] [--workers W]\n\
                  \x20 dist --g G --ranks P"
             );
         }
@@ -190,14 +281,14 @@ fn cmd_solve(args: &Args) {
         Err(e) => println!("solve failed: {e}"),
     }
     // the roofline cost model records every per-matrix format decision
-    let reg = rsla::metrics::Registry::global();
-    let (fmt_csr, fmt_sell) = (reg.get("spmv.format.csr"), reg.get("spmv.format.sell"));
-    if fmt_csr + fmt_sell > 0 {
-        println!("spmv format (roofline): csr={fmt_csr} sell={fmt_sell}");
-    }
+    let snap = merged_snapshot(&[rsla::metrics::Registry::global()]);
+    report_spmv_formats(&snap, "");
 }
 
 fn cmd_serve_sim(args: &Args) {
+    if args.kv.contains_key("trace") {
+        rsla::trace::Tracer::global().enable();
+    }
     if args.flags.contains("mixed") {
         return cmd_serve_mixed(args);
     }
@@ -253,22 +344,14 @@ fn cmd_serve_sim(args: &Args) {
     // factor-cache effectiveness across the request stream.  Counters
     // land in TWO registries: the dispatcher's (single solves routed
     // through solver_fn / native-direct) and the service's (the
-    // factorize-once batched path) — sum both or the report undercounts
-    // the dominant batched traffic.
-    let count = |name: &str| d.metrics.get(name) + svc.metrics.get(name);
-    let hits = count("factor_cache.hit.numeric") + count("factor_cache.hit.symbolic");
-    let misses = count("factor_cache.miss");
-    let lookups = hits + misses;
-    println!(
-        "factor cache: {:.0}% hit rate ({} numeric + {} symbolic hits, {} misses, {} evictions, {} refactorizations)",
-        if lookups > 0 { 100.0 * hits as f64 / lookups as f64 } else { 0.0 },
-        count("factor_cache.hit.numeric"),
-        count("factor_cache.hit.symbolic"),
-        misses,
-        count("factor_cache.eviction"),
-        count("factor_cache.numeric_factorizations"),
-    );
+    // factorize-once batched path) — merge both or the report
+    // undercounts the dominant batched traffic.
+    let snap = merged_snapshot(&[&d.metrics, &svc.metrics]);
+    report_factor_cache(&snap);
     svc.shutdown();
+    if let Some(path) = args.kv.get("trace") {
+        export_trace(path);
+    }
 }
 
 /// Mixed-family open-loop workload through the engine: every JobKind,
@@ -352,17 +435,90 @@ fn cmd_serve_mixed(args: &Args) {
     );
     // format decisions land in the engine registry (engine-held
     // operators) and the process-global one (the backend dispatch
-    // path); report both so no decision goes missing
-    let fmt = |name: &str| engine.metrics.get(name) + rsla::metrics::Registry::global().get(name);
-    println!(
-        "spmv formats (roofline): csr={} sell={} (latency table windowed to the last 256 jobs/kind)",
-        fmt("spmv.format.csr"),
-        fmt("spmv.format.sell"),
-    );
+    // path); merge both so no decision goes missing
+    let snap = merged_snapshot(&[&engine.metrics, rsla::metrics::Registry::global()]);
+    report_spmv_formats(&snap, " (latency table windowed to the last 256 jobs/kind)");
     engine.shutdown();
+    if let Some(path) = args.kv.get("trace") {
+        export_trace(path);
+    }
     if failures > 0 {
         std::process::exit(1);
     }
+}
+
+/// Run a small mixed workload with the tracer recording from the first
+/// submission, then export the profile and print the span summary.
+fn cmd_trace(args: &Args) {
+    let out = args
+        .kv
+        .get("out")
+        .cloned()
+        .unwrap_or_else(|| "trace.json".into());
+    rsla::trace::Tracer::global().enable();
+    let (requests, workers) = (args.usize_or("requests", 48), args.usize_or("workers", 2));
+    let failures = run_mixed_quiet(requests, workers);
+    export_trace(&out);
+    if failures > 0 {
+        std::process::exit(1);
+    }
+}
+
+/// Run a small mixed workload, then dump every counter (engine registry
+/// merged with the process-global one) as JSON on stdout.
+fn cmd_metrics(args: &Args) {
+    let (requests, workers) = (args.usize_or("requests", 48), args.usize_or("workers", 2));
+    let engine = Engine::start(
+        dispatcher(false),
+        EngineConfig {
+            workers,
+            ..Default::default()
+        },
+    );
+    let mut workload = MixedWorkload::new(&[16, 20, 24], 42);
+    workload.multi_rhs = 4;
+    let mut tickets: Vec<Ticket> = Vec::new();
+    for i in 0..requests {
+        tickets.push(engine.submit(workload.spec(i)).expect("admission"));
+    }
+    let mut failures = 0usize;
+    for t in tickets {
+        if t.wait().outcome.is_err() {
+            failures += 1;
+        }
+    }
+    let snap = merged_snapshot(&[&engine.metrics, rsla::metrics::Registry::global()]);
+    engine.shutdown();
+    println!("{}", metrics_json(&snap));
+    if failures > 0 {
+        std::process::exit(1);
+    }
+}
+
+/// Drive `requests` mixed-family jobs through a fresh engine without
+/// printing the latency table; returns the failure count.
+fn run_mixed_quiet(requests: usize, workers: usize) -> usize {
+    let engine = Engine::start(
+        dispatcher(false),
+        EngineConfig {
+            workers,
+            ..Default::default()
+        },
+    );
+    let mut workload = MixedWorkload::new(&[16, 20, 24], 42);
+    workload.multi_rhs = 4;
+    let mut tickets: Vec<Ticket> = Vec::new();
+    for i in 0..requests {
+        tickets.push(engine.submit(workload.spec(i)).expect("admission"));
+    }
+    let mut failures = 0usize;
+    for t in tickets {
+        if t.wait().outcome.is_err() {
+            failures += 1;
+        }
+    }
+    engine.shutdown();
+    failures
 }
 
 fn cmd_dist(args: &Args) {

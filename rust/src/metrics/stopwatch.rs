@@ -2,11 +2,19 @@
 
 use std::time::{Duration, Instant};
 
+/// Laps a [`Stopwatch`] can hold; `lap` past this drops the lap (the
+/// duration is still returned) rather than growing storage.
+pub const MAX_LAPS: usize = 32;
+
 /// Simple stopwatch with named laps (per-phase profiling in §Perf).
+/// Lap names are `&'static str` and lap storage is a fixed inline
+/// array, so `lap` never allocates — it is safe to call from warm
+/// paths that carry `no_alloc` pins.
 pub struct Stopwatch {
     start: Instant,
     last: Instant,
-    laps: Vec<(String, Duration)>,
+    laps: [(&'static str, Duration); MAX_LAPS],
+    n_laps: usize,
 }
 
 impl Default for Stopwatch {
@@ -21,16 +29,23 @@ impl Stopwatch {
         Stopwatch {
             start: now,
             last: now,
-            laps: Vec::new(),
+            laps: [("", Duration::ZERO); MAX_LAPS],
+            n_laps: 0,
         }
     }
 
     /// Record the time since the previous lap under `name`.
-    pub fn lap(&mut self, name: &str) -> Duration {
+    /// Allocation-free: the name is a static label and the lap lands in
+    /// preallocated inline storage (laps past [`MAX_LAPS`] are dropped).
+    // rsla-lint: no_alloc
+    pub fn lap(&mut self, name: &'static str) -> Duration {
         let now = Instant::now();
-        let d = now - self.last;
+        let d = now.checked_duration_since(self.last).unwrap_or_default();
         self.last = now;
-        self.laps.push((name.to_string(), d));
+        if let Some(slot) = self.laps.get_mut(self.n_laps) {
+            *slot = (name, d);
+            self.n_laps += 1;
+        }
         d
     }
 
@@ -38,13 +53,13 @@ impl Stopwatch {
         self.start.elapsed()
     }
 
-    pub fn laps(&self) -> &[(String, Duration)] {
-        &self.laps
+    pub fn laps(&self) -> &[(&'static str, Duration)] {
+        self.laps.get(..self.n_laps).unwrap_or(&[])
     }
 
     pub fn report(&self) -> String {
         let mut s = String::new();
-        for (name, d) in &self.laps {
+        for (name, d) in self.laps() {
             s.push_str(&format!("  {name:<28} {:>10.3} ms\n", d.as_secs_f64() * 1e3));
         }
         s.push_str(&format!(
@@ -90,8 +105,21 @@ mod tests {
         sw.lap("a");
         sw.lap("b");
         assert_eq!(sw.laps().len(), 2);
+        assert_eq!(sw.laps()[0].0, "a");
         assert!(sw.laps()[0].1 >= Duration::from_millis(1));
         assert!(sw.report().contains("TOTAL"));
+    }
+
+    #[test]
+    fn laps_past_capacity_are_dropped_not_grown() {
+        let mut sw = Stopwatch::new();
+        for _ in 0..MAX_LAPS + 5 {
+            sw.lap("x");
+        }
+        assert_eq!(sw.laps().len(), MAX_LAPS);
+        // the duration is still measured and returned for dropped laps
+        assert!(sw.lap("y") >= Duration::ZERO);
+        assert_eq!(sw.laps().len(), MAX_LAPS);
     }
 
     #[test]

@@ -1,0 +1,728 @@
+//! Trace exporters: chrome://tracing JSON (loads in Perfetto), compact
+//! JSONL, a dependency-free chrome-trace schema validator (used by the
+//! test suite and by `rsla trace --check`), and the human-readable
+//! [`TraceSummary`] printed at shutdown.
+//!
+//! All aggregation runs over `BTreeMap`s so the output order is
+//! deterministic (L3) and the exported files diff cleanly run-to-run
+//! modulo timestamps.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use super::{ConvRecord, Phase, Span, TraceSnapshot, HISTORY_RING};
+
+// ---------------------------------------------------------------------
+// serialization helpers
+// ---------------------------------------------------------------------
+
+fn escape_into(out: &mut String, s: &str) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+}
+
+/// JSON has no NaN/inf; clamp non-finite floats to null.
+fn push_f64(out: &mut String, v: f64) {
+    if v.is_finite() {
+        out.push_str(&format!("{v:e}"));
+    } else {
+        out.push_str("null");
+    }
+}
+
+fn push_common_args(out: &mut String, job_id: u64, job_kind: &str, hash: u64, worker: u32) {
+    out.push_str(&format!("\"job\":{job_id}"));
+    out.push_str(",\"kind\":\"");
+    escape_into(out, job_kind);
+    out.push('"');
+    out.push_str(&format!(",\"structure_hash\":\"{hash:#018x}\""));
+    if worker != u32::MAX {
+        out.push_str(&format!(",\"worker\":{worker}"));
+    }
+}
+
+fn push_span_event(out: &mut String, s: &Span) {
+    out.push_str("{\"name\":\"");
+    escape_into(out, s.name);
+    out.push_str("\",\"ph\":\"");
+    match s.phase {
+        Phase::Span => out.push('X'),
+        Phase::Event => out.push('i'),
+    }
+    out.push_str(&format!(
+        "\",\"ts\":{:.3},\"pid\":0,\"tid\":{}",
+        s.t_start_ns as f64 / 1_000.0,
+        s.thread
+    ));
+    match s.phase {
+        Phase::Span => {
+            let dur = s.t_end_ns.saturating_sub(s.t_start_ns);
+            out.push_str(&format!(",\"dur\":{:.3}", dur as f64 / 1_000.0));
+        }
+        Phase::Event => out.push_str(",\"s\":\"t\""),
+    }
+    out.push_str(",\"args\":{");
+    push_common_args(out, s.job_id, s.job_kind, s.structure_hash, s.worker);
+    out.push_str(&format!(
+        ",\"span_id\":{},\"parent\":{},\"arg\":{}}}}}",
+        s.id, s.parent, s.arg
+    ));
+}
+
+/// The ring holds the LAST `min(total, HISTORY_RING)` norms with the
+/// oldest at `total % HISTORY_RING`; unwrap to chronological order.
+fn history_chronological(rec: &ConvRecord) -> Vec<f64> {
+    let kept = (rec.hist_total as usize).min(HISTORY_RING);
+    let start = if (rec.hist_total as usize) > HISTORY_RING {
+        (rec.hist_total as usize) % HISTORY_RING
+    } else {
+        0
+    };
+    let mut out = Vec::with_capacity(kept);
+    for k in 0..kept {
+        if let Some(v) = rec.history.get((start + k) % HISTORY_RING) {
+            out.push(*v);
+        }
+    }
+    out
+}
+
+fn push_conv_event(out: &mut String, c: &ConvRecord) {
+    out.push_str("{\"name\":\"");
+    escape_into(out, c.name);
+    out.push_str(&format!(
+        "\",\"ph\":\"i\",\"s\":\"t\",\"ts\":{:.3},\"pid\":0,\"tid\":{}",
+        c.t_ns as f64 / 1_000.0,
+        c.thread
+    ));
+    out.push_str(",\"args\":{");
+    push_common_args(out, c.job_id, c.job_kind, c.structure_hash, u32::MAX);
+    out.push_str(&format!(
+        ",\"iters\":{},\"converged\":{},\"breakdown\":{},\"restarts\":{},\
+         \"reduce_rounds\":{},\"halo_bytes\":{},\"residual\":",
+        c.iters, c.converged, c.breakdown, c.restarts, c.reduce_rounds, c.halo_bytes
+    ));
+    push_f64(out, c.residual);
+    out.push_str(&format!(",\"history_total\":{},\"history_tail\":[", c.hist_total));
+    for (k, v) in history_chronological(c).iter().enumerate() {
+        if k > 0 {
+            out.push(',');
+        }
+        push_f64(out, *v);
+    }
+    out.push_str("]}}");
+}
+
+/// Serialize a snapshot in chrome://tracing object format; the result
+/// loads directly in Perfetto / `chrome://tracing`.
+pub fn chrome_trace_json(snap: &TraceSnapshot) -> String {
+    let mut out = String::with_capacity(128 * (snap.spans.len() + snap.convs.len()) + 64);
+    out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+    let mut first = true;
+    for s in &snap.spans {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push('\n');
+        push_span_event(&mut out, s);
+    }
+    for c in &snap.convs {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push('\n');
+        push_conv_event(&mut out, c);
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+/// Compact JSONL: one record per line (`type` is `span`, `event`, or
+/// `conv`), times in integer nanoseconds — the machine-diffable form.
+pub fn jsonl(snap: &TraceSnapshot) -> String {
+    let mut out = String::with_capacity(96 * (snap.spans.len() + snap.convs.len()));
+    for s in &snap.spans {
+        let ty = match s.phase {
+            Phase::Span => "span",
+            Phase::Event => "event",
+        };
+        out.push_str(&format!(
+            "{{\"type\":\"{ty}\",\"name\":\"{}\",\"t0\":{},\"t1\":{},\"id\":{},\"parent\":{},\
+             \"thread\":{},\"job\":{},\"kind\":\"{}\",\"hash\":{},\"worker\":{},\"arg\":{}}}\n",
+            s.name,
+            s.t_start_ns,
+            s.t_end_ns,
+            s.id,
+            s.parent,
+            s.thread,
+            s.job_id,
+            s.job_kind,
+            s.structure_hash,
+            s.worker,
+            s.arg
+        ));
+    }
+    for c in &snap.convs {
+        out.push_str(&format!(
+            "{{\"type\":\"conv\",\"name\":\"{}\",\"t\":{},\"thread\":{},\"job\":{},\
+             \"kind\":\"{}\",\"iters\":{},\"residual\":",
+            c.name, c.t_ns, c.thread, c.job_id, c.job_kind, c.iters
+        ));
+        push_f64(&mut out, c.residual);
+        out.push_str(&format!(
+            ",\"converged\":{},\"breakdown\":{},\"restarts\":{},\"reduce_rounds\":{},\
+             \"halo_bytes\":{},\"history_total\":{},\"history_tail\":[",
+            c.converged, c.breakdown, c.restarts, c.reduce_rounds, c.halo_bytes, c.hist_total
+        ));
+        for (k, v) in history_chronological(c).iter().enumerate() {
+            if k > 0 {
+                out.push(',');
+            }
+            push_f64(&mut out, *v);
+        }
+        out.push_str("]}\n");
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// chrome-trace schema validation (dependency-free)
+// ---------------------------------------------------------------------
+
+/// What a validated trace contained.
+#[derive(Clone, Debug, Default)]
+pub struct ChromeTraceStats {
+    pub events: usize,
+    /// `ph: "X"` complete spans.
+    pub complete: usize,
+    /// `ph: "i"` instant events.
+    pub instants: usize,
+    /// Distinct event names seen.
+    pub names: std::collections::BTreeSet<String>,
+    /// Distinct `args.kind` values seen (job kinds).
+    pub kinds: std::collections::BTreeSet<String>,
+}
+
+enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    fn get<'a>(&'a self, key: &str) -> Option<&'a Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+    fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    fn as_num(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let c = self.peek();
+        if c.is_some() {
+            self.pos += 1;
+        }
+        c
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn consume(&mut self, want: u8) -> Result<(), String> {
+        self.skip_ws();
+        match self.bump() {
+            Some(c) if c == want => Ok(()),
+            got => Err(format!(
+                "expected '{}' at byte {}, got {:?}",
+                want as char,
+                self.pos,
+                got.map(|b| b as char)
+            )),
+        }
+    }
+
+    fn literal(&mut self, word: &str, value: Json) -> Result<Json, String> {
+        for want in word.bytes() {
+            if self.bump() != Some(want) {
+                return Err(format!("malformed literal near byte {}", self.pos));
+            }
+        }
+        Ok(value)
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => self.string().map(Json::Str),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number().map(Json::Num),
+            other => Err(format!(
+                "unexpected {:?} at byte {}",
+                other.map(|b| b as char),
+                self.pos
+            )),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.consume(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.consume(b':')?;
+            let val = self.value()?;
+            fields.push((key, val));
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b'}') => return Ok(Json::Obj(fields)),
+                got => {
+                    return Err(format!(
+                        "expected ',' or '}}' at byte {}, got {:?}",
+                        self.pos,
+                        got.map(|b| b as char)
+                    ))
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.consume(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b']') => return Ok(Json::Arr(items)),
+                got => {
+                    return Err(format!(
+                        "expected ',' or ']' at byte {}, got {:?}",
+                        self.pos,
+                        got.map(|b| b as char)
+                    ))
+                }
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.consume(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.bump() {
+                Some(b'"') => return Ok(out),
+                Some(b'\\') => match self.bump() {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'b') | Some(b'f') => {}
+                    Some(b'u') => {
+                        let mut code = 0u32;
+                        for _ in 0..4 {
+                            let d = self
+                                .bump()
+                                .and_then(|b| (b as char).to_digit(16))
+                                .ok_or_else(|| format!("bad \\u escape at byte {}", self.pos))?;
+                            code = code * 16 + d;
+                        }
+                        out.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                    }
+                    other => return Err(format!("bad escape {other:?} at byte {}", self.pos)),
+                },
+                Some(c) => out.push(c as char),
+                None => return Err("unterminated string".to_string()),
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<f64, String> {
+        let start = self.pos;
+        while matches!(
+            self.peek(),
+            Some(b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+        ) {
+            self.pos += 1;
+        }
+        let text = self
+            .bytes
+            .get(start..self.pos)
+            .and_then(|b| std::str::from_utf8(b).ok())
+            .ok_or_else(|| format!("bad number at byte {start}"))?;
+        text.parse::<f64>()
+            .map_err(|e| format!("bad number \"{text}\" at byte {start}: {e}"))
+    }
+}
+
+/// Parse `text` as chrome-trace JSON and check the event schema:
+/// top-level object with a `traceEvents` array; every event has
+/// string `name`/`ph`, numeric `ts`/`pid`/`tid`; `ph:"X"` events carry
+/// a non-negative `dur`; `ph:"i"` events carry a scope `s`.
+pub fn validate_chrome_trace(text: &str) -> Result<ChromeTraceStats, String> {
+    let mut p = Parser {
+        bytes: text.as_bytes(),
+        pos: 0,
+    };
+    let doc = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return Err(format!("trailing bytes after document at {}", p.pos));
+    }
+    let events = match doc.get("traceEvents") {
+        Some(Json::Arr(items)) => items,
+        Some(_) => return Err("traceEvents is not an array".to_string()),
+        None => return Err("top-level object lacks traceEvents".to_string()),
+    };
+    let mut stats = ChromeTraceStats::default();
+    for (i, ev) in events.iter().enumerate() {
+        let name = ev
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("event {i}: missing string name"))?;
+        let ph = ev
+            .get("ph")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("event {i}: missing string ph"))?;
+        for key in ["ts", "pid", "tid"] {
+            ev.get(key)
+                .and_then(Json::as_num)
+                .ok_or_else(|| format!("event {i} ({name}): missing numeric {key}"))?;
+        }
+        match ph {
+            "X" => {
+                let dur = ev
+                    .get("dur")
+                    .and_then(Json::as_num)
+                    .ok_or_else(|| format!("event {i} ({name}): ph X without dur"))?;
+                if dur < 0.0 {
+                    return Err(format!("event {i} ({name}): negative dur"));
+                }
+                stats.complete += 1;
+            }
+            "i" => {
+                ev.get("s")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| format!("event {i} ({name}): ph i without scope s"))?;
+                stats.instants += 1;
+            }
+            "M" => {}
+            other => return Err(format!("event {i} ({name}): unknown ph \"{other}\"")),
+        }
+        if let Some(kind) = ev.get("args").and_then(|a| a.get("kind")).and_then(Json::as_str) {
+            if !kind.is_empty() {
+                stats.kinds.insert(kind.to_string());
+            }
+        }
+        stats.names.insert(name.to_string());
+        stats.events += 1;
+    }
+    Ok(stats)
+}
+
+// ---------------------------------------------------------------------
+// summary
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Debug, Default)]
+struct NameStat {
+    count: u64,
+    total_ns: u64,
+    max_ns: u64,
+    events: u64,
+}
+
+#[derive(Clone, Debug, Default)]
+struct ConvStat {
+    solves: u64,
+    iters_total: u64,
+    iters_max: u64,
+    breakdowns: u64,
+    unconverged: u64,
+    reduce_rounds: u64,
+    halo_bytes: u64,
+}
+
+/// Per-phase and per-kernel aggregates of one snapshot — the shutdown
+/// report `serve-sim` prints next to its hit-rate stats.
+#[derive(Clone, Debug, Default)]
+pub struct TraceSummary {
+    spans: BTreeMap<&'static str, NameStat>,
+    /// `job.exec` stats keyed by job kind.
+    kinds: BTreeMap<&'static str, NameStat>,
+    convs: BTreeMap<&'static str, ConvStat>,
+    pub total_records: usize,
+    pub threads: usize,
+    pub dropped: u64,
+}
+
+impl TraceSummary {
+    pub fn of(snap: &TraceSnapshot) -> TraceSummary {
+        let mut sum = TraceSummary {
+            total_records: snap.spans.len() + snap.convs.len(),
+            dropped: snap.dropped,
+            ..TraceSummary::default()
+        };
+        let mut threads = std::collections::BTreeSet::new();
+        for s in &snap.spans {
+            threads.insert(s.thread);
+            let stat = sum.spans.entry(s.name).or_default();
+            match s.phase {
+                Phase::Span => {
+                    let d = s.t_end_ns.saturating_sub(s.t_start_ns);
+                    stat.count += 1;
+                    stat.total_ns += d;
+                    stat.max_ns = stat.max_ns.max(d);
+                }
+                Phase::Event => stat.events += 1,
+            }
+            if s.name == super::names::JOB_EXEC && !s.job_kind.is_empty() {
+                let k = sum.kinds.entry(s.job_kind).or_default();
+                let d = s.t_end_ns.saturating_sub(s.t_start_ns);
+                k.count += 1;
+                k.total_ns += d;
+                k.max_ns = k.max_ns.max(d);
+            }
+        }
+        for c in &snap.convs {
+            threads.insert(c.thread);
+            let stat = sum.convs.entry(c.name).or_default();
+            stat.solves += 1;
+            stat.iters_total += c.iters;
+            stat.iters_max = stat.iters_max.max(c.iters);
+            stat.breakdowns += u64::from(c.breakdown);
+            stat.unconverged += u64::from(!c.converged);
+            stat.reduce_rounds += c.reduce_rounds;
+            stat.halo_bytes += c.halo_bytes;
+        }
+        sum.threads = threads.len();
+        sum
+    }
+
+    /// Count of closed spans recorded under `name`.
+    pub fn span_count(&self, name: &str) -> u64 {
+        self.spans.get(name).map(|s| s.count).unwrap_or(0)
+    }
+
+    /// Count of instant events recorded under `name`.
+    pub fn event_count(&self, name: &str) -> u64 {
+        self.spans.get(name).map(|s| s.events).unwrap_or(0)
+    }
+
+    /// Job kinds that completed at least one `job.exec` span.
+    pub fn kinds_seen(&self) -> Vec<&'static str> {
+        self.kinds.keys().copied().collect()
+    }
+
+    /// Total solves recorded by convergence telemetry under `name`.
+    pub fn conv_count(&self, name: &str) -> u64 {
+        self.convs.get(name).map(|c| c.solves).unwrap_or(0)
+    }
+}
+
+fn ms(ns: u64) -> f64 {
+    ns as f64 / 1.0e6
+}
+
+impl fmt::Display for TraceSummary {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "trace summary: {} records across {} threads ({} dropped)",
+            self.total_records, self.threads, self.dropped
+        )?;
+        if !self.spans.is_empty() {
+            writeln!(
+                f,
+                "  {:<26} {:>8} {:>8} {:>12} {:>10}",
+                "span", "count", "events", "total ms", "max ms"
+            )?;
+            for (name, s) in &self.spans {
+                writeln!(
+                    f,
+                    "  {:<26} {:>8} {:>8} {:>12.3} {:>10.3}",
+                    name,
+                    s.count,
+                    s.events,
+                    ms(s.total_ns),
+                    ms(s.max_ns)
+                )?;
+            }
+        }
+        if !self.kinds.is_empty() {
+            writeln!(f, "  job.exec by kind:")?;
+            for (kind, s) in &self.kinds {
+                writeln!(
+                    f,
+                    "    {:<24} {:>8} {:>21.3} {:>10.3}",
+                    kind,
+                    s.count,
+                    ms(s.total_ns),
+                    ms(s.max_ns)
+                )?;
+            }
+        }
+        if !self.convs.is_empty() {
+            writeln!(f, "  convergence:")?;
+            for (name, c) in &self.convs {
+                writeln!(
+                    f,
+                    "    {:<24} solves={} iters(total={} max={}) breakdowns={} unconverged={} \
+                     rounds={} halo_bytes={}",
+                    name,
+                    c.solves,
+                    c.iters_total,
+                    c.iters_max,
+                    c.breakdowns,
+                    c.unconverged,
+                    c.reduce_rounds,
+                    c.halo_bytes
+                )?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{names, ConvergenceTrace, Tracer};
+    use super::*;
+
+    fn sample_snapshot() -> TraceSnapshot {
+        let t = Tracer::new();
+        t.enable();
+        {
+            let _scope = super::super::job_scope(9, "linear", 0xABCD, 1);
+            let _g = t.span(names::JOB_EXEC);
+            t.event(names::FACTOR_MISS, 0);
+            let _s = t.span_arg(names::DIRECT_NUMERIC, 3);
+        }
+        t.snapshot()
+    }
+
+    #[test]
+    fn chrome_export_validates_and_reports_names() {
+        let snap = sample_snapshot();
+        let json = chrome_trace_json(&snap);
+        let stats = validate_chrome_trace(&json).expect("schema-valid trace");
+        assert_eq!(stats.events, 3);
+        assert_eq!(stats.complete, 2);
+        assert_eq!(stats.instants, 1);
+        assert!(stats.names.contains(names::JOB_EXEC));
+        assert!(stats.names.contains(names::FACTOR_MISS));
+        assert!(stats.kinds.contains("linear"));
+    }
+
+    #[test]
+    fn jsonl_has_one_line_per_record() {
+        let snap = sample_snapshot();
+        let text = jsonl(&snap);
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.lines().all(|l| l.starts_with('{') && l.ends_with('}')));
+    }
+
+    #[test]
+    fn conv_records_export_with_history_tail() {
+        let _serial = super::super::global_test_guard();
+        let t = Tracer::global();
+        t.enable();
+        let mut ct = ConvergenceTrace::new(names::KRYLOV_BICGSTAB);
+        ct.record(3.0);
+        ct.record(1.5);
+        ct.finish(2, 1.5, false);
+        t.disable();
+        let snap = t.snapshot();
+        let json = chrome_trace_json(&snap);
+        let stats = validate_chrome_trace(&json).expect("valid");
+        assert!(stats.names.contains(names::KRYLOV_BICGSTAB));
+        let sum = TraceSummary::of(&snap);
+        assert!(sum.conv_count(names::KRYLOV_BICGSTAB) >= 1);
+        assert!(json.contains("\"history_tail\":[3e0,1.5e0]"));
+    }
+
+    #[test]
+    fn validator_rejects_malformed_documents() {
+        assert!(validate_chrome_trace("[]").is_err(), "array top level lacks traceEvents");
+        assert!(validate_chrome_trace("{\"traceEvents\":[{}]}").is_err());
+        assert!(validate_chrome_trace(
+            "{\"traceEvents\":[{\"name\":\"a.b\",\"ph\":\"X\",\"ts\":1,\"pid\":0,\"tid\":0}]}"
+        )
+        .is_err(), "complete event without dur");
+        assert!(validate_chrome_trace(
+            "{\"traceEvents\":[{\"name\":\"a.b\",\"ph\":\"X\",\"ts\":1,\"pid\":0,\"tid\":0,\"dur\":2}]}"
+        )
+        .is_ok());
+        assert!(validate_chrome_trace("{\"traceEvents\":[").is_err());
+    }
+
+    #[test]
+    fn summary_displays_without_panicking() {
+        let snap = sample_snapshot();
+        let sum = TraceSummary::of(&snap);
+        assert_eq!(sum.span_count(names::JOB_EXEC), 1);
+        assert_eq!(sum.event_count(names::FACTOR_MISS), 1);
+        assert_eq!(sum.kinds_seen(), vec!["linear"]);
+        let text = format!("{sum}");
+        assert!(text.contains("job.exec"));
+        assert!(text.contains("linear"));
+    }
+}

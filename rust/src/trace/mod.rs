@@ -1,0 +1,832 @@
+//! `rsla-trace` — process-wide span tracing and solve telemetry.
+//!
+//! Design contract (see `docs/observability.md`):
+//!
+//! - **Disabled cost ≈ one branch.**  Every recording entry point
+//!   loads one relaxed atomic and returns; no clock read, no
+//!   thread-local touch, no allocation.  The disabled path is safe
+//!   inside L5 `no_alloc` warm loops.
+//! - **Enabled path is lock-free on the hot side.**  Each (thread,
+//!   tracer) pair owns a preallocated write-once ring ([`Ring`]): the
+//!   owner thread appends with a relaxed read + release store of
+//!   `len`; snapshot readers acquire `len` and read the published
+//!   prefix.  Slots are never overwritten — when a ring fills, new
+//!   records are counted in `dropped` instead (never silently lost).
+//!   The only mutex (`bufs`, deliberately outside the L2 lock
+//!   hierarchy) guards ring *registration*, touched once per thread.
+//! - **Tracing records, never reorders, arithmetic.**  No instrument
+//!   introduces FP operations that feed a solver; the bitwise pins in
+//!   `tests/krylov_equivalence.rs` hold with tracing enabled.
+//!
+//! Spans carry the job context ([`JobCtx`]) of the recording thread —
+//! job id, [`crate::engine::JobKind`] name, `PatternKey` structure
+//! hash, worker id — so one exported trace answers "where did job 47
+//! spend its time" without joining side tables.
+
+use std::cell::{Cell, RefCell, UnsafeCell};
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::lock_recover;
+
+pub mod export;
+pub mod names;
+
+pub use export::{validate_chrome_trace, TraceSummary};
+
+/// Per-thread span ring capacity (spans beyond this are dropped, and
+/// counted: see [`TraceSnapshot::dropped`]).
+pub const SPAN_CAPACITY: usize = 1 << 14;
+/// Per-thread convergence-record ring capacity.
+pub const CONV_CAPACITY: usize = 1 << 11;
+/// Residual-history ring length inside one [`ConvRecord`]: the LAST
+/// `HISTORY_RING` residual norms of a solve (enough to see the tail
+/// behaviour that explains "why 340 iterations").
+pub const HISTORY_RING: usize = 32;
+/// Nesting depth tracked for parent-span attribution.
+const PARENT_DEPTH: usize = 16;
+
+// ---------------------------------------------------------------------
+// records
+// ---------------------------------------------------------------------
+
+/// Is this record a duration or a point event?
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// A closed interval (`ph: "X"` in chrome trace terms).
+    Span,
+    /// An instantaneous event (`ph: "i"`).
+    Event,
+}
+
+/// One recorded span or event.  `Copy` so rings never run `Drop` glue.
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    pub name: &'static str,
+    pub phase: Phase,
+    /// Nanoseconds since the tracer's epoch.
+    pub t_start_ns: u64,
+    /// End time; equals `t_start_ns` for events.
+    pub t_end_ns: u64,
+    /// Unique span id (0 is reserved for "no parent").
+    pub id: u64,
+    /// Enclosing span's id on the same thread, 0 at top level.
+    pub parent: u64,
+    /// Dense per-tracer thread number (stable across the trace).
+    pub thread: u32,
+    /// Job context captured at record time; zeros outside a job scope.
+    pub job_id: u64,
+    /// `JobKind::name()` of the enclosing job, "" outside a job scope.
+    pub job_kind: &'static str,
+    /// `PatternKey` structure hash of the enclosing job's matrix.
+    pub structure_hash: u64,
+    /// Executing worker id (u32::MAX outside a worker).
+    pub worker: u32,
+    /// Free per-name argument (shard id, batch size, iteration, ...).
+    pub arg: u64,
+}
+
+/// Per-solve convergence telemetry emitted by [`ConvergenceTrace`].
+#[derive(Clone, Copy, Debug)]
+pub struct ConvRecord {
+    /// Kernel name from [`names`] (`krylov.cg`, `dist.solve`, ...).
+    pub name: &'static str,
+    /// Nanoseconds since epoch at emission.
+    pub t_ns: u64,
+    pub thread: u32,
+    pub job_id: u64,
+    pub job_kind: &'static str,
+    pub structure_hash: u64,
+    pub iters: u64,
+    pub residual: f64,
+    pub converged: bool,
+    pub breakdown: bool,
+    /// GMRES basis restarts observed during the solve.
+    pub restarts: u32,
+    /// Reduction rounds consumed (distributed solves; 0 serial).
+    pub reduce_rounds: u64,
+    /// Halo bytes sent (distributed solves; 0 serial).
+    pub halo_bytes: u64,
+    /// Total residual norms recorded (may exceed `HISTORY_RING`).
+    pub hist_total: u64,
+    /// The last `min(hist_total, HISTORY_RING)` residual norms, oldest
+    /// first once unwrapped by the exporter.
+    pub history: [f64; HISTORY_RING],
+}
+
+/// Everything a snapshot sees: published spans + convergence records
+/// from every registered thread, plus the drop tally.
+#[derive(Clone, Debug, Default)]
+pub struct TraceSnapshot {
+    pub spans: Vec<Span>,
+    pub convs: Vec<ConvRecord>,
+    /// Records discarded because a per-thread ring filled.
+    pub dropped: u64,
+}
+
+// ---------------------------------------------------------------------
+// write-once ring
+// ---------------------------------------------------------------------
+
+/// Single-producer, multi-reader append-only ring.  The OWNER thread
+/// is the only writer; slots below the published `len` are immutable.
+struct Ring<T: Copy> {
+    slots: Box<[UnsafeCell<MaybeUninit<T>>]>,
+    len: AtomicUsize,
+    dropped: AtomicU64,
+}
+
+// SAFETY: only the owning thread writes, and every slot a reader can
+// reach (index < len loaded with Acquire) was fully written before the
+// matching Release store of `len` and is never written again.
+unsafe impl<T: Copy + Send> Sync for Ring<T> {}
+unsafe impl<T: Copy + Send> Send for Ring<T> {}
+
+impl<T: Copy> Ring<T> {
+    fn new(capacity: usize) -> Self {
+        let mut slots = Vec::with_capacity(capacity);
+        slots.resize_with(capacity, || UnsafeCell::new(MaybeUninit::uninit()));
+        Ring {
+            slots: slots.into_boxed_slice(),
+            len: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Owner-thread append.  Full ring drops the NEW record (old spans
+    /// stay intact — the head of a trace explains the tail).
+    fn push(&self, value: T) {
+        let i = self.len.load(Ordering::Relaxed);
+        match self.slots.get(i) {
+            Some(slot) => {
+                // SAFETY: slot i is above the published len, so no
+                // reader looks at it yet, and only this (owner) thread
+                // writes; the Release store below publishes it.
+                unsafe { (*slot.get()).write(value) };
+                self.len.store(i + 1, Ordering::Release);
+            }
+            None => {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    fn snapshot_into(&self, out: &mut Vec<T>) {
+        let n = self.len.load(Ordering::Acquire);
+        for slot in self.slots.iter().take(n) {
+            // SAFETY: indices below the Acquire-loaded len were
+            // initialized before the matching Release store.
+            out.push(unsafe { (*slot.get()).assume_init() });
+        }
+    }
+}
+
+/// One thread's rings, shared between the owner (writer) and
+/// snapshotters through the tracer's registry.
+struct ThreadBuf {
+    thread: u32,
+    spans: Ring<Span>,
+    convs: Ring<ConvRecord>,
+}
+
+// ---------------------------------------------------------------------
+// tracer
+// ---------------------------------------------------------------------
+
+/// The tracing facility.  Usually used through the process-wide
+/// [`Tracer::global`] and the free functions below; instantiable for
+/// tests that need an isolated trace.
+pub struct Tracer {
+    enabled: AtomicBool,
+    epoch: Instant,
+    /// Distinguishes tracers in the thread-local ring lookup.
+    tracer_id: usize,
+    next_span_id: AtomicU64,
+    next_thread: AtomicU32,
+    /// Ring REGISTRATION only (once per thread per tracer); never held
+    /// while recording.  Deliberately outside the L2 lock hierarchy —
+    /// it is a leaf taken from arbitrary call stacks.
+    bufs: Mutex<Vec<Arc<ThreadBuf>>>,
+}
+
+static TRACER_IDS: AtomicUsize = AtomicUsize::new(1);
+static GLOBAL: OnceLock<Tracer> = OnceLock::new();
+
+thread_local! {
+    /// (tracer_id, rings) pairs this thread has registered.
+    static TL_BUFS: RefCell<Vec<(usize, Arc<ThreadBuf>)>> = const { RefCell::new(Vec::new()) };
+    /// Open-span id stack for parent attribution (per thread).
+    static TL_PARENTS: Cell<[u64; PARENT_DEPTH]> = const { Cell::new([0; PARENT_DEPTH]) };
+    static TL_DEPTH: Cell<usize> = const { Cell::new(0) };
+    static TL_CTX: Cell<JobCtx> = const { Cell::new(JobCtx::NONE) };
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tracer {
+    pub fn new() -> Self {
+        Tracer {
+            enabled: AtomicBool::new(false),
+            epoch: Instant::now(),
+            tracer_id: TRACER_IDS.fetch_add(1, Ordering::Relaxed),
+            next_span_id: AtomicU64::new(1),
+            next_thread: AtomicU32::new(0),
+            bufs: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// The process-wide tracer every instrument records into.
+    pub fn global() -> &'static Tracer {
+        GLOBAL.get_or_init(Tracer::new)
+    }
+
+    /// The one branch every disabled-path call pays.
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn enable(&self) {
+        self.enabled.store(true, Ordering::Relaxed);
+    }
+
+    pub fn disable(&self) {
+        self.enabled.store(false, Ordering::Relaxed);
+    }
+
+    #[inline]
+    fn now_ns(&self) -> u64 {
+        // checked: never panics even if a caller-supplied Instant
+        // predates the epoch (clamps to 0).
+        Instant::now()
+            .checked_duration_since(self.epoch)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0)
+    }
+
+    #[inline]
+    fn instant_ns(&self, t: Instant) -> u64 {
+        t.checked_duration_since(self.epoch)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0)
+    }
+
+    /// This thread's rings for this tracer, registering on first use.
+    fn buf(&self) -> Arc<ThreadBuf> {
+        TL_BUFS.with(|tl| {
+            let mut v = tl.borrow_mut();
+            if let Some((_, b)) = v.iter().find(|(id, _)| *id == self.tracer_id) {
+                return b.clone();
+            }
+            let buf = Arc::new(ThreadBuf {
+                thread: self.next_thread.fetch_add(1, Ordering::Relaxed),
+                spans: Ring::new(SPAN_CAPACITY),
+                convs: Ring::new(CONV_CAPACITY),
+            });
+            lock_recover(&self.bufs).push(buf.clone());
+            v.push((self.tracer_id, buf.clone()));
+            buf
+        })
+    }
+
+    /// Record an instantaneous event under the current job context.
+    #[inline]
+    pub fn event(&self, name: &'static str, arg: u64) {
+        if !self.is_enabled() {
+            return;
+        }
+        let ctx = TL_CTX.with(Cell::get);
+        self.event_with(name, ctx, arg);
+    }
+
+    /// Record an event for an explicit job (submit-side call sites that
+    /// run before any worker context exists).
+    #[inline]
+    pub fn event_job(&self, name: &'static str, job_id: u64, job_kind: &'static str, arg: u64) {
+        if !self.is_enabled() {
+            return;
+        }
+        let mut ctx = TL_CTX.with(Cell::get);
+        ctx.job_id = job_id;
+        ctx.kind = job_kind;
+        self.event_with(name, ctx, arg);
+    }
+
+    fn event_with(&self, name: &'static str, ctx: JobCtx, arg: u64) {
+        let t = self.now_ns();
+        let buf = self.buf();
+        buf.spans.push(Span {
+            name,
+            phase: Phase::Event,
+            t_start_ns: t,
+            t_end_ns: t,
+            id: self.next_span_id.fetch_add(1, Ordering::Relaxed),
+            parent: current_parent(),
+            thread: buf.thread,
+            job_id: ctx.job_id,
+            job_kind: ctx.kind,
+            structure_hash: ctx.structure_hash,
+            worker: ctx.worker,
+            arg,
+        })
+    }
+
+    /// Open a span; closed (and recorded) when the guard drops.
+    /// Inert — no clock read, no ring touch — while disabled.
+    #[inline]
+    pub fn span(&self, name: &'static str) -> SpanGuard<'_> {
+        if !self.is_enabled() {
+            return SpanGuard { inner: None };
+        }
+        self.span_armed(name, 0)
+    }
+
+    /// Open a span with a per-name argument.
+    #[inline]
+    pub fn span_arg(&self, name: &'static str, arg: u64) -> SpanGuard<'_> {
+        if !self.is_enabled() {
+            return SpanGuard { inner: None };
+        }
+        self.span_armed(name, arg)
+    }
+
+    fn span_armed(&self, name: &'static str, arg: u64) -> SpanGuard<'_> {
+        let id = self.next_span_id.fetch_add(1, Ordering::Relaxed);
+        let parent = current_parent();
+        push_parent(id);
+        SpanGuard {
+            inner: Some(OpenSpan {
+                tracer: self,
+                name,
+                t_start_ns: self.now_ns(),
+                id,
+                parent,
+                arg,
+            }),
+        }
+    }
+
+    /// Record an already-elapsed interval (e.g. queue wait measured by
+    /// `Instant`s the engine captured before tracing was consulted).
+    pub fn span_between(&self, name: &'static str, start: Instant, end: Instant, arg: u64) {
+        if !self.is_enabled() {
+            return;
+        }
+        let ctx = TL_CTX.with(Cell::get);
+        let buf = self.buf();
+        buf.spans.push(Span {
+            name,
+            phase: Phase::Span,
+            t_start_ns: self.instant_ns(start),
+            t_end_ns: self.instant_ns(end),
+            id: self.next_span_id.fetch_add(1, Ordering::Relaxed),
+            parent: current_parent(),
+            thread: buf.thread,
+            job_id: ctx.job_id,
+            job_kind: ctx.kind,
+            structure_hash: ctx.structure_hash,
+            worker: ctx.worker,
+            arg,
+        });
+    }
+
+    fn push_conv(&self, mut rec: ConvRecord) {
+        let ctx = TL_CTX.with(Cell::get);
+        rec.t_ns = self.now_ns();
+        rec.job_id = ctx.job_id;
+        rec.job_kind = ctx.kind;
+        rec.structure_hash = ctx.structure_hash;
+        let buf = self.buf();
+        rec.thread = buf.thread;
+        buf.convs.push(rec);
+    }
+
+    /// Collect everything published so far across all threads.  Safe
+    /// to call while recording continues (readers see a prefix).
+    pub fn snapshot(&self) -> TraceSnapshot {
+        let mut snap = TraceSnapshot::default();
+        let bufs = lock_recover(&self.bufs);
+        for b in bufs.iter() {
+            b.spans.snapshot_into(&mut snap.spans);
+            b.convs.snapshot_into(&mut snap.convs);
+            snap.dropped += b.spans.dropped.load(Ordering::Relaxed)
+                + b.convs.dropped.load(Ordering::Relaxed);
+        }
+        snap.spans.sort_by_key(|s| (s.t_start_ns, s.id));
+        snap.convs.sort_by_key(|c| (c.t_ns, c.job_id));
+        snap
+    }
+}
+
+fn current_parent() -> u64 {
+    let depth = TL_DEPTH.with(Cell::get);
+    if depth == 0 {
+        return 0;
+    }
+    let parents = TL_PARENTS.with(Cell::get);
+    parents.get(depth - 1).copied().unwrap_or(0)
+}
+
+fn push_parent(id: u64) {
+    let depth = TL_DEPTH.with(Cell::get);
+    if depth < PARENT_DEPTH {
+        let mut parents = TL_PARENTS.with(Cell::get);
+        if let Some(slot) = parents.get_mut(depth) {
+            *slot = id;
+        }
+        TL_PARENTS.with(|p| p.set(parents));
+    }
+    // depth keeps counting past the stack so pops stay balanced
+    TL_DEPTH.with(|d| d.set(depth + 1));
+}
+
+fn pop_parent() {
+    TL_DEPTH.with(|d| d.set(d.get().saturating_sub(1)));
+}
+
+struct OpenSpan<'a> {
+    tracer: &'a Tracer,
+    name: &'static str,
+    t_start_ns: u64,
+    id: u64,
+    parent: u64,
+    arg: u64,
+}
+
+/// RAII handle closing a span on drop.  When tracing was disabled at
+/// open time the guard is a no-op shell.
+pub struct SpanGuard<'a> {
+    inner: Option<OpenSpan<'a>>,
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        let Some(open) = self.inner.take() else {
+            return;
+        };
+        pop_parent();
+        let ctx = TL_CTX.with(Cell::get);
+        let buf = open.tracer.buf();
+        buf.spans.push(Span {
+            name: open.name,
+            phase: Phase::Span,
+            t_start_ns: open.t_start_ns,
+            t_end_ns: open.tracer.now_ns(),
+            id: open.id,
+            parent: open.parent,
+            thread: buf.thread,
+            job_id: ctx.job_id,
+            job_kind: ctx.kind,
+            structure_hash: ctx.structure_hash,
+            worker: ctx.worker,
+            arg: open.arg,
+        });
+    }
+}
+
+// ---------------------------------------------------------------------
+// job context
+// ---------------------------------------------------------------------
+
+/// Job attribution inherited by every span/event a thread records.
+#[derive(Clone, Copy, Debug)]
+pub struct JobCtx {
+    pub job_id: u64,
+    pub kind: &'static str,
+    pub structure_hash: u64,
+    pub worker: u32,
+}
+
+impl JobCtx {
+    pub const NONE: JobCtx = JobCtx {
+        job_id: 0,
+        kind: "",
+        structure_hash: 0,
+        worker: u32::MAX,
+    };
+}
+
+/// Restores the previous context on drop (job scopes nest under fused
+/// batches).
+pub struct JobScope {
+    prev: JobCtx,
+}
+
+impl Drop for JobScope {
+    fn drop(&mut self) {
+        TL_CTX.with(|c| c.set(self.prev));
+    }
+}
+
+/// Enter a job scope on this thread.  Cheap enough to run even with
+/// tracing disabled (two `Cell` moves, no branch on the flag) so the
+/// engine does not need to special-case it.
+pub fn job_scope(job_id: u64, kind: &'static str, structure_hash: u64, worker: u32) -> JobScope {
+    let prev = TL_CTX.with(Cell::get);
+    TL_CTX.with(|c| {
+        c.set(JobCtx {
+            job_id,
+            kind,
+            structure_hash,
+            worker,
+        })
+    });
+    JobScope { prev }
+}
+
+// ---------------------------------------------------------------------
+// convergence telemetry
+// ---------------------------------------------------------------------
+
+/// Stack-local per-solve accumulator for the Krylov kernels.  All
+/// methods are branch-gated on the flag sampled at construction; the
+/// disabled cost inside an iteration loop is one predictable branch,
+/// and nothing here allocates (L5-compatible by construction).
+pub struct ConvergenceTrace {
+    on: bool,
+    name: &'static str,
+    restarts: u32,
+    broke: bool,
+    break_iter: u64,
+    hist_total: u64,
+    history: [f64; HISTORY_RING],
+}
+
+impl ConvergenceTrace {
+    /// Sample the global tracer's flag once for the whole solve.
+    #[inline]
+    pub fn new(name: &'static str) -> Self {
+        ConvergenceTrace {
+            on: Tracer::global().is_enabled(),
+            name,
+            restarts: 0,
+            broke: false,
+            break_iter: 0,
+            hist_total: 0,
+            history: [0.0; HISTORY_RING],
+        }
+    }
+
+    /// Record one iteration's residual NORM.
+    #[inline]
+    pub fn record(&mut self, r_norm: f64) {
+        if self.on {
+            self.push_norm(r_norm);
+        }
+    }
+
+    /// Record from a SQUARED norm; the sqrt happens only when tracing
+    /// is on and only into the local ring — solver arithmetic is
+    /// untouched.
+    #[inline]
+    pub fn record_sq(&mut self, rr: f64) {
+        if self.on {
+            self.push_norm(rr.sqrt());
+        }
+    }
+
+    #[inline]
+    fn push_norm(&mut self, r: f64) {
+        let i = (self.hist_total as usize) % HISTORY_RING;
+        if let Some(slot) = self.history.get_mut(i) {
+            *slot = r;
+        }
+        self.hist_total += 1;
+    }
+
+    /// Mark a recurrence breakdown at iteration `iter`.
+    #[inline]
+    pub fn breakdown(&mut self, iter: usize) {
+        if self.on && !self.broke {
+            self.broke = true;
+            self.break_iter = iter as u64;
+            Tracer::global().event(names::KRYLOV_BREAKDOWN, iter as u64);
+        }
+    }
+
+    /// Mark a basis restart (GMRES).
+    #[inline]
+    pub fn restart(&mut self) {
+        if self.on {
+            self.restarts += 1;
+            Tracer::global().event(names::KRYLOV_RESTART, self.restarts as u64);
+        }
+    }
+
+    /// Emit the solve's record.  No-op while disabled.
+    pub fn finish(self, iters: usize, residual: f64, converged: bool) {
+        self.finish_dist(iters, residual, converged, 0, 0)
+    }
+
+    /// Emit with distributed-communication deltas attached.
+    pub fn finish_dist(
+        self,
+        iters: usize,
+        residual: f64,
+        converged: bool,
+        reduce_rounds: u64,
+        halo_bytes: u64,
+    ) {
+        if !self.on {
+            return;
+        }
+        Tracer::global().push_conv(ConvRecord {
+            name: self.name,
+            t_ns: 0,
+            thread: 0,
+            job_id: 0,
+            job_kind: "",
+            structure_hash: 0,
+            iters: iters as u64,
+            residual,
+            converged,
+            breakdown: self.broke,
+            restarts: self.restarts,
+            reduce_rounds,
+            halo_bytes,
+            hist_total: self.hist_total,
+            history: self.history,
+        });
+    }
+}
+
+// ---------------------------------------------------------------------
+// free functions over the global tracer
+// ---------------------------------------------------------------------
+
+/// Is the process-wide tracer recording?
+#[inline]
+pub fn enabled() -> bool {
+    Tracer::global().is_enabled()
+}
+
+/// Open a span on the global tracer.
+#[inline]
+pub fn span(name: &'static str) -> SpanGuard<'static> {
+    Tracer::global().span(name)
+}
+
+/// Open a span with an argument on the global tracer.
+#[inline]
+pub fn span_arg(name: &'static str, arg: u64) -> SpanGuard<'static> {
+    Tracer::global().span_arg(name, arg)
+}
+
+/// Record an instantaneous event on the global tracer.
+#[inline]
+pub fn event(name: &'static str, arg: u64) {
+    Tracer::global().event(name, arg)
+}
+
+/// Record an event attributed to an explicit job id/kind.
+#[inline]
+pub fn event_job(name: &'static str, job_id: u64, job_kind: &'static str, arg: u64) {
+    Tracer::global().event_job(name, job_id, job_kind, arg)
+}
+
+/// Record an already-elapsed interval on the global tracer.
+#[inline]
+pub fn span_between(name: &'static str, start: Instant, end: Instant, arg: u64) {
+    Tracer::global().span_between(name, start, end, arg)
+}
+
+/// Unit tests that enable/disable the PROCESS-WIDE tracer must not
+/// interleave (the harness runs `#[test]`s on parallel threads); they
+/// serialize on this lock.  Integration tests are separate processes
+/// and do not need it.
+#[cfg(test)]
+pub(crate) fn global_test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    lock_recover(&LOCK)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::new();
+        {
+            let _g = t.span(names::JOB_EXEC);
+            t.event(names::FACTOR_MISS, 1);
+        }
+        let snap = t.snapshot();
+        assert!(snap.spans.is_empty());
+        assert_eq!(snap.dropped, 0);
+    }
+
+    #[test]
+    fn spans_nest_and_carry_parents() {
+        let t = Tracer::new();
+        t.enable();
+        {
+            let _outer = t.span(names::JOB_EXEC);
+            let _inner = t.span(names::DIRECT_NUMERIC);
+            t.event(names::FACTOR_MISS, 7);
+        }
+        t.disable();
+        let snap = t.snapshot();
+        assert_eq!(snap.spans.len(), 3);
+        let outer = snap.spans.iter().find(|s| s.name == names::JOB_EXEC).unwrap();
+        let inner = snap
+            .spans
+            .iter()
+            .find(|s| s.name == names::DIRECT_NUMERIC)
+            .unwrap();
+        let ev = snap.spans.iter().find(|s| s.name == names::FACTOR_MISS).unwrap();
+        assert_eq!(outer.parent, 0);
+        assert_eq!(inner.parent, outer.id);
+        assert_eq!(ev.parent, inner.id, "event nests under the open span");
+        assert_eq!(ev.phase, Phase::Event);
+        assert!(outer.t_end_ns >= inner.t_end_ns);
+        assert_eq!(ev.arg, 7);
+    }
+
+    #[test]
+    fn job_scope_attributes_and_restores() {
+        let t = Tracer::new();
+        t.enable();
+        {
+            let _scope = job_scope(42, "linear", 0xBEEF, 3);
+            t.event(names::FACTOR_MISS, 0);
+        }
+        t.event(names::FACTOR_MISS, 0);
+        t.disable();
+        let snap = t.snapshot();
+        let inside = snap.spans.first().unwrap();
+        let outside = snap.spans.get(1).unwrap();
+        assert_eq!(inside.job_id, 42);
+        assert_eq!(inside.job_kind, "linear");
+        assert_eq!(inside.structure_hash, 0xBEEF);
+        assert_eq!(inside.worker, 3);
+        assert_eq!(outside.job_id, 0, "scope restored on drop");
+    }
+
+    #[test]
+    fn ring_overflow_drops_new_records_and_counts_them() {
+        let r: Ring<u64> = Ring::new(4);
+        for i in 0..10 {
+            r.push(i);
+        }
+        let mut out = Vec::new();
+        r.snapshot_into(&mut out);
+        assert_eq!(out, vec![0, 1, 2, 3], "head preserved, tail dropped");
+        assert_eq!(r.dropped.load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn convergence_trace_rings_the_last_norms() {
+        let _serial = global_test_guard();
+        let t = Tracer::global();
+        t.enable();
+        let mut ct = ConvergenceTrace::new(names::KRYLOV_CG);
+        for i in 0..(HISTORY_RING + 5) {
+            ct.record(i as f64);
+        }
+        ct.finish(HISTORY_RING + 5, 1e-11, true);
+        t.disable();
+        let snap = t.snapshot();
+        let rec = snap
+            .convs
+            .iter()
+            .find(|c| c.name == names::KRYLOV_CG && c.iters == (HISTORY_RING + 5) as u64)
+            .expect("conv record emitted");
+        assert_eq!(rec.hist_total, (HISTORY_RING + 5) as u64);
+        // slot 0 holds norm HISTORY_RING (wrapped), slot 4 the last
+        assert_eq!(rec.history.first().copied().unwrap(), HISTORY_RING as f64);
+        assert!(rec.converged);
+    }
+
+    #[test]
+    fn concurrent_writers_publish_without_loss() {
+        let t = Arc::new(Tracer::new());
+        t.enable();
+        const THREADS: usize = 8;
+        const PER: usize = 500;
+        let done = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..THREADS {
+                let t = t.clone();
+                let done = done.clone();
+                s.spawn(move || {
+                    for i in 0..PER {
+                        t.event(names::JOB_SUBMIT, i as u64);
+                    }
+                    done.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        });
+        assert_eq!(done.load(Ordering::SeqCst), THREADS);
+        let snap = t.snapshot();
+        assert_eq!(snap.spans.len(), THREADS * PER);
+        assert_eq!(snap.dropped, 0);
+    }
+}

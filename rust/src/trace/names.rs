@@ -1,0 +1,130 @@
+//! Canonical span and event names for the tracing layer.
+//!
+//! Like `metrics/names.rs`, this is the single declaration point:
+//! rsla-lint L4 scans this file (and `metrics/names.rs`) for the
+//! registered vocabulary and flags any string literal passed to
+//! `trace::span(` / `trace::event(` / `trace::event_job(` that is not
+//! declared here.  Names follow the metric grammar
+//! (`namespace.phase[.sub]`, lowercase + dots + underscores) so the
+//! same hygiene test applies.
+
+// --- job lifecycle (engine) ------------------------------------------
+
+/// Instant: a job entered the intake queue.
+pub const JOB_SUBMIT: &str = "job.submit";
+/// Span: time between submission and a worker picking the job up.
+pub const JOB_QUEUED: &str = "job.queued";
+/// Instant: the scheduler routed the job to a worker (arg = worker).
+pub const JOB_SCHEDULED: &str = "job.scheduled";
+/// Instant: the job was fused into a multi-RHS batch (arg = batch size).
+pub const JOB_FUSED: &str = "job.fused";
+/// Span: worker-side execution of one job (or one fused batch member).
+pub const JOB_EXEC: &str = "job.exec";
+/// Instant: the result was handed to the reply callback.
+pub const JOB_REPLY: &str = "job.reply";
+
+// --- factor cache -----------------------------------------------------
+
+/// Instant: numeric-tier cache hit (factorization fully reused).
+pub const FACTOR_HIT_NUMERIC: &str = "factor.hit.numeric";
+/// Instant: symbolic-tier hit (analysis reused, numeric refactor ran).
+pub const FACTOR_HIT_SYMBOLIC: &str = "factor.hit.symbolic";
+/// Instant: cold miss (full symbolic + numeric factorization).
+pub const FACTOR_MISS: &str = "factor.miss";
+/// Instant: the job's pattern was served by its affine shard (arg = shard).
+pub const FACTOR_SHARD_LOCAL_HIT: &str = "factor.shard_local_hit";
+/// Instant: cross-shard placement — the pattern's home shard differed
+/// from the executing worker's (arg = shard actually used).
+pub const FACTOR_CROSS_SHARD_MISS: &str = "factor.cross_shard_miss";
+
+// --- direct stack -----------------------------------------------------
+
+/// Span: ordering + symbolic analysis (elimination structure).
+pub const DIRECT_SYMBOLIC: &str = "direct.symbolic";
+/// Span: numeric factorization (cold or warm refactor).
+pub const DIRECT_NUMERIC: &str = "direct.numeric";
+/// Span: forward/backward triangular sweeps of one solve.
+pub const DIRECT_TRISOLVE: &str = "direct.trisolve";
+
+// --- krylov kernels ---------------------------------------------------
+
+/// Span: one preconditioned CG solve.
+pub const KRYLOV_CG: &str = "krylov.cg";
+/// Span: one pipelined (single-reduction) CG solve.
+pub const KRYLOV_CG_PIPELINED: &str = "krylov.cg_pipelined";
+/// Span: one BiCGStab solve.
+pub const KRYLOV_BICGSTAB: &str = "krylov.bicgstab";
+/// Span: one restarted GMRES solve.
+pub const KRYLOV_GMRES: &str = "krylov.gmres";
+/// Span: one MINRES solve.
+pub const KRYLOV_MINRES: &str = "krylov.minres";
+/// Instant: a Krylov recurrence broke down (arg = iteration).
+pub const KRYLOV_BREAKDOWN: &str = "krylov.breakdown";
+/// Instant: GMRES restarted its basis (arg = restart ordinal).
+pub const KRYLOV_RESTART: &str = "krylov.restart";
+
+// --- distributed / backend -------------------------------------------
+
+/// Convergence record: one per-rank distributed solve, carrying the
+/// reduction-round and halo-byte deltas of that solve.
+pub const DIST_SOLVE: &str = "dist.solve";
+/// Span: one backend dispatch through `NativeIter::solve`.
+pub const BACKEND_SOLVE: &str = "backend.solve";
+
+/// Every declared trace name, for hygiene tests and exporters.
+pub const ALL: &[&str] = &[
+    JOB_SUBMIT,
+    JOB_QUEUED,
+    JOB_SCHEDULED,
+    JOB_FUSED,
+    JOB_EXEC,
+    JOB_REPLY,
+    FACTOR_HIT_NUMERIC,
+    FACTOR_HIT_SYMBOLIC,
+    FACTOR_MISS,
+    FACTOR_SHARD_LOCAL_HIT,
+    FACTOR_CROSS_SHARD_MISS,
+    DIRECT_SYMBOLIC,
+    DIRECT_NUMERIC,
+    DIRECT_TRISOLVE,
+    KRYLOV_CG,
+    KRYLOV_CG_PIPELINED,
+    KRYLOV_BICGSTAB,
+    KRYLOV_GMRES,
+    KRYLOV_MINRES,
+    KRYLOV_BREAKDOWN,
+    KRYLOV_RESTART,
+    DIST_SOLVE,
+    BACKEND_SOLVE,
+];
+
+#[cfg(test)]
+mod tests {
+    use super::ALL;
+    use std::collections::HashSet;
+
+    #[test]
+    fn names_are_unique_and_well_formed() {
+        let mut seen = HashSet::new();
+        for name in ALL {
+            assert!(seen.insert(*name), "duplicate trace name {name}");
+            assert!(name.contains('.'), "{name} must be namespace.phase shaped");
+            assert!(
+                name.chars()
+                    .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '.' || c == '_'),
+                "{name} must be lowercase dotted"
+            );
+        }
+    }
+
+    #[test]
+    fn trace_names_do_not_collide_with_metric_names() {
+        let metrics: HashSet<&str> = crate::metrics::names::ALL.iter().copied().collect();
+        for name in ALL {
+            assert!(
+                !metrics.contains(name),
+                "{name} is declared in both trace/names.rs and metrics/names.rs"
+            );
+        }
+    }
+}

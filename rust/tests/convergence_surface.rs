@@ -1,0 +1,96 @@
+//! Convergence telemetry must surface END-TO-END: the iteration count
+//! and final residual a Krylov kernel (or Newton loop, or rank team)
+//! produced have to arrive on the `JobResult` the client waits on —
+//! not stay buried in the family-specific output payload.
+
+use std::sync::Arc;
+
+use rsla::backend::{Dispatcher, Method, SolveOpts};
+use rsla::engine::{workload::MixedWorkload, Engine, EngineConfig, JobKind, JobSpec, Ticket};
+use rsla::sparse::poisson::poisson2d;
+use rsla::util::Prng;
+
+fn engine(workers: usize) -> Engine {
+    Engine::start(
+        Arc::new(Dispatcher::new(None)),
+        EngineConfig {
+            workers,
+            ..Default::default()
+        },
+    )
+}
+
+#[test]
+fn iterative_linear_jobs_report_iters_and_residual() {
+    let eng = engine(2);
+    let sys = poisson2d(16, None);
+    let mut rng = Prng::new(3);
+    let b = rng.normal_vec(256);
+
+    // force the iterative path: Auto on a small system would go direct
+    let t = eng
+        .submit(JobSpec::Linear {
+            matrix: sys.matrix.clone(),
+            b: b.clone(),
+            opts: SolveOpts {
+                method: Method::Cg,
+                ..Default::default()
+            },
+        })
+        .unwrap();
+    let r = t.wait();
+    assert!(r.outcome.is_ok(), "cg solve failed");
+    let conv = r.convergence.expect("linear job must carry convergence");
+    assert!(conv.converged);
+    assert!(conv.iters > 0, "cg consumed no iterations?");
+    assert!(conv.residual.is_finite() && conv.residual < 1e-6);
+
+    // the direct path reports too: zero iterations, converged
+    let t = eng
+        .submit(JobSpec::Linear {
+            matrix: sys.matrix.clone(),
+            b,
+            opts: SolveOpts::default(),
+        })
+        .unwrap();
+    let r = t.wait();
+    assert!(r.outcome.is_ok());
+    let conv = r.convergence.expect("direct linear job must carry convergence");
+    assert!(conv.converged);
+    assert!(conv.residual.is_finite());
+    eng.shutdown();
+}
+
+#[test]
+fn every_family_surfaces_convergence_on_its_job_result() {
+    let eng = engine(2);
+    let mut workload = MixedWorkload::new(&[12, 16], 7);
+    workload.multi_rhs = 3;
+    let mut tickets: Vec<Ticket> = Vec::new();
+    for i in 0..40 {
+        tickets.push(eng.submit(workload.spec(i)).unwrap());
+    }
+    let mut kinds_seen = std::collections::HashSet::new();
+    for t in tickets {
+        let r = t.wait();
+        kinds_seen.insert(r.kind.idx());
+        match r.kind {
+            // adjoint pairs carry no iteration data by design
+            JobKind::Adjoint => assert!(r.convergence.is_none()),
+            // failed jobs carry None — the error already says why
+            _ if r.outcome.is_err() => assert!(r.convergence.is_none()),
+            kind => {
+                let c = r
+                    .convergence
+                    .unwrap_or_else(|| panic!("{} job lost its convergence", kind.name()));
+                assert!(c.residual.is_finite(), "{}: residual NaN", kind.name());
+                if matches!(kind, JobKind::Nonlinear | JobKind::Dist) {
+                    assert!(c.converged, "{} did not converge", kind.name());
+                    assert!(c.iters > 0, "{}: zero iterations", kind.name());
+                }
+            }
+        }
+    }
+    assert_eq!(kinds_seen.len(), 6, "stream missed a job family");
+    eng.shutdown();
+}

@@ -162,6 +162,46 @@ fn unified_cg_under_null_comm_reproduces_pre_refactor_serial_cg() {
 }
 
 #[test]
+fn tracing_does_not_move_the_fp_pins() {
+    // rsla-trace records, it never reorders: the exact same CG run with
+    // the global tracer ON must produce BITWISE-identical iterates and
+    // the same iteration count as the untraced run.  Residual history
+    // is sampled from values the kernel already computed (`record_sq`
+    // defers the sqrt into the tracer), so no extra arithmetic enters
+    // the loop.
+    let sys = poisson2d(24, Some(&kappa_star(24)));
+    let mut rng = Prng::new(11);
+    let b = rng.normal_vec(24 * 24);
+    let m = Jacobi::new(&sys.matrix).unwrap();
+    let opts = IterOpts::default();
+
+    let plain = cg(&sys.matrix, &b, &m, &opts, None);
+    rsla::trace::Tracer::global().enable();
+    let traced = cg(&sys.matrix, &b, &m, &opts, None);
+    rsla::trace::Tracer::global().disable();
+
+    assert_eq!(traced.iters, plain.iters, "tracing changed the iterate count");
+    assert_eq!(
+        traced.residual.to_bits(),
+        plain.residual.to_bits(),
+        "tracing changed the final residual bits"
+    );
+    for (i, (a, b)) in traced.x.iter().zip(&plain.x).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "tracing moved x[{i}]: {a:e} vs {b:e}"
+        );
+    }
+    // and the traced run actually left a convergence record behind
+    let snap = rsla::trace::Tracer::global().snapshot();
+    assert!(
+        snap.convs.iter().any(|c| c.iters == plain.iters as u64),
+        "traced CG run left no convergence record"
+    );
+}
+
+#[test]
 fn unified_bicgstab_under_null_comm_reproduces_pre_refactor_serial() {
     let mut rng = Prng::new(7);
     let a = rsla::sparse::graphs::random_nonsymmetric(&mut rng, 120, 5);

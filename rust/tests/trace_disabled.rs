@@ -1,0 +1,58 @@
+//! Zero-span pin for the DISABLED tracer: a full mixed workload driven
+//! through the engine with the tracer never enabled must leave the
+//! global tracer completely empty — no spans, no events, no
+//! convergence records, no drops.  This is the contract that makes the
+//! always-compiled instrumentation free to leave in hot paths: when
+//! off, every probe is one relaxed atomic load and a branch.
+//!
+//! This file is its own process (one `#[test]`), so the process-global
+//! tracer is exclusively ours and no other test can have enabled it.
+
+use std::sync::Arc;
+
+use rsla::backend::Dispatcher;
+use rsla::engine::{workload::MixedWorkload, Engine, EngineConfig, Ticket};
+use rsla::trace::{self, Tracer};
+
+#[test]
+fn disabled_tracer_records_nothing_across_a_full_workload() {
+    assert!(!trace::enabled(), "tracer must start disabled");
+
+    let engine = Engine::start(
+        Arc::new(Dispatcher::new(None)),
+        EngineConfig {
+            workers: 4,
+            ..Default::default()
+        },
+    );
+    let mut workload = MixedWorkload::new(&[12, 16], 17);
+    workload.multi_rhs = 3;
+    let mut tickets: Vec<Ticket> = Vec::new();
+    // 40 consecutive specs cover all six job families (the workload
+    // cycles kinds mod 10 / mod 20), so every instrumented code path
+    // in the engine, cache, direct stack, and Krylov kernels runs.
+    for i in 0..40 {
+        tickets.push(engine.submit(workload.spec(i)).expect("admission"));
+    }
+    let mut failures = 0usize;
+    for t in tickets {
+        if t.wait().outcome.is_err() {
+            failures += 1;
+        }
+    }
+    engine.shutdown();
+
+    let snap = Tracer::global().snapshot();
+    assert!(
+        snap.spans.is_empty(),
+        "disabled tracer recorded {} spans",
+        snap.spans.len()
+    );
+    assert!(
+        snap.convs.is_empty(),
+        "disabled tracer recorded {} convergence records",
+        snap.convs.len()
+    );
+    assert_eq!(snap.dropped, 0);
+    assert_eq!(failures, 0, "{failures} jobs failed");
+}

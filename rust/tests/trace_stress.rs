@@ -1,0 +1,122 @@
+//! Seeded multi-worker stress for rsla-trace, mirroring
+//! `tests/concurrency_stress.rs`: drive a mixed-family workload through
+//! an 8-worker engine with the tracer ON and assert EXACT span
+//! accounting — every submitted job must appear exactly once at each
+//! lifecycle stage, the export must validate against the chrome-trace
+//! schema, and all six job kinds must show up in `job.exec` spans.
+//!
+//! This file is its own process (one `#[test]`), so the process-global
+//! tracer is exclusively ours.
+
+use std::sync::Arc;
+
+use rsla::backend::Dispatcher;
+use rsla::engine::{workload::MixedWorkload, Engine, EngineConfig, JobKind, Ticket};
+use rsla::trace::{export, names as tn, validate_chrome_trace, TraceSummary, Tracer};
+
+const REQUESTS: usize = 160;
+const WORKERS: usize = 8;
+
+#[test]
+fn traced_stress_accounts_for_every_job_exactly_once() {
+    let tracer = Tracer::global();
+    tracer.enable();
+
+    let engine = Engine::start(
+        Arc::new(Dispatcher::new(None)),
+        EngineConfig {
+            workers: WORKERS,
+            ..Default::default()
+        },
+    );
+    let mut workload = MixedWorkload::new(&[12, 16, 20], 99);
+    workload.multi_rhs = 3;
+    let mut tickets: Vec<Ticket> = Vec::new();
+    for i in 0..REQUESTS {
+        tickets.push(engine.submit(workload.spec(i)).expect("admission"));
+    }
+    let mut failures = 0usize;
+    for t in tickets {
+        if t.wait().outcome.is_err() {
+            failures += 1;
+        }
+    }
+    engine.shutdown();
+    tracer.disable();
+    let snap = tracer.snapshot();
+    assert_eq!(snap.dropped, 0, "ring overflow dropped records");
+
+    // --- exact lifecycle accounting -----------------------------------
+    let n = REQUESTS as u64;
+    let events = |name: &str| {
+        snap.spans
+            .iter()
+            .filter(|s| s.name == name && matches!(s.phase, rsla::trace::Phase::Event))
+            .count() as u64
+    };
+    let spans = |name: &str| {
+        snap.spans
+            .iter()
+            .filter(|s| s.name == name && matches!(s.phase, rsla::trace::Phase::Span))
+            .count() as u64
+    };
+    assert_eq!(events(tn::JOB_SUBMIT), n, "one submit event per job");
+    assert_eq!(events(tn::JOB_SCHEDULED), n, "one scheduled event per job");
+    assert_eq!(events(tn::JOB_REPLY), n, "one reply event per job");
+    assert_eq!(spans(tn::JOB_EXEC), n, "one exec span per job");
+    assert_eq!(spans(tn::JOB_QUEUED), n, "one queued span per job");
+
+    // every exec span carries a job id and a kind; all six kinds ran
+    let mut kinds = std::collections::BTreeSet::new();
+    for s in snap.spans.iter().filter(|s| s.name == tn::JOB_EXEC) {
+        assert!(!s.job_kind.is_empty(), "exec span without a job kind");
+        assert!(s.t_end_ns >= s.t_start_ns, "span closed before it opened");
+        kinds.insert(s.job_kind);
+    }
+    for k in JobKind::ALL {
+        assert!(kinds.contains(k.name()), "no exec span for kind {}", k.name());
+    }
+
+    // the factor-serving path left hit/miss breadcrumbs, and iterative
+    // kernels left convergence records
+    let cache_events = events(tn::FACTOR_HIT_NUMERIC)
+        + events(tn::FACTOR_HIT_SYMBOLIC)
+        + events(tn::FACTOR_MISS);
+    assert!(cache_events > 0, "no factor cache events recorded");
+    assert!(!snap.convs.is_empty(), "no convergence records recorded");
+
+    // --- exported chrome trace validates against the schema -----------
+    let json = export::chrome_trace_json(&snap);
+    let stats = validate_chrome_trace(&json).expect("chrome trace schema");
+    assert_eq!(
+        stats.events,
+        snap.spans.len() + snap.convs.len(),
+        "export lost records"
+    );
+    assert!(stats.names.contains(tn::JOB_EXEC));
+    assert!(stats.names.contains(tn::JOB_SUBMIT));
+    for k in JobKind::ALL {
+        assert!(
+            stats.kinds.contains(k.name()),
+            "exported trace missing kind {}",
+            k.name()
+        );
+    }
+
+    // --- summary agrees with the raw snapshot -------------------------
+    let sum = TraceSummary::of(&snap);
+    assert_eq!(sum.span_count(tn::JOB_EXEC), n);
+    assert_eq!(sum.event_count(tn::JOB_SUBMIT), n);
+    assert_eq!(sum.kinds_seen().len(), 6);
+    assert_eq!(sum.total_records, snap.spans.len() + snap.convs.len());
+
+    // JSONL export: one line per record
+    let lines = export::jsonl(&snap);
+    assert_eq!(
+        lines.lines().count(),
+        snap.spans.len() + snap.convs.len(),
+        "jsonl line count diverged"
+    );
+
+    assert_eq!(failures, 0, "{failures} jobs failed under tracing");
+}
