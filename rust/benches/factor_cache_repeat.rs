@@ -124,4 +124,149 @@ fn main() {
         speedup >= 2.0,
         "acceptance: repeated-adjoint-solve speedup must be >= 2x, got {speedup:.2}x"
     );
+
+    supernodal_vs_column_series(speedup);
+}
+
+/// Blocked (supernodal) vs scalar column numeric kernels on the
+/// poisson2d family, plus the blocked LU replay on a nonsymmetric
+/// matrix.  Emits `BENCH_factor.json` for the CI perf trajectory.
+///
+/// Acceptance: the blocked Cholesky numeric phase must be >= 1.5x
+/// faster than the scalar envelope kernel on the largest poisson2d
+/// grid in the series.
+fn supernodal_vs_column_series(repeat_speedup: f64) {
+    use rsla::direct::{CholSymbolic, EnvelopeCholesky, LuPanels, SnCholSymbolic, SnCholesky,
+                       SupernodalOpts};
+    use rsla::metrics::stopwatch::timed_median;
+
+    struct Row {
+        matrix: String,
+        n: usize,
+        kernel: &'static str,
+        panels: usize,
+        max_width: usize,
+        numeric_us: f64,
+        trisolve_us: f64,
+    }
+    let mut rows: Vec<Row> = Vec::new();
+
+    println!("\nsupernodal vs column numeric kernels (poisson2d family):");
+    for &g in &[24usize, 48, 96] {
+        let sys = poisson2d(g, Some(&kappa_star(g)));
+        let a = &sys.matrix;
+        let n = a.nrows;
+        let mut rng = Prng::new(g as u64);
+        let b = rng.normal_vec(n);
+        let mut out = vec![0.0; n];
+        let mut scratch = vec![0.0; n];
+
+        let esym = CholSymbolic::analyze(a, true).unwrap();
+        let (env, t_col) =
+            timed_median(5, || EnvelopeCholesky::factor_numeric(&esym, &a.vals).unwrap());
+        let (_, t_col_tri) = timed_median(7, || env.solve_into(&b, &mut out, &mut scratch));
+        rows.push(Row {
+            matrix: format!("poisson2d({g})"),
+            n,
+            kernel: "column",
+            panels: n,
+            max_width: 1,
+            numeric_us: t_col * 1e6,
+            trisolve_us: t_col_tri * 1e6,
+        });
+
+        let snsym =
+            Arc::new(SnCholSymbolic::analyze(a, true, &SupernodalOpts::default()).unwrap());
+        let (snf, t_sn) =
+            timed_median(5, || SnCholesky::factor_numeric(&snsym, &a.vals).unwrap());
+        let (_, t_sn_tri) = timed_median(7, || snf.solve_into(&b, &mut out, &mut scratch));
+        rows.push(Row {
+            matrix: format!("poisson2d({g})"),
+            n,
+            kernel: "supernodal",
+            panels: snsym.nsuper(),
+            max_width: snsym.max_panel_width(),
+            numeric_us: t_sn * 1e6,
+            trisolve_us: t_sn_tri * 1e6,
+        });
+
+        println!(
+            "  poisson2d({g:>2}) n={n:>5}: column {:>9.1} us  supernodal {:>9.1} us  ({:.2}x, {} panels, max w {})",
+            t_col * 1e6,
+            t_sn * 1e6,
+            t_col / t_sn,
+            snsym.nsuper(),
+            snsym.max_panel_width()
+        );
+
+        if g == 96 {
+            assert!(
+                t_col / t_sn >= 1.5,
+                "acceptance: supernodal numeric must be >= 1.5x the column kernel \
+                 on poisson2d({g}), got {:.2}x",
+                t_col / t_sn
+            );
+        }
+    }
+
+    // blocked LU replay vs the recorded column replay (warm path)
+    let mut rng = Prng::new(11);
+    let nonsym = rsla::sparse::graphs::random_nonsymmetric(&mut rng, 2000, 6);
+    let (_, lsym) = SparseLu::factor_recording(&nonsym, usize::MAX).unwrap();
+    let (_, t_lu_col) =
+        timed_median(5, || SparseLu::refactor(&lsym, &nonsym, usize::MAX).unwrap());
+    let plan = LuPanels::plan(&lsym, &SupernodalOpts::default());
+    let lu_line = if plan.engaged() {
+        let (_, t_lu_blk) = timed_median(5, || {
+            SparseLu::refactor_blocked(&lsym, &plan, &nonsym, usize::MAX).unwrap()
+        });
+        rows.push(Row {
+            matrix: "random_nonsymmetric(2000)".to_string(),
+            n: 2000,
+            kernel: "column",
+            panels: 2000,
+            max_width: 1,
+            numeric_us: t_lu_col * 1e6,
+            trisolve_us: 0.0,
+        });
+        rows.push(Row {
+            matrix: "random_nonsymmetric(2000)".to_string(),
+            n: 2000,
+            kernel: "supernodal",
+            panels: plan.npanels(),
+            max_width: plan.max_panel_width(),
+            numeric_us: t_lu_blk * 1e6,
+            trisolve_us: 0.0,
+        });
+        format!(
+            "  LU n=2000 refactor: column {:>9.1} us  blocked {:>9.1} us  ({:.2}x, {} panels)",
+            t_lu_col * 1e6,
+            t_lu_blk * 1e6,
+            t_lu_col / t_lu_blk,
+            plan.npanels()
+        )
+    } else {
+        format!("  LU n=2000: panel plan disengaged (max width {})", plan.max_panel_width())
+    };
+    println!("{lu_line}");
+
+    let mut json = String::from("{\n  \"bench\": \"factor_cache_repeat\",\n");
+    json.push_str(&format!("  \"repeat_speedup\": {repeat_speedup:.3},\n"));
+    json.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"matrix\": \"{}\", \"n\": {}, \"kernel\": \"{}\", \"panels\": {}, \"max_width\": {}, \"numeric_us\": {:.2}, \"trisolve_us\": {:.2}}}{}\n",
+            r.matrix,
+            r.n,
+            r.kernel,
+            r.panels,
+            r.max_width,
+            r.numeric_us,
+            r.trisolve_us,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write("BENCH_factor.json", &json).expect("write BENCH_factor.json");
+    println!("wrote BENCH_factor.json ({} rows)", rows.len());
 }

@@ -16,7 +16,61 @@ use rsla::util::{self, Prng};
 
 fn main() {
     l3_native_microbench();
+    direct_path_breakdown();
     l1l2_artifact_profile();
+}
+
+/// Direct-solver phase breakdown: symbolic analysis vs numeric
+/// (re)factorization vs triangular solve, for both the scalar envelope
+/// kernel and the blocked supernodal kernel.  The numeric column is the
+/// warm-path cost the factor cache pays per refactorization; trisolve
+/// is the per-solve cost after that.
+fn direct_path_breakdown() {
+    use rsla::direct::{CholSymbolic, EnvelopeCholesky, SnCholSymbolic, SnCholesky, SupernodalOpts};
+    use std::sync::Arc;
+
+    println!("# direct path breakdown (symbolic / numeric / trisolve)");
+    for &g in &[24usize, 48, 96] {
+        let sys = poisson2d(g, None);
+        let a = &sys.matrix;
+        let n = a.nrows;
+        let mut rng = Prng::new(4);
+        let b = rng.normal_vec(n);
+
+        // scalar envelope kernel
+        let (esym, t_esym) = timed_median(5, || CholSymbolic::analyze(a, true).unwrap());
+        let (env, t_enum) =
+            timed_median(5, || EnvelopeCholesky::factor_numeric(&esym, &a.vals).unwrap());
+        let mut out = vec![0.0; n];
+        let mut scratch = vec![0.0; n];
+        let (_, t_esol) = timed_median(7, || env.solve_into(&b, &mut out, &mut scratch));
+
+        // blocked supernodal kernel
+        let (snsym, t_ssym) = timed_median(5, || {
+            SnCholSymbolic::analyze(a, true, &SupernodalOpts::default()).unwrap()
+        });
+        let snsym = Arc::new(snsym);
+        let (snf, t_snum) =
+            timed_median(5, || SnCholesky::factor_numeric(&snsym, &a.vals).unwrap());
+        let (_, t_ssol) = timed_median(7, || snf.solve_into(&b, &mut out, &mut scratch));
+
+        println!(
+            "  g={g:>3} n={n:>6}: envelope  sym {:>8.1} us  num {:>9.1} us  tri {:>7.1} us",
+            t_esym * 1e6,
+            t_enum * 1e6,
+            t_esol * 1e6
+        );
+        println!(
+            "               supernodal sym {:>8.1} us  num {:>9.1} us  tri {:>7.1} us  ({} panels, max w {}, num speedup {:.2}x)",
+            t_ssym * 1e6,
+            t_snum * 1e6,
+            t_ssol * 1e6,
+            snsym.nsuper(),
+            snsym.max_panel_width(),
+            t_enum / t_snum
+        );
+    }
+    println!();
 }
 
 fn l3_native_microbench() {

@@ -10,7 +10,10 @@
 
 use std::sync::Arc;
 
-use super::{CholSymbolic, EnvelopeCholesky, LuSymbolic, SparseLu};
+use super::{
+    CholSymbolic, EnvelopeCholesky, LuPanels, LuSymbolic, SnCholSymbolic, SnCholesky, SparseLu,
+    SupernodalOpts,
+};
 use crate::error::{Error, Result};
 use crate::sparse::Csr;
 use crate::trace::{self, names as tn};
@@ -20,7 +23,14 @@ use crate::trace::{self, names as tn};
 #[derive(Clone)]
 pub enum Symbolic {
     Chol(Arc<CholSymbolic>),
+    /// Supernodal Cholesky partition (blocked kernel engaged).
+    SnChol(Arc<SnCholSymbolic>),
     Lu(Arc<LuSymbolic>),
+    /// LU recording plus a panel plan over it (blocked replay engaged).
+    SnLu {
+        sym: Arc<LuSymbolic>,
+        plan: Arc<LuPanels>,
+    },
 }
 
 impl Symbolic {
@@ -28,13 +38,16 @@ impl Symbolic {
     pub fn bytes(&self) -> u64 {
         match self {
             Symbolic::Chol(s) => s.bytes(),
+            Symbolic::SnChol(s) => s.bytes(),
             Symbolic::Lu(s) => s.bytes(),
+            Symbolic::SnLu { sym, plan } => sym.bytes() + plan.bytes(),
         }
     }
 }
 
 enum FactorKind {
     Chol(EnvelopeCholesky),
+    SnChol(SnCholesky),
     Lu(SparseLu),
 }
 
@@ -52,6 +65,7 @@ impl CachedFactor {
     pub fn n(&self) -> usize {
         match &self.kind {
             FactorKind::Chol(f) => f.n(),
+            FactorKind::SnChol(f) => f.n(),
             FactorKind::Lu(f) => f.n(),
         }
     }
@@ -69,6 +83,7 @@ impl CachedFactor {
         let _sp = trace::span_arg(tn::DIRECT_TRISOLVE, self.n() as u64);
         match &self.kind {
             FactorKind::Chol(f) => Ok(f.solve(b)),
+            FactorKind::SnChol(f) => f.solve(b),
             FactorKind::Lu(f) => f.solve(b),
         }
     }
@@ -99,6 +114,10 @@ impl CachedFactor {
                 f.solve_into(b, out, scratch);
                 Ok(())
             }
+            FactorKind::SnChol(f) => {
+                f.solve_into(b, out, scratch);
+                Ok(())
+            }
             FactorKind::Lu(f) => f.solve_into(b, out, scratch),
         }
     }
@@ -117,6 +136,7 @@ impl CachedFactor {
         let _sp = trace::span_arg(tn::DIRECT_TRISOLVE, self.n() as u64);
         match &self.kind {
             FactorKind::Chol(f) => Ok(f.solve(b)),
+            FactorKind::SnChol(f) => f.solve(b),
             FactorKind::Lu(f) => f.solve_t(b),
         }
     }
@@ -125,6 +145,7 @@ impl CachedFactor {
     pub fn bytes(&self) -> u64 {
         match &self.kind {
             FactorKind::Chol(f) => f.bytes(),
+            FactorKind::SnChol(f) => f.bytes(),
             FactorKind::Lu(f) => f.bytes(),
         }
     }
@@ -138,6 +159,7 @@ impl CachedFactor {
     pub fn fill_bytes(&self) -> u64 {
         match &self.kind {
             FactorKind::Chol(f) => (f.fill() * 8) as u64,
+            FactorKind::SnChol(f) => (f.fill() * 8) as u64,
             FactorKind::Lu(f) => ((f.fill() - f.n()) * 16) as u64,
         }
     }
@@ -146,6 +168,7 @@ impl CachedFactor {
     pub fn method(&self) -> &'static str {
         match &self.kind {
             FactorKind::Chol(_) => "cholesky+rcm",
+            FactorKind::SnChol(_) => "cholesky+rcm+sn",
             FactorKind::Lu(_) => "lu",
         }
     }
@@ -175,33 +198,71 @@ pub fn build_factor(
 ) -> Result<(Arc<CachedFactor>, Symbolic)> {
     let spd_like = symmetric && a.diag().iter().all(|&d| d > 0.0);
     if spd_like {
-        let sym = {
+        // Supernodal analysis first: pattern-only, so its engage/fallback
+        // verdict is identical cold and warm.  Wide enough panels take
+        // the blocked kernel; otherwise the envelope kernel below.
+        let snsym = {
             let _sp = trace::span_arg(tn::DIRECT_SYMBOLIC, a.nnz() as u64);
-            CholSymbolic::analyze(a, true)?
+            SnCholSymbolic::analyze(a, true, &SupernodalOpts::default())?
         };
-        let fill_bytes = (sym.predicted_fill() * 8) as u64;
-        if fill_bytes > max_fill_bytes {
-            return Err(Error::OutOfMemory {
-                needed_bytes: fill_bytes,
-                budget_bytes: max_fill_bytes,
-            });
-        }
-        let numeric = {
-            let _sp = trace::span_arg(tn::DIRECT_NUMERIC, sym.predicted_fill() as u64);
-            EnvelopeCholesky::factor_numeric(&sym, &a.vals)
-        };
-        match numeric {
-            Ok(f) => {
-                return Ok((
-                    Arc::new(CachedFactor {
-                        kind: FactorKind::Chol(f),
-                        symmetric,
-                    }),
-                    Symbolic::Chol(Arc::new(sym)),
-                ));
+        if snsym.engaged() {
+            let fill_bytes = (snsym.predicted_fill() * 8) as u64;
+            if fill_bytes > max_fill_bytes {
+                return Err(Error::OutOfMemory {
+                    needed_bytes: fill_bytes,
+                    budget_bytes: max_fill_bytes,
+                });
             }
-            Err(Error::Breakdown { .. }) => { /* indefinite: fall through to LU */ }
-            Err(e) => return Err(e),
+            let snsym = Arc::new(snsym);
+            let numeric = {
+                let _sp = trace::span_arg(tn::DIRECT_NUMERIC, snsym.predicted_fill() as u64);
+                SnCholesky::factor_numeric(&snsym, &a.vals)
+            };
+            match numeric {
+                Ok(f) => {
+                    return Ok((
+                        Arc::new(CachedFactor {
+                            kind: FactorKind::SnChol(f),
+                            symmetric,
+                        }),
+                        Symbolic::SnChol(snsym),
+                    ));
+                }
+                Err(Error::Breakdown { .. }) => { /* indefinite: fall through to LU */ }
+                Err(e) => return Err(e),
+            }
+        } else {
+            // Sub-threshold panels: the scalar envelope kernel is at
+            // least as fast, and the engage verdict is pattern-only so
+            // warm refactors of this pattern land here too.
+            let sym = {
+                let _sp = trace::span_arg(tn::DIRECT_SYMBOLIC, a.nnz() as u64);
+                CholSymbolic::analyze(a, true)?
+            };
+            let fill_bytes = (sym.predicted_fill() * 8) as u64;
+            if fill_bytes > max_fill_bytes {
+                return Err(Error::OutOfMemory {
+                    needed_bytes: fill_bytes,
+                    budget_bytes: max_fill_bytes,
+                });
+            }
+            let numeric = {
+                let _sp = trace::span_arg(tn::DIRECT_NUMERIC, sym.predicted_fill() as u64);
+                EnvelopeCholesky::factor_numeric(&sym, &a.vals)
+            };
+            match numeric {
+                Ok(f) => {
+                    return Ok((
+                        Arc::new(CachedFactor {
+                            kind: FactorKind::Chol(f),
+                            symmetric,
+                        }),
+                        Symbolic::Chol(Arc::new(sym)),
+                    ));
+                }
+                Err(Error::Breakdown { .. }) => { /* indefinite: fall through to LU */ }
+                Err(e) => return Err(e),
+            }
         }
     }
     // LU records its elimination structure while factoring, so the
@@ -212,6 +273,40 @@ pub fn build_factor(
         let _num_sp = trace::span_arg(tn::DIRECT_NUMERIC, a.nnz() as u64);
         SparseLu::factor_recording(a, lu_cap(max_fill_bytes))?
     };
+    // Panel-plan the recorded pivot structure; when the plan is wide
+    // enough, the cached factor is rebuilt through the blocked replay so
+    // cold and warm numerics share one floating-point schedule.
+    let plan = {
+        let _sp = trace::span_arg(tn::DIRECT_SYMBOLIC, a.nnz() as u64);
+        LuPanels::plan(&sym, &SupernodalOpts::default())
+    };
+    if plan.engaged() {
+        let sym = Arc::new(sym);
+        let plan = Arc::new(plan);
+        let blocked = {
+            let _sp = trace::span_arg(tn::DIRECT_NUMERIC, a.nnz() as u64);
+            SparseLu::refactor_blocked(&sym, &plan, a, lu_cap(max_fill_bytes))
+        };
+        return match blocked {
+            Ok(fb) => Ok((
+                Arc::new(CachedFactor {
+                    kind: FactorKind::Lu(fb),
+                    symmetric,
+                }),
+                Symbolic::SnLu { sym, plan },
+            )),
+            // Blocked replay refused the recorded pivots (degraded
+            // pivot guard): keep the recording factor and a plain
+            // symbolic so warm refactors take the column replay.
+            Err(_) => Ok((
+                Arc::new(CachedFactor {
+                    kind: FactorKind::Lu(f),
+                    symmetric,
+                }),
+                Symbolic::Lu(sym),
+            )),
+        };
+    }
     Ok((
         Arc::new(CachedFactor {
             kind: FactorKind::Lu(f),
@@ -256,10 +351,43 @@ pub fn refactor(
                 symmetric,
             }))
         }
+        Symbolic::SnChol(cs) => {
+            if !symmetric {
+                return Err(Error::Breakdown {
+                    at: 0,
+                    reason: "cached Cholesky symbolic, but new values are not symmetric".into(),
+                });
+            }
+            let fill_bytes = (cs.predicted_fill() * 8) as u64;
+            if fill_bytes > max_fill_bytes {
+                return Err(Error::OutOfMemory {
+                    needed_bytes: fill_bytes,
+                    budget_bytes: max_fill_bytes,
+                });
+            }
+            let f = {
+                let _sp = trace::span_arg(tn::DIRECT_NUMERIC, cs.predicted_fill() as u64);
+                SnCholesky::factor_numeric(cs, &a.vals)?
+            };
+            Ok(Arc::new(CachedFactor {
+                kind: FactorKind::SnChol(f),
+                symmetric,
+            }))
+        }
         Symbolic::Lu(ls) => {
             let f = {
                 let _sp = trace::span_arg(tn::DIRECT_NUMERIC, a.nnz() as u64);
                 SparseLu::refactor(ls, a, lu_cap(max_fill_bytes))?
+            };
+            Ok(Arc::new(CachedFactor {
+                kind: FactorKind::Lu(f),
+                symmetric,
+            }))
+        }
+        Symbolic::SnLu { sym: ls, plan } => {
+            let f = {
+                let _sp = trace::span_arg(tn::DIRECT_NUMERIC, a.nnz() as u64);
+                SparseLu::refactor_blocked(ls, plan, a, lu_cap(max_fill_bytes))?
             };
             Ok(Arc::new(CachedFactor {
                 kind: FactorKind::Lu(f),
@@ -280,8 +408,8 @@ mod tests {
         let mut rng = Prng::new(1);
         let spd = random_spd(&mut rng, 40, 3, 1.5);
         let (f, sym) = build_factor(&spd, true, u64::MAX).unwrap();
-        assert_eq!(f.method(), "cholesky+rcm");
-        assert!(matches!(sym, Symbolic::Chol(_)));
+        assert!(f.method().starts_with("cholesky+rcm"), "{}", f.method());
+        assert!(matches!(sym, Symbolic::Chol(_) | Symbolic::SnChol(_)));
         let b = rng.normal_vec(40);
         let x = f.solve(&b).unwrap();
         assert!(util::rel_l2(&spd.matvec(&x), &b) < 1e-10);
@@ -291,7 +419,7 @@ mod tests {
         let gen = random_nonsymmetric(&mut rng, 40, 4);
         let (f, sym) = build_factor(&gen, false, u64::MAX).unwrap();
         assert_eq!(f.method(), "lu");
-        assert!(matches!(sym, Symbolic::Lu(_)));
+        assert!(matches!(sym, Symbolic::Lu(_) | Symbolic::SnLu { .. }));
         let xt = f.solve_t(&b).unwrap();
         let mut atx = vec![0.0; 40];
         gen.spmv_t(&xt, &mut atx);

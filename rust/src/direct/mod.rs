@@ -8,6 +8,13 @@
 //! * [`lu::SparseLu`] — Gilbert–Peierls left-looking sparse LU with
 //!   partial pivoting (the non-supernodal SuperLU algorithm) for general
 //!   square systems.
+//! * [`supernodal::SnCholesky`] — elimination-tree supernode detection
+//!   with relaxed amalgamation, feeding a blocked numeric phase that
+//!   factors dense column panels with rank-k descendant updates; LU gets
+//!   the same treatment through [`lu::LuPanels`] /
+//!   [`lu::SparseLu::refactor_blocked`].  The cached symbolic tier
+//!   ([`cache`]) engages these automatically when panels are wide enough
+//!   to pay off and falls back to the scalar kernels otherwise.
 //!
 //! Both factorizations separate symbolic-ish setup from numeric refactor
 //! where possible and report their fill so backends can enforce the
@@ -17,11 +24,13 @@ pub mod cache;
 pub mod cholesky;
 pub mod lu;
 pub mod ordering;
+pub mod supernodal;
 pub mod triangular;
 
 pub use cache::{build_factor, refactor, CachedFactor, Symbolic};
 pub use cholesky::{CholSymbolic, EnvelopeCholesky};
-pub use lu::{LuSymbolic, SparseLu};
+pub use lu::{LuPanels, LuSymbolic, SparseLu};
+pub use supernodal::{SnCholSymbolic, SnCholesky, SupernodalOpts, SN_MAX_WIDTH};
 
 use crate::error::Result;
 use crate::sparse::Csr;

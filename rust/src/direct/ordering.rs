@@ -9,6 +9,7 @@ use crate::sparse::Csr;
 
 /// Reverse Cuthill–McKee ordering of the symmetrized adjacency of `a`.
 /// Returns `perm` with new index i holding old index perm[i] (new->old).
+// rsla-lint: allow_item(L1, adjacency lists index the 0..n vertex set they were built from)
 pub fn rcm(a: &Csr) -> Vec<usize> {
     let n = a.nrows;
     // symmetrized adjacency (pattern of A + A^T, no diagonal)

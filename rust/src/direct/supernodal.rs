@@ -1,0 +1,783 @@
+//! Supernodal blocked Cholesky: elimination-tree supernode detection in
+//! the symbolic tier and a dense-panel numeric phase.
+//!
+//! The envelope kernel in [`super::cholesky`] factors one row at a time
+//! with scalar dots.  This module detects *supernodes* — runs of
+//! consecutive columns whose factor patterns nest ([`parent[j-1] == j`
+//! and `|L(:,j-1)| == |L(:,j)| + 1`) — merges small ones up the etree
+//! under a relaxed-amalgamation bound, and factors each supernode as a
+//! 64-byte-aligned dense panel: descendant contributions become dense
+//! rank-k updates and the diagonal block a dense in-panel Cholesky, all
+//! running through the fixed-schedule microkernels in
+//! [`crate::sparse::kernels`] (`panel_dot` / `panel_dot2` /
+//! `panel_sub_scaled`).
+//!
+//! Determinism contract: the partition and every floating-point
+//! schedule depend only on the sparsity pattern and the analysis
+//! options, never on values, and cold factorization and warm
+//! refactorization share one numeric body — so refactor-vs-cold stays
+//! bitwise identical, matching the envelope path's pin.  AVX2 dispatch
+//! is decided once per factorization from CPU detection, which is
+//! constant within a process.
+//!
+//! Symbolic enrichment: after amalgamation the panel patterns are
+//! recomputed supernode-by-supernode with the same descendant linked
+//! lists the numeric phase walks.  Scalar column patterns are *not*
+//! closed under descendant updates once amalgamation pads patterns
+//! (an enriched descendant pushes rows its scalar columns never had),
+//! so containment has to be established against the enriched rows,
+//! not the scalar unions.
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::metrics::{names as mn, Registry};
+use crate::sparse::align::AlignedVec;
+use crate::sparse::kernels::{panel_dot, panel_dot2};
+use crate::sparse::Csr;
+use crate::trace::{self, names as tn};
+
+/// Hard cap on supernode width: panel triangular solves keep their
+/// column accumulator in a stack buffer of this many lanes, so the
+/// warm solve path stays allocation-free (see
+/// [`super::triangular::sn_backward_solve`]).
+pub const SN_MAX_WIDTH: usize = 32;
+
+/// Tuning knobs for supernode detection.  All pattern-only: two
+/// analyses of the same pattern with the same options produce the same
+/// partition regardless of values.
+#[derive(Clone, Copy, Debug)]
+pub struct SupernodalOpts {
+    /// Maximum panel width (clamped to [`SN_MAX_WIDTH`]).
+    pub max_width: usize,
+    /// Relaxed-amalgamation slack: merging two etree-adjacent groups
+    /// is accepted while `dense_panel_cells <= (1 + relax) * pattern_nz`,
+    /// i.e. `relax` bounds the fraction of explicit zeros the dense
+    /// panels may carry in exchange for wider rank-k updates.
+    pub relax: f64,
+    /// Engage the blocked kernel only when some panel reaches this
+    /// width; below it the scalar envelope kernel is at least as fast
+    /// and the matrix falls back to it.
+    pub engage_min_width: usize,
+}
+
+impl Default for SupernodalOpts {
+    fn default() -> Self {
+        SupernodalOpts {
+            max_width: 16,
+            relax: 0.25,
+            engage_min_width: 4,
+        }
+    }
+}
+
+/// Pattern-only supernodal analysis: permutation, supernode partition,
+/// enriched per-panel row patterns, panel offsets, and a scatter map
+/// from original CSR value slots into panel slots.
+///
+/// Stored in the factor cache's symbolic tier ([`super::cache::Symbolic`])
+/// and shared by every numeric refactorization of the pattern.
+pub struct SnCholSymbolic {
+    n: usize,
+    /// new -> old permutation (None = natural order).
+    perm: Option<Vec<usize>>,
+    /// Supernode `s` spans permuted columns `sn_ptr[s]..sn_ptr[s+1]`.
+    sn_ptr: Vec<usize>,
+    /// Concatenated row patterns; supernode `s` owns
+    /// `rows[row_ptr[s]..row_ptr[s+1]]`, sorted ascending, and its
+    /// first `width` entries are exactly its own columns.
+    rows: Vec<usize>,
+    row_ptr: Vec<usize>,
+    /// f64 offset of each panel in the packed panel array;
+    /// `panel_ptr[s+1] - panel_ptr[s] == m_s * w_s` (row-major).
+    panel_ptr: Vec<usize>,
+    /// Permuted column -> owning supernode.
+    col_of_sn: Vec<usize>,
+    /// Original CSR value slot -> panel slot (`usize::MAX` = upper
+    /// triangle of the permuted matrix, dropped).
+    scatter: Vec<usize>,
+    /// Widest panel in the partition.
+    max_width: usize,
+    /// Whether the blocked kernel is worth running for this pattern.
+    engaged: bool,
+}
+
+impl SnCholSymbolic {
+    /// Analyze the pattern of `a` (values ignored).  `use_rcm` mirrors
+    /// [`super::cholesky::CholSymbolic::analyze`]; the RCM ordering is
+    /// pattern-only so the whole analysis is value-independent.
+    // rsla-lint: allow_item(L1, symbolic-tier index arithmetic over arrays this function sizes itself; every index is bounded by n or nnz by construction)
+    pub fn analyze(a: &Csr, use_rcm: bool, opts: &SupernodalOpts) -> Result<Self> {
+        if a.nrows != a.ncols {
+            return Err(Error::InvalidProblem("cholesky needs square".into()));
+        }
+        let n = a.nrows;
+        let max_width = opts.max_width.clamp(1, SN_MAX_WIDTH);
+        if n == 0 {
+            return Ok(SnCholSymbolic {
+                n,
+                perm: None,
+                sn_ptr: vec![0],
+                rows: Vec::new(),
+                row_ptr: vec![0],
+                panel_ptr: vec![0],
+                col_of_sn: Vec::new(),
+                scatter: Vec::new(),
+                max_width: 0,
+                engaged: false,
+            });
+        }
+        let (perm, inv): (Option<Vec<usize>>, Vec<usize>) = if use_rcm {
+            let p = super::ordering::rcm(a);
+            let mut inv = vec![0usize; n];
+            for (new, &old) in p.iter().enumerate() {
+                inv[old] = new;
+            }
+            (Some(p), inv)
+        } else {
+            (None, (0..n).collect())
+        };
+        let old_of = |i: usize| -> usize { perm.as_ref().map_or(i, |p| p[i]) };
+
+        // Bucket the permuted lower triangle (pr >= pc) by column; kept
+        // alongside the original value index for the scatter map.
+        let mut colptr = vec![0usize; n + 1];
+        for r in 0..n {
+            let (cols, _) = a.row(r);
+            let pr = inv[r];
+            for &c in cols {
+                if pr >= inv[c] {
+                    colptr[inv[c] + 1] += 1;
+                }
+            }
+        }
+        for j in 0..n {
+            colptr[j + 1] += colptr[j];
+        }
+        let nnz_lower = colptr[n];
+        let mut crow = vec![0usize; nnz_lower];
+        let mut cvidx = vec![0usize; nnz_lower];
+        let mut cursor = colptr.clone();
+        for r in 0..n {
+            let pr = inv[r];
+            for k in a.indptr[r]..a.indptr[r + 1] {
+                let pc = inv[a.indices[k]];
+                if pr >= pc {
+                    crow[cursor[pc]] = pr;
+                    cvidx[cursor[pc]] = k;
+                    cursor[pc] += 1;
+                }
+            }
+        }
+
+        // Pass 1: elimination tree (Liu) with ancestor path compression.
+        let mut parent = vec![usize::MAX; n];
+        let mut ancestor = vec![usize::MAX; n];
+        for i in 0..n {
+            let (cols, _) = a.row(old_of(i));
+            for &c in cols {
+                let mut j = inv[c];
+                if j >= i {
+                    continue;
+                }
+                while j != usize::MAX && j != i {
+                    let up = ancestor[j];
+                    ancestor[j] = i;
+                    if up == usize::MAX {
+                        parent[j] = i;
+                    }
+                    j = up;
+                }
+            }
+        }
+
+        // Pass 2: scalar column counts + patterns of L by row-subtree
+        // traversal (walk parent pointers, stop at marked nodes);
+        // O(|L|) total.  col_rows[j] comes out sorted because i ascends.
+        let mut mark = vec![usize::MAX; n];
+        let mut colcount = vec![1usize; n];
+        let mut col_rows: Vec<Vec<usize>> = (0..n).map(|j| vec![j]).collect();
+        for i in 0..n {
+            mark[i] = i;
+            let (cols, _) = a.row(old_of(i));
+            for &c in cols {
+                let mut j = inv[c];
+                if j >= i {
+                    continue;
+                }
+                while mark[j] != i {
+                    mark[j] = i;
+                    colcount[j] += 1;
+                    col_rows[j].push(i);
+                    j = parent[j];
+                }
+            }
+        }
+
+        // Fundamental supernodes, split at max_width (panel kernels
+        // carry a hard width cap for their stack buffers).
+        let mut starts = vec![0usize];
+        let mut last_start = 0usize;
+        for j in 1..n {
+            let fundamental = parent[j - 1] == j && colcount[j - 1] == colcount[j] + 1;
+            if !fundamental || j - last_start >= max_width {
+                starts.push(j);
+                last_start = j;
+            }
+        }
+        starts.push(n);
+
+        // Relaxed amalgamation: greedy left-to-right merge of
+        // etree-adjacent groups while the dense panel stays within
+        // (1 + relax) of the union pattern's nonzeros.  Marker-based
+        // union with rollback of rejected candidates.
+        let mut merged: Vec<(usize, usize)> = Vec::new();
+        let mut gmark = vec![usize::MAX; n];
+        let mut stamp = 0usize;
+        let mut added: Vec<usize> = Vec::new();
+        let mut cur_lo = starts[0];
+        let mut cur_hi = starts[1];
+        let mut cur_rows = 0usize;
+        let mut cur_nz = 0usize;
+        stamp += 1;
+        for j in cur_lo..cur_hi {
+            cur_nz += colcount[j];
+            for &r in &col_rows[j] {
+                if gmark[r] != stamp {
+                    gmark[r] = stamp;
+                    cur_rows += 1;
+                }
+            }
+        }
+        for g in 1..starts.len() - 1 {
+            let lo = starts[g];
+            let hi = starts[g + 1];
+            let w = hi - cur_lo;
+            let mut accept = false;
+            if parent[cur_hi - 1] == cur_hi && w <= max_width {
+                added.clear();
+                let mut cand_nz = cur_nz;
+                for j in lo..hi {
+                    cand_nz += colcount[j];
+                    for &r in &col_rows[j] {
+                        if gmark[r] != stamp {
+                            gmark[r] = stamp;
+                            added.push(r);
+                        }
+                    }
+                }
+                let dense = (cur_rows + added.len()) * w;
+                if dense as f64 <= (1.0 + opts.relax) * cand_nz as f64 {
+                    cur_hi = hi;
+                    cur_rows += added.len();
+                    cur_nz = cand_nz;
+                    accept = true;
+                } else {
+                    for &r in &added {
+                        gmark[r] = usize::MAX;
+                    }
+                }
+            }
+            if !accept {
+                merged.push((cur_lo, cur_hi));
+                cur_lo = lo;
+                cur_hi = hi;
+                cur_rows = 0;
+                cur_nz = 0;
+                stamp += 1;
+                for j in lo..hi {
+                    cur_nz += colcount[j];
+                    for &r in &col_rows[j] {
+                        if gmark[r] != stamp {
+                            gmark[r] = stamp;
+                            cur_rows += 1;
+                        }
+                    }
+                }
+            }
+        }
+        merged.push((cur_lo, cur_hi));
+        drop(col_rows);
+
+        // Enriched supernodal pass: recompute panel row patterns with
+        // the numeric phase's descendant linked lists so patterns are
+        // closed under descendant updates even after amalgamation
+        // padding.  Also fills the value scatter map in the same sweep.
+        let nsuper = merged.len();
+        let mut col_of_sn = vec![0usize; n];
+        for (s, &(lo, hi)) in merged.iter().enumerate() {
+            for j in lo..hi {
+                col_of_sn[j] = s;
+            }
+        }
+        let mut head = vec![usize::MAX; nsuper];
+        let mut nxt = vec![usize::MAX; nsuper];
+        let mut cur = vec![0usize; nsuper];
+        let mut pos = vec![0usize; n];
+        let mut rows: Vec<usize> = Vec::new();
+        let mut row_ptr = vec![0usize];
+        let mut panel_ptr = vec![0usize];
+        let mut sn_ptr = vec![0usize];
+        let mut scatter = vec![usize::MAX; a.nnz()];
+        let mut list: Vec<usize> = Vec::new();
+        let mut max_w = 0usize;
+        for (s, &(lo, hi)) in merged.iter().enumerate() {
+            let w = hi - lo;
+            max_w = max_w.max(w);
+            // fresh stamps disjoint from pass 2's (which used 0..n)
+            let st = n + 1 + s;
+            list.clear();
+            for j in lo..hi {
+                mark[j] = st;
+                list.push(j);
+            }
+            for j in lo..hi {
+                for k in colptr[j]..colptr[j + 1] {
+                    let r = crow[k];
+                    if mark[r] != st {
+                        mark[r] = st;
+                        list.push(r);
+                    }
+                }
+            }
+            let mut d = head[s];
+            while d != usize::MAX {
+                let dn = nxt[d];
+                let dr0 = row_ptr[d];
+                let dlen = row_ptr[d + 1] - dr0;
+                let mut kend = cur[d];
+                while kend < dlen && rows[dr0 + kend] < hi {
+                    kend += 1;
+                }
+                // every remaining descendant row propagates upward
+                for k in cur[d]..dlen {
+                    let r = rows[dr0 + k];
+                    if mark[r] != st {
+                        mark[r] = st;
+                        list.push(r);
+                    }
+                }
+                cur[d] = kend;
+                if kend < dlen {
+                    let t = col_of_sn[rows[dr0 + kend]];
+                    nxt[d] = head[t];
+                    head[t] = d;
+                }
+                d = dn;
+            }
+            list.sort_unstable();
+            debug_assert!(
+                list.iter().take(w).copied().eq(lo..hi),
+                "panel head must be the supernode's own columns"
+            );
+            let m = list.len();
+            for (k, &r) in list.iter().enumerate() {
+                pos[r] = k;
+            }
+            let pbase = match panel_ptr.last() {
+                Some(&p) => p,
+                None => 0,
+            };
+            for j in lo..hi {
+                for k in colptr[j]..colptr[j + 1] {
+                    scatter[cvidx[k]] = pbase + pos[crow[k]] * w + (j - lo);
+                }
+            }
+            rows.extend_from_slice(&list);
+            row_ptr.push(rows.len());
+            panel_ptr.push(pbase + m * w);
+            sn_ptr.push(hi);
+            cur[s] = w;
+            if w < m {
+                let t = col_of_sn[rows[row_ptr[s] + w]];
+                nxt[s] = head[t];
+                head[t] = s;
+            }
+        }
+
+        let engaged = max_w >= opts.engage_min_width.max(1);
+        Ok(SnCholSymbolic {
+            n,
+            perm,
+            sn_ptr,
+            rows,
+            row_ptr,
+            panel_ptr,
+            col_of_sn,
+            scatter,
+            max_width: max_w,
+            engaged,
+        })
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of supernodes in the partition.
+    pub fn nsuper(&self) -> usize {
+        self.sn_ptr.len() - 1
+    }
+
+    /// Widest panel in the partition (columns).
+    pub fn max_panel_width(&self) -> usize {
+        self.max_width
+    }
+
+    /// Whether the blocked kernel is engaged for this pattern; when
+    /// false, callers should fall back to the envelope column kernel.
+    pub fn engaged(&self) -> bool {
+        self.engaged
+    }
+
+    /// Panel slots the numeric phase will allocate (f64 count,
+    /// explicit amalgamation zeros included).
+    pub fn predicted_fill(&self) -> usize {
+        match self.panel_ptr.last() {
+            Some(&p) => p,
+            None => 0,
+        }
+    }
+
+    /// Bytes held by the symbolic structure itself.
+    pub fn bytes(&self) -> u64 {
+        (((self.sn_ptr.len() + self.rows.len() + self.row_ptr.len() + self.panel_ptr.len())
+            + (self.col_of_sn.len() + self.scatter.len()))
+            * 8) as u64
+            + self.perm.as_ref().map_or(0, |p| (p.len() * 8) as u64)
+    }
+}
+
+/// Shared numeric body: one floating-point schedule for the cold and
+/// warm paths (refactor-vs-cold bitwise pin), compiled twice — once
+/// generic, once under `target_feature(avx2)` — and dispatched once per
+/// factorization.  Returns the flop count of the blocked phase.
+// rsla-lint: allow_item(L1, left-looking kernel over panel offsets the symbolic pass sized; descendant rows are contained in target rows by the enriched-pattern construction)
+#[inline(always)]
+fn sn_numeric_body(sym: &SnCholSymbolic, panels: &mut [f64]) -> Result<u64> {
+    let nsuper = sym.nsuper();
+    let mut head = vec![usize::MAX; nsuper];
+    let mut nxt = vec![usize::MAX; nsuper];
+    let mut cur = vec![0usize; nsuper];
+    let mut pos = vec![0usize; sym.n];
+    let mut flops = 0u64;
+    for s in 0..nsuper {
+        let lo = sym.sn_ptr[s];
+        let hi = sym.sn_ptr[s + 1];
+        let w = hi - lo;
+        let r0 = sym.row_ptr[s];
+        let m = sym.row_ptr[s + 1] - r0;
+        let srows = &sym.rows[r0..r0 + m];
+        for (k, &r) in srows.iter().enumerate() {
+            pos[r] = k;
+        }
+        // descendants strictly precede the target in the panel array
+        let (done, target) = panels.split_at_mut(sym.panel_ptr[s]);
+        let target = &mut target[..m * w];
+        let mut d = head[s];
+        while d != usize::MAX {
+            let dn = nxt[d];
+            let dr0 = sym.row_ptr[d];
+            let dlen = sym.row_ptr[d + 1] - dr0;
+            let dw = sym.sn_ptr[d + 1] - sym.sn_ptr[d];
+            let drows = &sym.rows[dr0..dr0 + dlen];
+            let dpanel = &done[sym.panel_ptr[d]..sym.panel_ptr[d] + dlen * dw];
+            let k0 = cur[d];
+            let mut kend = k0;
+            while kend < dlen && drows[kend] < hi {
+                kend += 1;
+            }
+            // rank-k update: target[k2, drows[k]-lo] -= <D[k2,:], D[k,:]>
+            // over contiguous row-major panel rows, two dots per pass
+            // to reuse the loaded D[k,:] operand.
+            for k in k0..kend {
+                let colk = drows[k] - lo;
+                let drow_k = &dpanel[k * dw..(k + 1) * dw];
+                let mut k2 = k;
+                while k2 + 1 < dlen {
+                    let (va, vb) = panel_dot2(
+                        drow_k,
+                        &dpanel[k2 * dw..(k2 + 1) * dw],
+                        &dpanel[(k2 + 1) * dw..(k2 + 2) * dw],
+                    );
+                    target[pos[drows[k2]] * w + colk] -= va;
+                    target[pos[drows[k2 + 1]] * w + colk] -= vb;
+                    k2 += 2;
+                }
+                if k2 < dlen {
+                    let v = panel_dot(drow_k, &dpanel[k2 * dw..(k2 + 1) * dw]);
+                    target[pos[drows[k2]] * w + colk] -= v;
+                }
+                flops += (2 * dw * (dlen - k)) as u64;
+            }
+            cur[d] = kend;
+            if kend < dlen {
+                let t = sym.col_of_sn[drows[kend]];
+                nxt[d] = head[t];
+                head[t] = d;
+            }
+            d = dn;
+        }
+        // dense in-panel Cholesky of the diagonal block + column scaling
+        for c in 0..w {
+            let (top, below) = target.split_at_mut((c + 1) * w);
+            let crow = &mut top[c * w..];
+            let d = crow[c] - panel_dot(&crow[..c], &crow[..c]);
+            if d <= 0.0 || !d.is_finite() {
+                return Err(Error::Breakdown {
+                    at: lo + c,
+                    reason: format!("non-positive pivot {d:.3e} (matrix not SPD?)"),
+                });
+            }
+            let lcc = d.sqrt();
+            crow[c] = lcc;
+            let pivot = &top[c * w..c * w + c];
+            for row in below.chunks_exact_mut(w) {
+                let v = row[c] - panel_dot(&row[..c], pivot);
+                row[c] = v / lcc;
+            }
+        }
+        flops += (m * w * w) as u64;
+        cur[s] = w;
+        if w < m {
+            let t = sym.col_of_sn[srows[w]];
+            nxt[s] = head[t];
+            head[t] = s;
+        }
+    }
+    Ok(flops)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn sn_numeric_avx2(sym: &SnCholSymbolic, panels: &mut [f64]) -> Result<u64> {
+    sn_numeric_body(sym, panels)
+}
+
+fn sn_numeric(sym: &SnCholSymbolic, panels: &mut [f64]) -> Result<u64> {
+    #[cfg(target_arch = "x86_64")]
+    if crate::sparse::kernels::avx2_available() {
+        // SAFETY: gated on runtime AVX2 detection, which is constant
+        // within a process (so cold and warm take the same schedule).
+        return unsafe { sn_numeric_avx2(sym, panels) };
+    }
+    sn_numeric_body(sym, panels)
+}
+
+/// Supernodal Cholesky factor: the shared symbolic partition plus the
+/// packed row-major panels of L.
+pub struct SnCholesky {
+    sym: Arc<SnCholSymbolic>,
+    panels: AlignedVec<f64>,
+}
+
+impl SnCholesky {
+    /// Numeric (re)factorization of `vals` on the analyzed pattern.
+    /// Cold factorization and warm refactorization both come through
+    /// here, so they run the identical floating-point schedule.
+    // rsla-lint: allow_item(L1, scatter slots index the panel array the symbolic pass sized)
+    pub fn factor_numeric(sym: &Arc<SnCholSymbolic>, vals: &[f64]) -> Result<Self> {
+        if vals.len() != sym.scatter.len() {
+            return Err(Error::InvalidProblem(
+                "value array does not match analyzed pattern".into(),
+            ));
+        }
+        let _span = trace::span_arg(tn::DIRECT_SUPERNODAL_NUMERIC, sym.nsuper() as u64);
+        let mut panels = AlignedVec::<f64>::zeroed(sym.predicted_fill());
+        for (k, &slot) in sym.scatter.iter().enumerate() {
+            if slot != usize::MAX {
+                panels[slot] = vals[k];
+            }
+        }
+        let flops = sn_numeric(sym, &mut panels)?;
+        let reg = Registry::global();
+        reg.incr(mn::FACTOR_SUPERNODE_COUNT, sym.nsuper() as u64);
+        reg.incr(mn::FACTOR_SUPERNODE_MAX_COLS, sym.max_panel_width() as u64);
+        reg.incr(mn::FACTOR_PANEL_FLOPS, flops);
+        Ok(SnCholesky {
+            sym: sym.clone(),
+            panels,
+        })
+    }
+
+    pub fn n(&self) -> usize {
+        self.sym.n
+    }
+
+    /// Stored factor entries (f64 count, amalgamation zeros included).
+    pub fn fill(&self) -> usize {
+        self.panels.len()
+    }
+
+    /// Bytes held by the numeric factor (the symbolic structure is
+    /// shared and accounted separately by the cache).
+    pub fn bytes(&self) -> u64 {
+        (self.panels.len() * 8) as u64
+    }
+
+    /// Solve `A x = b`.  Delegates to [`Self::solve_into`] so the two
+    /// entry points stay bitwise identical.
+    pub fn solve(&self, b: &[f64]) -> Result<Vec<f64>> {
+        if b.len() != self.sym.n {
+            return Err(Error::InvalidProblem("rhs length mismatch".into()));
+        }
+        let mut out = vec![0.0; self.sym.n];
+        let mut scratch = vec![0.0; self.sym.n];
+        self.solve_into(b, &mut out, &mut scratch);
+        Ok(out)
+    }
+
+    /// Allocation-free solve into caller-provided buffers; `scratch`
+    /// must be at least `n` long (holds the permuted working vector).
+    // rsla-lint: no_alloc
+    // rsla-lint: allow_item(L1, permutation gather/scatter and panel slices are bounded by n and the symbolic layout)
+    pub fn solve_into(&self, b: &[f64], out: &mut [f64], scratch: &mut [f64]) {
+        assert_eq!(b.len(), self.sym.n);
+        assert_eq!(out.len(), self.sym.n);
+        assert!(scratch.len() >= self.sym.n);
+        let sym = &*self.sym;
+        let work: &mut [f64] = match &sym.perm {
+            Some(p) => {
+                for (new, &old) in p.iter().enumerate() {
+                    scratch[new] = b[old];
+                }
+                &mut scratch[..sym.n]
+            }
+            None => {
+                out.copy_from_slice(b);
+                &mut out[..]
+            }
+        };
+        super::triangular::sn_forward_solve(
+            &sym.sn_ptr,
+            &sym.row_ptr,
+            &sym.rows,
+            &sym.panel_ptr,
+            &self.panels,
+            work,
+        );
+        super::triangular::sn_backward_solve(
+            &sym.sn_ptr,
+            &sym.row_ptr,
+            &sym.rows,
+            &sym.panel_ptr,
+            &self.panels,
+            work,
+        );
+        if let Some(p) = &sym.perm {
+            for (new, &old) in p.iter().enumerate() {
+                out[old] = scratch[new];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::graphs::random_spd;
+    use crate::sparse::poisson::poisson2d;
+    use crate::util::Prng;
+
+    fn check_solve(a: &Csr, opts: &SupernodalOpts) {
+        let sym = Arc::new(SnCholSymbolic::analyze(a, true, opts).unwrap());
+        let f = SnCholesky::factor_numeric(&sym, &a.vals).unwrap();
+        let n = a.nrows;
+        let mut prng = Prng::new(99);
+        let b: Vec<f64> = (0..n).map(|_| prng.uniform() - 0.5).collect();
+        let x = f.solve(&b).unwrap();
+        let ad = a.to_dense();
+        let mut resid: f64 = 0.0;
+        let mut bnorm: f64 = 0.0;
+        for i in 0..n {
+            let mut s = -b[i];
+            for j in 0..n {
+                s += ad[i][j] * x[j];
+            }
+            resid += s * s;
+            bnorm += b[i] * b[i];
+        }
+        assert!(
+            resid.sqrt() <= 1e-9 * bnorm.sqrt().max(1.0),
+            "residual {:.3e} too large (max_width={}, relax={})",
+            resid.sqrt(),
+            opts.max_width,
+            opts.relax
+        );
+    }
+
+    #[test]
+    fn supernodal_solve_matches_across_options() {
+        let a = random_spd(&mut Prng::new(3), 60, 3, 1.5);
+        for (mw, rx) in [(1, 0.0), (4, 0.25), (8, 0.25), (16, 1.0), (32, 0.5)] {
+            check_solve(
+                &a,
+                &SupernodalOpts {
+                    max_width: mw,
+                    relax: rx,
+                    engage_min_width: 1,
+                },
+            );
+        }
+        check_solve(&poisson2d(12, None).matrix, &SupernodalOpts::default());
+    }
+
+    #[test]
+    fn refactor_is_bitwise_deterministic() {
+        let a = poisson2d(10, None).matrix;
+        let sym = Arc::new(SnCholSymbolic::analyze(&a, true, &SupernodalOpts::default()).unwrap());
+        let f1 = SnCholesky::factor_numeric(&sym, &a.vals).unwrap();
+        let f2 = SnCholesky::factor_numeric(&sym, &a.vals).unwrap();
+        assert_eq!(f1.panels, f2.panels);
+    }
+
+    #[test]
+    fn solve_into_is_bitwise_equal_to_solve() {
+        let a = poisson2d(8, None).matrix;
+        let sym = Arc::new(SnCholSymbolic::analyze(&a, true, &SupernodalOpts::default()).unwrap());
+        let f = SnCholesky::factor_numeric(&sym, &a.vals).unwrap();
+        let n = a.nrows;
+        let mut prng = Prng::new(4);
+        let b: Vec<f64> = (0..n).map(|_| prng.uniform()).collect();
+        let mut out = vec![0.0; n];
+        let mut scratch = vec![0.0; n];
+        f.solve_into(&b, &mut out, &mut scratch);
+        assert_eq!(f.solve(&b).unwrap(), out);
+    }
+
+    #[test]
+    fn diagonal_pattern_does_not_engage() {
+        // width-1 supernodes everywhere: amalgamation has no etree
+        // edges to merge along, so the blocked kernel must not engage.
+        let a = Csr::identity(24);
+        let sym = SnCholSymbolic::analyze(&a, true, &SupernodalOpts::default()).unwrap();
+        assert!(!sym.engaged());
+        assert_eq!(sym.max_panel_width(), 1);
+    }
+
+    #[test]
+    fn breakdown_on_non_spd() {
+        let a = random_spd(&mut Prng::new(5), 20, 2, 1.5);
+        let mut vals = a.vals.to_vec();
+        // flip the sign of the whole matrix: -SPD has negative pivots
+        for v in vals.iter_mut() {
+            *v = -*v;
+        }
+        let sym = Arc::new(
+            SnCholSymbolic::analyze(
+                &a,
+                true,
+                &SupernodalOpts {
+                    max_width: 8,
+                    relax: 0.25,
+                    engage_min_width: 1,
+                },
+            )
+            .unwrap(),
+        );
+        assert!(matches!(
+            SnCholesky::factor_numeric(&sym, &vals),
+            Err(Error::Breakdown { .. })
+        ));
+    }
+}

@@ -1,10 +1,15 @@
 //! Sparse triangular solves on CSR factors (used by the ILU/IC
-//! preconditioners, which store their factors as CSR).
+//! preconditioners, which store their factors as CSR), and the blocked
+//! panel sweeps for supernodal Cholesky factors
+//! ([`sn_forward_solve`] / [`sn_backward_solve`]).
 
+use super::supernodal::SN_MAX_WIDTH;
+use crate::sparse::kernels::panel_dot;
 use crate::sparse::Csr;
 
 /// Solve L x = b where `l` is lower triangular CSR with the diagonal
 /// stored as the LAST entry of each row.
+// rsla-lint: allow_item(L1, CSR row slices index the validated n-vector)
 pub fn lower_solve_csr(l: &Csr, b: &[f64], x: &mut [f64]) {
     debug_assert_eq!(l.nrows, b.len());
     for r in 0..l.nrows {
@@ -20,6 +25,7 @@ pub fn lower_solve_csr(l: &Csr, b: &[f64], x: &mut [f64]) {
 
 /// Solve U x = b where `u` is upper triangular CSR with the diagonal
 /// stored as the FIRST entry of each row.
+// rsla-lint: allow_item(L1, CSR row slices index the validated n-vector)
 pub fn upper_solve_csr(u: &Csr, b: &[f64], x: &mut [f64]) {
     debug_assert_eq!(u.nrows, b.len());
     for r in (0..u.nrows).rev() {
@@ -34,6 +40,7 @@ pub fn upper_solve_csr(u: &Csr, b: &[f64], x: &mut [f64]) {
 }
 
 /// Solve L^T x = b with `l` as in [`lower_solve_csr`] (column sweep).
+// rsla-lint: allow_item(L1, CSR row slices index the validated n-vector)
 pub fn lower_transpose_solve_csr(l: &Csr, b: &[f64], x: &mut [f64]) {
     x.copy_from_slice(b);
     for r in (0..l.nrows).rev() {
@@ -42,6 +49,86 @@ pub fn lower_transpose_solve_csr(l: &Csr, b: &[f64], x: &mut [f64]) {
         x[r] = xr;
         for k in 0..cols.len() - 1 {
             x[cols[k]] -= vals[k] * xr;
+        }
+    }
+}
+
+/// Forward sweep `L y = b` over supernodal panels (in place on `x`,
+/// which enters holding the permuted rhs).  Panel `s` is row-major
+/// `m x w` at `panels[panel_ptr[s]..]`; its first `w` rows are the
+/// dense lower-triangular diagonal block, the rest scatter into the
+/// trailing entries named by `rows`.
+///
+/// Allocation-free: the warm solve path (`CachedFactor::solve_into`)
+/// runs through here under the repo's no_alloc pin.
+// rsla-lint: no_alloc
+// rsla-lint: allow_item(L1, panel offsets and row indices were sized and bounds-established by the supernodal symbolic pass; x is n-long and rows hold permuted indices below n)
+pub fn sn_forward_solve(
+    sn_ptr: &[usize],
+    row_ptr: &[usize],
+    rows: &[usize],
+    panel_ptr: &[usize],
+    panels: &[f64],
+    x: &mut [f64],
+) {
+    let nsuper = sn_ptr.len() - 1;
+    for s in 0..nsuper {
+        let lo = sn_ptr[s];
+        let hi = sn_ptr[s + 1];
+        let w = hi - lo;
+        let r0 = row_ptr[s];
+        let m = row_ptr[s + 1] - r0;
+        let p = &panels[panel_ptr[s]..panel_ptr[s] + m * w];
+        for c in 0..w {
+            let prow = &p[c * w..c * w + w];
+            let v = x[lo + c] - panel_dot(&prow[..c], &x[lo..lo + c]);
+            x[lo + c] = v / prow[c];
+        }
+        for k in w..m {
+            let prow = &p[k * w..k * w + w];
+            let v = panel_dot(prow, &x[lo..hi]);
+            x[rows[r0 + k]] -= v;
+        }
+    }
+}
+
+/// Backward sweep `L^T x = y` over supernodal panels (in place on `x`).
+/// The off-diagonal contribution per panel accumulates into a stack
+/// buffer of [`SN_MAX_WIDTH`] lanes — the analyze-time width clamp is
+/// what keeps this warm path allocation-free.
+// rsla-lint: no_alloc
+// rsla-lint: allow_item(L1, panel offsets and row indices were sized and bounds-established by the supernodal symbolic pass; acc is stack-bounded by the SN_MAX_WIDTH clamp)
+pub fn sn_backward_solve(
+    sn_ptr: &[usize],
+    row_ptr: &[usize],
+    rows: &[usize],
+    panel_ptr: &[usize],
+    panels: &[f64],
+    x: &mut [f64],
+) {
+    let nsuper = sn_ptr.len() - 1;
+    for s in (0..nsuper).rev() {
+        let lo = sn_ptr[s];
+        let hi = sn_ptr[s + 1];
+        let w = hi - lo;
+        debug_assert!(w <= SN_MAX_WIDTH);
+        let r0 = row_ptr[s];
+        let m = row_ptr[s + 1] - r0;
+        let p = &panels[panel_ptr[s]..panel_ptr[s] + m * w];
+        let mut acc = [0.0f64; SN_MAX_WIDTH];
+        for k in w..m {
+            let prow = &p[k * w..k * w + w];
+            let xr = x[rows[r0 + k]];
+            for c in 0..w {
+                acc[c] += prow[c] * xr;
+            }
+        }
+        for c in (0..w).rev() {
+            let mut t = x[lo + c] - acc[c];
+            for c2 in c + 1..w {
+                t -= p[c2 * w + c] * x[lo + c2];
+            }
+            x[lo + c] = t / p[c * w + c];
         }
     }
 }

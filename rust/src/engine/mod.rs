@@ -879,6 +879,7 @@ fn batch_direct_eligible(a: &Csr, opts: &SolveOpts) -> bool {
 fn batched_label(method: &str) -> &'static str {
     match method {
         "cholesky+rcm" => "cholesky+rcm(batched)",
+        "cholesky+rcm+sn" => "cholesky+rcm+sn(batched)",
         _ => "lu(batched)",
     }
 }

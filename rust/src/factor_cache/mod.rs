@@ -390,7 +390,8 @@ impl FactorCache {
         match inner.symbolic.get(&skey) {
             Some(e) if e.indptr == a.indptr && e.indices == a.indices => match &e.sym {
                 Symbolic::Chol(cs) => Some((cs.predicted_fill() * 8) as u64),
-                Symbolic::Lu(_) => None,
+                Symbolic::SnChol(cs) => Some((cs.predicted_fill() * 8) as u64),
+                Symbolic::Lu(_) | Symbolic::SnLu { .. } => None,
             },
             _ => None,
         }

@@ -24,7 +24,12 @@
 //!
 //! Suppression is per-site and must carry a reason:
 //! `// rsla-lint: allow(L1, why this site is safe)` on the offending
-//! line or the line above.  A reasonless `allow` is itself an error.
+//! line or the line above.  Dense index kernels may instead annotate
+//! `// rsla-lint: allow_item(L1, why the whole body is safe)` above a
+//! `fn`/`for`/`while`/`loop` to suppress the rule for that one
+//! brace-matched body (same binding rule as `no_alloc`).  A reasonless
+//! `allow`/`allow_item` is itself an error, as is an `allow_item` with
+//! no following body.
 //!
 //! Run as `cargo run --bin rsla-lint -- rust/src` (CI blocks on it).
 
@@ -156,16 +161,89 @@ mod tests {
             strict.iter().any(|d| d.rule == "L1" && d.message.contains("index")),
             "{strict:?}"
         );
-        let kernel = lint_snippet("direct/x.rs", "fn f(v: &[u8]) -> u8 { v[0] }\n");
+        let kernel = lint_snippet("krylov/x.rs", "fn f(v: &[u8]) -> u8 { v[0] }\n");
         assert!(
             kernel.is_empty(),
-            "numeric kernels are exempt from the indexing sub-rule: {kernel:?}"
+            "iterative kernels are exempt from the indexing sub-rule: {kernel:?}"
+        );
+        // a lifetime before `[` opens a slice type, not an index
+        let lifetime = lint_snippet(
+            "trace/x.rs",
+            "struct P<'a> {\n    bytes: &'a [u8],\n}\nfn f(p: &P<'static>) -> &'static [u8] { &[] }\n",
+        );
+        assert!(
+            lifetime.is_empty(),
+            "slice types after lifetimes are not indexing: {lifetime:?}"
         );
         let suppressed = lint_snippet(
             "factor_cache/x.rs",
             "fn f(v: &[u8]) -> u8 {\n    // rsla-lint: allow(L1, len checked by caller)\n    v[0]\n}\n",
         );
         assert!(suppressed.is_empty(), "{suppressed:?}");
+    }
+
+    #[test]
+    fn direct_module_is_strict_indexed() {
+        let strict = lint_snippet("direct/x.rs", "fn f(v: &[u8]) -> u8 { v[0] }\n");
+        assert!(
+            strict.iter().any(|d| d.rule == "L1" && d.message.contains("index")),
+            "direct/ must be under the strict-indexing sub-rule: {strict:?}"
+        );
+    }
+
+    #[test]
+    fn allow_item_suppresses_the_whole_body() {
+        // one annotation covers every indexing site in the fn body
+        let ok = lint_snippet(
+            "direct/x.rs",
+            "// rsla-lint: allow_item(L1, loop bounds are invariants of the panel layout)\nfn f(v: &[u8]) -> u8 {\n    let a = v[0];\n    let b = v[1];\n    a + b\n}\n",
+        );
+        assert!(ok.is_empty(), "allow_item must cover the full body: {ok:?}");
+        // ...but only for the named rule: an L5 violation inside the
+        // same (no_alloc) body still fires
+        let other_rule = lint_snippet(
+            "direct/x.rs",
+            "// rsla-lint: no_alloc\n// rsla-lint: allow_item(L1, loop bounds are invariants)\nfn f(v: &[f64]) -> Vec<f64> {\n    let _a = v[0];\n    v.to_vec()\n}\n",
+        );
+        assert!(
+            other_rule.iter().all(|d| d.rule != "L1"),
+            "allow_item(L1) must cover the indexing: {other_rule:?}"
+        );
+        assert!(
+            other_rule.iter().any(|d| d.rule == "L5"),
+            "allow_item(L1) must not suppress L5: {other_rule:?}"
+        );
+        // ...and only for that one body: a sibling fn is not covered
+        let sibling = lint_snippet(
+            "direct/x.rs",
+            "// rsla-lint: allow_item(L1, first body only)\nfn f(v: &[u8]) -> u8 { v[0] }\nfn g(v: &[u8]) -> u8 { v[1] }\n",
+        );
+        assert!(
+            sibling.iter().any(|d| d.rule == "L1" && d.line == 3),
+            "allow_item must not leak past the annotated body: {sibling:?}"
+        );
+    }
+
+    #[test]
+    fn malformed_allow_item_is_an_error() {
+        // reasonless
+        let no_reason = lint_snippet(
+            "direct/x.rs",
+            "// rsla-lint: allow_item(L1)\nfn f(v: &[u8]) -> u8 { v[0] }\n",
+        );
+        assert!(
+            no_reason.iter().any(|d| d.rule == "ANN" && d.message.contains("reason")),
+            "{no_reason:?}"
+        );
+        // no following body to bind to
+        let dangling = lint_snippet(
+            "direct/x.rs",
+            "// rsla-lint: allow_item(L1, dangling)\nconst X: u8 = 0;\n",
+        );
+        assert!(
+            dangling.iter().any(|d| d.rule == "ANN" && d.message.contains("body")),
+            "{dangling:?}"
+        );
     }
 
     #[test]

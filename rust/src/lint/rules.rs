@@ -10,10 +10,14 @@ use super::Diagnostic;
 
 /// Modules where plain `[idx]` indexing is an L1 violation: the
 /// control-plane layers whose panics take down workers, wedge the
-/// scheduler, or poison shared locks.  Numeric kernels (`direct/`,
-/// `krylov/`, `iterative/`, ...) are exempt — tight index loops are
-/// their idiom, their bounds are loop invariants, and a blanket ban
-/// would bury the signal under hundreds of annotations.
+/// scheduler, or poison shared locks — plus `direct/`, whose cached
+/// factors are served from those same workers (a panicking solve or
+/// refactor kills the worker that holds the factor).  Dense index
+/// kernels inside `direct/` annotate one reasoned
+/// `allow_item(L1, ...)` per kernel body instead of drowning in
+/// per-line allows.  The remaining numeric modules (`krylov/`,
+/// `iterative/`, `sparse/`, ...) stay exempt — tight index loops are
+/// their idiom and their bounds are loop invariants.
 pub const STRICT_INDEX_MODULES: &[&str] = &[
     "engine/",
     "factor_cache/",
@@ -22,6 +26,7 @@ pub const STRICT_INDEX_MODULES: &[&str] = &[
     "runtime/",
     "lint/",
     "trace/",
+    "direct/",
 ];
 
 const L1_TOKENS: &[&str] = &[
@@ -80,6 +85,15 @@ pub fn check_annotations(f: &SourceFile, diags: &mut Vec<Diagnostic>) {
                     format!(
                         "allow({rule}) has no reason; write allow({rule}, why this site is safe)"
                     ),
+                );
+            }
+            if matches!(a, Annotation::AllowItem { .. }) && f.item_region(*line).is_none() {
+                push(
+                    diags,
+                    f,
+                    *line,
+                    "ANN",
+                    "allow_item annotation is not followed by a fn or loop body".to_string(),
                 );
             }
         }
@@ -161,6 +175,11 @@ fn l1_indexing(f: &SourceFile, diags: &mut Vec<Diagnostic>) {
         }
         let word = f.code.get(start..end).unwrap_or("");
         if PRE_BRACKET_KEYWORDS.contains(&word) {
+            continue;
+        }
+        // `&'a [u8]` / `&'static [T]`: the "identifier" is a lifetime,
+        // and the bracket opens a slice type, not an index expression.
+        if start > 0 && bytes.get(start - 1) == Some(&b'\'') {
             continue;
         }
         if f.in_test_region(pos) {
@@ -786,37 +805,8 @@ pub fn l5_no_alloc(f: &SourceFile, diags: &mut Vec<Diagnostic>) {
     }
 }
 
-/// The brace-matched body following a `no_alloc` annotation: search a
-/// few lines down for the next `fn`/`for`/`while`/`loop` keyword, then
-/// take its first `{...}` block.
+/// The brace-matched body following a `no_alloc` annotation — the same
+/// binding rule as `allow_item` ([`SourceFile::item_region`]).
 fn no_alloc_region(f: &SourceFile, ann_line: usize) -> Option<(usize, usize)> {
-    let mut kw_line = None;
-    'probe: for probe in ann_line..ann_line + 6 {
-        let text = f.code_line(probe);
-        for kw in ["fn ", "for ", "while ", "loop"] {
-            if let Some(col) = text.find(kw) {
-                let standalone = col == 0
-                    || text
-                        .get(..col)
-                        .and_then(|p| p.chars().last())
-                        .map(|c| !(c.is_ascii_alphanumeric() || c == '_'))
-                        .unwrap_or(true);
-                if standalone {
-                    kw_line = Some(probe);
-                    break 'probe;
-                }
-            }
-        }
-    }
-    let kw_line = kw_line?;
-    let mut offset = 0usize;
-    for (i, l) in f.code.split_inclusive('\n').enumerate() {
-        if i + 1 == kw_line {
-            break;
-        }
-        offset += l.len();
-    }
-    let open = offset + f.code.get(offset..)?.find('{')?;
-    let close = matching_brace(&f.code, open)?;
-    Some((open, close))
+    f.item_region(ann_line)
 }

@@ -25,8 +25,13 @@ use std::collections::HashMap;
 pub enum Annotation {
     /// `allow(RULE, reason)` — suppress RULE on this or the next line.
     Allow { rule: String, reason: String },
-    /// `allow(RULE)` with no reason — collected so the driver can
-    /// reject it (reasons are mandatory).
+    /// `allow_item(RULE, reason)` — suppress RULE across the whole
+    /// `fn`/`for`/`while`/`loop` body that follows the annotation
+    /// (same binding rule as `no_alloc`).  For dense index kernels one
+    /// reasoned item-scope allow beats a hundred per-line ones.
+    AllowItem { rule: String, reason: String },
+    /// `allow(RULE)` / `allow_item(RULE)` with no reason — collected so
+    /// the driver can reject it (reasons are mandatory).
     AllowNoReason { rule: String },
     /// `no_alloc` — the next `fn`/loop body must not allocate (L5).
     NoAlloc,
@@ -47,6 +52,9 @@ pub struct SourceFile {
     line_starts: Vec<usize>,
     /// Byte ranges of `#[cfg(test)]` item bodies in `code`.
     pub test_regions: Vec<(usize, usize)>,
+    /// Item-scoped allows: inclusive line ranges bound by
+    /// `allow_item(RULE, reason)` annotations, with the allowed rule.
+    item_allows: Vec<(usize, usize, String)>,
 }
 
 impl SourceFile {
@@ -54,14 +62,73 @@ impl SourceFile {
         let (code, annotations) = strip(&raw);
         let line_starts = line_starts_of(&code);
         let test_regions = test_regions_of(&code);
-        SourceFile {
+        let mut sf = SourceFile {
             rel: rel.to_string(),
             raw,
             code,
             annotations,
             line_starts,
             test_regions,
+            item_allows: Vec::new(),
+        };
+        let mut entries: Vec<(usize, Vec<String>)> = sf
+            .annotations
+            .iter()
+            .map(|(line, anns)| {
+                let rules = anns
+                    .iter()
+                    .filter_map(|a| match a {
+                        Annotation::AllowItem { rule, .. } => Some(rule.clone()),
+                        _ => None,
+                    })
+                    .collect::<Vec<_>>();
+                (*line, rules)
+            })
+            .filter(|(_, rules)| !rules.is_empty())
+            .collect();
+        entries.sort_unstable();
+        let mut allows = Vec::new();
+        for (line, rules) in entries {
+            if let Some((start, end)) = sf.item_region(line) {
+                let (ls, le) = (sf.line_of(start), sf.line_of(end));
+                for rule in rules {
+                    allows.push((ls, le, rule));
+                }
+            }
         }
+        sf.item_allows = allows;
+        sf
+    }
+
+    /// The brace-matched item body an `allow_item`/`no_alloc` annotation
+    /// at `ann_line` binds to: the first `fn`/`for`/`while`/`loop`
+    /// keyword within a few lines below, then its first `{...}` block.
+    /// None when no item follows (rules flag that as a malformed
+    /// annotation).
+    pub fn item_region(&self, ann_line: usize) -> Option<(usize, usize)> {
+        let mut kw_line = None;
+        'probe: for probe in ann_line..ann_line + 6 {
+            let text = self.code_line(probe);
+            for kw in ["fn ", "for ", "while ", "loop"] {
+                if let Some(col) = text.find(kw) {
+                    let standalone = col == 0
+                        || text
+                            .get(..col)
+                            .and_then(|p| p.chars().last())
+                            .map(|c| !(c.is_ascii_alphanumeric() || c == '_'))
+                            .unwrap_or(true);
+                    if standalone {
+                        kw_line = Some(probe);
+                        break 'probe;
+                    }
+                }
+            }
+        }
+        let kw_line = kw_line?;
+        let offset = *self.line_starts.get(kw_line.saturating_sub(1))?;
+        let open = offset + self.code.get(offset..)?.find('{')?;
+        let close = matching_brace(&self.code, open)?;
+        Some((open, close))
     }
 
     /// 1-based line number of byte offset `pos`.
@@ -78,7 +145,8 @@ impl SourceFile {
     }
 
     /// Does line `line` (or the line above it) carry `allow(rule, ...)`
-    /// with a non-empty reason?
+    /// with a non-empty reason, or fall inside an item body annotated
+    /// `allow_item(rule, ...)`?
     pub fn allowed(&self, line: usize, rule: &str) -> bool {
         for l in [line, line.saturating_sub(1)] {
             if let Some(anns) = self.annotations.get(&l) {
@@ -91,7 +159,9 @@ impl SourceFile {
                 }
             }
         }
-        false
+        self.item_allows
+            .iter()
+            .any(|(ls, le, r)| *ls <= line && line <= *le && r == rule)
     }
 
     /// The stripped text of 1-based line `line` (empty if out of range).
@@ -123,6 +193,17 @@ fn parse_annotation(text: &str) -> Option<Annotation> {
     let body = text.strip_prefix("rsla-lint:")?.trim();
     if body == "no_alloc" {
         return Some(Annotation::NoAlloc);
+    }
+    if let Some(inner) = body.strip_prefix("allow_item(").and_then(|b| b.strip_suffix(')')) {
+        return match inner.split_once(',') {
+            Some((rule, reason)) if !reason.trim().is_empty() => Some(Annotation::AllowItem {
+                rule: rule.trim().to_string(),
+                reason: reason.trim().to_string(),
+            }),
+            _ => Some(Annotation::AllowNoReason {
+                rule: inner.trim().to_string(),
+            }),
+        };
     }
     let inner = body.strip_prefix("allow(")?.strip_suffix(')')?;
     match inner.split_once(',') {

@@ -59,6 +59,13 @@ pub const FACTOR_CACHE_SHARD_LOCAL_HIT: &str = "factor_cache.shard_local_hit";
 /// (a scheduling failure, not a cold matrix).
 pub const FACTOR_CACHE_CROSS_SHARD_MISS: &str = "factor_cache.cross_shard_miss";
 
+/// Supernodes (panels) in the last blocked factorization's partition.
+pub const FACTOR_SUPERNODE_COUNT: &str = "factor.supernode.count";
+/// Widest supernode (columns) in the last blocked factorization.
+pub const FACTOR_SUPERNODE_MAX_COLS: &str = "factor.supernode.max_cols";
+/// Dense panel flops executed by the blocked numeric phase.
+pub const FACTOR_PANEL_FLOPS: &str = "factor.panel.flops";
+
 /// Matrices the roofline cost model kept on the CSR SpMV kernel.
 pub const SPMV_FORMAT_CSR: &str = "spmv.format.csr";
 /// Matrices the roofline cost model converted to SELL-C-σ.
@@ -94,6 +101,9 @@ pub const ALL: &[&str] = &[
     FACTOR_CACHE_REFACTOR_FALLBACK,
     FACTOR_CACHE_SHARD_LOCAL_HIT,
     FACTOR_CACHE_CROSS_SHARD_MISS,
+    FACTOR_SUPERNODE_COUNT,
+    FACTOR_SUPERNODE_MAX_COLS,
+    FACTOR_PANEL_FLOPS,
     SPMV_FORMAT_CSR,
     SPMV_FORMAT_SELL,
     DISPATCH_REFUSED,

@@ -183,10 +183,15 @@ unsafe fn dot8_avx2(x: &[f64], y: &[f64]) -> f64 {
 }
 
 #[cfg(target_arch = "x86_64")]
-fn avx2_available() -> bool {
+pub(crate) fn avx2_available() -> bool {
     use std::sync::OnceLock;
     static AVX2: OnceLock<bool> = OnceLock::new();
     *AVX2.get_or_init(|| is_x86_feature_detected!("avx2"))
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+pub(crate) fn avx2_available() -> bool {
+    false
 }
 
 /// Runtime-dispatched wide dot product: 8 unrolled accumulator lanes
@@ -204,6 +209,67 @@ pub fn dot_wide(x: &[f64], y: &[f64]) -> f64 {
         return unsafe { dot8_avx2(x, y) };
     }
     dot(x, y)
+}
+
+/// Panel dot for the supernodal factorization kernels: [`dot8`]'s
+/// fixed 8-lane schedule, `#[inline(always)]` so callers compiled
+/// under `target_feature(avx2)` (the supernodal numeric bodies) get
+/// 256-bit lanes without per-call dispatch.  The schedule depends only
+/// on the operand length — deterministic for the refactor-vs-cold
+/// bitwise pin.
+// rsla-lint: no_alloc
+#[inline(always)]
+pub fn panel_dot(x: &[f64], y: &[f64]) -> f64 {
+    dot8(x, y)
+}
+
+/// Two dots sharing the `x` operand in one pass (the supernodal rank-k
+/// update walks one descendant row against two target rows so the
+/// shared operand is loaded once).  4 accumulator lanes per output —
+/// 8 live accumulators total, which still fits the AVX2 register file.
+///
+/// NOT schedule-compatible with [`panel_dot`]; the supernodal kernels
+/// pick dot-vs-dot2 purely from index parity, so every (target, source)
+/// pair always runs one fixed schedule.
+// rsla-lint: no_alloc
+#[inline(always)]
+pub fn panel_dot2(x: &[f64], ya: &[f64], yb: &[f64]) -> (f64, f64) {
+    let n = x.len();
+    debug_assert_eq!(ya.len(), n);
+    debug_assert_eq!(yb.len(), n);
+    let mut aa = [0.0f64; 4];
+    let mut ab = [0.0f64; 4];
+    let chunks = n / 4;
+    for i in 0..chunks {
+        let b = i * 4;
+        aa[0] += x[b] * ya[b];
+        aa[1] += x[b + 1] * ya[b + 1];
+        aa[2] += x[b + 2] * ya[b + 2];
+        aa[3] += x[b + 3] * ya[b + 3];
+        ab[0] += x[b] * yb[b];
+        ab[1] += x[b + 1] * yb[b + 1];
+        ab[2] += x[b + 2] * yb[b + 2];
+        ab[3] += x[b + 3] * yb[b + 3];
+    }
+    let mut sa = (aa[0] + aa[1]) + (aa[2] + aa[3]);
+    let mut sb = (ab[0] + ab[1]) + (ab[2] + ab[3]);
+    for i in chunks * 4..n {
+        sa += x[i] * ya[i];
+        sb += x[i] * yb[i];
+    }
+    (sa, sb)
+}
+
+/// Panel axpy `dst -= alpha * src` — the blocked LU rank-1 row update.
+/// Plain elementwise loop; under the AVX2-compiled caller bodies it
+/// vectorizes to fused 256-bit lanes.
+// rsla-lint: no_alloc
+#[inline(always)]
+pub fn panel_sub_scaled(dst: &mut [f64], alpha: f64, src: &[f64]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, &s) in dst.iter_mut().zip(src.iter()) {
+        *d -= alpha * s;
+    }
 }
 
 /// Multi-RHS SpMV: `Y = A X` for `k` interleaved columns, ONE pass over

@@ -45,6 +45,9 @@ pub const DIRECT_SYMBOLIC: &str = "direct.symbolic";
 pub const DIRECT_NUMERIC: &str = "direct.numeric";
 /// Span: forward/backward triangular sweeps of one solve.
 pub const DIRECT_TRISOLVE: &str = "direct.trisolve";
+/// Span: blocked (supernodal/panel) numeric phase, when engaged
+/// (arg = panel count).  Nested inside [`DIRECT_NUMERIC`].
+pub const DIRECT_SUPERNODAL_NUMERIC: &str = "direct.supernodal.numeric";
 
 // --- krylov kernels ---------------------------------------------------
 
@@ -87,6 +90,7 @@ pub const ALL: &[&str] = &[
     DIRECT_SYMBOLIC,
     DIRECT_NUMERIC,
     DIRECT_TRISOLVE,
+    DIRECT_SUPERNODAL_NUMERIC,
     KRYLOV_CG,
     KRYLOV_CG_PIPELINED,
     KRYLOV_BICGSTAB,

@@ -1,0 +1,277 @@
+//! Property tests for the blocked (supernodal/panel) numeric tier:
+//! random SPD and unsymmetric matrices across amalgamation thresholds,
+//! blocked-vs-column numerical parity, the refactor-vs-cold bitwise pin
+//! on the blocked path, and the sub-threshold fallback pin.
+//!
+//! These back the factor-cache swap from scalar column kernels to dense
+//! panel kernels: a warm-path caller that is handed a blocked factor
+//! must see (a) the same linear operator to reassociation tolerance and
+//! (b) EXACTLY the factor a cold build would have produced — the repo's
+//! refactor-vs-cold determinism contract does not relax for speed.
+
+use rsla::direct::{
+    build_factor, refactor, CholSymbolic, EnvelopeCholesky, LuPanels, SnCholSymbolic, SnCholesky,
+    SparseLu, SupernodalOpts, Symbolic,
+};
+use rsla::sparse::graphs::{random_nonsymmetric, random_spd};
+use rsla::sparse::poisson::poisson2d;
+use rsla::sparse::Csr;
+use rsla::util::Prng;
+
+/// (max_width, relax) grid: scalar-equivalent width-1, narrow and wide
+/// panels, aggressive and conservative amalgamation.
+const THRESHOLDS: [(usize, f64); 5] = [(1, 0.0), (4, 0.25), (8, 0.25), (16, 1.0), (32, 0.5)];
+
+fn opts(max_width: usize, relax: f64) -> SupernodalOpts {
+    SupernodalOpts {
+        max_width,
+        relax,
+        ..SupernodalOpts::default()
+    }
+}
+
+fn spd_matrices() -> Vec<(String, Csr)> {
+    let mut out = vec![("poisson2d(13)".to_string(), poisson2d(13, None).matrix)];
+    for (seed, n, per_row) in [(3u64, 60usize, 3usize), (11, 95, 4), (29, 40, 6)] {
+        let mut rng = Prng::new(seed);
+        out.push((
+            format!("random_spd(seed={seed}, n={n})"),
+            random_spd(&mut rng, n, per_row, 1.5),
+        ));
+    }
+    out
+}
+
+fn unsym_matrices() -> Vec<(String, Csr)> {
+    let mut out = Vec::new();
+    for (seed, n, per_row) in [(7u64, 50usize, 3usize), (17, 80, 4), (41, 35, 5)] {
+        let mut rng = Prng::new(seed);
+        out.push((
+            format!("random_nonsymmetric(seed={seed}, n={n})"),
+            random_nonsymmetric(&mut rng, n, per_row),
+        ));
+    }
+    out
+}
+
+fn assert_close(x: &[f64], xref: &[f64], tol: f64, ctx: &str) {
+    assert_eq!(x.len(), xref.len(), "{ctx}: length mismatch");
+    let scale = xref.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+    for (i, (xi, ri)) in x.iter().zip(xref).enumerate() {
+        assert!(
+            (xi - ri).abs() <= tol * scale,
+            "{ctx}: entry {i}: {xi} vs {ri} (scale {scale})"
+        );
+    }
+}
+
+fn assert_bitwise(x: &[f64], y: &[f64], ctx: &str) {
+    assert_eq!(x.len(), y.len(), "{ctx}: length mismatch");
+    for (i, (a, b)) in x.iter().zip(y).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: entry {i}: {a} vs {b}");
+    }
+}
+
+// ------------------------------------------------------------------
+// SPD: blocked Cholesky vs the scalar envelope kernel
+// ------------------------------------------------------------------
+
+#[test]
+fn blocked_cholesky_matches_envelope_across_thresholds() {
+    for (name, a) in spd_matrices() {
+        let env_sym = CholSymbolic::analyze(&a, true).expect("envelope analyze");
+        let env = EnvelopeCholesky::factor_numeric(&env_sym, &a.vals).expect("envelope numeric");
+        let mut rng = Prng::new(99);
+        let b = rng.normal_vec(a.nrows);
+        let xref = env.solve(&b);
+        // the two kernels run different FP schedules; agreement is at
+        // reassociation tolerance, exactness is pinned per-kernel below
+        let r = a.matvec(&xref);
+        let scale = b.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+        for (ri, bi) in r.iter().zip(&b) {
+            assert!((ri - bi).abs() <= 1e-7 * scale, "{name}: envelope residual");
+        }
+        for &(w, relax) in &THRESHOLDS {
+            let sym = SnCholSymbolic::analyze(&a, true, &opts(w, relax)).expect("sn analyze");
+            if !sym.engaged() {
+                continue;
+            }
+            let sym = std::sync::Arc::new(sym);
+            let f = SnCholesky::factor_numeric(&sym, &a.vals).expect("sn numeric");
+            let x = f.solve(&b).expect("sn solve");
+            assert_close(&x, &xref, 1e-8, &format!("{name} w={w} relax={relax}"));
+        }
+    }
+}
+
+#[test]
+fn blocked_cholesky_is_bitwise_deterministic_per_threshold() {
+    for (name, a) in spd_matrices() {
+        for &(w, relax) in &THRESHOLDS {
+            let sym = SnCholSymbolic::analyze(&a, true, &opts(w, relax)).expect("analyze");
+            if !sym.engaged() {
+                continue;
+            }
+            let sym = std::sync::Arc::new(sym);
+            let f1 = SnCholesky::factor_numeric(&sym, &a.vals).expect("first");
+            let f2 = SnCholesky::factor_numeric(&sym, &a.vals).expect("second");
+            let mut rng = Prng::new(5);
+            let b = rng.normal_vec(a.nrows);
+            let x1 = f1.solve(&b).expect("solve 1");
+            let x2 = f2.solve(&b).expect("solve 2");
+            assert_bitwise(&x1, &x2, &format!("{name} w={w} relax={relax}"));
+        }
+    }
+}
+
+// ------------------------------------------------------------------
+// Unsymmetric: blocked LU replay vs the recorded column replay
+// ------------------------------------------------------------------
+
+#[test]
+fn blocked_lu_matches_column_replay_across_thresholds() {
+    for (name, a) in unsym_matrices() {
+        let cap = usize::MAX;
+        let (f_col, sym) = SparseLu::factor_recording(&a, cap).expect("recording factor");
+        let mut rng = Prng::new(23);
+        let b = rng.normal_vec(a.nrows);
+        let xref = f_col.solve(&b).expect("column solve");
+        let tref = f_col.solve_t(&b).expect("column solve_t");
+        for &(w, relax) in &THRESHOLDS {
+            let plan = LuPanels::plan(&sym, &opts(w, relax));
+            if !plan.engaged() {
+                continue;
+            }
+            let fb = SparseLu::refactor_blocked(&sym, &plan, &a, cap).expect("blocked refactor");
+            let x = fb.solve(&b).expect("blocked solve");
+            assert_close(&x, &xref, 1e-8, &format!("{name} w={w} relax={relax} solve"));
+            let t = fb.solve_t(&b).expect("blocked solve_t");
+            assert_close(&t, &tref, 1e-8, &format!("{name} w={w} relax={relax} solve_t"));
+        }
+    }
+}
+
+#[test]
+fn blocked_lu_replay_is_bitwise_deterministic() {
+    for (name, a) in unsym_matrices() {
+        let cap = usize::MAX;
+        let (_, sym) = SparseLu::factor_recording(&a, cap).expect("recording");
+        let plan = LuPanels::plan(&sym, &SupernodalOpts::default());
+        if !plan.engaged() {
+            continue;
+        }
+        let f1 = SparseLu::refactor_blocked(&sym, &plan, &a, cap).expect("first");
+        let f2 = SparseLu::refactor_blocked(&sym, &plan, &a, cap).expect("second");
+        let mut rng = Prng::new(31);
+        let b = rng.normal_vec(a.nrows);
+        let x1 = f1.solve(&b).expect("solve 1");
+        let x2 = f2.solve(&b).expect("solve 2");
+        assert_bitwise(&x1, &x2, name.as_str());
+    }
+}
+
+// ------------------------------------------------------------------
+// Refactor-vs-cold bitwise pin through the cache API, blocked path
+// ------------------------------------------------------------------
+
+#[test]
+fn cache_refactor_is_bitwise_equal_to_cold_on_blocked_cholesky() {
+    for (name, a) in spd_matrices() {
+        let (cold, sym) = build_factor(&a, true, u64::MAX).expect("cold build");
+        if cold.method() != "cholesky+rcm+sn" {
+            continue; // narrow-panel matrices are pinned by the fallback test
+        }
+        assert!(matches!(sym, Symbolic::SnChol(_)), "{name}: symbolic kind");
+        let warm = refactor(&sym, &a, true, u64::MAX).expect("warm refactor");
+        assert_eq!(warm.method(), "cholesky+rcm+sn", "{name}");
+        assert_eq!(cold.fill_bytes(), warm.fill_bytes(), "{name}: fill bytes");
+        let mut rng = Prng::new(77);
+        let b = rng.normal_vec(a.nrows);
+        let xc = cold.solve(&b).expect("cold solve");
+        let xw = warm.solve(&b).expect("warm solve");
+        assert_bitwise(&xc, &xw, &format!("{name}: refactor-vs-cold"));
+    }
+}
+
+#[test]
+fn cache_refactor_is_bitwise_equal_to_cold_on_blocked_lu() {
+    for (name, a) in unsym_matrices() {
+        let (cold, sym) = build_factor(&a, false, u64::MAX).expect("cold build");
+        assert_eq!(cold.method(), "lu", "{name}");
+        let warm = refactor(&sym, &a, false, u64::MAX).expect("warm refactor");
+        assert_eq!(cold.fill_bytes(), warm.fill_bytes(), "{name}: fill bytes");
+        let mut rng = Prng::new(83);
+        let b = rng.normal_vec(a.nrows);
+        let xc = cold.solve(&b).expect("cold solve");
+        let xw = warm.solve(&b).expect("warm solve");
+        assert_bitwise(&xc, &xw, &format!("{name}: refactor-vs-cold"));
+        let tc = cold.solve_t(&b).expect("cold solve_t");
+        let tw = warm.solve_t(&b).expect("warm solve_t");
+        assert_bitwise(&tc, &tw, &format!("{name}: refactor-vs-cold transpose"));
+    }
+}
+
+// ------------------------------------------------------------------
+// Sub-threshold fallback pins
+// ------------------------------------------------------------------
+
+#[test]
+fn sub_threshold_spd_falls_back_to_envelope_kernel() {
+    // identity: width-1 supernodes everywhere, below engage_min_width
+    let a = Csr::identity(24);
+    let sym = SnCholSymbolic::analyze(&a, true, &SupernodalOpts::default()).expect("analyze");
+    assert!(!sym.engaged(), "identity must not engage the blocked kernel");
+    let (f, sym) = build_factor(&a, true, u64::MAX).expect("build");
+    assert_eq!(f.method(), "cholesky+rcm", "identity takes the envelope path");
+    assert!(matches!(sym, Symbolic::Chol(_)));
+    // and the fallback still answers correctly + refactors bitwise
+    let warm = refactor(&sym, &a, true, u64::MAX).expect("warm");
+    let b: Vec<f64> = (0..24).map(|i| 1.0 + i as f64).collect();
+    let xc = f.solve(&b).expect("cold solve");
+    let xw = warm.solve(&b).expect("warm solve");
+    assert_bitwise(&xc, &xw, "identity refactor-vs-cold");
+    assert_close(&xc, &b, 1e-14, "identity solve");
+}
+
+#[test]
+fn sub_threshold_unsymmetric_falls_back_to_column_kernel() {
+    // diagonal with one negative entry: not SPD-like, so it takes the
+    // LU tier; width-1 panels never amalgamate, so the plan disengages
+    let n = 16;
+    let mut a = Csr::identity(n);
+    a.vals[3] = -2.0;
+    let (f, sym) = build_factor(&a, false, u64::MAX).expect("build");
+    assert_eq!(f.method(), "lu");
+    assert!(
+        matches!(sym, Symbolic::Lu(_)),
+        "diagonal must keep the scalar column symbolic"
+    );
+    let warm = refactor(&sym, &a, false, u64::MAX).expect("warm");
+    let b: Vec<f64> = (0..n).map(|i| 1.0 + i as f64).collect();
+    let xc = f.solve(&b).expect("cold");
+    let xw = warm.solve(&b).expect("warm");
+    assert_bitwise(&xc, &xw, "diagonal LU refactor-vs-cold");
+}
+
+#[test]
+fn width_one_threshold_still_agrees_with_reference() {
+    // max_width = 1 forces pure-scalar panels through the blocked code
+    // path (panel kernels with w = 1) — the degenerate end of the knob
+    let a = poisson2d(9, None).matrix;
+    let o = SupernodalOpts {
+        max_width: 1,
+        relax: 0.0,
+        engage_min_width: 1,
+    };
+    let sym = SnCholSymbolic::analyze(&a, true, &o).expect("analyze");
+    assert!(sym.engaged(), "engage_min_width=1 engages width-1 panels");
+    assert_eq!(sym.max_panel_width(), 1);
+    let sym = std::sync::Arc::new(sym);
+    let f = SnCholesky::factor_numeric(&sym, &a.vals).expect("numeric");
+    let env_sym = CholSymbolic::analyze(&a, true).expect("env analyze");
+    let env = EnvelopeCholesky::factor_numeric(&env_sym, &a.vals).expect("env numeric");
+    let mut rng = Prng::new(9);
+    let b = rng.normal_vec(a.nrows);
+    let x = f.solve(&b).expect("solve");
+    assert_close(&x, &env.solve(&b), 1e-8, "width-1 blocked vs envelope");
+}
