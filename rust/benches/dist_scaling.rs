@@ -1,9 +1,16 @@
 //! Distributed scaling microbenchmark: standard (two-reduction) vs
-//! pipelined (single-reduction) CG at 1/2/4 ranks, reporting the
-//! communication structure the paper's Algorithm 1 and Appendix C pin:
-//! iterations, reduction ROUNDS (latency units — the quantity pipelining
-//! halves), and bytes sent per iteration (halo volume — identical for
-//! both variants, since only the reductions are reorganized).
+//! pipelined (single-reduction) vs s-step communication-avoiding CG at
+//! 1/2/4 ranks, reporting the communication structure the paper's
+//! Algorithm 1 / Appendix C pin: iterations, reduction ROUNDS (latency
+//! units — the quantity pipelining halves and CA-CG divides by ~s),
+//! and bytes sent per iteration (halo volume — identical across
+//! variants, since only the reductions are reorganized).
+//!
+//! Also runs the same solves over the PROCESS transport (`ProcComm`,
+//! shared-memory rings) and asserts backend equivalence: identical
+//! round counts and a bitwise-identical solution — the canonical
+//! rank-ascending reduction order at work — plus a weak-scaling sweep
+//! (fixed rows per rank).
 //!
 //! Emits `BENCH_dist.json` next to the working directory so CI archives
 //! a machine-readable perf trajectory.
@@ -13,14 +20,35 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use rsla::distributed::{dist_cg, dist_cg_pipelined, run_ranks, DistIterOpts, DistSolveReport};
 use rsla::distributed::halo::distribute;
 use rsla::distributed::partition::{partition, PartitionStrategy};
+use rsla::distributed::{
+    dist_cg, dist_cg_ca, dist_cg_pipelined, maybe_run_worker, run_ranks, CommBackend,
+    DSparseTensor, DistIterOpts, DistMethod, DistSolveReport, ProcOpts, TransportKind,
+};
+use rsla::krylov::CaCgOpts;
 use rsla::sparse::poisson::{kappa_star, poisson2d};
 use rsla::util::Prng;
 
+#[derive(Clone, Copy, PartialEq)]
+enum Variant {
+    Standard,
+    Pipelined,
+    Ca(usize),
+}
+
+impl Variant {
+    fn name(self) -> String {
+        match self {
+            Variant::Standard => "standard".into(),
+            Variant::Pipelined => "pipelined".into(),
+            Variant::Ca(s) => format!("ca-s{s}"),
+        }
+    }
+}
+
 struct Row {
-    variant: &'static str,
+    variant: String,
     ranks: usize,
     n: usize,
     iters: usize,
@@ -31,7 +59,7 @@ struct Row {
     converged: bool,
 }
 
-fn run_variant(g: usize, nparts: usize, pipelined: bool) -> (Vec<DistSolveReport>, f64) {
+fn measure(g: usize, nparts: usize, variant: Variant) -> (Vec<DistSolveReport>, f64) {
     let sys = poisson2d(g, Some(&kappa_star(g)));
     let part = partition(&sys.matrix, Some(&sys.coords), nparts, PartitionStrategy::Rcb);
     let a_perm = sys.matrix.permute_sym(&part.perm);
@@ -47,75 +75,208 @@ fn run_variant(g: usize, nparts: usize, pipelined: bool) -> (Vec<DistSolveReport
             tol: 1e-9,
             ..Default::default()
         };
-        if pipelined {
-            dist_cg_pipelined(&shares[p], &b[range], &c, &opts)
-        } else {
-            dist_cg(&shares[p], &b[range], &c, &opts)
+        match variant {
+            Variant::Standard => dist_cg(&shares[p], &b[range], &c, &opts),
+            Variant::Pipelined => dist_cg_pipelined(&shares[p], &b[range], &c, &opts),
+            Variant::Ca(s) => {
+                let ca = CaCgOpts {
+                    s,
+                    ..Default::default()
+                };
+                dist_cg_ca(&shares[p], &b[range], &c, &opts, &ca)
+            }
         }
     });
     (reports, t0.elapsed().as_secs_f64())
 }
 
+fn row_of(
+    variant: &Variant,
+    ranks: usize,
+    n: usize,
+    reports: &[DistSolveReport],
+    secs: f64,
+) -> Row {
+    let iters = reports[0].iters.max(1);
+    let rounds = reports[0].reduce_rounds;
+    let max_sent = reports.iter().map(|r| r.bytes_sent).max().unwrap();
+    Row {
+        variant: variant.name(),
+        ranks,
+        n,
+        iters: reports[0].iters,
+        reduce_rounds: rounds,
+        rounds_per_iter: rounds as f64 / iters as f64,
+        bytes_per_iter_per_rank: max_sent as f64 / iters as f64,
+        wall_ms: secs * 1e3,
+        converged: reports.iter().all(|r| r.converged),
+    }
+}
+
+fn print_row(row: &Row) {
+    println!(
+        "| {:>9} | {:>5} | {:>6} | {:>7} | {:>11.2} | {:>12.2} | {:>6.1} ms |",
+        row.variant,
+        row.ranks,
+        row.iters,
+        row.reduce_rounds,
+        row.rounds_per_iter,
+        row.bytes_per_iter_per_rank / 1e3,
+        row.wall_ms,
+    );
+}
+
+/// Same solve, thread backend vs process backend: round counts must be
+/// identical and the solution bitwise equal (canonical reduction order).
+fn backend_parity(g: usize, ranks: usize, method: DistMethod) -> (Row, Row) {
+    let sys = poisson2d(g, Some(&kappa_star(g)));
+    let t =
+        DSparseTensor::from_global(&sys.matrix, Some(&sys.coords), ranks, PartitionStrategy::Rcb)
+            .expect("partition");
+    let mut rng = Prng::new(g as u64);
+    let b = rng.normal_vec(g * g);
+    let mk_opts = |backend| DistIterOpts {
+        tol: 1e-9,
+        method: method.clone(),
+        backend,
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let (x_local, rep_local) = t.solve(&b, &mk_opts(CommBackend::Local)).expect("local solve");
+    let local_secs = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let (x_proc, rep_proc) = t
+        .solve(
+            &b,
+            &mk_opts(CommBackend::Proc(ProcOpts {
+                kind: TransportKind::Shm,
+                ..ProcOpts::default()
+            })),
+        )
+        .expect("proc solve");
+    let proc_secs = t1.elapsed().as_secs_f64();
+    assert_eq!(
+        rep_local[0].reduce_rounds, rep_proc[0].reduce_rounds,
+        "LocalComm and ProcComm must report identical round counts"
+    );
+    assert_eq!(rep_local[0].iters, rep_proc[0].iters);
+    for (a, bb) in x_local.iter().zip(&x_proc) {
+        assert_eq!(
+            a.to_bits(),
+            bb.to_bits(),
+            "proc solve must be bitwise identical to local solve"
+        );
+    }
+    let variant = match &method {
+        DistMethod::CaCg { s } => Variant::Ca(*s),
+        _ => Variant::Standard,
+    };
+    let mut local = row_of(&variant, ranks, g * g, &rep_local, local_secs);
+    local.variant.push_str("-local");
+    let mut proc = row_of(&variant, ranks, g * g, &rep_proc, proc_secs);
+    proc.variant.push_str("-proc");
+    (local, proc)
+}
+
 fn main() {
+    // process-transport worker re-exec target (the proc backend solves
+    // below re-exec this bench binary)
+    maybe_run_worker();
+
     let g = 96;
     let n = g * g;
     let mut rows: Vec<Row> = Vec::new();
 
-    println!("# dist_scaling: standard vs pipelined CG, Poisson2D g={g} (n={n}), RCB partition");
+    println!("# dist_scaling: standard vs pipelined vs CA-CG, Poisson2D g={g} (n={n}), RCB partition");
     println!(
         "| {:>9} | {:>5} | {:>6} | {:>7} | {:>11} | {:>12} | {:>9} |",
         "variant", "ranks", "iters", "rounds", "rounds/iter", "KB/iter/rank", "time"
     );
     println!("|-----------|-------|--------|---------|-------------|--------------|-----------|");
 
+    let variants = [
+        Variant::Standard,
+        Variant::Pipelined,
+        Variant::Ca(2),
+        Variant::Ca(4),
+        Variant::Ca(8),
+    ];
     for &ranks in &[1usize, 2, 4] {
-        for &(variant, pipelined) in &[("standard", false), ("pipelined", true)] {
-            let (reports, secs) = run_variant(g, ranks, pipelined);
-            let iters = reports[0].iters.max(1);
-            let rounds = reports[0].reduce_rounds;
-            let max_sent = reports.iter().map(|r| r.bytes_sent).max().unwrap();
-            let row = Row {
-                variant,
-                ranks,
-                n,
-                iters: reports[0].iters,
-                reduce_rounds: rounds,
-                rounds_per_iter: rounds as f64 / iters as f64,
-                bytes_per_iter_per_rank: max_sent as f64 / iters as f64,
-                wall_ms: secs * 1e3,
-                converged: reports.iter().all(|r| r.converged),
-            };
-            println!(
-                "| {:>9} | {:>5} | {:>6} | {:>7} | {:>11.2} | {:>12.2} | {:>6.1} ms |",
-                row.variant,
-                row.ranks,
-                row.iters,
-                row.reduce_rounds,
-                row.rounds_per_iter,
-                row.bytes_per_iter_per_rank / 1e3,
-                row.wall_ms,
-            );
+        for &variant in &variants {
+            let (reports, secs) = measure(g, ranks, variant);
+            let row = row_of(&variant, ranks, n, &reports, secs);
+            print_row(&row);
             rows.push(row);
         }
     }
 
     // acceptance: the communication structure of Algorithm 1 / Appendix C
+    let rounds_of = |name: &str, ranks: usize| -> (u64, f64) {
+        let r = rows
+            .iter()
+            .find(|r| r.variant == name && r.ranks == ranks)
+            .expect("row");
+        (r.reduce_rounds, r.rounds_per_iter)
+    };
     for row in &rows {
-        assert!(row.converged, "{} at {} ranks did not converge", row.variant, row.ranks);
+        assert!(
+            row.converged,
+            "{} at {} ranks did not converge",
+            row.variant, row.ranks
+        );
         if row.ranks >= 2 {
-            if row.variant == "standard" {
-                assert!(
+            match row.variant.as_str() {
+                "standard" => assert!(
                     row.rounds_per_iter > 1.9 && row.rounds_per_iter < 2.2,
                     "standard CG must cost ~2 rounds/iter, got {:.2}",
                     row.rounds_per_iter
-                );
-            } else {
-                assert!(
+                ),
+                "pipelined" => assert!(
                     row.rounds_per_iter < 1.2,
                     "pipelined CG must cost ~1 round/iter, got {:.2}",
                     row.rounds_per_iter
-                );
+                ),
+                _ => {}
             }
+        }
+    }
+    // headline CA-CG claim: s=4 cuts reduction rounds >= 2x vs standard
+    // CG at the same tolerance on the 4-rank Poisson problem
+    let (std_rounds, _) = rounds_of("standard", 4);
+    let (ca4_rounds, ca4_rpi) = rounds_of("ca-s4", 4);
+    assert!(
+        2 * ca4_rounds <= std_rounds,
+        "CA-CG(s=4) must cut reduction rounds >=2x vs standard CG: {ca4_rounds} vs {std_rounds}"
+    );
+    println!(
+        "\nCA-CG(s=4) at 4 ranks: {ca4_rounds} rounds vs standard {std_rounds} \
+         ({:.1}x cut, {ca4_rpi:.2} rounds/iter)",
+        std_rounds as f64 / ca4_rounds.max(1) as f64
+    );
+
+    // backend equivalence: thread ranks vs worker processes
+    println!("\n# process transport (ProcComm, shm rings) vs thread ranks, g={g}, 4 ranks");
+    for method in [DistMethod::Cg, DistMethod::CaCg { s: 4 }] {
+        let (local, proc) = backend_parity(g, 4, method);
+        print_row(&local);
+        print_row(&proc);
+        println!(
+            "  -> identical rounds ({}) and bitwise-identical solution",
+            proc.reduce_rounds
+        );
+        rows.push(local);
+        rows.push(proc);
+    }
+
+    // weak scaling: ~fixed rows per rank (48^2), growing global problem
+    println!("\n# weak scaling: ~{} rows per rank", 48 * 48);
+    for &(ranks, wg) in &[(1usize, 48usize), (2, 68), (4, 96)] {
+        for &variant in &[Variant::Standard, Variant::Ca(4)] {
+            let (reports, secs) = measure(wg, ranks, variant);
+            let mut row = row_of(&variant, ranks, wg * wg, &reports, secs);
+            row.variant.push_str("-weak");
+            print_row(&row);
+            rows.push(row);
         }
     }
 

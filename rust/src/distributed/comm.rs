@@ -4,6 +4,13 @@
 //! per-pair FIFO channels and `all_reduce` is a shared-state butterfly.
 //! Every payload is byte-accounted so benches report communication
 //! volume the way the paper reports NCCL traffic.
+//!
+//! Reduction order is CANONICAL: every backend folds per-rank
+//! contributions in rank-ascending order (`((c0 + c1) + c2) + ...`),
+//! never arrival order, so a solve's floating-point trajectory is a
+//! function of the partition alone — identical across [`LocalComm`]
+//! and the process-separated `transport::ProcComm`, pinned bitwise by
+//! tests here and in `tests/proc_comm.rs`.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
@@ -13,8 +20,55 @@ use crate::util::lock_recover;
 /// Message: (tag, payload).  Tags catch protocol mismatches early.
 type Msg = (u64, Vec<f64>);
 
+/// Wire-level statistics reported by [`Transport::transport_stats`].
+///
+/// `bytes_sent`/`reduce_rounds` on [`crate::krylov::Communicator`] count
+/// ALGORITHMIC traffic (halo payloads, latency rounds) identically on
+/// every backend; this struct exposes what the PHYSICAL transport did
+/// on top — reduction wire traffic, per-message overhead, and doorbell
+/// wait latency.  In-process backends report zeros.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TransportStats {
+    /// Bytes that crossed the physical transport (rings or sockets),
+    /// including reduction traffic and framing headers.
+    pub wire_bytes: u64,
+    /// Messages pushed onto the wire.
+    pub wire_msgs: u64,
+    /// Blocking waits observed by the receive path (doorbell polls
+    /// that did not complete immediately).
+    pub doorbell_waits: u64,
+    /// Doorbell wait-time percentiles, microseconds.
+    pub doorbell_p50_us: f64,
+    pub doorbell_p99_us: f64,
+    pub doorbell_max_us: f64,
+}
+
+/// Point-to-point transport surface shared by every rank-team backend.
+///
+/// Extends [`crate::krylov::Communicator`] with the tagged send/recv
+/// pair that halo exchanges ride, so distributed kernels are written
+/// once against `&dyn Transport` and the backend — in-process
+/// [`LocalComm`] threads or process-separated
+/// [`super::transport::ProcComm`] workers — is chosen at the call
+/// site.  MPI/NCCL slot in later by implementing this trait.
+pub trait Transport: crate::krylov::Communicator {
+    /// Non-blocking tagged send of `data` to rank `to`.
+    fn send(&self, to: usize, tag: u64, data: Vec<f64>);
+    /// Blocking tagged receive from rank `from`; implementations must
+    /// verify the tag and treat a mismatch as a protocol failure.
+    fn recv(&self, from: usize, tag: u64) -> Vec<f64>;
+    /// Wire-level statistics (zeros for in-process transports).
+    fn transport_stats(&self) -> TransportStats {
+        TransportStats::default()
+    }
+}
+
 struct AllReduceState {
-    sum: Vec<f64>,
+    /// Per-rank contributions for the in-flight round, folded in
+    /// rank-ascending order once the last rank arrives (canonical
+    /// reduction order — see module docs).
+    contribs: Vec<Vec<f64>>,
+    width: usize,
     count: usize,
     generation: u64,
     result: Vec<f64>,
@@ -45,7 +99,8 @@ impl LocalComm {
         let shared = Arc::new(Shared {
             nranks,
             ar: Mutex::new(AllReduceState {
-                sum: Vec::new(),
+                contribs: (0..nranks).map(|_| Vec::new()).collect(),
+                width: 0,
                 count: 0,
                 generation: 0,
                 result: Vec::new(),
@@ -121,33 +176,42 @@ impl LocalComm {
 
     /// FUSED in-place global sum of several scalars in ONE reduction
     /// round — the communication primitive behind single-reduction
-    /// (Chronopoulos–Gear / pipelined) CG, which NCCL expresses as one
-    /// `all_reduce` over a packed buffer.  The summed result lands
-    /// directly in `xs`; the shared accumulation/result buffers are
-    /// reused across rounds, so the steady state performs no heap
-    /// allocation.
+    /// (Chronopoulos–Gear / pipelined) CG and the per-outer-step packed
+    /// Gram reduction of s-step CA-CG, which NCCL expresses as one
+    /// `all_reduce` over a packed buffer.  Contributions are buffered
+    /// per rank and folded in rank-ascending order by the last arriver,
+    /// so the result is bitwise independent of thread scheduling.  The
+    /// summed result lands directly in `xs`; the shared per-rank/result
+    /// buffers are reused across rounds, so the steady state performs
+    /// no heap allocation.
     pub fn all_reduce_inplace(&self, xs: &mut [f64]) {
         let mut s = lock_recover(&self.shared.ar);
         let gen = s.generation;
         if s.count == 0 {
-            s.sum.clear();
-            s.sum.extend_from_slice(xs);
+            s.width = xs.len();
         } else {
             assert_eq!(
-                s.sum.len(),
+                s.width,
                 xs.len(),
                 "rank {}: mismatched all_reduce payload width (protocol desync)",
                 self.rank
             );
-            for (a, b) in s.sum.iter_mut().zip(xs.iter()) {
-                *a += *b;
-            }
+        }
+        {
+            let slot = &mut s.contribs[self.rank];
+            slot.clear();
+            slot.extend_from_slice(xs);
         }
         s.count += 1;
         if s.count == self.shared.nranks {
             let st = &mut *s;
             st.result.clear();
-            st.result.extend_from_slice(&st.sum);
+            st.result.extend_from_slice(&st.contribs[0]);
+            for c in st.contribs.iter().skip(1) {
+                for (acc, v) in st.result.iter_mut().zip(c.iter()) {
+                    *acc += *v;
+                }
+            }
             st.count = 0;
             st.generation += 1;
             self.shared.reduce_rounds.fetch_add(1, Ordering::Relaxed);
@@ -220,6 +284,19 @@ impl crate::krylov::Communicator for LocalComm {
     }
 }
 
+/// [`LocalComm`] is also the in-process [`Transport`]: tagged sends
+/// ride the per-pair FIFO channels and wire stats stay zero (nothing
+/// crosses a process boundary).
+impl Transport for LocalComm {
+    fn send(&self, to: usize, tag: u64, data: Vec<f64>) {
+        LocalComm::send(self, to, tag, data);
+    }
+
+    fn recv(&self, from: usize, tag: u64) -> Vec<f64> {
+        LocalComm::recv(self, from, tag)
+    }
+}
+
 /// Spawn `nranks` threads, one per communicator endpoint, run `f`, and
 /// collect the per-rank results in rank order.  Panics in any rank are
 /// propagated (a rank crash must not silently hang the job).
@@ -267,6 +344,32 @@ mod tests {
             acc
         });
         assert!(results.iter().all(|&r| (r - results[0]).abs() < 1e-12));
+    }
+
+    /// Canonical rank-ascending fold: with catastrophic-cancellation
+    /// payloads the result depends on summation order, so this pins
+    /// BOTH determinism across repeats and the exact fold order
+    /// (((c0 + c1) + c2) + c3 — any other association differs
+    /// bitwise).
+    #[test]
+    fn all_reduce_order_is_rank_ascending_and_deterministic() {
+        let contrib = [1e16, 1.0, -1e16, 1.0];
+        let mut expect = contrib[0];
+        for c in &contrib[1..] {
+            expect += *c;
+        }
+        for trial in 0..20 {
+            let results = run_ranks(4, move |c| {
+                // stagger arrival order differently each trial
+                if (c.rank() + trial) % 4 == 0 {
+                    std::thread::sleep(std::time::Duration::from_micros(50));
+                }
+                c.all_reduce_sum(contrib[c.rank()])
+            });
+            for r in results {
+                assert_eq!(r.to_bits(), expect.to_bits());
+            }
+        }
     }
 
     #[test]

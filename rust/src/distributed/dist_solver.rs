@@ -12,13 +12,21 @@
 //! the operator apply) and TWO reduction rounds (`<p,Ap>` plus the
 //! fused `<r,z>`/`<r,r>` pair) — exactly the paper's Algorithm 1,
 //! pinned by the counter test below.  Pipelined CG costs ONE fused
-//! round per iteration.
+//! round per iteration; s-step CA-CG ([`dist_cg_ca`]) costs ONE packed
+//! round per OUTER step of s iterations, ~1/s rounds per iteration.
+//!
+//! Every entry point is generic over [`Transport`], so the same code
+//! serves in-process [`super::comm::LocalComm`] rank teams and
+//! process-separated [`super::transport::ProcComm`] workers; the
+//! canonical rank-ascending reduction order makes the two backends
+//! bitwise interchangeable.
 
 use std::sync::Arc;
 
-use super::comm::LocalComm;
+use super::comm::{Transport, TransportStats};
 use super::halo::DistCsr;
 use super::op::DistOp;
+use super::transport::CommBackend;
 use crate::direct::CachedFactor;
 use crate::factor_cache::FactorCache;
 use crate::iterative::{Amg, AmgOpts, IterOpts, IterResult, Jacobi, Precond};
@@ -48,6 +56,24 @@ pub enum DistPrecondKind {
     BlockLu,
 }
 
+/// Which Krylov kernel a distributed SPD solve routes to.  Nonsymmetric
+/// systems always use GMRES regardless of this field.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub enum DistMethod {
+    /// Historical routing: SPD -> standard CG, otherwise restarted
+    /// GMRES.
+    #[default]
+    Auto,
+    /// Two-reduction standard CG.
+    Cg,
+    /// Single-reduction (Chronopoulos–Gear) CG.
+    CgPipelined,
+    /// s-step communication-avoiding CG: ONE packed reduction per s
+    /// iterations (see [`crate::krylov::ca_cg`]).  `s == 0` means the
+    /// [`crate::krylov::CaCgOpts`] default.
+    CaCg { s: usize },
+}
+
 #[derive(Clone, Debug)]
 pub struct DistIterOpts {
     pub tol: f64,
@@ -56,6 +82,12 @@ pub struct DistIterOpts {
     /// GMRES.  [`dist_minres`] ignores this field (it needs an SPD `M`;
     /// see its docs).
     pub precond: DistPrecondKind,
+    /// SPD kernel selection for `DSparseTensor::solve`.
+    pub method: DistMethod,
+    /// Rank-team execution backend for `DSparseTensor::solve`: thread
+    /// ranks in-process (default) or spawned worker processes over the
+    /// shared-memory/socket transport.
+    pub backend: CommBackend,
 }
 
 impl Default for DistIterOpts {
@@ -64,6 +96,8 @@ impl Default for DistIterOpts {
             tol: 1e-10,
             max_iters: 10_000,
             precond: DistPrecondKind::Jacobi,
+            method: DistMethod::Auto,
+            backend: CommBackend::Local,
         }
     }
 }
@@ -175,12 +209,18 @@ pub struct DistSolveReport {
     pub reduce_rounds: u64,
     /// Peak per-rank working set (matrix share + solver vectors).
     pub peak_bytes: u64,
+    /// Wire-level transport stats at solve completion (endpoint
+    /// lifetime, not per-solve deltas: the doorbell percentiles are not
+    /// delta-able).  Zeros for in-process backends; for ProcComm
+    /// workers a process serves exactly one solve, so lifetime ==
+    /// solve.
+    pub transport: TransportStats,
 }
 
 /// Run one generic kernel over (share, comm) and package the report.
-fn run_dist(
+fn run_dist<C: Transport>(
     a: &DistCsr,
-    comm: &LocalComm,
+    comm: &C,
     method: &'static str,
     kernel: impl FnOnce(&dyn LinearOperator, &MemTracker) -> IterResult,
 ) -> DistSolveReport {
@@ -205,6 +245,7 @@ fn run_dist(
         bytes_sent,
         reduce_rounds,
         peak_bytes: a.bytes() + mem.peak(),
+        transport: comm.transport_stats(),
     }
 }
 
@@ -218,10 +259,10 @@ pub fn auto_restart(n_global: usize) -> usize {
 
 /// Distributed preconditioned CG; runs inside one rank's thread.
 /// `b_own` is this rank's slice of the RHS.
-pub fn dist_cg(
+pub fn dist_cg<C: Transport>(
     a: &DistCsr,
     b_own: &[f64],
-    comm: &LocalComm,
+    comm: &C,
     opts: &DistIterOpts,
 ) -> DistSolveReport {
     assert_eq!(b_own.len(), a.plan.n_own);
@@ -235,10 +276,10 @@ pub fn dist_cg(
 /// "pipelined / communication-avoiding CG" roadmap item of Appendix C):
 /// algebraically equivalent to [`dist_cg`] with the per-iteration
 /// reductions fused into ONE round.
-pub fn dist_cg_pipelined(
+pub fn dist_cg_pipelined<C: Transport>(
     a: &DistCsr,
     b_own: &[f64],
-    comm: &LocalComm,
+    comm: &C,
     opts: &DistIterOpts,
 ) -> DistSolveReport {
     assert_eq!(b_own.len(), a.plan.n_own);
@@ -248,11 +289,45 @@ pub fn dist_cg_pipelined(
     })
 }
 
-/// Distributed BiCGStab for general systems (same halo/reduce template).
-pub fn dist_bicgstab(
+/// s-step communication-avoiding distributed CG (Appendix C roadmap,
+/// pushed past pipelining): ONE packed reduction per outer step of `s`
+/// iterations — the Gram matrix, cross-block couplings, projections,
+/// and the residual norm all ride a single `all_reduce`, cutting
+/// reduction ROUNDS from ~2/iter (standard CG) toward ~1/s per iter.
+/// The residual-replacement guard inside [`krylov::ca_cg`] falls back
+/// to standard CG when finite-precision drift is detected, in which
+/// case the report's method reads `"ca-cg+fallback"`.
+pub fn dist_cg_ca<C: Transport>(
     a: &DistCsr,
     b_own: &[f64],
-    comm: &LocalComm,
+    comm: &C,
+    opts: &DistIterOpts,
+    ca: &krylov::CaCgOpts,
+) -> DistSolveReport {
+    assert_eq!(b_own.len(), a.plan.n_own);
+    let m = build_precond(a, &opts.precond, FactorCache::global(), None);
+    let detail = std::cell::Cell::new((0usize, false));
+    let mut rep = run_dist(a, comm, "ca-cg", |op, mem| {
+        let r = krylov::ca_cg(op, b_own, &*m, comm, &iter_opts(opts), ca, Some(mem));
+        detail.set((r.replacements, r.fell_back));
+        r.iter
+    });
+    let (replacements, fell_back) = detail.get();
+    if replacements > 0 {
+        Registry::global().incr(crate::metrics::names::KRYLOV_CA_REPLACEMENTS, replacements as u64);
+    }
+    if fell_back {
+        rep.method = "ca-cg+fallback";
+        Registry::global().incr(crate::metrics::names::KRYLOV_CA_FALLBACKS, 1);
+    }
+    rep
+}
+
+/// Distributed BiCGStab for general systems (same halo/reduce template).
+pub fn dist_bicgstab<C: Transport>(
+    a: &DistCsr,
+    b_own: &[f64],
+    comm: &C,
     opts: &DistIterOpts,
 ) -> DistSolveReport {
     assert_eq!(b_own.len(), a.plan.n_own);
@@ -265,11 +340,11 @@ pub fn dist_bicgstab(
 /// Distributed restarted GMRES(m) — the nonsymmetric/indefinite
 /// workhorse at rank-team scale (a scenario family the serial-only
 /// wrapper could not serve).
-pub fn dist_gmres(
+pub fn dist_gmres<C: Transport>(
     a: &DistCsr,
     b_own: &[f64],
     restart: usize,
-    comm: &LocalComm,
+    comm: &C,
     opts: &DistIterOpts,
 ) -> DistSolveReport {
     assert_eq!(b_own.len(), a.plan.n_own);
@@ -286,10 +361,10 @@ pub fn dist_gmres(
 /// variants guarantee that on an indefinite operator (Jacobi's diagonal
 /// and the exact/AMG block inverses inherit the operator's
 /// indefiniteness).
-pub fn dist_minres(
+pub fn dist_minres<C: Transport>(
     a: &DistCsr,
     b_own: &[f64],
-    comm: &LocalComm,
+    comm: &C,
     opts: &DistIterOpts,
 ) -> DistSolveReport {
     assert_eq!(b_own.len(), a.plan.n_own);
@@ -307,10 +382,10 @@ pub fn dist_minres(
 
 /// Distributed LOBPCG for the k smallest eigenpairs (Jacobi
 /// preconditioned).  Returns (values, per-rank vector slices, iters).
-pub fn dist_lobpcg(
+pub fn dist_lobpcg<C: Transport>(
     a: &DistCsr,
     k: usize,
-    comm: &LocalComm,
+    comm: &C,
     tol: f64,
     max_iters: usize,
     seed: u64,
@@ -347,11 +422,11 @@ pub struct DistAdjointResult {
     pub backward: DistSolveReport,
 }
 
-pub fn dist_solve_adjoint(
+pub fn dist_solve_adjoint<C: Transport>(
     a: &DistCsr,
     b_own: &[f64],
     gy_own: &[f64],
-    comm: &LocalComm,
+    comm: &C,
     opts: &DistIterOpts,
 ) -> DistAdjointResult {
     let forward = dist_cg(a, b_own, comm, opts);
@@ -509,6 +584,7 @@ mod tests {
                         tol: 1e-11,
                         max_iters: 10_000,
                         precond: kind.clone(),
+                        ..Default::default()
                     },
                 )
             })
@@ -639,6 +715,7 @@ mod tests {
                         tol: 1e-11,
                         max_iters: 10_000,
                         precond: kind.clone(),
+                        ..Default::default()
                     },
                 )
             })

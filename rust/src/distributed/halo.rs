@@ -5,7 +5,7 @@
 //! indices `offsets[p]..offsets[p+1]`), `[n_own, n_own + n_halo)` are
 //! halo copies of remote entries referenced by locally owned rows.
 
-use super::comm::LocalComm;
+use super::comm::Transport;
 use super::partition::Partition;
 use crate::sparse::{Coo, Csr};
 
@@ -172,7 +172,7 @@ pub fn distribute(a_perm: &Csr, part: &Partition) -> Vec<DistCsr> {
 
 /// Forward halo exchange H: fill `x_ext[n_own..]` with neighbor-owned
 /// values.  `x_ext` holds owned values in `[0, n_own)`.
-pub fn halo_exchange(plan: &HaloPlan, x_ext: &mut [f64], comm: &LocalComm, tag: u64) {
+pub fn halo_exchange(plan: &HaloPlan, x_ext: &mut [f64], comm: &dyn Transport, tag: u64) {
     for (q, idxs) in &plan.send {
         let payload: Vec<f64> = idxs.iter().map(|&i| x_ext[i]).collect();
         comm.send(*q, tag, payload);
@@ -189,7 +189,7 @@ pub fn halo_exchange(plan: &HaloPlan, x_ext: &mut [f64], comm: &LocalComm, tag: 
 /// Transposed halo exchange H^T (paper Eq. 6): send halo-slot gradients
 /// BACK to their owners, which SUM them into owned entries.  Same
 /// neighbor graph and message sizes as H, reversed roles.
-pub fn halo_exchange_adjoint(plan: &HaloPlan, g_ext: &mut [f64], comm: &LocalComm, tag: u64) {
+pub fn halo_exchange_adjoint(plan: &HaloPlan, g_ext: &mut [f64], comm: &dyn Transport, tag: u64) {
     // reverse of recv: we send the halo gradients to the owner q
     for (q, slots) in &plan.recv {
         let payload: Vec<f64> = slots.iter().map(|&s| g_ext[plan.n_own + s]).collect();
@@ -212,7 +212,7 @@ pub fn dist_spmv(
     a: &DistCsr,
     x_ext: &mut [f64],
     y_own: &mut [f64],
-    comm: &LocalComm,
+    comm: &dyn Transport,
     tag: u64,
 ) {
     halo_exchange(&a.plan, x_ext, comm, tag);
@@ -225,7 +225,7 @@ pub fn dist_spmv_adjoint(
     a: &DistCsr,
     gy_own: &[f64],
     gx_own: &mut [f64],
-    comm: &LocalComm,
+    comm: &dyn Transport,
     tag: u64,
 ) {
     let n_ext = a.plan.n_own + a.plan.n_halo();

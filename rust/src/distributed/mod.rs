@@ -2,8 +2,10 @@
 //! autograd-compatible halo exchange.
 //!
 //! The paper runs ranks as CUDA devices over NCCL; this testbed runs
-//! ranks as OS threads over an in-process [`comm::LocalComm`] whose
-//! messages are byte-accounted.  Everything *structural* is identical:
+//! ranks either as OS threads over an in-process [`comm::LocalComm`]
+//! or as spawned worker PROCESSES over [`transport::ProcComm`]
+//! (shared-memory rings with a localhost-socket fallback), all
+//! byte-accounted identically.  Everything *structural* is identical:
 //!
 //! * each rank owns a contiguous row block (after a fill/cut-reducing
 //!   permutation from [`partition`]) plus halo metadata;
@@ -26,14 +28,17 @@ pub mod newton;
 pub mod op;
 pub mod partition;
 pub mod tensor;
+pub mod transport;
 
-pub use comm::{run_ranks, LocalComm};
+pub use comm::{run_ranks, LocalComm, Transport, TransportStats};
 pub use dist_solver::{
-    dist_bicgstab, dist_cg, dist_cg_pipelined, dist_gmres, dist_lobpcg, dist_minres,
-    dist_solve_adjoint, DistAdjointResult, DistIterOpts, DistPrecondKind, DistSolveReport,
+    dist_bicgstab, dist_cg, dist_cg_ca, dist_cg_pipelined, dist_gmres, dist_lobpcg, dist_minres,
+    dist_solve_adjoint, DistAdjointResult, DistIterOpts, DistMethod, DistPrecondKind,
+    DistSolveReport,
 };
 pub use halo::{DistCsr, HaloPlan};
 pub use newton::DistPointwiseResidual;
 pub use op::DistOp;
 pub use partition::{Partition, PartitionStrategy};
 pub use tensor::{DSparseTensor, DSparseTensorList};
+pub use transport::{maybe_run_worker, proc_solve, CommBackend, ProcComm, ProcOpts, TransportKind};

@@ -16,14 +16,14 @@
 
 use std::cell::Cell;
 
-use super::comm::LocalComm;
+use super::comm::Transport;
 use super::halo::{dist_spmv, DistCsr};
 use crate::nonlinear::KrylovResidual;
 
 /// One rank's share of `F(u) = A u + g(u) - f`.
 pub struct DistPointwiseResidual<'a> {
     a: &'a DistCsr,
-    comm: &'a LocalComm,
+    comm: &'a dyn Transport,
     tag: Cell<u64>,
     /// this rank's slice of the forcing term `f`.
     f_own: Vec<f64>,
@@ -34,7 +34,7 @@ pub struct DistPointwiseResidual<'a> {
 impl<'a> DistPointwiseResidual<'a> {
     pub fn new(
         a: &'a DistCsr,
-        comm: &'a LocalComm,
+        comm: &'a dyn Transport,
         f_own: Vec<f64>,
         g: fn(f64) -> (f64, f64),
         base_tag: u64,

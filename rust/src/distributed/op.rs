@@ -11,7 +11,7 @@
 
 use std::cell::Cell;
 
-use super::comm::LocalComm;
+use super::comm::Transport;
 use super::halo::{dist_spmv, dist_spmv_adjoint, DistCsr};
 use crate::krylov::LinearOperator;
 
@@ -21,12 +21,12 @@ use crate::krylov::LinearOperator;
 /// the team in lockstep.
 pub struct DistOp<'a> {
     a: &'a DistCsr,
-    comm: &'a LocalComm,
+    comm: &'a dyn Transport,
     tag: Cell<u64>,
 }
 
 impl<'a> DistOp<'a> {
-    pub fn new(a: &'a DistCsr, comm: &'a LocalComm, base_tag: u64) -> Self {
+    pub fn new(a: &'a DistCsr, comm: &'a dyn Transport, base_tag: u64) -> Self {
         DistOp {
             a,
             comm,

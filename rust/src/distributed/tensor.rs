@@ -8,11 +8,12 @@ use std::sync::Arc;
 
 use super::comm::run_ranks;
 use super::dist_solver::{
-    auto_restart, dist_cg, dist_gmres, dist_lobpcg, dist_solve_adjoint, DistIterOpts,
-    DistSolveReport,
+    auto_restart, dist_cg, dist_cg_ca, dist_cg_pipelined, dist_gmres, dist_lobpcg,
+    dist_solve_adjoint, DistIterOpts, DistMethod, DistSolveReport,
 };
 use super::halo::{dist_spmv, distribute, DistCsr};
 use super::partition::{partition, Partition, PartitionStrategy};
+use super::transport::{proc_solve, CommBackend};
 use crate::error::{Error, Result};
 use crate::sparse::Csr;
 
@@ -119,23 +120,47 @@ impl DSparseTensor {
         if b.len() != self.n {
             return Err(Error::InvalidProblem("rhs length mismatch".into()));
         }
-        let bs = Arc::new(self.scatter(b));
-        let shares = self.shares.clone();
         let spd = self.spd;
-        let opts = opts.clone();
-        // SPD systems run CG; everything else (nonsymmetric OR
+        // SPD systems run CG (standard, pipelined, or s-step CA-CG,
+        // per `opts.method`); everything else (nonsymmetric OR
         // symmetric-indefinite) routes to restarted GMRES with an
         // automatically selected restart length — the workhorse that
         // handles both, instead of hoping BiCGStab's recurrence holds.
+        // `opts.backend` picks the rank team: in-process threads over
+        // LocalComm, or spawned worker processes over ProcComm — the
+        // canonical reduction order makes the two bitwise identical.
         let restart = auto_restart(self.n);
-        let reports = run_ranks(self.nparts(), move |c| {
-            let p = c.rank();
-            if spd {
-                dist_cg(&shares[p], &bs[p], &c, &opts)
-            } else {
-                dist_gmres(&shares[p], &bs[p], restart, &c, &opts)
+        let reports = match &opts.backend {
+            CommBackend::Proc(popts) => {
+                proc_solve(&self.shares, &self.scatter(b), spd, restart, opts, popts)?
             }
-        });
+            CommBackend::Local => {
+                let bs = Arc::new(self.scatter(b));
+                let shares = self.shares.clone();
+                let opts = opts.clone();
+                run_ranks(self.nparts(), move |c| {
+                    let p = c.rank();
+                    if !spd {
+                        return dist_gmres(&shares[p], &bs[p], restart, &c, &opts);
+                    }
+                    match &opts.method {
+                        DistMethod::Auto | DistMethod::Cg => {
+                            dist_cg(&shares[p], &bs[p], &c, &opts)
+                        }
+                        DistMethod::CgPipelined => {
+                            dist_cg_pipelined(&shares[p], &bs[p], &c, &opts)
+                        }
+                        DistMethod::CaCg { s } => {
+                            let mut ca = crate::krylov::CaCgOpts::default();
+                            if *s > 0 {
+                                ca.s = *s;
+                            }
+                            dist_cg_ca(&shares[p], &bs[p], &c, &opts, &ca)
+                        }
+                    }
+                })
+            }
+        };
         let x = self.gather_global(
             &reports
                 .iter()

@@ -1,0 +1,954 @@
+//! Process-separated rank teams: the [`ProcComm`] backend implements
+//! [`Communicator`]/[`Transport`] over REAL process boundaries, so the
+//! distributed layer's claims (round counts, byte counts, deterministic
+//! reduction order, dead-rank behavior) are exercised against actual
+//! OS-level isolation instead of threads sharing an address space.
+//!
+//! # Architecture
+//!
+//! * **Control plane** — a Unix-domain socket (`ctl.sock`) in a
+//!   per-team session directory.  The parent binds it BEFORE spawning;
+//!   each worker re-execs the current executable (`current_exe`), finds
+//!   its identity in `RSLA_PROC_*` environment variables, binds its
+//!   data-plane endpoint, and says hello (its rank, 8 bytes LE).  The
+//!   parent then ships each rank its job (share + RHS + routing) as one
+//!   length-prefixed blob and waits for one result blob per rank.
+//! * **Data plane** — either shared-memory rings ([`shm`]): one SPSC
+//!   byte ring per ordered rank pair under `/dev/shm`; or a
+//!   localhost-socket mesh ([`socket`]) as the fallback.  Both carry
+//!   identical tagged frames ([`wire::encode_data_frame`]).
+//! * **Collectives** — `all_reduce` is hub-and-spoke through rank 0,
+//!   which folds contributions in RANK-ASCENDING order — the canonical
+//!   reduction order of [`Communicator::all_reduce`] — so a ProcComm
+//!   solve is bitwise identical to the same solve over `LocalComm`
+//!   (pinned in `tests/proc_comm.rs`).  One `all_reduce` is ONE
+//!   reduction round and ZERO algorithmic bytes on every backend; the
+//!   physical reduction traffic is visible separately in
+//!   [`TransportStats::wire_bytes`].
+//! * **Liveness** — the parent polls worker exit status whenever it
+//!   would block on the control plane, and every blocking transport
+//!   operation carries a deadline.  A worker that dies (or goes silent)
+//!   before reporting surfaces as [`Error::RankDead`] and the whole
+//!   team is killed and reaped — never a hang.
+//!
+//! Lock hierarchy (lint L2): `ProcComm.peer_streams` (tier 4) may be
+//! held while recording into `ProcComm.wait_hist` (tier 5), never the
+//! reverse; neither may be held while entering shallower tiers.
+
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::krylov::Communicator;
+use crate::metrics::{names as mn, Registry};
+use crate::trace::names as tn;
+use crate::util::lock_recover;
+
+use super::comm::{Transport, TransportStats};
+use super::dist_solver::{
+    dist_cg, dist_cg_ca, dist_cg_pipelined, dist_gmres, DistIterOpts, DistMethod, DistSolveReport,
+};
+use super::halo::DistCsr;
+
+pub mod shm;
+pub mod socket;
+pub mod wire;
+
+const ENV_RANK: &str = "RSLA_PROC_RANK";
+const ENV_SIZE: &str = "RSLA_PROC_SIZE";
+const ENV_DIR: &str = "RSLA_PROC_DIR";
+const ENV_TRANSPORT: &str = "RSLA_PROC_TRANSPORT";
+const ENV_TIMEOUT_MS: &str = "RSLA_PROC_TIMEOUT_MS";
+/// Test hook: a worker with this variable set exits (code 101) after
+/// receiving its job and before solving — the dead-rank injection used
+/// by `tests/krylov_equivalence.rs`.
+const ENV_FAIL: &str = "RSLA_PROC_FAIL";
+
+const CTL_TICK: Duration = Duration::from_millis(100);
+const ACCEPT_POLL: Duration = Duration::from_millis(2);
+/// Reduction frames use a disjoint tag namespace from halo traffic.
+const AR_TAG_BASE: u64 = 1 << 62;
+
+/// Which physical transport a process team runs over.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TransportKind {
+    /// Shared-memory rings under `/dev/shm` (one per ordered pair).
+    #[default]
+    Shm,
+    /// Unix-domain-socket mesh (fallback; also an independent
+    /// implementation to cross-check the rings against).
+    Socket,
+}
+
+/// Options for spawning a process rank team.
+#[derive(Clone, Debug)]
+pub struct ProcOpts {
+    pub kind: TransportKind,
+    /// Deadline for the whole team lifecycle (spawn → reports) and for
+    /// each blocking transport operation inside the workers.
+    pub timeout_ms: u64,
+    /// Payload capacity of each shared-memory ring, in bytes.
+    pub ring_cap: u64,
+    /// Arguments for the re-exec'd worker.  Empty for binaries whose
+    /// `main` calls [`maybe_run_worker`] first; libtest binaries pass
+    /// `["proc_worker_entry", "--exact"]` so only the worker-entry
+    /// test runs (see [`ProcOpts::for_tests`]).
+    pub worker_args: Vec<String>,
+    /// Test hook: make this rank die after receiving its job.
+    pub fail_rank: Option<usize>,
+}
+
+impl Default for ProcOpts {
+    fn default() -> Self {
+        ProcOpts {
+            kind: TransportKind::Shm,
+            timeout_ms: 120_000,
+            ring_cap: 1 << 20,
+            worker_args: Vec::new(),
+            fail_rank: None,
+        }
+    }
+}
+
+impl ProcOpts {
+    /// Options for use inside `cargo test` binaries: the re-exec'd
+    /// child runs only the `proc_worker_entry` test, which calls
+    /// [`maybe_run_worker`].
+    pub fn for_tests(kind: TransportKind) -> Self {
+        ProcOpts {
+            kind,
+            worker_args: vec!["proc_worker_entry".into(), "--exact".into()],
+            ..ProcOpts::default()
+        }
+    }
+}
+
+/// Rank-team execution backend for `DSparseTensor::solve`.
+#[derive(Clone, Debug, Default)]
+pub enum CommBackend {
+    /// Thread ranks over in-process channels (`LocalComm`).
+    #[default]
+    Local,
+    /// Worker processes over [`ProcComm`].
+    Proc(ProcOpts),
+}
+
+fn ring_path(dir: &Path, from: usize, to: usize) -> PathBuf {
+    dir.join(format!("ring_{from}_{to}.dat"))
+}
+
+fn ctl_path(dir: &Path) -> PathBuf {
+    dir.join("ctl.sock")
+}
+
+/// Per-team session directory: prefer `/dev/shm` (memory-backed) so
+/// ring traffic never touches a disk, fall back to the system tmpdir.
+fn session_dir() -> PathBuf {
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let shm = Path::new("/dev/shm");
+    let base = if shm.is_dir() {
+        shm.to_path_buf()
+    } else {
+        std::env::temp_dir()
+    };
+    base.join(format!(
+        "rsla-proc-{}-{}",
+        std::process::id(),
+        COUNTER.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+// ---- data-plane endpoint --------------------------------------------
+
+/// Lazily-opened per-peer channels of one endpoint; guarded by
+/// `ProcComm.peer_streams` (lock tier 4).
+enum Mesh {
+    Shm {
+        dir: PathBuf,
+        writers: Vec<Option<shm::RingWriter>>,
+        readers: Vec<Option<shm::RingReader>>,
+    },
+    Socket(socket::SocketMesh),
+}
+
+impl Mesh {
+    fn send_bytes(&mut self, me: usize, to: usize, frame: &[u8], deadline: Instant) -> Result<u64> {
+        match self {
+            Mesh::Shm { dir, writers, .. } => {
+                let slot = writers
+                    .get_mut(to)
+                    .ok_or_else(|| Error::Distributed(format!("no such rank {to}")))?;
+                if slot.is_none() {
+                    *slot = Some(shm::RingWriter::open(&ring_path(dir, me, to))?);
+                }
+                match slot.as_mut() {
+                    Some(w) => w.write_all(frame, deadline),
+                    None => Err(Error::Distributed("ring writer vanished".into())),
+                }
+            }
+            Mesh::Socket(m) => m.send_bytes(to, frame, deadline),
+        }
+    }
+
+    fn recv_bytes(
+        &mut self,
+        me: usize,
+        from: usize,
+        buf: &mut [u8],
+        deadline: Instant,
+    ) -> Result<u64> {
+        match self {
+            Mesh::Shm { dir, readers, .. } => {
+                let slot = readers
+                    .get_mut(from)
+                    .ok_or_else(|| Error::Distributed(format!("no such rank {from}")))?;
+                if slot.is_none() {
+                    *slot = Some(shm::RingReader::open(&ring_path(dir, from, me))?);
+                }
+                match slot.as_mut() {
+                    Some(r) => r.read_exact(buf, deadline),
+                    None => Err(Error::Distributed("ring reader vanished".into())),
+                }
+            }
+            Mesh::Socket(m) => m.recv_bytes(from, buf, deadline),
+        }
+    }
+}
+
+/// [`Communicator`]/[`Transport`] endpoint of a process rank team.
+///
+/// Counter semantics mirror `LocalComm` exactly so reports are
+/// backend-comparable: `bytes_sent` counts ALGORITHMIC point-to-point
+/// payload bytes (halo traffic, `8 * len`), `reduce_rounds` counts one
+/// per `all_reduce` on every rank.  Physical wire traffic — including
+/// the hub-and-spoke reduction frames, which the algorithmic model
+/// prices as latency (rounds), not bandwidth — is reported separately
+/// via [`Transport::transport_stats`].
+pub struct ProcComm {
+    rank: usize,
+    nranks: usize,
+    timeout: Duration,
+    /// Lock tier 4 (see `lint/lock_order.rs`).
+    peer_streams: Mutex<Mesh>,
+    /// Doorbell/backpressure waits in microseconds; lock tier 5.
+    wait_hist: Mutex<Vec<u64>>,
+    bytes_sent: AtomicU64,
+    reduce_rounds: AtomicU64,
+    wire_bytes: AtomicU64,
+    wire_msgs: AtomicU64,
+    ar_round: AtomicU64,
+}
+
+impl ProcComm {
+    /// Open this rank's endpoint.  For [`TransportKind::Socket`] this
+    /// binds the rank's listener, so it must run BEFORE the
+    /// control-plane hello (peers may connect as soon as the parent has
+    /// collected every hello).
+    pub fn connect(
+        rank: usize,
+        nranks: usize,
+        dir: &Path,
+        kind: TransportKind,
+        timeout: Duration,
+    ) -> Result<Self> {
+        let mesh = match kind {
+            TransportKind::Shm => Mesh::Shm {
+                dir: dir.to_path_buf(),
+                writers: (0..nranks).map(|_| None).collect(),
+                readers: (0..nranks).map(|_| None).collect(),
+            },
+            TransportKind::Socket => Mesh::Socket(socket::SocketMesh::bind(rank, nranks, dir)?),
+        };
+        Ok(ProcComm {
+            rank,
+            nranks,
+            timeout,
+            peer_streams: Mutex::new(mesh),
+            wait_hist: Mutex::new(Vec::new()),
+            bytes_sent: AtomicU64::new(0),
+            reduce_rounds: AtomicU64::new(0),
+            wire_bytes: AtomicU64::new(0),
+            wire_msgs: AtomicU64::new(0),
+            ar_round: AtomicU64::new(0),
+        })
+    }
+
+    fn record_wait(&self, waited_us: u64) {
+        if waited_us > 0 {
+            lock_recover(&self.wait_hist).push(waited_us);
+        }
+    }
+
+    fn raw_send(&self, to: usize, tag: u64, data: &[f64]) -> Result<()> {
+        let frame = wire::encode_data_frame(tag, data);
+        let deadline = Instant::now() + self.timeout;
+        let waited = {
+            let mut mesh = lock_recover(&self.peer_streams);
+            mesh.send_bytes(self.rank, to, &frame, deadline)?
+        };
+        self.wire_bytes.fetch_add(frame.len() as u64, Ordering::Relaxed);
+        self.wire_msgs.fetch_add(1, Ordering::Relaxed);
+        self.record_wait(waited);
+        Ok(())
+    }
+
+    fn raw_recv(&self, from: usize, tag: u64) -> Result<Vec<f64>> {
+        let deadline = Instant::now() + self.timeout;
+        let (payload, waited) = {
+            let mut mesh = lock_recover(&self.peer_streams);
+            let mut hdr = [0u8; 16];
+            let mut waited = mesh.recv_bytes(self.rank, from, &mut hdr, deadline)?;
+            let (tag_b, rest) = hdr
+                .split_first_chunk::<8>()
+                .ok_or_else(|| Error::Distributed("short frame header".into()))?;
+            let (len_b, _) = rest
+                .split_first_chunk::<8>()
+                .ok_or_else(|| Error::Distributed("short frame header".into()))?;
+            let got_tag = u64::from_le_bytes(*tag_b);
+            if got_tag != tag {
+                return Err(Error::Distributed(format!(
+                    "rank {}: tag mismatch from {from}: got {got_tag:#x}, want {tag:#x} \
+                     (protocol desync)",
+                    self.rank
+                )));
+            }
+            let len = u64::from_le_bytes(*len_b) as usize;
+            if len > (1 << 28) {
+                return Err(Error::Distributed(format!("implausible frame: {len} f64s")));
+            }
+            let mut payload = vec![0u8; len * 8];
+            waited += mesh.recv_bytes(self.rank, from, &mut payload, deadline)?;
+            (payload, waited)
+        };
+        self.record_wait(waited);
+        wire::decode_payload(&payload)
+    }
+
+    /// A transport failure inside a collective is unrecoverable for
+    /// this worker: terminate so the parent's liveness monitor converts
+    /// it into a typed [`Error::RankDead`] for the caller.
+    fn die(&self, what: &str, e: Error) -> ! {
+        eprintln!("rsla worker rank {}: {what} failed: {e}", self.rank);
+        std::process::exit(102)
+    }
+
+    fn all_reduce_inner(&self, xs: &mut [f64], tag: u64) -> Result<()> {
+        if self.rank == 0 {
+            // fold in RANK-ASCENDING order: own contribution is c0,
+            // then += c1, c2, ... — same association as LocalComm
+            for r in 1..self.nranks {
+                let c = self.raw_recv(r, tag)?;
+                if c.len() != xs.len() {
+                    return Err(Error::Distributed(format!(
+                        "all_reduce width mismatch: rank {r} sent {}, want {}",
+                        c.len(),
+                        xs.len()
+                    )));
+                }
+                for (acc, v) in xs.iter_mut().zip(c.iter()) {
+                    *acc += *v;
+                }
+            }
+            for r in 1..self.nranks {
+                self.raw_send(r, tag, xs)?;
+            }
+        } else {
+            self.raw_send(0, tag, xs)?;
+            let res = self.raw_recv(0, tag)?;
+            if res.len() != xs.len() {
+                return Err(Error::Distributed("all_reduce result width mismatch".into()));
+            }
+            xs.copy_from_slice(&res);
+        }
+        Ok(())
+    }
+}
+
+impl Communicator for ProcComm {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn size(&self) -> usize {
+        self.nranks
+    }
+
+    fn all_reduce(&self, xs: &mut [f64]) {
+        if self.nranks > 1 {
+            let tag = AR_TAG_BASE + self.ar_round.fetch_add(1, Ordering::Relaxed);
+            if let Err(e) = self.all_reduce_inner(xs, tag) {
+                self.die("all_reduce", e);
+            }
+        }
+        // one round regardless of width or rank — identical accounting
+        // to LocalComm (reduction traffic is latency, not bandwidth)
+        self.reduce_rounds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.bytes_sent.load(Ordering::Relaxed)
+    }
+
+    fn reduce_rounds(&self) -> u64 {
+        self.reduce_rounds.load(Ordering::Relaxed)
+    }
+}
+
+impl Transport for ProcComm {
+    fn send(&self, to: usize, tag: u64, data: Vec<f64>) {
+        // algorithmic accounting identical to LocalComm: payload bytes
+        self.bytes_sent
+            .fetch_add((data.len() * 8) as u64, Ordering::Relaxed);
+        if let Err(e) = self.raw_send(to, tag, &data) {
+            self.die("send", e);
+        }
+    }
+
+    fn recv(&self, from: usize, tag: u64) -> Vec<f64> {
+        match self.raw_recv(from, tag) {
+            Ok(v) => v,
+            Err(e) => self.die("recv", e),
+        }
+    }
+
+    fn transport_stats(&self) -> TransportStats {
+        let mut hist = lock_recover(&self.wait_hist).clone();
+        hist.sort_unstable();
+        let pick = |q: f64| -> f64 {
+            if hist.is_empty() {
+                return 0.0;
+            }
+            let idx = ((hist.len() - 1) as f64 * q).round() as usize;
+            hist.get(idx).copied().unwrap_or(0) as f64
+        };
+        TransportStats {
+            wire_bytes: self.wire_bytes.load(Ordering::Relaxed),
+            wire_msgs: self.wire_msgs.load(Ordering::Relaxed),
+            doorbell_waits: hist.len() as u64,
+            doorbell_p50_us: pick(0.50),
+            doorbell_p99_us: pick(0.99),
+            doorbell_max_us: hist.last().copied().unwrap_or(0) as f64,
+        }
+    }
+}
+
+// ---- control plane helpers ------------------------------------------
+
+fn write_blob(s: &mut UnixStream, bytes: &[u8]) -> Result<()> {
+    use std::io::Write;
+    s.write_all(&(bytes.len() as u64).to_le_bytes())?;
+    s.write_all(bytes)?;
+    Ok(())
+}
+
+/// Exact read on a control stream whose read timeout is [`CTL_TICK`];
+/// `liveness` runs on every tick so a dead peer is noticed while the
+/// stream is silent.
+fn read_ctl_exact(
+    s: &mut UnixStream,
+    buf: &mut [u8],
+    deadline: Instant,
+    liveness: &mut dyn FnMut() -> Result<()>,
+) -> Result<()> {
+    use std::io::Read;
+    let mut rest: &mut [u8] = buf;
+    while !rest.is_empty() {
+        match s.read(rest) {
+            Ok(0) => {
+                return Err(Error::Distributed(
+                    "control stream closed mid-message".into(),
+                ))
+            }
+            Ok(n) => {
+                let n = n.min(rest.len());
+                let (_, next) = std::mem::take(&mut rest).split_at_mut(n);
+                rest = next;
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut
+                    || e.kind() == std::io::ErrorKind::Interrupted =>
+            {
+                liveness()?;
+                if Instant::now() >= deadline {
+                    return Err(Error::Distributed(
+                        "control plane: deadline exceeded awaiting message".into(),
+                    ));
+                }
+            }
+            Err(e) => return Err(Error::Io(e)),
+        }
+    }
+    Ok(())
+}
+
+fn read_blob(
+    s: &mut UnixStream,
+    deadline: Instant,
+    liveness: &mut dyn FnMut() -> Result<()>,
+) -> Result<Vec<u8>> {
+    let mut len_b = [0u8; 8];
+    read_ctl_exact(s, &mut len_b, deadline, liveness)?;
+    let len = u64::from_le_bytes(len_b) as usize;
+    if len > (1 << 32) {
+        return Err(Error::Distributed(format!("implausible blob: {len} B")));
+    }
+    let mut buf = vec![0u8; len];
+    read_ctl_exact(s, &mut buf, deadline, liveness)?;
+    Ok(buf)
+}
+
+// ---- parent side: team lifecycle ------------------------------------
+
+struct Worker {
+    rank: usize,
+    child: Child,
+    done: bool,
+}
+
+/// Owns the spawned workers and the session directory; `Drop` kills
+/// every still-running worker, reaps all of them, and removes the
+/// directory — so every exit path (including `?`) cleans up the team.
+struct TeamGuard {
+    dir: PathBuf,
+    workers: Vec<Worker>,
+}
+
+impl TeamGuard {
+    /// Poll worker exit status.  A worker that exited NONZERO before
+    /// being marked done is a dead rank (exit 0 is a worker that
+    /// finished reporting and left — legal while the parent is still
+    /// reading slower ranks' results).
+    fn liveness(&mut self) -> Result<()> {
+        for w in &mut self.workers {
+            if w.done {
+                continue;
+            }
+            match w.child.try_wait() {
+                Ok(Some(status)) => {
+                    w.done = true;
+                    if !status.success() {
+                        Registry::global().incr(mn::COMM_TRANSPORT_DEAD_RANKS, 1);
+                        return Err(Error::RankDead {
+                            rank: w.rank,
+                            detail: status.to_string(),
+                        });
+                    }
+                }
+                Ok(None) => {}
+                Err(e) => {
+                    w.done = true;
+                    return Err(Error::Io(e));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn join_all(&mut self, deadline: Instant) -> Result<()> {
+        loop {
+            self.liveness()?;
+            if self.workers.iter().all(|w| w.done) {
+                return Ok(());
+            }
+            if Instant::now() >= deadline {
+                // stragglers are killed by Drop
+                return Err(Error::Distributed(
+                    "worker did not exit after reporting".into(),
+                ));
+            }
+            std::thread::sleep(ACCEPT_POLL);
+        }
+    }
+}
+
+impl Drop for TeamGuard {
+    fn drop(&mut self) {
+        for w in &mut self.workers {
+            if !w.done {
+                let _ = w.child.kill();
+            }
+            let _ = w.child.wait();
+        }
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
+
+/// Solve one distributed system on a freshly spawned process rank team
+/// and return the per-rank reports (rank order).  The team is always
+/// reaped before returning, success or failure.
+pub fn proc_solve(
+    shares: &[DistCsr],
+    bs: &[Vec<f64>],
+    spd: bool,
+    restart: usize,
+    opts: &DistIterOpts,
+    popts: &ProcOpts,
+) -> Result<Vec<DistSolveReport>> {
+    let n = shares.len();
+    if n == 0 || bs.len() != n {
+        return Err(Error::InvalidProblem(format!(
+            "proc_solve: {n} shares vs {} right-hand sides",
+            bs.len()
+        )));
+    }
+    let _sp = crate::trace::span_arg(tn::COMM_TEAM, n as u64);
+    let deadline = Instant::now() + Duration::from_millis(popts.timeout_ms);
+
+    let dir = session_dir();
+    std::fs::create_dir_all(&dir)?;
+    let mut guard = TeamGuard {
+        dir: dir.clone(),
+        workers: Vec::with_capacity(n),
+    };
+
+    if popts.kind == TransportKind::Shm {
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    shm::create_ring(&ring_path(&dir, i, j), popts.ring_cap)?;
+                }
+            }
+        }
+    }
+
+    let ctl = ctl_path(&dir);
+    let listener = UnixListener::bind(&ctl)
+        .map_err(|e| Error::Distributed(format!("bind {}: {e}", ctl.display())))?;
+    listener.set_nonblocking(true)?;
+
+    let exe = std::env::current_exe()?;
+    let kind_s = match popts.kind {
+        TransportKind::Shm => "shm",
+        TransportKind::Socket => "socket",
+    };
+    for rank in 0..n {
+        let mut cmd = Command::new(&exe);
+        cmd.args(&popts.worker_args)
+            .env(ENV_RANK, rank.to_string())
+            .env(ENV_SIZE, n.to_string())
+            .env(ENV_DIR, &dir)
+            .env(ENV_TRANSPORT, kind_s)
+            .env(ENV_TIMEOUT_MS, popts.timeout_ms.to_string())
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::inherit());
+        if popts.fail_rank == Some(rank) {
+            cmd.env(ENV_FAIL, "1");
+        }
+        let child = cmd
+            .spawn()
+            .map_err(|e| Error::Distributed(format!("spawn worker rank {rank}: {e}")))?;
+        guard.workers.push(Worker {
+            rank,
+            child,
+            done: false,
+        });
+    }
+    Registry::global().incr(mn::COMM_TRANSPORT_TEAMS, 1);
+
+    // collect hellos (any arrival order), identifying each stream
+    let mut streams: Vec<Option<UnixStream>> = (0..n).map(|_| None).collect();
+    let mut missing = n;
+    while missing > 0 {
+        match listener.accept() {
+            Ok((mut s, _)) => {
+                s.set_nonblocking(false)?;
+                s.set_read_timeout(Some(CTL_TICK))?;
+                let mut hello = [0u8; 8];
+                read_ctl_exact(&mut s, &mut hello, deadline, &mut || guard.liveness())?;
+                let r = u64::from_le_bytes(hello) as usize;
+                let slot = streams
+                    .get_mut(r)
+                    .ok_or_else(|| Error::Distributed(format!("hello from unknown rank {r}")))?;
+                if slot.is_some() {
+                    return Err(Error::Distributed(format!("duplicate hello from rank {r}")));
+                }
+                *slot = Some(s);
+                missing -= 1;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                guard.liveness()?;
+                if Instant::now() >= deadline {
+                    return Err(Error::Distributed(
+                        "deadline exceeded awaiting worker hellos".into(),
+                    ));
+                }
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(e) => return Err(Error::Io(e)),
+        }
+    }
+
+    // ship jobs
+    for (rank, (share, b)) in shares.iter().zip(bs).enumerate() {
+        let blob = wire::encode_job(share, b, spd, restart, opts);
+        let s = streams
+            .get_mut(rank)
+            .and_then(|o| o.as_mut())
+            .ok_or_else(|| Error::Distributed(format!("lost control stream {rank}")))?;
+        write_blob(s, &blob)?;
+    }
+
+    // collect results; liveness runs on every poll tick, so a rank
+    // dying while we wait on ANY stream is noticed promptly
+    let mut reports = Vec::with_capacity(n);
+    for rank in 0..n {
+        let s = streams
+            .get_mut(rank)
+            .and_then(|o| o.as_mut())
+            .ok_or_else(|| Error::Distributed(format!("lost control stream {rank}")))?;
+        let mut status = [0u8; 1];
+        read_ctl_exact(s, &mut status, deadline, &mut || guard.liveness())?;
+        let blob = read_blob(s, deadline, &mut || guard.liveness())?;
+        if status != [0u8] {
+            return Err(Error::Distributed(format!(
+                "worker rank {rank} reported failure: {}",
+                String::from_utf8_lossy(&blob)
+            )));
+        }
+        reports.push(wire::decode_report(&blob)?);
+    }
+
+    guard.join_all(deadline)?;
+
+    // fold the team's wire-level activity into the process-wide
+    // counters feeding `rsla dist` / `rsla stats`
+    let reg = Registry::global();
+    reg.incr(
+        mn::COMM_TRANSPORT_ROUNDS,
+        reports.first().map(|r| r.reduce_rounds).unwrap_or(0),
+    );
+    reg.incr(
+        mn::COMM_TRANSPORT_WIRE_BYTES,
+        reports.iter().map(|r| r.transport.wire_bytes).sum(),
+    );
+    reg.incr(
+        mn::COMM_TRANSPORT_DOORBELL_WAITS,
+        reports.iter().map(|r| r.transport.doorbell_waits).sum(),
+    );
+    Ok(reports)
+}
+
+// ---- worker side -----------------------------------------------------
+
+/// Worker-side kernel routing: the exact mirror of the SPD dispatch in
+/// `DSparseTensor::solve`, so a ProcComm solve runs the same kernel the
+/// LocalComm path would.
+fn run_job(blob: &[u8], comm: &ProcComm) -> Result<Vec<u8>> {
+    let job = wire::decode_job(blob)?;
+    let rep = if !job.spd {
+        dist_gmres(&job.share, &job.b_own, job.restart, comm, &job.opts)
+    } else {
+        match &job.opts.method {
+            DistMethod::Auto | DistMethod::Cg => dist_cg(&job.share, &job.b_own, comm, &job.opts),
+            DistMethod::CgPipelined => dist_cg_pipelined(&job.share, &job.b_own, comm, &job.opts),
+            DistMethod::CaCg { s } => {
+                let mut ca = crate::krylov::CaCgOpts::default();
+                if *s > 0 {
+                    ca.s = *s;
+                }
+                dist_cg_ca(&job.share, &job.b_own, comm, &job.opts, &ca)
+            }
+        }
+    };
+    Ok(wire::encode_report(&rep))
+}
+
+fn worker_main() -> Result<()> {
+    let getenv = |k: &str| -> Result<String> {
+        std::env::var(k).map_err(|_| Error::Distributed(format!("worker env {k} missing")))
+    };
+    let rank: usize = getenv(ENV_RANK)?
+        .parse()
+        .map_err(|e| Error::Distributed(format!("bad {ENV_RANK}: {e}")))?;
+    let size: usize = getenv(ENV_SIZE)?
+        .parse()
+        .map_err(|e| Error::Distributed(format!("bad {ENV_SIZE}: {e}")))?;
+    let dir = PathBuf::from(getenv(ENV_DIR)?);
+    let kind = match getenv(ENV_TRANSPORT)?.as_str() {
+        "socket" => TransportKind::Socket,
+        _ => TransportKind::Shm,
+    };
+    let timeout_ms: u64 = std::env::var(ENV_TIMEOUT_MS)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(120_000);
+    let timeout = Duration::from_millis(timeout_ms);
+    let deadline = Instant::now() + timeout;
+
+    // data plane first (socket listeners must exist before any peer can
+    // have received its job), then the hello
+    let comm = ProcComm::connect(rank, size, &dir, kind, timeout)?;
+
+    let ctl = ctl_path(&dir);
+    let mut stream = loop {
+        match UnixStream::connect(&ctl) {
+            Ok(s) => break s,
+            Err(_) if Instant::now() < deadline => std::thread::sleep(ACCEPT_POLL),
+            Err(e) => {
+                return Err(Error::Distributed(format!(
+                    "worker rank {rank}: connect {}: {e}",
+                    ctl.display()
+                )))
+            }
+        }
+    };
+    stream.set_read_timeout(Some(CTL_TICK))?;
+    {
+        use std::io::Write;
+        stream.write_all(&(rank as u64).to_le_bytes())?;
+    }
+    let blob = read_blob(&mut stream, deadline, &mut || Ok(()))?;
+    if std::env::var_os(ENV_FAIL).is_some() {
+        // dead-rank injection: die after taking the job, before solving
+        std::process::exit(101);
+    }
+    match run_job(&blob, &comm) {
+        Ok(payload) => {
+            use std::io::Write;
+            stream.write_all(&[0u8])?;
+            write_blob(&mut stream, &payload)?;
+            Ok(())
+        }
+        Err(e) => {
+            use std::io::Write;
+            let msg = e.to_string();
+            let _ = stream.write_all(&[1u8]);
+            let _ = write_blob(&mut stream, msg.as_bytes());
+            Err(e)
+        }
+    }
+}
+
+/// Process-team worker entry point.  Every binary that may serve as a
+/// re-exec target calls this FIRST (`main.rs`, bench mains, and a
+/// `proc_worker_entry` `#[test]` in each integration-test binary that
+/// spawns teams): if the `RSLA_PROC_*` environment identifies this
+/// process as a worker, it runs the worker protocol and EXITS —
+/// otherwise returns `false` and the caller proceeds normally.
+pub fn maybe_run_worker() -> bool {
+    if std::env::var_os(ENV_RANK).is_none() {
+        return false;
+    }
+    match worker_main() {
+        Ok(()) => std::process::exit(0),
+        Err(e) => {
+            eprintln!("rsla worker: {e}");
+            std::process::exit(103)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distributed::comm::run_ranks;
+
+    fn team_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("rsla-proc-unit-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    /// In-process ProcComm endpoints (threads, not processes): the
+    /// transport does not care what's on each end of the rings/sockets,
+    /// which lets this test pin the hub fold order against LocalComm
+    /// bitwise without spawning.
+    fn proc_team(n: usize, kind: TransportKind, dir: &Path) -> Vec<ProcComm> {
+        if kind == TransportKind::Shm {
+            for i in 0..n {
+                for j in 0..n {
+                    if i != j {
+                        shm::create_ring(&ring_path(dir, i, j), 1 << 16).unwrap();
+                    }
+                }
+            }
+        }
+        (0..n)
+            .map(|r| ProcComm::connect(r, n, dir, kind, Duration::from_secs(30)).unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn proc_all_reduce_matches_local_comm_bitwise_on_both_transports() {
+        // magnitudes chosen so the fold order changes the result:
+        // only the canonical rank-ascending association may appear
+        let contrib = |r: usize| match r {
+            0 => [1e16, 0.125],
+            1 => [1.0, 3.5],
+            2 => [-1e16, -0.25],
+            _ => [1.0, 1.75],
+        };
+        let n = 4;
+        let expect: Vec<Vec<f64>> = run_ranks(n, move |c| {
+            let mut xs = contrib(c.rank());
+            c.all_reduce(&mut xs);
+            xs.to_vec()
+        });
+        for kind in [TransportKind::Shm, TransportKind::Socket] {
+            let dir = team_dir(&format!("ar-{kind:?}"));
+            let comms = proc_team(n, kind, &dir);
+            let got: Vec<Vec<f64>> = std::thread::scope(|scope| {
+                let handles: Vec<_> = comms
+                    .iter()
+                    .map(|c| {
+                        scope.spawn(move || {
+                            let mut xs = contrib(c.rank());
+                            c.all_reduce(&mut xs);
+                            xs.to_vec()
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for (r, (g, e)) in got.iter().zip(&expect).enumerate() {
+                for (a, b) in g.iter().zip(e.iter()) {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "rank {r} over {kind:?} diverged from LocalComm"
+                    );
+                }
+            }
+            // every endpoint counts exactly one round, zero algorithmic
+            // bytes — identical accounting to LocalComm
+            for c in &comms {
+                assert_eq!(c.reduce_rounds(), 1);
+                assert_eq!(Communicator::bytes_sent(c), 0);
+                let ts = c.transport_stats();
+                assert!(ts.wire_msgs > 0 || c.rank() > 0 || n == 1);
+            }
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    #[test]
+    fn tagged_send_recv_roundtrip_and_stats() {
+        let dir = team_dir("p2p");
+        let comms = proc_team(2, TransportKind::Shm, &dir);
+        let (left, right) = (&comms[0], &comms[1]);
+        std::thread::scope(|scope| {
+            scope.spawn(move || {
+                Transport::send(left, 1, 7, vec![1.0, 2.0, 3.0]);
+                let back = Transport::recv(left, 1, 8);
+                assert_eq!(back, vec![6.0]);
+            });
+            let got = Transport::recv(right, 0, 7);
+            assert_eq!(got, vec![1.0, 2.0, 3.0]);
+            Transport::send(right, 0, 8, vec![got.iter().sum()]);
+        });
+        // algorithmic bytes: 3 f64 one way, 1 f64 the other
+        assert_eq!(Communicator::bytes_sent(&comms[0]), 24);
+        assert_eq!(Communicator::bytes_sent(&comms[1]), 8);
+        let ts = comms[0].transport_stats();
+        assert_eq!(ts.wire_msgs, 1);
+        assert_eq!(ts.wire_bytes, 16 + 24);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,287 @@
+//! Shared-memory ring transport: one single-producer/single-consumer
+//! byte ring per ordered rank pair, backed by a file under `/dev/shm`
+//! (kernel page cache = the shared memory; cross-process coherence is
+//! the kernel's, not ours).
+//!
+//! Ring layout: `[head u64 LE][tail u64 LE][payload; cap bytes]`.
+//! `head` (bytes consumed) is reader-owned, `tail` (bytes produced) is
+//! writer-owned; both grow monotonically, so `tail - head` is the
+//! readable byte count and `cap - (tail - head)` the free space — no
+//! modulo ambiguity at full/empty.  Each side caches the peer-owned
+//! counter and refreshes it only when blocked ("doorbell" polling:
+//! yield-spin first, then sleep), recording the blocked time so the
+//! endpoint can report doorbell-wait percentiles.
+//!
+//! 8-byte counter updates go through aligned `pwrite`s, which the
+//! kernel serves atomically through the shared page cache; the payload
+//! write always precedes the `tail` publish, so a reader never observes
+//! a frame before its bytes.
+
+use std::fs::{File, OpenOptions};
+use std::os::unix::fs::FileExt;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+
+const HDR: u64 = 16;
+const SPIN_ROUNDS: u32 = 64;
+const POLL_SLEEP: Duration = Duration::from_micros(50);
+
+/// Yield-then-sleep poll loop shared by both ring sides.
+struct Backoff {
+    spins: u32,
+}
+
+impl Backoff {
+    fn new() -> Self {
+        Backoff { spins: 0 }
+    }
+
+    fn wait(&mut self) {
+        if self.spins < SPIN_ROUNDS {
+            std::thread::yield_now();
+        } else {
+            std::thread::sleep(POLL_SLEEP);
+        }
+        self.spins = self.spins.saturating_add(1);
+    }
+}
+
+fn read_counter(f: &File, off: u64) -> Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact_at(&mut b, off)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn write_counter(f: &File, off: u64, v: u64) -> Result<()> {
+    f.write_all_at(&v.to_le_bytes(), off)?;
+    Ok(())
+}
+
+fn timeout_err(what: &str, path: &Path) -> Error {
+    Error::Distributed(format!(
+        "shm ring {}: peer silent past deadline while {what}",
+        path.display()
+    ))
+}
+
+/// Create (and zero) a ring file with `cap` payload bytes.  The parent
+/// does this for every ordered rank pair before spawning workers, so
+/// endpoints only ever open existing files.
+pub fn create_ring(path: &Path, cap: u64) -> Result<()> {
+    let f = File::create(path)?;
+    f.set_len(HDR + cap)?;
+    Ok(())
+}
+
+fn open_ring(path: &Path) -> Result<(File, u64)> {
+    let f = OpenOptions::new().read(true).write(true).open(path)?;
+    let len = f.metadata()?.len();
+    if len <= HDR {
+        return Err(Error::Distributed(format!(
+            "shm ring {}: file too small ({len} B)",
+            path.display()
+        )));
+    }
+    // capacity comes from the file itself, so writer and reader can
+    // never disagree on it
+    Ok((f, len - HDR))
+}
+
+/// Producer endpoint of one ordered rank pair's ring.
+pub struct RingWriter {
+    file: File,
+    path: std::path::PathBuf,
+    cap: u64,
+    tail: u64,
+    head_cache: u64,
+}
+
+impl RingWriter {
+    pub fn open(path: &Path) -> Result<Self> {
+        let (file, cap) = open_ring(path)?;
+        let tail = read_counter(&file, 8)?;
+        let head_cache = read_counter(&file, 0)?;
+        Ok(RingWriter {
+            file,
+            path: path.to_path_buf(),
+            cap,
+            tail,
+            head_cache,
+        })
+    }
+
+    /// Append `bytes` to the ring, blocking (poll + backoff) on
+    /// backpressure.  Returns the microseconds spent blocked waiting
+    /// for the reader to free space.
+    pub fn write_all(&mut self, bytes: &[u8], deadline: Instant) -> Result<u64> {
+        if bytes.len() as u64 > self.cap {
+            return Err(Error::Distributed(format!(
+                "shm ring {}: frame of {} B exceeds ring capacity {} B",
+                self.path.display(),
+                bytes.len(),
+                self.cap
+            )));
+        }
+        let mut rest = bytes;
+        let mut waited_us = 0u64;
+        let mut backoff = Backoff::new();
+        while !rest.is_empty() {
+            let free = self.cap - (self.tail - self.head_cache);
+            if free == 0 {
+                let t0 = Instant::now();
+                self.head_cache = read_counter(&self.file, 0)?;
+                if self.cap - (self.tail - self.head_cache) == 0 {
+                    if Instant::now() >= deadline {
+                        return Err(timeout_err("awaiting ring space", &self.path));
+                    }
+                    backoff.wait();
+                }
+                waited_us += t0.elapsed().as_micros() as u64;
+                continue;
+            }
+            let off = self.tail % self.cap;
+            let contig = (self.cap - off).min(free);
+            let n = (contig as usize).min(rest.len());
+            let (chunk, next) = rest.split_at(n);
+            self.file.write_all_at(chunk, HDR + off)?;
+            self.tail += n as u64;
+            // publish AFTER the payload bytes land
+            write_counter(&self.file, 8, self.tail)?;
+            rest = next;
+        }
+        Ok(waited_us)
+    }
+}
+
+/// Consumer endpoint of one ordered rank pair's ring.
+pub struct RingReader {
+    file: File,
+    path: std::path::PathBuf,
+    cap: u64,
+    head: u64,
+    tail_cache: u64,
+}
+
+impl RingReader {
+    pub fn open(path: &Path) -> Result<Self> {
+        let (file, cap) = open_ring(path)?;
+        let head = read_counter(&file, 0)?;
+        let tail_cache = read_counter(&file, 8)?;
+        Ok(RingReader {
+            file,
+            path: path.to_path_buf(),
+            cap,
+            head,
+            tail_cache,
+        })
+    }
+
+    /// Fill `buf` from the ring, blocking (poll + backoff) until enough
+    /// bytes arrive.  Returns the microseconds spent blocked on the
+    /// doorbell (writer had published nothing new).
+    pub fn read_exact(&mut self, buf: &mut [u8], deadline: Instant) -> Result<u64> {
+        let mut rest: &mut [u8] = buf;
+        let mut waited_us = 0u64;
+        let mut backoff = Backoff::new();
+        while !rest.is_empty() {
+            let avail = self.tail_cache - self.head;
+            if avail == 0 {
+                let t0 = Instant::now();
+                self.tail_cache = read_counter(&self.file, 8)?;
+                if self.tail_cache == self.head {
+                    if Instant::now() >= deadline {
+                        return Err(timeout_err("awaiting ring data", &self.path));
+                    }
+                    backoff.wait();
+                }
+                waited_us += t0.elapsed().as_micros() as u64;
+                continue;
+            }
+            let off = self.head % self.cap;
+            let contig = (self.cap - off).min(avail);
+            let n = (contig as usize).min(rest.len());
+            let (chunk, next) = std::mem::take(&mut rest).split_at_mut(n);
+            self.file.read_exact_at(chunk, HDR + off)?;
+            self.head += n as u64;
+            // free the space AFTER the bytes are out
+            write_counter(&self.file, 0, self.head)?;
+            rest = next;
+        }
+        Ok(waited_us)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_ring(cap: u64, tag: &str) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!(
+            "rsla-ring-test-{}-{tag}.dat",
+            std::process::id()
+        ));
+        create_ring(&p, cap).unwrap();
+        p
+    }
+
+    fn far() -> Instant {
+        Instant::now() + Duration::from_secs(30)
+    }
+
+    #[test]
+    fn roundtrip_with_wraparound() {
+        let p = tmp_ring(64, "wrap");
+        let mut w = RingWriter::open(&p).unwrap();
+        let mut r = RingReader::open(&p).unwrap();
+        // 10 messages of 40 bytes through a 64-byte ring forces many
+        // wraparounds and exercises the chunked copy path
+        for round in 0u8..10 {
+            let msg: Vec<u8> = (0..40u8).map(|i| i.wrapping_mul(3).wrapping_add(round)).collect();
+            w.write_all(&msg, far()).unwrap();
+            let mut back = vec![0u8; 40];
+            r.read_exact(&mut back, far()).unwrap();
+            assert_eq!(back, msg, "round {round}");
+        }
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn concurrent_producer_consumer_is_lossless() {
+        let p = tmp_ring(256, "conc");
+        let mut w = RingWriter::open(&p).unwrap();
+        let mut r = RingReader::open(&p).unwrap();
+        let total: usize = 64 * 1024;
+        let producer = std::thread::spawn(move || {
+            let chunk: Vec<u8> = (0..251u8).collect();
+            let mut sent = 0usize;
+            while sent < total {
+                let n = chunk.len().min(total - sent);
+                w.write_all(&chunk[..n], far()).unwrap();
+                sent += n;
+            }
+        });
+        let mut got = vec![0u8; total];
+        r.read_exact(&mut got, far()).unwrap();
+        producer.join().unwrap();
+        for (i, b) in got.iter().enumerate() {
+            assert_eq!(*b as usize, i % 251, "byte {i}");
+        }
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn oversized_frame_and_timeout_are_typed_errors() {
+        let p = tmp_ring(32, "err");
+        let mut w = RingWriter::open(&p).unwrap();
+        let mut r = RingReader::open(&p).unwrap();
+        assert!(w.write_all(&[0u8; 33], far()).is_err());
+        // nothing written: a short deadline must surface as an error,
+        // not a hang
+        let soon = Instant::now() + Duration::from_millis(50);
+        let mut buf = [0u8; 8];
+        assert!(r.read_exact(&mut buf, soon).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+}

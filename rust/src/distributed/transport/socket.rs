@@ -1,0 +1,242 @@
+//! Localhost-socket transport: a full mesh of Unix-domain streams,
+//! the fallback for hosts where `/dev/shm` rings are unavailable (or
+//! for debugging the shm path against an independent implementation).
+//!
+//! Every rank binds `rank<r>.sock` in the session directory BEFORE the
+//! control-plane hello, so by the time any solve traffic flows all
+//! listeners exist; outgoing streams are then connected lazily (with a
+//! retry loop as a second line of defense).  The first 8 bytes on any
+//! accepted stream are the sender's rank (little-endian), after which
+//! the stream carries tagged data frames.  Streams are per ordered
+//! pair, so per-peer FIFO holds and no demultiplexing is needed beyond
+//! the hello.
+
+use std::io::{ErrorKind, Read, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+
+const ACCEPT_POLL: Duration = Duration::from_millis(2);
+const CONNECT_RETRY: Duration = Duration::from_millis(5);
+const READ_TICK: Duration = Duration::from_millis(100);
+
+pub fn sock_path(dir: &Path, rank: usize) -> PathBuf {
+    dir.join(format!("rank{rank}.sock"))
+}
+
+fn timeout_err(what: &str, peer: usize) -> Error {
+    Error::Distributed(format!(
+        "socket transport: deadline exceeded while {what} (peer rank {peer})"
+    ))
+}
+
+/// Blocking-with-deadline exact read; returns microseconds spent
+/// blocked (the socket analogue of a doorbell wait).  The stream must
+/// have a finite read timeout so each blocked `read` wakes up to check
+/// the deadline.
+fn read_exact_deadline(
+    s: &mut UnixStream,
+    buf: &mut [u8],
+    deadline: Instant,
+    peer: usize,
+) -> Result<u64> {
+    let mut rest: &mut [u8] = buf;
+    let mut waited_us = 0u64;
+    while !rest.is_empty() {
+        let t0 = Instant::now();
+        match s.read(rest) {
+            Ok(0) => {
+                return Err(Error::Distributed(format!(
+                    "socket transport: peer rank {peer} closed the stream mid-frame"
+                )))
+            }
+            Ok(n) => {
+                let n = n.min(rest.len());
+                let (_, next) = std::mem::take(&mut rest).split_at_mut(n);
+                rest = next;
+            }
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock
+                    || e.kind() == ErrorKind::TimedOut
+                    || e.kind() == ErrorKind::Interrupted =>
+            {
+                waited_us += t0.elapsed().as_micros() as u64;
+                if Instant::now() >= deadline {
+                    return Err(timeout_err("awaiting frame bytes", peer));
+                }
+            }
+            Err(e) => return Err(Error::Io(e)),
+        }
+    }
+    Ok(waited_us)
+}
+
+/// One rank's endpoint of the socket mesh.
+pub struct SocketMesh {
+    rank: usize,
+    listener: UnixListener,
+    dir: PathBuf,
+    /// Outgoing streams, indexed by destination rank (lazy connect).
+    out: Vec<Option<UnixStream>>,
+    /// Incoming streams, indexed by source rank (filled by accept).
+    inc: Vec<Option<UnixStream>>,
+}
+
+impl SocketMesh {
+    /// Bind this rank's listener.  MUST happen before the control-plane
+    /// hello so peers never race the bind.
+    pub fn bind(rank: usize, nranks: usize, dir: &Path) -> Result<Self> {
+        let path = sock_path(dir, rank);
+        let listener = UnixListener::bind(&path).map_err(|e| {
+            Error::Distributed(format!("socket transport: bind {}: {e}", path.display()))
+        })?;
+        listener.set_nonblocking(true)?;
+        Ok(SocketMesh {
+            rank,
+            listener,
+            dir: dir.to_path_buf(),
+            out: (0..nranks).map(|_| None).collect(),
+            inc: (0..nranks).map(|_| None).collect(),
+        })
+    }
+
+    fn connect(&mut self, to: usize, deadline: Instant) -> Result<&mut UnixStream> {
+        let rank = self.rank;
+        let path = sock_path(&self.dir, to);
+        let slot = self
+            .out
+            .get_mut(to)
+            .ok_or_else(|| Error::Distributed(format!("socket transport: no rank {to}")))?;
+        while slot.is_none() {
+            match UnixStream::connect(&path) {
+                Ok(mut s) => {
+                    s.write_all(&(rank as u64).to_le_bytes())?;
+                    *slot = Some(s);
+                }
+                Err(_) if Instant::now() < deadline => std::thread::sleep(CONNECT_RETRY),
+                Err(e) => {
+                    return Err(Error::Distributed(format!(
+                        "socket transport: connect {}: {e}",
+                        path.display()
+                    )))
+                }
+            }
+        }
+        slot.as_mut()
+            .ok_or_else(|| Error::Distributed("socket transport: lost stream".into()))
+    }
+
+    /// Send one pre-encoded frame to `to`.
+    pub fn send_bytes(&mut self, to: usize, frame: &[u8], deadline: Instant) -> Result<u64> {
+        let s = self.connect(to, deadline)?;
+        // blocking write: a dead peer surfaces as EPIPE (Rust ignores
+        // SIGPIPE), which the worker converts into its own death and
+        // the parent into RankDead
+        s.write_all(frame)?;
+        Ok(0)
+    }
+
+    /// Accept pending connections until a stream from `from` exists.
+    fn ensure_incoming(&mut self, from: usize, deadline: Instant) -> Result<u64> {
+        let mut waited_us = 0u64;
+        loop {
+            let have = self
+                .inc
+                .get(from)
+                .ok_or_else(|| Error::Distributed(format!("socket transport: no rank {from}")))?
+                .is_some();
+            if have {
+                return Ok(waited_us);
+            }
+            match self.listener.accept() {
+                Ok((mut s, _)) => {
+                    s.set_nonblocking(false)?;
+                    s.set_read_timeout(Some(READ_TICK))?;
+                    let mut hello = [0u8; 8];
+                    read_exact_deadline(&mut s, &mut hello, deadline, usize::MAX)?;
+                    let peer = u64::from_le_bytes(hello) as usize;
+                    let slot = self.inc.get_mut(peer).ok_or_else(|| {
+                        Error::Distributed(format!(
+                            "socket transport: hello from unknown rank {peer}"
+                        ))
+                    })?;
+                    *slot = Some(s);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        return Err(timeout_err("awaiting connection", from));
+                    }
+                    waited_us += ACCEPT_POLL.as_micros() as u64;
+                    std::thread::sleep(ACCEPT_POLL);
+                }
+                Err(e) => return Err(Error::Io(e)),
+            }
+        }
+    }
+
+    /// Exact read from the stream owned by `from`; accepts pending
+    /// connections as needed.  Returns microseconds spent blocked.
+    pub fn recv_bytes(&mut self, from: usize, buf: &mut [u8], deadline: Instant) -> Result<u64> {
+        let mut waited_us = self.ensure_incoming(from, deadline)?;
+        let s = self
+            .inc
+            .get_mut(from)
+            .and_then(|o| o.as_mut())
+            .ok_or_else(|| Error::Distributed(format!("socket transport: no stream {from}")))?;
+        waited_us += read_exact_deadline(s, buf, deadline, from)?;
+        Ok(waited_us)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("rsla-sock-test-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn far() -> Instant {
+        Instant::now() + Duration::from_secs(30)
+    }
+
+    #[test]
+    fn two_endpoint_roundtrip_both_directions() {
+        let dir = tmp_dir("pair");
+        let mut a = SocketMesh::bind(0, 2, &dir).unwrap();
+        let d2 = dir.clone();
+        let t = std::thread::spawn(move || {
+            let mut b = SocketMesh::bind(1, 2, &d2).unwrap();
+            let mut buf = [0u8; 24];
+            b.recv_bytes(0, &mut buf, far()).unwrap();
+            // echo back reversed
+            let rev: Vec<u8> = buf.iter().rev().copied().collect();
+            b.send_bytes(0, &rev, far()).unwrap();
+        });
+        let msg: Vec<u8> = (0..24u8).collect();
+        a.send_bytes(1, &msg, far()).unwrap();
+        let mut back = [0u8; 24];
+        a.recv_bytes(1, &mut back, far()).unwrap();
+        t.join().unwrap();
+        let want: Vec<u8> = (0..24u8).rev().collect();
+        assert_eq!(back.to_vec(), want);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recv_deadline_is_typed_error_not_hang() {
+        let dir = tmp_dir("dead");
+        let mut a = SocketMesh::bind(0, 2, &dir).unwrap();
+        let mut buf = [0u8; 8];
+        let soon = Instant::now() + Duration::from_millis(60);
+        let t0 = Instant::now();
+        assert!(a.recv_bytes(1, &mut buf, soon).is_err());
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,493 @@
+//! Wire codec for the process-separated rank teams: fixed-layout
+//! little-endian framing with length prefixes, no external
+//! serialization crates (offline build).
+//!
+//! Layout conventions, shared by the control plane and both data
+//! transports:
+//!
+//! * integers are `u64` little-endian; floats are `f64::to_bits`
+//!   little-endian (BITWISE exact round-trip — the transport must not
+//!   perturb the FP trajectory it carries);
+//! * every variable-length section is `[count u64][items...]`;
+//! * decode failures surface as [`Error::Distributed`] — a malformed
+//!   frame is a protocol bug, never a panic (this module is under the
+//!   lint's strict-index coverage).
+
+use crate::distributed::comm::TransportStats;
+use crate::distributed::dist_solver::{DistIterOpts, DistMethod, DistPrecondKind, DistSolveReport};
+use crate::distributed::halo::{DistCsr, HaloPlan};
+use crate::error::{Error, Result};
+use crate::sparse::Csr;
+
+fn proto_err(what: &str) -> Error {
+    Error::Distributed(format!("wire protocol: {what}"))
+}
+
+// ---- primitive writers ----------------------------------------------
+
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_usize(out: &mut Vec<u8>, v: usize) {
+    put_u64(out, v as u64);
+}
+
+pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+    put_u64(out, v.to_bits());
+}
+
+pub fn put_f64s(out: &mut Vec<u8>, xs: &[f64]) {
+    put_usize(out, xs.len());
+    for x in xs {
+        put_f64(out, *x);
+    }
+}
+
+pub fn put_usizes(out: &mut Vec<u8>, xs: &[usize]) {
+    put_usize(out, xs.len());
+    for x in xs {
+        put_usize(out, *x);
+    }
+}
+
+pub fn put_bytes(out: &mut Vec<u8>, xs: &[u8]) {
+    put_usize(out, xs.len());
+    out.extend_from_slice(xs);
+}
+
+// ---- cursor reader --------------------------------------------------
+
+/// Forward-only cursor over a received frame; every read is
+/// bounds-checked and truncation is a typed error.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() < n {
+            return Err(proto_err("truncated frame"));
+        }
+        let (head, rest) = self.buf.split_at(n);
+        self.buf = rest;
+        Ok(head)
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        let arr: [u8; 8] = b.try_into().map_err(|_| proto_err("u64 width"))?;
+        Ok(u64::from_le_bytes(arr))
+    }
+
+    pub fn byte(&mut self) -> Result<u8> {
+        let b = self.take(1)?;
+        b.first().copied().ok_or_else(|| proto_err("u8 width"))
+    }
+
+    pub fn usz(&mut self) -> Result<usize> {
+        Ok(self.u64()? as usize)
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Bounded count read: rejects counts a hostile/corrupt frame could
+    /// use to force an absurd allocation.
+    fn count(&mut self) -> Result<usize> {
+        let n = self.usz()?;
+        if n > (1usize << 32) {
+            return Err(proto_err("implausible element count"));
+        }
+        Ok(n)
+    }
+
+    pub fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.count()?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f64()?);
+        }
+        Ok(out)
+    }
+
+    pub fn usizes(&mut self) -> Result<Vec<usize>> {
+        let n = self.count()?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.usz()?);
+        }
+        Ok(out)
+    }
+
+    pub fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.count()?;
+        Ok(self.take(n)?.to_vec())
+    }
+}
+
+// ---- domain encodings -----------------------------------------------
+
+fn put_csr(out: &mut Vec<u8>, a: &Csr) {
+    put_usize(out, a.nrows);
+    put_usize(out, a.ncols);
+    put_usizes(out, &a.indptr);
+    put_usizes(out, &a.indices);
+    put_f64s(out, &a.vals);
+}
+
+fn get_csr(r: &mut Reader) -> Result<Csr> {
+    let a = Csr {
+        nrows: r.usz()?,
+        ncols: r.usz()?,
+        indptr: r.usizes()?,
+        indices: r.usizes()?,
+        vals: r.f64s()?,
+    };
+    a.validate()
+        .map_err(|e| proto_err(&format!("invalid CSR share: {e}")))?;
+    Ok(a)
+}
+
+fn put_plan(out: &mut Vec<u8>, p: &HaloPlan) {
+    put_usize(out, p.rank);
+    put_usize(out, p.n_own);
+    put_usizes(out, &p.halo_globals);
+    for list in [&p.send, &p.recv] {
+        put_usize(out, list.len());
+        for (peer, idx) in list.iter() {
+            put_usize(out, *peer);
+            put_usizes(out, idx);
+        }
+    }
+}
+
+fn get_plan(r: &mut Reader) -> Result<HaloPlan> {
+    let rank = r.usz()?;
+    let n_own = r.usz()?;
+    let halo_globals = r.usizes()?;
+    let mut lists = Vec::with_capacity(2);
+    for _ in 0..2 {
+        let n = r.usz()?;
+        if n > (1usize << 24) {
+            return Err(proto_err("implausible neighbor count"));
+        }
+        let mut list = Vec::with_capacity(n);
+        for _ in 0..n {
+            let peer = r.usz()?;
+            list.push((peer, r.usizes()?));
+        }
+        lists.push(list);
+    }
+    let recv = lists.pop().ok_or_else(|| proto_err("plan lists"))?;
+    let send = lists.pop().ok_or_else(|| proto_err("plan lists"))?;
+    Ok(HaloPlan {
+        rank,
+        n_own,
+        halo_globals,
+        send,
+        recv,
+    })
+}
+
+fn precond_code(k: &DistPrecondKind) -> u8 {
+    match k {
+        DistPrecondKind::Jacobi => 0,
+        DistPrecondKind::BlockAmg => 1,
+        DistPrecondKind::BlockLu => 2,
+    }
+}
+
+fn precond_from(code: u8) -> Result<DistPrecondKind> {
+    match code {
+        0 => Ok(DistPrecondKind::Jacobi),
+        1 => Ok(DistPrecondKind::BlockAmg),
+        2 => Ok(DistPrecondKind::BlockLu),
+        _ => Err(proto_err("unknown precond code")),
+    }
+}
+
+fn method_code(m: &DistMethod) -> (u8, u64) {
+    match m {
+        DistMethod::Auto => (0, 0),
+        DistMethod::Cg => (1, 0),
+        DistMethod::CgPipelined => (2, 0),
+        DistMethod::CaCg { s } => (3, *s as u64),
+    }
+}
+
+fn method_from(code: u8, s: u64) -> Result<DistMethod> {
+    match code {
+        0 => Ok(DistMethod::Auto),
+        1 => Ok(DistMethod::Cg),
+        2 => Ok(DistMethod::CgPipelined),
+        3 => Ok(DistMethod::CaCg { s: s as usize }),
+        _ => Err(proto_err("unknown method code")),
+    }
+}
+
+/// Kernel names cross the wire as bytes; map back to the `'static`
+/// vocabulary [`DistSolveReport::method`] promises.
+fn method_name_from(bytes: &[u8]) -> &'static str {
+    match bytes {
+        b"cg" => "cg",
+        b"cg-pipelined" => "cg-pipelined",
+        b"ca-cg" => "ca-cg",
+        b"ca-cg+fallback" => "ca-cg+fallback",
+        b"gmres" => "gmres",
+        b"bicgstab" => "bicgstab",
+        b"minres" => "minres",
+        _ => "unknown",
+    }
+}
+
+/// One rank's job: its share, RHS slice, and the solve routing.
+pub struct WireJob {
+    pub share: DistCsr,
+    pub b_own: Vec<f64>,
+    pub spd: bool,
+    pub restart: usize,
+    pub opts: DistIterOpts,
+}
+
+pub fn encode_job(
+    share: &DistCsr,
+    b_own: &[f64],
+    spd: bool,
+    restart: usize,
+    opts: &DistIterOpts,
+) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_csr(&mut out, &share.local);
+    put_plan(&mut out, &share.plan);
+    put_f64s(&mut out, b_own);
+    out.push(u8::from(spd));
+    put_usize(&mut out, restart);
+    put_f64(&mut out, opts.tol);
+    put_usize(&mut out, opts.max_iters);
+    out.push(precond_code(&opts.precond));
+    let (mc, ms) = method_code(&opts.method);
+    out.push(mc);
+    put_u64(&mut out, ms);
+    out
+}
+
+pub fn decode_job(buf: &[u8]) -> Result<WireJob> {
+    let mut r = Reader::new(buf);
+    let local = get_csr(&mut r)?;
+    let plan = get_plan(&mut r)?;
+    if local.nrows != plan.n_own || local.ncols != plan.n_own + plan.n_halo() {
+        return Err(proto_err("share/plan shape mismatch"));
+    }
+    let b_own = r.f64s()?;
+    if b_own.len() != plan.n_own {
+        return Err(proto_err("rhs length mismatch"));
+    }
+    let spd = r.byte()? != 0;
+    let restart = r.usz()?;
+    let tol = r.f64()?;
+    let max_iters = r.usz()?;
+    let precond = precond_from(r.byte()?)?;
+    let mc = r.byte()?;
+    let ms = r.u64()?;
+    let method = method_from(mc, ms)?;
+    Ok(WireJob {
+        share: DistCsr::new(local, plan),
+        b_own,
+        spd,
+        restart,
+        opts: DistIterOpts {
+            tol,
+            max_iters,
+            precond,
+            method,
+            // the worker calls the dist_* kernels directly; the backend
+            // field is only read by DSparseTensor::solve on the parent
+            backend: super::CommBackend::Local,
+        },
+    })
+}
+
+pub fn encode_report(rep: &DistSolveReport) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_f64s(&mut out, &rep.x_own);
+    put_bytes(&mut out, rep.method.as_bytes());
+    put_usize(&mut out, rep.iters);
+    put_f64(&mut out, rep.residual);
+    out.push(u8::from(rep.converged));
+    put_u64(&mut out, rep.bytes_sent);
+    put_u64(&mut out, rep.reduce_rounds);
+    put_u64(&mut out, rep.peak_bytes);
+    let t = &rep.transport;
+    put_u64(&mut out, t.wire_bytes);
+    put_u64(&mut out, t.wire_msgs);
+    put_u64(&mut out, t.doorbell_waits);
+    put_f64(&mut out, t.doorbell_p50_us);
+    put_f64(&mut out, t.doorbell_p99_us);
+    put_f64(&mut out, t.doorbell_max_us);
+    out
+}
+
+pub fn decode_report(buf: &[u8]) -> Result<DistSolveReport> {
+    let mut r = Reader::new(buf);
+    let x_own = r.f64s()?;
+    let method_bytes = r.bytes()?;
+    let method = method_name_from(&method_bytes);
+    let iters = r.usz()?;
+    let residual = r.f64()?;
+    let converged = r.byte()? != 0;
+    let bytes_sent = r.u64()?;
+    let reduce_rounds = r.u64()?;
+    let peak_bytes = r.u64()?;
+    let transport = TransportStats {
+        wire_bytes: r.u64()?,
+        wire_msgs: r.u64()?,
+        doorbell_waits: r.u64()?,
+        doorbell_p50_us: r.f64()?,
+        doorbell_p99_us: r.f64()?,
+        doorbell_max_us: r.f64()?,
+    };
+    Ok(DistSolveReport {
+        x_own,
+        method,
+        iters,
+        residual,
+        converged,
+        bytes_sent,
+        reduce_rounds,
+        peak_bytes,
+        transport,
+    })
+}
+
+/// Tagged data frame for the point-to-point transports:
+/// `[tag u64][len u64][payload f64 bits...]`.
+pub fn encode_data_frame(tag: u64, data: &[f64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16 + data.len() * 8);
+    put_u64(&mut out, tag);
+    put_usize(&mut out, data.len());
+    for x in data {
+        put_u64(&mut out, x.to_bits());
+    }
+    out
+}
+
+/// Decode a data-frame payload (everything after the 16-byte header).
+pub fn decode_payload(bytes: &[u8]) -> Result<Vec<f64>> {
+    if bytes.len() % 8 != 0 {
+        return Err(proto_err("payload not f64-aligned"));
+    }
+    Ok(bytes
+        .chunks_exact(8)
+        .map(|c| {
+            let arr: [u8; 8] = c.try_into().unwrap_or([0; 8]); // rsla-lint: allow(L1, chunks_exact(8) yields exactly 8 bytes)
+            f64::from_bits(u64::from_le_bytes(arr))
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distributed::partition::{partition, PartitionStrategy};
+    use crate::sparse::poisson::poisson2d;
+    use crate::util::Prng;
+
+    #[test]
+    fn job_roundtrip_is_bitwise() {
+        let sys = poisson2d(8, None);
+        let part = partition(&sys.matrix, None, 3, PartitionStrategy::Contiguous);
+        let a_perm = sys.matrix.permute_sym(&part.perm);
+        let shares = crate::distributed::halo::distribute(&a_perm, &part);
+        let mut rng = Prng::new(1);
+        for (p, share) in shares.iter().enumerate() {
+            let b: Vec<f64> = rng.normal_vec(share.plan.n_own);
+            let opts = DistIterOpts {
+                tol: 3.5e-9,
+                max_iters: 1234,
+                precond: DistPrecondKind::BlockLu,
+                method: DistMethod::CaCg { s: 4 },
+                ..Default::default()
+            };
+            let blob = encode_job(share, &b, true, 77, &opts);
+            let job = decode_job(&blob).unwrap();
+            assert_eq!(job.share.plan.rank, p);
+            assert_eq!(job.share.local.vals, share.local.vals);
+            assert_eq!(job.share.local.indptr, share.local.indptr);
+            assert_eq!(job.share.plan.halo_globals, share.plan.halo_globals);
+            for (x, y) in job.b_own.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+            assert!(job.spd);
+            assert_eq!(job.restart, 77);
+            assert_eq!(job.opts.tol.to_bits(), 3.5e-9f64.to_bits());
+            assert_eq!(job.opts.max_iters, 1234);
+            assert_eq!(job.opts.precond, DistPrecondKind::BlockLu);
+            assert_eq!(job.opts.method, DistMethod::CaCg { s: 4 });
+        }
+    }
+
+    #[test]
+    fn report_roundtrip_is_bitwise() {
+        let rep = DistSolveReport {
+            x_own: vec![1.5, -2.25e-300, f64::MIN_POSITIVE],
+            method: "ca-cg+fallback",
+            iters: 42,
+            residual: 7.125e-11,
+            converged: true,
+            bytes_sent: 9001,
+            reduce_rounds: 17,
+            peak_bytes: 1 << 20,
+            transport: TransportStats {
+                wire_bytes: 12345,
+                wire_msgs: 67,
+                doorbell_waits: 8,
+                doorbell_p50_us: 1.5,
+                doorbell_p99_us: 220.0,
+                doorbell_max_us: 400.25,
+            },
+        };
+        let back = decode_report(&encode_report(&rep)).unwrap();
+        assert_eq!(back.method, rep.method);
+        assert_eq!(back.iters, rep.iters);
+        assert_eq!(back.residual.to_bits(), rep.residual.to_bits());
+        assert_eq!(back.converged, rep.converged);
+        assert_eq!(back.bytes_sent, rep.bytes_sent);
+        assert_eq!(back.reduce_rounds, rep.reduce_rounds);
+        assert_eq!(back.peak_bytes, rep.peak_bytes);
+        assert_eq!(back.transport, rep.transport);
+        for (x, y) in back.x_own.iter().zip(&rep.x_own) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn truncated_frames_are_typed_errors_not_panics() {
+        let rep = DistSolveReport {
+            x_own: vec![1.0; 10],
+            method: "cg",
+            iters: 1,
+            residual: 0.0,
+            converged: true,
+            bytes_sent: 0,
+            reduce_rounds: 0,
+            peak_bytes: 0,
+            transport: TransportStats::default(),
+        };
+        let blob = encode_report(&rep);
+        for cut in [0usize, 1, 7, 8, blob.len() - 1] {
+            let r = decode_report(&blob[..cut]);
+            assert!(r.is_err(), "cut={cut} must fail");
+        }
+        assert!(decode_job(&[0u8; 4]).is_err());
+    }
+}

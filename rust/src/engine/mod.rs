@@ -1079,6 +1079,12 @@ fn exec_spec(spec: JobSpec, key: Option<PatternKey>, ctx: &WorkerCtx) -> Result<
             opts,
         } => exec_adjoint(&matrix, &b, &gy, &opts, key, ctx),
         JobSpec::Dist { tensor, b, opts } => {
+            // launches the rank team named by `opts.backend`: thread
+            // ranks in-process, or — for `CommBackend::Proc` — spawned
+            // worker processes whose liveness is monitored and which
+            // are reaped before this returns.  A worker dying mid-solve
+            // surfaces here as `Error::RankDead` (typed, never a hang)
+            // and flows to the ticket like any other job failure.
             let (x, reports) = tensor.solve(&b, &opts)?;
             Ok(JobOutput::Dist { x, reports })
         }

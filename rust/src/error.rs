@@ -45,6 +45,12 @@ pub enum Error {
     /// Distributed layer failure (rank panicked, channel closed...).
     Distributed(String),
 
+    /// A worker process in a process-separated rank team died (or went
+    /// unresponsive) before reporting its result.  The whole team is
+    /// reaped when this is raised — a dead rank must surface as a typed
+    /// error, never a hang.
+    RankDead { rank: usize, detail: String },
+
     /// Engine job missed its deadline while queued (it never executed).
     Timeout {
         waited_ms: u64,
@@ -91,6 +97,9 @@ impl fmt::Display for Error {
             Error::Artifact(name, msg) => write!(f, "artifact '{name}' not available: {msg}"),
             Error::Autograd(msg) => write!(f, "autograd: {msg}"),
             Error::Distributed(msg) => write!(f, "distributed: {msg}"),
+            Error::RankDead { rank, detail } => {
+                write!(f, "rank {rank} died before reporting: {detail}")
+            }
             Error::Timeout {
                 waited_ms,
                 deadline_ms,
@@ -155,5 +164,10 @@ mod tests {
             reason: "not registered".into(),
         };
         assert_eq!(e.to_string(), "backend 'petsc' unavailable: not registered");
+        let e = Error::RankDead {
+            rank: 2,
+            detail: "exit status 101".into(),
+        };
+        assert_eq!(e.to_string(), "rank 2 died before reporting: exit status 101");
     }
 }

@@ -1,0 +1,606 @@
+//! s-step communication-avoiding CG (Chronopoulos & Gear 1989 s-step
+//! form; Hoemmen 2010; Carson & Demmel 2014 residual replacement),
+//! written over ([`LinearOperator`], [`Communicator`]) like every other
+//! kernel in this module.
+//!
+//! Communication contract (pinned by the counter tests in
+//! `tests/krylov_equivalence.rs` and `benches/dist_scaling.rs`):
+//!
+//! * per OUTER step: `s` operator applies (s halo exchanges when
+//!   distributed) and exactly ONE packed reduction round carrying the
+//!   whole Gram structure — `sym(V^T AV)` (upper triangle),
+//!   `(AP_prev)^T V`, `V^T r`, `P_prev^T r`, and `<r,r>` — i.e. ~`1/s`
+//!   reduction rounds per CG iteration, vs 2 for [`super::cg`] and 1
+//!   for [`super::cg_pipelined`].
+//! * the residual-replacement guard adds one apply + one 2-scalar
+//!   round every [`CaCgOpts::guard_every`] outer steps.
+//! * the Newton basis adds 3 applies + 4 rounds ONCE per solve.
+//!
+//! Recurrence per outer step (`M` the preconditioner, monomial shifts
+//! `theta = 0`):
+//!
+//! ```text
+//! v_0 = M^-1 r;   v_{i+1} = M^-1 (A v_i) - theta_i v_i
+//! G = sym(V^T AV);  C = (AP_prev)^T V;  gV = V^T r;  gP = P_prev^T r
+//! B = -W_prev^-1 C                (Cholesky, column by column)
+//! P = V + P_prev B;  AP = AV + AP_prev B
+//! W = sym(G + C^T B)              (B^T W_prev B = -B^T C cancels B^T C)
+//! a = W^-1 (gV + B^T gP)          (Cholesky)
+//! x += P a;  r -= AP a
+//! ```
+//!
+//! Finite-precision safety: the monomial basis conditions like a power
+//! iteration, so large `s` can make `W` numerically rank-deficient.
+//! Three independent guards keep the kernel honest instead of silently
+//! returning a drifted iterate:
+//!
+//! 1. Cholesky breakdown (non-SPD pivot) in either small solve falls
+//!    back to standard CG from the current iterate.
+//! 2. The residual-replacement guard compares the RECURRED `<r,r>`
+//!    against the TRUE `||b - A x||` every `guard_every` outer steps;
+//!    on drift it replaces `r` and restarts the conjugation history,
+//!    and after two consecutive drifts it falls back.
+//! 3. The Newton basis (Chebyshev shifts of an estimated spectral
+//!    interval, Leja-ordered) is selected automatically for `s > 4`,
+//!    where the monomial basis degrades.
+//!
+//! Every floating-point reduction entry is a pinned-schedule
+//! `util::dot` over contiguous columns (`sparse::kernels::gram_*`) and
+//! all fold orders are fixed, so a CA-CG trajectory is bitwise
+//! reproducible across runs and transport backends.
+
+use super::{gnorm, Communicator, LinearOperator};
+use crate::iterative::{IterOpts, IterResult, Precond};
+use crate::metrics::MemTracker;
+use crate::sparse::kernels;
+use crate::trace::{self, names as tn};
+
+/// Krylov basis polynomial for the s-step block.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub enum CaBasis {
+    /// Monomial for `s <= 4`, Newton above (where monomial degrades).
+    #[default]
+    Auto,
+    /// `v_{i+1} = M^-1 A v_i` — zero extra setup cost, fine for small s.
+    Monomial,
+    /// Shifted basis `v_{i+1} = M^-1 A v_i - theta_i v_i` with
+    /// Leja-ordered Chebyshev points of the estimated spectral
+    /// interval; costs 3 applies + 4 reduction rounds once per solve.
+    Newton,
+}
+
+#[derive(Clone, Debug)]
+pub struct CaCgOpts {
+    /// Basis block size: iterations advanced per reduction round.
+    pub s: usize,
+    pub basis: CaBasis,
+    /// Run the residual-replacement check every this many outer steps
+    /// (0 disables the guard).
+    pub guard_every: usize,
+    /// Drift threshold: replace when `||b - Ax|| > guard_factor *
+    /// ||r_recurred||`.  A non-positive value forces the guard on every
+    /// check (the fallback-path test hook).
+    pub guard_factor: f64,
+}
+
+impl Default for CaCgOpts {
+    fn default() -> Self {
+        CaCgOpts {
+            s: 4,
+            basis: CaBasis::Auto,
+            guard_every: 8,
+            guard_factor: 10.0,
+        }
+    }
+}
+
+/// [`IterResult`] plus the CA-specific diagnostics the dist report and
+/// the equivalence tests read.
+#[derive(Debug)]
+pub struct CaCgResult {
+    pub iter: IterResult,
+    /// Completed outer steps (each = one packed reduction round).
+    pub outer_steps: usize,
+    /// Residual replacements the drift guard performed.
+    pub replacements: usize,
+    /// True when the solve finished under standard CG (basis breakdown
+    /// or persistent drift).
+    pub fell_back: bool,
+}
+
+/// Deterministic dense Cholesky of a row-major `s x s` SPD matrix into
+/// `l` (lower triangle, row-major).  Returns false on a non-SPD pivot
+/// — the caller treats that as basis breakdown, not an error.
+fn chol_factor(w: &[f64], s: usize, l: &mut [f64]) -> bool {
+    l.fill(0.0);
+    for j in 0..s {
+        let mut d = w[j * s + j];
+        for k in 0..j {
+            d -= l[j * s + k] * l[j * s + k];
+        }
+        if !d.is_finite() || d <= 1e-14 * w[j * s + j].abs().max(1e-300) {
+            return false;
+        }
+        let dj = d.sqrt();
+        l[j * s + j] = dj;
+        for i in (j + 1)..s {
+            let mut v = w[i * s + j];
+            for k in 0..j {
+                v -= l[i * s + k] * l[j * s + k];
+            }
+            l[i * s + j] = v / dj;
+        }
+    }
+    true
+}
+
+/// Solve `L L^T a = rhs` in place (`rhs` becomes `a`), `y` is scratch.
+fn chol_solve(l: &[f64], s: usize, rhs: &mut [f64], y: &mut [f64]) {
+    for i in 0..s {
+        let mut v = rhs[i];
+        for k in 0..i {
+            v -= l[i * s + k] * y[k];
+        }
+        y[i] = v / l[i * s + i];
+    }
+    for i in (0..s).rev() {
+        let mut v = y[i];
+        for k in (i + 1)..s {
+            v -= l[k * s + i] * rhs[k];
+        }
+        rhs[i] = v / l[i * s + i];
+    }
+}
+
+/// Newton-basis shifts: Chebyshev points of `[0, 1.05 * lambda_max]`
+/// (power-iteration estimate of `M^-1 A`), Leja-ordered so partial
+/// products stay well-scaled.  Costs 3 applies + 4 reduction rounds.
+fn newton_shifts(
+    a: &dyn LinearOperator,
+    m: &dyn Precond,
+    comm: &dyn Communicator,
+    s: usize,
+    v_ext: &mut [f64],
+    w: &mut [f64],
+    thetas: &mut [f64],
+) {
+    let n = a.n_own();
+    v_ext[..n].fill(1.0);
+    v_ext[n..].fill(0.0);
+    let g0 = gnorm(comm, &v_ext[..n]);
+    if g0 > 0.0 {
+        for v in v_ext[..n].iter_mut() {
+            *v /= g0;
+        }
+    }
+    let mut lam = 1.0;
+    for _ in 0..3 {
+        a.apply(v_ext, w);
+        m.apply(w, &mut v_ext[..n]);
+        lam = gnorm(comm, &v_ext[..n]);
+        if !(lam.is_finite() && lam > 0.0) {
+            lam = 1.0;
+            break;
+        }
+        for v in v_ext[..n].iter_mut() {
+            *v /= lam;
+        }
+    }
+    let lmax = lam * 1.05;
+    let sf = s as f64;
+    for (k, t) in thetas.iter_mut().enumerate() {
+        let ang = (2.0 * k as f64 + 1.0) * std::f64::consts::PI / (2.0 * sf);
+        *t = lmax / 2.0 * (1.0 - ang.cos());
+    }
+    // Leja order in place: pick the largest magnitude first, then
+    // greedily maximize the product of distances to the chosen prefix.
+    for chosen in 0..s {
+        let mut best = chosen;
+        let mut best_score = f64::NEG_INFINITY;
+        for i in chosen..s {
+            let score = if chosen == 0 {
+                thetas[i].abs()
+            } else {
+                let mut prod = 1.0;
+                for t in thetas.iter().take(chosen) {
+                    prod *= (thetas[i] - t).abs();
+                }
+                prod
+            };
+            if score > best_score {
+                best_score = score;
+                best = i;
+            }
+        }
+        thetas.swap(chosen, best);
+    }
+}
+
+/// Solve `A x = b` with s-step CA-CG, `x0 = 0`.  `b_own` is this rank's
+/// owned slice of the right-hand side; the returned iterate has the
+/// same layout.  `opts.record_history` records one residual per OUTER
+/// step (that is where the recurred `<r,r>` is globally available).
+pub fn ca_cg(
+    a: &dyn LinearOperator,
+    b_own: &[f64],
+    m: &dyn Precond,
+    comm: &dyn Communicator,
+    opts: &IterOpts,
+    ca: &CaCgOpts,
+    mem: Option<&MemTracker>,
+) -> CaCgResult {
+    let n = a.n_own();
+    let n_ext = a.n_ext();
+    assert_eq!(n, b_own.len(), "ca_cg rhs length mismatch");
+    let s = ca.s.max(1);
+    let newton = match ca.basis {
+        CaBasis::Monomial => false,
+        CaBasis::Newton => true,
+        CaBasis::Auto => s > 4,
+    };
+
+    let _sp = trace::span_arg(tn::KRYLOV_CA_CG, n as u64);
+    let mut ct = trace::ConvergenceTrace::new(tn::KRYLOV_CA_CG);
+    let default_tracker = MemTracker::new();
+    let mem = mem.unwrap_or(&default_tracker);
+    let mut x = mem.buf(n);
+    let mut r = mem.buf(n);
+    let mut t = mem.buf(n); // apply output / true-residual scratch
+    let mut ext = mem.buf(n_ext); // one extended buffer for every apply
+    let mut v = mem.buf(n * s);
+    let mut av = mem.buf(n * s);
+    let mut p = mem.buf(n * s);
+    let mut ap = mem.buf(n * s);
+    let mut pn = mem.buf(n * s);
+    let mut apn = mem.buf(n * s);
+
+    // Packed one-round reduction layout (fixed width; the C / gP
+    // sections are zero while no conjugation history exists):
+    // [ G upper s(s+1)/2 | C s*s | gV s | gP s | rr 1 ]
+    let nup = s * (s + 1) / 2;
+    let (o_c, o_gv, o_gp, o_rr) = (nup, nup + s * s, nup + s * s + s, nup + s * s + 2 * s);
+    let mut packed = vec![0.0; o_rr + 1];
+    let mut w_full = vec![0.0; s * s];
+    let mut l_prev = vec![0.0; s * s]; // Cholesky factor of W_prev
+    let mut l = vec![0.0; s * s];
+    let mut b_mat = vec![0.0; s * s];
+    let mut coef = vec![0.0; s];
+    let mut col = vec![0.0; s];
+    let mut y = vec![0.0; s];
+    let mut thetas = vec![0.0; s];
+
+    r.data.copy_from_slice(b_own);
+    if newton {
+        newton_shifts(a, m, comm, s, &mut ext.data, &mut t.data, &mut thetas);
+    }
+
+    let tol2 = opts.tol * opts.tol;
+    let mut history = Vec::new();
+    let mut iters = 0usize;
+    let mut outer = 0usize;
+    let mut replacements = 0usize;
+    let mut consec_drift = 0usize;
+    let mut fell_back = false;
+    let mut have_prev = false;
+    let mut rr = f64::INFINITY;
+
+    // rsla-lint: no_alloc
+    while iters < opts.max_iters {
+        // ---- basis block: s applies, no communication beyond halos
+        m.apply(&r, &mut v.data[..n]);
+        for i in 0..s {
+            ext.data[..n].copy_from_slice(&v[i * n..(i + 1) * n]);
+            ext.data[n..].fill(0.0);
+            a.apply(&mut ext, &mut t);
+            av.data[i * n..(i + 1) * n].copy_from_slice(&t);
+            if i + 1 < s {
+                let (lo, hi) = v.data.split_at_mut((i + 1) * n);
+                m.apply(&t, &mut hi[..n]);
+                if thetas[i] != 0.0 {
+                    let th = thetas[i];
+                    let prev = &lo[i * n..(i + 1) * n];
+                    for (vn, &vp) in hi[..n].iter_mut().zip(prev) {
+                        *vn -= th * vp;
+                    }
+                }
+            }
+        }
+        // ---- the ONE packed reduction round of this outer step
+        kernels::gram_upper(&v, &av, n, s, &mut packed[..nup]);
+        if have_prev {
+            kernels::gram_cross(&ap, &v, n, s, &mut packed[o_c..o_gv]);
+            kernels::block_dot_vec(&p, n, s, &r, &mut packed[o_gp..o_rr]);
+        } else {
+            packed[o_c..o_gv].fill(0.0);
+            packed[o_gp..o_rr].fill(0.0);
+        }
+        kernels::block_dot_vec(&v, n, s, &r, &mut packed[o_gv..o_gp]);
+        packed[o_rr] = crate::util::dot(&r, &r);
+        comm.all_reduce(&mut packed);
+        rr = packed[o_rr];
+        if opts.record_history {
+            history.push(rr.sqrt());
+        }
+        ct.record_sq(rr);
+        if rr <= tol2 {
+            break;
+        }
+        // unpack sym(G) from the upper triangle
+        {
+            let mut k = 0;
+            for i in 0..s {
+                for j in i..s {
+                    w_full[i * s + j] = packed[k];
+                    w_full[j * s + i] = packed[k];
+                    k += 1;
+                }
+            }
+        }
+        if have_prev {
+            // B = -W_prev^-1 C, column by column through the cached
+            // Cholesky factor of W_prev
+            for j in 0..s {
+                for i in 0..s {
+                    col[i] = packed[o_c + i * s + j];
+                }
+                chol_solve(&l_prev, s, &mut col, &mut y);
+                for i in 0..s {
+                    b_mat[i * s + j] = -col[i];
+                }
+            }
+            // W = sym(G + C^T B): the B^T W_prev B term cancels B^T C
+            // exactly (W_prev B = -C), so only the cross term remains.
+            for i in 0..s {
+                for j in i..s {
+                    let mut cij = 0.0;
+                    for k in 0..s {
+                        cij += packed[o_c + k * s + i] * b_mat[k * s + j];
+                    }
+                    let wij = w_full[i * s + j] + cij;
+                    w_full[i * s + j] = wij;
+                    w_full[j * s + i] = wij;
+                }
+            }
+            // g = gV + B^T gP
+            for j in 0..s {
+                let mut gj = packed[o_gv + j];
+                for k in 0..s {
+                    gj += b_mat[k * s + j] * packed[o_gp + k];
+                }
+                coef[j] = gj;
+            }
+            kernels::block_combine(&v, &p, &b_mat, n, s, &mut pn.data);
+            kernels::block_combine(&av, &ap, &b_mat, n, s, &mut apn.data);
+            std::mem::swap(&mut p.data, &mut pn.data);
+            std::mem::swap(&mut ap.data, &mut apn.data);
+        } else {
+            p.data.copy_from_slice(&v);
+            ap.data.copy_from_slice(&av);
+            coef.copy_from_slice(&packed[o_gv..o_gp]);
+        }
+        if !chol_factor(&w_full, s, &mut l) {
+            // numerically rank-deficient basis block: stop advancing
+            // the s-step recurrence and finish under standard CG
+            fell_back = true;
+            ct.breakdown(iters);
+            break;
+        }
+        chol_solve(&l, s, &mut coef, &mut y);
+        kernels::block_update_xr(&p, &ap, n, s, &coef, &mut x.data, &mut r.data);
+        l_prev.copy_from_slice(&l);
+        have_prev = true;
+        iters += s;
+        outer += 1;
+        // ---- residual-replacement guard: one apply + one 2-scalar round
+        if ca.guard_every != 0 && outer % ca.guard_every == 0 {
+            ext.data[..n].copy_from_slice(&x);
+            ext.data[n..].fill(0.0);
+            a.apply(&mut ext, &mut t);
+            for (ti, &bi) in t.data.iter_mut().zip(b_own) {
+                *ti = bi - *ti;
+            }
+            let mut tr = [crate::util::dot(&t, &t), crate::util::dot(&r, &r)];
+            comm.all_reduce(&mut tr);
+            let drift = ca.guard_factor <= 0.0 || tr[0].sqrt() > ca.guard_factor * tr[1].sqrt();
+            if drift {
+                consec_drift += 1;
+                replacements += 1;
+                trace::event(tn::KRYLOV_CA_REPLACE, outer as u64);
+                r.data.copy_from_slice(&t);
+                have_prev = false; // restart conjugation after replacement
+                if consec_drift >= 2 {
+                    fell_back = true;
+                    break;
+                }
+            } else {
+                consec_drift = 0;
+            }
+        }
+    }
+
+    if fell_back {
+        trace::event(tn::KRYLOV_CA_FALLBACK, iters as u64);
+        // finish from the current iterate: solve A dx = b - A x with
+        // standard CG and add the correction
+        ext.data[..n].copy_from_slice(&x);
+        ext.data[n..].fill(0.0);
+        a.apply(&mut ext, &mut t);
+        for (ti, &bi) in t.data.iter_mut().zip(b_own) {
+            *ti = bi - *ti;
+        }
+        let sub = super::cg(
+            a,
+            &t,
+            m,
+            comm,
+            &IterOpts {
+                tol: opts.tol,
+                max_iters: opts.max_iters.saturating_sub(iters),
+                record_history: opts.record_history,
+            },
+            Some(mem),
+        );
+        for (xi, &di) in x.data.iter_mut().zip(&sub.x) {
+            *xi += di;
+        }
+        iters += sub.iters;
+        rr = sub.residual * sub.residual;
+        history.extend(sub.history);
+    }
+
+    ct.finish(iters, rr.sqrt(), rr <= tol2);
+    CaCgResult {
+        iter: IterResult {
+            x: x.take(),
+            iters,
+            residual: rr.sqrt(),
+            converged: rr <= tol2,
+            breakdown: false,
+            history,
+        },
+        outer_steps: outer,
+        replacements,
+        fell_back,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::iterative::precond::Jacobi;
+    use crate::krylov::{cg, NullComm};
+    use crate::sparse::poisson::{kappa_star, poisson2d};
+    use crate::util::{self, Prng};
+
+    fn setup(g: usize, seed: u64) -> (crate::sparse::poisson::PoissonSystem, Vec<f64>, Jacobi) {
+        let sys = poisson2d(g, Some(&kappa_star(g)));
+        let mut rng = Prng::new(seed);
+        let b = rng.normal_vec(g * g);
+        let m = Jacobi::new(&sys.matrix).unwrap();
+        (sys, b, m)
+    }
+
+    #[test]
+    fn ca_cg_matches_standard_cg_for_small_s() {
+        let (sys, b, m) = setup(16, 0);
+        let std = cg(&sys.matrix, &b, &m, &NullComm, &IterOpts::default(), None);
+        for s in [2usize, 4] {
+            let ca = ca_cg(
+                &sys.matrix,
+                &b,
+                &m,
+                &NullComm,
+                &IterOpts::default(),
+                &CaCgOpts {
+                    s,
+                    ..Default::default()
+                },
+                None,
+            );
+            assert!(ca.iter.converged, "s={s}: {}", ca.iter.residual);
+            assert!(!ca.fell_back, "s={s} should not need the fallback");
+            assert!(util::rel_l2(&ca.iter.x, &std.x) < 1e-6, "s={s}");
+            // same Krylov space: iteration counts agree within one block
+            assert!(
+                (ca.iter.iters as i64 - std.iters as i64).abs() <= s as i64,
+                "s={s}: iters {} vs std {}",
+                ca.iter.iters,
+                std.iters
+            );
+            // round structure: outer steps ~= iters / s
+            assert_eq!(ca.outer_steps, ca.iter.iters.div_ceil(s));
+        }
+    }
+
+    #[test]
+    fn ca_cg_newton_basis_holds_at_s8() {
+        let (sys, b, m) = setup(24, 3);
+        let std = cg(&sys.matrix, &b, &m, &NullComm, &IterOpts::default(), None);
+        // Auto resolves to Newton at s=8
+        let ca = ca_cg(
+            &sys.matrix,
+            &b,
+            &m,
+            &NullComm,
+            &IterOpts::default(),
+            &CaCgOpts {
+                s: 8,
+                ..Default::default()
+            },
+            None,
+        );
+        assert!(ca.iter.converged);
+        assert!(util::rel_l2(&sys.matrix.matvec(&ca.iter.x), &b) < 1e-8);
+        assert!(
+            ca.iter.iters <= std.iters + 16,
+            "newton basis at s=8 must stay near CG's iteration count: {} vs {}",
+            ca.iter.iters,
+            std.iters
+        );
+    }
+
+    #[test]
+    fn ca_cg_is_bitwise_deterministic_across_runs() {
+        let (sys, b, m) = setup(12, 5);
+        let run = || {
+            ca_cg(
+                &sys.matrix,
+                &b,
+                &m,
+                &NullComm,
+                &IterOpts::default(),
+                &CaCgOpts::default(),
+                None,
+            )
+        };
+        let (a1, a2) = (run(), run());
+        assert_eq!(a1.iter.iters, a2.iter.iters);
+        for (p, q) in a1.iter.x.iter().zip(&a2.iter.x) {
+            assert_eq!(p.to_bits(), q.to_bits());
+        }
+    }
+
+    #[test]
+    fn forced_guard_replaces_then_falls_back_and_still_converges() {
+        let (sys, b, m) = setup(16, 7);
+        let ca = ca_cg(
+            &sys.matrix,
+            &b,
+            &m,
+            &NullComm,
+            &IterOpts::default(),
+            &CaCgOpts {
+                s: 4,
+                guard_every: 2,
+                guard_factor: 0.0, // force the drift verdict every check
+                ..Default::default()
+            },
+            None,
+        );
+        assert!(ca.fell_back, "forced guard must trip the fallback");
+        assert_eq!(ca.replacements, 2, "two consecutive drifts then fallback");
+        assert!(ca.iter.converged, "fallback CG must still converge");
+        assert!(util::rel_l2(&sys.matrix.matvec(&ca.iter.x), &b) < 1e-8);
+    }
+
+    #[test]
+    fn ca_cg_respects_iteration_budget() {
+        let (sys, b, m) = setup(24, 9);
+        let ca = ca_cg(
+            &sys.matrix,
+            &b,
+            &m,
+            &NullComm,
+            &IterOpts {
+                tol: 1e-14,
+                max_iters: 12,
+                record_history: true,
+            },
+            &CaCgOpts::default(),
+            None,
+        );
+        assert!(!ca.iter.converged);
+        assert!(ca.iter.iters <= 12 + 4, "budget overshoot bounded by one block");
+        assert!(ca.iter.history.iter().all(|h| h.is_finite()));
+    }
+}

@@ -22,6 +22,13 @@ pub trait Communicator {
     /// the team-wide elementwise sum.  One call is ONE reduction round
     /// (one latency unit) regardless of `xs.len()` — NCCL expresses
     /// this as a single all_reduce over a packed buffer.
+    ///
+    /// Reduction order is part of the contract: implementations MUST
+    /// fold per-rank contributions in rank-ascending order
+    /// (`((c0 + c1) + c2) + ...`), never arrival order, so a solve's
+    /// floating-point trajectory is transport-independent — [`NullComm`]
+    /// trivially (one rank), `LocalComm`/`ProcComm` pinned bitwise in
+    /// `distributed::comm` and `tests/proc_comm.rs`.
     fn all_reduce(&self, xs: &mut [f64]);
 
     /// Scalar convenience over [`Communicator::all_reduce`].

@@ -21,6 +21,10 @@
 //!   packed into one fused round (Appendix C, Algorithm 1).
 //! * [`cg_pipelined`] — Chronopoulos–Gear CG: ONE fused round per
 //!   iteration (`<r,u>`, `<w,u>`, `<r,r>` packed).
+//! * [`ca_cg`] — s-step communication-avoiding CG: ONE packed round per
+//!   OUTER step of `s` iterations (the whole Gram structure rides a
+//!   single all_reduce), ~`1/s` rounds per iteration, with a
+//!   residual-replacement guard that falls back to [`cg`] on drift.
 //! * [`bicgstab`] — five rounds (`<t,t>`/`<t,s>` ride one fused round).
 //! * [`gmres`] / [`minres`] / [`lobpcg`] — one round per inner product
 //!   (the Gram–Schmidt/Lanczos recurrences are sequential).
@@ -33,6 +37,7 @@
 //! behavior-pinning unit tests).
 
 pub mod bicgstab;
+pub mod ca_cg;
 pub mod cg;
 pub mod comm;
 pub mod gmres;
@@ -41,6 +46,7 @@ pub mod minres;
 pub mod op;
 
 pub use bicgstab::bicgstab;
+pub use ca_cg::{ca_cg, CaBasis, CaCgOpts, CaCgResult};
 pub use cg::{cg, cg_pipelined};
 pub use comm::{Communicator, NullComm};
 pub use gmres::gmres;

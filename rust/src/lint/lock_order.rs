@@ -13,6 +13,12 @@
 //!      |
 //!      v
 //!   tier 3   metrics::Registry             Registry.counters
+//!      |
+//!      v
+//!   tier 4   transport peer channels       ProcComm.peer_streams
+//!      |
+//!      v
+//!   tier 5   transport wait histogram      ProcComm.wait_hist
 //! ```
 //!
 //! Acquiring a *deeper* (higher-numbered) lock while holding a shallower
@@ -38,6 +44,8 @@ pub const TIERS: &[(&str, u8, &str)] = &[
     ("shards", 1, "CacheShards routing state (reserved)"),
     ("inner", 2, "factor_cache LRU: FactorCache.inner"),
     ("counters", 3, "metrics::Registry.counters"),
+    ("peer_streams", 4, "transport peer channels: ProcComm.peer_streams"),
+    ("wait_hist", 5, "transport wait histogram: ProcComm.wait_hist"),
 ];
 
 /// Call tokens that run caller-supplied code; no tracked guard may be

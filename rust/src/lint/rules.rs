@@ -27,6 +27,10 @@ pub const STRICT_INDEX_MODULES: &[&str] = &[
     "lint/",
     "trace/",
     "direct/",
+    // the process-transport wire/ring/socket code parses untrusted
+    // bytes; a panic there kills a worker mid-collective and wedges
+    // the whole rank team
+    "distributed/transport/",
 ];
 
 const L1_TOKENS: &[&str] = &[

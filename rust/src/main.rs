@@ -180,6 +180,10 @@ fn dispatcher(accel: bool) -> Arc<Dispatcher> {
 }
 
 fn main() {
+    // process-transport worker re-exec: if the RSLA_PROC_* environment
+    // marks this invocation as a rank-team worker, run the worker
+    // protocol and exit before touching the CLI
+    rsla::distributed::maybe_run_worker();
     let args = parse_args();
     match args.cmd.as_str() {
         "backends" => cmd_backends(),
@@ -199,7 +203,9 @@ fn main() {
                  \x20 serve-sim [--requests N] [--workers W] [--mixed] [--trace PATH]\n\
                  \x20 trace [--out PATH] [--requests N] [--workers W]\n\
                  \x20 metrics [--requests N] [--workers W]\n\
-                 \x20 dist --g G --ranks P"
+                 \x20 dist --g G --ranks P [--precond jacobi|amg]\n\
+                 \x20      [--method cg|pipelined|ca] [--s S]\n\
+                 \x20      [--backend local|proc] [--transport shm|socket]"
             );
         }
     }
@@ -522,6 +528,8 @@ fn run_mixed_quiet(requests: usize, workers: usize) -> usize {
 }
 
 fn cmd_dist(args: &Args) {
+    use rsla::distributed::{CommBackend, DistMethod, ProcOpts, TransportKind};
+
     let g = args.usize_or("g", 128);
     let ranks = args.usize_or("ranks", 4);
     // --precond jacobi (default, paper parity) | amg (block additive Schwarz)
@@ -529,6 +537,27 @@ fn cmd_dist(args: &Args) {
         Some("amg") => rsla::distributed::DistPrecondKind::BlockAmg,
         _ => rsla::distributed::DistPrecondKind::Jacobi,
     };
+    // --method cg (default) | pipelined | ca [--s S]
+    let method = match args.kv.get("method").map(|s| s.as_str()) {
+        Some("pipelined") => DistMethod::CgPipelined,
+        Some("ca") => DistMethod::CaCg {
+            s: args.usize_or("s", 4),
+        },
+        _ => DistMethod::Auto,
+    };
+    // --backend local (thread ranks) | proc (worker processes over
+    // shm rings, or a socket mesh with --transport socket)
+    let backend = match args.kv.get("backend").map(|s| s.as_str()) {
+        Some("proc") => CommBackend::Proc(ProcOpts {
+            kind: match args.kv.get("transport").map(|s| s.as_str()) {
+                Some("socket") => TransportKind::Socket,
+                _ => TransportKind::Shm,
+            },
+            ..ProcOpts::default()
+        }),
+        _ => CommBackend::Local,
+    };
+    let is_proc = matches!(backend, CommBackend::Proc(_));
     let sys = poisson2d(g, None);
     let t = DSparseTensor::from_global(&sys.matrix, Some(&sys.coords), ranks, PartitionStrategy::Rcb)
         .expect("partition");
@@ -536,9 +565,20 @@ fn cmd_dist(args: &Args) {
     let b = rng.normal_vec(g * g);
     let opts = DistIterOpts {
         precond,
+        method,
+        backend,
         ..Default::default()
     };
-    let ((x, reports), secs) = timed(|| t.solve(&b, &opts).unwrap());
+    let (outcome, secs) = timed(|| t.solve(&b, &opts));
+    let (x, reports) = match outcome {
+        Ok(pair) => pair,
+        // the typed dead-rank error is the headline feature of the
+        // process backend: show it rather than panicking
+        Err(e) => {
+            eprintln!("dist solve failed: {e}");
+            std::process::exit(1);
+        }
+    };
     let res = {
         let ax = sys.matrix.matvec(&x);
         b.iter()
@@ -549,14 +589,17 @@ fn cmd_dist(args: &Args) {
     };
     let iters = reports[0].iters.max(1);
     println!(
-        "dist-cg g={g} n={} ranks={ranks} iters={} residual={:.2e} time={:.1} ms",
+        "dist-{} g={g} n={} ranks={ranks} backend={} iters={} residual={:.2e} time={:.1} ms",
+        reports[0].method,
         g * g,
+        if is_proc { "proc" } else { "local" },
         reports[0].iters,
         res,
         secs * 1e3
     );
     println!(
-        "  reductions: {} rounds total ({:.2} rounds/iter — Algorithm 1 pins 2 for standard CG)",
+        "  reductions: {} rounds total ({:.2} rounds/iter — Algorithm 1 pins 2 for standard CG; \
+         pipelined 1; CA-CG ~1/s)",
         reports[0].reduce_rounds,
         reports[0].reduce_rounds as f64 / iters as f64,
     );
@@ -566,6 +609,29 @@ fn cmd_dist(args: &Args) {
             r.peak_bytes as f64 / 1e6,
             r.bytes_sent as f64 / 1e6,
             r.bytes_sent as f64 / iters as f64 / 1e3,
+        );
+        if is_proc {
+            println!(
+                "          wire: {:.2} MB in {} msgs, doorbell waits {} \
+                 (p50 {:.0} us, p99 {:.0} us, max {:.0} us)",
+                r.transport.wire_bytes as f64 / 1e6,
+                r.transport.wire_msgs,
+                r.transport.doorbell_waits,
+                r.transport.doorbell_p50_us,
+                r.transport.doorbell_p99_us,
+                r.transport.doorbell_max_us,
+            );
+        }
+    }
+    if is_proc {
+        let snap = merged_snapshot(&[rsla::metrics::Registry::global()]);
+        println!(
+            "  transport counters: teams={} rounds={} wire_bytes={} doorbell_waits={} dead_ranks={}",
+            counter(&snap, "comm.transport.teams"),
+            counter(&snap, "comm.transport.rounds"),
+            counter(&snap, "comm.transport.wire_bytes"),
+            counter(&snap, "comm.transport.doorbell_waits"),
+            counter(&snap, "comm.transport.dead_ranks"),
         );
     }
 }

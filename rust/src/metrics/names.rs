@@ -71,6 +71,25 @@ pub const SPMV_FORMAT_CSR: &str = "spmv.format.csr";
 /// Matrices the roofline cost model converted to SELL-C-σ.
 pub const SPMV_FORMAT_SELL: &str = "spmv.format.sell";
 
+/// CA-CG residual replacements (drift guard rebuilt the true residual).
+pub const KRYLOV_CA_REPLACEMENTS: &str = "krylov.ca.replacements";
+/// CA-CG runs that abandoned the s-step recurrence for standard CG.
+pub const KRYLOV_CA_FALLBACKS: &str = "krylov.ca.fallbacks";
+
+/// Process rank teams launched by the transport layer.
+pub const COMM_TRANSPORT_TEAMS: &str = "comm.transport.teams";
+/// Worker processes that died (or went silent) before reporting.
+pub const COMM_TRANSPORT_DEAD_RANKS: &str = "comm.transport.dead_ranks";
+/// Team-wide reduction rounds completed over a process transport.
+pub const COMM_TRANSPORT_ROUNDS: &str = "comm.transport.rounds";
+/// Wire bytes sent across all worker endpoints (frames + headers; the
+/// algorithmic `bytes_sent` halo accounting is separate and
+/// backend-independent).
+pub const COMM_TRANSPORT_WIRE_BYTES: &str = "comm.transport.wire_bytes";
+/// Doorbell waits recorded across all worker endpoints (a blocked poll
+/// on a ring or socket that had nothing to deliver yet).
+pub const COMM_TRANSPORT_DOORBELL_WAITS: &str = "comm.transport.doorbell_waits";
+
 /// Base for per-backend refusal counters (`dispatch.refused.{backend}`).
 pub const DISPATCH_REFUSED: &str = "dispatch.refused";
 /// Base for per-backend success counters (`dispatch.solved.{backend}`).
@@ -106,6 +125,13 @@ pub const ALL: &[&str] = &[
     FACTOR_PANEL_FLOPS,
     SPMV_FORMAT_CSR,
     SPMV_FORMAT_SELL,
+    KRYLOV_CA_REPLACEMENTS,
+    KRYLOV_CA_FALLBACKS,
+    COMM_TRANSPORT_TEAMS,
+    COMM_TRANSPORT_DEAD_RANKS,
+    COMM_TRANSPORT_ROUNDS,
+    COMM_TRANSPORT_WIRE_BYTES,
+    COMM_TRANSPORT_DOORBELL_WAITS,
     DISPATCH_REFUSED,
     DISPATCH_SOLVED,
     DISPATCH_FAILED,

@@ -330,6 +330,108 @@ fn spmv_block_any(a: &Csr, x: &[f64], y: &mut [f64], k: usize) {
     }
 }
 
+// ---------------------------------------------------------------------
+// CA-CG block-basis kernels.  Column-major blocks (`s` columns of
+// length `n`, column `j` at `v[j*n..(j+1)*n]`).  Every reduction entry
+// is a `util::dot` over contiguous columns — the pinned 4-accumulator
+// schedule — so the packed Gram construction of `krylov::ca_cg` is
+// bitwise identical to per-column `dot` loops (pinned by tests below).
+
+/// Upper triangle of `V^T AV` in row-major packed order
+/// (`(0,0),(0,1),..,(0,s-1),(1,1),..`): `out` must have length
+/// `s*(s+1)/2`.
+// rsla-lint: no_alloc
+pub fn gram_upper(v: &[f64], av: &[f64], n: usize, s: usize, out: &mut [f64]) {
+    debug_assert_eq!(v.len(), n * s);
+    debug_assert_eq!(av.len(), n * s);
+    debug_assert_eq!(out.len(), s * (s + 1) / 2);
+    let mut k = 0;
+    for i in 0..s {
+        for j in i..s {
+            out[k] = dot(&v[i * n..(i + 1) * n], &av[j * n..(j + 1) * n]);
+            k += 1;
+        }
+    }
+}
+
+/// Full cross-Gram `U^T V` row-major (`out[i*s + j] = <u_i, v_j>`);
+/// `out` must have length `s*s`.
+// rsla-lint: no_alloc
+pub fn gram_cross(u: &[f64], v: &[f64], n: usize, s: usize, out: &mut [f64]) {
+    debug_assert_eq!(u.len(), n * s);
+    debug_assert_eq!(v.len(), n * s);
+    debug_assert_eq!(out.len(), s * s);
+    for i in 0..s {
+        for j in 0..s {
+            out[i * s + j] = dot(&u[i * n..(i + 1) * n], &v[j * n..(j + 1) * n]);
+        }
+    }
+}
+
+/// Block projection `out[j] = <v_j, r>` for each column of `v`.
+// rsla-lint: no_alloc
+pub fn block_dot_vec(v: &[f64], n: usize, s: usize, r: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(v.len(), n * s);
+    debug_assert_eq!(r.len(), n);
+    debug_assert_eq!(out.len(), s);
+    for j in 0..s {
+        out[j] = dot(&v[j * n..(j + 1) * n], r);
+    }
+}
+
+/// Block combine `out = v + pprev * bmat` (column-major blocks, `bmat`
+/// row-major `s x s`): `out[:,j] = v[:,j] + sum_k bmat[k*s+j] *
+/// pprev[:,k]`.  Streams each `pprev` column once; the accumulation
+/// order over `k` is fixed (ascending), part of the deterministic
+/// CA-CG schedule.
+// rsla-lint: no_alloc
+pub fn block_combine(v: &[f64], pprev: &[f64], bmat: &[f64], n: usize, s: usize, out: &mut [f64]) {
+    debug_assert_eq!(v.len(), n * s);
+    debug_assert_eq!(pprev.len(), n * s);
+    debug_assert_eq!(bmat.len(), s * s);
+    debug_assert_eq!(out.len(), n * s);
+    out.copy_from_slice(v);
+    for j in 0..s {
+        let oj = &mut out[j * n..(j + 1) * n];
+        for k in 0..s {
+            let c = bmat[k * s + j];
+            let pk = &pprev[k * n..(k + 1) * n];
+            for (o, &p) in oj.iter_mut().zip(pk) {
+                *o += c * p;
+            }
+        }
+    }
+}
+
+/// Fused block iterate update: `x += P a`, `r -= AP a` in one pass per
+/// column pair.  The column order (ascending `j`) is part of the
+/// deterministic CA-CG schedule.
+// rsla-lint: no_alloc
+pub fn block_update_xr(
+    p: &[f64],
+    ap: &[f64],
+    n: usize,
+    s: usize,
+    coef: &[f64],
+    x: &mut [f64],
+    r: &mut [f64],
+) {
+    debug_assert_eq!(p.len(), n * s);
+    debug_assert_eq!(ap.len(), n * s);
+    debug_assert_eq!(coef.len(), s);
+    debug_assert_eq!(x.len(), n);
+    debug_assert_eq!(r.len(), n);
+    for j in 0..s {
+        let c = coef[j];
+        let pj = &p[j * n..(j + 1) * n];
+        let apj = &ap[j * n..(j + 1) * n];
+        for i in 0..n {
+            x[i] += c * pj[i];
+            r[i] -= c * apj[i];
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -422,6 +524,73 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn gram_kernels_are_bitwise_per_column_dots() {
+        let mut rng = Prng::new(16);
+        for (n, s) in [(7usize, 2usize), (64, 4), (129, 8)] {
+            let v = rng.normal_vec(n * s);
+            let av = rng.normal_vec(n * s);
+            let r = rng.normal_vec(n);
+            let mut up = vec![0.0; s * (s + 1) / 2];
+            gram_upper(&v, &av, n, s, &mut up);
+            let mut k = 0;
+            for i in 0..s {
+                for j in i..s {
+                    let want = dot(&v[i * n..(i + 1) * n], &av[j * n..(j + 1) * n]);
+                    assert_eq!(bits(up[k]), bits(want), "upper ({i},{j})");
+                    k += 1;
+                }
+            }
+            let mut cross = vec![0.0; s * s];
+            gram_cross(&av, &v, n, s, &mut cross);
+            for i in 0..s {
+                for j in 0..s {
+                    let want = dot(&av[i * n..(i + 1) * n], &v[j * n..(j + 1) * n]);
+                    assert_eq!(bits(cross[i * s + j]), bits(want), "cross ({i},{j})");
+                }
+            }
+            let mut proj = vec![0.0; s];
+            block_dot_vec(&v, n, s, &r, &mut proj);
+            for (j, &p) in proj.iter().enumerate() {
+                assert_eq!(bits(p), bits(dot(&v[j * n..(j + 1) * n], &r)), "proj {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_combine_and_update_match_naive_loops() {
+        let mut rng = Prng::new(17);
+        let (n, s) = (53usize, 4usize);
+        let v = rng.normal_vec(n * s);
+        let pprev = rng.normal_vec(n * s);
+        let bmat = rng.normal_vec(s * s);
+        let coef = rng.normal_vec(s);
+        let mut out = vec![0.0; n * s];
+        block_combine(&v, &pprev, &bmat, n, s, &mut out);
+        for j in 0..s {
+            for i in 0..n {
+                let mut want = v[j * n + i];
+                for k in 0..s {
+                    want += bmat[k * s + j] * pprev[k * n + i];
+                }
+                assert_eq!(bits(out[j * n + i]), bits(want), "combine ({i},{j})");
+            }
+        }
+        let mut x = rng.normal_vec(n);
+        let mut r = rng.normal_vec(n);
+        let (x0, r0) = (x.clone(), r.clone());
+        block_update_xr(&v, &pprev, n, s, &coef, &mut x, &mut r);
+        for i in 0..n {
+            let (mut xw, mut rw) = (x0[i], r0[i]);
+            for j in 0..s {
+                xw += coef[j] * v[j * n + i];
+                rw -= coef[j] * pprev[j * n + i];
+            }
+            assert_eq!(bits(x[i]), bits(xw), "x {i}");
+            assert_eq!(bits(r[i]), bits(rw), "r {i}");
         }
     }
 }

@@ -61,6 +61,14 @@ pub const KRYLOV_BICGSTAB: &str = "krylov.bicgstab";
 pub const KRYLOV_GMRES: &str = "krylov.gmres";
 /// Span: one MINRES solve.
 pub const KRYLOV_MINRES: &str = "krylov.minres";
+/// Span: one s-step communication-avoiding CG solve.
+pub const KRYLOV_CA_CG: &str = "krylov.ca_cg";
+/// Instant: the CA-CG drift guard replaced the recurrence residual with
+/// the true residual (arg = outer step).
+pub const KRYLOV_CA_REPLACE: &str = "krylov.ca_cg.replace";
+/// Instant: CA-CG abandoned the s-step recurrence and fell back to
+/// standard CG (arg = iterations already spent).
+pub const KRYLOV_CA_FALLBACK: &str = "krylov.ca_cg.fallback";
 /// Instant: a Krylov recurrence broke down (arg = iteration).
 pub const KRYLOV_BREAKDOWN: &str = "krylov.breakdown";
 /// Instant: GMRES restarted its basis (arg = restart ordinal).
@@ -71,6 +79,9 @@ pub const KRYLOV_RESTART: &str = "krylov.restart";
 /// Convergence record: one per-rank distributed solve, carrying the
 /// reduction-round and halo-byte deltas of that solve.
 pub const DIST_SOLVE: &str = "dist.solve";
+/// Span: lifetime of one process-separated rank team, spawn through
+/// reap (arg = team size).
+pub const COMM_TEAM: &str = "comm.team";
 /// Span: one backend dispatch through `NativeIter::solve`.
 pub const BACKEND_SOLVE: &str = "backend.solve";
 
@@ -96,9 +107,13 @@ pub const ALL: &[&str] = &[
     KRYLOV_BICGSTAB,
     KRYLOV_GMRES,
     KRYLOV_MINRES,
+    KRYLOV_CA_CG,
+    KRYLOV_CA_REPLACE,
+    KRYLOV_CA_FALLBACK,
     KRYLOV_BREAKDOWN,
     KRYLOV_RESTART,
     DIST_SOLVE,
+    COMM_TEAM,
     BACKEND_SOLVE,
 ];
 

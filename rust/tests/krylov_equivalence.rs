@@ -16,16 +16,27 @@
 
 use std::sync::Arc;
 
-use rsla::distributed::{
-    dist_bicgstab, dist_cg, dist_cg_pipelined, dist_gmres, dist_minres, dist_solve_adjoint,
-    run_ranks, DistCsr, DistIterOpts,
-};
 use rsla::distributed::halo::distribute;
 use rsla::distributed::partition::{partition, Partition, PartitionStrategy};
+use rsla::distributed::{
+    dist_bicgstab, dist_cg, dist_cg_ca, dist_cg_pipelined, dist_gmres, dist_minres,
+    dist_solve_adjoint, run_ranks, CommBackend, DSparseTensor, DistCsr, DistIterOpts, ProcOpts,
+    TransportKind,
+};
 use rsla::iterative::{bicgstab, cg, IterOpts, Jacobi, LinOp, Precond};
+use rsla::krylov::CaCgOpts;
 use rsla::sparse::poisson::{kappa_star, poisson2d};
 use rsla::sparse::{Coo, Csr};
 use rsla::util::{self, axpy_inplace, dot, xpby_inplace, Prng};
+
+/// Worker re-exec target for the process-backend tests below: spawned
+/// rank-team children run this binary as
+/// `krylov_equivalence proc_worker_entry --exact`.  The call exits the
+/// process when the worker env is present and is a no-op otherwise.
+#[test]
+fn proc_worker_entry() {
+    rsla::distributed::maybe_run_worker();
+}
 
 // ------------------------------------------------------------------
 // 1. Frozen pre-refactor serial reference loops
@@ -355,6 +366,148 @@ fn dist_bicgstab_matches_serial_across_rank_counts() {
         });
         let x: Vec<f64> = reports.iter().flat_map(|r| r.x_own.clone()).collect();
         assert!(util::rel_l2(&x, &x_ref) < 1e-6, "ranks={nparts}");
+    }
+}
+
+// ------------------------------------------------------------------
+// 3. s-step CA-CG parity and the communication-avoiding contract
+// ------------------------------------------------------------------
+
+#[test]
+fn ca_cg_matches_standard_cg_across_rank_counts_and_block_sizes() {
+    let g = 16;
+    for nparts in [1usize, 2, 4] {
+        let (a_perm, part, shares) = dist_setup(g, nparts, 0.0);
+        let mut rng = Prng::new(100 + nparts as u64);
+        let b = Arc::new(rng.normal_vec(g * g));
+        let x_ref = rsla::direct::direct_solve(&a_perm, &b).unwrap();
+        let part = Arc::new(part);
+
+        let (bc, p2, ps) = (b.clone(), part.clone(), shares.clone());
+        let std_reports = run_ranks(nparts, move |c| {
+            let p = c.rank();
+            let range = p2.rank_range(p);
+            let opts = DistIterOpts {
+                tol: 1e-9,
+                ..Default::default()
+            };
+            dist_cg(&ps[p], &bc[range], &c, &opts)
+        });
+        assert!(std_reports.iter().all(|r| r.converged));
+        let std_iters = std_reports[0].iters;
+        let std_rounds = std_reports[0].reduce_rounds;
+
+        for s in [2usize, 4, 8] {
+            let (bc, p2, ps) = (b.clone(), part.clone(), shares.clone());
+            let reports = run_ranks(nparts, move |c| {
+                let p = c.rank();
+                let range = p2.rank_range(p);
+                let opts = DistIterOpts {
+                    tol: 1e-9,
+                    ..Default::default()
+                };
+                let ca = CaCgOpts {
+                    s,
+                    ..Default::default()
+                };
+                dist_cg_ca(&ps[p], &bc[range], &c, &opts, &ca)
+            });
+            assert!(
+                reports.iter().all(|r| r.converged),
+                "ranks={nparts} s={s}: CA-CG did not converge"
+            );
+            // convergence parity: same tolerance, same solution, and an
+            // iterate count within one-ish block of standard CG (the
+            // monomial basis can only overshoot to an outer-step
+            // boundary plus mild finite-precision drift)
+            let x: Vec<f64> = reports.iter().flat_map(|r| r.x_own.clone()).collect();
+            assert!(
+                util::rel_l2(&x, &x_ref) < 1e-6,
+                "ranks={nparts} s={s}: CA-CG solution diverged"
+            );
+            let iters = reports[0].iters;
+            assert!(
+                iters <= std_iters + 4 * s,
+                "ranks={nparts} s={s}: CA-CG needed {iters} iters vs standard {std_iters}"
+            );
+            // the communication-avoiding contract: the packed per-outer
+            // reduction must cut rounds >= 2x vs standard CG's 2/iter
+            // (true for every s >= 2, basis-setup overhead included)
+            assert!(
+                2 * reports[0].reduce_rounds <= std_rounds,
+                "ranks={nparts} s={s}: rounds {} vs standard {std_rounds} — not a 2x cut",
+                reports[0].reduce_rounds
+            );
+            // every rank agrees on the round count (it is a collective)
+            assert!(reports
+                .iter()
+                .all(|r| r.reduce_rounds == reports[0].reduce_rounds));
+        }
+    }
+}
+
+#[test]
+fn ca_cg_residual_replacement_guard_falls_back_and_still_converges() {
+    // `guard_factor <= 0` is the documented test hook: the drift check
+    // fires on every guarded outer step, which forces the replacement
+    // path and then the persistent-drift fallback to standard CG.  The
+    // solve must still converge to the right answer and the report must
+    // make the fallback observable.
+    let g = 16;
+    let nparts = 2;
+    let (a_perm, part, shares) = dist_setup(g, nparts, 0.0);
+    let mut rng = Prng::new(123);
+    let b = Arc::new(rng.normal_vec(g * g));
+    let x_ref = rsla::direct::direct_solve(&a_perm, &b).unwrap();
+    let part = Arc::new(part);
+    let (bc, p2, ps) = (b.clone(), part.clone(), shares.clone());
+    let reports = run_ranks(nparts, move |c| {
+        let p = c.rank();
+        let range = p2.rank_range(p);
+        let opts = DistIterOpts {
+            tol: 1e-9,
+            ..Default::default()
+        };
+        let ca = CaCgOpts {
+            s: 4,
+            guard_every: 1,
+            guard_factor: -1.0,
+            ..Default::default()
+        };
+        dist_cg_ca(&ps[p], &bc[range], &c, &opts, &ca)
+    });
+    assert!(reports.iter().all(|r| r.converged));
+    assert!(
+        reports.iter().all(|r| r.method == "ca-cg+fallback"),
+        "forced guard must surface as the fallback method, got {:?}",
+        reports[0].method
+    );
+    let x: Vec<f64> = reports.iter().flat_map(|r| r.x_own.clone()).collect();
+    assert!(util::rel_l2(&x, &x_ref) < 1e-6);
+}
+
+/// A `JobKind::Dist` process team with a rank injected to die must
+/// surface a TYPED error from the solve — never a hang: the liveness
+/// monitor reaps the team and blames the dead rank.
+#[test]
+fn dist_dead_rank_is_a_typed_error_not_a_hang() {
+    let sys = poisson2d(12, None);
+    let t = DSparseTensor::from_global(&sys.matrix, None, 4, PartitionStrategy::Contiguous)
+        .expect("partition");
+    let mut rng = Prng::new(7);
+    let b = rng.normal_vec(144);
+    let opts = DistIterOpts {
+        backend: CommBackend::Proc(ProcOpts {
+            fail_rank: Some(3),
+            timeout_ms: 60_000,
+            ..ProcOpts::for_tests(TransportKind::Shm)
+        }),
+        ..Default::default()
+    };
+    match t.solve(&b, &opts) {
+        Err(rsla::Error::RankDead { rank, .. }) => assert_eq!(rank, 3),
+        Err(other) => panic!("expected RankDead, got: {other}"),
+        Ok(_) => panic!("a dead rank must not produce a successful solve"),
     }
 }
 

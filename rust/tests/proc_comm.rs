@@ -1,0 +1,181 @@
+//! End-to-end suite for the PROCESS rank-team backend (`ProcComm`):
+//! a 4-rank solve over real worker processes must be bitwise-identical
+//! to the in-process `LocalComm` solve (the canonical rank-ascending
+//! reduction order at work), report identical algorithmic round counts,
+//! and a rank dying mid-solve must surface as a typed
+//! [`rsla::Error::RankDead`] through the engine — never a hang.
+
+use std::sync::Arc;
+
+use rsla::backend::Dispatcher;
+use rsla::distributed::{
+    CommBackend, DSparseTensor, DistIterOpts, DistMethod, PartitionStrategy, ProcOpts,
+    TransportKind,
+};
+use rsla::engine::{Engine, EngineConfig, JobSpec};
+use rsla::sparse::poisson::{kappa_star, poisson2d};
+use rsla::util::Prng;
+use rsla::Error;
+
+/// Worker re-exec target: spawned rank-team children run this test
+/// binary as `proc_comm proc_worker_entry --exact`, which lands here
+/// and hands control to the worker protocol (the call exits the
+/// process when the worker env is present, and is a no-op for a normal
+/// test run).
+#[test]
+fn proc_worker_entry() {
+    rsla::distributed::maybe_run_worker();
+}
+
+fn problem(g: usize) -> (DSparseTensor, Vec<f64>) {
+    let sys = poisson2d(g, Some(&kappa_star(g)));
+    let t = DSparseTensor::from_global(&sys.matrix, Some(&sys.coords), 4, PartitionStrategy::Rcb)
+        .expect("partition");
+    let mut rng = Prng::new(g as u64);
+    let b = rng.normal_vec(g * g);
+    (t, b)
+}
+
+fn opts_with(method: DistMethod, backend: CommBackend) -> DistIterOpts {
+    DistIterOpts {
+        tol: 1e-9,
+        method,
+        backend,
+        ..Default::default()
+    }
+}
+
+/// Acceptance pin: the 4-rank process-backend solve is bitwise
+/// identical to the thread-backend solve for standard CG, on both the
+/// shared-memory and the socket transport, with identical algorithmic
+/// accounting (iterations, reduction rounds, bytes sent per rank).
+#[test]
+fn four_rank_proc_solve_is_bitwise_identical_to_local() {
+    let (t, b) = problem(24);
+    let (x_local, rep_local) = t
+        .solve(&b, &opts_with(DistMethod::Cg, CommBackend::Local))
+        .expect("local solve");
+
+    for kind in [TransportKind::Shm, TransportKind::Socket] {
+        let popts = ProcOpts::for_tests(kind);
+        let (x_proc, rep_proc) = t
+            .solve(&b, &opts_with(DistMethod::Cg, CommBackend::Proc(popts)))
+            .expect("proc solve");
+        assert_eq!(rep_proc.len(), 4);
+        for (l, p) in rep_local.iter().zip(&rep_proc) {
+            assert_eq!(l.iters, p.iters, "{kind:?}: iteration counts diverged");
+            assert_eq!(
+                l.reduce_rounds, p.reduce_rounds,
+                "{kind:?}: ProcComm and LocalComm must report identical round counts"
+            );
+            assert_eq!(
+                l.bytes_sent, p.bytes_sent,
+                "{kind:?}: algorithmic halo-byte accounting diverged"
+            );
+        }
+        assert_eq!(x_local.len(), x_proc.len());
+        for (i, (l, p)) in x_local.iter().zip(&x_proc).enumerate() {
+            assert_eq!(
+                l.to_bits(),
+                p.to_bits(),
+                "{kind:?}: x[{i}] differs: local {l:e} vs proc {p:e}"
+            );
+        }
+        // physical transport stats exist only on the process backend
+        assert!(
+            rep_proc.iter().all(|r| r.transport.wire_msgs > 0),
+            "{kind:?}: proc ranks must report wire traffic"
+        );
+        assert!(
+            rep_local.iter().all(|r| r.transport.wire_msgs == 0),
+            "thread ranks must report zero wire traffic"
+        );
+    }
+}
+
+/// CA-CG rides the same transport: identical rounds and bitwise-equal
+/// solutions across backends for the s-step kernel too.
+#[test]
+fn four_rank_proc_ca_cg_matches_local() {
+    let (t, b) = problem(24);
+    let method = DistMethod::CaCg { s: 4 };
+    let (x_local, rep_local) = t
+        .solve(&b, &opts_with(method.clone(), CommBackend::Local))
+        .expect("local solve");
+    let popts = ProcOpts::for_tests(TransportKind::Shm);
+    let (x_proc, rep_proc) = t
+        .solve(&b, &opts_with(method, CommBackend::Proc(popts)))
+        .expect("proc solve");
+    assert_eq!(rep_local[0].iters, rep_proc[0].iters);
+    assert_eq!(rep_local[0].reduce_rounds, rep_proc[0].reduce_rounds);
+    assert!(rep_proc.iter().all(|r| r.converged));
+    for (l, p) in x_local.iter().zip(&x_proc) {
+        assert_eq!(l.to_bits(), p.to_bits());
+    }
+}
+
+/// A worker killed after receiving its job (the `fail_rank` hook makes
+/// rank 2 exit before solving) must surface as `Error::RankDead` from
+/// `DSparseTensor::solve` within the team timeout — a typed error, not
+/// a hang, and naming the dead rank.
+#[test]
+fn dead_rank_surfaces_typed_error_not_hang() {
+    let (t, b) = problem(16);
+    let popts = ProcOpts {
+        fail_rank: Some(2),
+        timeout_ms: 60_000,
+        ..ProcOpts::for_tests(TransportKind::Shm)
+    };
+    let err = t
+        .solve(&b, &opts_with(DistMethod::Cg, CommBackend::Proc(popts)))
+        .expect_err("a dead rank must fail the solve");
+    match err {
+        Error::RankDead { rank, ref detail } => {
+            assert_eq!(rank, 2, "wrong rank blamed: {detail}");
+        }
+        other => panic!("expected RankDead, got: {other}"),
+    }
+}
+
+/// Same failure through the engine: `JobKind::Dist` launches the
+/// process team, monitors liveness, and the dead rank flows to the
+/// job ticket as a typed error while the engine stays serviceable.
+#[test]
+fn engine_dist_job_reports_dead_rank_as_typed_error() {
+    let e = Engine::start(Arc::new(Dispatcher::new(None)), EngineConfig::default());
+    let (t, b) = problem(16);
+    let opts = opts_with(
+        DistMethod::Cg,
+        CommBackend::Proc(ProcOpts {
+            fail_rank: Some(1),
+            timeout_ms: 60_000,
+            ..ProcOpts::for_tests(TransportKind::Shm)
+        }),
+    );
+    let r = e
+        .submit(JobSpec::Dist {
+            tensor: t,
+            b,
+            opts,
+        })
+        .expect("submit")
+        .wait();
+    match r.outcome {
+        Err(Error::RankDead { rank, .. }) => assert_eq!(rank, 1),
+        Err(other) => panic!("expected RankDead, got: {other}"),
+        Ok(_) => panic!("dead rank must not produce a successful solve"),
+    }
+
+    // the engine survives the failed team: a healthy solve still works
+    let (t2, b2) = problem(12);
+    let r2 = e
+        .submit(JobSpec::Dist {
+            tensor: t2,
+            b: b2,
+            opts: DistIterOpts::default(),
+        })
+        .expect("submit")
+        .wait();
+    assert!(r2.outcome.is_ok(), "engine must stay serviceable");
+    e.shutdown();
+}
